@@ -1,0 +1,154 @@
+//! End-to-end driver (the DESIGN.md/EXPERIMENTS.md §E2E run): pretrain a
+//! transformer teacher for a few hundred steps on the synthetic corpus,
+//! log the loss curve, then run the full ElastiFormer post-training
+//! pipeline (router distillation at several capacities + LoRA), evaluate
+//! elastic-vs-teacher quality and compute, and write everything to
+//! `results/e2e/`.
+//!
+//!     cargo run --release --example e2e_train_distill -- \
+//!         [--config lm_base] [--pretrain-steps 300] [--distill-steps 120]
+//!
+//! Default config is `lm_base` (~6.5M params).  `lm_large` (~29M) is
+//! available after `python -m compile.aot --config lm_large`; the sandbox
+//! default keeps the recorded run under ~20 minutes of CPU time.
+
+use anyhow::Result;
+
+use elastiformer::analysis::flops::{self, Capacity};
+use elastiformer::bench::{fmt_f, Table};
+use elastiformer::checkpoint::Checkpoint;
+use elastiformer::cli::Args;
+use elastiformer::coordinator::trainer::{BatchArg, Caps, Trainer};
+use elastiformer::data::{mathgen, textgen, Batcher, TextDataset};
+use elastiformer::experiments::common::{self, Ctx};
+use elastiformer::metrics::{ema, write_file};
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let config = args.str_or("config", "lm_base").to_string();
+    let pretrain_steps = args.usize_or("pretrain-steps", 300)?;
+    let distill_steps = args.usize_or("distill-steps", 120)?;
+    let seed = args.u64_or("seed", 42)?;
+
+    let ctx = Ctx::load(&config, seed)?;
+    let b = ctx.rt.manifest.batch();
+    let t = ctx.rt.manifest.seq_len();
+    let out_dir = common::results_dir().join("e2e");
+
+    // ---- phase 1: pretrain the teacher, logging the loss curve ---------
+    // --reuse-teacher reloads results/e2e/teacher.bin (e.g. to iterate on
+    // phase 2 after an interrupted run).
+    let reuse = args.has("reuse-teacher");
+    let mut pretrain_secs = 0.0;
+    let mut final_loss = f64::NAN;
+    let expect_n = ctx.rt.manifest.teacher_params.total();
+    let cached = if reuse {
+        Checkpoint::load(out_dir.join("teacher.bin"))
+            .ok()
+            .filter(|c| c.expect(&config, "teacher", expect_n).is_ok())
+    } else {
+        None
+    };
+    let teacher = if let Some(ck) = cached {
+        println!("== phase 1: reusing cached teacher ({} params, step {}) ==",
+                 ck.params.len(), ck.step);
+        ck.params
+    } else {
+        println!("== phase 1: pretraining {config} for {pretrain_steps} \
+                  steps (batch {b} x seq {t}) ==");
+        let mut trainer = Trainer::with_logger(
+            &ctx.rt, out_dir.join("pretrain_log.jsonl").to_str().unwrap())?;
+        let init = trainer.init_params("init", seed as i32)?;
+        let n_params = init.len();
+        let ds = TextDataset::from_texts(
+            &textgen::dataset(3000, seed ^ 0xE2E), t);
+        let mut batcher = Batcher::new(ds.len(), b, seed ^ 11);
+        let start = std::time::Instant::now();
+        let (teacher, losses) = trainer.pretrain(
+            "pretrain_step", init, pretrain_steps, 3e-3,
+            || vec![BatchArg::Tokens(batcher.next_tokens(&ds))])?;
+        pretrain_secs = start.elapsed().as_secs_f64();
+        let smooth = ema(
+            &losses.iter().map(|&x| x as f64).collect::<Vec<_>>(), 0.1);
+        final_loss = *smooth.last().unwrap();
+        println!("  {} params, {:.1}s ({:.0} tok/s)", n_params,
+                 pretrain_secs,
+                 (pretrain_steps * b * t) as f64 / pretrain_secs);
+        let mut curve = String::from("step,loss,loss_ema\n");
+        for (i, (&l, s)) in losses.iter().zip(&smooth).enumerate() {
+            curve.push_str(&format!("{i},{l:.5},{s:.5}\n"));
+        }
+        write_file(out_dir.join("pretrain_curve.csv"), &curve)?;
+        println!("  loss: {:.3} -> {:.3} (curve in \
+                  results/e2e/pretrain_curve.csv)",
+                 losses[0], final_loss);
+        Checkpoint::new(&config, "teacher", pretrain_steps as u64,
+                        teacher.clone())
+            .save(out_dir.join("teacher.bin"))?;
+        teacher
+    };
+    let smooth_last = final_loss;
+
+    // ---- phase 2: ElastiFormer self-distillation across capacities -----
+    println!("== phase 2: ElastiFormer distillation ({distill_steps} steps \
+              per capacity) ==");
+    let l = ctx.rt.manifest.n_layers();
+    let layer_en = vec![1.0f32; l];
+    let eval_texts: Vec<String> = mathgen::dataset(200, 0xE2EE)
+        .iter()
+        .map(|p| p.full_text())
+        .collect();
+    let eval = ctx.lm_eval_batches(&eval_texts, 4, 13);
+    let teacher_loss = ctx.lm_teacher_loss(&teacher, &eval)?;
+    let dims = ctx.rt.manifest.dims()?;
+    let teacher_macs = flops::teacher_macs(&dims);
+
+    let mut table = Table::new(&[
+        "capacity", "elastic_lm_loss", "teacher_lm_loss", "macs_ratio",
+        "distill_final",
+    ]);
+    for cap in [0.9f32, 0.75, 0.5] {
+        let caps = Caps([cap, cap, 1.0, 0.5f32.max(cap)]);
+        let router = ctx.router_init("router_init_r1", seed as i32)?;
+        let train_ds = TextDataset::from_texts(
+            &common::gsm_train_texts(800, seed ^ cap.to_bits() as u64), t);
+        let mut tb = Batcher::new(train_ds.len(), b, seed ^ 12);
+        let mut trainer = Trainer::with_logger(
+            &ctx.rt,
+            out_dir.join(format!("distill_cap{cap}.jsonl")).to_str().unwrap())?;
+        let (router, hist) = trainer.distill_lm(
+            "distill_step_r1", &teacher, &teacher, router, distill_steps,
+            1e-3, caps, &layer_en, 1.0, || tb.next_tokens(&train_ds))?;
+        let loss = ctx.lm_elastic_loss("elastic_forward_r1", &teacher,
+                                       &router, &eval, caps, &layer_en, 0.0)?;
+        let macs = flops::elastic_macs(&dims, &Capacity {
+            mha_tokens: cap as f64,
+            mlp_tokens: cap as f64,
+            heads: 1.0,
+            experts: (0.5f32.max(cap)) as f64,
+            layers: 1.0,
+        });
+        println!("  capacity {cap}: elastic loss {loss:.4} vs teacher \
+                  {teacher_loss:.4}, compute {:.0}%",
+                 100.0 * macs as f64 / teacher_macs as f64);
+        table.row(vec![
+            fmt_f(cap as f64, 2),
+            fmt_f(loss, 4),
+            fmt_f(teacher_loss, 4),
+            fmt_f(macs as f64 / teacher_macs as f64, 4),
+            fmt_f(hist.last().unwrap().distill as f64, 4),
+        ]);
+        Checkpoint::new(&config, &format!("router_r1_cap{cap}"),
+                        distill_steps as u64, router)
+            .save(out_dir.join(format!("router_cap{cap}.bin")))?;
+    }
+    write_file(out_dir.join("e2e_summary.md"),
+               &format!("# e2e run ({config})\n\npretrain: {pretrain_steps} \
+                         steps, final loss {:.4}, {:.1}s\n\n{}",
+                        smooth_last, pretrain_secs,
+                        table.to_markdown()))?;
+    table.print();
+    println!("\nAll layers composed: Pallas kernels (L1) -> JAX model (L2, \
+              AOT) -> Rust coordinator (L3).  Artifacts in results/e2e/.");
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Quickstart: load the AOT artifacts, make a pretrained-ish teacher, turn
+//! it elastic, and compare loss/compute across capacities.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Runs in ~2 minutes on CPU.  Uses the `lm_tiny` config; every step here
+//! is the public-API path a downstream user would take (Runtime -> Trainer
+//! -> distill -> elastic forward).
+
+use anyhow::Result;
+
+use elastiformer::analysis::flops::{self, Capacity};
+use elastiformer::coordinator::trainer::{Caps, Trainer};
+use elastiformer::data::{mathgen, textgen, Batcher, TextDataset};
+use elastiformer::experiments::common::Ctx;
+
+fn main() -> Result<()> {
+    // 1. load the artifact set (HLO text + manifest) onto the PJRT client
+    let ctx = Ctx::load("lm_tiny", 42)?;
+    println!("loaded config {} ({} teacher params)",
+             ctx.rt.manifest.name(), ctx.rt.manifest.teacher_params.total());
+
+    // 2. teacher: quick pretrain on the synthetic corpus (cached on disk)
+    let teacher = ctx.teacher(200)?;
+
+    // 3. attach ElastiFormer routers and self-distill at 75% token /
+    //    50% expert capacity (the paper's Eq. 1 objective)
+    let caps = Caps([0.75, 0.75, 1.0, 0.5]);
+    let layer_en = vec![1.0f32; ctx.rt.manifest.n_layers()];
+    let router = ctx.router_init("router_init_r1", 1)?;
+    let ds = TextDataset::from_texts(
+        &textgen::dataset(400, 7), ctx.rt.manifest.seq_len());
+    let mut batcher = Batcher::new(ds.len(), ctx.rt.manifest.batch(), 7);
+    let mut trainer = Trainer::new(&ctx.rt);
+    println!("distilling routers (60 steps)...");
+    let (router, hist) = trainer.distill_lm(
+        "distill_step_r1", &teacher, &teacher, router, 60, 1e-3, caps,
+        &layer_en, 1.0, || batcher.next_tokens(&ds))?;
+    println!("  distill loss {:.4} -> {:.4}",
+             hist.first().unwrap().distill, hist.last().unwrap().distill);
+
+    // 4. evaluate the elastic model vs the teacher across capacities
+    let eval_texts: Vec<String> = mathgen::dataset(100, 0xE0)
+        .iter()
+        .map(|p| p.full_text())
+        .collect();
+    let eval = ctx.lm_eval_batches(&eval_texts, 3, 9);
+    let teacher_loss = ctx.lm_teacher_loss(&teacher, &eval)?;
+    println!("\n{:<28} {:>10} {:>12}", "setting", "lm loss", "macs vs T");
+    println!("{:<28} {:>10.4} {:>11.0}%", "teacher (dense)", teacher_loss,
+             100.0);
+    let dims = ctx.rt.manifest.dims()?;
+    for c in [1.0f32, 0.75, 0.5] {
+        let cc = Caps([c, c, 1.0, c.max(0.5)]);
+        let loss = ctx.lm_elastic_loss("elastic_forward_r1", &teacher,
+                                       &router, &eval, cc, &layer_en, 0.0)?;
+        let macs = flops::elastic_macs(&dims, &Capacity {
+            mha_tokens: c as f64,
+            mlp_tokens: c as f64,
+            heads: 1.0,
+            experts: c.max(0.5) as f64,
+            layers: 1.0,
+        }) as f64 / flops::teacher_macs(&dims) as f64;
+        println!("{:<28} {:>10.4} {:>11.0}%",
+                 format!("elastic @ capacity {c}"), loss, 100.0 * macs);
+    }
+    println!("\nDone. `./target/release/elastiformer exp all` regenerates \
+              every paper figure/table (DESIGN.md §4).");
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Elasti-ViT demo: distill a token router on the ViT autoencoder and
+//! visualize which patches it keeps (the Fig. 8-style heatmap), plus the
+//! decoder-cosine quality metric at the chosen capacity.
+//!
+//!     cargo run --release --example vit_routing -- [--capacity 0.5]
+
+use anyhow::Result;
+
+use elastiformer::analysis::similarity::ascii_heatmap;
+use elastiformer::cli::Args;
+use elastiformer::coordinator::trainer::Caps;
+use elastiformer::data::imagen;
+use elastiformer::experiments::common::Ctx;
+use elastiformer::experiments::fig7;
+use elastiformer::runtime::client::Arg;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let capacity = args.f64_or("capacity", 0.5)? as f32;
+    let seed = args.u64_or("seed", 42)?;
+
+    let ctx = Ctx::load("vit_tiny", seed)?;
+    let teacher = ctx.teacher(250)?;
+    let l = ctx.rt.manifest.n_layers();
+    let layer_en = vec![1.0f32; l];
+    let caps = Caps([1.0, capacity, 1.0, 1.0]);
+
+    println!("distilling Elasti-ViT token router at capacity {capacity}...");
+    let eval = fig7::eval_image_batches(&ctx, 2, 0x717)?;
+    let (cos, router) = fig7::distill_and_eval_vit(
+        &ctx, &teacher, 50, caps, &layer_en, None, &eval, seed)?;
+    println!("decoder-output cosine vs teacher: {cos:.4} \
+              (paper threshold: 0.95)");
+
+    // per-class patch selection heatmaps on one image per class
+    let size = ctx.rt.manifest.cfg_usize("img_size")?;
+    let b = ctx.rt.manifest.batch();
+    let n_tok = ctx.rt.manifest.cfg_usize("n_tokens")?;
+    let side = (n_tok as f64).sqrt() as usize;
+    for class in [0usize, 2, 4] {
+        let imgs: Vec<f32> = imagen::dataset(b, size, Some(class), 0x71A)
+            .into_iter()
+            .flat_map(|(im, _)| im)
+            .collect();
+        let out = ctx.rt.exec("elastic_forward", &[
+            Arg::F32(&teacher),
+            Arg::F32(&router),
+            Arg::F32(&imgs),
+            Arg::F32(&caps.0),
+            Arg::F32(&layer_en),
+            Arg::ScalarF32(0.0),
+        ])?;
+        let m_mlp = out.f32(5)?; // [B, L, N]
+        let first_layer0 = &m_mlp[..n_tok];
+        println!("\npatches kept for a {:?} image (layer 0, '#'=kept):",
+                 imagen::CLASS_NAMES[class]);
+        print!("{}", ascii_heatmap(first_layer0, side)?);
+    }
+    Ok(())
+}

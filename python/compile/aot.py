@@ -1,0 +1,357 @@
+"""AOT compiler: lower every L2 entrypoint to HLO **text** + a manifest.
+
+This is the only place Python touches the pipeline; ``make artifacts`` runs
+it once and the Rust coordinator is self-contained afterwards.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which the xla crate's runtime
+(xla_extension 0.5.1) rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly.  Lowering goes through stablehlo ->
+XlaComputation with ``return_tuple=True``; the Rust side unwraps the tuple.
+
+Usage:
+    python -m compile.aot [--out-dir ../artifacts] [--config lm_tiny ...]
+
+Outputs, per config:
+    artifacts/<config>/<entry>.hlo.txt
+    artifacts/<config>/manifest.json     (shapes, param tables, entry specs)
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs, params, train
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+class Entry:
+    """One AOT entrypoint: a jax function plus named example arguments."""
+
+    def __init__(self, name, fn, args):
+        self.name = name
+        self.fn = fn
+        self.args = args  # list of (arg_name, ShapeDtypeStruct)
+
+    def lower(self):
+        # keep_unused: an entry like serve_cap100 (bypass tier) ignores its
+        # router argument; without this flag jit would drop the parameter
+        # from the lowered ENTRY signature and break the Rust-side contract.
+        arg_specs = [s for _, s in self.args]
+        return jax.jit(self.fn, keep_unused=True).lower(*arg_specs)
+
+    def out_specs(self):
+        arg_specs = [s for _, s in self.args]
+        out = jax.eval_shape(self.fn, *arg_specs)
+        leaves = jax.tree_util.tree_leaves(out)
+        return leaves
+
+    def manifest(self):
+        outs = self.out_specs()
+        return {
+            "name": self.name,
+            "args": [
+                {"name": n, "shape": list(s.shape), "dtype": str(s.dtype)}
+                for n, s in self.args
+            ],
+            "outputs": [
+                {"shape": list(s.shape), "dtype": str(s.dtype)} for s in outs
+            ],
+        }
+
+
+def _seeded_key(seed):
+    return jax.random.PRNGKey(seed)
+
+
+# ---------------------------------------------------------------------------
+# entry builders per model family
+# ---------------------------------------------------------------------------
+
+def lm_entries(cfg):
+    tspec = params.lm_teacher_spec(cfg)
+    ranks = sorted({0, 1, cfg.lora_rank})
+    rspecs = {r: params.lm_router_spec(cfg, lora_rank=r) for r in ranks}
+
+    b, t, v = cfg.batch, cfg.seq_len, cfg.vocab
+    l, h, m = cfg.n_layers, cfg.n_heads, cfg.n_experts
+    nt = tspec.total
+
+    entries = []
+    entries.append(Entry(
+        "init",
+        lambda seed: tspec.init_flat(_seeded_key(seed)),
+        [("seed", spec((), I32))]))
+
+    for r, rs in rspecs.items():
+        entries.append(Entry(
+            f"router_init_r{r}",
+            (lambda rs_: lambda seed: rs_.init_flat(_seeded_key(seed)))(rs),
+            [("seed", spec((), I32))]))
+
+    entries.append(Entry(
+        "pretrain_step",
+        lambda P, M, V, step, lr, tok: train.lm_pretrain_step(
+            tspec, cfg, P, M, V, step, lr, tok),
+        [("params", spec((nt,))), ("m", spec((nt,))), ("v", spec((nt,))),
+         ("step", spec((), I32)), ("lr", spec(())),
+         ("tokens", spec((b, t), I32))]))
+
+    entries.append(Entry(
+        "teacher_forward",
+        lambda P, tok, hm, ao, mo: train.lm_teacher_forward(
+            tspec, cfg, P, tok, hm, ao, mo),
+        [("params", spec((nt,))), ("tokens", spec((b, t), I32)),
+         ("head_mask", spec((l, h))), ("attn_on", spec((l,))),
+         ("mlp_on", spec((l,)))]))
+
+    for r, rs in rspecs.items():
+        nr = rs.total
+        entries.append(Entry(
+            f"elastic_forward_r{r}",
+            (lambda rs_, r_: lambda P, R, tok, caps, le, mode:
+                train.lm_elastic_forward(
+                    tspec, rs_, cfg, P, R, tok, caps, le, mode,
+                    use_pallas=cfg.use_pallas, lora_rank=r_))(rs, r),
+            [("params", spec((nt,))), ("router", spec((nr,))),
+             ("tokens", spec((b, t), I32)), ("caps", spec((4,))),
+             ("layer_en", spec((l,))), ("mode", spec(()))]))
+
+        entries.append(Entry(
+            f"distill_step_r{r}",
+            (lambda rs_, r_: lambda Pt, Ps, R, M, V, step, lr, tok, caps, le,
+                temp: train.lm_distill_step(
+                    tspec, rs_, cfg, Pt, Ps, R, M, V, step, lr, tok, caps,
+                    le, temp, loss_type="fwd_topk", lora_rank=r_))(rs, r),
+            [("teacher", spec((nt,))), ("student", spec((nt,))),
+             ("router", spec((nr,))), ("m", spec((rs.total,))),
+             ("v", spec((rs.total,))), ("step", spec((), I32)),
+             ("lr", spec(())), ("tokens", spec((b, t), I32)),
+             ("caps", spec((4,))), ("layer_en", spec((l,))),
+             ("temp", spec(()))]))
+
+    # Fig. 4: distillation-loss ablation (rank = cfg.lora_rank, noised
+    # student supplied by the Rust driver).  fwd_topk == distill_step_r{R}.
+    if cfg.name == "lm_tiny":
+        rs = rspecs[cfg.lora_rank]
+        for lt in configs.FIG4_LOSSES:
+            if lt == "fwd_topk":
+                continue  # identical to distill_step_r{lora_rank}
+            entries.append(Entry(
+                f"distill_fig4_{lt}",
+                (lambda lt_: lambda Pt, Ps, R, M, V, step, lr, tok, caps, le,
+                    temp: train.lm_distill_step(
+                        tspec, rs, cfg, Pt, Ps, R, M, V, step, lr, tok, caps,
+                        le, temp, loss_type=lt_,
+                        lora_rank=cfg.lora_rank))(lt),
+                [("teacher", spec((nt,))), ("student", spec((nt,))),
+                 ("router", spec((rs.total,))), ("m", spec((rs.total,))),
+                 ("v", spec((rs.total,))), ("step", spec((), I32)),
+                 ("lr", spec(())), ("tokens", spec((b, t), I32)),
+                 ("caps", spec((4,))), ("layer_en", spec((l,))),
+                 ("temp", spec(()))]))
+
+    # Static-capacity serving tiers (real token gather; rank-0 router spec).
+    rs0 = rspecs[0]
+    for tier in configs.SERVE_TIERS:
+        entries.append(Entry(
+            f"serve_cap{int(round(tier * 100))}",
+            (lambda c: lambda P, R, tok: train.lm_serve_forward(
+                tspec, rs0, cfg, P, R, tok, c))(tier),
+            [("params", spec((nt,))), ("router", spec((rs0.total,))),
+             ("tokens", spec((b, t), I32))]))
+
+    tables = {"teacher_params": tspec.manifest(),
+              "router_params": {str(r): rs.manifest()
+                                for r, rs in rspecs.items()}}
+    return entries, tables
+
+
+def vit_entries(cfg):
+    tspec = params.vit_teacher_spec(cfg)
+    rspec = params.vit_router_spec(cfg)
+    b = cfg.batch
+    img = cfg.img_size * cfg.img_size * cfg.channels
+    l = cfg.n_layers
+    nt, nr = tspec.total, rspec.total
+
+    entries = [
+        Entry("init", lambda seed: tspec.init_flat(_seeded_key(seed)),
+              [("seed", spec((), I32))]),
+        Entry("router_init", lambda seed: rspec.init_flat(_seeded_key(seed)),
+              [("seed", spec((), I32))]),
+        Entry("pretrain_step",
+              lambda P, M, V, step, lr, im: train.vit_pretrain_step(
+                  tspec, cfg, P, M, V, step, lr, im),
+              [("params", spec((nt,))), ("m", spec((nt,))),
+               ("v", spec((nt,))), ("step", spec((), I32)),
+               ("lr", spec(())), ("images", spec((b, img)))]),
+        Entry("teacher_forward",
+              lambda P, im: train.vit_teacher_forward(tspec, cfg, P, im),
+              [("params", spec((nt,))), ("images", spec((b, img)))]),
+        Entry("elastic_forward",
+              lambda P, R, im, caps, le, mode: train.vit_elastic_forward(
+                  tspec, rspec, cfg, P, R, im, caps, le, mode,
+                  use_pallas=cfg.use_pallas),
+              [("params", spec((nt,))), ("router", spec((nr,))),
+               ("images", spec((b, img))), ("caps", spec((4,))),
+               ("layer_en", spec((l,))), ("mode", spec(()))]),
+        Entry("distill_step",
+              lambda P, R, M, V, step, lr, im, caps, le:
+                  train.vit_distill_step(tspec, rspec, cfg, P, R, M, V,
+                                         step, lr, im, caps, le),
+              [("params", spec((nt,))), ("router", spec((nr,))),
+               ("m", spec((nr,))), ("v", spec((nr,))),
+               ("step", spec((), I32)), ("lr", spec(())),
+               ("images", spec((b, img))), ("caps", spec((4,))),
+               ("layer_en", spec((l,)))]),
+    ]
+    tables = {"teacher_params": tspec.manifest(),
+              "router_params": {"linear": rspec.manifest()}}
+    return entries, tables
+
+
+def vlm_entries(cfg):
+    tspec = params.vlm_teacher_spec(cfg)
+    rspec_lin = params.vlm_router_spec(cfg, mlp_router=False)
+    rspec_mlp = params.vlm_router_spec(cfg, mlp_router=True)
+    b = cfg.batch
+    img = cfg.img_size * cfg.img_size * cfg.channels
+    tl = cfg.text_len
+    nt = tspec.total
+
+    entries = [
+        Entry("init", lambda seed: tspec.init_flat(_seeded_key(seed)),
+              [("seed", spec((), I32))]),
+        Entry("pretrain_step",
+              lambda P, M, V, step, lr, im, tx: train.vlm_pretrain_step(
+                  tspec, cfg, P, M, V, step, lr, im, tx),
+              [("params", spec((nt,))), ("m", spec((nt,))),
+               ("v", spec((nt,))), ("step", spec((), I32)),
+               ("lr", spec(())), ("images", spec((b, img))),
+               ("texts", spec((b, tl), I32))]),
+        Entry("teacher_forward",
+              lambda P, im, tx: train.vlm_teacher_forward(
+                  tspec, cfg, P, im, tx),
+              [("params", spec((nt,))), ("images", spec((b, img))),
+               ("texts", spec((b, tl), I32))]),
+    ]
+    for kind, rs, is_mlp in (("lin", rspec_lin, False),
+                             ("mlp", rspec_mlp, True)):
+        nr = rs.total
+        entries.append(Entry(
+            f"router_init_{kind}",
+            (lambda rs_: lambda seed: rs_.init_flat(_seeded_key(seed)))(rs),
+            [("seed", spec((), I32))]))
+        entries.append(Entry(
+            f"elastic_forward_{kind}",
+            (lambda rs_, im_: lambda P, R, im, tx, cap, mode:
+                train.vlm_elastic_forward(tspec, rs_, cfg, P, R, im, tx,
+                                          cap, mode, im_))(rs, is_mlp),
+            [("params", spec((nt,))), ("router", spec((nr,))),
+             ("images", spec((b, img))), ("texts", spec((b, tl), I32)),
+             ("capacity", spec(())), ("mode", spec(()))]))
+        entries.append(Entry(
+            f"distill_step_{kind}",
+            (lambda rs_, im_: lambda P, R, M, V, step, lr, im, tx, cap, temp:
+                train.vlm_distill_step(tspec, rs_, cfg, P, R, M, V, step,
+                                       lr, im, tx, cap, temp, im_))(rs, is_mlp),
+            [("params", spec((nt,))), ("router", spec((nr,))),
+             ("m", spec((nr,))), ("v", spec((nr,))),
+             ("step", spec((), I32)), ("lr", spec(())),
+             ("images", spec((b, img))), ("texts", spec((b, tl), I32)),
+             ("capacity", spec(())), ("temp", spec(()))]))
+    tables = {"teacher_params": tspec.manifest(),
+              "router_params": {"linear": rspec_lin.manifest(),
+                                "mlp": rspec_mlp.manifest()}}
+    return entries, tables
+
+
+BUILDERS = {"lm": lm_entries, "vit": vit_entries, "vlm": vlm_entries}
+
+
+def _source_fingerprint():
+    """Hash of every .py under compile/ — drives make-style staleness."""
+    root = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for dirpath, _, files in sorted(os.walk(root)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(dirpath, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def build_config(cfg, out_dir, force=False):
+    cfg_dir = os.path.join(out_dir, cfg.name)
+    os.makedirs(cfg_dir, exist_ok=True)
+    fp = _source_fingerprint()
+    man_path = os.path.join(cfg_dir, "manifest.json")
+    if not force and os.path.exists(man_path):
+        try:
+            with open(man_path) as f:
+                if json.load(f).get("fingerprint") == fp:
+                    print(f"[aot] {cfg.name}: up to date")
+                    return
+        except Exception:
+            pass
+
+    entries, tables = BUILDERS[cfg.kind](cfg)
+    man_entries = {}
+    for e in entries:
+        path = os.path.join(cfg_dir, f"{e.name}.hlo.txt")
+        print(f"[aot] lowering {cfg.name}/{e.name} ...", flush=True)
+        text = to_hlo_text(e.lower())
+        with open(path, "w") as f:
+            f.write(text)
+        man_entries[e.name] = e.manifest()
+        man_entries[e.name]["file"] = f"{e.name}.hlo.txt"
+
+    manifest = {
+        "fingerprint": fp,
+        "config": cfg.to_dict(),
+        "entries": man_entries,
+        **tables,
+    }
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] {cfg.name}: wrote {len(entries)} artifacts + manifest")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..", "..", "artifacts"))
+    ap.add_argument("--config", action="append", default=None,
+                    help="config name(s); default = the standard build set")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    cfgs = configs.DEFAULT_BUILD if args.config is None else \
+        [configs.BY_NAME[n] for n in args.config]
+    for cfg in cfgs:
+        build_config(cfg, os.path.abspath(args.out_dir), force=args.force)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,187 @@
+"""Model / artifact configurations for the ElastiFormer reproduction.
+
+Each config fully determines the static shapes of every AOT artifact that
+``aot.py`` lowers for it.  The Rust coordinator reads these values back from
+``artifacts/<name>/manifest.json`` — nothing here is duplicated by hand on
+the Rust side.
+
+Sizing notes (CPU sandbox, see DESIGN.md §2):
+  * ``lm_tiny``  — used by pytest and cargo test; sub-second steps.
+  * ``lm_base``  — the end-to-end example model (~6.5M params).
+  * ``lm_large`` — paper-scale-ish option (~29M params with V=256); the
+    e2e driver accepts ``--config lm_large`` but defaults to lm_base so the
+    recorded run fits the sandbox budget.
+  * ``vit_tiny`` / ``vlm_tiny`` — Elasti-ViT / Elasti-VLM substrates.
+"""
+
+from dataclasses import dataclass, field, asdict
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class LMConfig:
+    """Decoder-only transformer (GPT-style, RMSNorm pre-norm, GELU MLP)."""
+
+    name: str = "lm_tiny"
+    kind: str = "lm"  # lm | vit | vlm
+    vocab: int = 256  # byte-level tokenizer (0 = pad, 1 = BOS, 2 = EOS)
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 512
+    seq_len: int = 128
+    batch: int = 8
+    # ElastiFormer routing
+    n_experts: int = 8       # MoE-fication of the dense MLP (d_ff % n_experts == 0)
+    lora_rank: int = 8       # rank of the optional LoRA(q,v) adapters (0 = none)
+    distill_topk: int = 32   # top-k bucket size of the forward-KL distillation loss
+    # Pallas
+    use_pallas: bool = True  # route the MLP/attention hot paths through L1 kernels
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def d_expert(self) -> int:
+        assert self.d_ff % self.n_experts == 0
+        return self.d_ff // self.n_experts
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["head_dim"] = self.head_dim
+        d["d_expert"] = self.d_expert
+        return d
+
+
+@dataclass(frozen=True)
+class ViTConfig:
+    """ViT encoder + small frozen autoencoder decoder (MAE-style eval head).
+
+    Images are ``img_size x img_size x channels`` procedural textures from
+    the Rust ``data::imagen`` generator; patches of ``patch x patch`` give
+    ``(img_size/patch)**2`` tokens.
+    """
+
+    name: str = "vit_tiny"
+    kind: str = "vit"
+    img_size: int = 32
+    patch: int = 4
+    channels: int = 3
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 512
+    batch: int = 8
+    # decoder (frozen at distill time; used for the Fig. 7 eval metric)
+    dec_d_model: int = 64
+    dec_layers: int = 2
+    dec_heads: int = 4
+    dec_d_ff: int = 256
+    n_experts: int = 8
+    lora_rank: int = 0
+    use_pallas: bool = True
+
+    @property
+    def n_tokens(self) -> int:
+        assert self.img_size % self.patch == 0
+        return (self.img_size // self.patch) ** 2
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch * self.patch * self.channels
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def d_expert(self) -> int:
+        return self.d_ff // self.n_experts
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["n_tokens"] = self.n_tokens
+        d["patch_dim"] = self.patch_dim
+        d["head_dim"] = self.head_dim
+        d["d_expert"] = self.d_expert
+        d["seq_len"] = self.n_tokens
+        return d
+
+
+@dataclass(frozen=True)
+class VLMConfig:
+    """LLaVA-shaped VLM: ViT encoder -> linear projector -> LM decoder.
+
+    The decoder consumes ``n_img_tokens`` projected image tokens followed by
+    ``text_len`` caption tokens; Elasti-VLM's router selects the top-k image
+    tokens that reach the decoder (Fig. 1 mid-bottom / Fig. 9).
+    """
+
+    name: str = "vlm_tiny"
+    kind: str = "vlm"
+    # vision tower
+    img_size: int = 32
+    patch: int = 4
+    channels: int = 3
+    v_d_model: int = 128
+    v_layers: int = 3
+    v_heads: int = 4
+    v_d_ff: int = 512
+    # language decoder
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 512
+    text_len: int = 48
+    batch: int = 8
+    # image-token router: "linear" always lowered; "mlp" variant too (Fig. 9)
+    router_hidden: int = 128
+    use_pallas: bool = True
+
+    @property
+    def n_img_tokens(self) -> int:
+        return (self.img_size // self.patch) ** 2
+
+    @property
+    def seq_len(self) -> int:
+        return self.n_img_tokens + self.text_len
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch * self.patch * self.channels
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["n_img_tokens"] = self.n_img_tokens
+        d["seq_len"] = self.seq_len
+        d["patch_dim"] = self.patch_dim
+        return d
+
+
+LM_TINY = LMConfig()
+LM_BASE = LMConfig(
+    name="lm_base", d_model=256, n_layers=8, n_heads=8, d_ff=1024,
+    seq_len=128, batch=8, n_experts=8, lora_rank=8,
+)
+LM_LARGE = LMConfig(
+    name="lm_large", d_model=512, n_layers=10, n_heads=8, d_ff=2048,
+    seq_len=128, batch=4, n_experts=16, lora_rank=8,
+)
+VIT_TINY = ViTConfig()
+VLM_TINY = VLMConfig()
+
+# Configs lowered by ``make artifacts``.  lm_large is lowered on demand only
+# (python -m compile.aot --config lm_large) to keep artifact builds fast.
+DEFAULT_BUILD = [LM_TINY, LM_BASE, VIT_TINY, VLM_TINY]
+
+BY_NAME = {c.name: c for c in [LM_TINY, LM_BASE, LM_LARGE, VIT_TINY, VLM_TINY]}
+
+# Static capacity tiers baked into the gather-compressed *serve* artifacts
+# (real wall-clock savings; the sweep artifacts use runtime capacities).
+SERVE_TIERS = [0.25, 0.5, 0.75, 1.0]
+
+# Static distillation-loss variants lowered for the Fig. 4 ablation.
+FIG4_LOSSES = ["fwd_topk", "fwd_full", "rev_topk", "rev_full"]

@@ -1,0 +1,15 @@
+"""L1 Pallas kernels (interpret=True) + pure-jnp reference oracles.
+
+Import surface used by the L2 model:
+
+    from compile import kernels
+    kernels.routed_expert_mlp(...)   # Pallas fwd / exact-ref bwd
+    kernels.masked_attention(...)
+    kernels.fused_router(...)
+    kernels.ref                      # the jnp oracles + shared routing math
+"""
+
+from . import ref  # noqa: F401
+from .routed_expert_mlp import routed_expert_mlp  # noqa: F401
+from .masked_attention import masked_attention  # noqa: F401
+from .fused_router import fused_router  # noqa: F401

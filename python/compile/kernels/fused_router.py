@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: fused parameter-subset router (paper Alg. 1, line 1).
+
+Computes ``M * softmax(x @ Wr^T + br)`` in a single VMEM-resident pass per
+token tile — the small matmul, the row-softmax and the M* renormalization
+(which makes k == M reproduce the unrouted network exactly) are fused so the
+[T, M] logits never round-trip through HBM.
+
+TPU mapping: the router matmul is tiny (D x M, M = 8..32); it rides the
+same q-tile VMEM residency as the surrounding block, so on TPU the router
+costs one MXU pass over a thin panel plus VPU softmax — negligible next to
+the expert blocks it gates, which is exactly the paper's "as low as .00006%
+additional parameters" premise.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+TILE_T = 64
+
+
+def _kernel(x_ref, wr_ref, br_ref, o_ref):
+    x = x_ref[...]          # [Tt, D]
+    wr = wr_ref[...]        # [M, D]
+    br = br_ref[...]        # [M]
+    m = wr.shape[0]
+    logits = x @ wr.T + br[None, :]
+    z = logits - jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(z)
+    o_ref[...] = jnp.float32(m) * e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+@jax.custom_vjp
+def fused_router(x, wr, br):
+    """Pallas forward, jnp-reference backward.  See ref.fused_router.
+
+    x: [T, D]; wr: [M, D]; br: [M]  ->  [T, M].
+    """
+    t, d = x.shape
+    m = wr.shape[0]
+    tile_t = min(TILE_T, t)
+    return pl.pallas_call(
+        _kernel,
+        grid=(pl.cdiv(t, tile_t),),
+        in_specs=[
+            pl.BlockSpec((tile_t, d), lambda i: (i, 0)),
+            pl.BlockSpec((m, d), lambda i: (0, 0)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile_t, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, m), x.dtype),
+        interpret=True,
+    )(x, wr, br)
+
+
+def _fwd(x, wr, br):
+    return fused_router(x, wr, br), (x, wr, br)
+
+
+def _bwd(res, g):
+    _, vjp = jax.vjp(ref.fused_router, *res)
+    return vjp(g)
+
+
+fused_router.defvjp(_fwd, _bwd)

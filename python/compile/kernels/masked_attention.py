@@ -1,0 +1,112 @@
+"""L1 Pallas kernel: head-masked multi-head attention.
+
+Implements the attention side of ElastiFormer's two selection schemes:
+  * parameter subset selection *inside* MHA — per-(token, head) routing
+    weights ``head_w`` scale each head's output (zero = head skipped);
+  * input subset selection *around* MHA — ``key_mask`` removes dropped
+    tokens from the key set (they ride the residual stream instead).
+
+Grid: (head, query-tile).  Each grid step loads one head's q-tile plus that
+head's full K/V panel and runs a masked softmax-attention tile.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the paper's H100 kernel would
+assign heads to thread blocks; here each head is a grid row, so a head whose
+``head_w`` column is all-zero for the tile is a grid row Mosaic can prune —
+the TPU analogue of not launching the block.  The q-tile x K panel matmuls
+run on the MXU (Hd=32..64 pads to the 128 lane; TPU-targeted configs use
+Hd=128).  For seq lens beyond a few K the K/V panel would be tiled with an
+online-softmax carry in VMEM scratch; at the repro's T<=128 the whole panel
+fits (~0.1 MB/head), so we keep the single-panel schedule, which is also
+what flash-attn collapses to at this size.
+
+VMEM per grid step (f32): Tt*Hd (q) + 2*T*Hd (k,v) + Tt*T (scores)
+  lm_base (T=128, Hd=32, Tt=64): ~0.1 MB.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+TILE_Q = 64
+
+
+def _kernel(q_ref, k_ref, v_ref, hw_ref, km_ref, o_ref, *, causal, tile_q):
+    i = pl.program_id(1)            # query-tile index
+    q = q_ref[0]                    # [Tt, Hd]
+    k = k_ref[0]                    # [T, Hd]
+    v = v_ref[0]                    # [T, Hd]
+    hw = hw_ref[...][:, 0]          # [Tt]  this head's routing weight column
+    km = km_ref[...]                # [T]
+
+    hd = q.shape[-1]
+    t = k.shape[0]
+    scores = (q @ k.T) / jnp.sqrt(jnp.float32(hd))     # [Tt, T]
+
+    rows = i * tile_q + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    mask = km[None, :] > 0.5
+    if causal:
+        mask = jnp.logical_and(mask, cols <= rows)
+    scores = jnp.where(mask, scores, jnp.float32(-1e30))
+    # Self-attention guard: a fully-masked row would NaN the softmax.
+    scores = jnp.where(cols == rows, jnp.maximum(scores, -1e29), scores)
+
+    attn = jax.nn.softmax(scores, axis=-1)
+    o_ref[0] = (attn @ v) * hw[:, None]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def masked_attention(q, k, v, head_w, key_mask, causal):
+    """Pallas forward, jnp-reference backward.  See ref.masked_attention.
+
+    q, k, v: [H, T, Hd]; head_w: [T, H]; key_mask: [T]; causal: static bool.
+    Returns [H, T, Hd] (per-head outputs scaled by head_w).
+    """
+    return _forward(q, k, v, head_w, key_mask, causal)
+
+
+def _forward(q, k, v, head_w, key_mask, causal):
+    h, t, hd = q.shape
+    tile_q = min(TILE_Q, t)
+    grid = (h, pl.cdiv(t, tile_q))
+    kern = functools.partial(_kernel, causal=causal, tile_q=tile_q)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tile_q, hd), lambda h_, i: (h_, i, 0)),  # q
+            pl.BlockSpec((1, t, hd), lambda h_, i: (h_, 0, 0)),       # k
+            pl.BlockSpec((1, t, hd), lambda h_, i: (h_, 0, 0)),       # v
+            pl.BlockSpec((tile_q, 1), lambda h_, i: (i, h_)),         # head_w
+            pl.BlockSpec((t,), lambda h_, i: (0,)),                   # key_mask
+        ],
+        out_specs=pl.BlockSpec((1, tile_q, hd), lambda h_, i: (h_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, t, hd), q.dtype),
+        interpret=True,
+    )(q, k, v, head_w, key_mask)
+
+
+def _fwd(q, k, v, head_w, key_mask, causal):
+    y = masked_attention(q, k, v, head_w, key_mask, causal)
+    return y, (q, k, v, head_w, key_mask)
+
+
+def _bwd(causal, res, g):
+    q, k, v, head_w, key_mask = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_, hw_, km_: ref.masked_attention(q_, k_, v_, hw_, km_, causal),
+        q, k, v, head_w, key_mask,
+    )
+    return vjp(g)
+
+
+masked_attention.defvjp(_fwd, _bwd)
+
+
+def macs(t, hd, h_active):
+    """Analytic MACs for h_active heads: QK^T + AV."""
+    return 2 * t * t * hd * h_active

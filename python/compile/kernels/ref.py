@@ -1,0 +1,154 @@
+"""Pure-jnp reference implementations (correctness oracles) for the L1
+Pallas kernels.
+
+Every Pallas kernel in this package is checked against the function of the
+same name here (pytest + hypothesis, see ``python/tests``), and the
+``custom_vjp`` backward of each kernel *is* the jax-derived VJP of these
+references — so the AOT training artifacts get exact gradients while the
+forward pass exercises the Pallas code path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def gelu(x):
+    """tanh-approximation GELU (matches jax.nn.gelu(approximate=True))."""
+    return jax.nn.gelu(x, approximate=True)
+
+
+# ---------------------------------------------------------------------------
+# routed expert MLP (parameter subset selection inside the MLP, paper §4.1)
+# ---------------------------------------------------------------------------
+
+def routed_expert_mlp(x, w1, b1, w2, b2, wmask):
+    """MoE-fied MLP forward with combined routing weight*mask.
+
+    Args:
+      x:     [T, D]     tokens.
+      w1:    [M, D, Fm] expert up-projection blocks (row-split of dense W1).
+      b1:    [M, Fm]    expert up bias blocks.
+      w2:    [M, Fm, D] expert down-projection blocks (col-split of dense W2).
+      b2:    [D]        shared down bias (applied once, not per expert).
+      wmask: [T, M]     routing_weight * selection_mask per (token, expert).
+
+    Returns: [T, D] = sum_m wmask[t,m] * (gelu(x @ w1[m] + b1[m]) @ w2[m]) + b2
+
+    With wmask == 1 everywhere this equals the dense MLP exactly (the
+    paper's lossless MoE-fication identity) because the dense forward is
+    the block-sum:  W2 @ sigma(W1 x) = sum_m W2_m @ sigma(W1_m x).
+    """
+    # h: [M, T, Fm]
+    h = gelu(jnp.einsum("td,mdf->mtf", x, w1) + b1[:, None, :])
+    # y_m: [M, T, D]
+    y_m = jnp.einsum("mtf,mfd->mtd", h, w2)
+    y = jnp.einsum("mtd,tm->td", y_m, wmask)
+    return y + b2[None, :]
+
+
+# ---------------------------------------------------------------------------
+# head-masked multi-head attention (parameter subset selection inside MHA)
+# ---------------------------------------------------------------------------
+
+def masked_attention(q, k, v, head_w, key_mask, causal):
+    """Multi-head attention with per-(token, head) output weights and a
+    per-token key mask (used by input-subset selection around MHA: tokens
+    dropped from the block neither query nor serve as keys).
+
+    Args:
+      q, k, v:  [H, T, Hd]
+      head_w:   [T, H]  routing_weight * mask per (query token, head);
+                zero rows disable a head for that token (output only —
+                compute cost accounting is analytic, see analysis::flops).
+      key_mask: [T]     1.0 for tokens visible as keys, 0.0 for dropped.
+      causal:   bool (static) — causal LM vs bidirectional ViT.
+
+    Returns: [H, T, Hd] per-head outputs, already scaled by head_w.
+    """
+    hd = q.shape[-1]
+    scores = jnp.einsum("htd,hsd->hts", q, k) / jnp.sqrt(jnp.float32(hd))
+    t = q.shape[1]
+    neg = jnp.float32(-1e30)
+    mask = key_mask[None, None, :] > 0.5
+    if causal:
+        tri = jnp.tril(jnp.ones((t, t), dtype=bool))
+        mask = jnp.logical_and(mask, tri[None, :, :])
+    scores = jnp.where(mask, scores, neg)
+    # A fully-masked row (query token dropped + causal row 0) would produce
+    # NaNs; guard by always letting a token attend to itself.
+    eye = jnp.eye(t, dtype=bool)[None, :, :]
+    scores = jnp.where(eye, jnp.maximum(scores, -1e29), scores)
+    attn = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("hts,hsd->htd", attn, v)
+    return out * head_w.T[:, :, None]
+
+
+# ---------------------------------------------------------------------------
+# fused router (linear -> M * softmax, paper Alg. 1 line 1)
+# ---------------------------------------------------------------------------
+
+def fused_router(x, wr, br):
+    """Routing weights for parameter subset selection.
+
+    Args:
+      x:  [T, D] tokens.
+      wr: [M, D] router weight.
+      br: [M]    router bias.
+
+    Returns: [T, M] = M * softmax(x @ wr.T + br, axis=-1).
+
+    The M* normalization makes k == M with uniform logits reproduce the
+    unrouted network exactly (paper §4.1).
+    """
+    m = wr.shape[0]
+    logits = x @ wr.T + br[None, :]
+    return jnp.float32(m) * jax.nn.softmax(logits, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# shared (non-kernel) routing math used by both L2 model paths
+# ---------------------------------------------------------------------------
+
+def topk_mask_lastdim(scores, k):
+    """Boolean mask of the top-k entries along the last dim.
+
+    ``k`` may be a traced scalar (runtime capacity): the mask is computed by
+    rank comparison, so shapes stay static and a single lowered artifact
+    serves every capacity in a sweep.  Ranks are derived from pairwise
+    comparisons (O(n^2) over the last dim, n <= seq_len here) instead of
+    argsort-of-argsort: comparison ranking has no gather/scatter in its
+    (transposed) graph, which keeps the vmap+grad lowering compatible with
+    the xla_extension 0.5.1 runtime the Rust side executes on.  Ties break
+    toward the lower index, matching a stable descending sort.
+    """
+    s_i = scores[..., :, None]
+    s_j = scores[..., None, :]
+    n = scores.shape[-1]
+    idx = jnp.arange(n)
+    earlier = idx[None, :] < idx[:, None]  # [n, n]: j strictly before i
+    beats = (s_j > s_i) | ((s_j == s_i) & earlier)
+    ranks = jnp.sum(beats.astype(jnp.int32), axis=-1)
+    return ranks < k
+
+
+def token_router_scores(x, w, b):
+    """Scalar sigmoid score per token (input subset selection, paper B.1).
+
+    x: [T, D]; w: [D]; b: []  ->  [T] in (0, 1).
+    """
+    return jax.nn.sigmoid(x @ w + b)
+
+
+def token_select_mask(scores, capacity, mode):
+    """Selection mask for input subset selection.
+
+    mode == 0 (training): top-k with k = ceil(capacity * T)   (paper Alg. 2)
+    mode == 1 (inference): threshold score > 0.5               (paper B.1)
+
+    ``capacity`` and ``mode`` are runtime scalars.
+    """
+    t = scores.shape[-1]
+    k = jnp.ceil(capacity * t).astype(jnp.int32)
+    topk = topk_mask_lastdim(scores, k)
+    thresh = scores > 0.5
+    return jnp.where(mode > 0.5, thresh, topk)

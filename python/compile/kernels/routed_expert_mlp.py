@@ -1,0 +1,101 @@
+"""L1 Pallas kernel: routed (MoE-fied) expert MLP.
+
+The paper's parameter-subset-selection hot spot: each token is processed by
+only the top-k of M expert blocks obtained by losslessly splitting the dense
+MLP (W1 row-wise, W2 column-wise).  The kernel computes
+
+    y[t] = sum_m wmask[t, m] * ( gelu(x[t] @ w1[m] + b1[m]) @ w2[m] ) + b2
+
+over a grid of (token-tile, expert).  Experts are the innermost grid
+dimension so each expert's weight block is staged exactly once per token
+tile and the output tile accumulates in place across the expert loop.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): on a real TPU the BlockSpec
+index map stages one expert block (D x Fm and Fm x D) from HBM into VMEM per
+grid step — the analogue of the paper's per-expert CUDA dispatch — and the
+token tile stays VMEM-resident across the expert loop (double-buffered
+weight fetch).  With D, Fm multiples of 128 every matmul maps onto full MXU
+tiles; a de-selected expert (wmask column all-zero for the tile) would be
+skipped at the grid level by Mosaic.  Here we run interpret=True (CPU PJRT
+cannot execute Mosaic custom-calls) so the savings are analytic, not
+wall-clock — see analysis::flops on the Rust side.
+
+VMEM per grid step = TILE_T*D (x) + D*Fm + Fm (w1,b1) + Fm*D (w2)
+                   + TILE_T*Fm (h) + TILE_T*D (acc), all f32.
+For lm_base (D=256, Fm=128, TILE_T=64): ~0.46 MB — comfortably under the
+~16 MB/core budget; lm_large (D=512, Fm=128): ~0.85 MB.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+TILE_T = 64
+
+
+def _kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, wm_ref, o_ref):
+    m_idx = pl.program_id(1)
+    x = x_ref[...]              # [Tt, D]
+    w1 = w1_ref[0]              # [D, Fm]  (expert block picked by BlockSpec)
+    b1 = b1_ref[0]              # [Fm]
+    w2 = w2_ref[0]              # [Fm, D]
+    wm = wm_ref[...][:, 0]      # [Tt]     (this expert's wmask column)
+
+    h = ref.gelu(x @ w1 + b1[None, :])        # [Tt, Fm]
+    y = (h @ w2) * wm[:, None]                # [Tt, D]
+
+    @pl.when(m_idx == 0)
+    def _init():
+        o_ref[...] = y + b2_ref[...][None, :]
+
+    @pl.when(m_idx > 0)
+    def _acc():
+        o_ref[...] += y
+
+
+@jax.custom_vjp
+def routed_expert_mlp(x, w1, b1, w2, b2, wmask):
+    """Pallas forward, exact jnp-reference backward (see ref.py).
+
+    Shapes match ref.routed_expert_mlp:
+      x [T,D], w1 [M,D,Fm], b1 [M,Fm], w2 [M,Fm,D], b2 [D], wmask [T,M].
+    """
+    t, d = x.shape
+    m, _, fm = w1.shape
+    tile_t = min(TILE_T, t)
+    grid = (pl.cdiv(t, tile_t), m)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_t, d), lambda i, j: (i, 0)),       # x tile
+            pl.BlockSpec((1, d, fm), lambda i, j: (j, 0, 0)),     # w1[m]
+            pl.BlockSpec((1, fm), lambda i, j: (j, 0)),           # b1[m]
+            pl.BlockSpec((1, fm, d), lambda i, j: (j, 0, 0)),     # w2[m]
+            pl.BlockSpec((d,), lambda i, j: (0,)),                # b2
+            pl.BlockSpec((tile_t, 1), lambda i, j: (i, j)),       # wmask col
+        ],
+        out_specs=pl.BlockSpec((tile_t, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
+        interpret=True,
+    )(x, w1, b1, w2, b2, wmask)
+
+
+def _fwd(x, w1, b1, w2, b2, wmask):
+    y = routed_expert_mlp(x, w1, b1, w2, b2, wmask)
+    return y, (x, w1, b1, w2, b2, wmask)
+
+
+def _bwd(res, g):
+    _, vjp = jax.vjp(ref.routed_expert_mlp, *res)
+    return vjp(g)
+
+
+routed_expert_mlp.defvjp(_fwd, _bwd)
+
+
+def macs(t, d, fm, m_active):
+    """Analytic MACs with m_active experts per token (up + down proj)."""
+    return 2 * t * d * fm * m_active

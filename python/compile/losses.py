@@ -1,0 +1,149 @@
+"""Self-distillation objectives and auxiliary router losses (paper §4.2).
+
+Distillation variants (Fig. 4 ablation; all take a runtime temperature):
+  * fwd_full  — KL(p_teacher || p_student) over the whole vocabulary
+  * rev_full  — KL(p_student || p_teacher)
+  * fwd_topk  — forward KL over the teacher's top-k tokens + a residual
+                bucket (the paper's winner; adopted for LM and VLM)
+  * rev_topk  — reverse KL on the same top-k + residual vector
+
+Auxiliary losses:
+  * load_balance — Appendix B.2's L_load over parameter-subset routers
+  * topk_bce     — Appendix B.1's L_top-k aligning training-time top-k
+                   selection with inference-time 0.5 thresholding
+  * cosine_distance — the ViT distillation objective (§4.2)
+"""
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-8
+
+
+def _log_softmax_t(logits, temperature):
+    return jax.nn.log_softmax(logits / temperature, axis=-1)
+
+
+def kl_full(teacher_logits, student_logits, temperature, reverse=False):
+    """KL divergence over the full vocabulary, averaged over positions.
+
+    forward (reverse=False): KL(p_t || p_s) — mass-covering.
+    reverse (reverse=True):  KL(p_s || p_t) — mode-seeking.
+    """
+    lt = _log_softmax_t(teacher_logits, temperature)
+    ls = _log_softmax_t(student_logits, temperature)
+    if reverse:
+        lt, ls = ls, lt
+    p = jnp.exp(lt)
+    return jnp.mean(jnp.sum(p * (lt - ls), axis=-1))
+
+
+def kl_topk(teacher_logits, student_logits, temperature, k, reverse=False):
+    """Top-k KL [Askell et al. '21 style, paper §4.2].
+
+    The teacher distribution is collapsed to (k+1) buckets: its top-k tokens
+    plus a residual; the student's probabilities are evaluated on the same
+    token set.  k is static (baked per artifact).
+
+    Implementation note: the bucketing is expressed with a *mask* derived
+    from a descending sort threshold rather than `jax.lax.top_k` + gather —
+    the `topk` HLO opcode (and batched-operand gathers) post-date the
+    xla_extension 0.5.1 runtime the Rust side executes on, while `sort` is
+    classic HLO.  KL over {masked tokens} + {residual bucket} is identical
+    to KL over {gathered top-k} + {residual}.
+    """
+    pt = jax.nn.softmax(teacher_logits / temperature, axis=-1)
+    ps = jax.nn.softmax(student_logits / temperature, axis=-1)
+    # threshold = k-th largest teacher prob; ties may admit a few extra
+    # tokens into the bucket, which only tightens the residual.
+    sorted_desc = -jnp.sort(-pt, axis=-1)
+    thresh = sorted_desc[..., k - 1:k]                      # [..., 1]
+    mask = (pt >= thresh).astype(pt.dtype)                  # [..., V]
+    pt_m = pt * mask
+    ps_m = ps * mask
+    rt = jnp.clip(1.0 - jnp.sum(pt_m, axis=-1), EPS, 1.0)
+    rs = jnp.clip(1.0 - jnp.sum(ps_m, axis=-1), EPS, 1.0)
+    if reverse:
+        pt_m, ps_m = ps_m, pt_m
+        rt, rs = rs, rt
+    # KL over the masked support ...
+    pt_c = jnp.clip(pt_m, EPS, 1.0)
+    ps_c = jnp.clip(ps_m, EPS, 1.0)
+    kl_main = jnp.sum(mask * pt_c * (jnp.log(pt_c) - jnp.log(ps_c)), axis=-1)
+    # ... plus the residual bucket.
+    kl_res = rt * (jnp.log(rt) - jnp.log(rs))
+    return jnp.mean(kl_main + kl_res)
+
+
+def distill_loss(teacher_logits, student_logits, temperature, loss_type, topk):
+    """Dispatch on the static loss_type string (one AOT artifact each)."""
+    if loss_type == "fwd_full":
+        return kl_full(teacher_logits, student_logits, temperature, reverse=False)
+    if loss_type == "rev_full":
+        return kl_full(teacher_logits, student_logits, temperature, reverse=True)
+    if loss_type == "fwd_topk":
+        return kl_topk(teacher_logits, student_logits, temperature, topk, reverse=False)
+    if loss_type == "rev_topk":
+        return kl_topk(teacher_logits, student_logits, temperature, topk, reverse=True)
+    raise ValueError(f"unknown loss_type {loss_type}")
+
+
+def cosine_distance(student_tokens, teacher_tokens):
+    """Mean 1 - cos(student, teacher) over token embeddings ([..., T, D])."""
+    s = student_tokens / (jnp.linalg.norm(student_tokens, axis=-1, keepdims=True) + EPS)
+    t = teacher_tokens / (jnp.linalg.norm(teacher_tokens, axis=-1, keepdims=True) + EPS)
+    return jnp.mean(1.0 - jnp.sum(s * t, axis=-1))
+
+
+def cosine_similarity(a, b):
+    """Mean cosine similarity over the token axis ([..., T, D] -> [...])."""
+    an = a / (jnp.linalg.norm(a, axis=-1, keepdims=True) + EPS)
+    bn = b / (jnp.linalg.norm(b, axis=-1, keepdims=True) + EPS)
+    return jnp.mean(jnp.sum(an * bn, axis=-1), axis=-1)
+
+
+def load_balance(router_w, mask):
+    """Appendix B.2 load-balancing loss for parameter-subset routers.
+
+    router_w: [..., T, M]  M*softmax routing weights (sum to M per token).
+    mask:     [..., T, M]  boolean top-k selection.
+
+    L = M * sum_m f_m * P_m  with f_m = selection frequency of expert m and
+    P_m = mean routing probability of expert m (switch-transformer form of
+    "count(top-k) * R(X)_m").  Minimized at uniform utilization.
+    """
+    m = router_w.shape[-1]
+    probs = router_w / jnp.float32(m)          # back to a distribution
+    f = jnp.mean(mask.astype(jnp.float32), axis=-2)   # [..., M]
+    p = jnp.mean(probs, axis=-2)                      # [..., M]
+    return jnp.float32(m) * jnp.mean(jnp.sum(f * p, axis=-1))
+
+
+def topk_bce(scores, mask):
+    """Appendix B.1 auxiliary BCE aligning router scores with top-k labels.
+
+    scores: [..., T] sigmoid router scores; mask: [..., T] top-k selection
+    (treated as constant labels — gradients flow only through scores).
+    """
+    y = jax.lax.stop_gradient(mask.astype(jnp.float32))
+    # f32-safe clip: 1 - 1e-8 rounds back to 1.0 in f32, which lets a
+    # saturated router sigmoid produce log(0) = -inf (observed as NaN
+    # losses once the teacher is strong and scores pin to 1).
+    s = jnp.clip(scores, 1e-6, 1.0 - 1e-6)
+    return -jnp.mean(y * jnp.log(s) + (1.0 - y) * jnp.log(1.0 - s))
+
+
+def cross_entropy(logits, targets, pad_id=0):
+    """Next-token CE, ignoring pad targets. logits [..., T, V], targets [..., T]."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    w = (targets != pad_id).astype(jnp.float32)
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def top1_match(logits_a, logits_b, targets, pad_id=0):
+    """Fraction of non-pad positions where both models' argmax agrees."""
+    a = jnp.argmax(logits_a, axis=-1)
+    b = jnp.argmax(logits_b, axis=-1)
+    w = (targets != pad_id).astype(jnp.float32)
+    return jnp.sum((a == b).astype(jnp.float32) * w) / jnp.maximum(jnp.sum(w), 1.0)

@@ -1,0 +1,363 @@
+"""L2 — JAX model definitions: frozen teachers + ElastiFormer elastic
+counterparts for all three modalities (LM / ViT / VLM).
+
+All core functions operate on a single sequence ([T, D]); batch dimensions
+are added with ``jax.vmap`` in ``train.py`` / ``aot.py``.  Parameters arrive
+as flat f32 vectors (see params.py) so the Rust coordinator can own
+checkpoints.
+
+Routing semantics (paper §4 + Appendix B):
+  * ``mode`` (runtime scalar): 0 = training top-k selection, 1 = inference
+    0.5-threshold selection, 2 = bypass (input routers forced to identity —
+    used for the capacity=1 equivalence oracle and the 1.0 serve tier).
+  * ``caps`` (runtime f32[4]): [cap_mha_tokens, cap_mlp_tokens,
+    frac_heads, frac_experts] — all fractions in (0, 1].
+  * ``layer_en`` (runtime f32[L]): per-layer routing enable — 1 routed,
+    0 dense teacher path (Fig. 7's even-layer experiment, and the
+    "ElastiFormer on all layers" default).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .kernels import ref
+
+EPS = 1e-6
+
+
+def rmsnorm(x, w):
+    return x * w * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + EPS)
+
+
+def _split_heads(x, n_heads):
+    t, d = x.shape
+    return x.reshape(t, n_heads, d // n_heads).transpose(1, 0, 2)  # [H,T,hd]
+
+
+def _merge_heads(x):
+    h, t, hd = x.shape
+    return x.transpose(1, 0, 2).reshape(t, h * hd)
+
+
+def moefy(p, pre, n_experts):
+    """Lossless MoE-fication of a dense MLP (paper §4.1, Fig. 3).
+
+    W1 [D,F] is split column-wise into M blocks [M,D,F/M] (rows of the
+    hidden layer), W2 [F,D] row-wise into [M,F/M,D]; the bias b2 stays
+    shared.  Summing all blocks with weight 1 reproduces the dense MLP
+    bit-for-bit.
+    """
+    w1, b1 = p[f"{pre}.mlp_w1"], p[f"{pre}.mlp_b1"]
+    w2, b2 = p[f"{pre}.mlp_w2"], p[f"{pre}.mlp_b2"]
+    d, f = w1.shape
+    fm = f // n_experts
+    w1b = w1.reshape(d, n_experts, fm).transpose(1, 0, 2)   # [M,D,Fm]
+    b1b = b1.reshape(n_experts, fm)                          # [M,Fm]
+    w2b = w2.reshape(n_experts, fm, d)                       # [M,Fm,D]
+    return w1b, b1b, w2b, b2
+
+
+def _attn(p, pre, xn, cfg, head_w, key_mask, causal, use_pallas, lora=None):
+    """Shared attention body: projections (+LoRA), head-weighted attention,
+    output projection.  head_w [T,H] already contains routing weight*mask."""
+    q = xn @ p[f"{pre}.q_w"] + p[f"{pre}.q_b"]
+    k = xn @ p[f"{pre}.k_w"] + p[f"{pre}.k_b"]
+    v = xn @ p[f"{pre}.v_w"] + p[f"{pre}.v_b"]
+    if lora is not None:
+        qa, qb, va, vb = lora
+        q = q + (xn @ qa.T) @ qb.T
+        v = v + (xn @ va.T) @ vb.T
+    qh, kh, vh = (_split_heads(t, cfg.n_heads) for t in (q, k, v))
+    if use_pallas:
+        out_h = kernels.masked_attention(qh, kh, vh, head_w, key_mask, causal)
+    else:
+        out_h = ref.masked_attention(qh, kh, vh, head_w, key_mask, causal)
+    return _merge_heads(out_h) @ p[f"{pre}.o_w"] + p[f"{pre}.o_b"]
+
+
+def _mlp_dense(p, pre, xn):
+    h = ref.gelu(xn @ p[f"{pre}.mlp_w1"] + p[f"{pre}.mlp_b1"])
+    return h @ p[f"{pre}.mlp_w2"] + p[f"{pre}.mlp_b2"]
+
+
+# ---------------------------------------------------------------------------
+# teacher (dense) path — with Fig. 2 structural-pruning hooks
+# ---------------------------------------------------------------------------
+
+def dense_block(p, pre, x, cfg, causal, head_mask, attn_on, mlp_on):
+    """Teacher transformer block with optional structural pruning.
+
+    head_mask [H] (1 keep / 0 prune), attn_on / mlp_on: scalars gating the
+    whole residual branch (attn_on = mlp_on = 0 skips the layer entirely,
+    Appendix A's 'skip transformer layer').
+    """
+    t = x.shape[0]
+    xn = rmsnorm(x, p[f"{pre}.ln1"])
+    head_w = jnp.broadcast_to(head_mask[None, :], (t, cfg.n_heads))
+    attn_out = _attn(p, pre, xn, cfg, head_w, jnp.ones((t,), jnp.float32),
+                     causal, use_pallas=False)
+    x = x + attn_on * attn_out
+    xn2 = rmsnorm(x, p[f"{pre}.ln2"])
+    x = x + mlp_on * _mlp_dense(p, pre, xn2)
+    return x
+
+
+def lm_backbone_dense(p, cfg, tokens, head_mask, attn_on, mlp_on):
+    """tokens [T] -> logits [T, V].  head_mask [L,H], attn_on/mlp_on [L]."""
+    x = p["tok_emb"][tokens] + p["pos_emb"]
+    for i in range(cfg.n_layers):
+        x = dense_block(p, f"l{i}", x, cfg, True,
+                        head_mask[i], attn_on[i], mlp_on[i])
+    x = rmsnorm(x, p["ln_f"])
+    return x @ p["head_w"] + p["head_b"]
+
+
+# ---------------------------------------------------------------------------
+# elastic path — the ElastiFormer contribution
+# ---------------------------------------------------------------------------
+
+def _token_gate(x, w, b, capacity, mode):
+    """Input-subset-selection gate (Alg. 2 / B.1).
+
+    Returns (gate [T], score [T], mask [T]): gate = mask * score during
+    routing, identically 1.0 in bypass mode (mode == 2).
+    """
+    score = ref.token_router_scores(x, w, b)
+    mask = ref.token_select_mask(score, capacity, jnp.minimum(mode, 1.0))
+    maskf = mask.astype(jnp.float32)
+    gate = jnp.where(mode > 1.5, jnp.ones_like(score), maskf * score)
+    maskf = jnp.where(mode > 1.5, jnp.ones_like(maskf), maskf)
+    return gate, score, maskf
+
+
+def _param_gate(xn, w, b, frac, n_sub, use_pallas):
+    """Parameter-subset-selection weights (Alg. 1): M*softmax -> top-k mask.
+
+    Returns (wmask [T,M], raw_w [T,M], mask [T,M]).
+    """
+    raw = (kernels.fused_router if use_pallas else ref.fused_router)(xn, w, b)
+    k = jnp.clip(jnp.round(frac * n_sub).astype(jnp.int32), 1, n_sub)
+    mask = ref.topk_mask_lastdim(raw, k).astype(jnp.float32)
+    return raw * mask, raw, mask
+
+
+def elastic_block(p, r, pre, x, cfg, causal, caps, on, mode, use_pallas,
+                  lora_rank):
+    """One ElastiFormer transformer block.  Returns (x, stats dict).
+
+    ``on`` in {0,1} (runtime): 0 = dense teacher path (all gates blended to
+    identity), 1 = routed.  All four routers of Fig. 1 are applied here.
+    """
+    t = x.shape[0]
+    cap_mha, cap_mlp, frac_h, frac_e = caps[0], caps[1], caps[2], caps[3]
+
+    # --- input subset selection around MHA (routes on the block input) ---
+    g_mha, s_mha, m_mha = _token_gate(
+        x, r[f"{pre}.r_mha_in_w"], r[f"{pre}.r_mha_in_b"], cap_mha, mode)
+    g_mha = on * g_mha + (1.0 - on)
+    key_mask = on * m_mha + (1.0 - on)
+
+    xn = rmsnorm(x, p[f"{pre}.ln1"])
+
+    # --- parameter subset selection inside MHA (attention heads) ---
+    hw, hraw, hmask = _param_gate(
+        xn, r[f"{pre}.r_heads_w"], r[f"{pre}.r_heads_b"],
+        frac_h, cfg.n_heads, use_pallas)
+    head_w = on * hw + (1.0 - on)
+
+    lora = None
+    if lora_rank > 0:
+        lora = (r[f"{pre}.lora_q_a"], r[f"{pre}.lora_q_b"],
+                r[f"{pre}.lora_v_a"], r[f"{pre}.lora_v_b"])
+    attn_out = _attn(p, pre, xn, cfg, head_w, key_mask, causal,
+                     use_pallas, lora)
+    x = x + g_mha[:, None] * attn_out
+
+    # --- input subset selection around MLP ---
+    g_mlp, s_mlp, m_mlp = _token_gate(
+        x, r[f"{pre}.r_mlp_in_w"], r[f"{pre}.r_mlp_in_b"], cap_mlp, mode)
+    g_mlp = on * g_mlp + (1.0 - on)
+
+    xn2 = rmsnorm(x, p[f"{pre}.ln2"])
+
+    # --- parameter subset selection inside MLP (MoE-fied experts) ---
+    ew, eraw, emask = _param_gate(
+        xn2, r[f"{pre}.r_experts_w"], r[f"{pre}.r_experts_b"],
+        frac_e, cfg.n_experts, use_pallas)
+    expert_wmask = on * ew + (1.0 - on)
+
+    w1b, b1b, w2b, b2 = moefy(p, pre, cfg.n_experts)
+    if use_pallas:
+        y = kernels.routed_expert_mlp(xn2, w1b, b1b, w2b, b2, expert_wmask)
+    else:
+        y = ref.routed_expert_mlp(xn2, w1b, b1b, w2b, b2, expert_wmask)
+    x = x + g_mlp[:, None] * y
+
+    stats = {
+        "s_mha": s_mha, "m_mha": m_mha,          # [T]
+        "s_mlp": s_mlp, "m_mlp": m_mlp,          # [T]
+        "head_w": hraw, "head_mask": hmask,      # [T,H]
+        "expert_w": eraw, "expert_mask": emask,  # [T,M]
+    }
+    return x, stats
+
+
+def _stack_stats(per_layer):
+    return {k: jnp.stack([s[k] for s in per_layer]) for k in per_layer[0]}
+
+
+def lm_backbone_elastic(p, r, cfg, tokens, caps, layer_en, mode,
+                        use_pallas=None, lora_rank=None):
+    """tokens [T] -> (logits [T,V], stats {k: [L,...]})."""
+    use_pallas = cfg.use_pallas if use_pallas is None else use_pallas
+    lora_rank = cfg.lora_rank if lora_rank is None else lora_rank
+    x = p["tok_emb"][tokens] + p["pos_emb"]
+    per_layer = []
+    for i in range(cfg.n_layers):
+        x, st = elastic_block(p, r, f"l{i}", x, cfg, True, caps,
+                              layer_en[i], mode, use_pallas, lora_rank)
+        per_layer.append(st)
+    x = rmsnorm(x, p["ln_f"])
+    return x @ p["head_w"] + p["head_b"], _stack_stats(per_layer)
+
+
+# ---------------------------------------------------------------------------
+# ViT (encoder + frozen AE decoder)
+# ---------------------------------------------------------------------------
+
+def patchify(img_flat, cfg):
+    """[H*W*C] -> [N, patch*patch*C] non-overlapping patches."""
+    hw = cfg.img_size
+    pch = cfg.patch
+    img = img_flat.reshape(hw, hw, cfg.channels)
+    n = hw // pch
+    x = img.reshape(n, pch, n, pch, cfg.channels)
+    return x.transpose(0, 2, 1, 3, 4).reshape(n * n, pch * pch * cfg.channels)
+
+
+def vit_encode_dense(p, cfg, img_flat, head_mask, attn_on, mlp_on):
+    """img [H*W*C] -> encoder tokens [N, D] (with Fig.2-style prune hooks)."""
+    x = patchify(img_flat, cfg) @ p["patch_w"] + p["patch_b"] + p["pos_emb"]
+    for i in range(cfg.n_layers):
+        x = dense_block(p, f"l{i}", x, cfg, False,
+                        head_mask[i], attn_on[i], mlp_on[i])
+    return rmsnorm(x, p["ln_f"])
+
+
+def vit_encode_elastic(p, r, cfg, img_flat, caps, layer_en, mode,
+                       use_pallas=None):
+    use_pallas = cfg.use_pallas if use_pallas is None else use_pallas
+    x = patchify(img_flat, cfg) @ p["patch_w"] + p["patch_b"] + p["pos_emb"]
+    per_layer = []
+    for i in range(cfg.n_layers):
+        x, st = elastic_block(p, r, f"l{i}", x, cfg, False, caps,
+                              layer_en[i], mode, use_pallas, cfg.lora_rank)
+        per_layer.append(st)
+    return rmsnorm(x, p["ln_f"]), _stack_stats(per_layer)
+
+
+def vit_decode(p, cfg, enc_tokens):
+    """Frozen AE decoder: encoder tokens [N,D] -> reconstructed patches
+    [N, patch_dim].  (The Fig. 7 metric compares decoder outputs.)"""
+    x = enc_tokens @ p["dec_in_w"] + p["dec_in_b"] + p["dec_pos"]
+    ones_h = jnp.ones((cfg.dec_heads,), jnp.float32)
+    dec_cfg = _DecCfg(cfg.dec_heads)
+    for i in range(cfg.dec_layers):
+        x = dense_block(p, f"d{i}", x, dec_cfg, False, ones_h, 1.0, 1.0)
+    x = rmsnorm(x, p["dec_ln"])
+    return x @ p["dec_out_w"] + p["dec_out_b"]
+
+
+class _DecCfg:
+    def __init__(self, n_heads):
+        self.n_heads = n_heads
+
+
+# ---------------------------------------------------------------------------
+# VLM (vision tower -> projector -> language decoder with image prefix)
+# ---------------------------------------------------------------------------
+
+def _vlm_vision_cfg(cfg):
+    class _V:
+        n_heads = cfg.v_heads
+    return _V()
+
+
+def vlm_image_tokens(p, cfg, img_flat):
+    """Vision tower + projector: img -> [N_img, D_lm] decoder-ready tokens."""
+    x = patchify_v(img_flat, cfg) @ p["v.patch_w"] + p["v.patch_b"] + p["v.pos_emb"]
+    vcfg = _vlm_vision_cfg(cfg)
+    ones_h = jnp.ones((cfg.v_heads,), jnp.float32)
+    for i in range(cfg.v_layers):
+        x = dense_block(p, f"v.l{i}", x, vcfg, False, ones_h, 1.0, 1.0)
+    x = rmsnorm(x, p["v.ln_f"])
+    return x @ p["proj_w"] + p["proj_b"]
+
+
+def patchify_v(img_flat, cfg):
+    hw, pch = cfg.img_size, cfg.patch
+    img = img_flat.reshape(hw, hw, cfg.channels)
+    n = hw // pch
+    x = img.reshape(n, pch, n, pch, cfg.channels)
+    return x.transpose(0, 2, 1, 3, 4).reshape(n * n, pch * pch * cfg.channels)
+
+
+def vlm_img_router_scores(r, img_tokens, mlp_router):
+    """Scalar score per image token (linear or 1-hidden-GELU-MLP router)."""
+    if mlp_router:
+        h = ref.gelu(img_tokens @ r["r_img_h_w"] + r["r_img_h_b"])
+        return jax.nn.sigmoid(h @ r["r_img_o_w"] + r["r_img_o_b"])
+    return jax.nn.sigmoid(img_tokens @ r["r_img_w"] + r["r_img_b"])
+
+
+def vlm_decode(p, cfg, img_tokens, img_gate, img_keymask, text_tokens):
+    """Language decoder over [selected image prefix; text tokens].
+
+    img_gate [N_img] scales the embeddings of selected image tokens (routing
+    weight, gradient path); img_keymask removes dropped image tokens from
+    attention.  Returns logits [T_total, V].
+    """
+    n_img = cfg.n_img_tokens
+    emb_txt = p["tok_emb"][text_tokens]
+    x = jnp.concatenate([img_tokens * img_gate[:, None], emb_txt], axis=0)
+    x = x + p["pos_emb"]
+    t_total = x.shape[0]
+    key_mask = jnp.concatenate(
+        [img_keymask, jnp.ones((cfg.text_len,), jnp.float32)], axis=0)
+    ones_h = jnp.ones((cfg.n_heads,), jnp.float32)
+    head_w = jnp.broadcast_to(ones_h[None, :], (t_total, cfg.n_heads))
+    for i in range(cfg.n_layers):
+        pre = f"l{i}"
+        xn = rmsnorm(x, p[f"{pre}.ln1"])
+        attn_out = _attn(p, pre, xn, cfg, head_w, key_mask, True,
+                         use_pallas=False)
+        # dropped image tokens contribute nothing downstream
+        x = x + key_mask[:, None] * attn_out
+        xn2 = rmsnorm(x, p[f"{pre}.ln2"])
+        x = x + key_mask[:, None] * _mlp_dense(p, pre, xn2)
+    x = rmsnorm(x, p["ln_f"])
+    return x @ p["head_w"] + p["head_b"]
+
+
+def vlm_forward(p, r, cfg, img_flat, text_tokens, capacity, mode, mlp_router):
+    """Full Elasti-VLM forward for one (image, caption) pair.
+
+    Returns (text_logits [text_len, V], img_scores [N_img], img_mask [N_img]).
+    mode semantics match the LM path; capacity is the image-token fraction.
+    """
+    img_tok = vlm_image_tokens(p, cfg, img_flat)
+    scores = vlm_img_router_scores(r, img_tok, mlp_router) if r is not None \
+        else jnp.ones((cfg.n_img_tokens,), jnp.float32)
+    if r is None:
+        gate = jnp.ones_like(scores)
+        maskf = jnp.ones_like(scores)
+    else:
+        mask = ref.token_select_mask(scores, capacity, jnp.minimum(mode, 1.0))
+        maskf = mask.astype(jnp.float32)
+        gate = jnp.where(mode > 1.5, jnp.ones_like(scores), maskf * scores)
+        maskf = jnp.where(mode > 1.5, jnp.ones_like(maskf), maskf)
+    logits = vlm_decode(p, cfg, img_tok, gate, maskf, text_tokens)
+    return logits[cfg.n_img_tokens:], scores, maskf

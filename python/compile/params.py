@@ -1,0 +1,221 @@
+"""Flat-parameter layout shared between JAX (build time) and Rust (run time).
+
+Every model travels through PJRT as a single flat ``f32[N]`` buffer.  A
+``ParamSpec`` assigns each named tensor a static (offset, shape) slot; the
+same table is serialized into ``manifest.json`` so the Rust side can
+checkpoint, inspect, noise or surgically edit individual tensors without
+re-deriving any layout logic.
+
+Two specs exist per model family:
+  * the *teacher* spec — the frozen pretrained parameters, and
+  * the *router* spec — ElastiFormer's trainable routing modules (+ LoRA),
+    which is what ``distill_step`` optimizes.
+"""
+
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import LMConfig, ViTConfig, VLMConfig
+
+
+class ParamSpec:
+    """Ordered (name, shape, init) table with static flat offsets.
+
+    ``init`` is one of:
+      "zeros" | "ones" | ("normal", std) | ("uniform_pm", bound) |
+      ("const", value)
+    """
+
+    def __init__(self):
+        self.entries: List[Tuple[str, Tuple[int, ...], object]] = []
+        self.offsets: Dict[str, int] = {}
+        self.shapes: Dict[str, Tuple[int, ...]] = {}
+        self.total = 0
+
+    def add(self, name: str, shape: Tuple[int, ...], init="zeros"):
+        assert name not in self.offsets, f"duplicate param {name}"
+        size = int(np.prod(shape)) if shape else 1
+        self.entries.append((name, tuple(shape), init))
+        self.offsets[name] = self.total
+        self.shapes[name] = tuple(shape)
+        self.total += size
+        return self
+
+    def get(self, flat: jnp.ndarray, name: str) -> jnp.ndarray:
+        """Static slice + reshape of one named tensor out of the flat buffer."""
+        off = self.offsets[name]
+        shape = self.shapes[name]
+        size = int(np.prod(shape)) if shape else 1
+        return jax.lax.slice(flat, (off,), (off + size,)).reshape(shape)
+
+    def unflatten(self, flat: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+        return {name: self.get(flat, name) for name, _, _ in self.entries}
+
+    def init_flat(self, key: jax.Array) -> jnp.ndarray:
+        """Initial flat parameter vector (used by the AOT ``init`` artifact)."""
+        parts = []
+        for name, shape, init in self.entries:
+            size = int(np.prod(shape)) if shape else 1
+            key, sub = jax.random.split(key)
+            if init == "zeros":
+                parts.append(jnp.zeros((size,), jnp.float32))
+            elif init == "ones":
+                parts.append(jnp.ones((size,), jnp.float32))
+            elif isinstance(init, tuple) and init[0] == "normal":
+                parts.append(init[1] * jax.random.normal(sub, (size,), jnp.float32))
+            elif isinstance(init, tuple) and init[0] == "uniform_pm":
+                parts.append(jax.random.uniform(
+                    sub, (size,), jnp.float32, -init[1], init[1]))
+            elif isinstance(init, tuple) and init[0] == "const":
+                parts.append(jnp.full((size,), init[1], jnp.float32))
+            else:  # pragma: no cover - spec bug
+                raise ValueError(f"unknown init {init!r} for {name}")
+        return jnp.concatenate(parts)
+
+    def manifest(self) -> list:
+        """JSON-ready layout table for the Rust side."""
+        out = []
+        for name, shape, _ in self.entries:
+            out.append({
+                "name": name,
+                "shape": list(shape),
+                "offset": self.offsets[name],
+                "size": int(np.prod(shape)) if shape else 1,
+            })
+        return out
+
+
+# ---------------------------------------------------------------------------
+# teacher specs
+# ---------------------------------------------------------------------------
+
+def _block(spec: ParamSpec, prefix: str, d: int, f: int, std: float):
+    """One pre-norm transformer block (RMSNorm / MHA / RMSNorm / MLP)."""
+    spec.add(f"{prefix}.ln1", (d,), "ones")
+    for p in ("q", "k", "v", "o"):
+        spec.add(f"{prefix}.{p}_w", (d, d), ("normal", std))
+        spec.add(f"{prefix}.{p}_b", (d,), "zeros")
+    spec.add(f"{prefix}.ln2", (d,), "ones")
+    spec.add(f"{prefix}.mlp_w1", (d, f), ("normal", std))
+    spec.add(f"{prefix}.mlp_b1", (f,), "zeros")
+    spec.add(f"{prefix}.mlp_w2", (f, d), ("normal", std / math.sqrt(2.0)))
+    spec.add(f"{prefix}.mlp_b2", (d,), "zeros")
+
+
+def lm_teacher_spec(cfg: LMConfig) -> ParamSpec:
+    s = ParamSpec()
+    std = 0.02
+    s.add("tok_emb", (cfg.vocab, cfg.d_model), ("normal", std))
+    s.add("pos_emb", (cfg.seq_len, cfg.d_model), ("normal", std))
+    for i in range(cfg.n_layers):
+        _block(s, f"l{i}", cfg.d_model, cfg.d_ff, std)
+    s.add("ln_f", (cfg.d_model,), "ones")
+    s.add("head_w", (cfg.d_model, cfg.vocab), ("normal", std))
+    s.add("head_b", (cfg.vocab,), "zeros")
+    return s
+
+
+def vit_teacher_spec(cfg: ViTConfig) -> ParamSpec:
+    s = ParamSpec()
+    std = 0.02
+    s.add("patch_w", (cfg.patch_dim, cfg.d_model), ("normal", std))
+    s.add("patch_b", (cfg.d_model,), "zeros")
+    s.add("pos_emb", (cfg.n_tokens, cfg.d_model), ("normal", std))
+    for i in range(cfg.n_layers):
+        _block(s, f"l{i}", cfg.d_model, cfg.d_ff, std)
+    s.add("ln_f", (cfg.d_model,), "ones")
+    # frozen AE decoder (the Fig. 7 eval head)
+    s.add("dec_in_w", (cfg.d_model, cfg.dec_d_model), ("normal", std))
+    s.add("dec_in_b", (cfg.dec_d_model,), "zeros")
+    s.add("dec_pos", (cfg.n_tokens, cfg.dec_d_model), ("normal", std))
+    for i in range(cfg.dec_layers):
+        _block(s, f"d{i}", cfg.dec_d_model, cfg.dec_d_ff, std)
+    s.add("dec_ln", (cfg.dec_d_model,), "ones")
+    s.add("dec_out_w", (cfg.dec_d_model, cfg.patch_dim), ("normal", std))
+    s.add("dec_out_b", (cfg.patch_dim,), "zeros")
+    return s
+
+
+def vlm_teacher_spec(cfg: VLMConfig) -> ParamSpec:
+    s = ParamSpec()
+    std = 0.02
+    # vision tower
+    s.add("v.patch_w", (cfg.patch_dim, cfg.v_d_model), ("normal", std))
+    s.add("v.patch_b", (cfg.v_d_model,), "zeros")
+    s.add("v.pos_emb", (cfg.n_img_tokens, cfg.v_d_model), ("normal", std))
+    for i in range(cfg.v_layers):
+        _block(s, f"v.l{i}", cfg.v_d_model, cfg.v_d_ff, std)
+    s.add("v.ln_f", (cfg.v_d_model,), "ones")
+    # projector (LLaVA's mm_projector)
+    s.add("proj_w", (cfg.v_d_model, cfg.d_model), ("normal", std))
+    s.add("proj_b", (cfg.d_model,), "zeros")
+    # language decoder
+    s.add("tok_emb", (cfg.vocab, cfg.d_model), ("normal", std))
+    s.add("pos_emb", (cfg.seq_len, cfg.d_model), ("normal", std))
+    for i in range(cfg.n_layers):
+        _block(s, f"l{i}", cfg.d_model, cfg.d_ff, std)
+    s.add("ln_f", (cfg.d_model,), "ones")
+    s.add("head_w", (cfg.d_model, cfg.vocab), ("normal", std))
+    s.add("head_b", (cfg.vocab,), "zeros")
+    return s
+
+
+# ---------------------------------------------------------------------------
+# router (trainable) specs
+# ---------------------------------------------------------------------------
+#
+# Init choices encode the paper's "start at the teacher" property:
+#   * expert/head routers start at 0  ->  M*softmax(0) = uniform weight 1.0,
+#     so k = M reproduces the teacher exactly (§4.1 normalization).
+#   * token routers start with small weights and bias +1 -> sigmoid ~ 0.73,
+#     every token selected at the 0.5 inference threshold from step one.
+#   * LoRA B starts at 0 -> adapters are exact no-ops at init.
+
+def lm_router_spec(cfg: LMConfig, lora_rank=None) -> ParamSpec:
+    r = cfg.lora_rank if lora_rank is None else lora_rank
+    s = ParamSpec()
+    d, h, m = cfg.d_model, cfg.n_heads, cfg.n_experts
+    for i in range(cfg.n_layers):
+        s.add(f"l{i}.r_mha_in_w", (d,), ("normal", 0.02))
+        s.add(f"l{i}.r_mha_in_b", (), ("const", 1.0))
+        s.add(f"l{i}.r_mlp_in_w", (d,), ("normal", 0.02))
+        s.add(f"l{i}.r_mlp_in_b", (), ("const", 1.0))
+        s.add(f"l{i}.r_heads_w", (h, d), "zeros")
+        s.add(f"l{i}.r_heads_b", (h,), "zeros")
+        s.add(f"l{i}.r_experts_w", (m, d), "zeros")
+        s.add(f"l{i}.r_experts_b", (m,), "zeros")
+        if r > 0:
+            s.add(f"l{i}.lora_q_a", (r, d), ("normal", 0.02))
+            s.add(f"l{i}.lora_q_b", (d, r), "zeros")
+            s.add(f"l{i}.lora_v_a", (r, d), ("normal", 0.02))
+            s.add(f"l{i}.lora_v_b", (d, r), "zeros")
+    return s
+
+
+def vit_router_spec(cfg: ViTConfig, lora_rank=None) -> ParamSpec:
+    lm_like = LMConfig(
+        name=cfg.name, vocab=1, d_model=cfg.d_model, n_layers=cfg.n_layers,
+        n_heads=cfg.n_heads, d_ff=cfg.d_ff, seq_len=cfg.n_tokens,
+        n_experts=cfg.n_experts,
+        lora_rank=cfg.lora_rank if lora_rank is None else lora_rank,
+    )
+    return lm_router_spec(lm_like)
+
+
+def vlm_router_spec(cfg: VLMConfig, mlp_router: bool = False) -> ParamSpec:
+    """Image-token selection router (Fig. 9): linear or 1-hidden-layer MLP."""
+    s = ParamSpec()
+    d = cfg.d_model
+    if mlp_router:
+        s.add("r_img_h_w", (d, cfg.router_hidden), ("normal", 0.02))
+        s.add("r_img_h_b", (cfg.router_hidden,), "zeros")
+        s.add("r_img_o_w", (cfg.router_hidden,), ("normal", 0.02))
+        s.add("r_img_o_b", (), ("const", 1.0))
+    else:
+        s.add("r_img_w", (d,), ("normal", 0.02))
+        s.add("r_img_b", (), ("const", 1.0))
+    return s

@@ -1,0 +1,408 @@
+"""L2 — training-step definitions lowered to AOT artifacts.
+
+Everything stateful lives in flat f32 vectors (params / Adam m / Adam v) so
+the Rust coordinator can keep them device-resident across steps and
+checkpoint them byte-for-byte.  The learning rate arrives as a runtime
+scalar — the cosine/warmup schedule is computed by the Rust trainer.
+
+Step functions:
+  * ``pretrain_step``      — full-model AdamW on next-token CE (teacher).
+  * ``distill_step``       — ElastiFormer: AdamW on *router (+LoRA)* params
+    only, objective Eq.(1): L_distill + L_load + L_topk.
+  * ``vit_pretrain_step``  — autoencoder reconstruction (teacher ViT).
+  * ``vit_distill_step``   — cosine-distance distillation (Elasti-ViT).
+  * ``vlm_pretrain_step``  — caption CE given image prefix (teacher VLM).
+  * ``vlm_distill_step``   — top-k forward KL on text logits (Elasti-VLM).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import losses, model
+from .kernels import ref
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+WEIGHT_DECAY = 0.01
+GRAD_CLIP = 1.0
+
+
+def adamw_update(g, p, m, v, step, lr, weight_decay=WEIGHT_DECAY):
+    """One AdamW step on flat vectors, with global-norm gradient clipping."""
+    gnorm = jnp.sqrt(jnp.sum(g * g) + 1e-12)
+    g = g * jnp.minimum(1.0, GRAD_CLIP / gnorm)
+    m2 = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+    v2 = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+    t = step.astype(jnp.float32) + 1.0
+    mhat = m2 / (1.0 - ADAM_B1 ** t)
+    vhat = v2 / (1.0 - ADAM_B2 ** t)
+    p2 = p - lr * (mhat / (jnp.sqrt(vhat) + ADAM_EPS) + weight_decay * p)
+    return p2, m2, v2, gnorm
+
+
+# ---------------------------------------------------------------------------
+# causal LM
+# ---------------------------------------------------------------------------
+
+def _lm_dense_logits_batch(spec, cfg, flat, tokens, head_mask, attn_on, mlp_on):
+    p = spec.unflatten(flat)
+    fn = lambda tok: model.lm_backbone_dense(p, cfg, tok, head_mask,
+                                             attn_on, mlp_on)
+    return jax.vmap(fn)(tokens)
+
+
+def _lm_ce(spec, cfg, flat, tokens, head_mask, attn_on, mlp_on):
+    logits = _lm_dense_logits_batch(spec, cfg, flat, tokens,
+                                    head_mask, attn_on, mlp_on)
+    return losses.cross_entropy(logits[:, :-1], tokens[:, 1:]), logits
+
+
+def lm_pretrain_step(spec, cfg, flat, m, v, step, lr, tokens):
+    """Returns (flat', m', v', [loss, gnorm])."""
+    full_h = jnp.ones((cfg.n_layers, cfg.n_heads), jnp.float32)
+    full_l = jnp.ones((cfg.n_layers,), jnp.float32)
+
+    def loss_fn(f):
+        ce, _ = _lm_ce(spec, cfg, f, tokens, full_h, full_l, full_l)
+        return ce
+
+    loss, g = jax.value_and_grad(loss_fn)(flat)
+    p2, m2, v2, gnorm = adamw_update(g, flat, m, v, step, lr)
+    return p2, m2, v2, jnp.stack([loss, gnorm])
+
+
+def lm_teacher_forward(spec, cfg, flat, tokens, head_mask, attn_on, mlp_on):
+    """Fig. 2 pruning probe: logits + CE under structural masks."""
+    ce, logits = _lm_ce(spec, cfg, flat, tokens, head_mask, attn_on, mlp_on)
+    return logits, ce
+
+
+def _lm_elastic_logits_batch(tspec, rspec, cfg, tflat, rflat, tokens, caps,
+                             layer_en, mode, use_pallas, lora_rank):
+    p = tspec.unflatten(tflat)
+    r = rspec.unflatten(rflat)
+    fn = lambda tok: model.lm_backbone_elastic(
+        p, r, cfg, tok, caps, layer_en, mode, use_pallas, lora_rank)
+    return jax.vmap(fn)(tokens)  # (logits [B,T,V], stats {k: [B,L,...]})
+
+
+def lm_elastic_forward(tspec, rspec, cfg, tflat, rflat, tokens, caps,
+                       layer_en, mode, use_pallas=None, lora_rank=None):
+    """The request-path artifact.  Returns
+    (logits, ce, s_mha [B,L,T], s_mlp [B,L,T], m_mha, m_mlp,
+     head_w [B,L,T,H], expert_w [B,L,T,M])."""
+    logits, st = _lm_elastic_logits_batch(
+        tspec, rspec, cfg, tflat, rflat, tokens, caps, layer_en, mode,
+        use_pallas, lora_rank)
+    ce = losses.cross_entropy(logits[:, :-1], tokens[:, 1:])
+    return (logits, ce, st["s_mha"], st["s_mlp"], st["m_mha"], st["m_mlp"],
+            st["head_w"], st["expert_w"])
+
+
+def _router_aux(st):
+    """Load-balance (heads + experts) and top-k BCE (both token routers)."""
+    load = losses.load_balance(st["head_w"], st["head_mask"] > 0.5) \
+        + losses.load_balance(st["expert_w"], st["expert_mask"] > 0.5)
+    bce = losses.topk_bce(st["s_mha"], st["m_mha"] > 0.5) \
+        + losses.topk_bce(st["s_mlp"], st["m_mlp"] > 0.5)
+    return load, bce
+
+
+def lm_distill_step(tspec, rspec, cfg, teacher_flat, student_flat, rflat,
+                    m, v, step, lr, tokens, caps, layer_en, temp,
+                    loss_type="fwd_topk", lora_rank=None, use_pallas=False):
+    """Self-distillation step (Eq. 1).  Trains the router vector only.
+
+    ``student_flat`` is the frozen backbone the routers steer — identical to
+    ``teacher_flat`` in the paper's main experiments, a noised copy in the
+    Fig. 4 ablation.  Returns (rflat', m', v',
+    metrics [distill, load, bce, total, student_ce, teacher_ce, gnorm, frac_tokens]).
+    """
+    full_h = jnp.ones((cfg.n_layers, cfg.n_heads), jnp.float32)
+    full_l = jnp.ones((cfg.n_layers,), jnp.float32)
+    t_logits = _lm_dense_logits_batch(
+        tspec, cfg, teacher_flat, tokens, full_h, full_l, full_l)
+    t_logits = jax.lax.stop_gradient(t_logits)
+
+    def loss_fn(rf):
+        logits, st = _lm_elastic_logits_batch(
+            tspec, rspec, cfg, student_flat, rf, tokens, caps, layer_en,
+            jnp.float32(0.0), use_pallas, lora_rank)
+        dl = losses.distill_loss(t_logits, logits, temp, loss_type,
+                                 cfg.distill_topk)
+        load, bce = _router_aux(st)
+        total = dl + load + bce
+        ce = losses.cross_entropy(logits[:, :-1], tokens[:, 1:])
+        frac = jnp.mean(st["m_mlp"])
+        return total, (dl, load, bce, ce, frac)
+
+    (total, (dl, load, bce, ce, frac)), g = \
+        jax.value_and_grad(loss_fn, has_aux=True)(rflat)
+    r2, m2, v2, gnorm = adamw_update(g, rflat, m, v, step, lr,
+                                     weight_decay=0.0)
+    t_ce = losses.cross_entropy(t_logits[:, :-1], tokens[:, 1:])
+    metrics = jnp.stack([dl, load, bce, total, ce, t_ce, gnorm, frac])
+    return r2, m2, v2, metrics
+
+
+def lm_serve_forward(tspec, rspec, cfg, tflat, rflat, tokens, capacity):
+    """Static-capacity serving artifact (one per tier, see configs.SERVE_TIERS).
+
+    Unlike ``lm_elastic_forward`` (runtime capacity, mask-based — uniform
+    compute), this path bakes k = ceil(capacity * T) **statically** and
+    physically gathers the selected tokens before the MLP, so the dominant
+    MLP FLOPs really shrink by (1 - capacity) on any backend.  Heads/experts
+    use the same fraction via masking.  capacity == 1.0 lowers to the exact
+    teacher (bypass mode).
+
+    Returns logits [B, T, V].
+    """
+    p = tspec.unflatten(tflat)
+    r = rspec.unflatten(rflat)
+    t = cfg.seq_len
+    k_tok = max(1, int(round(capacity * t)))
+    k_head = max(1, int(round(capacity * cfg.n_heads)))
+    k_exp = max(1, int(round(capacity * cfg.n_experts)))
+    bypass = capacity >= 1.0
+
+    def ranks_desc(s):
+        """Pairwise-comparison descending ranks (no sort/top_k HLO ops —
+        see losses.kl_topk for the runtime-compat rationale)."""
+        n = s.shape[-1]
+        idx = jnp.arange(n)
+        earlier = idx[None, :] < idx[:, None]
+        beats = (s[None, :] > s[:, None]) | \
+            ((s[None, :] == s[:, None]) & earlier)
+        return jnp.sum(beats.astype(jnp.int32), axis=-1)
+
+    def one_seq(tok):
+        x = p["tok_emb"][tok] + p["pos_emb"]
+        for i in range(cfg.n_layers):
+            pre = f"l{i}"
+            # --- MHA: mask-based token selection (keys must stay aligned) ---
+            if bypass:
+                g_mha = jnp.ones((t,), jnp.float32)
+                key_mask = jnp.ones((t,), jnp.float32)
+            else:
+                s = ref.token_router_scores(
+                    x, r[f"{pre}.r_mha_in_w"], r[f"{pre}.r_mha_in_b"])
+                key_mask = (ranks_desc(s) < k_tok).astype(jnp.float32)
+                g_mha = key_mask * s
+            xn = rmsnorm_(x, p[f"{pre}.ln1"])
+            if bypass:
+                head_w = jnp.ones((t, cfg.n_heads), jnp.float32)
+            else:
+                raw = ref.fused_router(
+                    xn, r[f"{pre}.r_heads_w"], r[f"{pre}.r_heads_b"])
+                hm = ref.topk_mask_lastdim(raw, k_head).astype(jnp.float32)
+                head_w = raw * hm
+            attn_out = model._attn(p, pre, xn, cfg, head_w, key_mask, True,
+                                   use_pallas=False)
+            x = x + g_mha[:, None] * attn_out
+
+            # --- MLP: physical compaction of the top-k tokens ---
+            xn2 = rmsnorm_(x, p[f"{pre}.ln2"])
+            if bypass:
+                x = x + model._mlp_dense(p, pre, xn2)
+            else:
+                s2 = ref.token_router_scores(
+                    x, r[f"{pre}.r_mlp_in_w"], r[f"{pre}.r_mlp_in_b"])
+                # selection matrix sel[j, t] = 1 iff token t has rank j < k;
+                # sel @ x compacts the selected rows into [k, D] (one thin
+                # matmul instead of a batched gather, which the 0.5.1
+                # runtime cannot parse), and sel.T scatters them back.
+                rk = ranks_desc(s2)
+                sel = (rk[None, :] == jnp.arange(k_tok)[:, None]) \
+                    .astype(jnp.float32)                       # [k, T]
+                x_sel = sel @ xn2                              # [k, D]
+                s_sel = sel @ s2                               # [k]
+                if k_exp >= cfg.n_experts:
+                    y_sel = model._mlp_dense(p, pre, x_sel)
+                else:
+                    raw_e = ref.fused_router(
+                        x_sel, r[f"{pre}.r_experts_w"], r[f"{pre}.r_experts_b"])
+                    em = ref.topk_mask_lastdim(raw_e, k_exp).astype(jnp.float32)
+                    w1b, b1b, w2b, b2 = model.moefy(p, pre, cfg.n_experts)
+                    y_sel = ref.routed_expert_mlp(x_sel, w1b, b1b, w2b, b2,
+                                                  raw_e * em)
+                x = x + sel.T @ (s_sel[:, None] * y_sel)
+        x = rmsnorm_(x, p["ln_f"])
+        return x @ p["head_w"] + p["head_b"]
+
+    return jax.vmap(one_seq)(tokens)
+
+
+def rmsnorm_(x, w):
+    return model.rmsnorm(x, w)
+
+
+# ---------------------------------------------------------------------------
+# ViT
+# ---------------------------------------------------------------------------
+
+def _vit_dense_batch(spec, cfg, flat, imgs, head_mask, attn_on, mlp_on):
+    p = spec.unflatten(flat)
+    enc = jax.vmap(lambda im: model.vit_encode_dense(
+        p, cfg, im, head_mask, attn_on, mlp_on))(imgs)
+    dec = jax.vmap(lambda e: model.vit_decode(p, cfg, e))(enc)
+    return enc, dec
+
+
+def vit_pretrain_step(spec, cfg, flat, m, v, step, lr, imgs):
+    """Autoencoder pretraining of the ViT teacher (recon MSE on patches)."""
+    full_h = jnp.ones((cfg.n_layers, cfg.n_heads), jnp.float32)
+    full_l = jnp.ones((cfg.n_layers,), jnp.float32)
+
+    def loss_fn(f):
+        _, dec = _vit_dense_batch(spec, cfg, f, imgs, full_h, full_l, full_l)
+        target = jax.vmap(lambda im: model.patchify(im, cfg))(imgs)
+        return jnp.mean((dec - target) ** 2)
+
+    loss, g = jax.value_and_grad(loss_fn)(flat)
+    p2, m2, v2, gnorm = adamw_update(g, flat, m, v, step, lr)
+    return p2, m2, v2, jnp.stack([loss, gnorm])
+
+
+def vit_teacher_forward(spec, cfg, flat, imgs):
+    full_h = jnp.ones((cfg.n_layers, cfg.n_heads), jnp.float32)
+    full_l = jnp.ones((cfg.n_layers,), jnp.float32)
+    enc, dec = _vit_dense_batch(spec, cfg, flat, imgs, full_h, full_l, full_l)
+    return enc, dec
+
+
+def vit_elastic_forward(tspec, rspec, cfg, tflat, rflat, imgs, caps,
+                        layer_en, mode, use_pallas=None):
+    """Returns (enc_student, dec_student, dec_teacher, cos_sim [B],
+    s_mlp [B,L,N], m_mlp, head_w, expert_w).
+
+    cos_sim is the Fig. 7 metric: cosine similarity between the frozen
+    decoder's outputs on student vs teacher encodings.
+    """
+    p = tspec.unflatten(tflat)
+    r = rspec.unflatten(rflat)
+    enc_s, st = jax.vmap(lambda im: model.vit_encode_elastic(
+        p, r, cfg, im, caps, layer_en, mode, use_pallas))(imgs)
+    dec_s = jax.vmap(lambda e: model.vit_decode(p, cfg, e))(enc_s)
+    full_h = jnp.ones((cfg.n_layers, cfg.n_heads), jnp.float32)
+    full_l = jnp.ones((cfg.n_layers,), jnp.float32)
+    enc_t, dec_t = _vit_dense_batch(tspec, cfg, tflat, imgs,
+                                    full_h, full_l, full_l)
+    cos = losses.cosine_similarity(dec_s, dec_t)
+    return (enc_s, dec_s, dec_t, cos, st["s_mlp"], st["m_mlp"],
+            st["head_w"], st["expert_w"])
+
+
+def vit_distill_step(tspec, rspec, cfg, tflat, rflat, m, v, step, lr, imgs,
+                     caps, layer_en, use_pallas=False):
+    """Cosine-distance self-distillation of the Elasti-ViT encoder.
+
+    Returns (rflat', m', v', metrics [distill, load, bce, total, cos_enc, gnorm,
+    frac_tokens, 0]).
+    """
+    p_t = tspec.unflatten(tflat)
+    full_h = jnp.ones((cfg.n_layers, cfg.n_heads), jnp.float32)
+    full_l = jnp.ones((cfg.n_layers,), jnp.float32)
+    enc_t = jax.vmap(lambda im: model.vit_encode_dense(
+        p_t, cfg, im, full_h, full_l, full_l))(imgs)
+    enc_t = jax.lax.stop_gradient(enc_t)
+
+    def loss_fn(rf):
+        r = rspec.unflatten(rf)
+        enc_s, st = jax.vmap(lambda im: model.vit_encode_elastic(
+            p_t, r, cfg, im, caps, layer_en, jnp.float32(0.0),
+            use_pallas))(imgs)
+        dl = losses.cosine_distance(enc_s, enc_t)
+        load, bce = _router_aux(st)
+        total = dl + load + bce
+        cos = jnp.mean(losses.cosine_similarity(enc_s, enc_t))
+        frac = jnp.mean(st["m_mlp"])
+        return total, (dl, load, bce, cos, frac)
+
+    (total, (dl, load, bce, cos, frac)), g = \
+        jax.value_and_grad(loss_fn, has_aux=True)(rflat)
+    r2, m2, v2, gnorm = adamw_update(g, rflat, m, v, step, lr,
+                                     weight_decay=0.0)
+    metrics = jnp.stack([dl, load, bce, total, cos, gnorm, frac,
+                         jnp.float32(0.0)])
+    return r2, m2, v2, metrics
+
+
+# ---------------------------------------------------------------------------
+# VLM
+# ---------------------------------------------------------------------------
+
+def _vlm_logits_batch(tspec, rspec, cfg, tflat, rflat, imgs, texts,
+                      capacity, mode, mlp_router):
+    p = tspec.unflatten(tflat)
+    r = rspec.unflatten(rflat) if rspec is not None else None
+    fn = lambda im, tx: model.vlm_forward(p, r, cfg, im, tx, capacity, mode,
+                                          mlp_router)
+    return jax.vmap(fn)(imgs, texts)
+
+
+def vlm_pretrain_step(spec, cfg, flat, m, v, step, lr, imgs, texts):
+    """Caption CE given the image prefix (trains the whole VLM teacher)."""
+
+    def loss_fn(f):
+        logits, _, _ = _vlm_logits_batch(
+            spec, None, cfg, f, None, imgs, texts,
+            jnp.float32(1.0), jnp.float32(2.0), False)
+        return losses.cross_entropy(logits[:, :-1], texts[:, 1:])
+
+    loss, g = jax.value_and_grad(loss_fn)(flat)
+    p2, m2, v2, gnorm = adamw_update(g, flat, m, v, step, lr)
+    return p2, m2, v2, jnp.stack([loss, gnorm])
+
+
+def vlm_teacher_forward(spec, cfg, flat, imgs, texts):
+    logits, _, _ = _vlm_logits_batch(
+        spec, None, cfg, flat, None, imgs, texts,
+        jnp.float32(1.0), jnp.float32(2.0), False)
+    ce = losses.cross_entropy(logits[:, :-1], texts[:, 1:])
+    return logits, ce
+
+
+def vlm_elastic_forward(tspec, rspec, cfg, tflat, rflat, imgs, texts,
+                        capacity, mode, mlp_router):
+    """Returns (text_logits, ce, img_scores [B,N_img], img_mask [B,N_img])."""
+    logits, scores, mask = _vlm_logits_batch(
+        tspec, rspec, cfg, tflat, rflat, imgs, texts, capacity, mode,
+        mlp_router)
+    ce = losses.cross_entropy(logits[:, :-1], texts[:, 1:])
+    return logits, ce, scores, mask
+
+
+def vlm_distill_step(tspec, rspec, cfg, tflat, rflat, m, v, step, lr, imgs,
+                     texts, capacity, temp, mlp_router):
+    """Top-k forward-KL distillation of image-token routing (Fig. 9).
+
+    Returns (rflat', m', v', metrics [distill, bce, total, student_ce,
+    teacher_ce, gnorm, frac_img_tokens, 0]).
+    """
+    t_logits, _, _ = _vlm_logits_batch(
+        tspec, None, cfg, tflat, None, imgs, texts,
+        jnp.float32(1.0), jnp.float32(2.0), False)
+    t_logits = jax.lax.stop_gradient(t_logits)
+
+    def loss_fn(rf):
+        logits, scores, mask = _vlm_logits_batch(
+            tspec, rspec, cfg, tflat, rf, imgs, texts, capacity,
+            jnp.float32(0.0), mlp_router)
+        dl = losses.distill_loss(t_logits, logits, temp, "fwd_topk", 32)
+        bce = losses.topk_bce(scores, mask > 0.5)
+        total = dl + bce
+        ce = losses.cross_entropy(logits[:, :-1], texts[:, 1:])
+        frac = jnp.mean(mask)
+        return total, (dl, bce, ce, frac)
+
+    (total, (dl, bce, ce, frac)), g = \
+        jax.value_and_grad(loss_fn, has_aux=True)(rflat)
+    r2, m2, v2, gnorm = adamw_update(g, rflat, m, v, step, lr,
+                                     weight_decay=0.0)
+    t_ce = losses.cross_entropy(t_logits[:, :-1], texts[:, 1:])
+    metrics = jnp.stack([dl, bce, total, ce, t_ce, gnorm, frac,
+                         jnp.float32(0.0)])
+    return r2, m2, v2, metrics

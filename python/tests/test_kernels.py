@@ -1,0 +1,267 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (hypothesis sweeps).
+
+This is the CORE correctness signal for the kernel layer: every kernel must
+match its ``ref.py`` oracle across shapes/dtypes/capacities, including
+ragged (non-tile-divisible) sequence lengths, and the custom_vjp backward
+must equal the jax-derived gradient of the reference.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+ATOL = 2e-5
+RTOL = 2e-5
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+def _allclose(a, b, atol=ATOL, rtol=RTOL):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=atol, rtol=rtol)
+
+
+# ---------------------------------------------------------------------------
+# routed_expert_mlp
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t=st.integers(1, 150),
+    d=st.sampled_from([8, 32, 64]),
+    m=st.sampled_from([1, 2, 4, 8]),
+    fm=st.sampled_from([4, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_routed_expert_mlp_matches_ref(t, d, m, fm, seed):
+    r = _rng(seed)
+    x = jnp.asarray(r.normal(size=(t, d)), jnp.float32)
+    w1 = jnp.asarray(0.2 * r.normal(size=(m, d, fm)), jnp.float32)
+    b1 = jnp.asarray(0.2 * r.normal(size=(m, fm)), jnp.float32)
+    w2 = jnp.asarray(0.2 * r.normal(size=(m, fm, d)), jnp.float32)
+    b2 = jnp.asarray(0.2 * r.normal(size=(d,)), jnp.float32)
+    wm = jnp.asarray(r.uniform(size=(t, m)), jnp.float32)
+    _allclose(kernels.routed_expert_mlp(x, w1, b1, w2, b2, wm),
+              ref.routed_expert_mlp(x, w1, b1, w2, b2, wm))
+
+
+def test_routed_expert_mlp_zero_mask_is_bias_only():
+    r = _rng(0)
+    t, d, m, fm = 33, 16, 4, 8
+    x = jnp.asarray(r.normal(size=(t, d)), jnp.float32)
+    w1 = jnp.asarray(r.normal(size=(m, d, fm)), jnp.float32)
+    b1 = jnp.asarray(r.normal(size=(m, fm)), jnp.float32)
+    w2 = jnp.asarray(r.normal(size=(m, fm, d)), jnp.float32)
+    b2 = jnp.asarray(r.normal(size=(d,)), jnp.float32)
+    wm = jnp.zeros((t, m), jnp.float32)
+    y = kernels.routed_expert_mlp(x, w1, b1, w2, b2, wm)
+    _allclose(y, jnp.broadcast_to(b2, (t, d)))
+
+
+def test_routed_expert_mlp_moefication_lossless():
+    """Block-split MoE with all-ones mask == the dense MLP (paper §4.1)."""
+    r = _rng(1)
+    t, d, f, m = 40, 24, 48, 4
+    fm = f // m
+    x = jnp.asarray(r.normal(size=(t, d)), jnp.float32)
+    w1d = jnp.asarray(0.3 * r.normal(size=(d, f)), jnp.float32)
+    b1d = jnp.asarray(0.3 * r.normal(size=(f,)), jnp.float32)
+    w2d = jnp.asarray(0.3 * r.normal(size=(f, d)), jnp.float32)
+    b2d = jnp.asarray(0.3 * r.normal(size=(d,)), jnp.float32)
+    dense = ref.gelu(x @ w1d + b1d) @ w2d + b2d
+    w1 = w1d.reshape(d, m, fm).transpose(1, 0, 2)
+    b1 = b1d.reshape(m, fm)
+    w2 = w2d.reshape(m, fm, d)
+    wm = jnp.ones((t, m), jnp.float32)
+    _allclose(kernels.routed_expert_mlp(x, w1, b1, w2, b2d, wm), dense,
+              atol=1e-4, rtol=1e-4)
+
+
+def test_routed_expert_mlp_grads_match_ref():
+    r = _rng(2)
+    t, d, m, fm = 20, 12, 4, 8
+    args = [
+        jnp.asarray(0.3 * r.normal(size=s), jnp.float32)
+        for s in [(t, d), (m, d, fm), (m, fm), (m, fm, d), (d,), (t, m)]
+    ]
+
+    def loss_k(*a):
+        return jnp.sum(jnp.sin(kernels.routed_expert_mlp(*a)))
+
+    def loss_r(*a):
+        return jnp.sum(jnp.sin(ref.routed_expert_mlp(*a)))
+
+    gk = jax.grad(loss_k, argnums=tuple(range(6)))(*args)
+    gr = jax.grad(loss_r, argnums=tuple(range(6)))(*args)
+    for a, b in zip(gk, gr):
+        _allclose(a, b, atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# masked_attention
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t=st.integers(2, 130),
+    h=st.sampled_from([1, 2, 4]),
+    hd=st.sampled_from([4, 8, 16]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_masked_attention_matches_ref(t, h, hd, causal, seed):
+    r = _rng(seed)
+    q = jnp.asarray(r.normal(size=(h, t, hd)), jnp.float32)
+    k = jnp.asarray(r.normal(size=(h, t, hd)), jnp.float32)
+    v = jnp.asarray(r.normal(size=(h, t, hd)), jnp.float32)
+    hw = jnp.asarray(r.uniform(size=(t, h)), jnp.float32)
+    km = jnp.asarray((r.uniform(size=(t,)) > 0.3).astype("f4"))
+    _allclose(kernels.masked_attention(q, k, v, hw, km, causal),
+              ref.masked_attention(q, k, v, hw, km, causal))
+
+
+def test_masked_attention_zero_head_w_zeroes_output():
+    r = _rng(3)
+    h, t, hd = 2, 17, 8
+    q, k, v = (jnp.asarray(r.normal(size=(h, t, hd)), jnp.float32)
+               for _ in range(3))
+    hw = jnp.zeros((t, h), jnp.float32)
+    km = jnp.ones((t,), jnp.float32)
+    out = kernels.masked_attention(q, k, v, hw, km, True)
+    _allclose(out, jnp.zeros_like(out))
+
+
+def test_masked_attention_key_mask_blocks_information():
+    """Output for token t must not depend on the values of masked keys."""
+    r = _rng(4)
+    h, t, hd = 2, 12, 8
+    q = jnp.asarray(r.normal(size=(h, t, hd)), jnp.float32)
+    k = jnp.asarray(r.normal(size=(h, t, hd)), jnp.float32)
+    v = jnp.asarray(r.normal(size=(h, t, hd)), jnp.float32)
+    hw = jnp.ones((t, h), jnp.float32)
+    km = jnp.ones((t,), jnp.float32).at[5].set(0.0)
+    out1 = kernels.masked_attention(q, k, v, hw, km, True)
+    v2 = v.at[:, 5, :].set(99.0)
+    k2 = k.at[:, 5, :].set(-99.0)
+    out2 = kernels.masked_attention(q, k2, v2, hw, km, True)
+    # every row except 5 itself (the self-attention NaN guard keeps the
+    # diagonal live) must be identical
+    keep = np.asarray([i for i in range(t) if i != 5])
+    _allclose(out1[:, keep], out2[:, keep])
+
+
+def test_masked_attention_causality():
+    r = _rng(5)
+    h, t, hd = 2, 16, 8
+    q = jnp.asarray(r.normal(size=(h, t, hd)), jnp.float32)
+    k = jnp.asarray(r.normal(size=(h, t, hd)), jnp.float32)
+    v = jnp.asarray(r.normal(size=(h, t, hd)), jnp.float32)
+    hw = jnp.ones((t, h), jnp.float32)
+    km = jnp.ones((t,), jnp.float32)
+    out1 = kernels.masked_attention(q, k, v, hw, km, True)
+    # perturb the future: rows < 8 must not change
+    k2 = k.at[:, 12:, :].set(7.0)
+    v2 = v.at[:, 12:, :].set(-7.0)
+    out2 = kernels.masked_attention(q, k2, v2, hw, km, True)
+    _allclose(out1[:, :8], out2[:, :8])
+
+
+def test_masked_attention_grads_match_ref():
+    r = _rng(6)
+    h, t, hd = 2, 10, 4
+    q, k, v = (jnp.asarray(0.5 * r.normal(size=(h, t, hd)), jnp.float32)
+               for _ in range(3))
+    hw = jnp.asarray(r.uniform(size=(t, h)), jnp.float32)
+    km = jnp.ones((t,), jnp.float32)
+
+    gk = jax.grad(lambda *a: jnp.sum(
+        jnp.tanh(kernels.masked_attention(*a, km, True))), argnums=(0, 1, 2, 3))(q, k, v, hw)
+    gr = jax.grad(lambda *a: jnp.sum(
+        jnp.tanh(ref.masked_attention(*a, km, True))), argnums=(0, 1, 2, 3))(q, k, v, hw)
+    for a, b in zip(gk, gr):
+        _allclose(a, b, atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused_router
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t=st.integers(1, 140),
+    d=st.sampled_from([8, 32, 64]),
+    m=st.sampled_from([2, 4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_router_matches_ref(t, d, m, seed):
+    r = _rng(seed)
+    x = jnp.asarray(r.normal(size=(t, d)), jnp.float32)
+    wr = jnp.asarray(0.5 * r.normal(size=(m, d)), jnp.float32)
+    br = jnp.asarray(0.5 * r.normal(size=(m,)), jnp.float32)
+    _allclose(kernels.fused_router(x, wr, br), ref.fused_router(x, wr, br))
+
+
+def test_fused_router_rows_sum_to_m():
+    r = _rng(7)
+    t, d, m = 37, 16, 8
+    x = jnp.asarray(r.normal(size=(t, d)), jnp.float32)
+    wr = jnp.asarray(r.normal(size=(m, d)), jnp.float32)
+    br = jnp.asarray(r.normal(size=(m,)), jnp.float32)
+    w = kernels.fused_router(x, wr, br)
+    _allclose(jnp.sum(w, axis=-1), jnp.full((t,), float(m)))
+
+
+def test_fused_router_zero_weights_give_uniform_ones():
+    """The paper's identity-at-init property: W_r = 0 -> all weights 1."""
+    t, d, m = 11, 8, 4
+    x = jnp.asarray(_rng(8).normal(size=(t, d)), jnp.float32)
+    w = kernels.fused_router(x, jnp.zeros((m, d)), jnp.zeros((m,)))
+    _allclose(w, jnp.ones((t, m)))
+
+
+# ---------------------------------------------------------------------------
+# shared routing math
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 64),
+    k=st.integers(0, 70),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_topk_mask_selects_exactly_min_k_n(n, k, seed):
+    s = jnp.asarray(_rng(seed).normal(size=(n,)), jnp.float32)
+    mask = ref.topk_mask_lastdim(s, jnp.int32(k))
+    assert int(mask.sum()) == min(max(k, 0), n)
+    # the selected set dominates the unselected set
+    if 0 < k < n:
+        sel = np.asarray(s)[np.asarray(mask)]
+        uns = np.asarray(s)[~np.asarray(mask)]
+        assert sel.min() >= uns.max() - 1e-6
+
+
+def test_topk_mask_matches_argsort_semantics():
+    s = jnp.asarray([0.3, 0.9, 0.1, 0.9, 0.5], jnp.float32)
+    mask = ref.topk_mask_lastdim(s, jnp.int32(3))
+    # ties break toward the lower index: {1, 3, 4}
+    assert list(np.asarray(mask)) == [False, True, False, True, True]
+
+
+def test_token_select_mask_modes():
+    s = jnp.asarray([0.9, 0.2, 0.6, 0.4], jnp.float32)
+    topk = ref.token_select_mask(s, jnp.float32(0.5), jnp.float32(0.0))
+    assert list(np.asarray(topk)) == [True, False, True, False]
+    thr = ref.token_select_mask(s, jnp.float32(0.5), jnp.float32(1.0))
+    assert list(np.asarray(thr)) == [True, False, True, False]
+    thr2 = ref.token_select_mask(jnp.asarray([0.4, 0.2]), jnp.float32(1.0),
+                                 jnp.float32(1.0))
+    assert list(np.asarray(thr2)) == [False, False]

@@ -1,0 +1,267 @@
+"""L2 correctness: elastic-forward invariants across all three modalities.
+
+The central oracle is the paper's §4.1 equivalence property: with bypass
+mode, capacity 1 and zero-initialized parameter routers, the elastic model
+IS the teacher.  We additionally check layer_en blending, LoRA no-op at
+init, routing monotonicity, and the Fig. 2 pruning hooks.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, params, train
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = configs.LMConfig(name="lm_test", d_model=32, n_layers=2, n_heads=2,
+                           d_ff=64, seq_len=24, batch=2, n_experts=4,
+                           lora_rank=2, distill_topk=8)
+    tspec = params.lm_teacher_spec(cfg)
+    rspec = params.lm_router_spec(cfg)
+    P = tspec.init_flat(jax.random.PRNGKey(0))
+    R = rspec.init_flat(jax.random.PRNGKey(1))
+    tokens = jax.random.randint(jax.random.PRNGKey(2),
+                                (cfg.batch, cfg.seq_len), 3, cfg.vocab)
+    return cfg, tspec, rspec, P, R, tokens
+
+
+def _teacher_logits(lm_fix):
+    cfg, tspec, _, P, _, tokens = lm_fix
+    full_h = jnp.ones((cfg.n_layers, cfg.n_heads))
+    full_l = jnp.ones((cfg.n_layers,))
+    logits, _ = train.lm_teacher_forward(tspec, cfg, P, tokens,
+                                         full_h, full_l, full_l)
+    return logits
+
+
+CAPS1 = jnp.asarray([1.0, 1.0, 1.0, 1.0], jnp.float32)
+
+
+class TestEquivalence:
+    def test_bypass_mode_equals_teacher(self, lm):
+        cfg, tspec, rspec, P, R, tokens = lm
+        lt = _teacher_logits(lm)
+        full_l = jnp.ones((cfg.n_layers,))
+        for pallas in (False, True):
+            out = train.lm_elastic_forward(
+                tspec, rspec, cfg, P, R, tokens, CAPS1, full_l,
+                jnp.float32(2.0), use_pallas=pallas)
+            np.testing.assert_allclose(np.asarray(out[0]), np.asarray(lt),
+                                       atol=2e-5, rtol=2e-5)
+
+    def test_all_layers_disabled_equals_teacher_any_capacity(self, lm):
+        cfg, tspec, rspec, P, R, tokens = lm
+        lt = _teacher_logits(lm)
+        zeros_l = jnp.zeros((cfg.n_layers,))
+        caps = jnp.asarray([0.3, 0.3, 0.5, 0.25], jnp.float32)
+        out = train.lm_elastic_forward(
+            tspec, rspec, cfg, P, R, tokens, caps, zeros_l,
+            jnp.float32(0.0), use_pallas=False)
+        np.testing.assert_allclose(np.asarray(out[0]), np.asarray(lt),
+                                   atol=2e-5, rtol=2e-5)
+
+    def test_even_layer_routing_between_full_and_none(self, lm):
+        """Even-layer routing (Fig. 7) must differ from teacher less than
+        all-layer routing at the same low capacity."""
+        cfg, tspec, rspec, P, R, tokens = lm
+        lt = _teacher_logits(lm)
+        caps = jnp.asarray([0.3, 0.3, 0.5, 0.25], jnp.float32)
+        even = jnp.asarray([1.0 if i % 2 == 0 else 0.0
+                            for i in range(cfg.n_layers)])
+        full = jnp.ones((cfg.n_layers,))
+        d_even = jnp.abs(train.lm_elastic_forward(
+            tspec, rspec, cfg, P, R, tokens, caps, even,
+            jnp.float32(0.0), use_pallas=False)[0] - lt).mean()
+        d_full = jnp.abs(train.lm_elastic_forward(
+            tspec, rspec, cfg, P, R, tokens, caps, full,
+            jnp.float32(0.0), use_pallas=False)[0] - lt).mean()
+        assert float(d_even) <= float(d_full) + 1e-6
+        assert float(d_full) > 1e-4  # routing at low capacity does change things
+
+    def test_lora_is_noop_at_init(self, lm):
+        """LoRA B = 0 at init -> rank>0 elastic == rank-0 elastic."""
+        cfg, tspec, rspec, P, R, tokens = lm
+        rspec0 = params.lm_router_spec(cfg, lora_rank=0)
+        # copy shared router entries from R into a rank-0 vector
+        R0 = np.zeros((rspec0.total,), np.float32)
+        Rnp = np.asarray(R)
+        for name, _, _ in rspec0.entries:
+            o0, s0 = rspec0.offsets[name], rspec0.shapes[name]
+            o1 = rspec.offsets[name]
+            n = int(np.prod(s0)) if s0 else 1
+            R0[o0:o0 + n] = Rnp[o1:o1 + n]
+        caps = jnp.asarray([0.6, 0.6, 0.5, 0.5], jnp.float32)
+        full_l = jnp.ones((cfg.n_layers,))
+        a = train.lm_elastic_forward(tspec, rspec, cfg, P, R, tokens, caps,
+                                     full_l, jnp.float32(0.0),
+                                     use_pallas=False)[0]
+        b = train.lm_elastic_forward(tspec, rspec0, cfg, P, jnp.asarray(R0),
+                                     tokens, caps, full_l, jnp.float32(0.0),
+                                     use_pallas=False, lora_rank=0)[0]
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_serve_cap1_equals_teacher(self, lm):
+        cfg, tspec, _, P, _, tokens = lm
+        rspec0 = params.lm_router_spec(cfg, lora_rank=0)
+        R0 = rspec0.init_flat(jax.random.PRNGKey(3))
+        lt = _teacher_logits(lm)
+        ls = train.lm_serve_forward(tspec, rspec0, cfg, P, R0, tokens, 1.0)
+        np.testing.assert_allclose(np.asarray(ls), np.asarray(lt),
+                                   atol=2e-5, rtol=2e-5)
+
+
+class TestRoutingBehaviour:
+    def test_mask_counts_respect_capacity(self, lm):
+        cfg, tspec, rspec, P, R, tokens = lm
+        full_l = jnp.ones((cfg.n_layers,))
+        caps = jnp.asarray([0.5, 0.25, 0.5, 0.5], jnp.float32)
+        out = train.lm_elastic_forward(tspec, rspec, cfg, P, R, tokens, caps,
+                                       full_l, jnp.float32(0.0),
+                                       use_pallas=False)
+        m_mha, m_mlp = np.asarray(out[4]), np.asarray(out[5])
+        t = cfg.seq_len
+        assert np.all(m_mha.sum(axis=-1) == int(np.ceil(0.5 * t)))
+        assert np.all(m_mlp.sum(axis=-1) == int(np.ceil(0.25 * t)))
+
+    def test_pruning_monotone_on_average(self, lm):
+        """Fig. 2 probe: more pruned heads -> CE never improves much."""
+        cfg, tspec, _, P, _, tokens = lm
+        full_l = jnp.ones((cfg.n_layers,))
+        ces = []
+        rng = np.random.default_rng(0)
+        for n_prune in (0, 2, 4):
+            vals = []
+            for _ in range(3):
+                hm = np.ones((cfg.n_layers, cfg.n_heads), np.float32)
+                flat = rng.choice(cfg.n_layers * cfg.n_heads, n_prune,
+                                  replace=False)
+                hm.reshape(-1)[flat] = 0.0
+                _, ce = train.lm_teacher_forward(
+                    tspec, cfg, P, tokens, jnp.asarray(hm), full_l, full_l)
+                vals.append(float(ce))
+            ces.append(np.mean(vals))
+        assert ces[0] <= ces[2] + 0.05
+
+    def test_distill_step_moves_router_not_nan(self, lm):
+        cfg, tspec, rspec, P, R, tokens = lm
+        m = jnp.zeros_like(R)
+        v = jnp.zeros_like(R)
+        caps = jnp.asarray([0.75, 0.75, 0.5, 0.5], jnp.float32)
+        full_l = jnp.ones((cfg.n_layers,))
+        R2, m2, v2, met = train.lm_distill_step(
+            tspec, rspec, cfg, P, P, R, m, v, jnp.int32(0),
+            jnp.float32(1e-3), tokens, caps, full_l, jnp.float32(1.0))
+        assert np.all(np.isfinite(np.asarray(met)))
+        assert float(jnp.abs(R2 - R).max()) > 0.0
+        assert np.all(np.isfinite(np.asarray(R2)))
+
+    def test_distill_improves_distill_loss(self, lm):
+        """A few steps of router training must reduce the distill loss."""
+        cfg, tspec, rspec, P, R, tokens = lm
+        m = jnp.zeros_like(R)
+        v = jnp.zeros_like(R)
+        caps = jnp.asarray([0.75, 0.75, 0.5, 0.5], jnp.float32)
+        full_l = jnp.ones((cfg.n_layers,))
+        first = None
+        for i in range(30):
+            R, m, v, met = train.lm_distill_step(
+                tspec, rspec, cfg, P, P, R, m, v, jnp.int32(i),
+                jnp.float32(3e-3), tokens, caps, full_l, jnp.float32(1.0))
+            if first is None:
+                first = float(met[0])
+        assert float(met[0]) < first
+
+
+class TestViT:
+    @pytest.fixture(scope="class")
+    def vit(self):
+        cfg = configs.ViTConfig(name="vit_test", img_size=16, patch=4,
+                                d_model=32, n_layers=2, n_heads=2, d_ff=64,
+                                batch=2, dec_d_model=16, dec_layers=1,
+                                dec_heads=2, dec_d_ff=32, n_experts=4)
+        tspec = params.vit_teacher_spec(cfg)
+        rspec = params.vit_router_spec(cfg)
+        P = tspec.init_flat(jax.random.PRNGKey(0))
+        R = rspec.init_flat(jax.random.PRNGKey(1))
+        imgs = jax.random.uniform(
+            jax.random.PRNGKey(2),
+            (cfg.batch, cfg.img_size * cfg.img_size * cfg.channels))
+        return cfg, tspec, rspec, P, R, imgs
+
+    def test_bypass_cosine_is_one(self, vit):
+        cfg, tspec, rspec, P, R, imgs = vit
+        full_l = jnp.ones((cfg.n_layers,))
+        out = train.vit_elastic_forward(tspec, rspec, cfg, P, R, imgs,
+                                        CAPS1, full_l, jnp.float32(2.0),
+                                        use_pallas=True)
+        np.testing.assert_allclose(np.asarray(out[3]), 1.0, atol=1e-5)
+
+    def test_distill_step_finite_and_moves(self, vit):
+        cfg, tspec, rspec, P, R, imgs = vit
+        m = jnp.zeros_like(R)
+        v = jnp.zeros_like(R)
+        caps = jnp.asarray([0.8, 0.5, 0.5, 0.5], jnp.float32)
+        full_l = jnp.ones((cfg.n_layers,))
+        R2, _, _, met = train.vit_distill_step(
+            tspec, rspec, cfg, P, R, m, v, jnp.int32(0), jnp.float32(1e-3),
+            imgs, caps, full_l)
+        assert np.all(np.isfinite(np.asarray(met)))
+        assert float(jnp.abs(R2 - R).max()) > 0.0
+
+
+class TestVLM:
+    @pytest.fixture(scope="class")
+    def vlm(self):
+        cfg = configs.VLMConfig(name="vlm_test", img_size=16, patch=4,
+                                v_d_model=32, v_layers=2, v_heads=2,
+                                v_d_ff=64, d_model=32, n_layers=2, n_heads=2,
+                                d_ff=64, text_len=12, batch=2,
+                                router_hidden=16)
+        tspec = params.vlm_teacher_spec(cfg)
+        P = tspec.init_flat(jax.random.PRNGKey(0))
+        imgs = jax.random.uniform(
+            jax.random.PRNGKey(1),
+            (cfg.batch, cfg.img_size * cfg.img_size * cfg.channels))
+        texts = jax.random.randint(jax.random.PRNGKey(2),
+                                   (cfg.batch, cfg.text_len), 3, cfg.vocab)
+        return cfg, tspec, P, imgs, texts
+
+    @pytest.mark.parametrize("mlp_router", [False, True])
+    def test_bypass_equals_teacher(self, vlm, mlp_router):
+        cfg, tspec, P, imgs, texts = vlm
+        rspec = params.vlm_router_spec(cfg, mlp_router=mlp_router)
+        R = rspec.init_flat(jax.random.PRNGKey(3))
+        lt, _ = train.vlm_teacher_forward(tspec, cfg, P, imgs, texts)
+        out = train.vlm_elastic_forward(tspec, rspec, cfg, P, R, imgs, texts,
+                                        jnp.float32(1.0), jnp.float32(2.0),
+                                        mlp_router)
+        np.testing.assert_allclose(np.asarray(out[0]), np.asarray(lt),
+                                   atol=2e-5, rtol=2e-5)
+
+    def test_capacity_drops_image_tokens(self, vlm):
+        cfg, tspec, P, imgs, texts = vlm
+        rspec = params.vlm_router_spec(cfg)
+        R = rspec.init_flat(jax.random.PRNGKey(3))
+        out = train.vlm_elastic_forward(tspec, rspec, cfg, P, R, imgs, texts,
+                                        jnp.float32(0.5), jnp.float32(0.0),
+                                        False)
+        mask = np.asarray(out[3])
+        assert np.all(mask.sum(axis=-1) == int(np.ceil(0.5 * cfg.n_img_tokens)))
+
+    def test_distill_step_finite(self, vlm):
+        cfg, tspec, P, imgs, texts = vlm
+        rspec = params.vlm_router_spec(cfg)
+        R = rspec.init_flat(jax.random.PRNGKey(3))
+        m = jnp.zeros_like(R)
+        v = jnp.zeros_like(R)
+        R2, _, _, met = train.vlm_distill_step(
+            tspec, rspec, cfg, P, R, m, v, jnp.int32(0), jnp.float32(1e-3),
+            imgs, texts, jnp.float32(0.6), jnp.float32(1.0), False)
+        assert np.all(np.isfinite(np.asarray(met)))
+        assert float(jnp.abs(R2 - R).max()) > 0.0

@@ -1,0 +1,214 @@
+//! Hot-path microbenchmarks (`cargo bench --bench hotpath`):
+//! wall-clock of the request-path executables and of the L3 substrates,
+//! feeding EXPERIMENTS.md §Perf.
+//!
+//! Benchmarked:
+//!   * serve_cap{25,50,75,100} — real token-compaction speedup per tier
+//!   * teacher_forward vs elastic_forward (pallas interpret) overhead
+//!   * pretrain / distill step wall-clock
+//!   * host substrates: literal round-trip size, batcher, tokenizer, JSON
+
+use elastiformer::bench::{fmt_f, Bencher, Table};
+use elastiformer::coordinator::trainer::{Caps, Trainer};
+use elastiformer::data::{mathgen, textgen, Batcher, TextDataset, Tokenizer};
+use elastiformer::experiments::common::Ctx;
+use elastiformer::runtime::client::Arg;
+
+fn main() {
+    match run() {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("hotpath bench failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let ctx = Ctx::load("lm_tiny", 42)?;
+    let trainer = Trainer::new(&ctx.rt);
+    let params = trainer.init_params("init", 1)?;
+    let router0 = trainer.init_params("router_init_r0", 2)?;
+    let router8 = trainer.init_params("router_init_r8", 2)?;
+    let b = ctx.rt.manifest.batch();
+    let t = ctx.rt.manifest.seq_len();
+    let tok = Tokenizer::new();
+    let tokens: Vec<i32> = mathgen::dataset(b, 3)
+        .iter()
+        .flat_map(|p| tok.encode_padded(&p.full_text(), t))
+        .collect();
+    let l = ctx.rt.manifest.n_layers();
+    let ones = vec![1.0f32; l];
+    let caps = Caps::full();
+
+    let entries = [
+        "serve_cap25", "serve_cap50", "serve_cap75", "serve_cap100",
+        "teacher_forward", "elastic_forward_r0", "elastic_forward_r8",
+        "pretrain_step", "distill_step_r0",
+    ];
+    ctx.rt.warmup(&entries)?;
+
+    let bench = Bencher::default();
+    let mut table = Table::new(&["bench", "mean_ms", "p50_ms", "p99_ms",
+                                 "throughput"]);
+    let mut push = |r: elastiformer::bench::BenchResult, thr: String| {
+        println!("{:<26} mean {:>8.2} ms  p50 {:>8.2} ms  p99 {:>8.2} ms",
+                 r.name, r.mean_ms(), r.p50.as_secs_f64() * 1e3,
+                 r.p99.as_secs_f64() * 1e3);
+        table.row(vec![
+            r.name.clone(),
+            fmt_f(r.mean_ms(), 3),
+            fmt_f(r.p50.as_secs_f64() * 1e3, 3),
+            fmt_f(r.p99.as_secs_f64() * 1e3, 3),
+            thr,
+        ]);
+    };
+
+    // --- serve tiers: the wall-clock elasticity claim -------------------
+    for entry in ["serve_cap100", "serve_cap75", "serve_cap50", "serve_cap25"] {
+        let r = bench.run(entry, || {
+            ctx.rt
+                .exec(entry, &[
+                    Arg::F32(&params),
+                    Arg::F32(&router0),
+                    Arg::I32(&tokens),
+                ])
+                .unwrap();
+        });
+        let tput = format!("{:.0} tok/s",
+                           r.throughput_per_s((b * t) as f64));
+        push(r, tput);
+    }
+
+    // --- L3 perf iteration 1: cached-literal dispatch vs naive ----------
+    {
+        let params_lit = ctx.rt.prepare_arg("serve_cap50", 0,
+                                            &Arg::F32(&params))?;
+        let router_lit = ctx.rt.prepare_arg("serve_cap50", 1,
+                                            &Arg::F32(&router0))?;
+        let r = bench.run("serve_cap50_prepared", || {
+            let tokens_lit = ctx.rt
+                .prepare_arg("serve_cap50", 2, &Arg::I32(&tokens))
+                .unwrap();
+            ctx.rt
+                .exec_prepared("serve_cap50",
+                               &[&params_lit, &router_lit, &tokens_lit])
+                .unwrap();
+        });
+        let tput = format!("{:.0} tok/s", r.throughput_per_s((b * t) as f64));
+        push(r, tput);
+    }
+
+    // --- dense vs elastic (pallas) forward -------------------------------
+    let hmask = vec![1.0f32; l * ctx.rt.manifest.n_heads()];
+    let r = bench.run("teacher_forward", || {
+        ctx.rt
+            .exec("teacher_forward", &[
+                Arg::F32(&params),
+                Arg::I32(&tokens),
+                Arg::F32(&hmask),
+                Arg::F32(&ones),
+                Arg::F32(&ones),
+            ])
+            .unwrap();
+    });
+    let tput = format!("{:.0} tok/s", r.throughput_per_s((b * t) as f64));
+    push(r, tput);
+    for (entry, router) in [("elastic_forward_r0", &router0),
+                            ("elastic_forward_r8", &router8)] {
+        let r = bench.run(entry, || {
+            ctx.rt
+                .exec(entry, &[
+                    Arg::F32(&params),
+                    Arg::F32(router),
+                    Arg::I32(&tokens),
+                    Arg::F32(&caps.0),
+                    Arg::F32(&ones),
+                    Arg::ScalarF32(0.0),
+                ])
+                .unwrap();
+        });
+        let tput = format!("{:.0} tok/s", r.throughput_per_s((b * t) as f64));
+        push(r, tput);
+    }
+
+    // --- train steps ------------------------------------------------------
+    {
+        let m = vec![0.0f32; params.len()];
+        let v = vec![0.0f32; params.len()];
+        let r = bench.run("pretrain_step", || {
+            ctx.rt
+                .exec("pretrain_step", &[
+                    Arg::F32(&params),
+                    Arg::F32(&m),
+                    Arg::F32(&v),
+                    Arg::ScalarI32(0),
+                    Arg::ScalarF32(1e-3),
+                    Arg::I32(&tokens),
+                ])
+                .unwrap();
+        });
+        let tput = format!("{:.0} tok/s", r.throughput_per_s((b * t) as f64));
+        push(r, tput);
+        let rm = vec![0.0f32; router0.len()];
+        let rv = vec![0.0f32; router0.len()];
+        let r = bench.run("distill_step_r0", || {
+            ctx.rt
+                .exec("distill_step_r0", &[
+                    Arg::F32(&params),
+                    Arg::F32(&params),
+                    Arg::F32(&router0),
+                    Arg::F32(&rm),
+                    Arg::F32(&rv),
+                    Arg::ScalarI32(0),
+                    Arg::ScalarF32(1e-3),
+                    Arg::I32(&tokens),
+                    Arg::F32(&caps.0),
+                    Arg::F32(&ones),
+                    Arg::ScalarF32(1.0),
+                ])
+                .unwrap();
+        });
+        let tput = format!("{:.0} tok/s", r.throughput_per_s((b * t) as f64));
+        push(r, tput);
+    }
+
+    // --- host substrates --------------------------------------------------
+    {
+        let texts = textgen::dataset(512, 1);
+        let ds = TextDataset::from_texts(&texts, t);
+        let mut batcher = Batcher::new(ds.len(), b, 1);
+        let r = bench.run("batcher_next_tokens", || {
+            std::hint::black_box(batcher.next_tokens(&ds));
+        });
+        let tput = format!("{:.0} batches/s", r.throughput_per_s(1.0));
+        push(r, tput);
+
+        let doc = texts.join(" ");
+        let tokz = Tokenizer::new();
+        let r = bench.run("tokenizer_encode_50kB", || {
+            std::hint::black_box(tokz.encode(&doc));
+        });
+        let tput = format!("{:.1} MB/s",
+                           r.throughput_per_s(doc.len() as f64) / 1e6);
+        push(r, tput);
+
+        let man_path = format!("{}/lm_tiny/manifest.json",
+                               elastiformer::experiments::common::artifacts_dir());
+        let man_text = std::fs::read_to_string(man_path)?;
+        let r = bench.run("json_parse_manifest", || {
+            std::hint::black_box(
+                elastiformer::json::parse(&man_text).unwrap());
+        });
+        let tput = format!("{:.1} MB/s",
+                           r.throughput_per_s(man_text.len() as f64) / 1e6);
+        push(r, tput);
+    }
+
+    elastiformer::metrics::write_file(
+        elastiformer::experiments::common::results_dir()
+            .join("hotpath_bench.csv"),
+        &table.to_csv())?;
+    println!("\n(written to results/hotpath_bench.csv)");
+    Ok(())
+}

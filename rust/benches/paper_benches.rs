@@ -1,0 +1,133 @@
+//! Paper benches (`cargo bench --bench paper_benches [-- <ids>]`):
+//! regenerates every table and figure of the paper's evaluation at
+//! bench-friendly scale (reduced step counts) and prints the same
+//! rows/series the paper reports.  Full-scale runs use the CLI
+//! (`elastiformer exp <id> --steps ...`); both write `results/*.{md,csv}`.
+//!
+//! Requires `make artifacts` plus a cached teacher (trained automatically
+//! on first use).  `harness = false`: this is a plain binary.
+
+use elastiformer::experiments::{
+    fig2, fig4, fig5, fig6, fig7, fig8, fig9, qualitative, table1,
+};
+
+fn want(ids: &[String], id: &str) -> bool {
+    ids.is_empty() || ids.iter().any(|x| x == id)
+}
+
+/// ELASTIFORMER_BENCH_FAST=1 shrinks distill steps/sweeps further (smoke
+/// runs on 1-core CI); the recorded full bench run lives in
+/// results/paper_benches_run.txt.
+fn fast() -> bool {
+    std::env::var("ELASTIFORMER_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+fn steps(normal: usize) -> usize {
+    if fast() { (normal / 3).max(8) } else { normal }
+}
+
+fn main() {
+    let ids: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| !a.starts_with("--"))
+        .collect();
+    let t0 = std::time::Instant::now();
+
+    if want(&ids, "table1") {
+        println!("\n===== table1: router parameter counts =====");
+        match table1::run(&["lm_tiny", "lm_base", "vit_tiny", "vlm_tiny"]) {
+            Ok(t) => t.print(),
+            Err(e) => eprintln!("table1 failed: {e:#}"),
+        }
+    }
+    if want(&ids, "fig2") {
+        println!("\n===== fig2: pruning redundancy =====");
+        let opts = fig2::Fig2Opts { groups: 3, ..Default::default() };
+        match fig2::run(&opts) {
+            Ok(t) => t.print(),
+            Err(e) => eprintln!("fig2 failed: {e:#}"),
+        }
+    }
+    if want(&ids, "fig4") {
+        println!("\n===== fig4: distillation-loss ablation =====");
+        let opts = fig4::Fig4Opts { distill_steps: steps(40), ..Default::default() };
+        match fig4::run(&opts) {
+            Ok(t) => t.print(),
+            Err(e) => eprintln!("fig4 failed: {e:#}"),
+        }
+    }
+    if want(&ids, "fig5") {
+        println!("\n===== fig5: Elasti-LLM capacity scaling =====");
+        let opts = fig5::Fig5Opts {
+            distill_steps: steps(40),
+            caps: if fast() { vec![0.5] } else { vec![0.5, 1.0] },
+            ..Default::default()
+        };
+        match fig5::run(&opts) {
+            Ok(t) => t.print(),
+            Err(e) => eprintln!("fig5 failed: {e:#}"),
+        }
+    }
+    if want(&ids, "fig6") {
+        println!("\n===== fig6: LoRA rank rescue =====");
+        let opts = fig6::Fig6Opts {
+            distill_steps: steps(40),
+            token_caps: if fast() { vec![0.5] } else { vec![0.5, 0.9] },
+            ranks: vec![0, 1],
+            ..Default::default()
+        };
+        match fig6::run(&opts) {
+            Ok(t) => t.print(),
+            Err(e) => eprintln!("fig6 failed: {e:#}"),
+        }
+    }
+    if want(&ids, "fig7") {
+        println!("\n===== fig7: Elasti-ViT scaling (all vs even layers) =====");
+        let opts = fig7::Fig7Opts {
+            distill_steps: steps(30),
+            caps: vec![0.5],
+            ..Default::default()
+        };
+        match fig7::run(&opts) {
+            Ok(t) => t.print(),
+            Err(e) => eprintln!("fig7 failed: {e:#}"),
+        }
+    }
+    if want(&ids, "fig8") {
+        println!("\n===== fig8: router similarity across domains =====");
+        let opts = fig8::Fig8Opts {
+            distill_steps: steps(25),
+            n_classes: if fast() { 3 } else { 4 },
+            ..Default::default()
+        };
+        match fig8::run(&opts) {
+            Ok((t, _)) => t.print(),
+            Err(e) => eprintln!("fig8 failed: {e:#}"),
+        }
+    }
+    if want(&ids, "fig9") {
+        println!("\n===== fig9: Elasti-VLM image-token capacity =====");
+        let opts = fig9::Fig9Opts {
+            distill_steps: steps(30),
+            caps: if fast() { vec![0.5] } else { vec![0.5, 1.0] },
+            n_eval_images: if fast() { 8 } else { 16 },
+            ..Default::default()
+        };
+        match fig9::run(&opts) {
+            Ok(t) => t.print(),
+            Err(e) => eprintln!("fig9 failed: {e:#}"),
+        }
+    }
+    if want(&ids, "qualitative") {
+        println!("\n===== figs 10-12: qualitative =====");
+        let opts = qualitative::QualOpts {
+            distill_steps: steps(30),
+            ..Default::default()
+        };
+        if let Err(e) = qualitative::run(&opts) {
+            eprintln!("qualitative failed: {e:#}");
+        }
+    }
+    println!("\npaper_benches done in {:.1}s (tables under results/)",
+             t0.elapsed().as_secs_f64());
+}

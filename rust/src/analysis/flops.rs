@@ -1,0 +1,184 @@
+//! Analytic compute model of the transformer stack.
+//!
+//! The sandbox runs interpret-mode Pallas on CPU, so the paper's compute
+//! savings are reported analytically: this module maps a model config plus
+//! a routing capacity vector to MACs (multiply-accumulates) per token and
+//! active-parameter counts, the x-axes of Figures 5–7 and the Table 1 rows.
+
+/// Model dimensions needed for compute accounting (read from the manifest).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelDims {
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub n_experts: usize,
+}
+
+/// Routing capacities (fractions in (0, 1]); mirrors the caps vector the
+/// elastic artifacts take.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Capacity {
+    pub mha_tokens: f64,
+    pub mlp_tokens: f64,
+    pub heads: f64,
+    pub experts: f64,
+    /// fraction of layers routed (1.0 = all, 0.5 = even layers)
+    pub layers: f64,
+}
+
+impl Capacity {
+    pub fn full() -> Capacity {
+        Capacity { mha_tokens: 1.0, mlp_tokens: 1.0, heads: 1.0,
+                   experts: 1.0, layers: 1.0 }
+    }
+
+    pub fn uniform(c: f64) -> Capacity {
+        Capacity { mha_tokens: c, mlp_tokens: c, heads: c, experts: c,
+                   layers: 1.0 }
+    }
+}
+
+/// MACs per *sequence* for the dense teacher.
+pub fn teacher_macs(d: &ModelDims) -> u64 {
+    let t = d.seq_len as u64;
+    let dm = d.d_model as u64;
+    let ff = d.d_ff as u64;
+    let per_layer_proj = 4 * t * dm * dm;          // q,k,v,o projections
+    let per_layer_attn = 2 * t * t * dm;           // QK^T + AV (all heads)
+    let per_layer_mlp = 2 * t * dm * ff;           // up + down
+    d.n_layers as u64 * (per_layer_proj + per_layer_attn + per_layer_mlp)
+        + t * dm * d.vocab as u64                  // lm head
+}
+
+/// MACs per sequence for the elastic model at the given capacity.
+///
+/// Token routing shrinks the token dimension of the gated module; head /
+/// expert routing shrinks the head / expert dimension.  Router overhead
+/// (the tiny linear probes) is included.  Layers outside the routed subset
+/// run dense.
+pub fn elastic_macs(d: &ModelDims, c: &Capacity) -> u64 {
+    let t = d.seq_len as f64;
+    let dm = d.d_model as f64;
+    let ff = d.d_ff as f64;
+    let heads = d.n_heads as f64;
+    let experts = d.n_experts as f64;
+
+    let k_tok_mha = (c.mha_tokens * t).ceil().max(1.0);
+    let k_tok_mlp = (c.mlp_tokens * t).ceil().max(1.0);
+    let k_heads = (c.heads * heads).round().clamp(1.0, heads);
+    let k_exp = (c.experts * experts).round().clamp(1.0, experts);
+
+    // routed layer
+    let proj = 4.0 * k_tok_mha * dm * dm * (k_heads / heads);
+    let attn = 2.0 * k_tok_mha * k_tok_mha * dm * (k_heads / heads);
+    let mlp = 2.0 * k_tok_mlp * dm * ff * (k_exp / experts);
+    let routers = t * dm * (2.0 + heads + experts); // 2 token probes + 2 param routers
+    let routed = proj + attn + mlp + routers;
+
+    // dense layer
+    let dense = 4.0 * t * dm * dm + 2.0 * t * t * dm + 2.0 * t * dm * ff;
+
+    let n_routed = (c.layers * d.n_layers as f64).round();
+    let n_dense = d.n_layers as f64 - n_routed;
+    (n_routed * routed + n_dense * dense
+        + t * dm * d.vocab as f64) as u64
+}
+
+/// Active parameters touched per token (the Fig. 5/7 x-axis variant).
+pub fn active_params(d: &ModelDims, c: &Capacity) -> u64 {
+    let dm = d.d_model as f64;
+    let ff = d.d_ff as f64;
+    let k_heads = (c.heads * d.n_heads as f64).round().max(1.0);
+    let k_exp = (c.experts * d.n_experts as f64).round().max(1.0);
+
+    let attn = 4.0 * dm * dm * (k_heads / d.n_heads as f64);
+    let mlp = 2.0 * dm * ff * (k_exp / d.n_experts as f64);
+    let routed = attn * c.mha_tokens + mlp * c.mlp_tokens;
+    let dense = 4.0 * dm * dm + 2.0 * dm * ff;
+    let n_routed = (c.layers * d.n_layers as f64).round();
+    let n_dense = d.n_layers as f64 - n_routed;
+    (n_routed * routed + n_dense * dense + dm * d.vocab as f64) as u64
+}
+
+/// Router parameter counts per routing family (the Table 1 formulas).
+pub fn router_param_counts(d: &ModelDims) -> Vec<(&'static str, u64)> {
+    let l = d.n_layers as u64;
+    let dm = d.d_model as u64;
+    vec![
+        ("input/MLP  L*(D+1)", l * (dm + 1)),
+        ("input/MHA  L*(D+1)", l * (dm + 1)),
+        ("param/MLP  L*(D+1)*M", l * (dm + 1) * d.n_experts as u64),
+        ("param/MHA  L*(D+1)*H", l * (dm + 1) * d.n_heads as u64),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims { d_model: 128, n_layers: 4, n_heads: 4, d_ff: 512,
+                    seq_len: 128, vocab: 256, n_experts: 8 }
+    }
+
+    #[test]
+    fn full_capacity_close_to_teacher() {
+        let d = dims();
+        let t = teacher_macs(&d) as f64;
+        let e = elastic_macs(&d, &Capacity::full()) as f64;
+        // elastic at full capacity = teacher + router overhead (< 5%)
+        assert!(e >= t);
+        assert!(e / t < 1.05, "overhead ratio {}", e / t);
+    }
+
+    #[test]
+    fn savings_monotone_in_capacity() {
+        let d = dims();
+        let mut prev = u64::MAX;
+        for c in [1.0, 0.75, 0.5, 0.25] {
+            let e = elastic_macs(&d, &Capacity::uniform(c));
+            assert!(e < prev, "not monotone at {c}");
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn half_capacity_saves_roughly_half_of_big_terms() {
+        let d = dims();
+        let t = teacher_macs(&d) as f64;
+        let e = elastic_macs(&d, &Capacity::uniform(0.5)) as f64;
+        let ratio = e / t;
+        assert!(ratio > 0.2 && ratio < 0.55, "ratio {ratio}");
+    }
+
+    #[test]
+    fn even_layer_routing_halves_savings() {
+        let d = dims();
+        let full = elastic_macs(&d, &Capacity::uniform(0.5));
+        let mut even = Capacity::uniform(0.5);
+        even.layers = 0.5;
+        let e = elastic_macs(&d, &even);
+        let t = teacher_macs(&d);
+        assert!(e > full && e < t);
+    }
+
+    #[test]
+    fn active_params_bounds() {
+        let d = dims();
+        let full = active_params(&d, &Capacity::full());
+        let quarter = active_params(&d, &Capacity::uniform(0.25));
+        assert!(quarter < full);
+        assert!(quarter > 0);
+    }
+
+    #[test]
+    fn table1_formulas() {
+        let d = dims();
+        let rows = router_param_counts(&d);
+        assert_eq!(rows[0].1, 4 * 129);
+        assert_eq!(rows[2].1, 4 * 129 * 8);
+    }
+}

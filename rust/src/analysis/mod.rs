@@ -1,0 +1,6 @@
+//! Analysis substrates: FLOPs/active-parameter accounting (Table 1 and the
+//! capacity→compute mapping of every scaling figure) and router-activation
+//! similarity (Fig. 8).
+
+pub mod flops;
+pub mod similarity;

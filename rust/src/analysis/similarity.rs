@@ -1,0 +1,121 @@
+//! Router-activation similarity analysis (Fig. 8).
+//!
+//! Given per-instance router score vectors on a shared held-out evaluation
+//! set, builds the 10x10 pairwise cosine matrix and the per-image patch
+//! selection heatmaps the paper plots.
+
+use anyhow::{bail, Result};
+
+/// Pairwise cosine-similarity matrix of `n` activation vectors.
+pub fn cosine_matrix(vecs: &[Vec<f32>]) -> Result<Vec<Vec<f64>>> {
+    let n = vecs.len();
+    if n == 0 {
+        return Ok(vec![]);
+    }
+    let d = vecs[0].len();
+    if vecs.iter().any(|v| v.len() != d) {
+        bail!("cosine_matrix: inconsistent vector lengths");
+    }
+    let norms: Vec<f64> = vecs
+        .iter()
+        .map(|v| v.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt())
+        .collect();
+    let mut out = vec![vec![0.0f64; n]; n];
+    for i in 0..n {
+        for j in i..n {
+            let dot: f64 = vecs[i]
+                .iter()
+                .zip(&vecs[j])
+                .map(|(a, b)| (*a as f64) * (*b as f64))
+                .sum();
+            let denom = norms[i] * norms[j];
+            let c = if denom > 0.0 { dot / denom } else { 0.0 };
+            out[i][j] = c;
+            out[j][i] = c;
+        }
+    }
+    Ok(out)
+}
+
+/// ASCII heatmap of a patch-selection mask (row-major grid of side `side`),
+/// used for the Fig. 8 right-panel rendering in reports.
+pub fn ascii_heatmap(mask: &[f32], side: usize) -> Result<String> {
+    if mask.len() != side * side {
+        bail!("ascii_heatmap: {} values for {}x{} grid", mask.len(), side, side);
+    }
+    const SHADES: [char; 5] = [' ', '.', ':', 'o', '#'];
+    let mut out = String::new();
+    for y in 0..side {
+        for x in 0..side {
+            let v = mask[y * side + x].clamp(0.0, 1.0);
+            let idx = ((v * (SHADES.len() - 1) as f32).round()) as usize;
+            out.push(SHADES[idx.min(SHADES.len() - 1)]);
+            out.push(SHADES[idx.min(SHADES.len() - 1)]);
+        }
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+/// Selection-overlap (IoU) between two boolean patch masks — the scalar we
+/// report alongside the Fig. 8 heatmaps.
+pub fn mask_iou(a: &[f32], b: &[f32]) -> Result<f64> {
+    if a.len() != b.len() {
+        bail!("mask_iou: length mismatch");
+    }
+    let mut inter = 0usize;
+    let mut union = 0usize;
+    for (&x, &y) in a.iter().zip(b) {
+        let (sx, sy) = (x > 0.5, y > 0.5);
+        if sx && sy {
+            inter += 1;
+        }
+        if sx || sy {
+            union += 1;
+        }
+    }
+    Ok(if union == 0 { 1.0 } else { inter as f64 / union as f64 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_symmetric_unit_diagonal() {
+        let vecs = vec![vec![1.0, 0.0, 2.0], vec![0.5, 1.0, 0.0],
+                        vec![1.0, 0.1, 1.9]];
+        let m = cosine_matrix(&vecs).unwrap();
+        for i in 0..3 {
+            assert!((m[i][i] - 1.0).abs() < 1e-9);
+            for j in 0..3 {
+                assert!((m[i][j] - m[j][i]).abs() < 1e-12);
+            }
+        }
+        // vec 0 and vec 2 are nearly parallel
+        assert!(m[0][2] > m[0][1]);
+    }
+
+    #[test]
+    fn rejects_ragged() {
+        assert!(cosine_matrix(&[vec![1.0], vec![1.0, 2.0]]).is_err());
+    }
+
+    #[test]
+    fn heatmap_shape() {
+        let mask = vec![0.0, 1.0, 0.5, 0.0];
+        let h = ascii_heatmap(&mask, 2).unwrap();
+        assert_eq!(h.lines().count(), 2);
+        assert!(h.contains('#'));
+        assert!(ascii_heatmap(&mask, 3).is_err());
+    }
+
+    #[test]
+    fn iou_cases() {
+        let a = vec![1.0, 1.0, 0.0, 0.0];
+        let b = vec![1.0, 0.0, 1.0, 0.0];
+        assert!((mask_iou(&a, &b).unwrap() - 1.0 / 3.0).abs() < 1e-9);
+        assert_eq!(mask_iou(&a, &a).unwrap(), 1.0);
+        assert_eq!(mask_iou(&[0.0, 0.0], &[0.0, 0.0]).unwrap(), 1.0);
+    }
+}

@@ -1,0 +1,216 @@
+//! Benchmark harness (criterion is not in the vendored crate set).
+//!
+//! `cargo bench` targets are `harness = false` binaries that drive this
+//! module: warmup, timed iterations, and mean / p50 / p99 / throughput
+//! reporting, plus a tabular printer used by the per-figure paper benches.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e3
+    }
+
+    pub fn throughput_per_s(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean.as_secs_f64()
+    }
+}
+
+/// Runner with warmup and a soft time budget.
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub budget: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 1000,
+            budget: Duration::from_secs(5),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 50,
+            budget: Duration::from_secs(2),
+        }
+    }
+
+    /// Time `f` repeatedly; `f` should perform one full operation.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples: Vec<Duration> = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_iters
+            || (start.elapsed() < self.budget && samples.len() < self.max_iters)
+        {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+        }
+        samples.sort();
+        let n = samples.len();
+        let total: Duration = samples.iter().sum();
+        BenchResult {
+            name: name.to_string(),
+            iters: n,
+            mean: total / n as u32,
+            p50: samples[n / 2],
+            p99: samples[(n * 99 / 100).min(n - 1)],
+            min: samples[0],
+            max: samples[n - 1],
+        }
+    }
+}
+
+/// Fixed-width table printer for bench/experiment output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                s.push_str(&format!(" {:<w$} |", c, w = w));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+        }
+        out
+    }
+
+    /// Markdown is the same format; alias for call-site clarity.
+    pub fn to_markdown(&self) -> String {
+        self.to_string()
+    }
+
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = self
+            .headers
+            .iter()
+            .map(|h| esc(h))
+            .collect::<Vec<_>>()
+            .join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(
+                &row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","),
+            );
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_string());
+    }
+}
+
+pub fn fmt_f(v: f64, prec: usize) -> String {
+    format!("{:.*}", prec, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleepy_fn() {
+        let b = Bencher {
+            warmup_iters: 0,
+            min_iters: 3,
+            max_iters: 5,
+            budget: Duration::from_millis(100),
+        };
+        let r = b.run("sleep", || std::thread::sleep(Duration::from_millis(2)));
+        assert!(r.mean >= Duration::from_millis(2));
+        assert!(r.iters >= 3);
+        assert!(r.p50 <= r.p99);
+        assert!(r.min <= r.max);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new(&["a", "long_header"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let s = t.to_string();
+        assert!(s.contains("| a | long_header |"));
+        assert!(s.lines().count() == 3);
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new(&["x"]);
+        t.row(vec!["a,b\"c".into()]);
+        assert_eq!(t.to_csv(), "x\n\"a,b\"\"c\"\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

@@ -1,0 +1,205 @@
+//! Flat-parameter checkpoint format.
+//!
+//! Binary layout (little-endian):
+//!   magic  b"EFCK"            | version u32 (=1)
+//!   config name (u32 len + utf8) | kind (u32 len + utf8, e.g. "teacher",
+//!   "router_r8")              | step u64 | param count u64 | f32 data
+//!
+//! The param count is validated against the manifest layout at load time;
+//! `noise` implements the Fig. 4 "student = teacher + gaussian noise"
+//! perturbation without round-tripping through Python.
+
+use std::fs;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::rng::Rng;
+
+const MAGIC: &[u8; 4] = b"EFCK";
+const VERSION: u32 = 1;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub config: String,
+    pub kind: String,
+    pub step: u64,
+    pub params: Vec<f32>,
+}
+
+impl Checkpoint {
+    pub fn new(config: &str, kind: &str, step: u64, params: Vec<f32>) -> Self {
+        Checkpoint {
+            config: config.to_string(),
+            kind: kind.to_string(),
+            step,
+            params,
+        }
+    }
+
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let mut buf = Vec::with_capacity(self.params.len() * 4 + 64);
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        write_str(&mut buf, &self.config);
+        write_str(&mut buf, &self.kind);
+        buf.extend_from_slice(&self.step.to_le_bytes());
+        buf.extend_from_slice(&(self.params.len() as u64).to_le_bytes());
+        for p in &self.params {
+            buf.extend_from_slice(&p.to_le_bytes());
+        }
+        let tmp = path.as_ref().with_extension("tmp");
+        fs::write(&tmp, &buf)?;
+        fs::rename(&tmp, path.as_ref())
+            .with_context(|| format!("rename to {:?}", path.as_ref()))?;
+        Ok(())
+    }
+
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Checkpoint> {
+        let mut f = fs::File::open(&path)
+            .with_context(|| format!("open checkpoint {:?}", path.as_ref()))?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            if *pos + n > buf.len() {
+                bail!("truncated checkpoint");
+            }
+            let s = &buf[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        if take(&mut pos, 4)? != MAGIC {
+            bail!("bad magic (not an EFCK checkpoint)");
+        }
+        let ver = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?);
+        if ver != VERSION {
+            bail!("unsupported checkpoint version {ver}");
+        }
+        let config = read_str(&buf, &mut pos)?;
+        let kind = read_str(&buf, &mut pos)?;
+        let step = u64::from_le_bytes(take(&mut pos, 8)?.try_into()?);
+        let n = u64::from_le_bytes(take(&mut pos, 8)?.try_into()?) as usize;
+        if buf.len() - pos != n * 4 {
+            bail!("checkpoint data length mismatch: header says {} params, \
+                   file has {} bytes of data", n, buf.len() - pos);
+        }
+        let mut params = Vec::with_capacity(n);
+        for i in 0..n {
+            let off = pos + i * 4;
+            params.push(f32::from_le_bytes(buf[off..off + 4].try_into()?));
+        }
+        Ok(Checkpoint { config, kind, step, params })
+    }
+
+    /// Validate against an expected layout size.
+    pub fn expect(&self, config: &str, kind: &str, n: usize) -> Result<()> {
+        if self.config != config {
+            bail!("checkpoint is for config {:?}, wanted {:?}",
+                  self.config, config);
+        }
+        if self.kind != kind {
+            bail!("checkpoint kind {:?}, wanted {:?}", self.kind, kind);
+        }
+        if self.params.len() != n {
+            bail!("checkpoint has {} params, layout wants {}",
+                  self.params.len(), n);
+        }
+        Ok(())
+    }
+
+    /// Fig. 4's noised student: params + N(0, std).
+    pub fn noised(&self, std: f32, seed: u64) -> Checkpoint {
+        let mut rng = Rng::new(seed);
+        let params = self
+            .params
+            .iter()
+            .map(|&p| p + rng.gaussian_f32(std))
+            .collect();
+        Checkpoint {
+            config: self.config.clone(),
+            kind: format!("{}_noised", self.kind),
+            step: self.step,
+            params,
+        }
+    }
+}
+
+fn write_str(buf: &mut Vec<u8>, s: &str) {
+    buf.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn read_str(buf: &[u8], pos: &mut usize) -> Result<String> {
+    if *pos + 4 > buf.len() {
+        bail!("truncated checkpoint (string length)");
+    }
+    let n = u32::from_le_bytes(buf[*pos..*pos + 4].try_into()?) as usize;
+    *pos += 4;
+    if *pos + n > buf.len() {
+        bail!("truncated checkpoint (string body)");
+    }
+    let s = String::from_utf8(buf[*pos..*pos + n].to_vec())?;
+    *pos += n;
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("efck_test_{name}.bin"))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let ck = Checkpoint::new("lm_tiny", "teacher", 123,
+                                 vec![1.5, -2.25, 0.0, f32::MIN_POSITIVE]);
+        let path = tmpfile("roundtrip");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck, back);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn expect_validates() {
+        let ck = Checkpoint::new("lm_tiny", "router_r8", 0, vec![0.0; 10]);
+        assert!(ck.expect("lm_tiny", "router_r8", 10).is_ok());
+        assert!(ck.expect("lm_base", "router_r8", 10).is_err());
+        assert!(ck.expect("lm_tiny", "teacher", 10).is_err());
+        assert!(ck.expect("lm_tiny", "router_r8", 11).is_err());
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let ck = Checkpoint::new("c", "k", 0, vec![1.0; 8]);
+        let path = tmpfile("corrupt");
+        ck.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.truncate(bytes.len() - 3);
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        bytes[0] = b'X';
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn noise_changes_params_deterministically() {
+        let ck = Checkpoint::new("c", "teacher", 0, vec![0.0; 100]);
+        let n1 = ck.noised(0.1, 7);
+        let n2 = ck.noised(0.1, 7);
+        assert_eq!(n1.params, n2.params);
+        assert!(n1.params.iter().any(|&p| p != 0.0));
+        assert_eq!(n1.kind, "teacher_noised");
+        let rms = (n1.params.iter().map(|p| p * p).sum::<f32>() / 100.0).sqrt();
+        assert!((rms - 0.1).abs() < 0.05, "rms {rms}");
+    }
+}

@@ -1,0 +1,174 @@
+//! Tiny argument parser (no `clap` in the vendored crate set).
+//!
+//! Supports `binary <subcommand> [--flag value] [--switch] [positional...]`
+//! with typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line: one subcommand, flags, positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`.  Flags may be `--key value` or `--key=value`;
+    /// a flag without a following value is a boolean switch.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(stripped.to_string(), v);
+                } else {
+                    out.switches.push(stripped.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.str_opt(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{key} {v:?}: not an integer ({e})")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{key} {v:?}: not an integer ({e})")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{key} {v:?}: not a number ({e})")),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+            || self.flags.get(switch).map(|v| v == "true").unwrap_or(false)
+    }
+
+    /// Comma-separated list flag, e.g. `--caps 0.25,0.5,1.0`.
+    pub fn f64_list_or(&self, key: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.flags.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse::<f64>()
+                        .map_err(|e| anyhow!("--{key}: bad element {p:?} ({e})"))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.str_opt(key)
+            .ok_or_else(|| anyhow!("missing required flag --{key}"))
+    }
+
+    /// Reject unknown flags (catches typos in experiment invocations).
+    pub fn check_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.flags.keys().chain(self.switches.iter()) {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown flag --{k} (known: {})", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("train --verbose --config lm_tiny --steps 100 out.bin");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.str_opt("config"), Some("lm_tiny"));
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 100);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["out.bin"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("exp --lr=0.001 --caps=0.25,0.5");
+        assert!((a.f64_or("lr", 0.0).unwrap() - 0.001).abs() < 1e-12);
+        assert_eq!(a.f64_list_or("caps", &[]).unwrap(), vec![0.25, 0.5]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("serve");
+        assert_eq!(a.usize_or("steps", 7).unwrap(), 7);
+        assert_eq!(a.str_or("config", "lm_tiny"), "lm_tiny");
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse("x --steps abc");
+        assert!(a.usize_or("steps", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = parse("x --stepz 5");
+        assert!(a.check_known(&["steps"]).is_err());
+        assert!(a.check_known(&["stepz"]).is_ok());
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse("x --flag");
+        assert!(a.has("flag"));
+    }
+}

@@ -1,0 +1,148 @@
+//! Greedy autoregressive generation through the fixed-shape elastic
+//! artifacts (used by the qualitative Fig. 10/12 drivers and the serving
+//! example).
+//!
+//! The AOT forward has a static [B, T] shape, so decoding works on a padded
+//! window: place the prompt, run the full forward, read the logits at the
+//! last filled position, append the argmax, repeat.  O(T^2) per sequence —
+//! fine at the repro's T <= 128 and identical numerics to a KV-cache
+//! implementation.  Inference-mode routing (mode = 1: 0.5-threshold) is
+//! used, matching Appendix B.1.
+
+use anyhow::{bail, Result};
+
+use crate::data::tokenizer::{Tokenizer, BOS, EOS, PAD};
+use crate::eval;
+use crate::runtime::client::Arg;
+use crate::runtime::Runtime;
+
+use super::trainer::Caps;
+
+/// Greedy-decode continuations for a batch of prompts through an LM
+/// `elastic_forward_r*` entry.  Returns decoded strings (prompt stripped).
+#[allow(clippy::too_many_arguments)]
+pub fn generate_lm(rt: &Runtime, entry: &str, params: &[f32], router: &[f32],
+                   prompts: &[String], max_new: usize, caps: Caps,
+                   layer_en: &[f32], mode: f32) -> Result<Vec<String>> {
+    let b = rt.manifest.batch();
+    let t = rt.manifest.seq_len();
+    let v = rt.manifest.vocab();
+    if prompts.len() > b {
+        bail!("{} prompts > batch {b}", prompts.len());
+    }
+    let tok = Tokenizer::new();
+    // token rows + current lengths
+    let mut rows: Vec<Vec<i32>> = Vec::with_capacity(b);
+    let mut lens: Vec<usize> = Vec::with_capacity(b);
+    for i in 0..b {
+        let text = prompts.get(i).map(|s| s.as_str()).unwrap_or("");
+        let mut ids = vec![BOS];
+        ids.extend(tok.encode(text));
+        ids.truncate(t - 1);
+        lens.push(ids.len());
+        ids.resize(t, PAD);
+        rows.push(ids);
+    }
+    let mut done = vec![false; b];
+    for _ in 0..max_new {
+        if done.iter().all(|&d| d) || lens.iter().all(|&l| l >= t) {
+            break;
+        }
+        let flat: Vec<i32> = rows.iter().flatten().copied().collect();
+        let out = rt.exec(entry, &[
+            Arg::F32(params),
+            Arg::F32(router),
+            Arg::I32(&flat),
+            Arg::F32(&caps.0),
+            Arg::F32(layer_en),
+            Arg::ScalarF32(mode),
+        ])?;
+        let logits = out.f32(0)?;
+        for i in 0..prompts.len() {
+            if done[i] || lens[i] >= t {
+                continue;
+            }
+            let next = eval::greedy_token(&logits, i, lens[i] - 1, t, v);
+            rows[i][lens[i]] = next;
+            lens[i] += 1;
+            if next == EOS {
+                done[i] = true;
+            }
+        }
+    }
+    let mut outs = Vec::with_capacity(prompts.len());
+    for (i, p) in prompts.iter().enumerate() {
+        let full = tok.decode_until_eos(&rows[i][..lens[i]]);
+        outs.push(full[p.len().min(full.len())..].to_string());
+    }
+    Ok(outs)
+}
+
+/// Greedy caption generation through a VLM `elastic_forward_*` entry.
+/// `images` is the flat [B, H*W*C] batch; returns one caption per image.
+pub fn generate_vlm(rt: &Runtime, entry: &str, params: &[f32],
+                    router: &[f32], images: &[f32], capacity: f32,
+                    mode: f32, max_new: usize) -> Result<Vec<String>> {
+    let b = rt.manifest.batch();
+    let tl = rt.manifest.cfg_usize("text_len")?;
+    let v = rt.manifest.vocab();
+    let tok = Tokenizer::new();
+    let mut rows: Vec<Vec<i32>> = (0..b)
+        .map(|_| {
+            let mut r = vec![PAD; tl];
+            r[0] = BOS;
+            r
+        })
+        .collect();
+    let mut lens = vec![1usize; b];
+    let mut done = vec![false; b];
+    for _ in 0..max_new.min(tl - 1) {
+        if done.iter().all(|&d| d) {
+            break;
+        }
+        let flat: Vec<i32> = rows.iter().flatten().copied().collect();
+        let out = rt.exec(entry, &[
+            Arg::F32(params),
+            Arg::F32(router),
+            Arg::F32(images),
+            Arg::I32(&flat),
+            Arg::ScalarF32(capacity),
+            Arg::ScalarF32(mode),
+        ])?;
+        let logits = out.f32(0)?; // [B, text_len, V]
+        for i in 0..b {
+            if done[i] || lens[i] >= tl {
+                continue;
+            }
+            let next = eval::greedy_token(&logits, i, lens[i] - 1, tl, v);
+            rows[i][lens[i]] = next;
+            lens[i] += 1;
+            if next == EOS {
+                done[i] = true;
+            }
+        }
+    }
+    Ok(rows
+        .iter()
+        .zip(&lens)
+        .map(|(r, &l)| tok.decode_until_eos(&r[..l]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    // Generation requires compiled artifacts; covered by the integration
+    // tests in rust/tests/ (test_generation_*) and the qualitative driver.
+    // Here we only test the prompt-window bookkeeping helpers indirectly
+    // through the tokenizer contract.
+    use crate::data::tokenizer::{Tokenizer, BOS};
+
+    #[test]
+    fn prompt_window_layout() {
+        let tok = Tokenizer::new();
+        let mut ids = vec![BOS];
+        ids.extend(tok.encode("Q: 2+2 A:"));
+        assert_eq!(ids[0], BOS);
+        assert!(ids.len() < 64);
+    }
+}

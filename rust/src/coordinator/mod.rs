@@ -1,0 +1,13 @@
+//! The paper's system contribution at L3: post-training self-distillation
+//! orchestration (producing router checkpoints) plus an elastic serving
+//! engine that realizes "variable inference time compute" as an operable
+//! system (admission queue -> capacity controller -> per-tier batcher ->
+//! PJRT worker).
+
+pub mod generation;
+pub mod schedule;
+pub mod serving;
+pub mod trainer;
+
+pub use schedule::LrSchedule;
+pub use trainer::Trainer;

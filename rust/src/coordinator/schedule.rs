@@ -1,0 +1,80 @@
+//! Learning-rate schedule: cosine decay with linear warmup (paper §5:
+//! "AdamW ... cosine learning rate scheduler with 3% warmup").
+//!
+//! The schedule runs on the Rust side; the AOT train steps take `lr` as a
+//! runtime scalar.
+
+#[derive(Debug, Clone, Copy)]
+pub struct LrSchedule {
+    pub base_lr: f64,
+    pub total_steps: usize,
+    pub warmup_steps: usize,
+    pub min_lr_frac: f64,
+}
+
+impl LrSchedule {
+    /// Paper defaults: 3% warmup, decay to 10% of base.
+    pub fn cosine(base_lr: f64, total_steps: usize) -> LrSchedule {
+        LrSchedule {
+            base_lr,
+            total_steps: total_steps.max(1),
+            warmup_steps: ((total_steps as f64) * 0.03).ceil() as usize,
+            min_lr_frac: 0.1,
+        }
+    }
+
+    pub fn at(&self, step: usize) -> f64 {
+        if self.warmup_steps > 0 && step < self.warmup_steps {
+            return self.base_lr * (step as f64 + 1.0)
+                / self.warmup_steps as f64;
+        }
+        let denom = (self.total_steps.saturating_sub(self.warmup_steps))
+            .max(1) as f64;
+        let progress =
+            ((step - self.warmup_steps) as f64 / denom).clamp(0.0, 1.0);
+        let cos = 0.5 * (1.0 + (std::f64::consts::PI * progress).cos());
+        let floor = self.base_lr * self.min_lr_frac;
+        floor + (self.base_lr - floor) * cos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_to_base() {
+        let s = LrSchedule::cosine(1e-3, 1000); // warmup = 30 steps
+        assert!(s.at(0) < 1e-4);
+        assert!(s.at(29) <= 1e-3 + 1e-12);
+        assert!((s.at(30) - 1e-3).abs() / 1e-3 < 0.01);
+    }
+
+    #[test]
+    fn decays_to_floor() {
+        let s = LrSchedule::cosine(1e-3, 1000);
+        let end = s.at(999);
+        assert!((end - 1e-4).abs() < 2e-5, "end lr {end}");
+        assert!(s.at(2000) >= 1e-4 - 1e-12); // clamped past the end
+    }
+
+    #[test]
+    fn monotone_decreasing_after_warmup() {
+        let s = LrSchedule::cosine(3e-4, 200);
+        let mut prev = f64::INFINITY;
+        for step in s.warmup_steps..200 {
+            let lr = s.at(step);
+            assert!(lr <= prev + 1e-15);
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn tiny_run_no_division_by_zero() {
+        let s = LrSchedule::cosine(1e-3, 1);
+        assert!(s.at(0).is_finite());
+        let s2 = LrSchedule { base_lr: 1e-3, total_steps: 5,
+                              warmup_steps: 0, min_lr_frac: 0.0 };
+        assert!((s2.at(0) - 1e-3).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,336 @@
+//! Elastic serving engine — the systems realization of "variable inference
+//! time compute" (paper §1): an admission queue, a load-adaptive capacity
+//! controller, a per-tier dynamic batcher, and a PJRT execution loop over
+//! the static-capacity `serve_cap*` artifacts.
+//!
+//! Under light load every request runs at capacity 1.0 (teacher-exact, see
+//! the §4.1 equivalence); as the queue deepens the controller sheds compute
+//! by routing requests to lower-capacity tiers, trading the paper's
+//! measured quality-vs-capacity curve for throughput.  PJRT handles are not
+//! `Send`, so the engine owns the runtime on its calling thread and request
+//! producers feed it through a channel — the same single-executor topology
+//! vLLM uses per GPU worker.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::metrics::{summarize, Summary};
+use crate::runtime::client::Arg;
+use crate::runtime::Runtime;
+
+/// One inference request: a fixed-length token row.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub submitted: Instant,
+}
+
+/// Completion record for one request.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub tier: f32,
+    pub queue_ms: f64,
+    pub total_ms: f64,
+    pub batch_size: usize,
+}
+
+/// Load-adaptive capacity controller with hysteresis.
+///
+/// Maps smoothed queue depth to one of the available capacity tiers:
+/// empty queue -> highest capacity; beyond `depth_per_tier` waiting
+/// requests per step, shed one tier, and so on.  Hysteresis (EWMA on the
+/// depth) prevents tier oscillation at load boundaries.
+#[derive(Debug, Clone)]
+pub struct CapacityController {
+    /// available tiers, descending capacity (e.g. [1.0, 0.75, 0.5, 0.25])
+    pub tiers: Vec<f32>,
+    pub depth_per_tier: f64,
+    ewma: f64,
+    alpha: f64,
+}
+
+impl CapacityController {
+    pub fn new(mut tiers: Vec<f32>, depth_per_tier: f64) -> CapacityController {
+        assert!(!tiers.is_empty());
+        tiers.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        CapacityController { tiers, depth_per_tier, ewma: 0.0, alpha: 0.4 }
+    }
+
+    /// Observe the current queue depth and pick a tier.
+    pub fn choose(&mut self, queue_depth: usize) -> f32 {
+        self.ewma = self.alpha * queue_depth as f64
+            + (1.0 - self.alpha) * self.ewma;
+        let idx = (self.ewma / self.depth_per_tier).floor() as usize;
+        self.tiers[idx.min(self.tiers.len() - 1)]
+    }
+
+    /// Pure mapping (for tests / property checks): tier for a given
+    /// smoothed depth without updating state.
+    pub fn tier_for_depth(&self, depth: f64) -> f32 {
+        let idx = (depth / self.depth_per_tier).floor() as usize;
+        self.tiers[idx.min(self.tiers.len() - 1)]
+    }
+}
+
+/// Engine configuration.
+pub struct ServeConfig {
+    /// (capacity, entry name), e.g. (0.5, "serve_cap50")
+    pub tiers: Vec<(f32, String)>,
+    pub depth_per_tier: f64,
+    /// max time to wait filling a batch before running partial
+    pub max_batch_wait: Duration,
+}
+
+impl ServeConfig {
+    pub fn standard() -> ServeConfig {
+        ServeConfig {
+            tiers: vec![
+                (1.0, "serve_cap100".into()),
+                (0.75, "serve_cap75".into()),
+                (0.5, "serve_cap50".into()),
+                (0.25, "serve_cap25".into()),
+            ],
+            depth_per_tier: 8.0,
+            max_batch_wait: Duration::from_millis(20),
+        }
+    }
+}
+
+/// Aggregate serving report.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub completions: Vec<Completion>,
+    pub wall_secs: f64,
+    pub tier_counts: Vec<(f32, usize)>,
+}
+
+impl ServeReport {
+    pub fn throughput_rps(&self) -> f64 {
+        self.completions.len() as f64 / self.wall_secs.max(1e-9)
+    }
+
+    pub fn latency_summary(&self) -> Summary {
+        summarize(
+            &self.completions.iter().map(|c| c.total_ms).collect::<Vec<_>>())
+    }
+
+    pub fn latency_p(&self, q: f64) -> f64 {
+        let mut xs: Vec<f64> =
+            self.completions.iter().map(|c| c.total_ms).collect();
+        if xs.is_empty() {
+            return 0.0;
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs[((xs.len() as f64 - 1.0) * q).round() as usize]
+    }
+
+    /// Mean capacity actually served (compute proxy: fraction of teacher
+    /// FLOPs spent, cf. analysis::flops for the exact mapping).
+    pub fn mean_capacity(&self) -> f64 {
+        if self.completions.is_empty() {
+            return 0.0;
+        }
+        self.completions.iter().map(|c| c.tier as f64).sum::<f64>()
+            / self.completions.len() as f64
+    }
+}
+
+/// The serving engine.  Owns the runtime reference on the calling thread;
+/// consumes requests from `rx` until it has served `expected` requests or
+/// the channel closes and drains.
+pub struct ElasticServer<'a> {
+    rt: &'a Runtime,
+    /// params/router literals prepared once — the frozen multi-MB vectors
+    /// are NOT re-copied per batch (EXPERIMENTS.md §Perf, L3 iteration 1).
+    params_lit: xla::Literal,
+    router_lit: xla::Literal,
+    cfg: ServeConfig,
+    controller: CapacityController,
+    batch: usize,
+    seq_len: usize,
+}
+
+impl<'a> ElasticServer<'a> {
+    pub fn new(rt: &'a Runtime, params: &'a [f32], router: &'a [f32],
+               cfg: ServeConfig) -> Result<ElasticServer<'a>> {
+        let controller = CapacityController::new(
+            cfg.tiers.iter().map(|(c, _)| *c).collect(), cfg.depth_per_tier);
+        // pre-compile all tier executables: admission must never pay compile
+        let entries: Vec<&str> =
+            cfg.tiers.iter().map(|(_, e)| e.as_str()).collect();
+        rt.warmup(&entries)?;
+        let entry0 = &cfg.tiers[0].1;
+        let params_lit = rt.prepare_arg(entry0, 0, &Arg::F32(params))?;
+        let router_lit = rt.prepare_arg(entry0, 1, &Arg::F32(router))?;
+        Ok(ElasticServer {
+            rt,
+            params_lit,
+            router_lit,
+            batch: rt.manifest.batch(),
+            seq_len: rt.manifest.seq_len(),
+            cfg,
+            controller,
+        })
+    }
+
+    fn entry_for(&self, tier: f32) -> &str {
+        self.cfg
+            .tiers
+            .iter()
+            .find(|(c, _)| (*c - tier).abs() < 1e-6)
+            .map(|(_, e)| e.as_str())
+            .expect("tier from controller is always configured")
+    }
+
+    /// Serve until `expected` completions (or channel close + drain).
+    pub fn run(&mut self, rx: Receiver<Request>, expected: usize)
+               -> Result<ServeReport> {
+        let start = Instant::now();
+        let mut queue: VecDeque<Request> = VecDeque::new();
+        let mut completions = Vec::with_capacity(expected);
+        let mut open = true;
+        while completions.len() < expected && (open || !queue.is_empty()) {
+            // admit everything currently available (bounded wait)
+            let deadline = Instant::now() + self.cfg.max_batch_wait;
+            while queue.len() < self.batch && open {
+                let now = Instant::now();
+                if now >= deadline && !queue.is_empty() {
+                    break;
+                }
+                let timeout = if queue.is_empty() {
+                    Duration::from_millis(50)
+                } else {
+                    deadline - now
+                };
+                match rx.recv_timeout(timeout) {
+                    Ok(req) => queue.push_back(req),
+                    Err(RecvTimeoutError::Timeout) => {
+                        if !queue.is_empty() {
+                            break;
+                        }
+                        if completions.len() >= expected {
+                            break;
+                        }
+                    }
+                    Err(RecvTimeoutError::Disconnected) => {
+                        open = false;
+                    }
+                }
+            }
+            if queue.is_empty() {
+                continue;
+            }
+            // controller sees post-batch backlog
+            let backlog = queue.len().saturating_sub(self.batch);
+            let tier = self.controller.choose(backlog);
+            let entry = self.entry_for(tier).to_string();
+
+            let take = queue.len().min(self.batch);
+            let mut reqs: Vec<Request> = Vec::with_capacity(take);
+            for _ in 0..take {
+                reqs.push(queue.pop_front().unwrap());
+            }
+            let exec_start = Instant::now();
+            let mut flat = Vec::with_capacity(self.batch * self.seq_len);
+            for r in &reqs {
+                debug_assert_eq!(r.tokens.len(), self.seq_len);
+                flat.extend_from_slice(&r.tokens);
+            }
+            // pad partial batches by repeating the last row
+            while flat.len() < self.batch * self.seq_len {
+                let row_start = flat.len() - self.seq_len;
+                flat.extend_from_within(row_start..row_start + self.seq_len);
+            }
+            let tokens_lit = self.rt.prepare_arg(&entry, 2, &Arg::I32(&flat))?;
+            let out = self.rt.exec_prepared(
+                &entry, &[&self.params_lit, &self.router_lit, &tokens_lit])?;
+            let _logits = out.f32(0)?; // delivered to callers in a real API
+            let done = Instant::now();
+            for r in reqs {
+                completions.push(Completion {
+                    id: r.id,
+                    tier,
+                    queue_ms: (exec_start - r.submitted).as_secs_f64() * 1e3,
+                    total_ms: (done - r.submitted).as_secs_f64() * 1e3,
+                    batch_size: take,
+                });
+            }
+        }
+        let wall_secs = start.elapsed().as_secs_f64();
+        let mut tier_counts: Vec<(f32, usize)> = self
+            .cfg
+            .tiers
+            .iter()
+            .map(|(c, _)| (*c, 0usize))
+            .collect();
+        for c in &completions {
+            if let Some(tc) =
+                tier_counts.iter_mut().find(|(t, _)| (*t - c.tier).abs() < 1e-6)
+            {
+                tc.1 += 1;
+            }
+        }
+        Ok(ServeReport { completions, wall_secs, tier_counts })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn controller_monotone_in_depth() {
+        let c = CapacityController::new(vec![1.0, 0.75, 0.5, 0.25], 4.0);
+        let mut prev = f32::INFINITY;
+        for d in 0..40 {
+            let t = c.tier_for_depth(d as f64);
+            assert!(t <= prev);
+            prev = t;
+        }
+        assert_eq!(c.tier_for_depth(0.0), 1.0);
+        assert_eq!(c.tier_for_depth(100.0), 0.25);
+    }
+
+    #[test]
+    fn controller_hysteresis_smooths_spikes() {
+        let mut c = CapacityController::new(vec![1.0, 0.5], 8.0);
+        // single spike shouldn't immediately drop the tier
+        assert_eq!(c.choose(0), 1.0);
+        let t = c.choose(20); // ewma = 0.4*20 = 8 -> boundary
+        let t2 = c.choose(0); // decays back
+        assert!(t >= 0.5);
+        assert!(t2 >= t - 1e-6 || t2 == 1.0);
+    }
+
+    #[test]
+    fn controller_sorts_tiers() {
+        let c = CapacityController::new(vec![0.25, 1.0, 0.5], 1.0);
+        assert_eq!(c.tiers, vec![1.0, 0.5, 0.25]);
+    }
+
+    #[test]
+    fn report_percentiles() {
+        let report = ServeReport {
+            completions: (0..100)
+                .map(|i| Completion {
+                    id: i,
+                    tier: 1.0,
+                    queue_ms: 0.0,
+                    total_ms: i as f64,
+                    batch_size: 1,
+                })
+                .collect(),
+            wall_secs: 1.0,
+            tier_counts: vec![(1.0, 100)],
+        };
+        assert_eq!(report.latency_p(0.5), 50.0);
+        assert_eq!(report.latency_p(0.99), 98.0);
+        assert_eq!(report.throughput_rps(), 100.0);
+        assert_eq!(report.mean_capacity(), 1.0);
+    }
+}

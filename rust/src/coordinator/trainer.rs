@@ -1,0 +1,346 @@
+//! Training orchestration: teacher pretraining and ElastiFormer
+//! self-distillation loops over the AOT step artifacts.
+//!
+//! All state (params / Adam moments) lives in host `Vec<f32>` between steps
+//! and round-trips through PJRT literals; the schedule, data pipeline,
+//! logging and checkpointing are owned here.  The same `Trainer` drives
+//! LM, ViT and VLM configs — entry names and batch payloads differ, shapes
+//! come from the manifest.
+
+use anyhow::{bail, Result};
+
+use crate::checkpoint::Checkpoint;
+use crate::metrics::JsonlLogger;
+use crate::runtime::client::Arg;
+use crate::runtime::Runtime;
+
+use super::schedule::LrSchedule;
+
+/// Runtime capacity vector for the elastic artifacts:
+/// [mha_tokens, mlp_tokens, heads_frac, experts_frac].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Caps(pub [f32; 4]);
+
+impl Caps {
+    pub fn full() -> Caps {
+        Caps([1.0, 1.0, 1.0, 1.0])
+    }
+
+    pub fn uniform(c: f32) -> Caps {
+        Caps([c, c, c, c])
+    }
+}
+
+/// Per-layer routing enable vector (all / even / none).
+pub fn layer_enable(n_layers: usize, mode: &str) -> Result<Vec<f32>> {
+    Ok(match mode {
+        "all" => vec![1.0; n_layers],
+        "even" => (0..n_layers)
+            .map(|i| if i % 2 == 0 { 1.0 } else { 0.0 })
+            .collect(),
+        "none" => vec![0.0; n_layers],
+        _ => bail!("unknown layer mode {mode:?} (all|even|none)"),
+    })
+}
+
+/// Metrics of one distill step, in artifact order.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DistillMetrics {
+    pub distill: f32,
+    pub aux1: f32,
+    pub aux2: f32,
+    pub total: f32,
+    pub student_score: f32,
+    pub teacher_score: f32,
+    pub gnorm: f32,
+    pub frac_tokens: f32,
+}
+
+impl DistillMetrics {
+    pub fn from_vec(v: &[f32]) -> DistillMetrics {
+        let g = |i: usize| v.get(i).copied().unwrap_or(0.0);
+        DistillMetrics {
+            distill: g(0),
+            aux1: g(1),
+            aux2: g(2),
+            total: g(3),
+            student_score: g(4),
+            teacher_score: g(5),
+            gnorm: g(6),
+            frac_tokens: g(7),
+        }
+    }
+}
+
+pub struct Trainer<'a> {
+    pub rt: &'a Runtime,
+    pub logger: Option<JsonlLogger>,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(rt: &'a Runtime) -> Trainer<'a> {
+        Trainer { rt, logger: None }
+    }
+
+    pub fn with_logger(rt: &'a Runtime, path: &str) -> Result<Trainer<'a>> {
+        Ok(Trainer { rt, logger: Some(JsonlLogger::create(path)?) })
+    }
+
+    /// Initialize a flat parameter vector via the AOT `init`-family entry.
+    pub fn init_params(&self, entry: &str, seed: i32) -> Result<Vec<f32>> {
+        let out = self.rt.exec(entry, &[Arg::ScalarI32(seed)])?;
+        out.f32(0)
+    }
+
+    /// Generic pretraining loop.  `next_batch` must yield the non-state
+    /// args of the step entry in manifest order (tokens, or images [+texts]).
+    ///
+    /// Returns (params, per-step losses).
+    pub fn pretrain<F>(&mut self, entry: &str, mut params: Vec<f32>,
+                       steps: usize, base_lr: f64, mut next_batch: F)
+                       -> Result<(Vec<f32>, Vec<f32>)>
+    where
+        F: FnMut() -> Vec<BatchArg>,
+    {
+        let n = params.len();
+        let mut m = vec![0.0f32; n];
+        let mut v = vec![0.0f32; n];
+        let sched = LrSchedule::cosine(base_lr, steps);
+        let mut losses = Vec::with_capacity(steps);
+        for step in 0..steps {
+            let lr = sched.at(step) as f32;
+            let batch = next_batch();
+            let mut args: Vec<Arg> = vec![
+                Arg::F32(&params),
+                Arg::F32(&m),
+                Arg::F32(&v),
+                Arg::ScalarI32(step as i32),
+                Arg::ScalarF32(lr),
+            ];
+            for b in &batch {
+                args.push(b.as_arg());
+            }
+            let out = self.rt.exec(entry, &args)?;
+            params = out.f32(0)?;
+            m = out.f32(1)?;
+            v = out.f32(2)?;
+            let metrics = out.f32(3)?;
+            let loss = metrics[0];
+            if !loss.is_finite() {
+                bail!("{entry}: non-finite loss at step {step}");
+            }
+            losses.push(loss);
+            if let Some(log) = &mut self.logger {
+                log.log(vec![
+                    ("phase".into(), "pretrain".into()),
+                    ("step".into(), step.into()),
+                    ("loss".into(), (loss as f64).into()),
+                    ("gnorm".into(),
+                     (*metrics.get(1).unwrap_or(&0.0) as f64).into()),
+                    ("lr".into(), (lr as f64).into()),
+                ])?;
+            }
+        }
+        Ok((params, losses))
+    }
+
+    /// ElastiFormer distillation loop for LM entries
+    /// (`distill_step_r*` / `distill_fig4_*`):
+    /// args = teacher, student, router, m, v, step, lr, tokens, caps,
+    /// layer_en, temp.
+    #[allow(clippy::too_many_arguments)]
+    pub fn distill_lm<F>(&mut self, entry: &str, teacher: &[f32],
+                         student: &[f32], mut router: Vec<f32>, steps: usize,
+                         base_lr: f64, caps: Caps, layer_en: &[f32],
+                         temp: f32, mut next_tokens: F)
+                         -> Result<(Vec<f32>, Vec<DistillMetrics>)>
+    where
+        F: FnMut() -> Vec<i32>,
+    {
+        let n = router.len();
+        let mut m = vec![0.0f32; n];
+        let mut v = vec![0.0f32; n];
+        let sched = LrSchedule::cosine(base_lr, steps);
+        let mut history = Vec::with_capacity(steps);
+        for step in 0..steps {
+            let lr = sched.at(step) as f32;
+            let tokens = next_tokens();
+            let out = self.rt.exec(entry, &[
+                Arg::F32(teacher),
+                Arg::F32(student),
+                Arg::F32(&router),
+                Arg::F32(&m),
+                Arg::F32(&v),
+                Arg::ScalarI32(step as i32),
+                Arg::ScalarF32(lr),
+                Arg::I32(&tokens),
+                Arg::F32(&caps.0),
+                Arg::F32(layer_en),
+                Arg::ScalarF32(temp),
+            ])?;
+            router = out.f32(0)?;
+            m = out.f32(1)?;
+            v = out.f32(2)?;
+            let met = DistillMetrics::from_vec(&out.f32(3)?);
+            if !met.total.is_finite() {
+                bail!("{entry}: non-finite loss at step {step}");
+            }
+            self.log_distill(entry, step, lr, &met)?;
+            history.push(met);
+        }
+        Ok((router, history))
+    }
+
+    /// ViT distillation loop: args = params, router, m, v, step, lr,
+    /// images, caps, layer_en.
+    #[allow(clippy::too_many_arguments)]
+    pub fn distill_vit<F>(&mut self, entry: &str, teacher: &[f32],
+                          mut router: Vec<f32>, steps: usize, base_lr: f64,
+                          caps: Caps, layer_en: &[f32], mut next_images: F)
+                          -> Result<(Vec<f32>, Vec<DistillMetrics>)>
+    where
+        F: FnMut() -> Vec<f32>,
+    {
+        let n = router.len();
+        let mut m = vec![0.0f32; n];
+        let mut v = vec![0.0f32; n];
+        let sched = LrSchedule::cosine(base_lr, steps);
+        let mut history = Vec::with_capacity(steps);
+        for step in 0..steps {
+            let lr = sched.at(step) as f32;
+            let images = next_images();
+            let out = self.rt.exec(entry, &[
+                Arg::F32(teacher),
+                Arg::F32(&router),
+                Arg::F32(&m),
+                Arg::F32(&v),
+                Arg::ScalarI32(step as i32),
+                Arg::ScalarF32(lr),
+                Arg::F32(&images),
+                Arg::F32(&caps.0),
+                Arg::F32(layer_en),
+            ])?;
+            router = out.f32(0)?;
+            m = out.f32(1)?;
+            v = out.f32(2)?;
+            let met = DistillMetrics::from_vec(&out.f32(3)?);
+            if !met.total.is_finite() {
+                bail!("{entry}: non-finite loss at step {step}");
+            }
+            self.log_distill(entry, step, lr, &met)?;
+            history.push(met);
+        }
+        Ok((router, history))
+    }
+
+    /// VLM distillation loop: args = params, router, m, v, step, lr,
+    /// images, texts, capacity, temp.
+    #[allow(clippy::too_many_arguments)]
+    pub fn distill_vlm<F>(&mut self, entry: &str, teacher: &[f32],
+                          mut router: Vec<f32>, steps: usize, base_lr: f64,
+                          capacity: f32, temp: f32, mut next_batch: F)
+                          -> Result<(Vec<f32>, Vec<DistillMetrics>)>
+    where
+        F: FnMut() -> (Vec<f32>, Vec<i32>),
+    {
+        let n = router.len();
+        let mut m = vec![0.0f32; n];
+        let mut v = vec![0.0f32; n];
+        let sched = LrSchedule::cosine(base_lr, steps);
+        let mut history = Vec::with_capacity(steps);
+        for step in 0..steps {
+            let lr = sched.at(step) as f32;
+            let (images, texts) = next_batch();
+            let out = self.rt.exec(entry, &[
+                Arg::F32(teacher),
+                Arg::F32(&router),
+                Arg::F32(&m),
+                Arg::F32(&v),
+                Arg::ScalarI32(step as i32),
+                Arg::ScalarF32(lr),
+                Arg::F32(&images),
+                Arg::I32(&texts),
+                Arg::ScalarF32(capacity),
+                Arg::ScalarF32(temp),
+            ])?;
+            router = out.f32(0)?;
+            m = out.f32(1)?;
+            v = out.f32(2)?;
+            let met = DistillMetrics::from_vec(&out.f32(3)?);
+            if !met.total.is_finite() {
+                bail!("{entry}: non-finite loss at step {step}");
+            }
+            self.log_distill(entry, step, lr, &met)?;
+            history.push(met);
+        }
+        Ok((router, history))
+    }
+
+    fn log_distill(&mut self, entry: &str, step: usize, lr: f32,
+                   met: &DistillMetrics) -> Result<()> {
+        if let Some(log) = &mut self.logger {
+            log.log(vec![
+                ("phase".into(), "distill".into()),
+                ("entry".into(), entry.into()),
+                ("step".into(), step.into()),
+                ("distill".into(), (met.distill as f64).into()),
+                ("total".into(), (met.total as f64).into()),
+                ("student".into(), (met.student_score as f64).into()),
+                ("teacher".into(), (met.teacher_score as f64).into()),
+                ("frac_tokens".into(), (met.frac_tokens as f64).into()),
+                ("lr".into(), (lr as f64).into()),
+            ])?;
+        }
+        Ok(())
+    }
+
+    /// Save params as a checkpoint.
+    pub fn save(&self, params: &[f32], kind: &str, step: u64, path: &str)
+                -> Result<()> {
+        Checkpoint::new(self.rt.manifest.name(), kind, step, params.to_vec())
+            .save(path)
+    }
+}
+
+/// One non-state batch argument for a pretrain entry.
+pub enum BatchArg {
+    Tokens(Vec<i32>),
+    Floats(Vec<f32>),
+}
+
+impl BatchArg {
+    fn as_arg(&self) -> Arg<'_> {
+        match self {
+            BatchArg::Tokens(t) => Arg::I32(t),
+            BatchArg::Floats(f) => Arg::F32(f),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn caps_constructors() {
+        assert_eq!(Caps::full().0, [1.0; 4]);
+        assert_eq!(Caps::uniform(0.5).0, [0.5; 4]);
+    }
+
+    #[test]
+    fn layer_enable_modes() {
+        assert_eq!(layer_enable(4, "all").unwrap(), vec![1.0; 4]);
+        assert_eq!(layer_enable(4, "even").unwrap(),
+                   vec![1.0, 0.0, 1.0, 0.0]);
+        assert_eq!(layer_enable(3, "none").unwrap(), vec![0.0; 3]);
+        assert!(layer_enable(3, "odd").is_err());
+    }
+
+    #[test]
+    fn metrics_from_short_vec() {
+        let m = DistillMetrics::from_vec(&[1.0, 2.0]);
+        assert_eq!(m.distill, 1.0);
+        assert_eq!(m.aux1, 2.0);
+        assert_eq!(m.gnorm, 0.0);
+    }
+}

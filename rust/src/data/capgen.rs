@@ -1,0 +1,177 @@
+//! Caption generator + attribute-grounded caption metrics for the VLM
+//! substrate (stands in for LLaVA-Instruct / LLaVA-Bench / OpenCHAIR).
+//!
+//! Captions are generated from the *known* scene ground truth, so —
+//! unlike CHAIR's object-detector proxy — hallucination is measured
+//! exactly: an attribute word in the generated caption either matches the
+//! scene or it does not.
+
+use crate::rng::Rng;
+
+use super::imagen::{Scene, CLASS_NAMES};
+
+const TEMPLATES: [&str; 4] = [
+    "a {density} {color} {class} pattern",
+    "this image shows a {color} {class} texture that is {density}",
+    "a {class} design in {color}, {density} layout",
+    "the picture contains {density} {color} {class}",
+];
+
+/// Ground-truth caption for a scene (template varied by rng).
+pub fn caption(scene: &Scene, rng: &mut Rng) -> String {
+    let t = *rng.choose(&TEMPLATES);
+    t.replace("{density}", scene.density_name())
+        .replace("{color}", scene.color_name())
+        .replace("{class}", scene.class_name())
+}
+
+/// Attribute words recoverable from a caption.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CaptionFacts {
+    pub class: Option<usize>,
+    pub color: Option<&'static str>,
+    pub density: Option<&'static str>,
+}
+
+pub fn extract_facts(text: &str) -> CaptionFacts {
+    let lower = text.to_lowercase();
+    let class = CLASS_NAMES
+        .iter()
+        .position(|c| lower.contains(c));
+    let color = ["red", "green", "blue", "yellow", "purple", "cyan"]
+        .into_iter()
+        .find(|c| lower.contains(c));
+    let density = ["dense", "sparse"].into_iter().find(|d| lower.contains(d));
+    CaptionFacts { class, color, density }
+}
+
+/// OpenCHAIR-like scores for a generated caption against ground truth.
+///
+/// * `recall`        — fraction of the 3 ground-truth attributes mentioned
+///                     correctly (the "detail" axis, drops at low capacity).
+/// * `hallucination` — fraction of *mentioned* attributes that contradict
+///                     the scene (CHAIR's headline number).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CaptionScore {
+    pub recall: f64,
+    pub hallucination: f64,
+}
+
+pub fn score_caption(text: &str, scene: &Scene) -> CaptionScore {
+    let facts = extract_facts(text);
+    let mut mentioned = 0usize;
+    let mut correct = 0usize;
+    if let Some(c) = facts.class {
+        mentioned += 1;
+        if c == scene.class {
+            correct += 1;
+        }
+    }
+    if let Some(c) = facts.color {
+        mentioned += 1;
+        if c == scene.color_name() {
+            correct += 1;
+        }
+    }
+    if let Some(d) = facts.density {
+        mentioned += 1;
+        if d == scene.density_name() {
+            correct += 1;
+        }
+    }
+    CaptionScore {
+        recall: correct as f64 / 3.0,
+        hallucination: if mentioned == 0 {
+            1.0 // an empty/degenerate caption describes nothing correctly
+        } else {
+            (mentioned - correct) as f64 / mentioned as f64
+        },
+    }
+}
+
+/// LLaVA-Bench-like judge-free score: normalized token-level agreement of a
+/// candidate caption with a reference caption (teacher output stands in for
+/// the GPT-4 reference, per DESIGN.md §2).
+pub fn teacher_match_score(candidate: &str, reference: &str) -> f64 {
+    let cw: Vec<&str> = candidate.split_whitespace().collect();
+    let rw: Vec<&str> = reference.split_whitespace().collect();
+    if rw.is_empty() {
+        return if cw.is_empty() { 1.0 } else { 0.0 };
+    }
+    // bag-of-words F1
+    let mut matched = 0usize;
+    let mut used = vec![false; cw.len()];
+    for r in &rw {
+        if let Some(i) = cw.iter().enumerate()
+            .position(|(i, c)| !used[i] && c == r)
+        {
+            used[i] = true;
+            matched += 1;
+        }
+    }
+    if cw.is_empty() {
+        return 0.0;
+    }
+    let p = matched as f64 / cw.len() as f64;
+    let r = matched as f64 / rw.len() as f64;
+    if p + r == 0.0 { 0.0 } else { 2.0 * p * r / (p + r) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scene() -> Scene {
+        Scene { class: 0, color: 2, dense: true, phase: 0.0 }
+    }
+
+    #[test]
+    fn caption_contains_all_attributes() {
+        let mut rng = Rng::new(0);
+        let c = caption(&scene(), &mut rng);
+        assert!(c.contains("stripes"));
+        assert!(c.contains("blue"));
+        assert!(c.contains("dense"));
+    }
+
+    #[test]
+    fn perfect_caption_scores_perfectly() {
+        let mut rng = Rng::new(1);
+        let s = scene();
+        let c = caption(&s, &mut rng);
+        let sc = score_caption(&c, &s);
+        assert_eq!(sc.recall, 1.0);
+        assert_eq!(sc.hallucination, 0.0);
+    }
+
+    #[test]
+    fn wrong_color_is_hallucination() {
+        let s = scene();
+        let sc = score_caption("a dense red stripes pattern", &s);
+        assert!(sc.hallucination > 0.0);
+        assert!(sc.recall < 1.0);
+    }
+
+    #[test]
+    fn empty_caption_is_degenerate() {
+        let sc = score_caption("hello world", &scene());
+        assert_eq!(sc.recall, 0.0);
+        assert_eq!(sc.hallucination, 1.0);
+    }
+
+    #[test]
+    fn teacher_match_bounds() {
+        assert!((teacher_match_score("a b c", "a b c") - 1.0).abs() < 1e-9);
+        assert_eq!(teacher_match_score("x y z", "a b c"), 0.0);
+        let partial = teacher_match_score("a b z", "a b c");
+        assert!(partial > 0.0 && partial < 1.0);
+    }
+
+    #[test]
+    fn extract_facts_roundtrip() {
+        let f = extract_facts("a sparse purple rings texture");
+        assert_eq!(f.class, Some(2));
+        assert_eq!(f.color, Some("purple"));
+        assert_eq!(f.density, Some("sparse"));
+    }
+}

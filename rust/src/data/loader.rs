@@ -1,0 +1,147 @@
+//! Batching + shuffling over tokenized datasets: the host-side input
+//! pipeline feeding the AOT executables (i32 token buffers / f32 image
+//! buffers, row-major [B, ...]).
+
+use crate::rng::Rng;
+
+use super::tokenizer::Tokenizer;
+
+/// A tokenized text dataset with fixed-length rows.
+#[derive(Debug, Clone)]
+pub struct TextDataset {
+    pub rows: Vec<Vec<i32>>,
+    pub seq_len: usize,
+}
+
+impl TextDataset {
+    pub fn from_texts(texts: &[String], seq_len: usize) -> TextDataset {
+        let tok = Tokenizer::new();
+        TextDataset {
+            rows: texts
+                .iter()
+                .map(|t| tok.encode_padded(t, seq_len))
+                .collect(),
+            seq_len,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+/// Epoch-shuffling batcher producing flat row-major [B, T] buffers.
+/// Wraps around dataset boundaries so every batch is full-size (matching
+/// the fixed shapes baked into the AOT artifacts).
+pub struct Batcher {
+    order: Vec<usize>,
+    cursor: usize,
+    rng: Rng,
+    pub batch: usize,
+    pub epoch: usize,
+}
+
+impl Batcher {
+    pub fn new(n_rows: usize, batch: usize, seed: u64) -> Batcher {
+        assert!(n_rows > 0 && batch > 0);
+        let mut rng = Rng::new(seed);
+        let mut order: Vec<usize> = (0..n_rows).collect();
+        rng.shuffle(&mut order);
+        Batcher { order, cursor: 0, rng, batch, epoch: 0 }
+    }
+
+    /// Indices of the next batch (always exactly `batch` long).
+    pub fn next_indices(&mut self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            if self.cursor == self.order.len() {
+                self.rng.shuffle(&mut self.order);
+                self.cursor = 0;
+                self.epoch += 1;
+            }
+            out.push(self.order[self.cursor]);
+            self.cursor += 1;
+        }
+        out
+    }
+
+    /// Next token batch as a flat [B*T] buffer.
+    pub fn next_tokens(&mut self, ds: &TextDataset) -> Vec<i32> {
+        let idx = self.next_indices();
+        let mut out = Vec::with_capacity(self.batch * ds.seq_len);
+        for i in idx {
+            out.extend_from_slice(&ds.rows[i]);
+        }
+        out
+    }
+
+    /// Next batch gathered from per-row f32 features (e.g. images).
+    pub fn next_f32<T: AsRef<[f32]>>(&mut self, rows: &[T]) -> Vec<f32> {
+        let idx = self.next_indices();
+        let width = rows[0].as_ref().len();
+        let mut out = Vec::with_capacity(self.batch * width);
+        for i in idx {
+            debug_assert_eq!(rows[i].as_ref().len(), width);
+            out.extend_from_slice(rows[i].as_ref());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_are_fixed_length() {
+        let ds = TextDataset::from_texts(
+            &["hi".into(), "a much longer sentence here".into()], 12);
+        assert!(ds.rows.iter().all(|r| r.len() == 12));
+    }
+
+    #[test]
+    fn batches_full_size_and_cover_dataset() {
+        let mut b = Batcher::new(10, 4, 0);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..10 {
+            let idx = b.next_indices();
+            assert_eq!(idx.len(), 4);
+            seen.extend(idx);
+        }
+        assert_eq!(seen.len(), 10);
+        assert!(b.epoch >= 3);
+    }
+
+    #[test]
+    fn epoch_reshuffles() {
+        let mut b = Batcher::new(8, 8, 1);
+        let e1 = b.next_indices();
+        let e2 = b.next_indices();
+        assert_ne!(e1, e2); // reshuffled epochs differ (w.h.p. for seed 1)
+        let mut s1 = e1.clone();
+        let mut s2 = e2.clone();
+        s1.sort_unstable();
+        s2.sort_unstable();
+        assert_eq!(s1, s2);
+    }
+
+    #[test]
+    fn token_batch_layout() {
+        let ds = TextDataset::from_texts(&["ab".into(), "cd".into()], 6);
+        let mut b = Batcher::new(2, 2, 2);
+        let flat = b.next_tokens(&ds);
+        assert_eq!(flat.len(), 12);
+    }
+
+    #[test]
+    fn f32_batch_layout() {
+        let rows = vec![vec![1.0f32; 5], vec![2.0f32; 5], vec![3.0f32; 5]];
+        let mut b = Batcher::new(3, 2, 3);
+        let flat = b.next_f32(&rows);
+        assert_eq!(flat.len(), 10);
+    }
+}

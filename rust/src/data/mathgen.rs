@@ -1,0 +1,132 @@
+//! GSM8K-like synthetic corpus: templated multi-step arithmetic word
+//! problems with chain-of-thought answers.
+//!
+//! Stands in for GSM8K (DESIGN.md §2): the redundancy / routing experiments
+//! only need structured reasoning text whose token-level predictability
+//! varies across positions, which these problems provide (numbers are hard,
+//! connective text is easy — exactly the kind of signal token routers
+//! exploit).
+
+use crate::rng::Rng;
+
+const NAMES: &[&str] = &[
+    "Alice", "Ben", "Cara", "Dan", "Eve", "Finn", "Gia", "Hugo", "Ivy",
+    "Jack", "Kira", "Liam", "Mona", "Nate",
+];
+
+const ITEMS: &[&str] = &[
+    "apples", "books", "coins", "pens", "cards", "stones", "cakes",
+    "shells", "stamps", "marbles",
+];
+
+/// One generated problem: question text, chain-of-thought answer text, and
+/// the final numeric answer (for exact-match eval).
+#[derive(Debug, Clone)]
+pub struct Problem {
+    pub question: String,
+    pub answer: String,
+    pub result: i64,
+}
+
+impl Problem {
+    pub fn full_text(&self) -> String {
+        format!("Q: {} A: {}", self.question, self.answer)
+    }
+}
+
+/// Generate one multi-step problem (2–4 arithmetic steps).
+pub fn gen_problem(rng: &mut Rng) -> Problem {
+    let name1 = *rng.choose(NAMES);
+    let mut name2 = *rng.choose(NAMES);
+    while name2 == name1 {
+        name2 = *rng.choose(NAMES);
+    }
+    let item = *rng.choose(ITEMS);
+    let steps = rng.range(2, 4);
+
+    let a = rng.range(2, 20);
+    let mut total = a;
+    let mut q = format!("{name1} has {a} {item}.");
+    let mut cot = format!("{name1} starts with {a}.");
+
+    for s in 0..steps {
+        match rng.below(4) {
+            0 => {
+                let b = rng.range(2, 15);
+                total += b;
+                q.push_str(&format!(" {name2} gives {name1} {b} more."));
+                cot.push_str(&format!(" Then {} + {} = {}.", total - b, b, total));
+            }
+            1 if total >= 2 => {
+                let b = rng.range(1, total - 1);
+                total -= b;
+                q.push_str(&format!(" {name1} loses {b} of them."));
+                cot.push_str(&format!(" Then {} - {} = {}.", total + b, b, total));
+            }
+            2 => {
+                let b = rng.range(2, 4);
+                total *= b;
+                q.push_str(&format!(
+                    " {name1} then finds {b} times what they had."));
+                cot.push_str(&format!(" Then {} * {} = {}.", total / b, b, total));
+            }
+            _ => {
+                let b = rng.range(2, 4);
+                let before = total;
+                total /= b;
+                q.push_str(&format!(
+                    " {name1} splits them into {b} equal groups and keeps one."));
+                cot.push_str(&format!(" Then {before} / {b} = {total}."));
+            }
+        }
+        if s == steps - 1 {
+            q.push_str(&format!(" How many {item} does {name1} have?"));
+        }
+    }
+    cot.push_str(&format!(" The answer is {total}."));
+    Problem { question: q, answer: cot, result: total }
+}
+
+/// A deterministic dataset of `n` problems from `seed`.
+pub fn dataset(n: usize, seed: u64) -> Vec<Problem> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| gen_problem(&mut rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = dataset(5, 1);
+        let b = dataset(5, 1);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.full_text(), y.full_text());
+            assert_eq!(x.result, y.result);
+        }
+    }
+
+    #[test]
+    fn answers_are_consistent() {
+        for p in dataset(50, 2) {
+            assert!(p.answer.contains(&format!("The answer is {}.", p.result)));
+            assert!(p.result >= 0, "negative count: {}", p.result);
+        }
+    }
+
+    #[test]
+    fn text_is_printable_ascii() {
+        for p in dataset(50, 3) {
+            assert!(p.full_text().bytes().all(|b| (32..127).contains(&b)));
+        }
+    }
+
+    #[test]
+    fn problems_vary() {
+        let d = dataset(20, 4);
+        let uniq: std::collections::HashSet<_> =
+            d.iter().map(|p| p.question.clone()).collect();
+        assert!(uniq.len() > 15);
+    }
+}

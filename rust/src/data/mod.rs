@@ -1,0 +1,14 @@
+//! Data substrates: tokenizer + synthetic corpora standing in for the
+//! paper's gated datasets (GSM8K, HumanEval, ImageNet-1K, LLaVA-Instruct) —
+//! see DESIGN.md §2 for the substitution rationale.
+
+pub mod tokenizer;
+pub mod mathgen;
+pub mod codegen;
+pub mod textgen;
+pub mod imagen;
+pub mod capgen;
+pub mod loader;
+
+pub use loader::{Batcher, TextDataset};
+pub use tokenizer::Tokenizer;

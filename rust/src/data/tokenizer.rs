@@ -1,0 +1,117 @@
+//! Byte-level tokenizer shared (by construction) with the JAX side.
+//!
+//! Vocabulary = 256: raw bytes, with the 0/1/2 control bytes repurposed as
+//! PAD/BOS/EOS (they never occur in the synthetic corpora, which are
+//! printable ASCII).  Identical logic needs no cross-language code: the
+//! Python side never tokenizes — Rust feeds token ids straight into the
+//! AOT executables.
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const VOCAB: usize = 256;
+
+#[derive(Debug, Clone, Default)]
+pub struct Tokenizer;
+
+impl Tokenizer {
+    pub fn new() -> Tokenizer {
+        Tokenizer
+    }
+
+    /// Encode text to token ids (no specials added).  Control bytes < 3 are
+    /// mapped to spaces to keep the PAD/BOS/EOS ids unambiguous.
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.bytes()
+            .map(|b| if b < 3 { b' ' as i32 } else { b as i32 })
+            .collect()
+    }
+
+    /// BOS + text + EOS, truncated/padded to `len`.
+    pub fn encode_padded(&self, text: &str, len: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(len);
+        out.push(BOS);
+        out.extend(self.encode(text));
+        out.truncate(len.saturating_sub(1));
+        out.push(EOS);
+        while out.len() < len {
+            out.push(PAD);
+        }
+        out
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .filter(|&&i| i >= 3 && i < VOCAB as i32)
+            .map(|&i| i as u8 as char)
+            .collect()
+    }
+
+    /// Decode stopping at the first EOS/PAD (generation output).
+    pub fn decode_until_eos(&self, ids: &[i32]) -> String {
+        let end = ids
+            .iter()
+            .position(|&i| i == EOS || i == PAD)
+            .unwrap_or(ids.len());
+        self.decode(&ids[..end])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = Tokenizer::new();
+        let s = "Alice has 3 apples + 4 = 7.";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn padded_layout() {
+        let t = Tokenizer::new();
+        let ids = t.encode_padded("hi", 8);
+        assert_eq!(ids.len(), 8);
+        assert_eq!(ids[0], BOS);
+        assert_eq!(ids[3], EOS);
+        assert!(ids[4..].iter().all(|&i| i == PAD));
+    }
+
+    #[test]
+    fn truncation_keeps_eos() {
+        let t = Tokenizer::new();
+        let ids = t.encode_padded("abcdefghij", 6);
+        assert_eq!(ids.len(), 6);
+        assert_eq!(ids[0], BOS);
+        assert_eq!(*ids.last().unwrap(), EOS);
+    }
+
+    #[test]
+    fn control_bytes_sanitized() {
+        let t = Tokenizer::new();
+        let ids = t.encode("a\u{0}b\u{1}c");
+        assert!(ids.iter().all(|&i| i >= 3));
+    }
+
+    #[test]
+    fn decode_until_eos_stops() {
+        let t = Tokenizer::new();
+        let mut ids = t.encode("hello");
+        ids.push(EOS);
+        ids.extend(t.encode("junk"));
+        assert_eq!(t.decode_until_eos(&ids), "hello");
+    }
+
+    #[test]
+    fn roundtrip_random_printable() {
+        let t = Tokenizer::new();
+        let mut rng = crate::rng::Rng::new(0);
+        for _ in 0..50 {
+            let s: String = (0..40)
+                .map(|_| (rng.range(32, 126) as u8) as char)
+                .collect();
+            assert_eq!(t.decode(&t.encode(&s)), s);
+        }
+    }
+}

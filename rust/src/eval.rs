@@ -1,0 +1,160 @@
+//! Host-side evaluation metrics over executable outputs.
+//!
+//! Mirrors Appendix A's metrics exactly: ΔLM-loss, top-1 token prediction
+//! agreement, plus the ViT cosine-similarity and the caption metrics that
+//! `data::capgen` grounds.  Everything operates on flat row-major buffers
+//! as returned by the PJRT runtime.
+
+use anyhow::{bail, Result};
+
+use crate::data::tokenizer::PAD;
+
+/// Top-1 agreement between two logit tensors [B, T, V] on non-pad targets,
+/// computed over *predictive* positions (logits at t predict targets[t+1]),
+/// matching Appendix A.3.
+pub fn top1_match(logits_a: &[f32], logits_b: &[f32], tokens: &[i32],
+                  b: usize, t: usize, v: usize) -> Result<f64> {
+    if logits_a.len() != b * t * v || logits_b.len() != b * t * v
+        || tokens.len() != b * t {
+        bail!("top1_match: shape mismatch");
+    }
+    let mut matched = 0usize;
+    let mut total = 0usize;
+    for bi in 0..b {
+        for ti in 0..t - 1 {
+            let target = tokens[bi * t + ti + 1];
+            if target == PAD {
+                continue;
+            }
+            let off = (bi * t + ti) * v;
+            let am = argmax(&logits_a[off..off + v]);
+            let bm = argmax(&logits_b[off..off + v]);
+            total += 1;
+            if am == bm {
+                matched += 1;
+            }
+        }
+    }
+    Ok(if total == 0 { 1.0 } else { matched as f64 / total as f64 })
+}
+
+/// Next-token cross-entropy of logits [B, T, V] against tokens (pad-masked);
+/// the host-side mirror of `losses.cross_entropy` (used to cross-check the
+/// in-graph loss outputs).
+pub fn cross_entropy(logits: &[f32], tokens: &[i32], b: usize, t: usize,
+                     v: usize) -> Result<f64> {
+    if logits.len() != b * t * v || tokens.len() != b * t {
+        bail!("cross_entropy: shape mismatch");
+    }
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for bi in 0..b {
+        for ti in 0..t - 1 {
+            let target = tokens[bi * t + ti + 1];
+            if target == PAD {
+                continue;
+            }
+            let row = &logits[(bi * t + ti) * v..(bi * t + ti + 1) * v];
+            total += -log_softmax_at(row, target as usize);
+            count += 1;
+        }
+    }
+    Ok(if count == 0 { 0.0 } else { total / count as f64 })
+}
+
+fn log_softmax_at(row: &[f32], idx: usize) -> f64 {
+    let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b)) as f64;
+    let lse: f64 = row.iter().map(|&x| ((x as f64) - mx).exp()).sum::<f64>().ln() + mx;
+    row[idx] as f64 - lse
+}
+
+fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in row.iter().enumerate() {
+        if x > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Greedy next token at position `pos` of sequence `bi` from logits [B,T,V].
+pub fn greedy_token(logits: &[f32], bi: usize, pos: usize, t: usize,
+                    v: usize) -> i32 {
+    argmax(&logits[(bi * t + pos) * v..(bi * t + pos + 1) * v]) as i32
+}
+
+/// Mean cosine similarity between two [N, D] token-embedding buffers,
+/// averaged over rows (the Fig. 7 / Fig. 8 metric).
+pub fn mean_cosine(a: &[f32], b: &[f32], n: usize, d: usize) -> Result<f64> {
+    if a.len() != n * d || b.len() != n * d {
+        bail!("mean_cosine: shape mismatch");
+    }
+    let mut acc = 0.0f64;
+    for i in 0..n {
+        let (x, y) = (&a[i * d..(i + 1) * d], &b[i * d..(i + 1) * d]);
+        let dot: f64 = x.iter().zip(y).map(|(p, q)| (*p as f64) * (*q as f64)).sum();
+        let nx: f64 = x.iter().map(|p| (*p as f64).powi(2)).sum::<f64>().sqrt();
+        let ny: f64 = y.iter().map(|p| (*p as f64).powi(2)).sum::<f64>().sqrt();
+        acc += if nx * ny > 0.0 { dot / (nx * ny) } else { 0.0 };
+    }
+    Ok(acc / n as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top1_match_identical_is_one() {
+        let (b, t, v) = (1, 3, 4);
+        let logits = vec![0.1, 0.9, 0.0, 0.0,
+                          0.0, 0.0, 1.0, 0.0,
+                          0.5, 0.0, 0.0, 0.0];
+        let tokens = vec![3, 1, 2];
+        let m = top1_match(&logits, &logits, &tokens, b, t, v).unwrap();
+        assert_eq!(m, 1.0);
+    }
+
+    #[test]
+    fn top1_match_ignores_pad() {
+        let (b, t, v) = (1, 3, 2);
+        let a = vec![1.0, 0.0, 1.0, 0.0, 1.0, 0.0];
+        let c = vec![0.0, 1.0, 1.0, 0.0, 1.0, 0.0];
+        // target at pos1 = tokens[2] = PAD -> only pos0 counts
+        let tokens = vec![3, 4, 0];
+        let m = top1_match(&a, &c, &tokens, b, t, v).unwrap();
+        assert_eq!(m, 0.0);
+    }
+
+    #[test]
+    fn cross_entropy_matches_uniform() {
+        let (b, t, v) = (1, 2, 4);
+        let logits = vec![0.0; b * t * v];
+        let tokens = vec![3, 2];
+        let ce = cross_entropy(&logits, &tokens, b, t, v).unwrap();
+        assert!((ce - (4.0f64).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_perfect_and_orthogonal() {
+        let a = vec![1.0, 0.0, 0.0, 1.0];
+        let b = vec![2.0, 0.0, 0.0, 3.0];
+        assert!((mean_cosine(&a, &b, 2, 2).unwrap() - 1.0).abs() < 1e-9);
+        let c = vec![0.0, 1.0, 1.0, 0.0];
+        assert!(mean_cosine(&a, &c, 2, 2).unwrap().abs() < 1e-9);
+    }
+
+    #[test]
+    fn shape_validation() {
+        assert!(top1_match(&[0.0; 4], &[0.0; 4], &[0; 3], 1, 2, 2).is_err());
+        assert!(mean_cosine(&[0.0; 4], &[0.0; 5], 2, 2).is_err());
+    }
+
+    #[test]
+    fn greedy_token_picks_argmax() {
+        let logits = vec![0.0, 3.0, 1.0,   2.0, 0.0, 1.0];
+        assert_eq!(greedy_token(&logits, 0, 0, 2, 3), 1);
+        assert_eq!(greedy_token(&logits, 0, 1, 2, 3), 0);
+    }
+}

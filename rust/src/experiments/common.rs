@@ -1,0 +1,259 @@
+//! Shared experiment context: artifact/runtime loading, teacher
+//! provisioning (pretrain-once-and-cache), eval-set construction and the
+//! result-file conventions every figure driver uses.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::checkpoint::Checkpoint;
+use crate::coordinator::trainer::{BatchArg, Caps, Trainer};
+use crate::data::{imagen, mathgen, textgen, Batcher, TextDataset};
+use crate::data::capgen;
+use crate::metrics::write_file;
+use crate::rng::Rng;
+use crate::runtime::client::Arg;
+use crate::runtime::Runtime;
+
+pub fn artifacts_dir() -> String {
+    std::env::var("ELASTIFORMER_ARTIFACTS").unwrap_or_else(|_| {
+        // works from the repo root and from target/ subdirs
+        for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+            if Path::new(cand).join("lm_tiny/manifest.json").exists() {
+                return cand.to_string();
+            }
+        }
+        "artifacts".to_string()
+    })
+}
+
+pub fn results_dir() -> PathBuf {
+    PathBuf::from(
+        std::env::var("ELASTIFORMER_RESULTS")
+            .unwrap_or_else(|_| "results".to_string()),
+    )
+}
+
+/// Write both .md and .csv renderings of a results table.
+pub fn save_table(name: &str, table: &crate::bench::Table, note: &str)
+                  -> Result<()> {
+    let dir = results_dir();
+    let md = format!("# {name}\n\n{note}\n\n{}", table.to_markdown());
+    write_file(dir.join(format!("{name}.md")), &md)?;
+    write_file(dir.join(format!("{name}.csv")), &table.to_csv())?;
+    Ok(())
+}
+
+/// Experiment context for one artifact config.
+pub struct Ctx {
+    pub rt: Runtime,
+    pub seed: u64,
+}
+
+impl Ctx {
+    pub fn load(config: &str, seed: u64) -> Result<Ctx> {
+        let rt = Runtime::load(&artifacts_dir(), config)
+            .with_context(|| format!("loading artifacts for {config}"))?;
+        Ok(Ctx { rt, seed })
+    }
+
+    fn ckpt_path(&self, kind: &str) -> PathBuf {
+        results_dir()
+            .join("ckpt")
+            .join(format!("{}_{kind}.bin", self.rt.manifest.name()))
+    }
+
+    /// Teacher params: load the cached checkpoint if its provenance
+    /// matches, otherwise pretrain `steps` steps on the synthetic corpus
+    /// and cache.  All experiments for a config share this teacher, like
+    /// the paper's shared pretrained base model.
+    pub fn teacher(&self, steps: usize) -> Result<Vec<f32>> {
+        let path = self.ckpt_path(&format!("teacher_s{steps}"));
+        let expect_n = self.rt.manifest.teacher_params.total();
+        if let Ok(ck) = Checkpoint::load(&path) {
+            if ck.expect(self.rt.manifest.name(), "teacher", expect_n).is_ok() {
+                return Ok(ck.params);
+            }
+        }
+        let kind = self.rt.manifest.kind().to_string();
+        eprintln!("[ctx] pretraining {} teacher for {steps} steps ...",
+                  self.rt.manifest.name());
+        let params = match kind.as_str() {
+            "lm" => self.pretrain_lm(steps)?,
+            "vit" => self.pretrain_vit(steps)?,
+            "vlm" => self.pretrain_vlm(steps)?,
+            k => anyhow::bail!("unknown model kind {k}"),
+        };
+        Checkpoint::new(self.rt.manifest.name(), "teacher", steps as u64,
+                        params.clone())
+            .save(&path)?;
+        Ok(params)
+    }
+
+    fn pretrain_lm(&self, steps: usize) -> Result<Vec<f32>> {
+        let mut trainer = Trainer::new(&self.rt);
+        let init = trainer.init_params("init", self.seed as i32)?;
+        let b = self.rt.manifest.batch();
+        let t = self.rt.manifest.seq_len();
+        let ds = TextDataset::from_texts(
+            &textgen::dataset(2000, self.seed ^ 0x7e47), t);
+        let mut batcher = Batcher::new(ds.len(), b, self.seed ^ 1);
+        let (params, losses) = trainer.pretrain(
+            "pretrain_step", init, steps, 3e-3,
+            || vec![BatchArg::Tokens(batcher.next_tokens(&ds))])?;
+        eprintln!("[ctx] lm pretrain: loss {:.3} -> {:.3}",
+                  losses.first().unwrap_or(&0.0),
+                  losses.last().unwrap_or(&0.0));
+        Ok(params)
+    }
+
+    fn pretrain_vit(&self, steps: usize) -> Result<Vec<f32>> {
+        let mut trainer = Trainer::new(&self.rt);
+        let init = trainer.init_params("init", self.seed as i32)?;
+        let b = self.rt.manifest.batch();
+        let size = self.rt.manifest.cfg_usize("img_size")?;
+        let imgs: Vec<Vec<f32>> = imagen::dataset(800, size, None,
+                                                  self.seed ^ 0x1147)
+            .into_iter()
+            .map(|(im, _)| im)
+            .collect();
+        let mut batcher = Batcher::new(imgs.len(), b, self.seed ^ 2);
+        let (params, losses) = trainer.pretrain(
+            "pretrain_step", init, steps, 3e-3,
+            || vec![BatchArg::Floats(batcher.next_f32(&imgs))])?;
+        eprintln!("[ctx] vit pretrain: loss {:.4} -> {:.4}",
+                  losses.first().unwrap_or(&0.0),
+                  losses.last().unwrap_or(&0.0));
+        Ok(params)
+    }
+
+    fn pretrain_vlm(&self, steps: usize) -> Result<Vec<f32>> {
+        let mut trainer = Trainer::new(&self.rt);
+        let init = trainer.init_params("init", self.seed as i32)?;
+        let b = self.rt.manifest.batch();
+        let (imgs, caps) = vlm_dataset(&self.rt, 800, self.seed ^ 0x9a21)?;
+        let mut batcher = Batcher::new(imgs.len(), b, self.seed ^ 3);
+        let (params, losses) = trainer.pretrain(
+            "pretrain_step", init, steps, 3e-3, || {
+                let idx = batcher.next_indices();
+                let mut fi = Vec::new();
+                let mut ft = Vec::new();
+                for &i in &idx {
+                    fi.extend_from_slice(&imgs[i]);
+                    ft.extend_from_slice(&caps[i]);
+                }
+                vec![BatchArg::Floats(fi), BatchArg::Tokens(ft)]
+            })?;
+        eprintln!("[ctx] vlm pretrain: loss {:.3} -> {:.3}",
+                  losses.first().unwrap_or(&0.0),
+                  losses.last().unwrap_or(&0.0));
+        Ok(params)
+    }
+
+    /// Router init via the AOT entry (e.g. "router_init_r0").
+    pub fn router_init(&self, entry: &str, seed: i32) -> Result<Vec<f32>> {
+        Trainer::new(&self.rt).init_params(entry, seed)
+    }
+
+    /// Held-out LM eval batches (flat [B*T] token rows) from a generator.
+    pub fn lm_eval_batches(&self, texts: &[String], n_batches: usize,
+                           seed: u64) -> Vec<Vec<i32>> {
+        let b = self.rt.manifest.batch();
+        let t = self.rt.manifest.seq_len();
+        let ds = TextDataset::from_texts(texts, t);
+        let mut batcher = Batcher::new(ds.len(), b, seed);
+        (0..n_batches).map(|_| batcher.next_tokens(&ds)).collect()
+    }
+
+    /// Mean elastic LM loss over eval batches (mode matches the paper's
+    /// training-phase top-k selection for scaling figures).
+    #[allow(clippy::too_many_arguments)]
+    pub fn lm_elastic_loss(&self, entry: &str, params: &[f32], router: &[f32],
+                           batches: &[Vec<i32>], caps: Caps,
+                           layer_en: &[f32], mode: f32) -> Result<f64> {
+        let mut acc = 0.0f64;
+        for tokens in batches {
+            let out = self.rt.exec(entry, &[
+                Arg::F32(params),
+                Arg::F32(router),
+                Arg::I32(tokens),
+                Arg::F32(&caps.0),
+                Arg::F32(layer_en),
+                Arg::ScalarF32(mode),
+            ])?;
+            acc += out.scalar_f32(1)? as f64;
+        }
+        Ok(acc / batches.len() as f64)
+    }
+
+    /// Mean teacher LM loss over eval batches (no pruning).
+    pub fn lm_teacher_loss(&self, params: &[f32], batches: &[Vec<i32>])
+                           -> Result<f64> {
+        let l = self.rt.manifest.n_layers();
+        let h = self.rt.manifest.n_heads();
+        let head_mask = vec![1.0f32; l * h];
+        let ones = vec![1.0f32; l];
+        let mut acc = 0.0f64;
+        for tokens in batches {
+            let out = self.rt.exec("teacher_forward", &[
+                Arg::F32(params),
+                Arg::I32(tokens),
+                Arg::F32(&head_mask),
+                Arg::F32(&ones),
+                Arg::F32(&ones),
+            ])?;
+            acc += out.scalar_f32(1)? as f64;
+        }
+        Ok(acc / batches.len() as f64)
+    }
+}
+
+/// Paired (image, caption-token) VLM dataset with scenes recoverable by
+/// seed (the Fig. 9 eval regenerates scenes from the same seed).
+pub fn vlm_dataset(rt: &Runtime, n: usize, seed: u64)
+                   -> Result<(Vec<Vec<f32>>, Vec<Vec<i32>>)> {
+    let size = rt.manifest.cfg_usize("img_size")?;
+    let text_len = rt.manifest.cfg_usize("text_len")?;
+    let tok = crate::data::Tokenizer::new();
+    let mut rng = Rng::new(seed);
+    let mut imgs = Vec::with_capacity(n);
+    let mut texts = Vec::with_capacity(n);
+    for (img, scene) in imagen::dataset(n, size, None, seed) {
+        let cap = capgen::caption(&scene, &mut rng);
+        imgs.push(img);
+        texts.push(tok.encode_padded(&cap, text_len));
+    }
+    Ok((imgs, texts))
+}
+
+/// The scenes matching `vlm_dataset(rt, n, seed)` (same seed => same scenes).
+pub fn vlm_scenes(rt: &Runtime, n: usize, seed: u64)
+                  -> Result<Vec<imagen::Scene>> {
+    let size = rt.manifest.cfg_usize("img_size")?;
+    Ok(imagen::dataset(n, size, None, seed)
+        .into_iter()
+        .map(|(_, s)| s)
+        .collect())
+}
+
+/// Eval text corpora for Fig. 2 / Fig. 5 (held-out seeds).
+pub fn gsm_eval_texts(n: usize) -> Vec<String> {
+    mathgen::dataset(n, 0xEEE1)
+        .into_iter()
+        .map(|p| p.full_text())
+        .collect()
+}
+
+pub fn code_eval_texts(n: usize) -> Vec<String> {
+    crate::data::codegen::dataset(n, 0xEEE2)
+        .into_iter()
+        .map(|s| s.full_text())
+        .collect()
+}
+
+pub fn gsm_train_texts(n: usize, seed: u64) -> Vec<String> {
+    mathgen::dataset(n, seed)
+        .into_iter()
+        .map(|p| p.full_text())
+        .collect()
+}

@@ -1,0 +1,139 @@
+//! Figure 7 — Elasti-ViT: capacity scaling with all-layer vs even-layer
+//! routing.
+//!
+//! The ViT-MAE stand-in (autoencoder teacher, see DESIGN.md §2) is routed
+//! per scheme and capacity; the metric is cosine similarity between the
+//! frozen decoder's outputs on student vs teacher encodings, with 0.95 as
+//! the paper's recovery threshold.  Even-layer routing (half the layers
+//! dense) should dominate all-layer routing at equal capacity.
+
+use anyhow::Result;
+
+use crate::bench::{fmt_f, Table};
+use crate::coordinator::trainer::{layer_enable, Caps, Trainer};
+use crate::data::{imagen, Batcher};
+use crate::runtime::client::Arg;
+
+use super::common::{self, Ctx};
+use super::fig5::Scheme;
+
+pub struct Fig7Opts {
+    pub config: String,
+    pub pretrain_steps: usize,
+    pub distill_steps: usize,
+    pub eval_batches: usize,
+    pub caps: Vec<f64>,
+    pub seed: u64,
+}
+
+impl Default for Fig7Opts {
+    fn default() -> Self {
+        Fig7Opts {
+            config: "vit_tiny".into(),
+            pretrain_steps: 250,
+            distill_steps: 60,
+            eval_batches: 3,
+            caps: vec![0.25, 0.5, 0.75],
+            seed: 42,
+        }
+    }
+}
+
+/// Mean decoder-output cosine similarity over eval image batches.
+pub fn vit_cosine(ctx: &Ctx, params: &[f32], router: &[f32],
+                  batches: &[Vec<f32>], caps: Caps, layer_en: &[f32],
+                  mode: f32) -> Result<f64> {
+    let b = ctx.rt.manifest.batch();
+    let mut acc = 0.0f64;
+    for images in batches {
+        let out = ctx.rt.exec("elastic_forward", &[
+            Arg::F32(params),
+            Arg::F32(router),
+            Arg::F32(images),
+            Arg::F32(&caps.0),
+            Arg::F32(layer_en),
+            Arg::ScalarF32(mode),
+        ])?;
+        let cos = out.f32(3)?; // [B]
+        acc += cos.iter().map(|&c| c as f64).sum::<f64>() / b as f64;
+    }
+    Ok(acc / batches.len() as f64)
+}
+
+/// Train a ViT router at `caps`/`layer_en`, return (cosine, router).
+#[allow(clippy::too_many_arguments)]
+pub fn distill_and_eval_vit(ctx: &Ctx, teacher: &[f32], steps: usize,
+                            caps: Caps, layer_en: &[f32],
+                            train_class: Option<usize>,
+                            eval_batches: &[Vec<f32>], seed: u64)
+                            -> Result<(f64, Vec<f32>)> {
+    let router = ctx.router_init("router_init", seed as i32)?;
+    let b = ctx.rt.manifest.batch();
+    let size = ctx.rt.manifest.cfg_usize("img_size")?;
+    let imgs: Vec<Vec<f32>> =
+        imagen::dataset(400, size, train_class, seed ^ 0x7114)
+            .into_iter()
+            .map(|(im, _)| im)
+            .collect();
+    let mut batcher = Batcher::new(imgs.len(), b, seed ^ 6);
+    let mut trainer = Trainer::new(&ctx.rt);
+    let (router, _) = trainer.distill_vit(
+        "distill_step", teacher, router, steps, 1e-3, caps, layer_en,
+        || batcher.next_f32(&imgs))?;
+    let cos = vit_cosine(ctx, teacher, &router, eval_batches, caps,
+                         layer_en, 0.0)?;
+    Ok((cos, router))
+}
+
+pub fn eval_image_batches(ctx: &Ctx, n_batches: usize, seed: u64)
+                          -> Result<Vec<Vec<f32>>> {
+    let b = ctx.rt.manifest.batch();
+    let size = ctx.rt.manifest.cfg_usize("img_size")?;
+    let imgs: Vec<Vec<f32>> = imagen::dataset(n_batches * b, size, None, seed)
+        .into_iter()
+        .map(|(im, _)| im)
+        .collect();
+    let mut batcher = Batcher::new(imgs.len(), b, seed ^ 7);
+    Ok((0..n_batches).map(|_| batcher.next_f32(&imgs)).collect())
+}
+
+pub fn run(opts: &Fig7Opts) -> Result<Table> {
+    let ctx = Ctx::load(&opts.config, opts.seed)?;
+    let teacher = ctx.teacher(opts.pretrain_steps)?;
+    let l = ctx.rt.manifest.n_layers();
+    let eval_batches = eval_image_batches(&ctx, opts.eval_batches, 0xE7A1)?;
+
+    let mut table = Table::new(&[
+        "layers", "scheme", "capacity", "decoder_cosine", "above_0.95",
+    ]);
+    for layers in ["all", "even"] {
+        let layer_en = layer_enable(l, layers)?;
+        for scheme in Scheme::ALL {
+            for &c in &opts.caps {
+                let caps = scheme.caps(c as f32);
+                let (cos, _) = distill_and_eval_vit(
+                    &ctx, &teacher, opts.distill_steps, caps, &layer_en,
+                    None, &eval_batches,
+                    opts.seed ^ (c * 997.0) as u64
+                        ^ ((layers == "even") as u64) << 32)?;
+                println!("[fig7] {layers}/{} cap={c:.2}: cosine {cos:.4}",
+                         scheme.name());
+                table.row(vec![
+                    layers.into(),
+                    scheme.name().into(),
+                    fmt_f(c, 3),
+                    fmt_f(cos, 4),
+                    (if cos > 0.95 { "yes" } else { "no" }).into(),
+                ]);
+            }
+        }
+    }
+    common::save_table(
+        "fig7_elasti_vit_scaling", &table,
+        "Paper Fig. 7: Elasti-ViT decoder-output cosine similarity vs \
+         capacity, all-layer vs even-layer routing (0.95 = recovery \
+         threshold). Expected shape: even-layer routing achieves higher \
+         cosine at the same per-layer capacity, and input/MLP token routing \
+         is the most tolerant scheme.")?;
+    Ok(table)
+}

@@ -1,0 +1,133 @@
+//! Figure 8 — robustness of learned routing across training domains.
+//!
+//! Ten Elasti-ViT router instances are trained, each on a single image
+//! class (the ImageNet-subset stand-in); their MLP-token router scores on a
+//! shared held-out image set form activation vectors whose 10x10 pairwise
+//! cosine matrix the paper plots, plus per-image patch-selection heatmaps
+//! across instances.
+
+use anyhow::Result;
+
+use crate::analysis::similarity::{ascii_heatmap, cosine_matrix, mask_iou};
+use crate::bench::{fmt_f, Table};
+use crate::coordinator::trainer::Caps;
+use crate::data::imagen;
+use crate::metrics::write_file;
+use crate::runtime::client::Arg;
+
+use super::common::{self, Ctx};
+use super::fig7::distill_and_eval_vit;
+
+pub struct Fig8Opts {
+    pub config: String,
+    pub pretrain_steps: usize,
+    pub distill_steps: usize,
+    pub capacity: f64,
+    pub n_classes: usize,
+    pub seed: u64,
+}
+
+impl Default for Fig8Opts {
+    fn default() -> Self {
+        Fig8Opts {
+            config: "vit_tiny".into(),
+            pretrain_steps: 250,
+            distill_steps: 40,
+            capacity: 0.5,
+            n_classes: 10,
+            seed: 42,
+        }
+    }
+}
+
+/// Router activations of one instance on one eval batch:
+/// (flattened s_mlp scores over [L,N] per image, mask of layer 0).
+fn router_activations(ctx: &Ctx, teacher: &[f32], router: &[f32],
+                      images: &[f32], caps: Caps, layer_en: &[f32])
+                      -> Result<(Vec<f32>, Vec<f32>)> {
+    let out = ctx.rt.exec("elastic_forward", &[
+        Arg::F32(teacher),
+        Arg::F32(router),
+        Arg::F32(images),
+        Arg::F32(&caps.0),
+        Arg::F32(layer_en),
+        Arg::ScalarF32(0.0),
+    ])?;
+    let scores = out.f32(4)?; // s_mlp [B, L, N]
+    let masks = out.f32(5)?;  // m_mlp [B, L, N]
+    let b = ctx.rt.manifest.batch();
+    let l = ctx.rt.manifest.n_layers();
+    let n = scores.len() / (b * l);
+    // first image, first layer mask -> heatmap
+    let heat = masks[..n].to_vec();
+    Ok((scores, heat))
+}
+
+pub fn run(opts: &Fig8Opts) -> Result<(Table, String)> {
+    let ctx = Ctx::load(&opts.config, opts.seed)?;
+    let teacher = ctx.teacher(opts.pretrain_steps)?;
+    let l = ctx.rt.manifest.n_layers();
+    let layer_en = vec![1.0f32; l];
+    let caps = Caps([1.0, opts.capacity as f32, 1.0, 1.0]);
+
+    // shared held-out eval batch (mixed classes)
+    let eval = super::fig7::eval_image_batches(&ctx, 1, 0xE8A2)?;
+    let eval_imgs = &eval[0];
+    let n_classes = opts.n_classes.min(imagen::NUM_CLASSES);
+
+    let mut activations = Vec::with_capacity(n_classes);
+    let mut heatmaps = Vec::with_capacity(n_classes);
+    for class in 0..n_classes {
+        let (cos, router) = distill_and_eval_vit(
+            &ctx, &teacher, opts.distill_steps, caps, &layer_en,
+            Some(class), &eval, opts.seed ^ (class as u64) << 8)?;
+        let (act, heat) = router_activations(&ctx, &teacher, &router,
+                                             eval_imgs, caps, &layer_en)?;
+        println!("[fig8] router trained on {:12}: eval cosine {cos:.4}",
+                 imagen::CLASS_NAMES[class]);
+        activations.push(act);
+        heatmaps.push(heat);
+    }
+
+    let matrix = cosine_matrix(&activations)?;
+    let mut table = Table::new(
+        &std::iter::once("trained_on")
+            .chain(imagen::CLASS_NAMES.iter().copied().take(n_classes))
+            .collect::<Vec<_>>());
+    for (i, row) in matrix.iter().enumerate() {
+        let mut cells = vec![imagen::CLASS_NAMES[i].to_string()];
+        cells.extend(row.iter().map(|v| fmt_f(*v, 3)));
+        table.row(cells);
+    }
+
+    // patch heatmaps for the first eval image across instances + IoUs
+    let side = (heatmaps[0].len() as f64).sqrt() as usize;
+    let mut report = String::from(
+        "# fig8 patch-selection heatmaps (first eval image)\n\n");
+    let mut mean_iou = 0.0;
+    let mut n_pairs = 0usize;
+    for (i, heat) in heatmaps.iter().enumerate() {
+        report.push_str(&format!("router trained on {}:\n```\n{}```\n",
+                                 imagen::CLASS_NAMES[i],
+                                 ascii_heatmap(heat, side)?));
+        for other in heatmaps.iter().skip(i + 1) {
+            mean_iou += mask_iou(heat, other)?;
+            n_pairs += 1;
+        }
+    }
+    if n_pairs > 0 {
+        mean_iou /= n_pairs as f64;
+    }
+    report.push_str(&format!(
+        "\nmean pairwise selection IoU across instances: {mean_iou:.3}\n"));
+
+    common::save_table(
+        "fig8_router_similarity", &table,
+        "Paper Fig. 8 (left): pairwise cosine similarity of router logits \
+         across Elasti-ViT instances trained on different image classes. \
+         Expected shape: uniformly high similarity (routing is robust to \
+         the training domain), with visually-related classes slightly more \
+         similar.")?;
+    write_file(common::results_dir().join("fig8_heatmaps.md"), &report)?;
+    Ok((table, report))
+}

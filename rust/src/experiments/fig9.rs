@@ -1,0 +1,175 @@
+//! Figure 9 — Elasti-VLM: image-token capacity vs caption quality,
+//! linear vs MLP router.
+//!
+//! The VLM teacher (vision tower -> projector -> LM decoder) is distilled
+//! with an image-token selection router at each capacity; evaluation
+//! generates captions at inference-time routing (0.5 threshold) and scores
+//! them with (a) the LLaVA-Bench stand-in — teacher-match F1 with a 95%
+//! bootstrap CI over 100 resamples, exactly the paper's protocol — and
+//! (b) the OpenCHAIR stand-in — exact attribute recall / hallucination
+//! against the generator's ground-truth scenes.
+
+use anyhow::Result;
+
+use crate::bench::{fmt_f, Table};
+use crate::coordinator::generation::generate_vlm;
+use crate::coordinator::trainer::Trainer;
+use crate::data::capgen;
+use crate::metrics::bootstrap_ci;
+use crate::rng::Rng;
+
+use super::common::{self, vlm_dataset, vlm_scenes, Ctx};
+
+pub struct Fig9Opts {
+    pub config: String,
+    pub pretrain_steps: usize,
+    pub distill_steps: usize,
+    pub caps: Vec<f64>,
+    pub n_eval_images: usize,
+    pub seed: u64,
+}
+
+impl Default for Fig9Opts {
+    fn default() -> Self {
+        Fig9Opts {
+            config: "vlm_tiny".into(),
+            pretrain_steps: 400,
+            distill_steps: 60,
+            caps: vec![0.25, 0.5, 0.75, 1.0],
+            n_eval_images: 32,
+            seed: 42,
+        }
+    }
+}
+
+struct EvalScores {
+    match_mean: f64,
+    match_lo: f64,
+    match_hi: f64,
+    recall: f64,
+    halluc: f64,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn eval_captions(ctx: &Ctx, entry_fwd: &str, teacher: &[f32], router: &[f32],
+                 capacity: f32, eval_imgs: &[Vec<f32>],
+                 scenes: &[crate::data::imagen::Scene],
+                 teacher_caps: &[String], seed: u64) -> Result<EvalScores> {
+    let b = ctx.rt.manifest.batch();
+    let mut match_scores = Vec::new();
+    let mut recalls = Vec::new();
+    let mut hallucs = Vec::new();
+    for (chunk_i, chunk) in eval_imgs.chunks(b).enumerate() {
+        if chunk.len() < b {
+            break;
+        }
+        let flat: Vec<f32> = chunk.iter().flatten().copied().collect();
+        let caps_out = generate_vlm(&ctx.rt, entry_fwd, teacher, router,
+                                    &flat, capacity, 1.0, 24)?;
+        for (i, cap) in caps_out.iter().enumerate() {
+            let global = chunk_i * b + i;
+            match_scores.push(capgen::teacher_match_score(
+                cap, &teacher_caps[global]));
+            let sc = capgen::score_caption(cap, &scenes[global]);
+            recalls.push(sc.recall);
+            hallucs.push(sc.hallucination);
+        }
+    }
+    let (mean, lo, hi) = bootstrap_ci(&match_scores, 100, 0.95, seed);
+    Ok(EvalScores {
+        match_mean: mean,
+        match_lo: lo,
+        match_hi: hi,
+        recall: recalls.iter().sum::<f64>() / recalls.len().max(1) as f64,
+        halluc: hallucs.iter().sum::<f64>() / hallucs.len().max(1) as f64,
+    })
+}
+
+pub fn run(opts: &Fig9Opts) -> Result<Table> {
+    let ctx = Ctx::load(&opts.config, opts.seed)?;
+    let teacher = ctx.teacher(opts.pretrain_steps)?;
+    let b = ctx.rt.manifest.batch();
+    let n_eval = (opts.n_eval_images / b) * b;
+
+    // held-out eval images + ground-truth scenes
+    let eval_seed = 0xE9A3u64;
+    let (eval_imgs, _) = vlm_dataset(&ctx.rt, n_eval, eval_seed)?;
+    let scenes = vlm_scenes(&ctx.rt, n_eval, eval_seed)?;
+
+    // teacher reference captions (capacity 1, bypass) via the linear entry
+    let r_lin_init = ctx.router_init("router_init_lin", opts.seed as i32)?;
+    let mut teacher_caps = Vec::with_capacity(n_eval);
+    for chunk in eval_imgs.chunks(b) {
+        let flat: Vec<f32> = chunk.iter().flatten().copied().collect();
+        teacher_caps.extend(generate_vlm(
+            &ctx.rt, "elastic_forward_lin", &teacher, &r_lin_init, &flat,
+            1.0, 2.0, 24)?);
+    }
+
+    // training data stream
+    let (train_imgs, train_caps) =
+        vlm_dataset(&ctx.rt, 600, opts.seed ^ 0x99A)?;
+
+    let mut table = Table::new(&[
+        "router", "capacity", "llava_bench_like(F1)", "ci95",
+        "openchair_recall", "openchair_halluc",
+    ]);
+    for (router_kind, init_entry, distill_entry, fwd_entry) in [
+        ("linear", "router_init_lin", "distill_step_lin",
+         "elastic_forward_lin"),
+        ("mlp", "router_init_mlp", "distill_step_mlp",
+         "elastic_forward_mlp"),
+    ] {
+        for &c in &opts.caps {
+            let router = if c >= 1.0 {
+                ctx.router_init(init_entry, opts.seed as i32)?
+            } else {
+                let r0 = ctx.router_init(init_entry, opts.seed as i32)?;
+                let mut rng = Rng::new(opts.seed ^ 8 ^ (c * 100.0) as u64);
+                let mut trainer = Trainer::new(&ctx.rt);
+                let (r, _) = trainer.distill_vlm(
+                    distill_entry, &teacher, r0, opts.distill_steps, 1e-3,
+                    c as f32, 1.0, || {
+                        let mut fi = Vec::new();
+                        let mut ft = Vec::new();
+                        for _ in 0..b {
+                            let i = rng.below(train_imgs.len());
+                            fi.extend_from_slice(&train_imgs[i]);
+                            ft.extend_from_slice(&train_caps[i]);
+                        }
+                        (fi, ft)
+                    })?;
+                r
+            };
+            let mode_cap = if c >= 1.0 { 2.0 } else { 1.0 };
+            let scores = eval_captions(
+                &ctx, fwd_entry, &teacher, &router, c as f32, &eval_imgs,
+                &scenes, &teacher_caps,
+                opts.seed ^ (c * 31.0) as u64)?;
+            // capacity 1 bypass for reference rows
+            let _ = mode_cap;
+            println!("[fig9] {router_kind} cap={c:.2}: match \
+                      {:.3} [{:.3},{:.3}], recall {:.3}, halluc {:.3}",
+                     scores.match_mean, scores.match_lo, scores.match_hi,
+                     scores.recall, scores.halluc);
+            table.row(vec![
+                router_kind.into(),
+                fmt_f(c, 2),
+                fmt_f(scores.match_mean, 3),
+                format!("[{}, {}]", fmt_f(scores.match_lo, 3),
+                        fmt_f(scores.match_hi, 3)),
+                fmt_f(scores.recall, 3),
+                fmt_f(scores.halluc, 3),
+            ]);
+        }
+    }
+    common::save_table(
+        "fig9_elasti_vlm", &table,
+        "Paper Fig. 9: Elasti-VLM caption quality vs image-token capacity \
+         (linear vs MLP router; 95% bootstrap CI, 100 resamples). Expected \
+         shape: ~60-70% of image tokens suffice to match the base model on \
+         the LLaVA-Bench-like score; detail-oriented metrics (recall / \
+         hallucination) degrade at low capacity; the MLP router is at or \
+         above the linear router.")?;
+    Ok(table)
+}

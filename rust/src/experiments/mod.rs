@@ -1,0 +1,15 @@
+//! One driver per paper figure/table (experiment index in DESIGN.md §4).
+//!
+//! Every driver prints the table the paper's artifact reports and writes
+//! `results/<name>.{md,csv}`; EXPERIMENTS.md records paper-vs-measured.
+
+pub mod common;
+pub mod fig2;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod qualitative;
+pub mod table1;

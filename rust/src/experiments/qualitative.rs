@@ -1,0 +1,162 @@
+//! Qualitative outputs (paper Figures 10–12): side-by-side teacher vs
+//! elastic generations for the LM, per-capacity reconstruction similarity
+//! for the ViT, and per-capacity captions for the VLM.  Written to
+//! `results/qualitative.md`.
+
+use anyhow::Result;
+
+use crate::coordinator::generation::{generate_lm, generate_vlm};
+use crate::coordinator::trainer::{Caps, Trainer};
+use crate::data::{mathgen, Batcher, TextDataset};
+use crate::metrics::write_file;
+use crate::rng::Rng;
+
+use super::common::{self, vlm_dataset, vlm_scenes, Ctx};
+use super::fig7;
+
+pub struct QualOpts {
+    pub pretrain_steps_lm: usize,
+    pub pretrain_steps_vit: usize,
+    pub pretrain_steps_vlm: usize,
+    pub distill_steps: usize,
+    pub seed: u64,
+}
+
+impl Default for QualOpts {
+    fn default() -> Self {
+        QualOpts {
+            pretrain_steps_lm: 300,
+            pretrain_steps_vit: 250,
+            pretrain_steps_vlm: 400,
+            distill_steps: 60,
+            seed: 42,
+        }
+    }
+}
+
+fn fig10_lm(opts: &QualOpts, out: &mut String) -> Result<()> {
+    let ctx = Ctx::load("lm_tiny", opts.seed)?;
+    let teacher = ctx.teacher(opts.pretrain_steps_lm)?;
+    let l = ctx.rt.manifest.n_layers();
+    let layer_en = vec![1.0f32; l];
+
+    // Fig. 10 setup: input selection on MHA+MLP at 0.75, experts at half.
+    let caps = Caps([0.75, 0.75, 1.0, 0.5]);
+    let router0 = ctx.router_init("router_init_r1", opts.seed as i32)?;
+    let b = ctx.rt.manifest.batch();
+    let t = ctx.rt.manifest.seq_len();
+    let ds = TextDataset::from_texts(
+        &common::gsm_train_texts(600, opts.seed ^ 0x10F1), t);
+    let mut batcher = Batcher::new(ds.len(), b, opts.seed ^ 9);
+    let mut trainer = Trainer::new(&ctx.rt);
+    let (router, _) = trainer.distill_lm(
+        "distill_step_r1", &teacher, &teacher, router0, opts.distill_steps,
+        1e-3, caps, &layer_en, 1.0, || batcher.next_tokens(&ds))?;
+
+    let prompts: Vec<String> = mathgen::dataset(2, 0xF10)
+        .into_iter()
+        .map(|p| format!("Q: {} A:", p.question))
+        .collect();
+    let teacher_out = generate_lm(
+        &ctx.rt, "elastic_forward_r1", &teacher, &router, &prompts, 48,
+        Caps::full(), &layer_en, 2.0)?;
+    let elastic_out = generate_lm(
+        &ctx.rt, "elastic_forward_r1", &teacher, &router, &prompts, 48,
+        caps, &layer_en, 1.0)?;
+
+    out.push_str("## Fig. 10 — LM generations (teacher vs elastic)\n\n");
+    out.push_str("Elastic config: input selection MHA/MLP at 0.75, \
+                  experts top-half, LoRA r=1, inference threshold 0.5.\n\n");
+    for (i, p) in prompts.iter().enumerate() {
+        out.push_str(&format!(
+            "**Prompt:** `{p}`\n\n- teacher (bypass): `{}`\n- elastic: \
+             `{}`\n\n",
+            teacher_out[i].trim(), elastic_out[i].trim()));
+    }
+    Ok(())
+}
+
+fn fig11_vit(opts: &QualOpts, out: &mut String) -> Result<()> {
+    let ctx = Ctx::load("vit_tiny", opts.seed)?;
+    let teacher = ctx.teacher(opts.pretrain_steps_vit)?;
+    let l = ctx.rt.manifest.n_layers();
+    let layer_en = vec![1.0f32; l];
+    let eval = fig7::eval_image_batches(&ctx, 1, 0xF11A)?;
+
+    out.push_str("## Fig. 11 — ViT reconstruction similarity by capacity\n\n");
+    out.push_str("| capacity (input/MLP tokens) | decoder cosine |\n|--|--|\n");
+    for c in [0.25f64, 0.5, 0.75, 1.0] {
+        let caps = Caps([1.0, c as f32, 1.0, 1.0]);
+        let cos = if c >= 1.0 {
+            let r = ctx.router_init("router_init", opts.seed as i32)?;
+            fig7::vit_cosine(&ctx, &teacher, &r, &eval, caps, &layer_en, 2.0)?
+        } else {
+            let (cos, _) = fig7::distill_and_eval_vit(
+                &ctx, &teacher, opts.distill_steps, caps, &layer_en, None,
+                &eval, opts.seed ^ (c * 77.0) as u64)?;
+            cos
+        };
+        out.push_str(&format!("| {c:.2} | {cos:.4} |\n"));
+    }
+    out.push('\n');
+    Ok(())
+}
+
+fn fig12_vlm(opts: &QualOpts, out: &mut String) -> Result<()> {
+    let ctx = Ctx::load("vlm_tiny", opts.seed)?;
+    let teacher = ctx.teacher(opts.pretrain_steps_vlm)?;
+    let b = ctx.rt.manifest.batch();
+    let (eval_imgs, _) = vlm_dataset(&ctx.rt, b, 0xF12A)?;
+    let scenes = vlm_scenes(&ctx.rt, b, 0xF12A)?;
+    let flat: Vec<f32> = eval_imgs.iter().flatten().copied().collect();
+
+    let (train_imgs, train_caps) = vlm_dataset(&ctx.rt, 400,
+                                               opts.seed ^ 0xF12B)?;
+    out.push_str("## Fig. 12 — VLM captions at different image-token \
+                  capacities\n\n");
+    for c in [0.25f32, 0.75, 1.0] {
+        let router = if c >= 1.0 {
+            ctx.router_init("router_init_lin", opts.seed as i32)?
+        } else {
+            let r0 = ctx.router_init("router_init_lin", opts.seed as i32)?;
+            let mut rng = Rng::new(opts.seed ^ 10 ^ (c * 100.0) as u64);
+            let mut trainer = Trainer::new(&ctx.rt);
+            let (r, _) = trainer.distill_vlm(
+                "distill_step_lin", &teacher, r0, opts.distill_steps, 1e-3,
+                c, 1.0, || {
+                    let mut fi = Vec::new();
+                    let mut ft = Vec::new();
+                    for _ in 0..b {
+                        let i = rng.below(train_imgs.len());
+                        fi.extend_from_slice(&train_imgs[i]);
+                        ft.extend_from_slice(&train_caps[i]);
+                    }
+                    (fi, ft)
+                })?;
+            r
+        };
+        let mode = if c >= 1.0 { 2.0 } else { 1.0 };
+        let caps_out = generate_vlm(&ctx.rt, "elastic_forward_lin", &teacher,
+                                    &router, &flat, c, mode, 24)?;
+        out.push_str(&format!("### capacity {c:.2}\n\n"));
+        for (i, cap) in caps_out.iter().take(3).enumerate() {
+            out.push_str(&format!(
+                "- image {} (truth: {} {} {}): `{}`\n",
+                i, scenes[i].density_name(), scenes[i].color_name(),
+                scenes[i].class_name(), cap.trim()));
+        }
+        out.push('\n');
+    }
+    Ok(())
+}
+
+pub fn run(opts: &QualOpts) -> Result<String> {
+    let mut out = String::from(
+        "# Qualitative outputs (paper Figs. 10-12)\n\n");
+    fig10_lm(opts, &mut out)?;
+    fig11_vit(opts, &mut out)?;
+    fig12_vlm(opts, &mut out)?;
+    write_file(common::results_dir().join("qualitative.md"), &out)?;
+    println!("{out}");
+    Ok(out)
+}

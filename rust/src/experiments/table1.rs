@@ -1,0 +1,83 @@
+//! Table 1 — trainable parameters introduced by ElastiFormer, per routing
+//! module and as a percentage of the pretrained base model.
+//!
+//! Counts come straight from the AOT manifests (the same layout tables the
+//! runtime executes against), so the table is ground truth for this build,
+//! not a re-derivation.
+
+use anyhow::Result;
+
+use crate::bench::{fmt_f, Table};
+use crate::runtime::Manifest;
+
+use super::common::{artifacts_dir, save_table};
+
+fn family_of(name: &str) -> &'static str {
+    if name.contains("r_mha_in") {
+        "input/MHA"
+    } else if name.contains("r_mlp_in") {
+        "input/MLP"
+    } else if name.contains("r_heads") {
+        "param/MHA(heads)"
+    } else if name.contains("r_experts") {
+        "param/MLP(experts)"
+    } else if name.contains("lora") {
+        "LoRA(q,v)"
+    } else if name.contains("r_img") {
+        "input/VLM(img)"
+    } else {
+        "other"
+    }
+}
+
+pub fn run(configs: &[&str]) -> Result<Table> {
+    let mut table = Table::new(&[
+        "config", "router_table", "family", "params", "pct_of_teacher",
+    ]);
+    for cfg in configs {
+        let man = match Manifest::load(
+            std::path::Path::new(&artifacts_dir()).join(cfg)) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("[table1] skipping {cfg}: {e}");
+                continue;
+            }
+        };
+        let teacher_total = man.teacher_params.total() as f64;
+        for (key, tab) in &man.router_params {
+            let mut fam_counts: Vec<(&'static str, usize)> = Vec::new();
+            for e in &tab.entries {
+                let fam = family_of(&e.name);
+                match fam_counts.iter_mut().find(|(f, _)| *f == fam) {
+                    Some((_, c)) => *c += e.size,
+                    None => fam_counts.push((fam, e.size)),
+                }
+            }
+            for (fam, count) in &fam_counts {
+                table.row(vec![
+                    cfg.to_string(),
+                    key.clone(),
+                    fam.to_string(),
+                    count.to_string(),
+                    format!("{}%", fmt_f(100.0 * *count as f64 / teacher_total, 4)),
+                ]);
+            }
+            table.row(vec![
+                cfg.to_string(),
+                key.clone(),
+                "TOTAL".into(),
+                tab.total().to_string(),
+                format!("{}%",
+                        fmt_f(100.0 * tab.total() as f64 / teacher_total, 4)),
+            ]);
+        }
+    }
+    save_table(
+        "table1_router_params", &table,
+        "Paper Table 1: trainable parameters introduced by ElastiFormer \
+         (counts from the AOT manifests; percentages of the frozen teacher). \
+         The paper reports 0.00006%-0.25% at 2B-7B scale; at this repro's \
+         model sizes the same formulas give larger ratios since router cost \
+         scales as L*D while the model scales as L*D^2.")?;
+    Ok(table)
+}

@@ -1,0 +1,22 @@
+//! ElastiFormer — learned redundancy reduction in transformers via
+//! self-distillation (paper reproduction; see DESIGN.md).
+//!
+//! Layer 3 of the three-layer stack: the Rust coordinator owning training
+//! orchestration, elastic serving, data, checkpoints and every experiment
+//! driver.  Layers 1–2 (Pallas kernels + JAX model) are compiled AOT into
+//! `artifacts/` and executed through [`runtime`].
+
+pub mod analysis;
+pub mod bench;
+pub mod checkpoint;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod experiments;
+pub mod json;
+pub mod metrics;
+pub mod proptest;
+pub mod rng;
+pub mod runtime;
+pub mod tensor;

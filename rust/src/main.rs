@@ -1,0 +1,288 @@
+//! ElastiFormer CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   exp <fig2|fig4|fig5|fig6|fig7|fig8|fig9|table1|qualitative|all>
+//!       [--config C] [--steps N] [--pretrain-steps N] [--caps a,b,c]
+//!       [--seed S]
+//!   train-teacher  --config C [--steps N] [--seed S]
+//!   distill        --config C [--steps N] [--caps a,b,c,d] [--rank R]
+//!                  [--layers all|even] [--seed S]
+//!   serve          --config C [--requests N] [--rate RPS] [--seed S]
+//!   info           --config C
+//!
+//! Everything runs off the AOT artifacts in `artifacts/` (`make artifacts`).
+
+use anyhow::{bail, Result};
+
+use elastiformer::checkpoint::Checkpoint;
+use elastiformer::cli::Args;
+use elastiformer::coordinator::serving::{ElasticServer, Request, ServeConfig};
+use elastiformer::coordinator::trainer::{layer_enable, Caps, Trainer};
+use elastiformer::data::{mathgen, Batcher, TextDataset};
+use elastiformer::experiments::{
+    common, fig2, fig4, fig5, fig6, fig7, fig8, fig9, qualitative, table1,
+};
+use elastiformer::rng::Rng;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("exp") => cmd_exp(args),
+        Some("train-teacher") => cmd_train_teacher(args),
+        Some("distill") => cmd_distill(args),
+        Some("serve") => cmd_serve(args),
+        Some("info") => cmd_info(args),
+        Some(other) => bail!("unknown subcommand {other:?}\n{USAGE}"),
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "\
+elastiformer — ElastiFormer reproduction (see DESIGN.md)
+
+  elastiformer exp <id>            regenerate a paper figure/table
+       ids: fig2 fig4 fig5 fig6 fig7 fig8 fig9 table1 qualitative all
+       flags: --config C --steps N --pretrain-steps N --caps a,b,c --seed S
+  elastiformer train-teacher --config lm_tiny --steps 300
+  elastiformer distill --config lm_tiny --caps 0.75,0.75,1.0,0.5 --rank 1
+  elastiformer serve --config lm_tiny --requests 64 --rate 100
+  elastiformer info --config lm_tiny";
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let seed = args.u64_or("seed", 42)?;
+    let run_one = |id: &str| -> Result<()> {
+        println!("=== experiment {id} ===");
+        match id {
+            "fig2" => {
+                let mut o = fig2::Fig2Opts { seed, ..Default::default() };
+                if let Some(c) = args.str_opt("config") {
+                    o.config = c.into();
+                }
+                o.pretrain_steps =
+                    args.usize_or("pretrain-steps", o.pretrain_steps)?;
+                fig2::run(&o)?.print();
+            }
+            "fig4" => {
+                let mut o = fig4::Fig4Opts { seed, ..Default::default() };
+                o.distill_steps = args.usize_or("steps", o.distill_steps)?;
+                o.pretrain_steps =
+                    args.usize_or("pretrain-steps", o.pretrain_steps)?;
+                fig4::run(&o)?.print();
+            }
+            "fig5" => {
+                let mut o = fig5::Fig5Opts { seed, ..Default::default() };
+                if let Some(c) = args.str_opt("config") {
+                    o.config = c.into();
+                }
+                o.distill_steps = args.usize_or("steps", o.distill_steps)?;
+                o.pretrain_steps =
+                    args.usize_or("pretrain-steps", o.pretrain_steps)?;
+                o.caps = args.f64_list_or("caps", &o.caps)?;
+                fig5::run(&o)?.print();
+            }
+            "fig6" => {
+                let mut o = fig6::Fig6Opts { seed, ..Default::default() };
+                if let Some(c) = args.str_opt("config") {
+                    o.config = c.into();
+                }
+                o.distill_steps = args.usize_or("steps", o.distill_steps)?;
+                o.pretrain_steps =
+                    args.usize_or("pretrain-steps", o.pretrain_steps)?;
+                o.token_caps = args.f64_list_or("caps", &o.token_caps)?;
+                fig6::run(&o)?.print();
+            }
+            "fig7" => {
+                let mut o = fig7::Fig7Opts { seed, ..Default::default() };
+                o.distill_steps = args.usize_or("steps", o.distill_steps)?;
+                o.pretrain_steps =
+                    args.usize_or("pretrain-steps", o.pretrain_steps)?;
+                o.caps = args.f64_list_or("caps", &o.caps)?;
+                fig7::run(&o)?.print();
+            }
+            "fig8" => {
+                let mut o = fig8::Fig8Opts { seed, ..Default::default() };
+                o.distill_steps = args.usize_or("steps", o.distill_steps)?;
+                o.pretrain_steps =
+                    args.usize_or("pretrain-steps", o.pretrain_steps)?;
+                o.n_classes = args.usize_or("classes", o.n_classes)?;
+                let (t, report) = fig8::run(&o)?;
+                t.print();
+                println!("{report}");
+            }
+            "fig9" => {
+                let mut o = fig9::Fig9Opts { seed, ..Default::default() };
+                o.distill_steps = args.usize_or("steps", o.distill_steps)?;
+                o.pretrain_steps =
+                    args.usize_or("pretrain-steps", o.pretrain_steps)?;
+                o.caps = args.f64_list_or("caps", &o.caps)?;
+                fig9::run(&o)?.print();
+            }
+            "table1" => {
+                table1::run(&["lm_tiny", "lm_base", "vit_tiny", "vlm_tiny"])?
+                    .print();
+            }
+            "qualitative" => {
+                let mut o = qualitative::QualOpts { seed,
+                                                    ..Default::default() };
+                o.distill_steps = args.usize_or("steps", o.distill_steps)?;
+                qualitative::run(&o)?;
+            }
+            other => bail!("unknown experiment {other:?}"),
+        }
+        Ok(())
+    };
+    if id == "all" {
+        for id in ["table1", "fig2", "fig4", "fig5", "fig6", "fig7", "fig8",
+                   "fig9", "qualitative"] {
+            run_one(id)?;
+        }
+        Ok(())
+    } else {
+        run_one(id)
+    }
+}
+
+fn cmd_train_teacher(args: &Args) -> Result<()> {
+    let config = args.str_or("config", "lm_tiny");
+    let steps = args.usize_or("steps", 300)?;
+    let seed = args.u64_or("seed", 42)?;
+    let ctx = common::Ctx::load(config, seed)?;
+    let params = ctx.teacher(steps)?;
+    println!("teacher ready: {} params (cached under results/ckpt)",
+             params.len());
+    Ok(())
+}
+
+fn cmd_distill(args: &Args) -> Result<()> {
+    let config = args.str_or("config", "lm_tiny");
+    let steps = args.usize_or("steps", 100)?;
+    let pretrain = args.usize_or("pretrain-steps", 300)?;
+    let rank = args.usize_or("rank", 0)?;
+    let seed = args.u64_or("seed", 42)?;
+    let caps_v = args.f64_list_or("caps", &[0.75, 0.75, 1.0, 0.5])?;
+    if caps_v.len() != 4 {
+        bail!("--caps wants 4 comma-separated values");
+    }
+    let caps = Caps([caps_v[0] as f32, caps_v[1] as f32, caps_v[2] as f32,
+                     caps_v[3] as f32]);
+    let ctx = common::Ctx::load(config, seed)?;
+    if ctx.rt.manifest.kind() != "lm" {
+        bail!("distill subcommand currently drives LM configs; use \
+               `exp fig7`/`exp fig9` for ViT/VLM distillation");
+    }
+    let teacher = ctx.teacher(pretrain)?;
+    let layer_en = layer_enable(ctx.rt.manifest.n_layers(),
+                                args.str_or("layers", "all"))?;
+    let router = ctx.router_init(&format!("router_init_r{rank}"),
+                                 seed as i32)?;
+    let b = ctx.rt.manifest.batch();
+    let t = ctx.rt.manifest.seq_len();
+    let ds = TextDataset::from_texts(&common::gsm_train_texts(600, seed), t);
+    let mut batcher = Batcher::new(ds.len(), b, seed);
+    let mut trainer = Trainer::with_logger(
+        &ctx.rt,
+        common::results_dir().join("distill_log.jsonl").to_str().unwrap())?;
+    let (router, hist) = trainer.distill_lm(
+        &format!("distill_step_r{rank}"), &teacher, &teacher, router, steps,
+        1e-3, caps, &layer_en, 1.0, || batcher.next_tokens(&ds))?;
+    let out = common::results_dir().join(format!("{config}_router_r{rank}.bin"));
+    Checkpoint::new(config, &format!("router_r{rank}"), steps as u64, router)
+        .save(&out)?;
+    println!("distilled {steps} steps: distill {:.4} -> {:.4}; router saved \
+              to {out:?}",
+             hist.first().map(|m| m.distill).unwrap_or(0.0),
+             hist.last().map(|m| m.distill).unwrap_or(0.0));
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let config = args.str_or("config", "lm_tiny");
+    let n_requests = args.usize_or("requests", 64)?;
+    let rate = args.f64_or("rate", 100.0)?;
+    let pretrain = args.usize_or("pretrain-steps", 300)?;
+    let seed = args.u64_or("seed", 42)?;
+    let ctx = common::Ctx::load(config, seed)?;
+    let teacher = ctx.teacher(pretrain)?;
+    let router = ctx.router_init("router_init_r0", seed as i32)?;
+    let t = ctx.rt.manifest.seq_len();
+
+    let mut server = ElasticServer::new(&ctx.rt, &teacher, &router,
+                                        ServeConfig::standard())?;
+    let (tx, rx) = std::sync::mpsc::channel();
+    let producer = std::thread::spawn(move || {
+        let tok = elastiformer::data::Tokenizer::new();
+        let mut rng = Rng::new(seed ^ 0x5E12);
+        for id in 0..n_requests as u64 {
+            let p = mathgen::gen_problem(&mut rng);
+            let req = Request {
+                id,
+                tokens: tok.encode_padded(&p.full_text(), t),
+                submitted: std::time::Instant::now(),
+            };
+            if tx.send(req).is_err() {
+                return;
+            }
+            std::thread::sleep(std::time::Duration::from_secs_f64(
+                1.0 / rate.max(1.0)));
+        }
+    });
+    let report = server.run(rx, n_requests)?;
+    producer.join().ok();
+    println!("served {} requests in {:.2}s — {:.1} req/s, p50 {:.1} ms, \
+              p99 {:.1} ms, mean capacity {:.2}",
+             report.completions.len(), report.wall_secs,
+             report.throughput_rps(), report.latency_p(0.5),
+             report.latency_p(0.99), report.mean_capacity());
+    for (tier, count) in &report.tier_counts {
+        println!("  tier {tier:.2}: {count} requests");
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let config = args.str_or("config", "lm_tiny");
+    let ctx = common::Ctx::load(config, 0)?;
+    let m = &ctx.rt.manifest;
+    println!("config {} (kind {})", m.name(), m.kind());
+    println!("  teacher params: {}", m.teacher_params.total());
+    for (k, t) in &m.router_params {
+        println!("  router table {k}: {} params", t.total());
+    }
+    println!("  entries:");
+    for (name, e) in &m.entries {
+        println!("    {name} ({} args, {} outputs)", e.args.len(),
+                 e.outputs.len());
+    }
+    if let Ok(dims) = m.dims() {
+        use elastiformer::analysis::flops::{self, Capacity};
+        let t = flops::teacher_macs(&dims);
+        println!("  teacher MACs/seq: {t}");
+        for c in [0.75, 0.5, 0.25] {
+            let e = flops::elastic_macs(&dims, &Capacity::uniform(c));
+            println!("  elastic@{c}: {e} ({:.1}% of teacher)",
+                     100.0 * e as f64 / t as f64);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,171 @@
+//! Metrics substrate: run-scoped loggers (JSONL + CSV), summary statistics
+//! and the bootstrap confidence intervals used by the Fig. 9 evaluation
+//! (95% CI over 100 resamples, matching the paper's protocol).
+
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::json::Value;
+use crate::rng::Rng;
+
+/// Append-only JSONL metrics log (one object per step/event).
+pub struct JsonlLogger {
+    path: PathBuf,
+    file: fs::File,
+}
+
+impl JsonlLogger {
+    pub fn create<P: AsRef<Path>>(path: P) -> Result<JsonlLogger> {
+        if let Some(dir) = path.as_ref().parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let file = fs::File::create(&path)
+            .with_context(|| format!("create {:?}", path.as_ref()))?;
+        Ok(JsonlLogger { path: path.as_ref().to_path_buf(), file })
+    }
+
+    pub fn log(&mut self, fields: Vec<(String, Value)>) -> Result<()> {
+        let line = crate::json::to_string(&Value::Obj(fields));
+        writeln!(self.file, "{line}")?;
+        Ok(())
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// Write a string to a file, creating parents.
+pub fn write_file<P: AsRef<Path>>(path: P, content: &str) -> Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        fs::create_dir_all(dir)?;
+    }
+    fs::write(&path, content)
+        .with_context(|| format!("write {:?}", path.as_ref()))
+}
+
+// ---------------------------------------------------------------------------
+// summary statistics
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+pub fn summarize(xs: &[f64]) -> Summary {
+    if xs.is_empty() {
+        return Summary { n: 0, mean: 0.0, std: 0.0, min: 0.0, max: 0.0 };
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    Summary {
+        n: xs.len(),
+        mean,
+        std: var.sqrt(),
+        min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+        max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+    }
+}
+
+/// Bootstrap mean CI: `resamples` resamples with replacement, returning
+/// (mean, lo, hi) at the given two-sided confidence level.
+pub fn bootstrap_ci(xs: &[f64], resamples: usize, conf: f64, seed: u64)
+                    -> (f64, f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0, 0.0);
+    }
+    let mut rng = Rng::new(seed);
+    let mut means: Vec<f64> = (0..resamples)
+        .map(|_| {
+            let s: f64 = (0..xs.len())
+                .map(|_| xs[rng.below(xs.len())])
+                .sum();
+            s / xs.len() as f64
+        })
+        .collect();
+    means.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let alpha = (1.0 - conf) / 2.0;
+    let lo_i = ((resamples as f64) * alpha) as usize;
+    let hi_i = (((resamples as f64) * (1.0 - alpha)) as usize)
+        .min(resamples - 1);
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    (mean, means[lo_i], means[hi_i])
+}
+
+/// Exponential moving average (loss-curve smoothing in reports).
+pub fn ema(xs: &[f64], alpha: f64) -> Vec<f64> {
+    let mut out = Vec::with_capacity(xs.len());
+    let mut acc = None;
+    for &x in xs {
+        let v = match acc {
+            None => x,
+            Some(prev) => alpha * x + (1.0 - alpha) * prev,
+        };
+        acc = Some(v);
+        out.push(v);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.std - (1.25f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bootstrap_contains_mean() {
+        let xs: Vec<f64> = (0..200).map(|i| (i % 7) as f64).collect();
+        let (mean, lo, hi) = bootstrap_ci(&xs, 100, 0.95, 42);
+        assert!(lo <= mean && mean <= hi);
+        assert!(hi - lo < 1.0, "CI too wide: {lo}..{hi}");
+    }
+
+    #[test]
+    fn bootstrap_deterministic() {
+        let xs = [1.0, 5.0, 3.0, 2.0];
+        assert_eq!(bootstrap_ci(&xs, 50, 0.95, 7),
+                   bootstrap_ci(&xs, 50, 0.95, 7));
+    }
+
+    #[test]
+    fn ema_smooths() {
+        let out = ema(&[0.0, 10.0], 0.5);
+        assert_eq!(out, vec![0.0, 5.0]);
+    }
+
+    #[test]
+    fn jsonl_logger_roundtrip() {
+        let dir = std::env::temp_dir().join("elastiformer_test_metrics");
+        let path = dir.join("log.jsonl");
+        {
+            let mut l = JsonlLogger::create(&path).unwrap();
+            l.log(vec![("step".into(), Value::from(1usize)),
+                       ("loss".into(), Value::from(0.5))]).unwrap();
+            l.log(vec![("step".into(), Value::from(2usize))]).unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<_> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let v = crate::json::parse(lines[0]).unwrap();
+        assert_eq!(v.get("loss").unwrap().as_f64().unwrap(), 0.5);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,260 @@
+//! Executable cache + typed execution over the PJRT CPU client.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO text ->
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `client.compile` -> `execute`.  Entries compile lazily on first use and
+//! stay cached for the process lifetime (compilation of the big distill
+//! steps takes seconds; the request path must never pay it twice).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::manifest::{EntrySpec, Manifest};
+
+/// Typed host-side argument for an entry call.
+pub enum Arg<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+    ScalarF32(f32),
+    ScalarI32(i32),
+}
+
+/// Decomposed tuple outputs of one execution.
+pub struct Outputs {
+    pub literals: Vec<Literal>,
+}
+
+impl Outputs {
+    pub fn f32(&self, i: usize) -> Result<Vec<f32>> {
+        self.literals
+            .get(i)
+            .ok_or_else(|| anyhow!("no output {i}"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("output {i} as f32: {e}"))
+    }
+
+    pub fn scalar_f32(&self, i: usize) -> Result<f32> {
+        let v = self.f32(i)?;
+        if v.len() != 1 {
+            bail!("output {i} has {} elems, wanted scalar", v.len());
+        }
+        Ok(v[0])
+    }
+
+    pub fn len(&self) -> usize {
+        self.literals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.literals.is_empty()
+    }
+}
+
+/// Cumulative execution statistics (perf accounting).
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub compiles: usize,
+    pub compile_secs: f64,
+    pub executions: usize,
+    pub execute_secs: f64,
+}
+
+/// One artifact set (config) loaded onto a PJRT client.
+pub struct Runtime {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, PjRtLoadedExecutable>>,
+    stats: Mutex<RuntimeStats>,
+}
+
+impl Runtime {
+    /// Load the manifest for `config` under `artifacts_dir` and create the
+    /// CPU PJRT client.  Executables compile lazily via `exec`/`warmup`.
+    pub fn load(artifacts_dir: &str, config: &str) -> Result<Runtime> {
+        let dir = PathBuf::from(artifacts_dir).join(config);
+        let manifest = Manifest::load(&dir)?;
+        let client = PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            dir,
+            cache: Mutex::new(HashMap::new()),
+            stats: Mutex::new(RuntimeStats::default()),
+        })
+    }
+
+    /// Compile (or fetch from cache) one entry's executable.
+    fn ensure_compiled(&self, entry: &str) -> Result<()> {
+        {
+            let cache = self.cache.lock().unwrap();
+            if cache.contains_key(entry) {
+                return Ok(());
+            }
+        }
+        let spec = self.manifest.entry(entry)?;
+        let path = self.dir.join(&spec.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?)
+            .map_err(|e| anyhow!("parse {path:?}: {e}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {entry}: {e}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut stats = self.stats.lock().unwrap();
+            stats.compiles += 1;
+            stats.compile_secs += dt;
+        }
+        self.cache.lock().unwrap().insert(entry.to_string(), exe);
+        Ok(())
+    }
+
+    /// Pre-compile a set of entries (so timing loops exclude compilation).
+    pub fn warmup(&self, entries: &[&str]) -> Result<()> {
+        for e in entries {
+            self.ensure_compiled(e)?;
+        }
+        Ok(())
+    }
+
+    fn build_literal(spec_shape: &[usize], dtype: &str, arg: &Arg)
+                     -> Result<Literal> {
+        let dims: Vec<i64> = spec_shape.iter().map(|&d| d as i64).collect();
+        let numel: usize = spec_shape.iter().product::<usize>().max(1);
+        match (dtype, arg) {
+            ("float32", Arg::F32(data)) => {
+                if data.len() != numel {
+                    bail!("arg wants {numel} f32, got {}", data.len());
+                }
+                let lit = Literal::vec1(data);
+                if spec_shape.is_empty() {
+                    Ok(lit.reshape(&[])?)
+                } else {
+                    Ok(lit.reshape(&dims)?)
+                }
+            }
+            ("int32", Arg::I32(data)) => {
+                if data.len() != numel {
+                    bail!("arg wants {numel} i32, got {}", data.len());
+                }
+                let lit = Literal::vec1(data);
+                if spec_shape.is_empty() {
+                    Ok(lit.reshape(&[])?)
+                } else {
+                    Ok(lit.reshape(&dims)?)
+                }
+            }
+            ("float32", Arg::ScalarF32(x)) => {
+                if numel != 1 {
+                    bail!("scalar arg for non-scalar spec {spec_shape:?}");
+                }
+                if spec_shape.is_empty() {
+                    Ok(Literal::scalar(*x))
+                } else {
+                    Ok(Literal::vec1(&[*x]).reshape(&dims)?)
+                }
+            }
+            ("int32", Arg::ScalarI32(x)) => {
+                if numel != 1 {
+                    bail!("scalar arg for non-scalar spec {spec_shape:?}");
+                }
+                if spec_shape.is_empty() {
+                    Ok(Literal::scalar(*x))
+                } else {
+                    Ok(Literal::vec1(&[*x]).reshape(&dims)?)
+                }
+            }
+            (dt, _) => bail!("arg/dtype mismatch for {dt}"),
+        }
+    }
+
+    /// Build + validate the literal for one argument of an entry.
+    /// Hot paths can prepare static arguments (the big frozen param
+    /// vectors) once and reuse them across calls via [`exec_prepared`].
+    pub fn prepare_arg(&self, entry: &str, index: usize, arg: &Arg)
+                       -> Result<Literal> {
+        let spec = self.manifest.entry(entry)?;
+        let s = spec.args.get(index).ok_or_else(|| {
+            anyhow!("{entry}: no arg {index} (has {})", spec.args.len())
+        })?;
+        Self::build_literal(&s.shape, &s.dtype, arg)
+            .with_context(|| format!("{entry}: arg {:?}", s.name))
+    }
+
+    /// Execute an entry with typed args; returns decomposed tuple outputs.
+    pub fn exec(&self, entry: &str, args: &[Arg]) -> Result<Outputs> {
+        let spec = self.manifest.entry(entry)?;
+        if args.len() != spec.args.len() {
+            bail!("{entry}: got {} args, manifest wants {} ({:?})",
+                  args.len(), spec.args.len(),
+                  spec.args.iter().map(|a| &a.name).collect::<Vec<_>>());
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (a, s) in args.iter().zip(&spec.args) {
+            literals.push(Self::build_literal(&s.shape, &s.dtype, a)
+                .with_context(|| format!("{entry}: arg {:?}", s.name))?);
+        }
+        let refs: Vec<&Literal> = literals.iter().collect();
+        self.exec_prepared(entry, &refs)
+    }
+
+    /// Execute with pre-built literals (mix cached static args with fresh
+    /// per-request ones).  The serving engine uses this to avoid re-copying
+    /// the multi-MB frozen parameter vector on every batch.
+    pub fn exec_prepared(&self, entry: &str, literals: &[&Literal])
+                         -> Result<Outputs> {
+        self.ensure_compiled(entry)?;
+        let spec: &EntrySpec = self.manifest.entry(entry)?;
+        if literals.len() != spec.args.len() {
+            bail!("{entry}: got {} literals, manifest wants {}",
+                  literals.len(), spec.args.len());
+        }
+        let n_outputs = spec.outputs.len();
+        let cache = self.cache.lock().unwrap();
+        let exe = cache.get(entry).expect("ensured above");
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<&Literal>(literals)
+            .map_err(|e| anyhow!("execute {entry}: {e}"))?;
+        let root = result
+            .into_iter()
+            .next()
+            .and_then(|d| d.into_iter().next())
+            .ok_or_else(|| anyhow!("{entry}: no output buffer"))?;
+        let lit = root
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{entry}: to_literal: {e}"))?;
+        let outs = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("{entry}: untuple: {e}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut stats = self.stats.lock().unwrap();
+            stats.executions += 1;
+            stats.execute_secs += dt;
+        }
+        if outs.len() != n_outputs {
+            bail!("{entry}: {} outputs, manifest wants {}",
+                  outs.len(), n_outputs);
+        }
+        Ok(Outputs { literals: outs })
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    pub fn has_entry(&self, entry: &str) -> bool {
+        self.manifest.entries.contains_key(entry)
+    }
+}

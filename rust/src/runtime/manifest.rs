@@ -1,0 +1,311 @@
+//! Manifest parsing: the JSON contract emitted by `compile/aot.py`.
+//!
+//! Carries (a) the model config, (b) the flat-parameter layout tables for
+//! teacher and router vectors, and (c) per-entry argument/output specs the
+//! runtime validates calls against.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::json::{self, Value};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "float32" | "int32"
+}
+
+impl ArgSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct OutSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct EntrySpec {
+    pub name: String,
+    pub file: String,
+    pub args: Vec<ArgSpec>,
+    pub outputs: Vec<OutSpec>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// A parameter layout table (ordered, contiguous, gap-free).
+#[derive(Debug, Clone, Default)]
+pub struct ParamTable {
+    pub entries: Vec<ParamEntry>,
+}
+
+impl ParamTable {
+    pub fn total(&self) -> usize {
+        self.entries
+            .last()
+            .map(|e| e.offset + e.size)
+            .unwrap_or(0)
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ParamEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Slice one named tensor out of a flat buffer.
+    pub fn slice<'a>(&self, flat: &'a [f32], name: &str) -> Result<&'a [f32]> {
+        let e = self
+            .find(name)
+            .ok_or_else(|| anyhow!("no param named {name:?}"))?;
+        if flat.len() < e.offset + e.size {
+            bail!("flat buffer too short for {name:?}");
+        }
+        Ok(&flat[e.offset..e.offset + e.size])
+    }
+
+    fn from_json(v: &Value) -> Result<ParamTable> {
+        let mut entries = Vec::new();
+        let mut expect_off = 0usize;
+        for item in v.as_arr()? {
+            let e = ParamEntry {
+                name: item.req("name")?.as_str()?.to_string(),
+                shape: item.req("shape")?.as_usize_vec()?,
+                offset: item.req("offset")?.as_usize()?,
+                size: item.req("size")?.as_usize()?,
+            };
+            if e.offset != expect_off {
+                bail!("param table gap at {:?}", e.name);
+            }
+            expect_off += e.size;
+            entries.push(e);
+        }
+        Ok(ParamTable { entries })
+    }
+}
+
+/// Parsed manifest for one artifact set.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: Value,
+    pub entries: BTreeMap<String, EntrySpec>,
+    pub teacher_params: ParamTable,
+    pub router_params: BTreeMap<String, ParamTable>,
+}
+
+impl Manifest {
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("read {path:?} — run `make artifacts` first")
+        })?;
+        let root = json::parse(&text)?;
+
+        let mut entries = BTreeMap::new();
+        for (name, e) in root.req("entries")?.as_obj()? {
+            let args = e
+                .req("args")?
+                .as_arr()?
+                .iter()
+                .map(|a| {
+                    Ok(ArgSpec {
+                        name: a.req("name")?.as_str()?.to_string(),
+                        shape: a.req("shape")?.as_usize_vec()?,
+                        dtype: a.req("dtype")?.as_str()?.to_string(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = e
+                .req("outputs")?
+                .as_arr()?
+                .iter()
+                .map(|o| {
+                    Ok(OutSpec {
+                        shape: o.req("shape")?.as_usize_vec()?,
+                        dtype: o.req("dtype")?.as_str()?.to_string(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            entries.insert(
+                name.clone(),
+                EntrySpec {
+                    name: name.clone(),
+                    file: e.req("file")?.as_str()?.to_string(),
+                    args,
+                    outputs,
+                },
+            );
+        }
+
+        let teacher_params = ParamTable::from_json(root.req("teacher_params")?)?;
+        let mut router_params = BTreeMap::new();
+        for (k, v) in root.req("router_params")?.as_obj()? {
+            router_params.insert(k.clone(), ParamTable::from_json(v)?);
+        }
+
+        Ok(Manifest {
+            dir,
+            config: root.req("config")?.clone(),
+            entries,
+            teacher_params,
+            router_params,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entries.get(name).ok_or_else(|| {
+            anyhow!("no entry {name:?} in manifest (have: {:?})",
+                    self.entries.keys().collect::<Vec<_>>())
+        })
+    }
+
+    // -- typed config accessors --------------------------------------------
+
+    pub fn cfg_usize(&self, key: &str) -> Result<usize> {
+        self.config.req(key)?.as_usize()
+    }
+
+    pub fn cfg_str(&self, key: &str) -> Result<&str> {
+        self.config.req(key)?.as_str()
+    }
+
+    pub fn name(&self) -> &str {
+        self.cfg_str("name").unwrap_or("?")
+    }
+
+    pub fn kind(&self) -> &str {
+        self.cfg_str("kind").unwrap_or("?")
+    }
+
+    pub fn batch(&self) -> usize {
+        self.cfg_usize("batch").unwrap_or(1)
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.cfg_usize("seq_len").unwrap_or(0)
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.cfg_usize("n_layers").unwrap_or(0)
+    }
+
+    pub fn n_heads(&self) -> usize {
+        self.cfg_usize("n_heads").unwrap_or(0)
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.cfg_usize("vocab").unwrap_or(0)
+    }
+
+    pub fn dims(&self) -> Result<crate::analysis::flops::ModelDims> {
+        Ok(crate::analysis::flops::ModelDims {
+            d_model: self.cfg_usize("d_model")?,
+            n_layers: self.cfg_usize("n_layers")?,
+            n_heads: self.cfg_usize("n_heads")?,
+            d_ff: self.cfg_usize("d_ff")?,
+            seq_len: self.cfg_usize("seq_len")?,
+            vocab: self.cfg_usize("vocab").unwrap_or(0),
+            n_experts: self.cfg_usize("n_experts").unwrap_or(1),
+        })
+    }
+
+    pub fn router_table(&self, key: &str) -> Result<&ParamTable> {
+        self.router_params.get(key).ok_or_else(|| {
+            anyhow!("no router table {key:?} (have: {:?})",
+                    self.router_params.keys().collect::<Vec<_>>())
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest_json() -> String {
+        r#"{
+          "fingerprint": "x",
+          "config": {"name": "m", "kind": "lm", "batch": 2, "seq_len": 8,
+                     "d_model": 16, "n_layers": 2, "n_heads": 2, "d_ff": 32,
+                     "vocab": 256, "n_experts": 4},
+          "entries": {
+            "init": {"name": "init", "file": "init.hlo.txt",
+                     "args": [{"name": "seed", "shape": [], "dtype": "int32"}],
+                     "outputs": [{"shape": [10], "dtype": "float32"}]}
+          },
+          "teacher_params": [
+            {"name": "a", "shape": [2, 3], "offset": 0, "size": 6},
+            {"name": "b", "shape": [4], "offset": 6, "size": 4}
+          ],
+          "router_params": {"0": [
+            {"name": "r", "shape": [5], "offset": 0, "size": 5}
+          ]}
+        }"#
+        .to_string()
+    }
+
+    fn write_fake(dirname: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(dirname);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), fake_manifest_json()).unwrap();
+        dir
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let dir = write_fake("ef_manifest_ok");
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.name(), "m");
+        assert_eq!(m.teacher_params.total(), 10);
+        assert_eq!(m.router_table("0").unwrap().total(), 5);
+        let e = m.entry("init").unwrap();
+        assert_eq!(e.args[0].dtype, "int32");
+        assert_eq!(e.args[0].numel(), 1);
+        assert!(m.entry("nope").is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn slice_named_param() {
+        let dir = write_fake("ef_manifest_slice");
+        let m = Manifest::load(&dir).unwrap();
+        let flat: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        assert_eq!(m.teacher_params.slice(&flat, "b").unwrap(),
+                   &[6.0, 7.0, 8.0, 9.0]);
+        assert!(m.teacher_params.slice(&flat[..5], "b").is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rejects_gapped_table() {
+        let dir = std::env::temp_dir().join("ef_manifest_gap");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = fake_manifest_json().replace(
+            r#""offset": 6, "size": 4"#, r#""offset": 7, "size": 4"#);
+        std::fs::write(dir.join("manifest.json"), bad).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dims_accessor() {
+        let dir = write_fake("ef_manifest_dims");
+        let m = Manifest::load(&dir).unwrap();
+        let d = m.dims().unwrap();
+        assert_eq!(d.d_model, 16);
+        assert_eq!(d.n_experts, 4);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

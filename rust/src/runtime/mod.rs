@@ -1,0 +1,10 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/<config>/*.hlo.txt`)
+//! produced by `python -m compile.aot` and executes them on the XLA CPU
+//! client.  Python never runs here — this module plus the manifest is the
+//! entire contract between the layers.
+
+pub mod manifest;
+pub mod client;
+
+pub use client::{Outputs, Runtime};
+pub use manifest::{ArgSpec, EntrySpec, Manifest, ParamEntry};

@@ -1,0 +1,187 @@
+//! Minimal host-side f32 tensor used by checkpoints, eval and analysis.
+//!
+//! This is deliberately not an ML library — device compute happens inside
+//! the AOT XLA executables.  `Tensor` exists so the coordinator can slice
+//! named parameters out of flat buffers, compute metrics over outputs, and
+//! build similarity matrices without hand-rolled index math at every call
+//! site.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product::<usize>().max(1);
+        if n != data.len() {
+            bail!("shape {:?} wants {} elems, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n = shape.iter().product::<usize>().max(1);
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn item(&self) -> Result<f32> {
+        if self.data.len() != 1 {
+            bail!("item() on tensor of {} elems", self.data.len());
+        }
+        Ok(self.data[0])
+    }
+
+    /// Row `i` of a 2-D (or higher: leading-index slice) tensor.
+    pub fn index(&self, i: usize) -> Result<Tensor> {
+        if self.shape.is_empty() {
+            bail!("index() on scalar");
+        }
+        let stride: usize = self.shape[1..].iter().product::<usize>().max(1);
+        if i >= self.shape[0] {
+            bail!("index {} out of bounds for dim {}", i, self.shape[0]);
+        }
+        Ok(Tensor {
+            shape: self.shape[1..].to_vec(),
+            data: self.data[i * stride..(i + 1) * stride].to_vec(),
+        })
+    }
+
+    pub fn reshape(mut self, shape: Vec<usize>) -> Result<Tensor> {
+        let n: usize = shape.iter().product::<usize>().max(1);
+        if n != self.data.len() {
+            bail!("cannot reshape {} elems to {:?}", self.data.len(), shape);
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().sum::<f32>() / self.data.len() as f32
+    }
+
+    pub fn max(&self) -> f32 {
+        self.data.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b))
+    }
+
+    pub fn sum(&self) -> f32 {
+        self.data.iter().sum()
+    }
+
+    pub fn l2_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn dot(&self, other: &Tensor) -> Result<f32> {
+        if self.data.len() != other.data.len() {
+            bail!("dot: {} vs {} elems", self.data.len(), other.data.len());
+        }
+        Ok(self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a * b)
+            .sum())
+    }
+
+    pub fn cosine(&self, other: &Tensor) -> Result<f32> {
+        let d = self.dot(other)?;
+        let n = self.l2_norm() * other.l2_norm();
+        Ok(if n > 0.0 { d / n } else { 0.0 })
+    }
+
+    /// argmax over the last axis; returns indices shaped like the leading axes.
+    pub fn argmax_last(&self) -> Result<Vec<usize>> {
+        if self.shape.is_empty() {
+            bail!("argmax on scalar");
+        }
+        let last = *self.shape.last().unwrap();
+        let rows = self.data.len() / last;
+        let mut out = Vec::with_capacity(rows);
+        for r in 0..rows {
+            let row = &self.data[r * last..(r + 1) * last];
+            let mut best = 0;
+            for (i, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = i;
+                }
+            }
+            out.push(best);
+        }
+        Ok(out)
+    }
+
+    pub fn all_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_validation() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+        assert!(Tensor::new(vec![], vec![1.0]).is_ok());
+    }
+
+    #[test]
+    fn index_rows() {
+        let t = Tensor::new(vec![2, 3], (0..6).map(|x| x as f32).collect()).unwrap();
+        assert_eq!(t.index(1).unwrap().data, vec![3.0, 4.0, 5.0]);
+        assert!(t.index(2).is_err());
+    }
+
+    #[test]
+    fn stats() {
+        let t = Tensor::new(vec![4], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(t.mean(), 2.5);
+        assert_eq!(t.max(), 4.0);
+        assert!((t.l2_norm() - 30.0f32.sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_identity_and_orthogonal() {
+        let a = Tensor::new(vec![2], vec![1.0, 0.0]).unwrap();
+        let b = Tensor::new(vec![2], vec![0.0, 1.0]).unwrap();
+        assert!((a.cosine(&a).unwrap() - 1.0).abs() < 1e-6);
+        assert!(a.cosine(&b).unwrap().abs() < 1e-6);
+    }
+
+    #[test]
+    fn argmax() {
+        let t = Tensor::new(vec![2, 3], vec![0.0, 5.0, 1.0, 9.0, 2.0, 3.0]).unwrap();
+        assert_eq!(t.argmax_last().unwrap(), vec![1, 0]);
+    }
+
+    #[test]
+    fn reshape_checks() {
+        let t = Tensor::zeros(&[6]);
+        assert!(t.clone().reshape(vec![2, 3]).is_ok());
+        assert!(t.reshape(vec![4]).is_err());
+    }
+}

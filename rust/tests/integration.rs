@@ -1,0 +1,383 @@
+//! Integration tests over the real AOT artifacts (requires
+//! `make artifacts`; every test skips gracefully when artifacts are
+//! absent so `cargo test` stays green in a fresh checkout).
+//!
+//! These exercise the full stack: HLO text -> PJRT compile -> execute,
+//! the §4.1 equivalence oracle end-to-end, training-step semantics, and
+//! the serving engine.
+
+use elastiformer::coordinator::serving::{
+    CapacityController, ElasticServer, Request, ServeConfig,
+};
+use elastiformer::coordinator::trainer::{Caps, Trainer};
+use elastiformer::data::{mathgen, Tokenizer};
+use elastiformer::runtime::client::Arg;
+use elastiformer::runtime::Runtime;
+
+fn artifacts_dir() -> Option<String> {
+    for cand in ["artifacts", "../artifacts"] {
+        if std::path::Path::new(cand).join("lm_tiny/manifest.json").exists() {
+            return Some(cand.to_string());
+        }
+    }
+    None
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts not built");
+                return;
+            }
+        }
+    };
+}
+
+fn runtime(config: &str) -> Runtime {
+    Runtime::load(&artifacts_dir().unwrap(), config).unwrap()
+}
+
+fn token_batch(rt: &Runtime, seed: u64) -> Vec<i32> {
+    let tok = Tokenizer::new();
+    let b = rt.manifest.batch();
+    let t = rt.manifest.seq_len();
+    let problems = mathgen::dataset(b, seed);
+    let mut flat = Vec::with_capacity(b * t);
+    for p in &problems {
+        flat.extend(tok.encode_padded(&p.full_text(), t));
+    }
+    flat
+}
+
+#[test]
+fn all_entries_compile_on_pjrt() {
+    // The hard contract: every lowered artifact of every config must parse
+    // under xla_extension 0.5.1's HLO text parser and compile on the CPU
+    // PJRT client.  (Guards against ops like `topk` / batched-operand
+    // gathers that post-date the runtime.)
+    require_artifacts!();
+    for config in ["lm_tiny", "vit_tiny", "vlm_tiny"] {
+        let rt = runtime(config);
+        let entries: Vec<String> =
+            rt.manifest.entries.keys().cloned().collect();
+        let refs: Vec<&str> = entries.iter().map(|s| s.as_str()).collect();
+        rt.warmup(&refs)
+            .unwrap_or_else(|e| panic!("{config}: {e:#}"));
+    }
+}
+
+#[test]
+fn init_is_deterministic_and_seed_sensitive() {
+    require_artifacts!();
+    let rt = runtime("lm_tiny");
+    let trainer = Trainer::new(&rt);
+    let a = trainer.init_params("init", 7).unwrap();
+    let b = trainer.init_params("init", 7).unwrap();
+    let c = trainer.init_params("init", 8).unwrap();
+    assert_eq!(a, b);
+    assert_ne!(a, c);
+    assert_eq!(a.len(), rt.manifest.teacher_params.total());
+    assert!(a.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn equivalence_capacity_one_through_full_stack() {
+    // §4.1: bypass-mode elastic forward == teacher forward, bit-for-bit up
+    // to fp reassociation, measured through PJRT (not jax).
+    require_artifacts!();
+    let rt = runtime("lm_tiny");
+    let trainer = Trainer::new(&rt);
+    let params = trainer.init_params("init", 1).unwrap();
+    let router = trainer.init_params("router_init_r8", 2).unwrap();
+    let tokens = token_batch(&rt, 3);
+    let l = rt.manifest.n_layers();
+    let h = rt.manifest.n_heads();
+
+    let head_mask = vec![1.0f32; l * h];
+    let ones = vec![1.0f32; l];
+    let t_out = rt
+        .exec("teacher_forward", &[
+            Arg::F32(&params),
+            Arg::I32(&tokens),
+            Arg::F32(&head_mask),
+            Arg::F32(&ones),
+            Arg::F32(&ones),
+        ])
+        .unwrap();
+    let t_logits = t_out.f32(0).unwrap();
+
+    let caps = Caps::full();
+    let e_out = rt
+        .exec("elastic_forward_r8", &[
+            Arg::F32(&params),
+            Arg::F32(&router),
+            Arg::I32(&tokens),
+            Arg::F32(&caps.0),
+            Arg::F32(&ones),
+            Arg::ScalarF32(2.0), // bypass
+        ])
+        .unwrap();
+    let e_logits = e_out.f32(0).unwrap();
+    let max_diff = t_logits
+        .iter()
+        .zip(&e_logits)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-4, "equivalence violated: max diff {max_diff}");
+
+    // serve tier 1.0 must match too
+    let router0 = trainer.init_params("router_init_r0", 2).unwrap();
+    let s_out = rt
+        .exec("serve_cap100", &[
+            Arg::F32(&params),
+            Arg::F32(&router0),
+            Arg::I32(&tokens),
+        ])
+        .unwrap();
+    let s_logits = s_out.f32(0).unwrap();
+    let max_diff_s = t_logits
+        .iter()
+        .zip(&s_logits)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff_s < 1e-4, "serve tier 1.0 differs: {max_diff_s}");
+}
+
+#[test]
+fn pretrain_steps_reduce_loss() {
+    require_artifacts!();
+    let rt = runtime("lm_tiny");
+    let mut trainer = Trainer::new(&rt);
+    let init = trainer.init_params("init", 11).unwrap();
+    let mut seed = 100u64;
+    let (_, losses) = trainer
+        .pretrain("pretrain_step", init, 25, 3e-3, || {
+            seed += 1;
+            vec![elastiformer::coordinator::trainer::BatchArg::Tokens(
+                token_batch(&rt, seed))]
+        })
+        .unwrap();
+    let first: f32 = losses[..5].iter().sum::<f32>() / 5.0;
+    let last: f32 = losses[losses.len() - 5..].iter().sum::<f32>() / 5.0;
+    assert!(last < first - 0.2,
+            "pretrain did not learn: {first:.3} -> {last:.3}");
+}
+
+#[test]
+fn distill_reduces_distill_loss_and_respects_capacity() {
+    require_artifacts!();
+    let rt = runtime("lm_tiny");
+    let mut trainer = Trainer::new(&rt);
+    let teacher = trainer.init_params("init", 21).unwrap();
+    let router = trainer.init_params("router_init_r0", 22).unwrap();
+    let l = rt.manifest.n_layers();
+    let caps = Caps([0.75, 0.5, 1.0, 0.5]);
+    let layer_en = vec![1.0f32; l];
+    let mut seed = 200u64;
+    let (router2, hist) = trainer
+        .distill_lm("distill_step_r0", &teacher, &teacher, router.clone(),
+                    20, 2e-3, caps, &layer_en, 1.0, || {
+                        seed += 1;
+                        token_batch(&rt, seed)
+                    })
+        .unwrap();
+    assert_eq!(router2.len(), router.len());
+    assert!(hist.last().unwrap().distill < hist.first().unwrap().distill,
+            "distill loss did not move down");
+    // fraction of MLP tokens selected must track the capacity (0.5)
+    let frac = hist.last().unwrap().frac_tokens;
+    assert!((frac - 0.5).abs() < 0.05, "frac_tokens {frac} vs cap 0.5");
+}
+
+#[test]
+fn elastic_forward_stats_respect_topk_counts() {
+    require_artifacts!();
+    let rt = runtime("lm_tiny");
+    let trainer = Trainer::new(&rt);
+    let params = trainer.init_params("init", 31).unwrap();
+    let router = trainer.init_params("router_init_r0", 32).unwrap();
+    let tokens = token_batch(&rt, 33);
+    let l = rt.manifest.n_layers();
+    let t = rt.manifest.seq_len();
+    let b = rt.manifest.batch();
+    let ones = vec![1.0f32; l];
+    let caps = Caps([0.5, 0.25, 1.0, 1.0]);
+    let out = rt
+        .exec("elastic_forward_r0", &[
+            Arg::F32(&params),
+            Arg::F32(&router),
+            Arg::I32(&tokens),
+            Arg::F32(&caps.0),
+            Arg::F32(&ones),
+            Arg::ScalarF32(0.0),
+        ])
+        .unwrap();
+    let m_mha = out.f32(4).unwrap(); // [B, L, T]
+    let m_mlp = out.f32(5).unwrap();
+    for bi in 0..b {
+        for li in 0..l {
+            let row = &m_mha[(bi * l + li) * t..(bi * l + li + 1) * t];
+            let count: f32 = row.iter().sum();
+            assert_eq!(count as usize, t / 2,
+                       "mha mask count {count} != {}", t / 2);
+            let row2 = &m_mlp[(bi * l + li) * t..(bi * l + li + 1) * t];
+            let count2: f32 = row2.iter().sum();
+            assert_eq!(count2 as usize, t / 4);
+        }
+    }
+}
+
+#[test]
+fn serve_tiers_run_and_lower_capacity_changes_output() {
+    require_artifacts!();
+    let rt = runtime("lm_tiny");
+    let trainer = Trainer::new(&rt);
+    let params = trainer.init_params("init", 41).unwrap();
+    let router = trainer.init_params("router_init_r0", 42).unwrap();
+    let tokens = token_batch(&rt, 43);
+    let mut outs = Vec::new();
+    for entry in ["serve_cap100", "serve_cap50", "serve_cap25"] {
+        let out = rt
+            .exec(entry, &[
+                Arg::F32(&params),
+                Arg::F32(&router),
+                Arg::I32(&tokens),
+            ])
+            .unwrap();
+        outs.push(out.f32(0).unwrap());
+    }
+    assert!(outs[0].iter().zip(&outs[1]).any(|(a, b)| (a - b).abs() > 1e-3),
+            "cap 0.5 identical to cap 1.0?");
+    assert!(outs.iter().all(|o| o.iter().all(|x| x.is_finite())));
+}
+
+#[test]
+fn serving_engine_end_to_end() {
+    require_artifacts!();
+    let rt = runtime("lm_tiny");
+    let trainer = Trainer::new(&rt);
+    let params = trainer.init_params("init", 51).unwrap();
+    let router = trainer.init_params("router_init_r0", 52).unwrap();
+    let t = rt.manifest.seq_len();
+    let mut server =
+        ElasticServer::new(&rt, &params, &router, ServeConfig::standard())
+            .unwrap();
+    let n = 24;
+    let (tx, rx) = std::sync::mpsc::channel();
+    let producer = std::thread::spawn(move || {
+        let tok = Tokenizer::new();
+        for id in 0..n as u64 {
+            let text = format!("request number {id}");
+            tx.send(Request {
+                id,
+                tokens: tok.encode_padded(&text, t),
+                submitted: std::time::Instant::now(),
+            })
+            .unwrap();
+        }
+    });
+    let report = server.run(rx, n).unwrap();
+    producer.join().unwrap();
+    assert_eq!(report.completions.len(), n);
+    assert!(report.throughput_rps() > 0.0);
+    let served: usize = report.tier_counts.iter().map(|(_, c)| c).sum();
+    assert_eq!(served, n);
+    // all ids served exactly once
+    let mut ids: Vec<u64> = report.completions.iter().map(|c| c.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..n as u64).collect::<Vec<_>>());
+}
+
+#[test]
+fn vit_bypass_cosine_is_one_through_stack() {
+    require_artifacts!();
+    let rt = runtime("vit_tiny");
+    let trainer = Trainer::new(&rt);
+    let params = trainer.init_params("init", 61).unwrap();
+    let router = trainer.init_params("router_init", 62).unwrap();
+    let b = rt.manifest.batch();
+    let size = rt.manifest.cfg_usize("img_size").unwrap();
+    let images: Vec<f32> =
+        elastiformer::data::imagen::dataset(b, size, None, 63)
+            .into_iter()
+            .flat_map(|(im, _)| im)
+            .collect();
+    let l = rt.manifest.n_layers();
+    let ones = vec![1.0f32; l];
+    let caps = Caps::full();
+    let out = rt
+        .exec("elastic_forward", &[
+            Arg::F32(&params),
+            Arg::F32(&router),
+            Arg::F32(&images),
+            Arg::F32(&caps.0),
+            Arg::F32(&ones),
+            Arg::ScalarF32(2.0),
+        ])
+        .unwrap();
+    let cos = out.f32(3).unwrap();
+    for c in cos {
+        assert!((c - 1.0).abs() < 1e-4, "bypass cosine {c}");
+    }
+}
+
+#[test]
+fn vlm_forward_and_mask_counts() {
+    require_artifacts!();
+    let rt = runtime("vlm_tiny");
+    let trainer = Trainer::new(&rt);
+    let params = trainer.init_params("init", 71).unwrap();
+    let router = trainer.init_params("router_init_lin", 72).unwrap();
+    let b = rt.manifest.batch();
+    let n_img = rt.manifest.cfg_usize("n_img_tokens").unwrap();
+    let text_len = rt.manifest.cfg_usize("text_len").unwrap();
+    let size = rt.manifest.cfg_usize("img_size").unwrap();
+    let images: Vec<f32> =
+        elastiformer::data::imagen::dataset(b, size, None, 73)
+            .into_iter()
+            .flat_map(|(im, _)| im)
+            .collect();
+    let tok = Tokenizer::new();
+    let texts: Vec<i32> = (0..b)
+        .flat_map(|i| tok.encode_padded(&format!("caption {i}"), text_len))
+        .collect();
+    let out = rt
+        .exec("elastic_forward_lin", &[
+            Arg::F32(&params),
+            Arg::F32(&router),
+            Arg::F32(&images),
+            Arg::I32(&texts),
+            Arg::ScalarF32(0.5),
+            Arg::ScalarF32(0.0),
+        ])
+        .unwrap();
+    let mask = out.f32(3).unwrap(); // [B, n_img]
+    for bi in 0..b {
+        let count: f32 = mask[bi * n_img..(bi + 1) * n_img].iter().sum();
+        assert_eq!(count as usize, n_img.div_ceil(2));
+    }
+}
+
+#[test]
+fn capacity_controller_property_monotone() {
+    // in-repo property harness over the controller invariant
+    elastiformer::proptest::check("controller_monotone", 50, |rng| {
+        let n_tiers = 2 + rng.below(4);
+        let tiers: Vec<f32> =
+            (0..n_tiers).map(|i| 1.0 - 0.2 * i as f32).collect();
+        let c = CapacityController::new(tiers, 1.0 + rng.f64() * 10.0);
+        let mut prev = f32::INFINITY;
+        let mut depth = 0.0f64;
+        for step in 0..30 {
+            depth += rng.f64() * 3.0; // monotone increasing load
+            let t = c.tier_for_depth(depth);
+            if t > prev + 1e-9 {
+                return Err(format!("tier rose: {prev} -> {t} at {step}"));
+            }
+            prev = t;
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,229 @@
+//! Property-based tests over coordinator invariants (in-repo harness,
+//! see src/proptest.rs).  No artifacts required — these cover the pure
+//! substrates: batcher, capacity controller, tokenizer, JSON codec,
+//! checkpoint format, top-k/ranking math mirrors, schedules.
+
+use elastiformer::checkpoint::Checkpoint;
+use elastiformer::coordinator::schedule::LrSchedule;
+use elastiformer::coordinator::serving::CapacityController;
+use elastiformer::data::loader::Batcher;
+use elastiformer::data::{capgen, imagen, Tokenizer};
+use elastiformer::json::{self, Value};
+use elastiformer::metrics::bootstrap_ci;
+use elastiformer::proptest::check;
+use elastiformer::rng::Rng;
+
+#[test]
+fn prop_batcher_full_batches_and_epoch_coverage() {
+    check("batcher_coverage", 50, |rng| {
+        let n = 1 + rng.below(40);
+        let b = 1 + rng.below(12);
+        let mut batcher = Batcher::new(n, b, rng.next_u64());
+        let mut seen = vec![0usize; n];
+        let epochs = 3;
+        let steps = (n * epochs).div_ceil(b);
+        for _ in 0..steps {
+            let idx = batcher.next_indices();
+            if idx.len() != b {
+                return Err(format!("batch size {} != {b}", idx.len()));
+            }
+            for i in idx {
+                if i >= n {
+                    return Err(format!("index {i} out of range {n}"));
+                }
+                seen[i] += 1;
+            }
+        }
+        // coverage: every row appears at least once over >= 3 epochs
+        if seen.iter().any(|&c| c == 0) {
+            return Err("some row never sampled across epochs".into());
+        }
+        // balance: counts differ by at most the wrap-around slack
+        let (mn, mx) = (seen.iter().min().unwrap(), seen.iter().max().unwrap());
+        if mx - mn > epochs + 1 {
+            return Err(format!("unbalanced sampling: min {mn}, max {mx}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_controller_never_exceeds_bounds_and_monotone() {
+    check("controller_bounds", 60, |rng| {
+        let k = 2 + rng.below(3);
+        let tiers: Vec<f32> = (0..k).map(|i| 1.0 - i as f32 * 0.25).collect();
+        let mut c = CapacityController::new(tiers.clone(), 1.0 + rng.f64() * 8.0);
+        let lo = *tiers.last().unwrap();
+        for _ in 0..50 {
+            let t = c.choose(rng.below(64));
+            if !(lo..=1.0).contains(&t) {
+                return Err(format!("tier {t} out of [{lo}, 1.0]"));
+            }
+        }
+        // pure mapping is monotone non-increasing in depth
+        let mut prev = f32::INFINITY;
+        for d in 0..100 {
+            let t = c.tier_for_depth(d as f64 * 0.5);
+            if t > prev + 1e-9 {
+                return Err(format!("not monotone at depth {d}"));
+            }
+            prev = t;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tokenizer_roundtrip_and_padding() {
+    check("tokenizer_roundtrip", 80, |rng| {
+        let tok = Tokenizer::new();
+        let len = 4 + rng.below(60);
+        let n_chars = rng.below(100);
+        let s: String = (0..n_chars)
+            .map(|_| (rng.range(32, 126) as u8) as char)
+            .collect();
+        if tok.decode(&tok.encode(&s)) != s {
+            return Err(format!("roundtrip failed for {s:?}"));
+        }
+        let padded = tok.encode_padded(&s, len);
+        if padded.len() != len {
+            return Err(format!("padded len {} != {len}", padded.len()));
+        }
+        if padded[0] != elastiformer::data::tokenizer::BOS {
+            return Err("missing BOS".into());
+        }
+        if !padded.contains(&elastiformer::data::tokenizer::EOS) {
+            return Err("missing EOS".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn random_value(rng: &mut Rng, depth: usize) -> Value {
+        match if depth > 3 { rng.below(4) } else { rng.below(6) } {
+            0 => Value::Null,
+            1 => Value::Bool(rng.chance(0.5)),
+            2 => Value::Num((rng.range(-1_000_000, 1_000_000) as f64) / 64.0),
+            3 => {
+                let n = rng.below(12);
+                Value::Str(
+                    (0..n).map(|_| (rng.range(32, 126) as u8) as char).collect())
+            }
+            4 => Value::Arr(
+                (0..rng.below(5)).map(|_| random_value(rng, depth + 1)).collect()),
+            _ => Value::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), random_value(rng, depth + 1)))
+                    .collect()),
+        }
+    }
+    check("json_roundtrip", 80, |rng| {
+        let v = random_value(rng, 0);
+        let s = json::to_string(&v);
+        let v2 = json::parse(&s).map_err(|e| format!("parse failed: {e}"))?;
+        if v != v2 {
+            return Err(format!("roundtrip mismatch: {s}"));
+        }
+        let sp = json::to_string_pretty(&v);
+        let v3 = json::parse(&sp).map_err(|e| format!("pretty parse: {e}"))?;
+        if v != v3 {
+            return Err("pretty roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_checkpoint_roundtrip_random() {
+    check("checkpoint_roundtrip", 30, |rng| {
+        let n = rng.below(5000);
+        let params: Vec<f32> = (0..n).map(|_| rng.gaussian_f32(1.0)).collect();
+        let ck = Checkpoint::new("cfg", "kind", rng.next_u64(), params);
+        let path = std::env::temp_dir()
+            .join(format!("efck_prop_{}.bin", rng.next_u64()));
+        ck.save(&path).map_err(|e| e.to_string())?;
+        let back = Checkpoint::load(&path).map_err(|e| e.to_string())?;
+        let _ = std::fs::remove_file(&path);
+        if back != ck {
+            return Err("roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lr_schedule_bounded_and_finite() {
+    check("lr_schedule", 60, |rng| {
+        let total = 1 + rng.below(2000);
+        let base = 10f64.powf(-(1.0 + rng.f64() * 4.0));
+        let s = LrSchedule::cosine(base, total);
+        for step in 0..total + 10 {
+            let lr = s.at(step);
+            if !lr.is_finite() || lr <= 0.0 || lr > base * 1.0001 {
+                return Err(format!("lr {lr} out of (0, {base}] at {step}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bootstrap_ci_orders_and_brackets() {
+    check("bootstrap_ci", 40, |rng| {
+        let n = 2 + rng.below(200);
+        let xs: Vec<f64> = (0..n).map(|_| rng.gaussian() * 3.0).collect();
+        let (mean, lo, hi) = bootstrap_ci(&xs, 100, 0.95, rng.next_u64());
+        if !(lo <= hi) {
+            return Err(format!("lo {lo} > hi {hi}"));
+        }
+        if mean < lo - 3.0 || mean > hi + 3.0 {
+            return Err(format!("mean {mean} far outside [{lo}, {hi}]"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_caption_scores_in_range_and_truth_scores_perfectly() {
+    check("caption_scores", 60, |rng| {
+        let class = rng.below(imagen::NUM_CLASSES);
+        let (_, scene) = imagen::gen_image(rng, class, 8);
+        let cap = capgen::caption(&scene, rng);
+        let sc = capgen::score_caption(&cap, &scene);
+        if sc.recall != 1.0 || sc.hallucination != 0.0 {
+            return Err(format!("truth caption scored {sc:?}: {cap}"));
+        }
+        // arbitrary text stays in range
+        let junk: String = (0..rng.below(40))
+            .map(|_| (rng.range(97, 122) as u8) as char)
+            .collect();
+        let sj = capgen::score_caption(&junk, &scene);
+        if !(0.0..=1.0).contains(&sj.recall)
+            || !(0.0..=1.0).contains(&sj.hallucination) {
+            return Err(format!("junk caption out of range {sj:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_imagen_images_bounded_and_class_deterministic() {
+    check("imagen_bounds", 40, |rng| {
+        let class = rng.below(imagen::NUM_CLASSES);
+        let size = 8 + rng.below(3) * 8;
+        let (img, scene) = imagen::gen_image(rng, class, size);
+        if img.len() != size * size * 3 {
+            return Err("bad size".into());
+        }
+        if img.iter().any(|&p| !(0.0..=1.0).contains(&p)) {
+            return Err("pixel out of [0,1]".into());
+        }
+        let again = imagen::render(&scene, size);
+        if again != img {
+            return Err("render not pure".into());
+        }
+        Ok(())
+    });
+}
