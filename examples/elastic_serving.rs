@@ -2,12 +2,14 @@
 //! watch the capacity controller trade compute for throughput.
 //!
 //!     cargo run --release --example elastic_serving -- \
-//!         [--requests 96] [--config lm_tiny]
+//!         [--requests 96] [--config lm_tiny] [--workers 1]
 //!
 //! Three phases of offered load (light / burst / drain); the report shows
 //! per-tier request counts, latency percentiles and the mean capacity
 //! actually served — the paper's "variable inference time compute" as an
-//! operable system.
+//! operable system.  The engine is the multi-worker `Executor`-trait
+//! pipeline: each worker thread builds its own `XlaExecutor` (PJRT
+//! handles are not `Send`) from the factory passed to `run`.
 
 use std::time::{Duration, Instant};
 
@@ -15,16 +17,17 @@ use anyhow::Result;
 
 use elastiformer::cli::Args;
 use elastiformer::coordinator::serving::{
-    ElasticServer, Request, ServeConfig,
+    ElasticServer, Request, ServeConfig, XlaExecutor,
 };
 use elastiformer::data::{mathgen, Tokenizer};
-use elastiformer::experiments::common::Ctx;
+use elastiformer::experiments::common::{artifacts_dir, Ctx};
 use elastiformer::rng::Rng;
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
     let config = args.str_or("config", "lm_tiny");
     let n_requests = args.usize_or("requests", 96)?;
+    let workers = args.usize_or("workers", 1)?;
     let seed = args.u64_or("seed", 42)?;
 
     let ctx = Ctx::load(config, seed)?;
@@ -32,12 +35,16 @@ fn main() -> Result<()> {
     let router = ctx.router_init("router_init_r0", seed as i32)?;
     let t = ctx.rt.manifest.seq_len();
 
-    println!("warming up serve tiers (compiling 4 executables)...");
-    let mut server = ElasticServer::new(&ctx.rt, &teacher, &router,
-                                        ServeConfig::standard())?;
+    println!("spinning up {workers} worker(s) — each compiles 4 serve \
+              tiers on its own thread...");
+    let cfg = ServeConfig::standard().with_workers(workers);
+    let factory = XlaExecutor::factory(artifacts_dir(), config.to_string(),
+                                       teacher, router, cfg.tiers.clone());
+    let server = ElasticServer::new(cfg);
 
-    let (tx, rx) = std::sync::mpsc::channel();
-    let producer = std::thread::spawn(move || {
+    // the load ramp starts only once every worker is warm — otherwise
+    // the light phase would be swallowed by PJRT compile time
+    let report = server.run_with_producer(factory, move |tx| {
         let tok = Tokenizer::new();
         let mut rng = Rng::new(seed ^ 0xE5);
         let phase_len = n_requests / 3;
@@ -62,13 +69,12 @@ fn main() -> Result<()> {
             }
             std::thread::sleep(gap);
         }
-    });
-
-    let report = server.run(rx, n_requests)?;
-    producer.join().ok();
+    }, n_requests)?;
 
     println!("\n== serving report ==");
     println!("requests : {}", report.completions.len());
+    println!("workers  : {} (completions {:?})", report.workers,
+             report.worker_counts());
     println!("wall     : {:.2}s  ({:.1} req/s)", report.wall_secs,
              report.throughput_rps());
     println!("latency  : p50 {:.1} ms   p99 {:.1} ms",

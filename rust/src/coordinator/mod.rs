@@ -1,8 +1,9 @@
 //! The paper's system contribution at L3: post-training self-distillation
 //! orchestration (producing router checkpoints) plus an elastic serving
-//! engine that realizes "variable inference time compute" as an operable
-//! system (admission queue -> capacity controller -> per-tier batcher ->
-//! PJRT worker).
+//! subsystem that realizes "variable inference time compute" as an
+//! operable system (bounded admission queue -> shared capacity
+//! controller -> N worker threads -> `Executor` backends: PJRT or the
+//! deterministic simulator; see serving/README.md).
 
 pub mod generation;
 pub mod schedule;

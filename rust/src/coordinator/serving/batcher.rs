@@ -1,0 +1,95 @@
+//! Batch formation: turn a FIFO run of admitted requests into the exact
+//! `[batch, seq_len]` i32 tensor the static-capacity artifacts expect.
+//!
+//! Pure host code, extracted from the old engine loop so its invariants
+//! (no request dropped or duplicated, output always exactly
+//! `batch * seq_len` tokens, request order preserved) are checkable by
+//! the in-tree property harness without any runtime.
+
+use super::Request;
+
+/// One formed execution batch: the requests it carries (admission order)
+/// and the flattened, padded token tensor.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub requests: Vec<Request>,
+    pub tokens: Vec<i32>,
+    /// rows added beyond `requests.len()` to fill the static batch shape
+    pub padded_rows: usize,
+}
+
+/// Flatten `requests` into a `batch * seq_len` token buffer.
+///
+/// Each request row is clamped to `seq_len` (short rows zero-pad, long
+/// rows truncate — producers normally pre-pad via
+/// `Tokenizer::encode_padded`, this just makes the invariant total).
+/// Partial batches are filled by repeating the last real row, so the
+/// executable sees realistic token statistics instead of zeros.
+///
+/// Panics if `requests` is empty or longer than `batch`: the worker loop
+/// guarantees `1..=batch` requests per call.
+pub fn form_batch(requests: Vec<Request>, batch: usize, seq_len: usize)
+                  -> Batch {
+    assert!(!requests.is_empty(), "form_batch on empty request set");
+    assert!(requests.len() <= batch,
+            "form_batch overfull: {} > {batch}", requests.len());
+    let mut tokens = Vec::with_capacity(batch * seq_len);
+    for r in &requests {
+        let n = r.tokens.len().min(seq_len);
+        tokens.extend_from_slice(&r.tokens[..n]);
+        tokens.resize(tokens.len() + (seq_len - n), 0);
+    }
+    let padded_rows = batch - requests.len();
+    for _ in 0..padded_rows {
+        let row_start = tokens.len() - seq_len;
+        tokens.extend_from_within(row_start..row_start + seq_len);
+    }
+    debug_assert_eq!(tokens.len(), batch * seq_len);
+    Batch { requests, tokens, padded_rows }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    fn req(id: u64, tokens: Vec<i32>) -> Request {
+        Request { id, tokens, submitted: Instant::now() }
+    }
+
+    #[test]
+    fn full_batch_is_verbatim_concatenation() {
+        let b = form_batch(
+            vec![req(0, vec![1, 2, 3]), req(1, vec![4, 5, 6])], 2, 3);
+        assert_eq!(b.tokens, vec![1, 2, 3, 4, 5, 6]);
+        assert_eq!(b.padded_rows, 0);
+        assert_eq!(b.requests.len(), 2);
+    }
+
+    #[test]
+    fn partial_batch_repeats_last_row() {
+        let b = form_batch(vec![req(0, vec![7, 8])], 3, 2);
+        assert_eq!(b.tokens, vec![7, 8, 7, 8, 7, 8]);
+        assert_eq!(b.padded_rows, 2);
+    }
+
+    #[test]
+    fn ragged_rows_clamp_to_seq_len() {
+        let b = form_batch(
+            vec![req(0, vec![1]), req(1, vec![2, 3, 4, 5])], 2, 3);
+        assert_eq!(b.tokens, vec![1, 0, 0, 2, 3, 4]);
+    }
+
+    #[test]
+    fn zero_seq_len_yields_empty_tensor() {
+        let b = form_batch(vec![req(0, vec![])], 4, 0);
+        assert!(b.tokens.is_empty());
+        assert_eq!(b.padded_rows, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty request set")]
+    fn empty_input_panics() {
+        form_batch(Vec::new(), 2, 2);
+    }
+}

@@ -1,0 +1,109 @@
+//! Load-adaptive capacity controller with hysteresis.
+//!
+//! Maps smoothed queue depth to one of the available capacity tiers:
+//! empty queue -> highest capacity; beyond `depth_per_tier` waiting
+//! requests per step, shed one tier, and so on.  Hysteresis (EWMA on the
+//! depth) prevents tier oscillation at load boundaries.  In the
+//! multi-worker engine one controller instance is shared behind a mutex
+//! and observes the *global* backlog, so all workers shed together.
+
+/// See module docs.  Invariants (property-tested in
+/// `tests/properties.rs`):
+///  * `tier_for_depth` is monotone non-increasing in depth
+///  * every returned tier is one of the configured tiers
+///  * after the queue empties, repeated `choose(0)` decays the EWMA and
+///    converges back to the top tier
+#[derive(Debug, Clone)]
+pub struct CapacityController {
+    /// available tiers, descending capacity (e.g. [1.0, 0.75, 0.5, 0.25])
+    pub tiers: Vec<f32>,
+    pub depth_per_tier: f64,
+    ewma: f64,
+    alpha: f64,
+}
+
+impl CapacityController {
+    pub fn new(mut tiers: Vec<f32>, depth_per_tier: f64)
+               -> CapacityController {
+        assert!(!tiers.is_empty());
+        // a non-positive ladder step makes tier_for_depth divide into
+        // NaN/inf and silently pin the tier; fail loudly instead
+        assert!(depth_per_tier.is_finite() && depth_per_tier > 0.0,
+                "depth_per_tier must be finite and > 0, got {depth_per_tier}");
+        tiers.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        CapacityController { tiers, depth_per_tier, ewma: 0.0, alpha: 0.4 }
+    }
+
+    /// Observe the current queue depth and pick a tier.
+    pub fn choose(&mut self, queue_depth: usize) -> f32 {
+        self.ewma = self.alpha * queue_depth as f64
+            + (1.0 - self.alpha) * self.ewma;
+        self.tier_for_depth(self.ewma)
+    }
+
+    /// Pure mapping (for tests / property checks): tier for a given
+    /// smoothed depth without updating state.
+    pub fn tier_for_depth(&self, depth: f64) -> f32 {
+        let idx = (depth / self.depth_per_tier).floor() as usize;
+        self.tiers[idx.min(self.tiers.len() - 1)]
+    }
+
+    /// Highest-capacity tier (what an idle system serves).
+    pub fn top_tier(&self) -> f32 {
+        self.tiers[0]
+    }
+
+    /// Current smoothed depth (EWMA state).
+    pub fn smoothed_depth(&self) -> f64 {
+        self.ewma
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn controller_monotone_in_depth() {
+        let c = CapacityController::new(vec![1.0, 0.75, 0.5, 0.25], 4.0);
+        let mut prev = f32::INFINITY;
+        for d in 0..40 {
+            let t = c.tier_for_depth(d as f64);
+            assert!(t <= prev);
+            prev = t;
+        }
+        assert_eq!(c.tier_for_depth(0.0), 1.0);
+        assert_eq!(c.tier_for_depth(100.0), 0.25);
+    }
+
+    #[test]
+    fn controller_hysteresis_smooths_spikes() {
+        let mut c = CapacityController::new(vec![1.0, 0.5], 8.0);
+        // single spike shouldn't immediately drop the tier
+        assert_eq!(c.choose(0), 1.0);
+        let t = c.choose(20); // ewma = 0.4*20 = 8 -> boundary
+        let t2 = c.choose(0); // decays back
+        assert!(t >= 0.5);
+        assert!(t2 >= t - 1e-6 || t2 == 1.0);
+    }
+
+    #[test]
+    fn controller_sorts_tiers() {
+        let c = CapacityController::new(vec![0.25, 1.0, 0.5], 1.0);
+        assert_eq!(c.tiers, vec![1.0, 0.5, 0.25]);
+        assert_eq!(c.top_tier(), 1.0);
+    }
+
+    #[test]
+    fn ewma_decays_back_to_top_tier() {
+        let mut c = CapacityController::new(vec![1.0, 0.5, 0.25], 2.0);
+        for _ in 0..10 {
+            c.choose(50); // sustained overload
+        }
+        assert_eq!(c.choose(50), 0.25);
+        for _ in 0..64 {
+            c.choose(0); // queue empties
+        }
+        assert_eq!(c.choose(0), 1.0, "ewma {}", c.smoothed_depth());
+    }
+}

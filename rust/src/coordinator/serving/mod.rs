@@ -1,0 +1,463 @@
+//! Elastic serving subsystem — the systems realization of "variable
+//! inference time compute" (paper §1), grown from the original
+//! single-threaded monolith into an independently testable pipeline:
+//!
+//! ```text
+//!   producers ──mpsc──▶ admission (engine thread)
+//!                            │ bounded push (backpressure)
+//!                            ▼
+//!                     [AdmissionQueue]          queue.rs
+//!                      /     |     \
+//!               worker 0  worker 1  worker N-1   worker.rs
+//!               pop_batch -> CapacityController  controller.rs
+//!               form_batch (pad to B×T)          batcher.rs
+//!               Executor::execute(tier, tokens)
+//!                  |            |
+//!              XlaExecutor   SimExecutor         worker.rs / sim.rs
+//!              (PJRT, owns   (seeded latency
+//!               non-Send      model, hermetic)
+//!               handles)
+//!                      \     |     /
+//!                      [ServeReport]             report.rs
+//! ```
+//!
+//! Under light load every request runs at capacity 1.0 (teacher-exact, see
+//! the §4.1 equivalence); as the shared queue deepens the controller sheds
+//! compute by routing batches to lower-capacity tiers, trading the paper's
+//! measured quality-vs-capacity curve for throughput.  PJRT handles are
+//! not `Send`, so each worker constructs its own [`Executor`] on its own
+//! thread via the factory passed to [`ElasticServer::run`]; the
+//! [`SimExecutor`] implementor makes the whole admission → batch →
+//! tier-select → execute → complete pipeline runnable without artifacts.
+
+pub mod batcher;
+pub mod controller;
+pub mod queue;
+pub mod report;
+pub mod sim;
+pub mod worker;
+
+pub use batcher::{form_batch, Batch};
+pub use controller::CapacityController;
+pub use queue::AdmissionQueue;
+pub use report::{Completion, ServeReport};
+pub use sim::{SimExecutor, SimSpec};
+pub use worker::{Executor, XlaExecutor};
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+/// One inference request: a fixed-length token row.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub submitted: Instant,
+}
+
+/// Tolerance for matching an f32 capacity against the configured
+/// ladder — the single source of truth for tier identity across
+/// worker dispatch, sim validation and report accounting.
+pub(crate) const TIER_EPS: f32 = 1e-6;
+
+/// The one rule for "is this the same tier?" in this subsystem.
+pub(crate) fn tier_matches(a: f32, b: f32) -> bool {
+    (a - b).abs() < TIER_EPS
+}
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// (capacity, entry name), e.g. (0.5, "serve_cap50"), descending.
+    pub tiers: Vec<(f32, String)>,
+    /// queue depth per shed tier (see [`CapacityController`])
+    pub depth_per_tier: f64,
+    /// max time a worker waits filling a batch before running partial
+    pub max_batch_wait: Duration,
+    /// number of execution workers (each owns one `Executor`)
+    pub workers: usize,
+    /// admission queue bound; the admission loop blocks when full, so
+    /// its mpsc front-end stops draining (see queue.rs on backpressure
+    /// scope — the mpsc itself is unbounded)
+    pub queue_bound: usize,
+}
+
+impl ServeConfig {
+    /// The four static-capacity artifact tiers produced by `make
+    /// artifacts` (python/compile/aot.py, configs.SERVE_TIERS).
+    pub fn standard() -> ServeConfig {
+        ServeConfig {
+            tiers: vec![
+                (1.0, "serve_cap100".into()),
+                (0.75, "serve_cap75".into()),
+                (0.5, "serve_cap50".into()),
+                (0.25, "serve_cap25".into()),
+            ],
+            depth_per_tier: 8.0,
+            max_batch_wait: Duration::from_millis(20),
+            workers: 1,
+            queue_bound: 256,
+        }
+    }
+
+    /// Same tier ladder with synthetic entry names — for simulation
+    /// executors that never resolve entries against a manifest.
+    pub fn sim() -> ServeConfig {
+        let mut cfg = ServeConfig::standard();
+        for (cap, entry) in &mut cfg.tiers {
+            *entry = format!("sim_cap{:02.0}", *cap * 100.0);
+        }
+        cfg
+    }
+
+    pub fn with_workers(mut self, workers: usize) -> ServeConfig {
+        self.workers = workers.max(1);
+        self
+    }
+
+    pub fn with_queue_bound(mut self, bound: usize) -> ServeConfig {
+        self.queue_bound = bound.max(1);
+        self
+    }
+
+    pub fn with_depth_per_tier(mut self, depth: f64) -> ServeConfig {
+        self.depth_per_tier = depth;
+        self
+    }
+
+    pub fn with_max_batch_wait(mut self, wait: Duration) -> ServeConfig {
+        self.max_batch_wait = wait;
+        self
+    }
+
+    /// Capacity ladder without entry names, descending.
+    pub fn capacities(&self) -> Vec<f32> {
+        self.tiers.iter().map(|(c, _)| *c).collect()
+    }
+}
+
+/// The serving engine: admission on the calling thread, N execution
+/// workers behind a shared bounded queue, one shared capacity controller
+/// observing the global backlog.
+///
+/// The engine is backend-agnostic: it only knows the [`Executor`] trait.
+/// Because PJRT handles are not `Send`, executors are constructed *on*
+/// their worker thread by the `factory` passed to [`run`](Self::run)
+/// (called once per worker with the worker index).
+pub struct ElasticServer {
+    cfg: ServeConfig,
+}
+
+impl ElasticServer {
+    pub fn new(cfg: ServeConfig) -> ElasticServer {
+        ElasticServer { cfg }
+    }
+
+    /// Serve requests from `rx` until `expected` have been admitted or the
+    /// channel disconnects, then drain: every admitted request completes
+    /// before this returns.  Worker errors abort the run (the queue is
+    /// closed so no thread is left blocked) and surface as `Err`.
+    ///
+    /// The serving clock starts only after every worker's executor is
+    /// built (a readiness latch), so compile/warmup never pollutes the
+    /// reported wall time or throughput.  Requests stamped (`submitted`)
+    /// *before* the fleet is ready still accrue the warmup wait in their
+    /// per-request latencies — producers that should only start once the
+    /// fleet is hot belong in [`run_when_ready`](Self::run_when_ready).
+    pub fn run<F>(&self, factory: F, rx: Receiver<Request>, expected: usize)
+                  -> Result<ServeReport>
+    where
+        F: Fn(usize) -> Result<Box<dyn Executor>> + Sync,
+    {
+        self.run_when_ready(factory, move || rx, expected)
+    }
+
+    /// Spawn `producer` on its own thread once every worker's executor
+    /// is warm, serve everything it sends (up to `expected`), and join
+    /// it before returning — even on error, where the dropped receiver
+    /// makes the producer's next `send` fail and exit.  The common
+    /// "open-loop load from a generator thread" shape without the
+    /// caller juggling channels and join handles.
+    pub fn run_with_producer<F, P>(&self, factory: F, producer: P,
+                                   expected: usize) -> Result<ServeReport>
+    where
+        F: Fn(usize) -> Result<Box<dyn Executor>> + Sync,
+        P: FnOnce(Sender<Request>) + Send + 'static,
+    {
+        let mut handle = None;
+        let report = self.run_when_ready(factory, || {
+            let (tx, rx) = std::sync::mpsc::channel();
+            handle = Some(std::thread::spawn(move || producer(tx)));
+            rx
+        }, expected);
+        if let Some(h) = handle {
+            if let Err(payload) = h.join() {
+                // a panicking producer must not yield a normal-looking
+                // (short) report — propagate, like worker panics do
+                std::panic::resume_unwind(payload);
+            }
+        }
+        report
+    }
+
+    /// Like [`run`](Self::run), but the request source is created only
+    /// after every worker's executor is warm: `source` runs on the
+    /// calling thread once the readiness latch clears (spawn producers
+    /// there), so no request's latency stamp predates a hot fleet.
+    /// Worker panics (factory or executor) are converted into a closed
+    /// queue + a latch arrival by a drop guard, so the engine aborts
+    /// (propagating the panic at scope join) instead of hanging; the
+    /// latch is arrival-only — no worker ever blocks on it — so no
+    /// unwind path can strand a peer.
+    pub fn run_when_ready<F, R>(&self, factory: F, source: R,
+                                expected: usize) -> Result<ServeReport>
+    where
+        F: Fn(usize) -> Result<Box<dyn Executor>> + Sync,
+        R: FnOnce() -> Receiver<Request>,
+    {
+        let caps = self.cfg.capacities();
+        let workers = self.cfg.workers.max(1);
+        let queue = AdmissionQueue::new(self.cfg.queue_bound);
+        let controller = Mutex::new(CapacityController::new(
+            caps.clone(), self.cfg.depth_per_tier));
+        let completions: Mutex<Vec<Completion>> =
+            Mutex::new(Vec::with_capacity(expected.min(1 << 20)));
+        let errors: Mutex<Vec<anyhow::Error>> = Mutex::new(Vec::new());
+        let ready = ReadyLatch::new(workers);
+
+        let start = std::thread::scope(|s| {
+            let queue = &queue;
+            let controller = &controller;
+            let completions = &completions;
+            let errors = &errors;
+            let factory = &factory;
+            let cfg = &self.cfg;
+            let ready = &ready;
+            let caps = &caps;
+            // if the scope body unwinds (source() or the admission loop
+            // panicking), workers blocked on the open queue must still
+            // be released or thread::scope's join hangs mid-unwind;
+            // closing twice on the normal path is a harmless no-op
+            let _close_on_unwind = CloseOnDrop(queue);
+            for w in 0..workers {
+                s.spawn(move || {
+                    // Abnormal exit (Err *or* panic, before or after
+                    // arrival) must close the queue — else the admission
+                    // loop blocks forever on a dead fleet — and must
+                    // arrive at the latch exactly once.
+                    let mut guard = WorkerGuard {
+                        queue,
+                        ready,
+                        arrived: false,
+                        clean_exit: false,
+                    };
+                    // executor built on this thread: PJRT handles never
+                    // cross a thread boundary
+                    let mut exec = match factory(w) {
+                        Ok(e) => e,
+                        Err(e) => {
+                            errors.lock().unwrap().push(e.context(
+                                format!("worker {w}: executor init")));
+                            return; // guard closes queue + arrives
+                        }
+                    };
+                    // a ladder mismatch between ServeConfig and the
+                    // factory should abort here, not per-batch mid-run
+                    for &c in caps.iter() {
+                        if !exec.supports(c) {
+                            errors.lock().unwrap().push(anyhow::anyhow!(
+                                "worker {w}: {} executor does not \
+                                 support configured tier {c}",
+                                exec.name()));
+                            return; // guard closes queue + arrives
+                        }
+                    }
+                    ready.arrive();
+                    guard.arrived = true;
+                    let shared = worker::WorkerShared {
+                        queue,
+                        controller,
+                        completions,
+                        max_batch_wait: cfg.max_batch_wait,
+                    };
+                    match worker::run_worker(&shared, w, exec.as_mut()) {
+                        Ok(_batches) => guard.clean_exit = true,
+                        Err(e) => {
+                            errors.lock().unwrap().push(e.context(
+                                format!("worker {w}: execution")));
+                            // guard closes the queue
+                        }
+                    }
+                });
+            }
+
+            // compile/warmup happens on the workers before this clears;
+            // the serving clock (and any producer spawned by `source`)
+            // starts at readiness, not at spawn
+            ready.wait_all();
+            let rx = source();
+            let start = Instant::now();
+
+            // admission loop: bounded push propagates backpressure to the
+            // producer channel when all workers are saturated
+            let mut admitted = 0usize;
+            while admitted < expected {
+                match rx.recv_timeout(Duration::from_millis(50)) {
+                    Ok(req) => {
+                        if queue.push(req).is_err() {
+                            break; // a worker failed and closed the queue
+                        }
+                        admitted += 1;
+                    }
+                    Err(RecvTimeoutError::Timeout) => {
+                        if queue.is_closed() {
+                            break;
+                        }
+                    }
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            queue.close(); // workers drain the backlog, then exit
+            start
+        });
+
+        let errs = errors.into_inner().unwrap();
+        if !errs.is_empty() {
+            // surface every worker failure, not just the first
+            let msgs: Vec<String> =
+                errs.iter().map(|e| format!("{e:#}")).collect();
+            return Err(anyhow::anyhow!(
+                "{}/{workers} workers failed: {}", msgs.len(),
+                msgs.join(" | ")));
+        }
+        let completions = completions.into_inner().unwrap();
+        Ok(ServeReport::new(completions, start.elapsed().as_secs_f64(),
+                            &caps, workers))
+    }
+}
+
+/// Scope-body drop guard: closes the queue when the engine's calling
+/// thread unwinds, so blocked workers exit and the panic can propagate
+/// through `thread::scope`'s join instead of deadlocking it.
+struct CloseOnDrop<'a>(&'a AdmissionQueue);
+
+impl Drop for CloseOnDrop<'_> {
+    fn drop(&mut self) {
+        self.0.close();
+    }
+}
+
+/// One-shot readiness latch.  Workers *arrive* (never block); only the
+/// engine thread waits for all arrivals.  Unlike `Barrier`, no unwind
+/// path — a panicking spawn loop, a failing worker — can strand a peer
+/// blocked on it, because nothing but the engine thread ever blocks.
+struct ReadyLatch {
+    count: Mutex<usize>,
+    all: Condvar,
+    target: usize,
+}
+
+impl ReadyLatch {
+    fn new(target: usize) -> ReadyLatch {
+        ReadyLatch { count: Mutex::new(0), all: Condvar::new(), target }
+    }
+
+    fn arrive(&self) {
+        let mut c = self.count.lock().unwrap();
+        *c += 1;
+        if *c >= self.target {
+            self.all.notify_all();
+        }
+    }
+
+    fn wait_all(&self) {
+        let mut c = self.count.lock().unwrap();
+        while *c < self.target {
+            c = self.all.wait(c).unwrap();
+        }
+    }
+}
+
+/// Worker-thread drop guard: on any abnormal exit (error return or
+/// panic, before or after arrival) it closes the admission queue so no
+/// producer or sibling blocks forever, and arrives at the readiness
+/// latch if this thread has not yet (exactly-once).
+struct WorkerGuard<'a> {
+    queue: &'a AdmissionQueue,
+    ready: &'a ReadyLatch,
+    arrived: bool,
+    clean_exit: bool,
+}
+
+impl Drop for WorkerGuard<'_> {
+    fn drop(&mut self) {
+        if !self.clean_exit {
+            self.queue.close();
+        }
+        if !self.arrived {
+            self.ready.arrive();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_config_mirrors_standard_ladder() {
+        let std_cfg = ServeConfig::standard();
+        let sim_cfg = ServeConfig::sim();
+        assert_eq!(std_cfg.capacities(), sim_cfg.capacities());
+        assert!(sim_cfg.tiers.iter().all(|(_, e)| e.starts_with("sim_")));
+    }
+
+    #[test]
+    fn builders_clamp_to_valid_values() {
+        let cfg = ServeConfig::standard().with_workers(0).with_queue_bound(0);
+        assert_eq!(cfg.workers, 1);
+        assert_eq!(cfg.queue_bound, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "scoped thread panicked")]
+    fn engine_propagates_factory_panics_instead_of_hanging() {
+        // the WorkerGuard must close the queue and arrive at the latch
+        // on a panicking factory, so the scope join re-raises a panic
+        // (std::thread::scope's fixed "a scoped thread panicked"
+        // message, since the worker's handle is implicitly joined)
+        // instead of the admission loop hanging forever
+        let server = ElasticServer::new(ServeConfig::sim().with_workers(1));
+        let (tx, rx) = std::sync::mpsc::channel::<Request>();
+        drop(tx);
+        let _ = server.run(|_| panic!("factory blew up"), rx, 4);
+    }
+
+    #[test]
+    fn engine_rejects_ladder_mismatch_at_init() {
+        // config ladder [1.0, .75, .5, .25] vs executor ladder [.9, .1]:
+        // must abort at worker init, not per-batch mid-run
+        let server = ElasticServer::new(ServeConfig::sim().with_workers(1));
+        let (tx, rx) = std::sync::mpsc::channel::<Request>();
+        drop(tx);
+        let err = server
+            .run(sim::factory(SimSpec::instant(), vec![0.9, 0.1]), rx, 4)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("does not support"), "{err:#}");
+    }
+
+    #[test]
+    fn engine_surfaces_factory_errors() {
+        let server = ElasticServer::new(
+            ServeConfig::sim().with_workers(2));
+        let (tx, rx) = std::sync::mpsc::channel::<Request>();
+        drop(tx);
+        let err = server
+            .run(|w| anyhow::bail!("no executor for worker {w}"), rx, 4)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("executor init"), "{err:#}");
+    }
+}

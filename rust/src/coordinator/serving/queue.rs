@@ -1,0 +1,256 @@
+//! Bounded multi-producer / multi-consumer admission queue.
+//!
+//! `std::sync::mpsc` channels are unbounded (and their receivers are
+//! single-consumer), so the serving engine uses this small
+//! `Mutex<VecDeque>` + condvar queue instead: pushers block in
+//! [`AdmissionQueue::push`] once `bound` requests are waiting, and
+//! every worker pops batches from the shared front in FIFO order.
+//! Closing wakes all waiters; a worker seeing an empty pop after close
+//! knows the backlog is fully drained.
+//!
+//! Scope of the backpressure: the bound throttles the engine's
+//! *admission loop*, which stops draining its mpsc front-end when
+//! workers fall behind.  Producers feeding that (unbounded) channel
+//! only feel it indirectly; true client-side flow control needs a
+//! bounded front-end (`mpsc::sync_channel` or async admission — see
+//! ROADMAP "Open items").
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::Request;
+
+struct State {
+    items: VecDeque<Request>,
+    closed: bool,
+}
+
+/// Bounded FIFO request queue shared by the admission loop and workers.
+pub struct AdmissionQueue {
+    state: Mutex<State>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    bound: usize,
+}
+
+impl AdmissionQueue {
+    pub fn new(bound: usize) -> AdmissionQueue {
+        AdmissionQueue {
+            state: Mutex::new(State { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            bound: bound.max(1),
+        }
+    }
+
+    /// Enqueue one request, blocking while the queue is at its bound.
+    /// Returns the request back as `Err` if the queue has been closed
+    /// (shutdown or a failed worker) so the caller can account for it.
+    pub fn push(&self, req: Request) -> Result<(), Request> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(req);
+            }
+            if st.items.len() < self.bound {
+                break;
+            }
+            st = self.not_full.wait(st).unwrap();
+        }
+        st.items.push_back(req);
+        drop(st);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Pop up to `max` requests from the front.  Blocks until at least one
+    /// request is available (or the queue is closed), then waits at most
+    /// `wait` for the batch to fill.  The fill target is clamped to the
+    /// queue bound: with `bound < max` the queue can never hold a full
+    /// batch (producers block at the bound), so "bound waiting" is
+    /// "full" and the worker must not burn the whole `wait` every cycle.
+    /// An empty return means closed *and* fully drained — the worker's
+    /// signal to exit.
+    pub fn pop_batch(&self, max: usize, wait: Duration) -> Vec<Request> {
+        let max = max.max(1);
+        let target = max.min(self.bound);
+        let mut st = self.state.lock().unwrap();
+        loop {
+            // phase 1: block until work exists or shutdown is complete
+            while st.items.is_empty() {
+                if st.closed {
+                    return Vec::new();
+                }
+                st = self.not_empty.wait(st).unwrap();
+            }
+            // phase 2: bounded wait for a fuller batch
+            let deadline = Instant::now() + wait;
+            while st.items.len() < target && !st.closed {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, timeout) = self
+                    .not_empty
+                    .wait_timeout(st, deadline - now)
+                    .unwrap();
+                st = guard;
+                if st.items.is_empty() {
+                    // another worker drained the queue while we slept
+                    break;
+                }
+                if timeout.timed_out() {
+                    break;
+                }
+            }
+            if st.items.is_empty() {
+                if st.closed {
+                    return Vec::new();
+                }
+                continue; // restart phase 1
+            }
+            let take = st.items.len().min(max);
+            let out: Vec<Request> = st.items.drain(..take).collect();
+            let leftover = !st.items.is_empty();
+            drop(st);
+            self.not_full.notify_all();
+            if leftover {
+                // hand remaining work to an idle sibling promptly
+                self.not_empty.notify_one();
+            }
+            return out;
+        }
+    }
+
+    /// Close the queue: pending pushes fail, workers drain and exit.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+
+    /// Current backlog depth (what the capacity controller observes).
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    fn req(id: u64) -> Request {
+        Request { id, tokens: vec![0; 4], submitted: Instant::now() }
+    }
+
+    #[test]
+    fn fifo_order_and_batch_bounds() {
+        let q = AdmissionQueue::new(16);
+        for id in 0..10 {
+            q.push(req(id)).unwrap();
+        }
+        let a = q.pop_batch(4, Duration::ZERO);
+        let b = q.pop_batch(4, Duration::ZERO);
+        assert_eq!(a.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        assert_eq!(b.iter().map(|r| r.id).collect::<Vec<_>>(), vec![4, 5, 6, 7]);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn close_drains_then_signals_exit() {
+        let q = AdmissionQueue::new(4);
+        q.push(req(0)).unwrap();
+        q.close();
+        assert!(q.push(req(1)).is_err());
+        let got = q.pop_batch(8, Duration::ZERO);
+        assert_eq!(got.len(), 1);
+        assert!(q.pop_batch(8, Duration::ZERO).is_empty());
+    }
+
+    #[test]
+    fn push_blocks_at_bound_until_popped() {
+        let q = std::sync::Arc::new(AdmissionQueue::new(2));
+        q.push(req(0)).unwrap();
+        q.push(req(1)).unwrap();
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || {
+            // blocks until the consumer below makes room
+            q2.push(req(2)).unwrap();
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.len(), 2, "bound violated");
+        let got = q.pop_batch(1, Duration::ZERO);
+        assert_eq!(got[0].id, 0);
+        t.join().unwrap();
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn bound_smaller_than_batch_does_not_dead_wait() {
+        // bound 2 < batch 8: the queue can never fill the batch, so the
+        // pop must return at the bound instead of burning the full wait
+        let q = AdmissionQueue::new(2);
+        q.push(req(0)).unwrap();
+        q.push(req(1)).unwrap();
+        let t0 = Instant::now();
+        let got = q.pop_batch(8, Duration::from_millis(200));
+        assert_eq!(got.len(), 2);
+        assert!(t0.elapsed() < Duration::from_millis(100),
+                "pop dead-waited {:?} for an unfillable batch",
+                t0.elapsed());
+    }
+
+    #[test]
+    fn concurrent_producers_consumers_lose_nothing() {
+        let q = std::sync::Arc::new(AdmissionQueue::new(8));
+        let n_producers = 4;
+        let per_producer = 100u64;
+        let mut producers = Vec::new();
+        for p in 0..n_producers {
+            let q = q.clone();
+            producers.push(std::thread::spawn(move || {
+                for i in 0..per_producer {
+                    q.push(req(p as u64 * per_producer + i)).unwrap();
+                }
+            }));
+        }
+        let mut consumers = Vec::new();
+        for _ in 0..3 {
+            let q = q.clone();
+            consumers.push(std::thread::spawn(move || {
+                let mut ids = Vec::new();
+                loop {
+                    let got = q.pop_batch(7, Duration::from_millis(1));
+                    if got.is_empty() {
+                        return ids;
+                    }
+                    ids.extend(got.iter().map(|r| r.id));
+                }
+            }));
+        }
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<u64> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        let want: Vec<u64> =
+            (0..n_producers as u64 * per_producer).collect();
+        assert_eq!(all, want, "requests dropped or duplicated");
+    }
+}

@@ -1,0 +1,177 @@
+//! Completion records and the aggregate serving report.
+
+use super::tier_matches;
+use crate::metrics::{summarize, Summary};
+
+/// Completion record for one request.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub tier: f32,
+    /// index of the worker that executed the request's batch
+    pub worker: usize,
+    pub queue_ms: f64,
+    pub total_ms: f64,
+    pub batch_size: usize,
+}
+
+/// Aggregate serving report.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub completions: Vec<Completion>,
+    pub wall_secs: f64,
+    pub tier_counts: Vec<(f32, usize)>,
+    pub workers: usize,
+}
+
+impl ServeReport {
+    pub fn new(completions: Vec<Completion>, wall_secs: f64, tiers: &[f32],
+               workers: usize) -> ServeReport {
+        let mut tier_counts: Vec<(f32, usize)> =
+            tiers.iter().map(|&c| (c, 0usize)).collect();
+        for c in &completions {
+            if let Some(tc) = tier_counts
+                .iter_mut()
+                .find(|(t, _)| tier_matches(*t, c.tier))
+            {
+                tc.1 += 1;
+            }
+        }
+        ServeReport { completions, wall_secs, tier_counts, workers }
+    }
+
+    pub fn throughput_rps(&self) -> f64 {
+        self.completions.len() as f64 / self.wall_secs.max(1e-9)
+    }
+
+    pub fn latency_summary(&self) -> Summary {
+        summarize(
+            &self.completions.iter().map(|c| c.total_ms).collect::<Vec<_>>())
+    }
+
+    /// Total-latency percentile by the nearest-rank method: the smallest
+    /// sample with at least `ceil(q * n)` samples at or below it.  (The
+    /// old `round()`-based indexing mixed ranks at small n: with n = 2,
+    /// q = 0.5 it returned the max.)
+    pub fn latency_p(&self, q: f64) -> f64 {
+        let mut xs: Vec<f64> =
+            self.completions.iter().map(|c| c.total_ms).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        percentile_nearest_rank(&xs, q)
+    }
+
+    /// Mean capacity actually served (compute proxy: fraction of teacher
+    /// FLOPs spent, cf. analysis::flops for the exact mapping).
+    pub fn mean_capacity(&self) -> f64 {
+        if self.completions.is_empty() {
+            return 0.0;
+        }
+        self.completions.iter().map(|c| c.tier as f64).sum::<f64>()
+            / self.completions.len() as f64
+    }
+
+    /// Completions executed by each worker, indexed by worker id.
+    pub fn worker_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.workers.max(1)];
+        for c in &self.completions {
+            if c.worker < counts.len() {
+                counts[c.worker] += 1;
+            }
+        }
+        counts
+    }
+}
+
+/// Nearest-rank percentile over a *sorted* slice.  `q <= 0` returns the
+/// min, `q >= 1` the max, an empty slice 0.0.
+pub fn percentile_nearest_rank(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let n = sorted.len();
+    let rank = (q * n as f64).ceil() as i64;
+    let idx = rank.clamp(1, n as i64) as usize - 1;
+    sorted[idx]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn completion(i: u64, ms: f64) -> Completion {
+        Completion {
+            id: i,
+            tier: 1.0,
+            worker: 0,
+            queue_ms: 0.0,
+            total_ms: ms,
+            batch_size: 1,
+        }
+    }
+
+    fn report(latencies: &[f64]) -> ServeReport {
+        let completions = latencies
+            .iter()
+            .enumerate()
+            .map(|(i, &ms)| completion(i as u64, ms))
+            .collect();
+        ServeReport::new(completions, 1.0, &[1.0], 1)
+    }
+
+    #[test]
+    fn percentile_empty_is_zero() {
+        let r = report(&[]);
+        assert_eq!(r.latency_p(0.5), 0.0);
+        assert_eq!(r.latency_p(0.99), 0.0);
+        assert_eq!(r.mean_capacity(), 0.0);
+    }
+
+    #[test]
+    fn percentile_single_element_is_that_element() {
+        let r = report(&[7.5]);
+        for q in [0.0, 0.01, 0.5, 0.99, 1.0] {
+            assert_eq!(r.latency_p(q), 7.5, "q = {q}");
+        }
+    }
+
+    #[test]
+    fn percentile_two_elements_nearest_rank() {
+        let r = report(&[10.0, 20.0]);
+        // rank ceil(0.5 * 2) = 1 -> first element (the old round() code
+        // returned 20.0 here)
+        assert_eq!(r.latency_p(0.5), 10.0);
+        assert_eq!(r.latency_p(0.51), 20.0);
+        assert_eq!(r.latency_p(0.0), 10.0);
+        assert_eq!(r.latency_p(1.0), 20.0);
+    }
+
+    #[test]
+    fn percentile_hundred_elements() {
+        let r = report(&(0..100).map(|i| i as f64).collect::<Vec<_>>());
+        assert_eq!(r.latency_p(0.5), 49.0); // ceil(50) = rank 50
+        assert_eq!(r.latency_p(0.99), 98.0); // ceil(99) = rank 99
+        assert_eq!(r.latency_p(1.0), 99.0);
+        assert_eq!(r.throughput_rps(), 100.0);
+        assert_eq!(r.mean_capacity(), 1.0);
+        assert_eq!(r.tier_counts, vec![(1.0, 100)]);
+    }
+
+    #[test]
+    fn percentile_out_of_range_q_clamps() {
+        let sorted = [1.0, 2.0, 3.0];
+        assert_eq!(percentile_nearest_rank(&sorted, -0.5), 1.0);
+        assert_eq!(percentile_nearest_rank(&sorted, 2.0), 3.0);
+    }
+
+    #[test]
+    fn worker_counts_partition_completions() {
+        let mut completions = Vec::new();
+        for i in 0..10u64 {
+            let mut c = completion(i, 1.0);
+            c.worker = (i % 3) as usize;
+            completions.push(c);
+        }
+        let r = ServeReport::new(completions, 1.0, &[1.0], 3);
+        assert_eq!(r.worker_counts(), vec![4, 3, 3]);
+    }
+}

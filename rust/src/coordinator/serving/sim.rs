@@ -1,0 +1,193 @@
+//! Deterministic simulation executor: a mock serving backend with a
+//! seeded per-tier latency model, so the entire serving pipeline —
+//! admission, backpressure, dynamic batching, capacity control, N-worker
+//! execution, drain — runs hermetically in `cargo test` with no
+//! artifacts on disk.
+//!
+//! Latency model per batch: `base_ms + ms_per_capacity * tier +
+//! jitter_ms * u`, with `u ~ U[0,1)` drawn from a per-worker
+//! `rng::Rng` stream (SplitMix-forked from the spec seed, so every run
+//! is bit-reproducible).  Lower tiers are cheaper, mirroring the real
+//! `serve_cap*` executables where token compaction shrinks the matmuls.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::tier_matches;
+use super::worker::Executor;
+use crate::rng::Rng;
+
+/// Parameters of the simulated backend (all latencies per *batch*).
+#[derive(Debug, Clone, Copy)]
+pub struct SimSpec {
+    pub batch: usize,
+    pub seq_len: usize,
+    /// fixed per-batch overhead, independent of tier
+    pub base_ms: f64,
+    /// additional cost of a full-capacity batch; scales with the tier
+    pub ms_per_capacity: f64,
+    /// uniform noise added on top (0 disables)
+    pub jitter_ms: f64,
+    pub seed: u64,
+}
+
+impl SimSpec {
+    pub fn standard() -> SimSpec {
+        SimSpec {
+            batch: 8,
+            seq_len: 32,
+            base_ms: 0.5,
+            ms_per_capacity: 1.5,
+            jitter_ms: 0.2,
+            seed: 0x51AB,
+        }
+    }
+
+    /// Zero-latency variant for logic-only tests (queue/batcher/FIFO
+    /// invariants) where wall-clock is irrelevant.
+    pub fn instant() -> SimSpec {
+        SimSpec {
+            base_ms: 0.0,
+            ms_per_capacity: 0.0,
+            jitter_ms: 0.0,
+            ..SimSpec::standard()
+        }
+    }
+}
+
+/// One executed batch, as recorded by the simulator.
+#[derive(Debug, Clone, Copy)]
+pub struct SimBatchLog {
+    pub tier: f32,
+    pub latency_ms: f64,
+}
+
+/// The simulation backend.  Each worker gets its own instance (the
+/// engine factory is called per worker), with an independent seeded RNG
+/// stream derived from `spec.seed` and the worker index.
+pub struct SimExecutor {
+    spec: SimSpec,
+    tiers: Vec<f32>,
+    rng: Rng,
+    record: bool,
+    /// every executed batch, in this worker's execution order (only
+    /// recorded when enabled — see [`SimExecutor::record_log`])
+    pub log: Vec<SimBatchLog>,
+}
+
+impl SimExecutor {
+    /// Direct construction records the per-batch log (handy in tests
+    /// that hold the executor).  [`factory`] disables recording: inside
+    /// the engine the boxed executor dies with its worker thread, so
+    /// the log would be unreachable write-only growth on long sweeps.
+    pub fn new(spec: SimSpec, tiers: &[f32], worker: usize) -> SimExecutor {
+        assert!(!tiers.is_empty(), "no tiers configured");
+        SimExecutor {
+            spec,
+            tiers: tiers.to_vec(),
+            // independent, deterministic per-worker stream
+            rng: Rng::new(spec.seed
+                ^ (worker as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15)),
+            record: true,
+            log: Vec::new(),
+        }
+    }
+
+    /// Enable/disable per-batch log recording.
+    pub fn record_log(mut self, on: bool) -> SimExecutor {
+        self.record = on;
+        self
+    }
+
+    /// Draw the next batch latency at `tier` from the seeded model.
+    pub fn latency_ms(&mut self, tier: f32) -> f64 {
+        self.spec.base_ms
+            + self.spec.ms_per_capacity * tier as f64
+            + self.spec.jitter_ms * self.rng.f64()
+    }
+}
+
+impl Executor for SimExecutor {
+    fn batch(&self) -> usize {
+        self.spec.batch
+    }
+
+    fn seq_len(&self) -> usize {
+        self.spec.seq_len
+    }
+
+    fn execute(&mut self, tier: f32, tokens: &[i32]) -> Result<()> {
+        anyhow::ensure!(
+            tokens.len() == self.spec.batch * self.spec.seq_len,
+            "sim executor: got {} tokens, want {} * {}",
+            tokens.len(), self.spec.batch, self.spec.seq_len);
+        anyhow::ensure!(
+            self.tiers.iter().any(|&t| tier_matches(t, tier)),
+            "sim executor: tier {tier} not in {:?}", self.tiers);
+        let ms = self.latency_ms(tier);
+        if ms > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(ms / 1e3));
+        }
+        if self.record {
+            self.log.push(SimBatchLog { tier, latency_ms: ms });
+        }
+        Ok(())
+    }
+
+    fn supports(&self, tier: f32) -> bool {
+        self.tiers.iter().any(|&t| tier_matches(t, tier))
+    }
+
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+}
+
+/// Executor factory for [`super::ElasticServer::run`]: one fresh
+/// [`SimExecutor`] per worker over the given capacity ladder.
+pub fn factory(spec: SimSpec, tiers: Vec<f32>)
+               -> impl Fn(usize) -> Result<Box<dyn Executor>> + Sync {
+    move |worker| {
+        // log disabled: the boxed executor is unreachable from outside
+        // the worker thread, so recording would only leak memory
+        Ok(Box::new(SimExecutor::new(spec, &tiers, worker)
+            .record_log(false)) as Box<dyn Executor>)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_model_is_deterministic_per_worker() {
+        let spec = SimSpec::standard();
+        let tiers = [1.0f32, 0.5];
+        let mut a = SimExecutor::new(spec, &tiers, 3);
+        let mut b = SimExecutor::new(spec, &tiers, 3);
+        let mut c = SimExecutor::new(spec, &tiers, 4);
+        let xs: Vec<f64> = (0..8).map(|_| a.latency_ms(1.0)).collect();
+        let ys: Vec<f64> = (0..8).map(|_| b.latency_ms(1.0)).collect();
+        let zs: Vec<f64> = (0..8).map(|_| c.latency_ms(1.0)).collect();
+        assert_eq!(xs, ys, "same worker stream must repeat");
+        assert_ne!(xs, zs, "distinct workers must get distinct streams");
+    }
+
+    #[test]
+    fn lower_tiers_are_cheaper() {
+        let spec = SimSpec { jitter_ms: 0.0, ..SimSpec::standard() };
+        let mut e = SimExecutor::new(spec, &[1.0, 0.25], 0);
+        assert!(e.latency_ms(0.25) < e.latency_ms(1.0));
+    }
+
+    #[test]
+    fn execute_validates_shape_and_tier() {
+        let spec = SimSpec { batch: 2, seq_len: 3, ..SimSpec::instant() };
+        let mut e = SimExecutor::new(spec, &[1.0, 0.5], 0);
+        assert!(e.execute(1.0, &[0; 6]).is_ok());
+        assert!(e.execute(1.0, &[0; 5]).is_err(), "wrong token count");
+        assert!(e.execute(0.33, &[0; 6]).is_err(), "unconfigured tier");
+        assert_eq!(e.log.len(), 1);
+    }
+}

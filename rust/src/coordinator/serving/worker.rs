@@ -1,0 +1,195 @@
+//! The `Executor` trait — "warm up and execute one batch at a capacity
+//! tier" — plus the PJRT implementor and the worker loop that drives any
+//! implementor from the shared admission queue.
+//!
+//! PJRT handles are not `Send`, so executors never cross threads: the
+//! engine calls its factory *on* each worker thread and the boxed
+//! executor lives and dies there.  The worker loop itself is
+//! backend-agnostic, which is what lets `tests/serving_sim.rs` exercise
+//! the full admission → batch → tier-select → execute → complete path
+//! through [`super::SimExecutor`] with no artifacts on disk.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::batcher::form_batch;
+use super::controller::CapacityController;
+use super::queue::AdmissionQueue;
+use super::report::Completion;
+use super::tier_matches;
+use crate::runtime::client::Arg;
+use crate::runtime::Runtime;
+
+/// A serving backend: owns whatever compiled/warmed state one worker
+/// needs and executes one fixed-shape batch at a given capacity tier.
+pub trait Executor {
+    /// static batch dimension of the compiled executables
+    fn batch(&self) -> usize;
+    /// static sequence length of the compiled executables
+    fn seq_len(&self) -> usize;
+    /// Run one `batch() * seq_len()` token tensor at `tier` (one of the
+    /// configured capacities).  Blocking; called from the worker thread
+    /// that constructed the executor.
+    fn execute(&mut self, tier: f32, tokens: &[i32]) -> Result<()>;
+    /// Can this executor run the given capacity tier?  The engine
+    /// probes every configured tier at worker startup, so a ladder
+    /// mismatch between `ServeConfig` and the factory aborts at init
+    /// with a clear error instead of failing per-batch mid-run.
+    fn supports(&self, _tier: f32) -> bool {
+        true
+    }
+    /// backend name for reports/logs
+    fn name(&self) -> &'static str {
+        "executor"
+    }
+}
+
+/// PJRT-backed executor over the static-capacity `serve_cap*` artifacts.
+/// Owns its own [`Runtime`] (and therefore its own PJRT client and
+/// non-`Send` handles), so each worker thread loads one via
+/// [`XlaExecutor::load`] inside the engine's executor factory.
+pub struct XlaExecutor {
+    rt: Runtime,
+    /// (capacity, entry name) ladder, mirrors `ServeConfig::tiers`
+    tiers: Vec<(f32, String)>,
+    /// params/router literals prepared once — the frozen multi-MB vectors
+    /// are NOT re-copied per batch (EXPERIMENTS.md §Perf, L3 iteration 1).
+    params_lit: xla::Literal,
+    router_lit: xla::Literal,
+    batch: usize,
+    seq_len: usize,
+}
+
+impl XlaExecutor {
+    /// Load the artifact set for `config` and pre-compile every tier
+    /// entry: admission must never pay compile latency.
+    pub fn load(artifacts_dir: &str, config: &str, params: &[f32],
+                router: &[f32], tiers: &[(f32, String)])
+                -> Result<XlaExecutor> {
+        let rt = Runtime::load(artifacts_dir, config)?;
+        XlaExecutor::from_runtime(rt, params, router, tiers)
+    }
+
+    /// Wrap an already-loaded runtime (takes ownership: the runtime's
+    /// handles must stay on the constructing thread).
+    pub fn from_runtime(rt: Runtime, params: &[f32], router: &[f32],
+                        tiers: &[(f32, String)]) -> Result<XlaExecutor> {
+        anyhow::ensure!(!tiers.is_empty(), "no serving tiers configured");
+        let entries: Vec<&str> =
+            tiers.iter().map(|(_, e)| e.as_str()).collect();
+        rt.warmup(&entries)?;
+        let entry0 = &tiers[0].1;
+        let params_lit = rt.prepare_arg(entry0, 0, &Arg::F32(params))?;
+        let router_lit = rt.prepare_arg(entry0, 1, &Arg::F32(router))?;
+        Ok(XlaExecutor {
+            batch: rt.manifest.batch(),
+            seq_len: rt.manifest.seq_len(),
+            rt,
+            tiers: tiers.to_vec(),
+            params_lit,
+            router_lit,
+        })
+    }
+
+    /// Executor factory for [`super::ElasticServer::run`]: each worker
+    /// thread loads its own runtime (and PJRT client) over the same
+    /// artifact set and parameter vectors.
+    pub fn factory(artifacts_dir: String, config: String, params: Vec<f32>,
+                   router: Vec<f32>, tiers: Vec<(f32, String)>)
+                   -> impl Fn(usize) -> Result<Box<dyn Executor>> + Sync {
+        move |_worker| {
+            Ok(Box::new(XlaExecutor::load(&artifacts_dir, &config, &params,
+                                          &router, &tiers)?)
+                as Box<dyn Executor>)
+        }
+    }
+
+    fn entry_for(&self, tier: f32) -> Result<&str> {
+        self.tiers
+            .iter()
+            .find(|(c, _)| tier_matches(*c, tier))
+            .map(|(_, e)| e.as_str())
+            .ok_or_else(|| anyhow::anyhow!(
+                "tier {tier} not in configured ladder {:?}",
+                self.tiers.iter().map(|(c, _)| *c).collect::<Vec<_>>()))
+    }
+}
+
+impl Executor for XlaExecutor {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    fn execute(&mut self, tier: f32, tokens: &[i32]) -> Result<()> {
+        let entry = self.entry_for(tier)?;
+        let tokens_lit = self.rt.prepare_arg(entry, 2, &Arg::I32(tokens))?;
+        let out = self.rt.exec_prepared(
+            entry, &[&self.params_lit, &self.router_lit, &tokens_lit])?;
+        let _logits = out.f32(0)?; // delivered to callers in a real API
+        Ok(())
+    }
+
+    fn supports(&self, tier: f32) -> bool {
+        self.entry_for(tier).is_ok()
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+/// Shared engine state one worker borrows for its lifetime.
+pub(crate) struct WorkerShared<'a> {
+    pub queue: &'a AdmissionQueue,
+    pub controller: &'a Mutex<CapacityController>,
+    pub completions: &'a Mutex<Vec<Completion>>,
+    pub max_batch_wait: Duration,
+}
+
+/// The worker loop: pop a FIFO run of requests, pick a tier from the
+/// global backlog, form the padded batch, execute, record completions.
+/// Returns the number of batches executed; exits when the queue is
+/// closed and drained.
+pub(crate) fn run_worker(shared: &WorkerShared<'_>, worker: usize,
+                         exec: &mut dyn Executor) -> Result<usize> {
+    let batch = exec.batch().max(1);
+    let seq_len = exec.seq_len();
+    let mut batches = 0usize;
+    loop {
+        let reqs = shared.queue.pop_batch(batch, shared.max_batch_wait);
+        if reqs.is_empty() {
+            return Ok(batches); // closed and drained
+        }
+        // the controller sees the global post-pop backlog, so all
+        // workers shed capacity together under sustained load
+        let tier =
+            shared.controller.lock().unwrap().choose(shared.queue.len());
+        let exec_start = Instant::now();
+        let formed = form_batch(reqs, batch, seq_len);
+        exec.execute(tier, &formed.tokens).with_context(|| {
+            format!("{} worker {worker}: tier {tier} batch of {}",
+                    exec.name(), formed.requests.len())
+        })?;
+        let done = Instant::now();
+        let n = formed.requests.len();
+        let mut out = shared.completions.lock().unwrap();
+        for r in formed.requests {
+            out.push(Completion {
+                id: r.id,
+                tier,
+                worker,
+                queue_ms: (exec_start - r.submitted).as_secs_f64() * 1e3,
+                total_ms: (done - r.submitted).as_secs_f64() * 1e3,
+                batch_size: n,
+            });
+        }
+        drop(out);
+        batches += 1;
+    }
+}

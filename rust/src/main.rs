@@ -7,16 +7,27 @@
 //!   train-teacher  --config C [--steps N] [--seed S]
 //!   distill        --config C [--steps N] [--caps a,b,c,d] [--rank R]
 //!                  [--layers all|even] [--seed S]
-//!   serve          --config C [--requests N] [--rate RPS] [--seed S]
+//!   serve          --config C [--requests N] [--rate RPS] [--workers W]
+//!                  [--seed S]
+//!   serve-sim      [--requests N] [--rates a,b,c] [--workers W]
+//!                  [--batch B] [--seq-len T] [--queue-bound Q]
+//!                  [--depth-per-tier D] [--seed S]
 //!   info           --config C
 //!
-//! Everything runs off the AOT artifacts in `artifacts/` (`make artifacts`).
+//! Everything except `serve-sim` runs off the AOT artifacts in
+//! `artifacts/` (`make artifacts`); `serve-sim` drives the full serving
+//! pipeline hermetically through the deterministic `SimExecutor`.
+
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use elastiformer::checkpoint::Checkpoint;
 use elastiformer::cli::Args;
-use elastiformer::coordinator::serving::{ElasticServer, Request, ServeConfig};
+use elastiformer::coordinator::serving::{
+    sim, ElasticServer, Request, ServeConfig, ServeReport, SimSpec,
+    XlaExecutor,
+};
 use elastiformer::coordinator::trainer::{layer_enable, Caps, Trainer};
 use elastiformer::data::{mathgen, Batcher, TextDataset};
 use elastiformer::experiments::{
@@ -44,6 +55,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("train-teacher") => cmd_train_teacher(args),
         Some("distill") => cmd_distill(args),
         Some("serve") => cmd_serve(args),
+        Some("serve-sim") => cmd_serve_sim(args),
         Some("info") => cmd_info(args),
         Some(other) => bail!("unknown subcommand {other:?}\n{USAGE}"),
         None => {
@@ -61,7 +73,9 @@ elastiformer — ElastiFormer reproduction (see DESIGN.md)
        flags: --config C --steps N --pretrain-steps N --caps a,b,c --seed S
   elastiformer train-teacher --config lm_tiny --steps 300
   elastiformer distill --config lm_tiny --caps 0.75,0.75,1.0,0.5 --rank 1
-  elastiformer serve --config lm_tiny --requests 64 --rate 100
+  elastiformer serve --config lm_tiny --requests 64 --rate 100 --workers 1
+  elastiformer serve-sim --requests 512 --rates 250,1000,4000 --workers 4
+       flags: --batch B --seq-len T --queue-bound Q --depth-per-tier D
   elastiformer info --config lm_tiny";
 
 fn cmd_exp(args: &Args) -> Result<()> {
@@ -221,16 +235,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n_requests = args.usize_or("requests", 64)?;
     let rate = args.f64_or("rate", 100.0)?;
     let pretrain = args.usize_or("pretrain-steps", 300)?;
+    let workers = args.usize_or("workers", 1)?;
     let seed = args.u64_or("seed", 42)?;
     let ctx = common::Ctx::load(config, seed)?;
     let teacher = ctx.teacher(pretrain)?;
     let router = ctx.router_init("router_init_r0", seed as i32)?;
     let t = ctx.rt.manifest.seq_len();
 
-    let mut server = ElasticServer::new(&ctx.rt, &teacher, &router,
-                                        ServeConfig::standard())?;
-    let (tx, rx) = std::sync::mpsc::channel();
-    let producer = std::thread::spawn(move || {
+    let cfg = ServeConfig::standard().with_workers(workers);
+    // each worker compiles its own tier executables on its own thread
+    // (PJRT handles are not Send)
+    let factory = XlaExecutor::factory(common::artifacts_dir(),
+                                       config.to_string(), teacher, router,
+                                       cfg.tiers.clone());
+    let server = ElasticServer::new(cfg);
+    // producer starts only once every worker is warm, so request
+    // latency stamps measure serving, not PJRT compile
+    let report = server.run_with_producer(factory, move |tx| {
         let tok = elastiformer::data::Tokenizer::new();
         let mut rng = Rng::new(seed ^ 0x5E12);
         for id in 0..n_requests as u64 {
@@ -238,26 +259,113 @@ fn cmd_serve(args: &Args) -> Result<()> {
             let req = Request {
                 id,
                 tokens: tok.encode_padded(&p.full_text(), t),
-                submitted: std::time::Instant::now(),
+                submitted: Instant::now(),
             };
             if tx.send(req).is_err() {
                 return;
             }
-            std::thread::sleep(std::time::Duration::from_secs_f64(
-                1.0 / rate.max(1.0)));
+            std::thread::sleep(Duration::from_secs_f64(1.0 / rate.max(1.0)));
         }
-    });
-    let report = server.run(rx, n_requests)?;
-    producer.join().ok();
-    println!("served {} requests in {:.2}s — {:.1} req/s, p50 {:.1} ms, \
-              p99 {:.1} ms, mean capacity {:.2}",
-             report.completions.len(), report.wall_secs,
+    }, n_requests)?;
+    print_report(&report);
+    Ok(())
+}
+
+fn print_report(report: &ServeReport) {
+    println!("served {} requests in {:.2}s on {} worker(s) — {:.1} req/s, \
+              p50 {:.1} ms, p99 {:.1} ms, mean capacity {:.2}",
+             report.completions.len(), report.wall_secs, report.workers,
              report.throughput_rps(), report.latency_p(0.5),
              report.latency_p(0.99), report.mean_capacity());
     for (tier, count) in &report.tier_counts {
         println!("  tier {tier:.2}: {count} requests");
     }
+    if report.workers > 1 {
+        let counts = report.worker_counts();
+        let joined: Vec<String> =
+            counts.iter().map(|c| c.to_string()).collect();
+        println!("  per-worker completions: [{}]", joined.join(", "));
+    }
+}
+
+/// Synthetic open-loop load sweep over the deterministic simulation
+/// backend: Poisson-ish arrivals (exponential inter-arrival gaps from
+/// the seeded `Rng`), one report row per offered rate.  Runs anywhere —
+/// no artifacts, no XLA runtime.
+fn cmd_serve_sim(args: &Args) -> Result<()> {
+    args.check_known(&["requests", "rates", "workers", "batch", "seq-len",
+                       "queue-bound", "depth-per-tier", "seed"])?;
+    let n = args.usize_or("requests", 512)?;
+    let workers = args.usize_or("workers", 4)?;
+    let seed = args.u64_or("seed", 42)?;
+    let queue_bound = args.usize_or("queue-bound", 64)?;
+    let depth_per_tier = args.f64_or("depth-per-tier", 8.0)?;
+    let rates = args.f64_list_or("rates", &[250.0, 1000.0, 4000.0])?;
+    if rates.iter().any(|r| !r.is_finite() || *r <= 0.0) {
+        bail!("--rates must all be finite and > 0 (req/s), got {rates:?}");
+    }
+    if !depth_per_tier.is_finite() || depth_per_tier <= 0.0 {
+        bail!("--depth-per-tier must be finite and > 0, \
+               got {depth_per_tier}");
+    }
+    let mut spec = SimSpec::standard();
+    spec.batch = args.usize_or("batch", spec.batch)?;
+    spec.seq_len = args.usize_or("seq-len", spec.seq_len)?;
+    spec.seed = seed;
+    if spec.batch == 0 || spec.seq_len == 0 {
+        bail!("--batch and --seq-len must be >= 1");
+    }
+
+    println!("serve-sim: {n} requests per point, {workers} worker(s), \
+              batch {} x seq {}, queue bound {queue_bound}",
+             spec.batch, spec.seq_len);
+    for rate in rates {
+        let report = run_sim_point(spec, workers, queue_bound,
+                                   depth_per_tier, n, rate, seed)?;
+        let tiers: Vec<String> = report
+            .tier_counts
+            .iter()
+            .map(|(t, c)| format!("{t:.2}:{c}"))
+            .collect();
+        println!("offered {rate:>8.0} req/s | served {:>5} in {:>6.2}s | \
+                  {:>8.1} req/s | p50 {:>7.2} ms | p99 {:>7.2} ms | \
+                  mean cap {:.2} | tiers {}",
+                 report.completions.len(), report.wall_secs,
+                 report.throughput_rps(), report.latency_p(0.5),
+                 report.latency_p(0.99), report.mean_capacity(),
+                 tiers.join(" "));
+    }
     Ok(())
+}
+
+fn run_sim_point(spec: SimSpec, workers: usize, queue_bound: usize,
+                 depth_per_tier: f64, n: usize, rate: f64, seed: u64)
+                 -> Result<ServeReport> {
+    let cfg = ServeConfig::sim()
+        .with_workers(workers)
+        .with_queue_bound(queue_bound)
+        .with_depth_per_tier(depth_per_tier)
+        .with_max_batch_wait(Duration::from_millis(2));
+    let caps = cfg.capacities();
+    let server = ElasticServer::new(cfg);
+    let seq_len = spec.seq_len;
+    server.run_with_producer(sim::factory(spec, caps), move |tx| {
+        let mut rng = Rng::new(seed ^ 0xA11F);
+        for id in 0..n as u64 {
+            let tokens: Vec<i32> = (0..seq_len)
+                .map(|i| ((id as usize + i) % 97) as i32)
+                .collect();
+            let req = Request { id, tokens, submitted: Instant::now() };
+            if tx.send(req).is_err() {
+                return;
+            }
+            // open-loop Poisson process: exponential inter-arrival gap
+            let gap = -(1.0 - rng.f64()).ln() / rate;
+            if gap > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(gap));
+            }
+        }
+    }, n)
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

@@ -3,9 +3,14 @@
 //! substrates: batcher, capacity controller, tokenizer, JSON codec,
 //! checkpoint format, top-k/ranking math mirrors, schedules.
 
+use std::time::{Duration, Instant};
+
 use elastiformer::checkpoint::Checkpoint;
 use elastiformer::coordinator::schedule::LrSchedule;
-use elastiformer::coordinator::serving::CapacityController;
+use elastiformer::coordinator::serving::{
+    form_batch, sim, AdmissionQueue, CapacityController, ElasticServer,
+    Request, ServeConfig, SimSpec,
+};
 use elastiformer::data::loader::Batcher;
 use elastiformer::data::{capgen, imagen, Tokenizer};
 use elastiformer::json::{self, Value};
@@ -68,6 +73,189 @@ fn prop_controller_never_exceeds_bounds_and_monotone() {
                 return Err(format!("not monotone at depth {d}"));
             }
             prev = t;
+        }
+        Ok(())
+    });
+}
+
+fn sim_request(id: u64, tokens: Vec<i32>) -> Request {
+    Request { id, tokens, submitted: Instant::now() }
+}
+
+#[test]
+fn prop_admission_queue_fifo_no_drop_no_dup() {
+    // arbitrary single-consumer push/pop interleavings: every pushed
+    // request comes back exactly once, in admission order
+    check("queue_fifo_no_drop", 40, |rng| {
+        let n = 1 + rng.below(60);
+        let q = AdmissionQueue::new(n); // never block the test thread
+        let mut next_id = 0u64;
+        let mut popped: Vec<u64> = Vec::new();
+        while (next_id as usize) < n || !q.is_empty() {
+            let can_push = (next_id as usize) < n;
+            let can_pop = !q.is_empty();
+            if can_push && (!can_pop || rng.chance(0.6)) {
+                q.push(sim_request(next_id, vec![0; 4]))
+                    .map_err(|_| "push rejected on open queue".to_string())?;
+                next_id += 1;
+            } else {
+                let max = 1 + rng.below(8);
+                let got = q.pop_batch(max, Duration::ZERO);
+                if got.is_empty() {
+                    return Err("empty pop on nonempty open queue".into());
+                }
+                if got.len() > max {
+                    return Err(format!("pop of {} > max {max}", got.len()));
+                }
+                popped.extend(got.iter().map(|r| r.id));
+            }
+        }
+        q.close();
+        if !q.pop_batch(8, Duration::ZERO).is_empty() {
+            return Err("drained queue still yielded requests".into());
+        }
+        if popped != (0..n as u64).collect::<Vec<_>>() {
+            return Err(format!(
+                "dropped/duplicated/reordered: {} of {n} popped",
+                popped.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_form_batch_exact_padding_and_order() {
+    check("form_batch_padding", 60, |rng| {
+        let batch = 1 + rng.below(8);
+        let seq_len = rng.below(33);
+        let k = 1 + rng.below(batch);
+        let reqs: Vec<Request> = (0..k)
+            .map(|i| {
+                let len = rng.below(seq_len * 2 + 1);
+                let tokens =
+                    (0..len).map(|_| rng.range(0, 96) as i32).collect();
+                sim_request(i as u64, tokens)
+            })
+            .collect();
+        let rows: Vec<Vec<i32>> =
+            reqs.iter().map(|r| r.tokens.clone()).collect();
+        let b = form_batch(reqs, batch, seq_len);
+        if b.tokens.len() != batch * seq_len {
+            return Err(format!("{} tokens != {batch} * {seq_len}",
+                               b.tokens.len()));
+        }
+        if b.requests.len() != k || b.padded_rows != batch - k {
+            return Err("requests dropped or duplicated".into());
+        }
+        for (i, row) in rows.iter().enumerate() {
+            if b.requests[i].id != i as u64 {
+                return Err(format!("row {i} out of order"));
+            }
+            let m = row.len().min(seq_len);
+            if b.tokens[i * seq_len..i * seq_len + m] != row[..m] {
+                return Err(format!("row {i} content mangled"));
+            }
+            if b.tokens[i * seq_len + m..(i + 1) * seq_len]
+                .iter()
+                .any(|&t| t != 0)
+            {
+                return Err(format!("row {i} pad not zero"));
+            }
+        }
+        for p in k..batch {
+            if b.tokens[p * seq_len..(p + 1) * seq_len]
+                != b.tokens[(k - 1) * seq_len..k * seq_len]
+            {
+                return Err(format!("pad row {p} != last real row"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_serving_pipeline_exactly_once_fifo_per_worker() {
+    // full engine over instant sim executors: arbitrary (n, workers,
+    // batch, bound) combinations never drop or duplicate a request, and
+    // each worker's completions preserve FIFO admission order
+    check("serving_exactly_once", 25, |rng| {
+        let n = 1 + rng.below(80);
+        let workers = 1 + rng.below(3);
+        let batch = 1 + rng.below(6);
+        let spec = SimSpec { batch, seq_len: 8, ..SimSpec::instant() };
+        let cfg = ServeConfig::sim()
+            .with_workers(workers)
+            .with_queue_bound(1 + rng.below(64))
+            .with_max_batch_wait(Duration::ZERO);
+        let caps = cfg.capacities();
+        let server = ElasticServer::new(cfg);
+        let (tx, rx) = std::sync::mpsc::channel();
+        for id in 0..n as u64 {
+            tx.send(sim_request(id, vec![0; 8])).unwrap();
+        }
+        drop(tx);
+        let report = server
+            .run(sim::factory(spec, caps), rx, n)
+            .map_err(|e| format!("engine failed: {e:#}"))?;
+        let mut ids: Vec<u64> =
+            report.completions.iter().map(|c| c.id).collect();
+        ids.sort_unstable();
+        if ids != (0..n as u64).collect::<Vec<_>>() {
+            return Err(format!("exactly-once violated: {} of {n}",
+                               ids.len()));
+        }
+        for w in 0..workers {
+            let wids: Vec<u64> = report
+                .completions
+                .iter()
+                .filter(|c| c.worker == w)
+                .map(|c| c.id)
+                .collect();
+            if wids.windows(2).any(|p| p[0] >= p[1]) {
+                return Err(format!("worker {w} broke FIFO: {wids:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_controller_configured_tiers_and_ewma_convergence() {
+    check("controller_converges", 50, |rng| {
+        let k = 1 + rng.below(5);
+        let mut tiers: Vec<f32> =
+            (0..k).map(|_| (1 + rng.below(100)) as f32 / 100.0).collect();
+        let mut c = CapacityController::new(
+            tiers.clone(), 0.5 + rng.f64() * 8.0);
+        tiers.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        // pure map: monotone non-increasing, always a configured tier
+        let mut depth = 0.0f64;
+        let mut prev = f32::INFINITY;
+        for _ in 0..40 {
+            depth += rng.f64() * 4.0;
+            let t = c.tier_for_depth(depth);
+            if !tiers.contains(&t) {
+                return Err(format!("tier {t} not configured: {tiers:?}"));
+            }
+            if t > prev + 1e-9 {
+                return Err(format!("tier rose at depth {depth}"));
+            }
+            prev = t;
+        }
+        // stateful path also stays within the ladder
+        for _ in 0..30 {
+            let t = c.choose(rng.below(100));
+            if !tiers.contains(&t) {
+                return Err(format!("choose gave {t} not in {tiers:?}"));
+            }
+        }
+        // after the queue empties the EWMA decays back to the top tier
+        for _ in 0..64 {
+            c.choose(0);
+        }
+        if c.choose(0) != c.top_tier() {
+            return Err(format!("no convergence: ewma {}",
+                               c.smoothed_depth()));
         }
         Ok(())
     });

@@ -1,0 +1,242 @@
+//! Stub of the `xla` crate API surface used by `elastiformer::runtime`.
+//!
+//! Host-side literals (construction, reshape, extraction) are
+//! implemented for real so code that only marshals data keeps working.
+//! Everything that would need the PJRT runtime fails at the earliest
+//! possible point — [`PjRtClient::cpu`] — with an error explaining how
+//! to swap in the real backend.  See Cargo.toml for the rationale.
+
+use std::fmt;
+
+/// Stub error: a message, `Display`-compatible with how the runtime
+/// layer formats backend errors.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: xla stub — the vendored xla_extension runtime is not \
+         present in this build; point the `xla` path dependency at a \
+         real xla-rs checkout to execute artifacts"))
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait Element: Copy {
+    fn build(data: Vec<Self>, dims: Vec<i64>) -> Literal;
+    fn extract(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl Element for f32 {
+    fn build(data: Vec<Self>, dims: Vec<i64>) -> Literal {
+        Literal::F32 { data, dims }
+    }
+
+    fn extract(lit: &Literal) -> Result<Vec<Self>> {
+        match lit {
+            Literal::F32 { data, .. } => Ok(data.clone()),
+            other => Err(Error(format!("literal is not f32: {other:?}"))),
+        }
+    }
+}
+
+impl Element for i32 {
+    fn build(data: Vec<Self>, dims: Vec<i64>) -> Literal {
+        Literal::I32 { data, dims }
+    }
+
+    fn extract(lit: &Literal) -> Result<Vec<Self>> {
+        match lit {
+            Literal::I32 { data, .. } => Ok(data.clone()),
+            other => Err(Error(format!("literal is not i32: {other:?}"))),
+        }
+    }
+}
+
+/// Host-side literal: typed buffer + dims, or a tuple of literals.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Literal {
+    F32 { data: Vec<f32>, dims: Vec<i64> },
+    I32 { data: Vec<i32>, dims: Vec<i64> },
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    /// Rank-1 literal from any slice-like of elements.
+    pub fn vec1<T, S>(data: &S) -> Literal
+    where
+        T: Element,
+        S: AsRef<[T]> + ?Sized,
+    {
+        let data = data.as_ref().to_vec();
+        let n = data.len() as i64;
+        T::build(data, vec![n])
+    }
+
+    /// Rank-0 (scalar) literal.
+    pub fn scalar<T: Element>(x: T) -> Literal {
+        T::build(vec![x], Vec::new())
+    }
+
+    fn len(&self) -> Result<i64> {
+        match self {
+            Literal::F32 { data, .. } => Ok(data.len() as i64),
+            Literal::I32 { data, .. } => Ok(data.len() as i64),
+            Literal::Tuple(_) => {
+                Err(Error("tuple literal has no element count".into()))
+            }
+        }
+    }
+
+    /// Reshape to `dims` (element count must match; `&[]` is scalar).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product(); // empty product = 1 = scalar
+        let have = self.len()?;
+        if want != have {
+            return Err(Error(format!(
+                "reshape {have} elements into {dims:?} ({want})")));
+        }
+        let dims = dims.to_vec();
+        Ok(match self {
+            Literal::F32 { data, .. } => {
+                Literal::F32 { data: data.clone(), dims }
+            }
+            Literal::I32 { data, .. } => {
+                Literal::I32 { data: data.clone(), dims }
+            }
+            Literal::Tuple(_) => unreachable!("len() rejected tuples"),
+        })
+    }
+
+    /// Extract the host buffer as a typed vector.
+    pub fn to_vec<T: Element>(&self) -> Result<Vec<T>> {
+        T::extract(self)
+    }
+
+    /// Decompose a tuple literal into its parts.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(parts) => Ok(parts),
+            other => Err(Error(format!("not a tuple literal: {other:?}"))),
+        }
+    }
+}
+
+/// Parsed HLO module (opaque in the stub).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    pub path: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        // parsing HLO text needs the real extension; fail with context
+        Err(unavailable(&format!("parse HLO text {path:?}")))
+    }
+}
+
+/// Computation handle (opaque in the stub).
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    pub module: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { module: proto.clone() }
+    }
+}
+
+/// PJRT client (construction always fails in the stub — this is the
+/// single choke point every artifact-dependent path flows through).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("create PJRT CPU client"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation)
+                   -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compile"))
+    }
+}
+
+/// Compiled executable handle (never constructible via the stub client).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("execute"))
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("device-to-host transfer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0][..]);
+        let lit = lit.reshape(&[2, 2]).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn literal_accepts_double_refs_and_arrays() {
+        // the runtime layer passes `&&[T]` (match-binding) and `&[T; 1]`
+        let row: &[i32] = &[7, 8];
+        let a = Literal::vec1(&row);
+        let b = Literal::vec1(&[7i32, 8]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn scalar_reshape_to_empty_dims() {
+        let s = Literal::scalar(3.5f32);
+        assert_eq!(s.reshape(&[]).unwrap().to_vec::<f32>().unwrap(),
+                   vec![3.5]);
+        assert!(s.reshape(&[2]).is_err());
+    }
+
+    #[test]
+    fn tuple_decomposes() {
+        let t = Literal::Tuple(vec![Literal::scalar(1i32),
+                                    Literal::scalar(2i32)]);
+        assert_eq!(t.to_tuple().unwrap().len(), 2);
+        assert!(Literal::scalar(1i32).to_tuple().is_err());
+    }
+
+    #[test]
+    fn runtime_paths_fail_with_stub_message() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("xla stub"), "{err}");
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
