@@ -1,76 +1,185 @@
-//! Elastic serving demo: drive the serving engine through a load ramp and
-//! watch the capacity controller trade compute for throughput.
+//! Elastic serving demo on the handle-based client API: start an
+//! engine, drive it through a load ramp under two SLO classes, and
+//! print *per-request* results — the tier each request was served at,
+//! its queue/exec latency split, and its admission/shed verdicts —
+//! delivered through each request's own `Response` future.
 //!
 //!     cargo run --release --example elastic_serving -- \
-//!         [--requests 96] [--config lm_tiny] [--workers 1]
+//!         [--backend sim|xla] [--requests 96] [--workers 2] [--seed S] \
+//!         [--config lm_tiny]
 //!
-//! Three phases of offered load (light / burst / drain); the report shows
-//! per-tier request counts, latency percentiles and the mean capacity
-//! actually served — the paper's "variable inference time compute" as an
-//! operable system.  The engine is the multi-worker `Executor`-trait
-//! pipeline: each worker thread builds its own `XlaExecutor` (PJRT
-//! handles are not `Send`) from the factory passed to `run`.
+//! The default `sim` backend is hermetic (no artifacts, no XLA
+//! runtime): the deterministic `SimExecutor` sleeps through a seeded
+//! per-tier latency model.  `--backend xla` serves the real AOT
+//! `serve_cap*` artifacts instead (needs `make artifacts` and a `pjrt`
+//! build); each worker thread builds its own `XlaExecutor` because
+//! PJRT handles are not `Send`.
+//!
+//! Three phases of offered load (light / burst / drain).  Interactive
+//! requests carry a deadline and a quality floor; bulk requests are
+//! best-effort.  Under the burst the controller sheds bulk capacity
+//! while the floor pins interactive quality — and interactive requests
+//! that can no longer meet their deadline are shed outright, which
+//! shows up per-request below and in the report's class sections.
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use elastiformer::cli::Args;
 use elastiformer::coordinator::serving::{
-    ElasticServer, Request, ServeConfig, XlaExecutor,
+    sim, ElasticEngine, EngineHandle, Request, ServeConfig, ServeError,
+    SimSpec, SloClass,
 };
-use elastiformer::data::{mathgen, Tokenizer};
-use elastiformer::experiments::common::{artifacts_dir, Ctx};
 use elastiformer::rng::Rng;
+
+use elastiformer::data::{mathgen, Tokenizer};
+
+#[cfg(feature = "pjrt")]
+use elastiformer::coordinator::serving::XlaExecutor;
+#[cfg(feature = "pjrt")]
+use elastiformer::experiments::common::{artifacts_dir, Ctx};
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
-    let config = args.str_or("config", "lm_tiny");
+    let backend = args.str_or("backend", "sim");
     let n_requests = args.usize_or("requests", 96)?;
-    let workers = args.usize_or("workers", 1)?;
+    let workers = args.usize_or("workers", 2)?;
     let seed = args.u64_or("seed", 42)?;
 
+    let (engine, seq_len) = match backend {
+        "sim" => start_sim(workers, seed)?,
+        "xla" => start_xla(&args, workers, seed)?,
+        other => bail!("--backend must be sim or xla, got {other:?}"),
+    };
+    drive(engine, seq_len, n_requests, seed)
+}
+
+/// Hermetic engine over the deterministic simulator: costs tuned so the
+/// burst phase genuinely outruns the fleet and the controller engages.
+fn start_sim(workers: usize, seed: u64) -> Result<(EngineHandle, usize)> {
+    let spec = SimSpec {
+        batch: 4,
+        base_ms: 1.5,
+        ms_per_capacity: 1.5,
+        jitter_ms: 0.2,
+        seed,
+        ..SimSpec::standard()
+    };
+    let cfg = ServeConfig::sim()
+        .with_workers(workers)
+        .with_queue_bound(64)
+        .with_depth_per_tier(2.0)
+        .with_max_batch_wait(Duration::from_millis(2));
+    println!("starting {workers} sim worker(s)...");
+    let seq_len = spec.seq_len;
+    let engine = ElasticEngine::start(
+        cfg.clone(), sim::factory(spec, cfg.capacities()))?;
+    Ok((engine, seq_len))
+}
+
+/// Real-artifact engine: each worker compiles all four `serve_cap*`
+/// tiers on its own thread before `start` returns.
+#[cfg(feature = "pjrt")]
+fn start_xla(args: &Args, workers: usize, seed: u64)
+             -> Result<(EngineHandle, usize)> {
+    let config = args.str_or("config", "lm_tiny");
     let ctx = Ctx::load(config, seed)?;
     let teacher = ctx.teacher(200)?;
     let router = ctx.router_init("router_init_r0", seed as i32)?;
-    let t = ctx.rt.manifest.seq_len();
-
+    let seq_len = ctx.rt.manifest.seq_len();
     println!("spinning up {workers} worker(s) — each compiles 4 serve \
               tiers on its own thread...");
     let cfg = ServeConfig::standard().with_workers(workers);
     let factory = XlaExecutor::factory(artifacts_dir(), config.to_string(),
                                        teacher, router, cfg.tiers.clone());
-    let server = ElasticServer::new(cfg);
+    let engine = ElasticEngine::start(cfg, factory)?;
+    Ok((engine, seq_len))
+}
 
-    // the load ramp starts only once every worker is warm — otherwise
-    // the light phase would be swallowed by PJRT compile time
-    let report = server.run_with_producer(factory, move |tx| {
-        let tok = Tokenizer::new();
-        let mut rng = Rng::new(seed ^ 0xE5);
-        let phase_len = n_requests / 3;
-        for id in 0..n_requests as u64 {
-            let phase = (id as usize) / phase_len.max(1);
-            // light -> burst -> drain
-            let gap = match phase {
-                0 => Duration::from_millis(40),
-                1 => Duration::from_millis(1),
-                _ => Duration::from_millis(25),
-            };
-            let p = mathgen::gen_problem(&mut rng);
-            if tx
-                .send(Request {
-                    id,
-                    tokens: tok.encode_padded(&p.full_text(), t),
-                    submitted: Instant::now(),
-                })
-                .is_err()
-            {
-                return;
-            }
+#[cfg(not(feature = "pjrt"))]
+fn start_xla(_args: &Args, _workers: usize, _seed: u64)
+             -> Result<(EngineHandle, usize)> {
+    bail!("--backend xla needs a build with the `pjrt` feature \
+           (default builds enable it)")
+}
+
+fn drive(engine: EngineHandle, seq_len: usize, n_requests: usize,
+         seed: u64) -> Result<()> {
+    let interactive = SloClass::named("interactive")
+        .with_deadline(Duration::from_millis(25))
+        .with_floor_tier(0.5);
+    let bulk = SloClass::named("bulk");
+
+    // submit the three-phase ramp; every submit hands back a Response
+    let tok = Tokenizer::new();
+    let mut rng = Rng::new(seed ^ 0xE5);
+    let phase_len = (n_requests / 3).max(1);
+    let mut responses = Vec::with_capacity(n_requests);
+    for id in 0..n_requests as u64 {
+        let phase = (id as usize) / phase_len;
+        // light -> burst -> drain
+        let gap = match phase {
+            0 => Duration::from_millis(10),
+            1 => Duration::ZERO,
+            _ => Duration::from_millis(8),
+        };
+        let slo = if id % 3 == 0 {
+            interactive.clone()
+        } else {
+            bulk.clone()
+        };
+        let p = mathgen::gen_problem(&mut rng);
+        let req =
+            Request::new(id, tok.encode_padded(&p.full_text(), seq_len))
+                .with_slo(slo);
+        responses.push(engine.submit(req));
+        if !gap.is_zero() {
             std::thread::sleep(gap);
         }
-    }, n_requests)?;
+    }
 
+    // per-request results, straight from each Response future
+    println!("\n== per-request results (first 16) ==");
+    println!("{:>4}  {:<12} {:>5}  {:>9}  {:>9}  outcome",
+             "id", "class", "tier", "queue ms", "total ms");
+    let mut served = 0usize;
+    let mut shed = 0usize;
+    let mut failed = 0usize;
+    for (i, r) in responses.into_iter().enumerate() {
+        let id = r.id();
+        match r.wait() {
+            Ok(reply) => {
+                let c = &reply.completion;
+                if i < 16 {
+                    println!("{id:>4}  {:<12} {:>5.2}  {:>9.2}  {:>9.2}  \
+                              ok ({} logits)",
+                             c.class, c.tier, c.queue_ms, c.total_ms,
+                             reply.logits.len());
+                }
+                served += 1;
+            }
+            Err(ServeError::DeadlineExceeded) => {
+                if i < 16 {
+                    println!("{id:>4}  {:<12} {:>5}  {:>9}  {:>9}  \
+                              shed: deadline expired",
+                             "interactive", "-", "-", "-");
+                }
+                shed += 1;
+            }
+            Err(e) => {
+                if i < 16 {
+                    println!("{id:>4}  -            -      -          -  \
+                              error: {e}");
+                }
+                failed += 1;
+            }
+        }
+    }
+    println!("  ... {served} served, {shed} shed on deadline, \
+              {failed} errored (of {n_requests})");
+
+    let report = engine.shutdown()?;
     println!("\n== serving report ==");
     println!("requests : {}", report.completions.len());
     println!("workers  : {} (completions {:?})", report.workers,
@@ -86,14 +195,21 @@ fn main() -> Result<()> {
         let bar = "#".repeat(count * 40 / report.completions.len().max(1));
         println!("  {tier:>4.2} | {count:>4} {bar}");
     }
+    println!("classes  :");
+    for s in report.class_sections() {
+        println!("  {:<12} served {:>4}  shed {:>3}  p50 {:>7.2} ms  \
+                  p99 {:>7.2} ms  mean cap {:.2}",
+                 s.class, s.served, s.shed, s.p50_ms, s.p99_ms,
+                 s.mean_capacity);
+    }
     // burst phase should have shed capacity on at least some requests
-    let shed = report
+    let low = report
         .completions
         .iter()
         .filter(|c| c.tier < 1.0)
         .count();
     println!("\n{} of {} requests served below full capacity \
               (controller engaged under burst load)",
-             shed, report.completions.len());
+             low, report.completions.len());
     Ok(())
 }

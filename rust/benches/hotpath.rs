@@ -10,11 +10,11 @@
 //!   * pretrain / distill step wall-clock
 //!   * host substrates: literal round-trip size, batcher, tokenizer, JSON
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use elastiformer::bench::{fmt_f, Bencher, Table};
 use elastiformer::coordinator::serving::{
-    sim, ElasticServer, Request, ServeConfig, SimSpec,
+    sim, ElasticEngine, Request, Response, ServeConfig, SimSpec,
 };
 use elastiformer::coordinator::trainer::{Caps, Trainer};
 use elastiformer::data::{mathgen, textgen, Batcher, TextDataset, Tokenizer};
@@ -49,23 +49,15 @@ fn sim_pipeline_bench() -> anyhow::Result<()> {
             .with_queue_bound(128)
             .with_max_batch_wait(Duration::from_micros(200));
         let caps = cfg.capacities();
-        let server = ElasticServer::new(cfg);
+        let engine = ElasticEngine::start(cfg, sim::factory(spec, caps))?;
         let seq_len = spec.seq_len;
-        let (tx, rx) = std::sync::mpsc::channel();
-        let producer = std::thread::spawn(move || {
-            for id in 0..n as u64 {
-                let req = Request {
-                    id,
-                    tokens: vec![1; seq_len],
-                    submitted: Instant::now(),
-                };
-                if tx.send(req).is_err() {
-                    return;
-                }
-            }
-        });
-        let report = server.run(sim::factory(spec, caps), rx, n)?;
-        producer.join().ok();
+        let responses: Vec<Response> = (0..n as u64)
+            .map(|id| engine.submit(Request::new(id, vec![1; seq_len])))
+            .collect();
+        for r in responses {
+            r.wait().map_err(|e| anyhow::anyhow!("serve failed: {e}"))?;
+        }
+        let report = engine.shutdown()?;
         println!("sim_serving_w{workers:<2}            \
                   {:>8.0} req/s  p50 {:>8.2} ms  p99 {:>8.2} ms  \
                   mean cap {:.2}",

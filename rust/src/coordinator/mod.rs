@@ -5,10 +5,13 @@
 //! controller -> N worker threads -> `Executor` backends: PJRT or the
 //! deterministic simulator; see serving/README.md).
 
+#[cfg(feature = "pjrt")]
 pub mod generation;
 pub mod schedule;
 pub mod serving;
+#[cfg(feature = "pjrt")]
 pub mod trainer;
 
 pub use schedule::LrSchedule;
+#[cfg(feature = "pjrt")]
 pub use trainer::Trainer;

@@ -51,10 +51,9 @@ pub fn form_batch(requests: Vec<Request>, batch: usize, seq_len: usize)
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::time::Instant;
 
     fn req(id: u64, tokens: Vec<i32>) -> Request {
-        Request { id, tokens, submitted: Instant::now() }
+        Request::new(id, tokens)
     }
 
     #[test]

@@ -1,11 +1,31 @@
-//! Load-adaptive capacity controller with hysteresis.
+//! SLO-aware capacity controller with hysteresis.
 //!
-//! Maps smoothed queue depth to one of the available capacity tiers:
-//! empty queue -> highest capacity; beyond `depth_per_tier` waiting
-//! requests per step, shed one tier, and so on.  Hysteresis (EWMA on the
-//! depth) prevents tier oscillation at load boundaries.  In the
-//! multi-worker engine one controller instance is shared behind a mutex
-//! and observes the *global* backlog, so all workers shed together.
+//! Two signals go into every tier decision:
+//!
+//!  1. **Global backlog** (the original signal): smoothed queue depth is
+//!     mapped to one of the available capacity tiers — empty queue ->
+//!     highest capacity; beyond `depth_per_tier` waiting requests per
+//!     step, shed one tier, and so on.  Hysteresis (EWMA on the depth)
+//!     prevents tier oscillation at load boundaries.
+//!  2. **Per-batch SLO constraints** (the handle-API extension): the
+//!     tightest deadline slack in the batch can push the choice *down*
+//!     the ladder (lower tiers are faster, so a request about to miss
+//!     its deadline is served cheap rather than late), and the largest
+//!     `floor_tier` in the batch clamps the choice *up* (a quality
+//!     floor beats both the backlog and the deadline signal).
+//!
+//! Deadline pressure needs a latency estimate per tier; the controller
+//! learns one online as an EWMA over the per-batch execution times the
+//! workers report via [`observe_exec`](CapacityController::observe_exec).
+//! Until a tier has been observed its estimate is unknown and treated
+//! optimistically (no demotion), so cold starts behave exactly like the
+//! old backlog-only controller.
+//!
+//! In the multi-worker engine one controller instance is shared behind
+//! a mutex and observes the *global* backlog, so all workers shed
+//! together.
+
+use super::{tier_matches, TIER_EPS};
 
 /// See module docs.  Invariants (property-tested in
 /// `tests/properties.rs`):
@@ -13,6 +33,8 @@
 ///  * every returned tier is one of the configured tiers
 ///  * after the queue empties, repeated `choose(0)` decays the EWMA and
 ///    converges back to the top tier
+///  * `choose_for_batch` never returns a tier below the requested floor
+///    (when the floor is within the ladder)
 #[derive(Debug, Clone)]
 pub struct CapacityController {
     /// available tiers, descending capacity (e.g. [1.0, 0.75, 0.5, 0.25])
@@ -20,6 +42,10 @@ pub struct CapacityController {
     pub depth_per_tier: f64,
     ewma: f64,
     alpha: f64,
+    /// learned per-tier batch execution time (ms), EWMA over worker
+    /// observations; `None` until the tier has been executed once
+    exec_ms: Vec<Option<f64>>,
+    exec_alpha: f64,
 }
 
 impl CapacityController {
@@ -31,14 +57,92 @@ impl CapacityController {
         assert!(depth_per_tier.is_finite() && depth_per_tier > 0.0,
                 "depth_per_tier must be finite and > 0, got {depth_per_tier}");
         tiers.sort_by(|a, b| b.partial_cmp(a).unwrap());
-        CapacityController { tiers, depth_per_tier, ewma: 0.0, alpha: 0.4 }
+        let exec_ms = vec![None; tiers.len()];
+        CapacityController {
+            tiers,
+            depth_per_tier,
+            ewma: 0.0,
+            alpha: 0.4,
+            exec_ms,
+            exec_alpha: 0.3,
+        }
     }
 
-    /// Observe the current queue depth and pick a tier.
+    /// Observe the current queue depth and pick a tier from the backlog
+    /// signal alone (no SLO constraints — kept as the primitive the
+    /// batch-level decision builds on).
     pub fn choose(&mut self, queue_depth: usize) -> f32 {
         self.ewma = self.alpha * queue_depth as f64
             + (1.0 - self.alpha) * self.ewma;
         self.tier_for_depth(self.ewma)
+    }
+
+    /// Full per-batch decision: backlog signal, then deadline pressure
+    /// (demote to a tier whose learned exec time fits the tightest
+    /// remaining slack), then the quality floor (clamp back up to the
+    /// smallest configured tier at or above `floor_tier`).
+    ///
+    /// `tightest_slack_ms` is the smallest `deadline - waited` over the
+    /// batch's deadline-carrying requests (`None` when the batch is all
+    /// best-effort); already-expired requests are shed by the worker
+    /// before this is called, so the slack is non-negative.
+    pub fn choose_for_batch(&mut self, queue_depth: usize, floor_tier: f32,
+                            tightest_slack_ms: Option<f64>) -> f32 {
+        let backlog = self.choose(queue_depth);
+        let mut idx = self
+            .tiers
+            .iter()
+            .position(|&t| tier_matches(t, backlog))
+            .unwrap_or(0);
+        if let Some(slack) = tightest_slack_ms {
+            // walk down the ladder while the learned estimate says the
+            // current tier would blow the slack; unknown estimates are
+            // optimistic (stop — no evidence the tier is too slow)
+            while idx + 1 < self.tiers.len() {
+                match self.exec_ms[idx] {
+                    Some(est) if est > slack => idx += 1,
+                    _ => break,
+                }
+            }
+        }
+        if floor_tier > 0.0 {
+            // smallest configured tier still at/above the floor; a floor
+            // above the whole ladder clamps to the top tier
+            let floor_idx = self
+                .tiers
+                .iter()
+                .rposition(|&t| t + TIER_EPS >= floor_tier)
+                .unwrap_or(0);
+            idx = idx.min(floor_idx);
+        }
+        self.tiers[idx]
+    }
+
+    /// Feed back one executed batch so the per-tier latency estimate
+    /// tracks the real backend (called by workers after each batch).
+    pub fn observe_exec(&mut self, tier: f32, ms: f64) {
+        if !ms.is_finite() || ms < 0.0 {
+            return;
+        }
+        if let Some(i) =
+            self.tiers.iter().position(|&t| tier_matches(t, tier))
+        {
+            self.exec_ms[i] = Some(match self.exec_ms[i] {
+                Some(prev) => {
+                    self.exec_alpha * ms + (1.0 - self.exec_alpha) * prev
+                }
+                None => ms,
+            });
+        }
+    }
+
+    /// Learned per-batch execution estimate for `tier` (ms), if any
+    /// batch has run there yet.
+    pub fn exec_estimate(&self, tier: f32) -> Option<f64> {
+        self.tiers
+            .iter()
+            .position(|&t| tier_matches(t, tier))
+            .and_then(|i| self.exec_ms[i])
     }
 
     /// Pure mapping (for tests / property checks): tier for a given
@@ -105,5 +209,78 @@ mod tests {
             c.choose(0); // queue empties
         }
         assert_eq!(c.choose(0), 1.0, "ewma {}", c.smoothed_depth());
+    }
+
+    #[test]
+    fn deadline_pressure_demotes_to_a_tier_that_fits() {
+        let mut c = CapacityController::new(vec![1.0, 0.5, 0.25], 1e9);
+        // teach it: full capacity takes 40ms/batch, 0.5 takes 12ms,
+        // 0.25 takes 4ms
+        for _ in 0..4 {
+            c.observe_exec(1.0, 40.0);
+            c.observe_exec(0.5, 12.0);
+            c.observe_exec(0.25, 4.0);
+        }
+        // no deadline -> backlog choice (top tier on an empty queue)
+        assert_eq!(c.choose_for_batch(0, 0.0, None), 1.0);
+        // 20ms of slack: 1.0 (40ms) blows it, 0.5 (12ms) fits
+        assert_eq!(c.choose_for_batch(0, 0.0, Some(20.0)), 0.5);
+        // 2ms of slack: even 0.25 (4ms) is too slow, but it is the
+        // fastest option available — never walks off the ladder
+        assert_eq!(c.choose_for_batch(0, 0.0, Some(2.0)), 0.25);
+        // generous slack keeps the top tier
+        assert_eq!(c.choose_for_batch(0, 0.0, Some(500.0)), 1.0);
+    }
+
+    #[test]
+    fn unknown_estimates_do_not_demote() {
+        let mut c = CapacityController::new(vec![1.0, 0.5], 1e9);
+        // cold start: nothing observed yet -> optimistic, serve the top
+        assert_eq!(c.choose_for_batch(0, 0.0, Some(0.001)), 1.0);
+    }
+
+    #[test]
+    fn floor_tier_clamps_back_up() {
+        let mut c = CapacityController::new(vec![1.0, 0.75, 0.5, 0.25], 1.0);
+        for _ in 0..20 {
+            c.choose(50); // drive the backlog signal to the bottom tier
+        }
+        // best-effort batch sheds to the bottom...
+        assert_eq!(c.choose_for_batch(50, 0.0, None), 0.25);
+        // ...but a 0.75 floor holds the line at exactly 0.75
+        assert_eq!(c.choose_for_batch(50, 0.75, None), 0.75);
+        // a floor between rungs rounds up to the next configured tier
+        assert_eq!(c.choose_for_batch(50, 0.6, None), 0.75);
+        // a floor above the whole ladder clamps to the top tier
+        assert_eq!(c.choose_for_batch(50, 1.5, None), 1.0);
+    }
+
+    #[test]
+    fn floor_beats_deadline_pressure() {
+        let mut c = CapacityController::new(vec![1.0, 0.5, 0.25], 1e9);
+        for _ in 0..4 {
+            c.observe_exec(1.0, 40.0);
+            c.observe_exec(0.5, 12.0);
+            c.observe_exec(0.25, 4.0);
+        }
+        // 5ms slack wants 0.25, but the 0.5 floor wins: quality floors
+        // are a contract, lateness is only a preference
+        assert_eq!(c.choose_for_batch(0, 0.5, Some(5.0)), 0.5);
+    }
+
+    #[test]
+    fn exec_estimate_tracks_observations() {
+        let mut c = CapacityController::new(vec![1.0, 0.5], 1.0);
+        assert_eq!(c.exec_estimate(1.0), None);
+        c.observe_exec(1.0, 10.0);
+        assert_eq!(c.exec_estimate(1.0), Some(10.0));
+        c.observe_exec(1.0, 20.0); // ewma moves toward the new sample
+        let est = c.exec_estimate(1.0).unwrap();
+        assert!(est > 10.0 && est < 20.0, "ewma {est}");
+        // junk observations are ignored
+        c.observe_exec(1.0, f64::NAN);
+        c.observe_exec(1.0, -5.0);
+        assert_eq!(c.exec_estimate(1.0), Some(est));
+        assert_eq!(c.exec_estimate(0.5), None);
     }
 }

@@ -1,34 +1,53 @@
 //! Elastic serving subsystem — the systems realization of "variable
 //! inference time compute" (paper §1), grown from the original
-//! single-threaded monolith into an independently testable pipeline:
+//! single-threaded monolith into a handle-based client API:
 //!
 //! ```text
-//!   producers ──mpsc──▶ admission (engine thread)
-//!                            │ bounded push (backpressure)
-//!                            ▼
-//!                     [AdmissionQueue]          queue.rs
-//!                      /     |     \
-//!               worker 0  worker 1  worker N-1   worker.rs
-//!               pop_batch -> CapacityController  controller.rs
-//!               form_batch (pad to B×T)          batcher.rs
-//!               Executor::execute(tier, tokens)
-//!                  |            |
-//!              XlaExecutor   SimExecutor         worker.rs / sim.rs
-//!              (PJRT, owns   (seeded latency
-//!               non-Send      model, hermetic)
-//!               handles)
-//!                      \     |     /
-//!                      [ServeReport]             report.rs
+//!   clients ──▶ EngineHandle::submit / try_submit        (this file)
+//!                    │ bounded push (backpressure) /
+//!                    │ Admission::{Accepted(Response), Shed(reason)}
+//!                    ▼
+//!             [AdmissionQueue<Pending>]                  queue.rs
+//!              /     |     \
+//!       worker 0  worker 1  worker N-1                   worker.rs
+//!       pop_batch -> shed expired deadlines
+//!                 -> CapacityController                  controller.rs
+//!                    (backlog EWMA + deadline slack
+//!                     + SLO floor tiers)
+//!       form_batch (pad to B×T)                          batcher.rs
+//!       Executor::execute(tier, tokens) -> logits
+//!          |            |
+//!      XlaExecutor   SimExecutor                         worker.rs / sim.rs
+//!      (PJRT, owns   (seeded latency
+//!       non-Send      model, hermetic)
+//!       handles)
+//!              \     |     /
+//!       per-request Response resolution (one-shot slot)
+//!              +
+//!       [ServeReport] with per-SLO-class sections        report.rs
 //! ```
 //!
-//! Under light load every request runs at capacity 1.0 (teacher-exact, see
-//! the §4.1 equivalence); as the shared queue deepens the controller sheds
-//! compute by routing batches to lower-capacity tiers, trading the paper's
-//! measured quality-vs-capacity curve for throughput.  PJRT handles are
-//! not `Send`, so each worker constructs its own [`Executor`] on its own
-//! thread via the factory passed to [`ElasticServer::run`]; the
-//! [`SimExecutor`] implementor makes the whole admission → batch →
-//! tier-select → execute → complete pipeline runnable without artifacts.
+//! [`ElasticEngine::start`] spawns the workers and returns an
+//! [`EngineHandle`] immediately (once every worker's executor is warm —
+//! compile/warmup never pollutes serving timings).  Each
+//! [`submit`](EngineHandle::submit) returns a [`Response`]: a one-shot
+//! completion future that resolves to the request's logits, the tier it
+//! was served at, and its queue/exec timings — or to a [`ServeError`]
+//! if the request was shed (expired deadline), its worker failed, or
+//! the engine shut down first.  [`try_submit`](EngineHandle::try_submit)
+//! is the non-blocking admission probe: it returns an explicit
+//! [`Admission`] verdict instead of blocking on a full queue.
+//!
+//! Every request carries an [`SloClass`]: an optional latency deadline
+//! plus a quality floor tier.  Both flow into the shared
+//! [`CapacityController`] — deadlines pull the served tier down
+//! (cheaper = faster) and may shed a request outright once expired,
+//! floors clamp it up — and [`ServeReport::class_sections`] accounts
+//! for each class separately.  PJRT handles are not `Send`, so each
+//! worker constructs its own [`Executor`] on its own thread via the
+//! factory passed to [`ElasticEngine::start`]; the [`SimExecutor`]
+//! implementor makes the whole submit → admit → batch → tier-select →
+//! execute → resolve pipeline runnable without artifacts.
 
 pub mod batcher;
 pub mod controller;
@@ -39,23 +58,87 @@ pub mod worker;
 
 pub use batcher::{form_batch, Batch};
 pub use controller::CapacityController;
-pub use queue::AdmissionQueue;
-pub use report::{Completion, ServeReport};
+pub use queue::{AdmissionQueue, TryPushError};
+pub use report::{ClassStats, Completion, ServeReport, ShedRecord};
 pub use sim::{SimExecutor, SimSpec};
-pub use worker::{Executor, XlaExecutor};
+pub use worker::{ExecOutput, Executor};
+#[cfg(feature = "pjrt")]
+pub use worker::XlaExecutor;
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
-use std::sync::{Condvar, Mutex};
+use std::fmt;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-/// One inference request: a fixed-length token row.
+/// Service contract one request is submitted under: an optional total
+/// latency deadline and a minimum acceptable capacity tier.  The class
+/// `name` keys the per-class sections of [`ServeReport`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloClass {
+    pub name: String,
+    /// total latency budget (queue wait + execution); a request whose
+    /// deadline has expired by the time a worker picks it up is shed
+    /// (its [`Response`] resolves to [`ServeError::DeadlineExceeded`])
+    pub deadline: Option<Duration>,
+    /// minimum capacity tier this class accepts: the controller never
+    /// serves the request below the smallest configured tier at or
+    /// above this floor (0.0 = any tier, i.e. pure best-effort)
+    pub floor_tier: f32,
+}
+
+impl SloClass {
+    /// No deadline, no floor: serve whenever, at whatever tier the
+    /// backlog dictates.
+    pub fn best_effort() -> SloClass {
+        SloClass {
+            name: "best-effort".into(),
+            deadline: None,
+            floor_tier: 0.0,
+        }
+    }
+
+    pub fn named(name: &str) -> SloClass {
+        SloClass { name: name.into(), ..SloClass::best_effort() }
+    }
+
+    pub fn with_deadline(mut self, deadline: Duration) -> SloClass {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    pub fn with_floor_tier(mut self, floor: f32) -> SloClass {
+        self.floor_tier = floor;
+        self
+    }
+}
+
+impl Default for SloClass {
+    fn default() -> SloClass {
+        SloClass::best_effort()
+    }
+}
+
+/// One inference request: a fixed-length token row plus its SLO class.
+/// The `id` is caller-chosen correlation state (it is echoed back in
+/// the [`Completion`]); the engine never interprets it.
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
     pub tokens: Vec<i32>,
-    pub submitted: Instant,
+    pub slo: SloClass,
+}
+
+impl Request {
+    pub fn new(id: u64, tokens: Vec<i32>) -> Request {
+        Request { id, tokens, slo: SloClass::best_effort() }
+    }
+
+    pub fn with_slo(mut self, slo: SloClass) -> Request {
+        self.slo = slo;
+        self
+    }
 }
 
 /// Tolerance for matching an f32 capacity against the configured
@@ -79,9 +162,8 @@ pub struct ServeConfig {
     pub max_batch_wait: Duration,
     /// number of execution workers (each owns one `Executor`)
     pub workers: usize,
-    /// admission queue bound; the admission loop blocks when full, so
-    /// its mpsc front-end stops draining (see queue.rs on backpressure
-    /// scope — the mpsc itself is unbounded)
+    /// admission queue bound: `submit` blocks at the bound
+    /// (backpressure), `try_submit` sheds with an explicit verdict
     pub queue_bound: usize,
 }
 
@@ -139,266 +221,492 @@ impl ServeConfig {
     }
 }
 
-/// The serving engine: admission on the calling thread, N execution
-/// workers behind a shared bounded queue, one shared capacity controller
-/// observing the global backlog.
-///
-/// The engine is backend-agnostic: it only knows the [`Executor`] trait.
-/// Because PJRT handles are not `Send`, executors are constructed *on*
-/// their worker thread by the `factory` passed to [`run`](Self::run)
-/// (called once per worker with the worker index).
-pub struct ElasticServer {
-    cfg: ServeConfig,
+/// Why a request's [`Response`] did not resolve to a [`Reply`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// the SLO deadline expired before a worker could execute the
+    /// request; it was shed without spending compute
+    DeadlineExceeded,
+    /// the engine was shutting down (or had shut down) before the
+    /// request could be executed
+    ShuttingDown,
+    /// the request was dropped mid-flight — its worker panicked or the
+    /// engine tore down while it was in a batch
+    Dropped,
+    /// the executor failed on the request's batch
+    ExecFailed(String),
 }
 
-impl ElasticServer {
-    pub fn new(cfg: ServeConfig) -> ElasticServer {
-        ElasticServer { cfg }
-    }
-
-    /// Serve requests from `rx` until `expected` have been admitted or the
-    /// channel disconnects, then drain: every admitted request completes
-    /// before this returns.  Worker errors abort the run (the queue is
-    /// closed so no thread is left blocked) and surface as `Err`.
-    ///
-    /// The serving clock starts only after every worker's executor is
-    /// built (a readiness latch), so compile/warmup never pollutes the
-    /// reported wall time or throughput.  Requests stamped (`submitted`)
-    /// *before* the fleet is ready still accrue the warmup wait in their
-    /// per-request latencies — producers that should only start once the
-    /// fleet is hot belong in [`run_when_ready`](Self::run_when_ready).
-    pub fn run<F>(&self, factory: F, rx: Receiver<Request>, expected: usize)
-                  -> Result<ServeReport>
-    where
-        F: Fn(usize) -> Result<Box<dyn Executor>> + Sync,
-    {
-        self.run_when_ready(factory, move || rx, expected)
-    }
-
-    /// Spawn `producer` on its own thread once every worker's executor
-    /// is warm, serve everything it sends (up to `expected`), and join
-    /// it before returning — even on error, where the dropped receiver
-    /// makes the producer's next `send` fail and exit.  The common
-    /// "open-loop load from a generator thread" shape without the
-    /// caller juggling channels and join handles.
-    pub fn run_with_producer<F, P>(&self, factory: F, producer: P,
-                                   expected: usize) -> Result<ServeReport>
-    where
-        F: Fn(usize) -> Result<Box<dyn Executor>> + Sync,
-        P: FnOnce(Sender<Request>) + Send + 'static,
-    {
-        let mut handle = None;
-        let report = self.run_when_ready(factory, || {
-            let (tx, rx) = std::sync::mpsc::channel();
-            handle = Some(std::thread::spawn(move || producer(tx)));
-            rx
-        }, expected);
-        if let Some(h) = handle {
-            if let Err(payload) = h.join() {
-                // a panicking producer must not yield a normal-looking
-                // (short) report — propagate, like worker panics do
-                std::panic::resume_unwind(payload);
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::DeadlineExceeded => {
+                write!(f, "deadline expired before execution")
+            }
+            ServeError::ShuttingDown => {
+                write!(f, "engine shutting down before execution")
+            }
+            ServeError::Dropped => {
+                write!(f, "request dropped mid-flight (worker failure)")
+            }
+            ServeError::ExecFailed(msg) => {
+                write!(f, "executor failed: {msg}")
             }
         }
-        report
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// What a resolved [`Response`] carries back to the caller: the
+/// request's completion record (tier served, queue/exec timings) plus
+/// its row of output logits.
+#[derive(Debug, Clone)]
+pub struct Reply {
+    pub completion: Completion,
+    pub logits: Vec<f32>,
+}
+
+enum SlotState {
+    Pending,
+    Ready(Result<Reply, ServeError>),
+}
+
+struct Slot {
+    state: Mutex<SlotState>,
+    cv: Condvar,
+}
+
+/// One-shot completion future for a submitted request, backed by a
+/// mutex/condvar slot.  Exactly one resolution ever lands in the slot:
+/// the engine side holds a unique [`Responder`] whose drop guard
+/// resolves the slot if no explicit outcome did (worker panic, engine
+/// teardown), so a `Response` can never be lost.
+pub struct Response {
+    id: u64,
+    slot: Arc<Slot>,
+}
+
+impl Response {
+    /// Create the (engine-side responder, caller-side response) pair.
+    pub(crate) fn channel(id: u64) -> (Responder, Response) {
+        let slot = Arc::new(Slot {
+            state: Mutex::new(SlotState::Pending),
+            cv: Condvar::new(),
+        });
+        (Responder { slot: slot.clone(), done: false },
+         Response { id, slot })
     }
 
-    /// Like [`run`](Self::run), but the request source is created only
-    /// after every worker's executor is warm: `source` runs on the
-    /// calling thread once the readiness latch clears (spawn producers
-    /// there), so no request's latency stamp predates a hot fleet.
-    /// Worker panics (factory or executor) are converted into a closed
-    /// queue + a latch arrival by a drop guard, so the engine aborts
-    /// (propagating the panic at scope join) instead of hanging; the
-    /// latch is arrival-only — no worker ever blocks on it — so no
-    /// unwind path can strand a peer.
-    pub fn run_when_ready<F, R>(&self, factory: F, source: R,
-                                expected: usize) -> Result<ServeReport>
-    where
-        F: Fn(usize) -> Result<Box<dyn Executor>> + Sync,
-        R: FnOnce() -> Receiver<Request>,
-    {
-        let caps = self.cfg.capacities();
-        let workers = self.cfg.workers.max(1);
-        let queue = AdmissionQueue::new(self.cfg.queue_bound);
-        let controller = Mutex::new(CapacityController::new(
-            caps.clone(), self.cfg.depth_per_tier));
-        let completions: Mutex<Vec<Completion>> =
-            Mutex::new(Vec::with_capacity(expected.min(1 << 20)));
-        let errors: Mutex<Vec<anyhow::Error>> = Mutex::new(Vec::new());
-        let ready = ReadyLatch::new(workers);
+    /// The caller-chosen request id this response answers.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
 
-        let start = std::thread::scope(|s| {
-            let queue = &queue;
-            let controller = &controller;
-            let completions = &completions;
-            let errors = &errors;
-            let factory = &factory;
-            let cfg = &self.cfg;
-            let ready = &ready;
-            let caps = &caps;
-            // if the scope body unwinds (source() or the admission loop
-            // panicking), workers blocked on the open queue must still
-            // be released or thread::scope's join hangs mid-unwind;
-            // closing twice on the normal path is a harmless no-op
-            let _close_on_unwind = CloseOnDrop(queue);
-            for w in 0..workers {
-                s.spawn(move || {
+    /// Has the engine resolved this response yet?  (Non-blocking.)
+    pub fn is_ready(&self) -> bool {
+        !matches!(*self.slot.state.lock().unwrap(), SlotState::Pending)
+    }
+
+    /// Block until the engine resolves this request.
+    pub fn wait(self) -> Result<Reply, ServeError> {
+        let mut st = self.slot.state.lock().unwrap();
+        loop {
+            if let SlotState::Ready(r) =
+                std::mem::replace(&mut *st, SlotState::Pending)
+            {
+                return r;
+            }
+            st = self.slot.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Block for at most `timeout`; `None` means the request is still
+    /// in flight (the response is consumed — its outcome is abandoned).
+    pub fn wait_timeout(self, timeout: Duration)
+                        -> Option<Result<Reply, ServeError>> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.slot.state.lock().unwrap();
+        loop {
+            if let SlotState::Ready(r) =
+                std::mem::replace(&mut *st, SlotState::Pending)
+            {
+                return Some(r);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _) = self
+                .slot
+                .cv
+                .wait_timeout(st, deadline - now)
+                .unwrap();
+            st = guard;
+        }
+    }
+}
+
+/// Engine-side write half of a [`Response`].  Not `Clone`: there is
+/// exactly one, and its drop guard resolves the slot with
+/// [`ServeError::Dropped`] if nothing else did — the exactly-once
+/// backbone across worker panics and teardown.
+pub(crate) struct Responder {
+    slot: Arc<Slot>,
+    done: bool,
+}
+
+impl Responder {
+    pub(crate) fn fulfil(mut self, outcome: Result<Reply, ServeError>) {
+        self.set(outcome);
+    }
+
+    fn set(&mut self, outcome: Result<Reply, ServeError>) {
+        if self.done {
+            return;
+        }
+        self.done = true;
+        let mut st = self.slot.state.lock().unwrap();
+        *st = SlotState::Ready(outcome);
+        drop(st);
+        self.slot.cv.notify_all();
+    }
+}
+
+impl Drop for Responder {
+    fn drop(&mut self) {
+        self.set(Err(ServeError::Dropped));
+    }
+}
+
+/// Verdict of a non-blocking [`EngineHandle::try_submit`].
+pub enum Admission {
+    /// the request is in the queue; here is its completion future
+    Accepted(Response),
+    /// the request was NOT admitted — no compute was or will be spent
+    /// on it, and no `Response` exists for it
+    Shed(ShedReason),
+}
+
+/// Why `try_submit` refused a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// the bounded admission queue is at its bound — the only verdict
+    /// load can produce (property-tested: never returned while the
+    /// queue has room)
+    QueueFull,
+    /// the engine has shut down (or a worker failure closed the queue)
+    ShuttingDown,
+}
+
+/// One queued unit: the request, its admission stamp (the clock base
+/// for queue-wait accounting), and the write half of its response.
+pub(crate) struct Pending {
+    pub req: Request,
+    pub submitted: Instant,
+    pub responder: Responder,
+}
+
+/// State shared between the handle and all worker threads.
+pub(crate) struct EngineShared {
+    pub queue: AdmissionQueue<Pending>,
+    pub controller: Mutex<CapacityController>,
+    pub completions: Mutex<Vec<Completion>>,
+    pub sheds: Mutex<Vec<ShedRecord>>,
+    pub errors: Mutex<Vec<String>>,
+    pub max_batch_wait: Duration,
+}
+
+/// The serving engine: [`start`](Self::start) spawns N execution
+/// workers behind a shared bounded queue and returns an
+/// [`EngineHandle`] for submitting requests and shutting down.
+///
+/// The engine is backend-agnostic: it only knows the [`Executor`]
+/// trait.  Because PJRT handles are not `Send`, executors are
+/// constructed *on* their worker thread by the `factory` (called once
+/// per worker with the worker index).
+pub struct ElasticEngine;
+
+impl ElasticEngine {
+    /// Spawn the worker fleet and return once every worker's executor
+    /// is built and warm (so submission timings never include
+    /// compile/warmup), or with an error if any worker failed to
+    /// initialize — in which case the whole fleet is torn down.
+    pub fn start<F>(cfg: ServeConfig, factory: F) -> Result<EngineHandle>
+    where
+        F: Fn(usize) -> Result<Box<dyn Executor>> + Send + Sync + 'static,
+    {
+        let caps = cfg.capacities();
+        anyhow::ensure!(!caps.is_empty(), "no serving tiers configured");
+        let workers = cfg.workers.max(1);
+        let shared = Arc::new(EngineShared {
+            queue: AdmissionQueue::new(cfg.queue_bound),
+            controller: Mutex::new(CapacityController::new(
+                caps.clone(), cfg.depth_per_tier)),
+            completions: Mutex::new(Vec::new()),
+            sheds: Mutex::new(Vec::new()),
+            errors: Mutex::new(Vec::new()),
+            max_batch_wait: cfg.max_batch_wait,
+        });
+        let factory = Arc::new(factory);
+        let init = Arc::new(InitLatch::new());
+        let caps = Arc::new(caps);
+        let mut threads: Vec<JoinHandle<()>> = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let shared = shared.clone();
+            let factory = factory.clone();
+            let init = init.clone();
+            let caps = caps.clone();
+            let spawned = std::thread::Builder::new()
+                .name(format!("elastic-worker-{w}"))
+                .spawn(move || {
                     // Abnormal exit (Err *or* panic, before or after
-                    // arrival) must close the queue — else the admission
-                    // loop blocks forever on a dead fleet — and must
-                    // arrive at the latch exactly once.
+                    // init) must close the queue — else submitters block
+                    // forever on a dead fleet — and must report to the
+                    // init latch exactly once so `start` never hangs.
                     let mut guard = WorkerGuard {
-                        queue,
-                        ready,
-                        arrived: false,
+                        shared: shared.clone(),
+                        init: init.clone(),
+                        worker: w,
+                        reported: false,
                         clean_exit: false,
                     };
                     // executor built on this thread: PJRT handles never
                     // cross a thread boundary
-                    let mut exec = match factory(w) {
+                    let mut exec = match (factory.as_ref())(w) {
                         Ok(e) => e,
                         Err(e) => {
-                            errors.lock().unwrap().push(e.context(
-                                format!("worker {w}: executor init")));
-                            return; // guard closes queue + arrives
+                            guard.reported = true;
+                            init.arrive(Some(format!(
+                                "worker {w}: executor init: {e:#}")));
+                            return; // guard closes the queue
                         }
                     };
                     // a ladder mismatch between ServeConfig and the
                     // factory should abort here, not per-batch mid-run
                     for &c in caps.iter() {
                         if !exec.supports(c) {
-                            errors.lock().unwrap().push(anyhow::anyhow!(
+                            guard.reported = true;
+                            init.arrive(Some(format!(
                                 "worker {w}: {} executor does not \
                                  support configured tier {c}",
-                                exec.name()));
-                            return; // guard closes queue + arrives
+                                exec.name())));
+                            return; // guard closes the queue
                         }
                     }
-                    ready.arrive();
-                    guard.arrived = true;
-                    let shared = worker::WorkerShared {
-                        queue,
-                        controller,
-                        completions,
-                        max_batch_wait: cfg.max_batch_wait,
-                    };
+                    guard.reported = true;
+                    init.arrive(None);
                     match worker::run_worker(&shared, w, exec.as_mut()) {
                         Ok(_batches) => guard.clean_exit = true,
                         Err(e) => {
-                            errors.lock().unwrap().push(e.context(
-                                format!("worker {w}: execution")));
+                            shared.errors.lock().unwrap().push(format!(
+                                "worker {w}: execution: {e:#}"));
                             // guard closes the queue
                         }
                     }
                 });
-            }
-
-            // compile/warmup happens on the workers before this clears;
-            // the serving clock (and any producer spawned by `source`)
-            // starts at readiness, not at spawn
-            ready.wait_all();
-            let rx = source();
-            let start = Instant::now();
-
-            // admission loop: bounded push propagates backpressure to the
-            // producer channel when all workers are saturated
-            let mut admitted = 0usize;
-            while admitted < expected {
-                match rx.recv_timeout(Duration::from_millis(50)) {
-                    Ok(req) => {
-                        if queue.push(req).is_err() {
-                            break; // a worker failed and closed the queue
-                        }
-                        admitted += 1;
+            match spawned {
+                Ok(t) => threads.push(t),
+                Err(e) => {
+                    shared.queue.close();
+                    for t in threads {
+                        let _ = t.join();
                     }
-                    Err(RecvTimeoutError::Timeout) => {
-                        if queue.is_closed() {
-                            break;
-                        }
-                    }
-                    Err(RecvTimeoutError::Disconnected) => break,
+                    anyhow::bail!("spawning worker {w}: {e}");
                 }
             }
-            queue.close(); // workers drain the backlog, then exit
-            start
-        });
-
-        let errs = errors.into_inner().unwrap();
-        if !errs.is_empty() {
-            // surface every worker failure, not just the first
-            let msgs: Vec<String> =
-                errs.iter().map(|e| format!("{e:#}")).collect();
-            return Err(anyhow::anyhow!(
-                "{}/{workers} workers failed: {}", msgs.len(),
-                msgs.join(" | ")));
         }
-        let completions = completions.into_inner().unwrap();
-        Ok(ServeReport::new(completions, start.elapsed().as_secs_f64(),
-                            &caps, workers))
+
+        // compile/warmup happens on the workers before this clears; the
+        // serving clock starts at readiness, not at spawn
+        let failures = init.wait_for(workers);
+        if !failures.is_empty() {
+            shared.queue.close();
+            for t in threads {
+                let _ = t.join();
+            }
+            anyhow::bail!("{}/{workers} workers failed to start: {}",
+                          failures.len(), failures.join(" | "));
+        }
+        Ok(EngineHandle {
+            shared,
+            threads,
+            caps: caps.as_ref().clone(),
+            workers,
+            started: Instant::now(),
+        })
     }
 }
 
-/// Scope-body drop guard: closes the queue when the engine's calling
-/// thread unwinds, so blocked workers exit and the panic can propagate
-/// through `thread::scope`'s join instead of deadlocking it.
-struct CloseOnDrop<'a>(&'a AdmissionQueue);
+/// Live handle to a running engine: submit requests, observe depth,
+/// shut down.  Dropping the handle without calling
+/// [`shutdown`](Self::shutdown) closes the queue (workers drain the
+/// backlog and exit on their own) but discards the report.
+pub struct EngineHandle {
+    shared: Arc<EngineShared>,
+    threads: Vec<JoinHandle<()>>,
+    caps: Vec<f32>,
+    workers: usize,
+    started: Instant,
+}
 
-impl Drop for CloseOnDrop<'_> {
+impl EngineHandle {
+    /// Submit one request, blocking while the admission queue is at its
+    /// bound (client-side backpressure).  Always returns a [`Response`];
+    /// if the engine is shutting down the response resolves immediately
+    /// to [`ServeError::ShuttingDown`].  Time spent blocked here counts
+    /// toward the request's queue wait — the admission stamp is taken
+    /// before the push.
+    pub fn submit(&self, req: Request) -> Response {
+        let (responder, response) = Response::channel(req.id);
+        let pending =
+            Pending { submitted: Instant::now(), req, responder };
+        if let Err(p) = self.shared.queue.push(pending) {
+            p.responder.fulfil(Err(ServeError::ShuttingDown));
+        }
+        response
+    }
+
+    /// Non-blocking admission: the request is either accepted (with its
+    /// completion future) or shed with an explicit verdict.  A
+    /// [`ShedReason::QueueFull`] verdict is only ever produced when the
+    /// bounded queue is genuinely at its bound.
+    pub fn try_submit(&self, req: Request) -> Admission {
+        let (responder, response) = Response::channel(req.id);
+        let pending =
+            Pending { submitted: Instant::now(), req, responder };
+        match self.shared.queue.try_push(pending) {
+            Ok(()) => Admission::Accepted(response),
+            Err(TryPushError::Full(_)) => {
+                Admission::Shed(ShedReason::QueueFull)
+            }
+            Err(TryPushError::Closed(_)) => {
+                Admission::Shed(ShedReason::ShuttingDown)
+            }
+        }
+    }
+
+    /// Current admission backlog (what the controller observes).
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue.len()
+    }
+
+    /// The configured capacity ladder, descending.
+    pub fn capacities(&self) -> &[f32] {
+        &self.caps
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Drain and join: close admission, let the workers finish the
+    /// backlog, join them, and return the aggregate report.  Every
+    /// admitted request's `Response` is resolved before this returns —
+    /// by a worker, or (if the fleet died early) with
+    /// [`ServeError::ShuttingDown`] here.  Worker failures surface as
+    /// `Err` after all responses are resolved.
+    pub fn shutdown(mut self) -> Result<ServeReport> {
+        self.shared.queue.close();
+        let mut panics = 0usize;
+        for t in std::mem::take(&mut self.threads) {
+            if t.join().is_err() {
+                panics += 1;
+            }
+        }
+        // all workers are gone; anything still queued (fleet died
+        // before draining) must be resolved, not leaked
+        loop {
+            let left = self.shared.queue.pop_batch(256, Duration::ZERO);
+            if left.is_empty() {
+                break;
+            }
+            for p in left {
+                p.responder.fulfil(Err(ServeError::ShuttingDown));
+            }
+        }
+        let mut errors =
+            std::mem::take(&mut *self.shared.errors.lock().unwrap());
+        let completions =
+            std::mem::take(&mut *self.shared.completions.lock().unwrap());
+        let sheds =
+            std::mem::take(&mut *self.shared.sheds.lock().unwrap());
+        if panics > 0 {
+            errors.push(format!("{panics} worker(s) panicked"));
+        }
+        if !errors.is_empty() {
+            anyhow::bail!("{} worker failure(s): {}", errors.len(),
+                          errors.join(" | "));
+        }
+        let wall = self.started.elapsed().as_secs_f64();
+        Ok(ServeReport::new(completions, sheds, wall, &self.caps,
+                            self.workers))
+    }
+}
+
+impl Drop for EngineHandle {
     fn drop(&mut self) {
-        self.0.close();
+        // a dropped handle must not strand workers blocked on an open,
+        // empty queue; they drain the backlog and exit detached
+        self.shared.queue.close();
     }
 }
 
-/// One-shot readiness latch.  Workers *arrive* (never block); only the
-/// engine thread waits for all arrivals.  Unlike `Barrier`, no unwind
-/// path — a panicking spawn loop, a failing worker — can strand a peer
-/// blocked on it, because nothing but the engine thread ever blocks.
-struct ReadyLatch {
-    count: Mutex<usize>,
-    all: Condvar,
-    target: usize,
+/// Startup latch: every worker reports init success (`None`) or failure
+/// (`Some(msg)`) exactly once; only `start` blocks on it.  No worker
+/// ever waits here, so no unwind path can strand a peer.
+struct InitLatch {
+    state: Mutex<(usize, Vec<String>)>,
+    cv: Condvar,
 }
 
-impl ReadyLatch {
-    fn new(target: usize) -> ReadyLatch {
-        ReadyLatch { count: Mutex::new(0), all: Condvar::new(), target }
-    }
-
-    fn arrive(&self) {
-        let mut c = self.count.lock().unwrap();
-        *c += 1;
-        if *c >= self.target {
-            self.all.notify_all();
+impl InitLatch {
+    fn new() -> InitLatch {
+        InitLatch {
+            state: Mutex::new((0, Vec::new())),
+            cv: Condvar::new(),
         }
     }
 
-    fn wait_all(&self) {
-        let mut c = self.count.lock().unwrap();
-        while *c < self.target {
-            c = self.all.wait(c).unwrap();
+    fn arrive(&self, failure: Option<String>) {
+        let mut st = self.state.lock().unwrap();
+        st.0 += 1;
+        if let Some(msg) = failure {
+            st.1.push(msg);
         }
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    fn wait_for(&self, target: usize) -> Vec<String> {
+        let mut st = self.state.lock().unwrap();
+        while st.0 < target {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.1.clone()
     }
 }
 
 /// Worker-thread drop guard: on any abnormal exit (error return or
-/// panic, before or after arrival) it closes the admission queue so no
-/// producer or sibling blocks forever, and arrives at the readiness
-/// latch if this thread has not yet (exactly-once).
-struct WorkerGuard<'a> {
-    queue: &'a AdmissionQueue,
-    ready: &'a ReadyLatch,
-    arrived: bool,
+/// panic, before or after init) it closes the admission queue so no
+/// submitter or sibling blocks forever, and reports to the init latch
+/// if this thread has not yet (exactly-once, so `start` cannot hang).
+struct WorkerGuard {
+    shared: Arc<EngineShared>,
+    init: Arc<InitLatch>,
+    worker: usize,
+    reported: bool,
     clean_exit: bool,
 }
 
-impl Drop for WorkerGuard<'_> {
+impl Drop for WorkerGuard {
     fn drop(&mut self) {
         if !self.clean_exit {
-            self.queue.close();
+            self.shared.queue.close();
         }
-        if !self.arrived {
-            self.ready.arrive();
+        if !self.reported {
+            self.init.arrive(Some(format!(
+                "worker {} died during startup", self.worker)));
         }
     }
 }
@@ -423,41 +731,106 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "scoped thread panicked")]
-    fn engine_propagates_factory_panics_instead_of_hanging() {
-        // the WorkerGuard must close the queue and arrive at the latch
-        // on a panicking factory, so the scope join re-raises a panic
-        // (std::thread::scope's fixed "a scoped thread panicked"
-        // message, since the worker's handle is implicitly joined)
-        // instead of the admission loop hanging forever
-        let server = ElasticServer::new(ServeConfig::sim().with_workers(1));
-        let (tx, rx) = std::sync::mpsc::channel::<Request>();
-        drop(tx);
-        let _ = server.run(|_| panic!("factory blew up"), rx, 4);
+    fn start_surfaces_factory_panics_instead_of_hanging() {
+        // the WorkerGuard must close the queue and report to the init
+        // latch on a panicking factory, so start() returns Err instead
+        // of blocking forever on a latch nobody will arrive at
+        let err = ElasticEngine::start(
+            ServeConfig::sim().with_workers(1),
+            |_| panic!("factory blew up"))
+            .err()
+            .expect("panicking factory must fail start");
+        assert!(format!("{err:#}").contains("died during startup"),
+                "{err:#}");
     }
 
     #[test]
-    fn engine_rejects_ladder_mismatch_at_init() {
+    fn start_rejects_ladder_mismatch_at_init() {
         // config ladder [1.0, .75, .5, .25] vs executor ladder [.9, .1]:
         // must abort at worker init, not per-batch mid-run
-        let server = ElasticServer::new(ServeConfig::sim().with_workers(1));
-        let (tx, rx) = std::sync::mpsc::channel::<Request>();
-        drop(tx);
-        let err = server
-            .run(sim::factory(SimSpec::instant(), vec![0.9, 0.1]), rx, 4)
-            .unwrap_err();
+        let err = ElasticEngine::start(
+            ServeConfig::sim().with_workers(1),
+            sim::factory(SimSpec::instant(), vec![0.9, 0.1]))
+            .err()
+            .expect("ladder mismatch must fail start");
         assert!(format!("{err:#}").contains("does not support"), "{err:#}");
     }
 
     #[test]
-    fn engine_surfaces_factory_errors() {
-        let server = ElasticServer::new(
-            ServeConfig::sim().with_workers(2));
-        let (tx, rx) = std::sync::mpsc::channel::<Request>();
-        drop(tx);
-        let err = server
-            .run(|w| anyhow::bail!("no executor for worker {w}"), rx, 4)
-            .unwrap_err();
+    fn start_surfaces_factory_errors() {
+        let err = ElasticEngine::start(
+            ServeConfig::sim().with_workers(2),
+            |w| anyhow::bail!("no executor for worker {w}"))
+            .err()
+            .expect("failing factory must fail start");
         assert!(format!("{err:#}").contains("executor init"), "{err:#}");
+    }
+
+    #[test]
+    fn submit_wait_shutdown_roundtrip() {
+        let cfg = ServeConfig::sim().with_workers(1);
+        let caps = cfg.capacities();
+        let engine = ElasticEngine::start(
+            cfg, sim::factory(SimSpec::instant(), caps)).unwrap();
+        let seq = SimSpec::instant().seq_len;
+        let responses: Vec<Response> = (0..5u64)
+            .map(|id| engine.submit(Request::new(id, vec![0; seq])))
+            .collect();
+        for (i, r) in responses.into_iter().enumerate() {
+            assert_eq!(r.id(), i as u64);
+            let reply = r.wait().expect("sim request must be served");
+            assert_eq!(reply.completion.id, i as u64);
+            assert_eq!(reply.completion.class, "best-effort");
+            assert!(reply.completion.queue_ms >= 0.0);
+            assert!(reply.completion.exec_ms >= 0.0);
+            assert!(!reply.logits.is_empty(), "reply must carry logits");
+        }
+        let report = engine.shutdown().unwrap();
+        assert_eq!(report.completions.len(), 5);
+        assert!(report.sheds.is_empty());
+    }
+
+    #[test]
+    fn submit_after_worker_death_resolves_not_hangs() {
+        // factory succeeds, executor fails on the first batch: the
+        // worker dies and closes the queue, so later submits must
+        // resolve with ShuttingDown instead of blocking forever
+        struct FailExec;
+        impl Executor for FailExec {
+            fn batch(&self) -> usize {
+                1
+            }
+            fn seq_len(&self) -> usize {
+                4
+            }
+            fn execute(&mut self, _tier: f32, _tokens: &[i32])
+                       -> Result<ExecOutput> {
+                anyhow::bail!("backend exploded")
+            }
+        }
+        let engine = ElasticEngine::start(
+            ServeConfig::sim().with_workers(1),
+            |_| Ok(Box::new(FailExec) as Box<dyn Executor>))
+            .unwrap();
+        let first = engine.submit(Request::new(0, vec![0; 4]));
+        match first.wait() {
+            Err(ServeError::ExecFailed(msg)) => {
+                assert!(msg.contains("backend exploded"), "{msg}");
+            }
+            other => panic!("want ExecFailed, got {other:?}"),
+        }
+        // the response resolves before the dying worker's guard closes
+        // the queue; wait for the close so the late submit can't race
+        // into a still-open queue with no worker left to drain it
+        while !engine.shared.queue.is_closed() {
+            std::thread::yield_now();
+        }
+        let late = engine.submit(Request::new(1, vec![0; 4]));
+        match late.wait_timeout(Duration::from_secs(5)) {
+            Some(Err(ServeError::ShuttingDown)) => {}
+            other => panic!("want ShuttingDown, got {other:?}"),
+        }
+        let err = engine.shutdown().expect_err("worker failure surfaces");
+        assert!(format!("{err:#}").contains("backend exploded"), "{err:#}");
     }
 }

@@ -3,39 +3,52 @@
 //! `std::sync::mpsc` channels are unbounded (and their receivers are
 //! single-consumer), so the serving engine uses this small
 //! `Mutex<VecDeque>` + condvar queue instead: pushers block in
-//! [`AdmissionQueue::push`] once `bound` requests are waiting, and
-//! every worker pops batches from the shared front in FIFO order.
-//! Closing wakes all waiters; a worker seeing an empty pop after close
-//! knows the backlog is fully drained.
+//! [`AdmissionQueue::push`] once `bound` items are waiting, and every
+//! worker pops batches from the shared front in FIFO order.  Closing
+//! wakes all waiters; a worker seeing an empty pop after close knows
+//! the backlog is fully drained.
 //!
-//! Scope of the backpressure: the bound throttles the engine's
-//! *admission loop*, which stops draining its mpsc front-end when
-//! workers fall behind.  Producers feeding that (unbounded) channel
-//! only feel it indirectly; true client-side flow control needs a
-//! bounded front-end (`mpsc::sync_channel` or async admission — see
-//! ROADMAP "Open items").
+//! Since the handle-based front-end, clients push into this queue
+//! *directly* (no mpsc bridge in between): [`push`](AdmissionQueue::push)
+//! is the blocking backpressure path behind `EngineHandle::submit`, and
+//! [`try_push`](AdmissionQueue::try_push) is the non-blocking admission
+//! probe behind `try_submit` — its `Full` rejection is the one and only
+//! source of `Admission::Shed(ShedReason::QueueFull)` verdicts, so a
+//! shed verdict always means the bound was genuinely hit.
+//!
+//! The queue is generic over its item: the engine stores
+//! `Pending` (request + response slot), the tests push bare ids.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use super::Request;
-
-struct State {
-    items: VecDeque<Request>,
+struct State<T> {
+    items: VecDeque<T>,
     closed: bool,
 }
 
-/// Bounded FIFO request queue shared by the admission loop and workers.
-pub struct AdmissionQueue {
-    state: Mutex<State>,
+/// Why a non-blocking push was refused.  The item is handed back so the
+/// caller can account for it (e.g. resolve its response slot).
+#[derive(Debug)]
+pub enum TryPushError<T> {
+    /// the queue is at its bound — the only condition that may surface
+    /// to clients as a `Shed(QueueFull)` admission verdict
+    Full(T),
+    /// the queue has been closed (shutdown or a failed worker)
+    Closed(T),
+}
+
+/// Bounded FIFO queue shared by the submitting clients and the workers.
+pub struct AdmissionQueue<T> {
+    state: Mutex<State<T>>,
     not_empty: Condvar,
     not_full: Condvar,
     bound: usize,
 }
 
-impl AdmissionQueue {
-    pub fn new(bound: usize) -> AdmissionQueue {
+impl<T> AdmissionQueue<T> {
+    pub fn new(bound: usize) -> AdmissionQueue<T> {
         AdmissionQueue {
             state: Mutex::new(State { items: VecDeque::new(), closed: false }),
             not_empty: Condvar::new(),
@@ -44,35 +57,52 @@ impl AdmissionQueue {
         }
     }
 
-    /// Enqueue one request, blocking while the queue is at its bound.
-    /// Returns the request back as `Err` if the queue has been closed
+    /// Enqueue one item, blocking while the queue is at its bound.
+    /// Returns the item back as `Err` if the queue has been closed
     /// (shutdown or a failed worker) so the caller can account for it.
-    pub fn push(&self, req: Request) -> Result<(), Request> {
+    pub fn push(&self, item: T) -> Result<(), T> {
         let mut st = self.state.lock().unwrap();
         loop {
             if st.closed {
-                return Err(req);
+                return Err(item);
             }
             if st.items.len() < self.bound {
                 break;
             }
             st = self.not_full.wait(st).unwrap();
         }
-        st.items.push_back(req);
+        st.items.push_back(item);
         drop(st);
         self.not_empty.notify_one();
         Ok(())
     }
 
-    /// Pop up to `max` requests from the front.  Blocks until at least one
-    /// request is available (or the queue is closed), then waits at most
+    /// Non-blocking enqueue: admit the item iff the queue is open and
+    /// below its bound.  Never waits — this is the admission-verdict
+    /// path, where "would block" must surface as an explicit `Full`.
+    pub fn try_push(&self, item: T) -> Result<(), TryPushError<T>> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(TryPushError::Closed(item));
+        }
+        if st.items.len() >= self.bound {
+            return Err(TryPushError::Full(item));
+        }
+        st.items.push_back(item);
+        drop(st);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Pop up to `max` items from the front.  Blocks until at least one
+    /// item is available (or the queue is closed), then waits at most
     /// `wait` for the batch to fill.  The fill target is clamped to the
     /// queue bound: with `bound < max` the queue can never hold a full
     /// batch (producers block at the bound), so "bound waiting" is
     /// "full" and the worker must not burn the whole `wait` every cycle.
     /// An empty return means closed *and* fully drained — the worker's
     /// signal to exit.
-    pub fn pop_batch(&self, max: usize, wait: Duration) -> Vec<Request> {
+    pub fn pop_batch(&self, max: usize, wait: Duration) -> Vec<T> {
         let max = max.max(1);
         let target = max.min(self.bound);
         let mut st = self.state.lock().unwrap();
@@ -111,7 +141,7 @@ impl AdmissionQueue {
                 continue; // restart phase 1
             }
             let take = st.items.len().min(max);
-            let out: Vec<Request> = st.items.drain(..take).collect();
+            let out: Vec<T> = st.items.drain(..take).collect();
             let leftover = !st.items.is_empty();
             drop(st);
             self.not_full.notify_all();
@@ -149,31 +179,26 @@ impl AdmissionQueue {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::time::Instant;
-
-    fn req(id: u64) -> Request {
-        Request { id, tokens: vec![0; 4], submitted: Instant::now() }
-    }
 
     #[test]
     fn fifo_order_and_batch_bounds() {
         let q = AdmissionQueue::new(16);
-        for id in 0..10 {
-            q.push(req(id)).unwrap();
+        for id in 0..10u64 {
+            q.push(id).unwrap();
         }
         let a = q.pop_batch(4, Duration::ZERO);
         let b = q.pop_batch(4, Duration::ZERO);
-        assert_eq!(a.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
-        assert_eq!(b.iter().map(|r| r.id).collect::<Vec<_>>(), vec![4, 5, 6, 7]);
+        assert_eq!(a, vec![0, 1, 2, 3]);
+        assert_eq!(b, vec![4, 5, 6, 7]);
         assert_eq!(q.len(), 2);
     }
 
     #[test]
     fn close_drains_then_signals_exit() {
         let q = AdmissionQueue::new(4);
-        q.push(req(0)).unwrap();
+        q.push(0u64).unwrap();
         q.close();
-        assert!(q.push(req(1)).is_err());
+        assert!(q.push(1).is_err());
         let got = q.pop_batch(8, Duration::ZERO);
         assert_eq!(got.len(), 1);
         assert!(q.pop_batch(8, Duration::ZERO).is_empty());
@@ -182,19 +207,39 @@ mod tests {
     #[test]
     fn push_blocks_at_bound_until_popped() {
         let q = std::sync::Arc::new(AdmissionQueue::new(2));
-        q.push(req(0)).unwrap();
-        q.push(req(1)).unwrap();
+        q.push(0u64).unwrap();
+        q.push(1).unwrap();
         let q2 = q.clone();
         let t = std::thread::spawn(move || {
             // blocks until the consumer below makes room
-            q2.push(req(2)).unwrap();
+            q2.push(2).unwrap();
         });
         std::thread::sleep(Duration::from_millis(20));
         assert_eq!(q.len(), 2, "bound violated");
         let got = q.pop_batch(1, Duration::ZERO);
-        assert_eq!(got[0].id, 0);
+        assert_eq!(got[0], 0);
         t.join().unwrap();
         assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn try_push_full_only_at_bound_and_closed_after_close() {
+        let q = AdmissionQueue::new(2);
+        assert!(q.try_push(0u64).is_ok());
+        assert!(q.try_push(1).is_ok());
+        match q.try_push(2) {
+            Err(TryPushError::Full(item)) => assert_eq!(item, 2),
+            other => panic!("expected Full at bound, got {other:?}"),
+        }
+        // popping makes room again: Full is tied to the bound, nothing else
+        let got = q.pop_batch(1, Duration::ZERO);
+        assert_eq!(got, vec![0]);
+        assert!(q.try_push(2).is_ok());
+        q.close();
+        match q.try_push(3) {
+            Err(TryPushError::Closed(item)) => assert_eq!(item, 3),
+            other => panic!("expected Closed after close, got {other:?}"),
+        }
     }
 
     #[test]
@@ -202,8 +247,8 @@ mod tests {
         // bound 2 < batch 8: the queue can never fill the batch, so the
         // pop must return at the bound instead of burning the full wait
         let q = AdmissionQueue::new(2);
-        q.push(req(0)).unwrap();
-        q.push(req(1)).unwrap();
+        q.push(0u64).unwrap();
+        q.push(1).unwrap();
         let t0 = Instant::now();
         let got = q.pop_batch(8, Duration::from_millis(200));
         assert_eq!(got.len(), 2);
@@ -222,7 +267,7 @@ mod tests {
             let q = q.clone();
             producers.push(std::thread::spawn(move || {
                 for i in 0..per_producer {
-                    q.push(req(p as u64 * per_producer + i)).unwrap();
+                    q.push(p as u64 * per_producer + i).unwrap();
                 }
             }));
         }
@@ -236,7 +281,7 @@ mod tests {
                     if got.is_empty() {
                         return ids;
                     }
-                    ids.extend(got.iter().map(|r| r.id));
+                    ids.extend(got);
                 }
             }));
         }

@@ -1,32 +1,66 @@
-//! Completion records and the aggregate serving report.
+//! Completion records and the aggregate serving report, including the
+//! per-SLO-class sections the handle API's contracts are judged by.
 
 use super::tier_matches;
 use crate::metrics::{summarize, Summary};
 
-/// Completion record for one request.
+/// Completion record for one request.  The same struct rides inside the
+/// caller's `Reply` (with logits alongside) and the engine's report.
+///
+/// Timing contract: `queue_ms` and `exec_ms` are measured on one
+/// monotonic clock (admission stamp -> batch execution start -> batch
+/// execution end), and `total_ms == queue_ms + exec_ms` exactly.  No
+/// component is derived from a backend's *modeled* latency, so a fast
+/// completion can never report a negative queue wait.
 #[derive(Debug, Clone)]
 pub struct Completion {
     pub id: u64,
+    /// SLO class name the request was submitted under
+    pub class: String,
     pub tier: f32,
     /// index of the worker that executed the request's batch
     pub worker: usize,
     pub queue_ms: f64,
+    pub exec_ms: f64,
     pub total_ms: f64,
     pub batch_size: usize,
+}
+
+/// One request shed at execution time (deadline already expired when a
+/// worker picked it up); admission-time sheds never enter the engine
+/// and therefore never appear in the report.
+#[derive(Debug, Clone)]
+pub struct ShedRecord {
+    pub id: u64,
+    pub class: String,
+}
+
+/// Per-SLO-class section of the report.
+#[derive(Debug, Clone)]
+pub struct ClassStats {
+    pub class: String,
+    pub served: usize,
+    /// requests shed for an expired deadline
+    pub shed: usize,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub mean_capacity: f64,
 }
 
 /// Aggregate serving report.
 #[derive(Debug, Clone)]
 pub struct ServeReport {
     pub completions: Vec<Completion>,
+    pub sheds: Vec<ShedRecord>,
     pub wall_secs: f64,
     pub tier_counts: Vec<(f32, usize)>,
     pub workers: usize,
 }
 
 impl ServeReport {
-    pub fn new(completions: Vec<Completion>, wall_secs: f64, tiers: &[f32],
-               workers: usize) -> ServeReport {
+    pub fn new(completions: Vec<Completion>, sheds: Vec<ShedRecord>,
+               wall_secs: f64, tiers: &[f32], workers: usize)
+               -> ServeReport {
         let mut tier_counts: Vec<(f32, usize)> =
             tiers.iter().map(|&c| (c, 0usize)).collect();
         for c in &completions {
@@ -37,7 +71,7 @@ impl ServeReport {
                 tc.1 += 1;
             }
         }
-        ServeReport { completions, wall_secs, tier_counts, workers }
+        ServeReport { completions, sheds, wall_secs, tier_counts, workers }
     }
 
     pub fn throughput_rps(&self) -> f64 {
@@ -80,6 +114,48 @@ impl ServeReport {
         }
         counts
     }
+
+    /// Per-SLO-class sections, sorted by class name: how each contract
+    /// actually fared on the shared queue (served/shed split, latency
+    /// percentiles, mean capacity).
+    pub fn class_sections(&self) -> Vec<ClassStats> {
+        let mut names: Vec<&str> = self
+            .completions
+            .iter()
+            .map(|c| c.class.as_str())
+            .chain(self.sheds.iter().map(|s| s.class.as_str()))
+            .collect();
+        names.sort_unstable();
+        names.dedup();
+        names
+            .into_iter()
+            .map(|name| {
+                let mut lat: Vec<f64> = Vec::new();
+                let mut cap = 0.0f64;
+                for c in self.completions.iter().filter(|c| c.class == name)
+                {
+                    lat.push(c.total_ms);
+                    cap += c.tier as f64;
+                }
+                lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let served = lat.len();
+                let shed =
+                    self.sheds.iter().filter(|s| s.class == name).count();
+                ClassStats {
+                    class: name.to_string(),
+                    served,
+                    shed,
+                    p50_ms: percentile_nearest_rank(&lat, 0.5),
+                    p99_ms: percentile_nearest_rank(&lat, 0.99),
+                    mean_capacity: if served == 0 {
+                        0.0
+                    } else {
+                        cap / served as f64
+                    },
+                }
+            })
+            .collect()
+    }
 }
 
 /// Nearest-rank percentile over a *sorted* slice.  `q <= 0` returns the
@@ -101,9 +177,11 @@ mod tests {
     fn completion(i: u64, ms: f64) -> Completion {
         Completion {
             id: i,
+            class: "best-effort".into(),
             tier: 1.0,
             worker: 0,
             queue_ms: 0.0,
+            exec_ms: ms,
             total_ms: ms,
             batch_size: 1,
         }
@@ -115,7 +193,7 @@ mod tests {
             .enumerate()
             .map(|(i, &ms)| completion(i as u64, ms))
             .collect();
-        ServeReport::new(completions, 1.0, &[1.0], 1)
+        ServeReport::new(completions, Vec::new(), 1.0, &[1.0], 1)
     }
 
     #[test]
@@ -124,6 +202,7 @@ mod tests {
         assert_eq!(r.latency_p(0.5), 0.0);
         assert_eq!(r.latency_p(0.99), 0.0);
         assert_eq!(r.mean_capacity(), 0.0);
+        assert!(r.class_sections().is_empty());
     }
 
     #[test]
@@ -171,7 +250,51 @@ mod tests {
             c.worker = (i % 3) as usize;
             completions.push(c);
         }
-        let r = ServeReport::new(completions, 1.0, &[1.0], 3);
+        let r = ServeReport::new(completions, Vec::new(), 1.0, &[1.0], 3);
         assert_eq!(r.worker_counts(), vec![4, 3, 3]);
+    }
+
+    #[test]
+    fn class_sections_split_served_and_shed_per_class() {
+        let mut completions = Vec::new();
+        for i in 0..6u64 {
+            let mut c = completion(i, (i + 1) as f64);
+            c.class = "relaxed".into();
+            completions.push(c);
+        }
+        let mut tight = completion(100, 2.0);
+        tight.class = "tight".into();
+        tight.tier = 0.25;
+        completions.push(tight);
+        let sheds = vec![
+            ShedRecord { id: 101, class: "tight".into() },
+            ShedRecord { id: 102, class: "tight".into() },
+        ];
+        let r = ServeReport::new(completions, sheds, 1.0, &[1.0, 0.25], 1);
+        let sections = r.class_sections();
+        assert_eq!(sections.len(), 2);
+        let relaxed =
+            sections.iter().find(|s| s.class == "relaxed").unwrap();
+        assert_eq!((relaxed.served, relaxed.shed), (6, 0));
+        assert_eq!(relaxed.p50_ms, 3.0);
+        assert_eq!(relaxed.mean_capacity, 1.0);
+        let tight = sections.iter().find(|s| s.class == "tight").unwrap();
+        assert_eq!((tight.served, tight.shed), (1, 2));
+        assert_eq!(tight.p50_ms, 2.0);
+        assert!((tight.mean_capacity - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn class_sections_include_fully_shed_classes() {
+        // a class whose every request was shed must still get a section
+        // (served = 0) — otherwise the report hides the starved class
+        let sheds =
+            vec![ShedRecord { id: 0, class: "starved".into() }];
+        let r = ServeReport::new(Vec::new(), sheds, 1.0, &[1.0], 1);
+        let sections = r.class_sections();
+        assert_eq!(sections.len(), 1);
+        assert_eq!(sections[0].class, "starved");
+        assert_eq!((sections[0].served, sections[0].shed), (0, 1));
+        assert_eq!(sections[0].mean_capacity, 0.0);
     }
 }

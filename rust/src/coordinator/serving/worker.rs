@@ -1,26 +1,38 @@
 //! The `Executor` trait — "warm up and execute one batch at a capacity
-//! tier" — plus the PJRT implementor and the worker loop that drives any
-//! implementor from the shared admission queue.
+//! tier, returning its logits" — plus the PJRT implementor and the
+//! worker loop that drives any implementor from the shared admission
+//! queue and routes every completion back to its requester.
 //!
 //! PJRT handles are not `Send`, so executors never cross threads: the
 //! engine calls its factory *on* each worker thread and the boxed
 //! executor lives and dies there.  The worker loop itself is
 //! backend-agnostic, which is what lets `tests/serving_sim.rs` exercise
-//! the full admission → batch → tier-select → execute → complete path
-//! through [`super::SimExecutor`] with no artifacts on disk.
+//! the full submit → admit → batch → tier-select → execute → resolve
+//! path through [`super::SimExecutor`] with no artifacts on disk.
 
-use std::sync::Mutex;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use super::batcher::form_batch;
-use super::controller::CapacityController;
-use super::queue::AdmissionQueue;
-use super::report::Completion;
+use super::report::{Completion, ShedRecord};
+use super::{EngineShared, Pending, Reply, ServeError};
+
+#[cfg(feature = "pjrt")]
 use super::tier_matches;
+#[cfg(feature = "pjrt")]
 use crate::runtime::client::Arg;
+#[cfg(feature = "pjrt")]
 use crate::runtime::Runtime;
+
+/// One executed batch's output: the flattened logits for every row of
+/// the batch (real and padded rows alike).  `logits.len()` must be a
+/// multiple of the executor's `batch()` so the worker can slice out
+/// each request's row for its [`super::Reply`].
+#[derive(Debug, Clone)]
+pub struct ExecOutput {
+    pub logits: Vec<f32>,
+}
 
 /// A serving backend: owns whatever compiled/warmed state one worker
 /// needs and executes one fixed-shape batch at a given capacity tier.
@@ -30,9 +42,9 @@ pub trait Executor {
     /// static sequence length of the compiled executables
     fn seq_len(&self) -> usize;
     /// Run one `batch() * seq_len()` token tensor at `tier` (one of the
-    /// configured capacities).  Blocking; called from the worker thread
-    /// that constructed the executor.
-    fn execute(&mut self, tier: f32, tokens: &[i32]) -> Result<()>;
+    /// configured capacities) and return the batch logits.  Blocking;
+    /// called from the worker thread that constructed the executor.
+    fn execute(&mut self, tier: f32, tokens: &[i32]) -> Result<ExecOutput>;
     /// Can this executor run the given capacity tier?  The engine
     /// probes every configured tier at worker startup, so a ladder
     /// mismatch between `ServeConfig` and the factory aborts at init
@@ -50,6 +62,7 @@ pub trait Executor {
 /// Owns its own [`Runtime`] (and therefore its own PJRT client and
 /// non-`Send` handles), so each worker thread loads one via
 /// [`XlaExecutor::load`] inside the engine's executor factory.
+#[cfg(feature = "pjrt")]
 pub struct XlaExecutor {
     rt: Runtime,
     /// (capacity, entry name) ladder, mirrors `ServeConfig::tiers`
@@ -62,6 +75,7 @@ pub struct XlaExecutor {
     seq_len: usize,
 }
 
+#[cfg(feature = "pjrt")]
 impl XlaExecutor {
     /// Load the artifact set for `config` and pre-compile every tier
     /// entry: admission must never pay compile latency.
@@ -93,12 +107,13 @@ impl XlaExecutor {
         })
     }
 
-    /// Executor factory for [`super::ElasticServer::run`]: each worker
+    /// Executor factory for [`super::ElasticEngine::start`]: each worker
     /// thread loads its own runtime (and PJRT client) over the same
     /// artifact set and parameter vectors.
     pub fn factory(artifacts_dir: String, config: String, params: Vec<f32>,
                    router: Vec<f32>, tiers: Vec<(f32, String)>)
-                   -> impl Fn(usize) -> Result<Box<dyn Executor>> + Sync {
+                   -> impl Fn(usize) -> Result<Box<dyn Executor>>
+                       + Send + Sync + 'static {
         move |_worker| {
             Ok(Box::new(XlaExecutor::load(&artifacts_dir, &config, &params,
                                           &router, &tiers)?)
@@ -117,6 +132,7 @@ impl XlaExecutor {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl Executor for XlaExecutor {
     fn batch(&self) -> usize {
         self.batch
@@ -126,13 +142,12 @@ impl Executor for XlaExecutor {
         self.seq_len
     }
 
-    fn execute(&mut self, tier: f32, tokens: &[i32]) -> Result<()> {
+    fn execute(&mut self, tier: f32, tokens: &[i32]) -> Result<ExecOutput> {
         let entry = self.entry_for(tier)?;
         let tokens_lit = self.rt.prepare_arg(entry, 2, &Arg::I32(tokens))?;
         let out = self.rt.exec_prepared(
             entry, &[&self.params_lit, &self.router_lit, &tokens_lit])?;
-        let _logits = out.f32(0)?; // delivered to callers in a real API
-        Ok(())
+        Ok(ExecOutput { logits: out.f32(0)? })
     }
 
     fn supports(&self, tier: f32) -> bool {
@@ -144,52 +159,129 @@ impl Executor for XlaExecutor {
     }
 }
 
-/// Shared engine state one worker borrows for its lifetime.
-pub(crate) struct WorkerShared<'a> {
-    pub queue: &'a AdmissionQueue,
-    pub controller: &'a Mutex<CapacityController>,
-    pub completions: &'a Mutex<Vec<Completion>>,
-    pub max_batch_wait: Duration,
-}
-
-/// The worker loop: pop a FIFO run of requests, pick a tier from the
-/// global backlog, form the padded batch, execute, record completions.
-/// Returns the number of batches executed; exits when the queue is
-/// closed and drained.
-pub(crate) fn run_worker(shared: &WorkerShared<'_>, worker: usize,
+/// The worker loop: pop a FIFO run of admitted requests, shed the ones
+/// whose deadline already expired, pick a tier from the global backlog
+/// plus the batch's SLO constraints, form the padded batch, execute,
+/// and resolve each request's [`super::Response`] with its logits row
+/// and timings.  Returns the number of batches executed; exits when the
+/// queue is closed and drained.
+///
+/// All timings are measured on one monotonic clock: `submitted` (the
+/// admission stamp) -> `exec_start` -> `done`.  `queue_ms + exec_ms ==
+/// total_ms` exactly, and neither can go negative on fast completions.
+pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
                          exec: &mut dyn Executor) -> Result<usize> {
     let batch = exec.batch().max(1);
     let seq_len = exec.seq_len();
     let mut batches = 0usize;
     loop {
-        let reqs = shared.queue.pop_batch(batch, shared.max_batch_wait);
-        if reqs.is_empty() {
+        let popped = shared.queue.pop_batch(batch, shared.max_batch_wait);
+        if popped.is_empty() {
             return Ok(batches); // closed and drained
         }
-        // the controller sees the global post-pop backlog, so all
-        // workers shed capacity together under sustained load
-        let tier =
-            shared.controller.lock().unwrap().choose(shared.queue.len());
+        // shed expired deadlines before spending any compute on them,
+        // and collect the survivors' SLO constraints for the controller
+        let now = Instant::now();
+        let mut live: Vec<Pending> = Vec::with_capacity(popped.len());
+        let mut floor = 0.0f32;
+        let mut slack_ms: Option<f64> = None;
+        for p in popped {
+            let waited = now.saturating_duration_since(p.submitted);
+            if let Some(deadline) = p.req.slo.deadline {
+                if waited >= deadline {
+                    shared.sheds.lock().unwrap().push(ShedRecord {
+                        id: p.req.id,
+                        class: p.req.slo.name.clone(),
+                    });
+                    p.responder.fulfil(Err(ServeError::DeadlineExceeded));
+                    continue;
+                }
+                let s = (deadline - waited).as_secs_f64() * 1e3;
+                slack_ms = Some(match slack_ms {
+                    Some(prev) => prev.min(s),
+                    None => s,
+                });
+            }
+            floor = floor.max(p.req.slo.floor_tier);
+            live.push(p);
+        }
+        if live.is_empty() {
+            continue; // the whole run was past-deadline
+        }
+        // the controller sees the global post-pop backlog plus this
+        // batch's tightest deadline slack and strictest quality floor
+        let tier = shared.controller.lock().unwrap().choose_for_batch(
+            shared.queue.len(), floor, slack_ms);
         let exec_start = Instant::now();
+        // split each Pending into its request (consumed by form_batch)
+        // and its response half; form_batch preserves order, so the two
+        // vectors stay aligned
+        let mut meta = Vec::with_capacity(live.len());
+        let mut reqs = Vec::with_capacity(live.len());
+        for p in live {
+            meta.push((p.submitted, p.responder));
+            reqs.push(p.req);
+        }
         let formed = form_batch(reqs, batch, seq_len);
-        exec.execute(tier, &formed.tokens).with_context(|| {
-            format!("{} worker {worker}: tier {tier} batch of {}",
-                    exec.name(), formed.requests.len())
-        })?;
+        let out = match exec.execute(tier, &formed.tokens) {
+            Ok(out) => out,
+            Err(e) => {
+                let msg = format!(
+                    "{} worker {worker}: tier {tier} batch of {}: {e:#}",
+                    exec.name(), formed.requests.len());
+                for (_, responder) in meta {
+                    responder
+                        .fulfil(Err(ServeError::ExecFailed(msg.clone())));
+                }
+                return Err(e.context(format!(
+                    "{} worker {worker}: tier {tier} batch of {}",
+                    exec.name(), formed.requests.len())));
+            }
+        };
         let done = Instant::now();
+        let exec_ms = done
+            .saturating_duration_since(exec_start)
+            .as_secs_f64() * 1e3;
+        shared.controller.lock().unwrap().observe_exec(tier, exec_ms);
+        // the executor contract is one equal-size logits row per batch
+        // slot (padded rows included); a violating backend must surface
+        // as an error, not as silently truncated rows handed to callers
+        if out.logits.len() % batch != 0 {
+            let msg = format!(
+                "{} worker {worker}: executor returned {} logits, not a \
+                 multiple of batch {batch}",
+                exec.name(), out.logits.len());
+            for (_, responder) in meta {
+                responder.fulfil(Err(ServeError::ExecFailed(msg.clone())));
+            }
+            return Err(anyhow::anyhow!(msg));
+        }
         let n = formed.requests.len();
-        let mut out = shared.completions.lock().unwrap();
-        for r in formed.requests {
-            out.push(Completion {
-                id: r.id,
+        let row_len = out.logits.len() / batch;
+        let mut batch_completions = Vec::with_capacity(n);
+        for (i, (req, (submitted, responder))) in
+            formed.requests.into_iter().zip(meta).enumerate()
+        {
+            let queue_ms = exec_start
+                .saturating_duration_since(submitted)
+                .as_secs_f64() * 1e3;
+            let completion = Completion {
+                id: req.id,
+                class: req.slo.name.clone(),
                 tier,
                 worker,
-                queue_ms: (exec_start - r.submitted).as_secs_f64() * 1e3,
-                total_ms: (done - r.submitted).as_secs_f64() * 1e3,
+                queue_ms,
+                exec_ms,
+                total_ms: queue_ms + exec_ms,
                 batch_size: n,
-            });
+            };
+            batch_completions.push(completion.clone());
+            let logits =
+                out.logits[i * row_len..(i + 1) * row_len].to_vec();
+            responder.fulfil(Ok(Reply { completion, logits }));
         }
-        drop(out);
+        // one lock for the whole batch, not one per request
+        shared.completions.lock().unwrap().extend(batch_completions);
         batches += 1;
     }
 }

@@ -13,10 +13,12 @@ pub mod cli;
 pub mod coordinator;
 pub mod data;
 pub mod eval;
+#[cfg(feature = "pjrt")]
 pub mod experiments;
 pub mod json;
 pub mod metrics;
 pub mod proptest;
 pub mod rng;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod tensor;

@@ -18,22 +18,29 @@
 //! `artifacts/` (`make artifacts`); `serve-sim` drives the full serving
 //! pipeline hermetically through the deterministic `SimExecutor`.
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
-use elastiformer::checkpoint::Checkpoint;
 use elastiformer::cli::Args;
 use elastiformer::coordinator::serving::{
-    sim, ElasticServer, Request, ServeConfig, ServeReport, SimSpec,
-    XlaExecutor,
+    sim, Admission, ElasticEngine, Request, Response, ServeConfig,
+    ServeReport, SimSpec,
 };
+use elastiformer::rng::Rng;
+
+#[cfg(feature = "pjrt")]
+use elastiformer::checkpoint::Checkpoint;
+#[cfg(feature = "pjrt")]
+use elastiformer::coordinator::serving::XlaExecutor;
+#[cfg(feature = "pjrt")]
 use elastiformer::coordinator::trainer::{layer_enable, Caps, Trainer};
+#[cfg(feature = "pjrt")]
 use elastiformer::data::{mathgen, Batcher, TextDataset};
+#[cfg(feature = "pjrt")]
 use elastiformer::experiments::{
     common, fig2, fig4, fig5, fig6, fig7, fig8, fig9, qualitative, table1,
 };
-use elastiformer::rng::Rng;
 
 fn main() {
     let args = match Args::from_env() {
@@ -78,6 +85,42 @@ elastiformer — ElastiFormer reproduction (see DESIGN.md)
        flags: --batch B --seq-len T --queue-bound Q --depth-per-tier D
   elastiformer info --config lm_tiny";
 
+/// The artifact-backed subcommands need the PJRT runtime layer; when
+/// the `pjrt` feature is off they compile to a clear error instead of
+/// silently vanishing from the CLI.
+#[cfg(not(feature = "pjrt"))]
+fn needs_pjrt(what: &str) -> Result<()> {
+    bail!("`{what}` needs the PJRT runtime layer, but this binary was \
+           built without the `pjrt` feature; rebuild with \
+           `--features pjrt` (default builds enable it)")
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_exp(_args: &Args) -> Result<()> {
+    needs_pjrt("exp")
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train_teacher(_args: &Args) -> Result<()> {
+    needs_pjrt("train-teacher")
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_distill(_args: &Args) -> Result<()> {
+    needs_pjrt("distill")
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve(_args: &Args) -> Result<()> {
+    needs_pjrt("serve")
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_info(_args: &Args) -> Result<()> {
+    needs_pjrt("info")
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_exp(args: &Args) -> Result<()> {
     let id = args
         .positional
@@ -177,6 +220,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_train_teacher(args: &Args) -> Result<()> {
     let config = args.str_or("config", "lm_tiny");
     let steps = args.usize_or("steps", 300)?;
@@ -188,6 +232,7 @@ fn cmd_train_teacher(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_distill(args: &Args) -> Result<()> {
     let config = args.str_or("config", "lm_tiny");
     let steps = args.usize_or("steps", 100)?;
@@ -230,6 +275,7 @@ fn cmd_distill(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_serve(args: &Args) -> Result<()> {
     let config = args.str_or("config", "lm_tiny");
     let n_requests = args.usize_or("requests", 64)?;
@@ -244,34 +290,41 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let cfg = ServeConfig::standard().with_workers(workers);
     // each worker compiles its own tier executables on its own thread
-    // (PJRT handles are not Send)
+    // (PJRT handles are not Send); start() returns once every worker is
+    // warm, so request latency stamps measure serving, not compile
     let factory = XlaExecutor::factory(common::artifacts_dir(),
                                        config.to_string(), teacher, router,
                                        cfg.tiers.clone());
-    let server = ElasticServer::new(cfg);
-    // producer starts only once every worker is warm, so request
-    // latency stamps measure serving, not PJRT compile
-    let report = server.run_with_producer(factory, move |tx| {
-        let tok = elastiformer::data::Tokenizer::new();
-        let mut rng = Rng::new(seed ^ 0x5E12);
-        for id in 0..n_requests as u64 {
-            let p = mathgen::gen_problem(&mut rng);
-            let req = Request {
-                id,
-                tokens: tok.encode_padded(&p.full_text(), t),
-                submitted: Instant::now(),
-            };
-            if tx.send(req).is_err() {
-                return;
-            }
-            std::thread::sleep(Duration::from_secs_f64(1.0 / rate.max(1.0)));
-        }
-    }, n_requests)?;
-    print_report(&report);
+    let engine = ElasticEngine::start(cfg, factory)?;
+    let tok = elastiformer::data::Tokenizer::new();
+    let mut rng = Rng::new(seed ^ 0x5E12);
+    let mut responses = Vec::with_capacity(n_requests);
+    for id in 0..n_requests as u64 {
+        let p = mathgen::gen_problem(&mut rng);
+        responses.push(engine.submit(
+            Request::new(id, tok.encode_padded(&p.full_text(), t))));
+        std::thread::sleep(Duration::from_secs_f64(1.0 / rate.max(1.0)));
+    }
+    let failed = drain_responses(responses);
+    let report = engine.shutdown()?;
+    print_report(&report, failed);
     Ok(())
 }
 
-fn print_report(report: &ServeReport) {
+/// Wait out every per-request response; returns how many resolved to a
+/// serve error (shed deadline, worker failure, shutdown).
+fn drain_responses(responses: Vec<Response>) -> usize {
+    let mut failed = 0usize;
+    for r in responses {
+        if r.wait().is_err() {
+            failed += 1;
+        }
+    }
+    failed
+}
+
+#[cfg(feature = "pjrt")]
+fn print_report(report: &ServeReport, failed: usize) {
     println!("served {} requests in {:.2}s on {} worker(s) — {:.1} req/s, \
               p50 {:.1} ms, p99 {:.1} ms, mean capacity {:.2}",
              report.completions.len(), report.wall_secs, report.workers,
@@ -286,12 +339,26 @@ fn print_report(report: &ServeReport) {
             counts.iter().map(|c| c.to_string()).collect();
         println!("  per-worker completions: [{}]", joined.join(", "));
     }
+    let sections = report.class_sections();
+    if sections.len() > 1 || sections.iter().any(|s| s.shed > 0) {
+        for s in sections {
+            println!("  class {:<12} served {:>5}  shed {:>4}  \
+                      p50 {:>7.2} ms  p99 {:>7.2} ms  mean cap {:.2}",
+                     s.class, s.served, s.shed, s.p50_ms, s.p99_ms,
+                     s.mean_capacity);
+        }
+    }
+    if failed > 0 {
+        println!("  {failed} request(s) resolved with a serve error");
+    }
 }
 
 /// Synthetic open-loop load sweep over the deterministic simulation
 /// backend: Poisson-ish arrivals (exponential inter-arrival gaps from
-/// the seeded `Rng`), one report row per offered rate.  Runs anywhere —
-/// no artifacts, no XLA runtime.
+/// the seeded `Rng`) pushed through the non-blocking `try_submit`
+/// front-end, so overload surfaces as explicit `Shed(QueueFull)`
+/// admission verdicts instead of a stalled arrival process.  One report
+/// row per offered rate.  Runs anywhere — no artifacts, no XLA runtime.
 fn cmd_serve_sim(args: &Args) -> Result<()> {
     args.check_known(&["requests", "rates", "workers", "batch", "seq-len",
                        "queue-bound", "depth-per-tier", "seed"])?;
@@ -320,16 +387,17 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
               batch {} x seq {}, queue bound {queue_bound}",
              spec.batch, spec.seq_len);
     for rate in rates {
-        let report = run_sim_point(spec, workers, queue_bound,
-                                   depth_per_tier, n, rate, seed)?;
+        let (report, shed) = run_sim_point(spec, workers, queue_bound,
+                                           depth_per_tier, n, rate, seed)?;
         let tiers: Vec<String> = report
             .tier_counts
             .iter()
             .map(|(t, c)| format!("{t:.2}:{c}"))
             .collect();
         println!("offered {rate:>8.0} req/s | served {:>5} in {:>6.2}s | \
-                  {:>8.1} req/s | p50 {:>7.2} ms | p99 {:>7.2} ms | \
-                  mean cap {:.2} | tiers {}",
+                  shed {shed:>4} at admission | {:>8.1} req/s | \
+                  p50 {:>7.2} ms | p99 {:>7.2} ms | mean cap {:.2} | \
+                  tiers {}",
                  report.completions.len(), report.wall_secs,
                  report.throughput_rps(), report.latency_p(0.5),
                  report.latency_p(0.99), report.mean_capacity(),
@@ -340,34 +408,43 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
 
 fn run_sim_point(spec: SimSpec, workers: usize, queue_bound: usize,
                  depth_per_tier: f64, n: usize, rate: f64, seed: u64)
-                 -> Result<ServeReport> {
+                 -> Result<(ServeReport, usize)> {
     let cfg = ServeConfig::sim()
         .with_workers(workers)
         .with_queue_bound(queue_bound)
         .with_depth_per_tier(depth_per_tier)
         .with_max_batch_wait(Duration::from_millis(2));
     let caps = cfg.capacities();
-    let server = ElasticServer::new(cfg);
+    let engine = ElasticEngine::start(cfg, sim::factory(spec, caps))?;
     let seq_len = spec.seq_len;
-    server.run_with_producer(sim::factory(spec, caps), move |tx| {
-        let mut rng = Rng::new(seed ^ 0xA11F);
-        for id in 0..n as u64 {
-            let tokens: Vec<i32> = (0..seq_len)
-                .map(|i| ((id as usize + i) % 97) as i32)
-                .collect();
-            let req = Request { id, tokens, submitted: Instant::now() };
-            if tx.send(req).is_err() {
-                return;
-            }
-            // open-loop Poisson process: exponential inter-arrival gap
-            let gap = -(1.0 - rng.f64()).ln() / rate;
-            if gap > 0.0 {
-                std::thread::sleep(Duration::from_secs_f64(gap));
-            }
+    let mut rng = Rng::new(seed ^ 0xA11F);
+    let mut responses = Vec::with_capacity(n);
+    let mut shed = 0usize;
+    for id in 0..n as u64 {
+        let tokens: Vec<i32> = (0..seq_len)
+            .map(|i| ((id as usize + i) % 97) as i32)
+            .collect();
+        // non-blocking admission keeps the offered rate honest: a full
+        // queue sheds the arrival instead of stalling the process
+        match engine.try_submit(Request::new(id, tokens)) {
+            Admission::Accepted(r) => responses.push(r),
+            Admission::Shed(_) => shed += 1,
         }
-    }, n)
+        // open-loop Poisson process: exponential inter-arrival gap
+        let gap = -(1.0 - rng.f64()).ln() / rate;
+        if gap > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(gap));
+        }
+    }
+    let failed = drain_responses(responses);
+    if failed > 0 {
+        bail!("{failed} admitted sim requests resolved with an error");
+    }
+    let report = engine.shutdown()?;
+    Ok((report, shed))
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_info(args: &Args) -> Result<()> {
     let config = args.str_or("config", "lm_tiny");
     let ctx = common::Ctx::load(config, 0)?;

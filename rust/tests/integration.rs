@@ -4,10 +4,14 @@
 //!
 //! These exercise the full stack: HLO text -> PJRT compile -> execute,
 //! the §4.1 equivalence oracle end-to-end, training-step semantics, and
-//! the serving engine.
+//! the serving engine.  The whole suite is compiled out without the
+//! `pjrt` feature (the default build enables it): everything here needs
+//! the runtime layer the feature gates.
+#![cfg(feature = "pjrt")]
 
 use elastiformer::coordinator::serving::{
-    CapacityController, ElasticServer, Request, ServeConfig, XlaExecutor,
+    CapacityController, ElasticEngine, Request, Response, ServeConfig,
+    XlaExecutor,
 };
 use elastiformer::coordinator::trainer::{Caps, Trainer};
 use elastiformer::data::{mathgen, Tokenizer};
@@ -282,23 +286,22 @@ fn serving_engine_end_to_end() {
     let cfg = ServeConfig::standard();
     let factory = XlaExecutor::factory(dir, "lm_tiny".to_string(), params,
                                        router, cfg.tiers.clone());
-    let server = ElasticServer::new(cfg);
+    let engine = ElasticEngine::start(cfg, factory).unwrap();
     let n = 24;
-    let (tx, rx) = std::sync::mpsc::channel();
-    let producer = std::thread::spawn(move || {
-        let tok = Tokenizer::new();
-        for id in 0..n as u64 {
+    let tok = Tokenizer::new();
+    let responses: Vec<Response> = (0..n as u64)
+        .map(|id| {
             let text = format!("request number {id}");
-            tx.send(Request {
-                id,
-                tokens: tok.encode_padded(&text, t),
-                submitted: std::time::Instant::now(),
-            })
-            .unwrap();
-        }
-    });
-    let report = server.run(factory, rx, n).unwrap();
-    producer.join().unwrap();
+            engine.submit(Request::new(id, tok.encode_padded(&text, t)))
+        })
+        .collect();
+    for r in responses {
+        let reply = r.wait().unwrap();
+        assert!(!reply.logits.is_empty(),
+                "PJRT reply must deliver the request's logits row");
+        assert!(reply.logits.iter().all(|x| x.is_finite()));
+    }
+    let report = engine.shutdown().unwrap();
     assert_eq!(report.completions.len(), n);
     assert!(report.throughput_rps() > 0.0);
     let served: usize = report.tier_counts.iter().map(|(_, c)| c).sum();

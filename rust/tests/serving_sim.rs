@@ -1,42 +1,25 @@
 //! Hermetic end-to-end serving tests over the deterministic
 //! `SimExecutor` — no artifacts, no XLA runtime.  These exercise the
-//! full admission → batch → tier-select → execute → complete pipeline
-//! that `tests/integration.rs` can only reach after `make artifacts`:
-//! light load serves the top tier, sustained overload sheds capacity,
-//! the drain path completes every admitted request, and N workers beat
+//! full submit → admit → batch → tier-select → execute → resolve
+//! pipeline through the handle-based client API: light load serves the
+//! top tier, sustained overload sheds capacity, tight-deadline SLO
+//! classes are shed or floor-tiered while relaxed classes on the same
+//! queue are served, admission verdicts only shed on a genuinely full
+//! queue, shutdown drains every admitted request, and N workers beat
 //! one worker on wall-clock.
 
-use std::sync::mpsc;
-use std::time::{Duration, Instant};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
 
 use elastiformer::coordinator::serving::{
-    sim, ElasticServer, Request, ServeConfig, ServeReport, SimSpec,
+    sim, Admission, ElasticEngine, ExecOutput, Executor, Request, Response,
+    ServeConfig, ServeError, ServeReport, ShedReason, SimSpec, SloClass,
 };
 
 fn sim_tokens(id: u64, seq_len: usize) -> Vec<i32> {
     (0..seq_len).map(|i| ((id as usize + i) % 97) as i32).collect()
-}
-
-/// Producer thread sending `n` requests with a fixed inter-arrival gap.
-fn producer(n: usize, seq_len: usize, gap: Duration)
-            -> mpsc::Receiver<Request> {
-    let (tx, rx) = mpsc::channel();
-    std::thread::spawn(move || {
-        for id in 0..n as u64 {
-            let req = Request {
-                id,
-                tokens: sim_tokens(id, seq_len),
-                submitted: Instant::now(),
-            };
-            if tx.send(req).is_err() {
-                return;
-            }
-            if !gap.is_zero() {
-                std::thread::sleep(gap);
-            }
-        }
-    });
-    rx
 }
 
 fn assert_ids_exactly_once(report: &ServeReport, n: usize) {
@@ -48,7 +31,7 @@ fn assert_ids_exactly_once(report: &ServeReport, n: usize) {
 }
 
 #[test]
-fn light_load_serves_top_tier() {
+fn light_load_serves_top_tier_and_replies_carry_logits() {
     // arrivals far slower than service: the backlog never builds, so
     // requests run at capacity 1.0 (teacher-exact under §4.1).  The
     // assertions leave slack for scheduler stalls on loaded CI runners
@@ -69,10 +52,29 @@ fn light_load_serves_top_tier() {
         .with_depth_per_tier(8.0)
         .with_max_batch_wait(Duration::from_millis(5));
     let caps = cfg.capacities();
-    let server = ElasticServer::new(cfg);
+    let engine =
+        ElasticEngine::start(cfg, sim::factory(spec, caps)).unwrap();
     let n = 60;
-    let rx = producer(n, spec.seq_len, Duration::from_millis(2));
-    let report = server.run(sim::factory(spec, caps), rx, n).unwrap();
+    let mut responses = Vec::with_capacity(n);
+    for id in 0..n as u64 {
+        responses
+            .push(engine.submit(Request::new(id, sim_tokens(id, spec.seq_len))));
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    for r in responses {
+        let reply = r.wait().expect("light load must serve everything");
+        // the sim backend emits one logit per batch slot, valued at the
+        // tier served: delivery through the Response is end-to-end real
+        assert_eq!(reply.logits.len(), 1);
+        assert_eq!(reply.logits[0], reply.completion.tier);
+        assert!((reply.completion.queue_ms + reply.completion.exec_ms
+                 - reply.completion.total_ms)
+                    .abs() < 1e-9,
+                "timings must add up on one clock");
+        assert!(reply.completion.queue_ms >= 0.0,
+                "negative queue wait: {}", reply.completion.queue_ms);
+    }
+    let report = engine.shutdown().unwrap();
     assert_eq!(report.completions.len(), n);
     assert_ids_exactly_once(&report, n);
     let full = report
@@ -90,8 +92,10 @@ fn light_load_serves_top_tier() {
 
 #[test]
 fn sustained_overload_sheds_to_lower_tiers() {
-    // flood arrivals into a small queue with an aggressive shed ladder:
-    // the controller must observe the standing backlog and drop tiers
+    // flood submissions into a small queue with an aggressive shed
+    // ladder: the controller must observe the standing backlog and drop
+    // tiers.  `submit` blocks at the bound, so the flood is throttled
+    // to service rate while the queue stays pinned at its bound.
     let spec = SimSpec {
         batch: 2,
         base_ms: 1.0,
@@ -106,10 +110,18 @@ fn sustained_overload_sheds_to_lower_tiers() {
         .with_max_batch_wait(Duration::from_millis(1));
     let caps = cfg.capacities();
     let lowest = *caps.last().unwrap();
-    let server = ElasticServer::new(cfg);
+    let engine =
+        ElasticEngine::start(cfg, sim::factory(spec, caps)).unwrap();
     let n = 96;
-    let rx = producer(n, spec.seq_len, Duration::ZERO);
-    let report = server.run(sim::factory(spec, caps), rx, n).unwrap();
+    let mut responses = Vec::with_capacity(n);
+    for id in 0..n as u64 {
+        responses
+            .push(engine.submit(Request::new(id, sim_tokens(id, spec.seq_len))));
+    }
+    for r in responses {
+        r.wait().expect("no deadlines configured, nothing may be shed");
+    }
+    let report = engine.shutdown().unwrap();
     assert_eq!(report.completions.len(), n);
     assert_ids_exactly_once(&report, n);
     let shed = report
@@ -127,10 +139,197 @@ fn sustained_overload_sheds_to_lower_tiers() {
 }
 
 #[test]
-fn drain_completes_every_admitted_request() {
-    // producer dies early (channel disconnect before `expected`): the
-    // engine must close the queue and drain every admitted request,
-    // including a final partial batch (37 % 4 != 0)
+fn tight_deadline_class_shed_while_relaxed_class_served() {
+    // acceptance gate: two SLO classes on the same queue.  A 30ms batch
+    // occupies the single worker; a 5ms-deadline request queued behind
+    // it is unmeetable and must be shed (DeadlineExceeded) without
+    // spending compute, while relaxed requests around it are served.
+    let spec = SimSpec {
+        batch: 1,
+        base_ms: 30.0,
+        ms_per_capacity: 0.0,
+        jitter_ms: 0.0,
+        ..SimSpec::standard()
+    };
+    let cfg = ServeConfig::sim()
+        .with_workers(1)
+        .with_max_batch_wait(Duration::ZERO);
+    let caps = cfg.capacities();
+    let engine =
+        ElasticEngine::start(cfg, sim::factory(spec, caps)).unwrap();
+    let relaxed = SloClass::named("relaxed");
+    let tight = SloClass::named("tight")
+        .with_deadline(Duration::from_millis(5));
+    let r0 = engine.submit(
+        Request::new(0, sim_tokens(0, spec.seq_len)).with_slo(relaxed.clone()));
+    let t1 = engine.submit(
+        Request::new(1, sim_tokens(1, spec.seq_len)).with_slo(tight));
+    let r2 = engine.submit(
+        Request::new(2, sim_tokens(2, spec.seq_len)).with_slo(relaxed));
+    assert!(r0.wait().is_ok(), "first relaxed request must be served");
+    match t1.wait() {
+        Err(ServeError::DeadlineExceeded) => {}
+        other => panic!("tight-deadline request must be shed, got {other:?}"),
+    }
+    assert!(r2.wait().is_ok(), "relaxed request behind the shed one \
+                                must still be served");
+    let report = engine.shutdown().unwrap();
+    let sections = report.class_sections();
+    let tight_sec = sections.iter().find(|s| s.class == "tight").unwrap();
+    assert_eq!((tight_sec.served, tight_sec.shed), (0, 1));
+    let relaxed_sec =
+        sections.iter().find(|s| s.class == "relaxed").unwrap();
+    assert_eq!((relaxed_sec.served, relaxed_sec.shed), (2, 0));
+}
+
+#[test]
+fn floor_tier_class_holds_capacity_while_best_effort_sheds() {
+    // same queue, sustained overload, aggressive shed ladder: the
+    // best-effort class must lose capacity while the floored class is
+    // pinned at its floor (batch = 1, so classes never share a batch)
+    let spec = SimSpec {
+        batch: 1,
+        base_ms: 1.0,
+        ms_per_capacity: 1.0,
+        jitter_ms: 0.0,
+        ..SimSpec::standard()
+    };
+    let cfg = ServeConfig::sim()
+        .with_workers(1)
+        .with_queue_bound(128)
+        .with_depth_per_tier(0.5)
+        .with_max_batch_wait(Duration::ZERO);
+    let caps = cfg.capacities();
+    let engine =
+        ElasticEngine::start(cfg, sim::factory(spec, caps)).unwrap();
+    let floored = SloClass::named("premium").with_floor_tier(1.0);
+    let n = 60;
+    let mut responses = Vec::with_capacity(n);
+    for id in 0..n as u64 {
+        let slo = if id % 2 == 0 {
+            floored.clone()
+        } else {
+            SloClass::best_effort()
+        };
+        responses.push(engine.submit(
+            Request::new(id, sim_tokens(id, spec.seq_len)).with_slo(slo)));
+    }
+    let mut premium_tiers = Vec::new();
+    let mut effort_tiers = Vec::new();
+    for r in responses {
+        let reply = r.wait().expect("no deadlines: everything is served");
+        if reply.completion.class == "premium" {
+            premium_tiers.push(reply.completion.tier);
+        } else {
+            effort_tiers.push(reply.completion.tier);
+        }
+    }
+    let report = engine.shutdown().unwrap();
+    assert_eq!(report.completions.len(), n);
+    assert!(premium_tiers.iter().all(|&t| t == 1.0),
+            "floored class served below its floor: {premium_tiers:?}");
+    assert!(effort_tiers.iter().any(|&t| t < 1.0),
+            "best-effort never shed under overload: {effort_tiers:?}");
+    let sections = report.class_sections();
+    let premium =
+        sections.iter().find(|s| s.class == "premium").unwrap();
+    let effort =
+        sections.iter().find(|s| s.class == "best-effort").unwrap();
+    assert!(premium.mean_capacity > effort.mean_capacity,
+            "premium {:.3} <= best-effort {:.3}",
+            premium.mean_capacity, effort.mean_capacity);
+}
+
+/// Executor whose `execute` blocks until the shared gate opens —
+/// deterministic queue-full scenarios without sleeping.
+struct GatedExec {
+    gate: Arc<(Mutex<bool>, Condvar)>,
+    seq_len: usize,
+}
+
+impl Executor for GatedExec {
+    fn batch(&self) -> usize {
+        1
+    }
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+    fn execute(&mut self, tier: f32, _tokens: &[i32]) -> Result<ExecOutput> {
+        let (lock, cv) = &*self.gate;
+        let mut open = lock.lock().unwrap();
+        while !*open {
+            open = cv.wait(open).unwrap();
+        }
+        Ok(ExecOutput { logits: vec![tier] })
+    }
+}
+
+fn open_gate(gate: &Arc<(Mutex<bool>, Condvar)>) {
+    let (lock, cv) = &**gate;
+    *lock.lock().unwrap() = true;
+    cv.notify_all();
+}
+
+#[test]
+fn try_submit_sheds_only_when_queue_actually_full() {
+    // single worker blocked in execute, bound = 4: after the worker
+    // takes its one in-flight request, the next `bound` try_submits
+    // must all be accepted (the queue has room); only once the bound is
+    // genuinely hit may Shed(QueueFull) appear — and releasing the gate
+    // must serve every accepted request.
+    let bound = 4usize;
+    let seq_len = 8usize;
+    let gate = Arc::new((Mutex::new(false), Condvar::new()));
+    let factory_gate = gate.clone();
+    let cfg = ServeConfig::sim()
+        .with_workers(1)
+        .with_queue_bound(bound)
+        .with_max_batch_wait(Duration::ZERO);
+    let engine = ElasticEngine::start(cfg, move |_| {
+        Ok(Box::new(GatedExec { gate: factory_gate.clone(), seq_len })
+            as Box<dyn Executor>)
+    })
+    .unwrap();
+
+    // first request: the worker pops it and parks inside execute
+    let first = engine.submit(Request::new(0, sim_tokens(0, seq_len)));
+    while engine.queue_depth() > 0 {
+        std::thread::yield_now(); // until the worker holds it
+    }
+
+    // with the worker parked, the queue must accept exactly `bound`
+    // more before the first QueueFull verdict
+    let mut accepted: Vec<Response> = Vec::new();
+    for id in 1..=bound as u64 {
+        match engine.try_submit(Request::new(id, sim_tokens(id, seq_len))) {
+            Admission::Accepted(r) => accepted.push(r),
+            Admission::Shed(reason) => panic!(
+                "shed verdict ({reason:?}) with only {} of {bound} \
+                 queued — queue was not full",
+                accepted.len()),
+        }
+    }
+    match engine.try_submit(Request::new(99, sim_tokens(99, seq_len))) {
+        Admission::Shed(ShedReason::QueueFull) => {}
+        Admission::Shed(other) => panic!("want QueueFull, got {other:?}"),
+        Admission::Accepted(_) => panic!(
+            "admitted past the bound: the queue held {bound} already"),
+    }
+
+    open_gate(&gate);
+    assert!(first.wait().is_ok());
+    for r in accepted {
+        r.wait().expect("accepted request must be served after release");
+    }
+    let report = engine.shutdown().unwrap();
+    assert_eq!(report.completions.len(), 1 + bound,
+               "exactly the accepted requests are served");
+}
+
+#[test]
+fn shutdown_drains_every_admitted_request() {
+    // shutdown must close admission and drain: every already-submitted
+    // request resolves Ok, including a final partial batch (37 % 4 != 0)
     let spec = SimSpec {
         batch: 4,
         base_ms: 0.1,
@@ -140,18 +339,42 @@ fn drain_completes_every_admitted_request() {
     };
     let cfg = ServeConfig::sim().with_workers(2);
     let caps = cfg.capacities();
-    let server = ElasticServer::new(cfg);
+    let engine =
+        ElasticEngine::start(cfg, sim::factory(spec, caps)).unwrap();
     let sent = 37;
-    let rx = producer(sent, spec.seq_len, Duration::ZERO);
-    let report = server
-        .run(sim::factory(spec, caps), rx, 1000 /* never reached */)
-        .unwrap();
+    let responses: Vec<Response> = (0..sent as u64)
+        .map(|id| engine.submit(Request::new(id, sim_tokens(id, spec.seq_len))))
+        .collect();
+    let report = engine.shutdown().unwrap();
     assert_eq!(report.completions.len(), sent,
                "drain lost admitted requests");
     assert_ids_exactly_once(&report, sent);
     // batch accounting: every completion records a plausible batch size
     assert!(report.completions.iter().all(
         |c| c.batch_size >= 1 && c.batch_size <= 4));
+    // and every response resolved Ok — drain means served, not dropped
+    for r in responses {
+        match r.wait_timeout(Duration::from_secs(10)) {
+            Some(Ok(_)) => {}
+            other => panic!("admitted request not served: {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn responses_outlive_the_handle_across_shutdown() {
+    // shutdown consumes the handle, but Response futures obtained
+    // before it must still resolve afterwards (the slot is shared
+    // state, not borrowed from the handle)
+    let spec = SimSpec::instant();
+    let cfg = ServeConfig::sim().with_workers(1);
+    let caps = cfg.capacities();
+    let engine =
+        ElasticEngine::start(cfg, sim::factory(spec, caps)).unwrap();
+    let r = engine.submit(Request::new(0, sim_tokens(0, spec.seq_len)));
+    let report = engine.shutdown().unwrap();
+    assert_eq!(report.completions.len(), 1);
+    assert!(r.wait().is_ok(), "pre-shutdown submission must resolve Ok");
 }
 
 #[test]
@@ -174,9 +397,17 @@ fn four_workers_at_least_double_one_worker_throughput() {
             .with_depth_per_tier(1e9)
             .with_max_batch_wait(Duration::from_millis(1));
         let caps = cfg.capacities();
-        let server = ElasticServer::new(cfg);
-        let rx = producer(n, spec.seq_len, Duration::ZERO);
-        let report = server.run(sim::factory(spec, caps), rx, n).unwrap();
+        let engine =
+            ElasticEngine::start(cfg, sim::factory(spec, caps)).unwrap();
+        let responses: Vec<Response> = (0..n as u64)
+            .map(|id| {
+                engine.submit(Request::new(id, sim_tokens(id, spec.seq_len)))
+            })
+            .collect();
+        for r in responses {
+            r.wait().unwrap();
+        }
+        let report = engine.shutdown().unwrap();
         assert_eq!(report.completions.len(), n);
         assert_ids_exactly_once(&report, n);
         report
@@ -191,37 +422,4 @@ fn four_workers_at_least_double_one_worker_throughput() {
             "4 workers only {speedup:.2}x of 1 worker \
              ({:.0} vs {:.0} req/s)",
             four.throughput_rps(), one.throughput_rps());
-}
-
-#[test]
-fn expected_count_caps_admission() {
-    // the engine admits exactly `expected` requests even when producers
-    // keep sending; admission is FIFO, so the first `expected` ids win
-    let spec = SimSpec {
-        batch: 4,
-        base_ms: 0.0,
-        ms_per_capacity: 0.0,
-        jitter_ms: 0.0,
-        ..SimSpec::standard()
-    };
-    let cfg = ServeConfig::sim().with_workers(2);
-    let caps = cfg.capacities();
-    let server = ElasticServer::new(cfg);
-    let sent = 50;
-    let expected = 30;
-    // pre-buffer every request so all 50 are available to admit
-    let (tx, rx) = mpsc::channel();
-    for id in 0..sent as u64 {
-        tx.send(Request {
-            id,
-            tokens: sim_tokens(id, spec.seq_len),
-            submitted: Instant::now(),
-        })
-        .unwrap();
-    }
-    drop(tx);
-    let report =
-        server.run(sim::factory(spec, caps), rx, expected).unwrap();
-    assert_eq!(report.completions.len(), expected);
-    assert_ids_exactly_once(&report, expected);
 }
