@@ -3,19 +3,18 @@
 //! feeding EXPERIMENTS.md §Perf.
 //!
 //! Benchmarked:
-//!   * serving pipeline overhead (queue/controller/batcher/workers) over
-//!     the hermetic SimExecutor — runs without artifacts
+//!   * serving pipeline overhead (admission/controller/batcher/workers)
+//!     over the hermetic SimExecutor — shared single-deque queue vs the
+//!     sharded work-stealing queue, per worker count; written as both a
+//!     text table and the machine-readable `BENCH_serving.json` at the
+//!     repo root (the cross-PR perf-trajectory record)
 //!   * serve_cap{25,50,75,100} — real token-compaction speedup per tier
 //!   * teacher_forward vs elastic_forward (pallas interpret) overhead
 //!   * pretrain / distill step wall-clock
 //!   * host substrates: literal round-trip size, batcher, tokenizer, JSON
 
-use std::time::Duration;
-
 use elastiformer::bench::{fmt_f, Bencher, Table};
-use elastiformer::coordinator::serving::{
-    sim, ElasticEngine, Request, Response, ServeConfig, SimSpec,
-};
+use elastiformer::coordinator::serving::{sim, SimSpec};
 use elastiformer::coordinator::trainer::{Caps, Trainer};
 use elastiformer::data::{mathgen, textgen, Batcher, TextDataset, Tokenizer};
 use elastiformer::experiments::common::Ctx;
@@ -33,7 +32,11 @@ fn main() {
 
 /// Engine overhead at N workers: saturating synthetic load through
 /// near-zero-latency sim executors, so wall-clock is dominated by the
-/// host pipeline (admission queue, controller, batch formation).
+/// host pipeline (admission queue, controller, batch formation).  Each
+/// worker count runs twice — `shared` pins every worker on one deque
+/// (the pre-sharding topology), `sharded` gives each worker its own
+/// shard with work stealing — and the comparison lands in
+/// `BENCH_serving.json` at the repo root.
 fn sim_pipeline_bench() -> anyhow::Result<()> {
     println!("--- serving pipeline (SimExecutor, hermetic) ---");
     let n = 2048usize;
@@ -43,27 +46,27 @@ fn sim_pipeline_bench() -> anyhow::Result<()> {
         jitter_ms: 0.0,
         ..SimSpec::standard()
     };
+    let mut rows: Vec<sim::BenchRow> = Vec::new();
     for workers in [1usize, 2, 4] {
-        let cfg = ServeConfig::sim()
-            .with_workers(workers)
-            .with_queue_bound(128)
-            .with_max_batch_wait(Duration::from_micros(200));
-        let caps = cfg.capacities();
-        let engine = ElasticEngine::start(cfg, sim::factory(spec, caps))?;
-        let seq_len = spec.seq_len;
-        let responses: Vec<Response> = (0..n as u64)
-            .map(|id| engine.submit(Request::new(id, vec![1; seq_len])))
-            .collect();
-        for r in responses {
-            r.wait().map_err(|e| anyhow::anyhow!("serve failed: {e}"))?;
+        for (label, shards) in [("shared", 1usize), ("sharded", workers)] {
+            if label == "sharded" && shards == 1 {
+                continue; // identical to shared at 1 worker
+            }
+            let report = sim::pipeline_point(spec, workers, shards, n)?;
+            println!("sim_serving_{label}_w{workers}   \
+                      {:>8.0} req/s  p50 {:>8.2} ms  p99 {:>8.2} ms  \
+                      mean cap {:.2}",
+                     report.throughput_rps(), report.latency_p(0.5),
+                     report.latency_p(0.99), report.mean_capacity());
+            rows.push(sim::BenchRow { queue: label, workers, shards,
+                                      report });
         }
-        let report = engine.shutdown()?;
-        println!("sim_serving_w{workers:<2}            \
-                  {:>8.0} req/s  p50 {:>8.2} ms  p99 {:>8.2} ms  \
-                  mean cap {:.2}",
-                 report.throughput_rps(), report.latency_p(0.5),
-                 report.latency_p(0.99), report.mean_capacity());
     }
+    let path = std::path::Path::new(
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serving.json"));
+    sim::write_bench_json(path, "benches/hotpath.rs (release)", spec, n,
+                          &rows)?;
+    println!("(written to BENCH_serving.json)");
     Ok(())
 }
 

@@ -1,12 +1,77 @@
 //! Batch formation: turn a FIFO run of admitted requests into the exact
-//! `[batch, seq_len]` i32 tensor the static-capacity artifacts expect.
+//! `[batch, seq_len]` i32 tensor the static-capacity artifacts expect,
+//! plus the **class-compatibility key** that decides which requests may
+//! share a batch at all.
+//!
+//! One executed batch runs at one capacity tier, so the strictest SLO
+//! constraint in a batch binds every member: before class-aware
+//! formation, a single floored request dragged its best-effort
+//! neighbours up a tier, and a single tight deadline dragged relaxed
+//! neighbours down one.  [`batch_key`] buckets each request by the
+//! *ladder rung its floor clamps to* and a coarse *deadline band*;
+//! the sharded admission queue's keyed pop only groups key-equal
+//! requests, so neither cross-subsidy can happen (property-tested:
+//! no batch mixes incompatible floors).
 //!
 //! Pure host code, extracted from the old engine loop so its invariants
 //! (no request dropped or duplicated, output always exactly
 //! `batch * seq_len` tokens, request order preserved) are checkable by
 //! the in-tree property harness without any runtime.
 
-use super::Request;
+use std::time::Duration;
+
+use super::{Request, SloClass, TIER_EPS};
+
+/// Compatibility key for class-aware batch formation: two requests may
+/// share an execution batch iff their keys are equal.  Keys are stable
+/// for the lifetime of a request (derived from its configured SLO, not
+/// from elapsed time), so an item's class never changes while it sits
+/// in the queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BatchKey {
+    /// index of the ladder rung the quality floor clamps to
+    /// (`tiers.len() - 1` = unconstrained best-effort)
+    pub floor_rung: usize,
+    /// log2 bucket of the deadline budget (`u32::MAX` = no deadline)
+    pub deadline_band: u32,
+}
+
+/// Compute the compatibility key for one request's SLO against the
+/// configured capacity ladder (descending).
+pub fn batch_key(slo: &SloClass, tiers: &[f32]) -> BatchKey {
+    BatchKey {
+        floor_rung: floor_rung(tiers, slo.floor_tier),
+        deadline_band: deadline_band(slo.deadline),
+    }
+}
+
+/// Ladder index a quality floor clamps to: the *smallest* configured
+/// tier at or above `floor` (a floor above the whole ladder clamps to
+/// the top tier; a floor at or below the bottom tier — including the
+/// 0.0 best-effort floor — does not constrain and maps to the bottom
+/// rung).  This is the single rung rule shared by the capacity
+/// controller's clamp and the batch-compatibility key, so "same rung"
+/// always means "same clamp outcome".
+pub fn floor_rung(tiers: &[f32], floor: f32) -> usize {
+    if floor <= 0.0 {
+        return tiers.len().saturating_sub(1);
+    }
+    tiers.iter().rposition(|&t| t + TIER_EPS >= floor).unwrap_or(0)
+}
+
+/// Coarse deadline bucket: requests in the same power-of-two latency
+/// band batch together (their slack-demotion pressure is comparable);
+/// `None` deadlines get their own band.  Derived from the *configured*
+/// budget, not the remaining slack, so the band is queue-stable.
+pub fn deadline_band(deadline: Option<Duration>) -> u32 {
+    match deadline {
+        None => u32::MAX,
+        Some(d) => {
+            let ms = (d.as_millis() as u64).max(1);
+            64 - ms.leading_zeros()
+        }
+    }
+}
 
 /// One formed execution batch: the requests it carries (admission order)
 /// and the flattened, padded token tensor.
@@ -90,5 +155,65 @@ mod tests {
     #[should_panic(expected = "empty request set")]
     fn empty_input_panics() {
         form_batch(Vec::new(), 2, 2);
+    }
+
+    const LADDER: [f32; 4] = [1.0, 0.75, 0.5, 0.25];
+
+    #[test]
+    fn floor_rung_matches_controller_clamp_semantics() {
+        // best-effort and below-ladder floors are unconstrained
+        assert_eq!(floor_rung(&LADDER, 0.0), 3);
+        assert_eq!(floor_rung(&LADDER, 0.1), 3);
+        assert_eq!(floor_rung(&LADDER, 0.25), 3);
+        // between rungs rounds up to the next configured tier
+        assert_eq!(floor_rung(&LADDER, 0.3), 2);
+        assert_eq!(floor_rung(&LADDER, 0.6), 1);
+        assert_eq!(floor_rung(&LADDER, 0.75), 1);
+        assert_eq!(floor_rung(&LADDER, 1.0), 0);
+        // a floor above the whole ladder clamps to the top tier
+        assert_eq!(floor_rung(&LADDER, 1.5), 0);
+    }
+
+    #[test]
+    fn deadline_bands_bucket_by_power_of_two() {
+        assert_eq!(deadline_band(None), u32::MAX);
+        // sub-millisecond budgets land in the bottom band
+        assert_eq!(deadline_band(Some(Duration::from_micros(300))),
+                   deadline_band(Some(Duration::from_millis(1))));
+        // 2ms and 3ms share a band; 3ms and 5ms do not
+        assert_eq!(deadline_band(Some(Duration::from_millis(2))),
+                   deadline_band(Some(Duration::from_millis(3))));
+        assert_ne!(deadline_band(Some(Duration::from_millis(3))),
+                   deadline_band(Some(Duration::from_millis(5))));
+        assert_ne!(deadline_band(Some(Duration::from_millis(5))), u32::MAX);
+    }
+
+    #[test]
+    fn batch_keys_separate_floors_but_merge_compatible_slos() {
+        let caps = LADDER.to_vec();
+        let best = batch_key(&SloClass::best_effort(), &caps);
+        let low_floor =
+            batch_key(&SloClass::named("lo").with_floor_tier(0.25), &caps);
+        let premium =
+            batch_key(&SloClass::named("hi").with_floor_tier(1.0), &caps);
+        // a floor at the bottom rung is the same contract as best-effort
+        assert_eq!(best, low_floor);
+        assert_ne!(best, premium);
+        // class *names* never split batches — only the contract does
+        let renamed = batch_key(&SloClass::named("other"), &caps);
+        assert_eq!(best, renamed);
+        // deadlines split batches by band, not by exact value
+        let d20 = batch_key(
+            &SloClass::named("a").with_deadline(Duration::from_millis(20)),
+            &caps);
+        let d25 = batch_key(
+            &SloClass::named("b").with_deadline(Duration::from_millis(25)),
+            &caps);
+        let d200 = batch_key(
+            &SloClass::named("c").with_deadline(Duration::from_millis(200)),
+            &caps);
+        assert_eq!(d20, d25);
+        assert_ne!(d20, d200);
+        assert_ne!(d20, best);
     }
 }

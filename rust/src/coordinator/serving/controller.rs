@@ -22,10 +22,15 @@
 //! old backlog-only controller.
 //!
 //! In the multi-worker engine one controller instance is shared behind
-//! a mutex and observes the *global* backlog, so all workers shed
-//! together.
+//! a mutex and observes the *global* backlog — read off the sharded
+//! admission queue's atomic depth gauge, so observing it never takes a
+//! queue lock — and all workers shed together.  The floor clamp uses
+//! the same [`floor_rung`](super::batcher::floor_rung) rule as the
+//! batch-compatibility key, so a batch grouped as "rung r" is always
+//! clamped to exactly rung r, never split by rounding disagreements.
 
-use super::{tier_matches, TIER_EPS};
+use super::batcher::floor_rung;
+use super::tier_matches;
 
 /// See module docs.  Invariants (property-tested in
 /// `tests/properties.rs`):
@@ -107,13 +112,9 @@ impl CapacityController {
         }
         if floor_tier > 0.0 {
             // smallest configured tier still at/above the floor; a floor
-            // above the whole ladder clamps to the top tier
-            let floor_idx = self
-                .tiers
-                .iter()
-                .rposition(|&t| t + TIER_EPS >= floor_tier)
-                .unwrap_or(0);
-            idx = idx.min(floor_idx);
+            // above the whole ladder clamps to the top tier (shared rung
+            // rule — see batcher::floor_rung)
+            idx = idx.min(floor_rung(&self.tiers, floor_tier));
         }
         self.tiers[idx]
     }

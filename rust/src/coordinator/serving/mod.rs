@@ -4,16 +4,19 @@
 //!
 //! ```text
 //!   clients ──▶ EngineHandle::submit / try_submit        (this file)
-//!                    │ bounded push (backpressure) /
+//!                    │ atomic aggregate-bound reserve (backpressure) /
 //!                    │ Admission::{Accepted(Response), Shed(reason)}
-//!                    ▼
-//!             [AdmissionQueue<Pending>]                  queue.rs
-//!              /     |     \
-//!       worker 0  worker 1  worker N-1                   worker.rs
-//!       pop_batch -> shed expired deadlines
+//!                    ▼ power-of-two-choices shard pick
+//!       [shard 0] [shard 1] .. [shard N-1]               queue.rs
+//!           │         │            │    (sharded AdmissionQueue:
+//!           ▼         ▼            ▼     per-worker deques + atomic
+//!       worker 0  worker 1  worker N-1   depth gauge + work stealing)
+//!       pop_batch_keyed (own shard first, steal siblings;
+//!                        class-compatible runs only)     batcher.rs
+//!                 -> shed expired deadlines              worker.rs
 //!                 -> CapacityController                  controller.rs
-//!                    (backlog EWMA + deadline slack
-//!                     + SLO floor tiers)
+//!                    (backlog EWMA via the atomic gauge
+//!                     + deadline slack + SLO floor rungs)
 //!       form_batch (pad to B×T)                          batcher.rs
 //!       Executor::execute(tier, tokens) -> logits
 //!          |            |
@@ -56,7 +59,7 @@ pub mod report;
 pub mod sim;
 pub mod worker;
 
-pub use batcher::{form_batch, Batch};
+pub use batcher::{batch_key, floor_rung, form_batch, Batch, BatchKey};
 pub use controller::CapacityController;
 pub use queue::{AdmissionQueue, TryPushError};
 pub use report::{ClassStats, Completion, ServeReport, ShedRecord};
@@ -162,9 +165,14 @@ pub struct ServeConfig {
     pub max_batch_wait: Duration,
     /// number of execution workers (each owns one `Executor`)
     pub workers: usize,
-    /// admission queue bound: `submit` blocks at the bound
-    /// (backpressure), `try_submit` sheds with an explicit verdict
+    /// admission queue bound (aggregate across all shards): `submit`
+    /// blocks at the bound (backpressure), `try_submit` sheds with an
+    /// explicit verdict
     pub queue_bound: usize,
+    /// number of admission shards: 0 (the default) = one per worker;
+    /// 1 = the pre-sharding single shared deque, kept for A/B
+    /// benchmarking (see `BENCH_serving.json`) and tiny deployments
+    pub queue_shards: usize,
 }
 
 impl ServeConfig {
@@ -182,6 +190,7 @@ impl ServeConfig {
             max_batch_wait: Duration::from_millis(20),
             workers: 1,
             queue_bound: 256,
+            queue_shards: 0,
         }
     }
 
@@ -202,6 +211,12 @@ impl ServeConfig {
 
     pub fn with_queue_bound(mut self, bound: usize) -> ServeConfig {
         self.queue_bound = bound.max(1);
+        self
+    }
+
+    /// Override the admission shard count (0 = one shard per worker).
+    pub fn with_queue_shards(mut self, shards: usize) -> ServeConfig {
+        self.queue_shards = shards;
         self
     }
 
@@ -415,6 +430,10 @@ pub(crate) struct EngineShared {
     pub sheds: Mutex<Vec<ShedRecord>>,
     pub errors: Mutex<Vec<String>>,
     pub max_batch_wait: Duration,
+    /// configured capacity ladder, descending — workers derive each
+    /// request's batch-compatibility key against it without locking
+    /// the controller
+    pub caps: Vec<f32>,
 }
 
 /// The serving engine: [`start`](Self::start) spawns N execution
@@ -439,14 +458,20 @@ impl ElasticEngine {
         let caps = cfg.capacities();
         anyhow::ensure!(!caps.is_empty(), "no serving tiers configured");
         let workers = cfg.workers.max(1);
+        let shards = if cfg.queue_shards == 0 {
+            workers
+        } else {
+            cfg.queue_shards
+        };
         let shared = Arc::new(EngineShared {
-            queue: AdmissionQueue::new(cfg.queue_bound),
+            queue: AdmissionQueue::sharded(cfg.queue_bound, shards),
             controller: Mutex::new(CapacityController::new(
                 caps.clone(), cfg.depth_per_tier)),
             completions: Mutex::new(Vec::new()),
             sheds: Mutex::new(Vec::new()),
             errors: Mutex::new(Vec::new()),
             max_batch_wait: cfg.max_batch_wait,
+            caps: caps.clone(),
         });
         let factory = Arc::new(factory);
         let init = Arc::new(InitLatch::new());
@@ -531,7 +556,6 @@ impl ElasticEngine {
         Ok(EngineHandle {
             shared,
             threads,
-            caps: caps.as_ref().clone(),
             workers,
             started: Instant::now(),
         })
@@ -545,7 +569,6 @@ impl ElasticEngine {
 pub struct EngineHandle {
     shared: Arc<EngineShared>,
     threads: Vec<JoinHandle<()>>,
-    caps: Vec<f32>,
     workers: usize,
     started: Instant,
 }
@@ -586,14 +609,21 @@ impl EngineHandle {
         }
     }
 
-    /// Current admission backlog (what the controller observes).
+    /// Current aggregate admission backlog (what the controller
+    /// observes) — a single atomic load, never a queue lock.
     pub fn queue_depth(&self) -> usize {
         self.shared.queue.len()
     }
 
+    /// Number of admission shards behind this engine (1 = the classic
+    /// shared queue; the default is one shard per worker).
+    pub fn queue_shards(&self) -> usize {
+        self.shared.queue.shards()
+    }
+
     /// The configured capacity ladder, descending.
     pub fn capacities(&self) -> &[f32] {
-        &self.caps
+        &self.shared.caps
     }
 
     pub fn workers(&self) -> usize {
@@ -639,7 +669,7 @@ impl EngineHandle {
                           errors.join(" | "));
         }
         let wall = self.started.elapsed().as_secs_f64();
-        Ok(ServeReport::new(completions, sheds, wall, &self.caps,
+        Ok(ServeReport::new(completions, sheds, wall, &self.shared.caps,
                             self.workers))
     }
 }
@@ -728,6 +758,37 @@ mod tests {
         let cfg = ServeConfig::standard().with_workers(0).with_queue_bound(0);
         assert_eq!(cfg.workers, 1);
         assert_eq!(cfg.queue_bound, 1);
+        assert_eq!(cfg.queue_shards, 0, "default shards follow workers");
+        assert_eq!(cfg.with_queue_shards(3).queue_shards, 3);
+    }
+
+    #[test]
+    fn engine_defaults_to_one_shard_per_worker() {
+        let cfg = ServeConfig::sim().with_workers(3);
+        let caps = cfg.capacities();
+        let engine = ElasticEngine::start(
+            cfg, sim::factory(SimSpec::instant(), caps)).unwrap();
+        assert_eq!(engine.queue_shards(), 3);
+        engine.shutdown().unwrap();
+    }
+
+    #[test]
+    fn queue_shards_override_gives_shared_mode() {
+        let cfg = ServeConfig::sim().with_workers(4).with_queue_shards(1);
+        let caps = cfg.capacities();
+        let engine = ElasticEngine::start(
+            cfg, sim::factory(SimSpec::instant(), caps)).unwrap();
+        assert_eq!(engine.queue_shards(), 1,
+                   "explicit shard count must win over the worker count");
+        let seq = SimSpec::instant().seq_len;
+        let responses: Vec<Response> = (0..16u64)
+            .map(|id| engine.submit(Request::new(id, vec![0; seq])))
+            .collect();
+        for r in responses {
+            r.wait().expect("shared mode must still serve everything");
+        }
+        let report = engine.shutdown().unwrap();
+        assert_eq!(report.completions.len(), 16);
     }
 
     #[test]

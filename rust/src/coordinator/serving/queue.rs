@@ -1,184 +1,490 @@
-//! Bounded multi-producer / multi-consumer admission queue.
+//! Sharded, bounded MPMC admission queue with work stealing.
 //!
-//! `std::sync::mpsc` channels are unbounded (and their receivers are
-//! single-consumer), so the serving engine uses this small
-//! `Mutex<VecDeque>` + condvar queue instead: pushers block in
-//! [`AdmissionQueue::push`] once `bound` items are waiting, and every
-//! worker pops batches from the shared front in FIFO order.  Closing
-//! wakes all waiters; a worker seeing an empty pop after close knows
-//! the backlog is fully drained.
+//! The original queue was one `Mutex<VecDeque>` + condvar pair: every
+//! submit, every worker pop and every controller `len()` observation
+//! funnelled through the same lock, which dominated the sim-pipeline
+//! hot path at 4+ workers.  This version splits the backlog into
+//! per-worker **shards** (each its own small `Mutex<VecDeque>`) while
+//! keeping every externally visible contract of the shared queue:
 //!
-//! Since the handle-based front-end, clients push into this queue
-//! *directly* (no mpsc bridge in between): [`push`](AdmissionQueue::push)
-//! is the blocking backpressure path behind `EngineHandle::submit`, and
-//! [`try_push`](AdmissionQueue::try_push) is the non-blocking admission
-//! probe behind `try_submit` — its `Full` rejection is the one and only
-//! source of `Admission::Shed(ShedReason::QueueFull)` verdicts, so a
-//! shed verdict always means the bound was genuinely hit.
+//!  * **Aggregate bound.**  Admission is gated by one `AtomicUsize`
+//!    depth gauge: a push first *reserves* a slot (CAS against the
+//!    bound), then deposits into a shard.  [`try_push`] therefore
+//!    returns `Full` iff the aggregate bound is genuinely hit — never
+//!    because one shard happens to be long — and the gauge makes
+//!    [`len`](AdmissionQueue::len) a single atomic load, so the
+//!    capacity controller and report sampling never contend with
+//!    submit/pop.
+//!  * **Submit-side balance.**  Deposits pick a shard by
+//!    power-of-two-choices: a round-robin probe plus one scrambled
+//!    probe, keep the shallower (ties go to the round-robin probe, so
+//!    every shard is reachable).
+//!  * **Work stealing.**  [`pop_batch_as`] scans shards in ring order
+//!    starting at the worker's own: an idle worker drains a hot
+//!    sibling's shard instead of sleeping.  The ring always takes the
+//!    first available head, so no shard starves.
+//!  * **Class-aware batches.**  [`pop_batch_keyed`] seeds a batch with
+//!    the first available item and then only collects items whose key
+//!    matches (skipped items keep their order) — the mechanism behind
+//!    SLO-compatible batch formation in the worker (see `batcher.rs`).
+//!  * **Drain-on-close.**  [`close`] wakes every sleeper; a pop that
+//!    returns empty means closed *and* fully drained, exactly as
+//!    before.
 //!
-//! The queue is generic over its item: the engine stores
-//! `Pending` (request + response slot), the tests push bare ids.
+//! Blocking uses two "doorbells" (a lost-wakeup-proof mutex/condvar
+//! pair with a sleeper count so the uncontended path skips the lock):
+//! consumers sleep for work, producers sleep for room.  `Mutex` is held
+//! only for deque surgery on one shard at a time; the gauge, the closed
+//! flag and the shard-length mirrors are all `SeqCst` atomics.
+//!
+//! The queue is generic over its item: the engine stores `Pending`
+//! (request + response slot), the tests push bare ids.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
-
-struct State<T> {
-    items: VecDeque<T>,
-    closed: bool,
-}
 
 /// Why a non-blocking push was refused.  The item is handed back so the
 /// caller can account for it (e.g. resolve its response slot).
 #[derive(Debug)]
 pub enum TryPushError<T> {
-    /// the queue is at its bound — the only condition that may surface
-    /// to clients as a `Shed(QueueFull)` admission verdict
+    /// the aggregate depth is at its bound — the only condition that
+    /// may surface to clients as a `Shed(QueueFull)` admission verdict
     Full(T),
     /// the queue has been closed (shutdown or a failed worker)
     Closed(T),
 }
 
-/// Bounded FIFO queue shared by the submitting clients and the workers.
+/// One admission shard: a small FIFO deque plus a mirror of its length
+/// that submit-side probing reads without the lock.
+struct Shard<T> {
+    items: Mutex<VecDeque<T>>,
+    /// mirror of `items.len()`, written under the shard lock, read
+    /// lock-free by `pick_shard` and the pop-side empty-shard skip
+    len: AtomicUsize,
+}
+
+/// Lost-wakeup-proof sleep/wake pair.  Waiters register in `sleepers`,
+/// then re-check their condition under the gate lock before parking;
+/// wakers make the condition true first and take the gate lock to
+/// notify (skipped entirely while nobody is registered), so a wake
+/// issued between a waiter's check and its park cannot be lost.
+struct Doorbell {
+    gate: Mutex<()>,
+    cv: Condvar,
+    sleepers: AtomicUsize,
+}
+
+impl Doorbell {
+    fn new() -> Doorbell {
+        Doorbell {
+            gate: Mutex::new(()),
+            cv: Condvar::new(),
+            sleepers: AtomicUsize::new(0),
+        }
+    }
+
+    /// Block until `ready()` returns true (re-checked under the gate
+    /// lock, so a ring between the check and the park cannot be lost)
+    /// or until `deadline` passes.  Returns false iff it timed out.
+    fn wait_until(&self, deadline: Option<Instant>,
+                  ready: impl Fn() -> bool) -> bool {
+        self.sleepers.fetch_add(1, Ordering::SeqCst);
+        let mut gate = self.gate.lock().unwrap();
+        let mut on_time = true;
+        while !ready() {
+            match deadline {
+                None => gate = self.cv.wait(gate).unwrap(),
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        on_time = false;
+                        break;
+                    }
+                    let (g, _) = self.cv.wait_timeout(gate, d - now).unwrap();
+                    gate = g;
+                }
+            }
+        }
+        drop(gate);
+        self.sleepers.fetch_sub(1, Ordering::SeqCst);
+        on_time
+    }
+
+    /// Wake every sleeper; skips the lock when nobody is registered
+    /// (the hot-path case: rings are issued on every deposit).
+    fn ring(&self) {
+        if self.sleepers.load(Ordering::SeqCst) > 0 {
+            self.ring_all();
+        }
+    }
+
+    /// Unconditional wake (close path: must not miss a racing sleeper).
+    fn ring_all(&self) {
+        let _gate = self.gate.lock().unwrap();
+        self.cv.notify_all();
+    }
+}
+
+/// Sharded bounded FIFO queue shared by the submitting clients and the
+/// workers.  See the module docs for the contracts.
 pub struct AdmissionQueue<T> {
-    state: Mutex<State<T>>,
-    not_empty: Condvar,
-    not_full: Condvar,
+    shards: Vec<Shard<T>>,
+    /// aggregate admitted-but-unpopped depth — THE backpressure gauge
+    depth: AtomicUsize,
     bound: usize,
+    closed: AtomicBool,
+    /// consumers sleep here for work
+    doorbell: Doorbell,
+    /// producers sleep here for room
+    vacancy: Doorbell,
+    /// submit-side probe ticket (round-robin base of the two choices)
+    ticket: AtomicUsize,
 }
 
 impl<T> AdmissionQueue<T> {
+    /// Single-shard queue — behaviourally the original shared queue
+    /// (global FIFO), still used by unit tests and 1-worker engines.
     pub fn new(bound: usize) -> AdmissionQueue<T> {
+        AdmissionQueue::sharded(bound, 1)
+    }
+
+    /// Queue with `shards` independent deques under one aggregate
+    /// `bound`.  The engine uses one shard per worker.
+    pub fn sharded(bound: usize, shards: usize) -> AdmissionQueue<T> {
+        let shards = shards.max(1);
         AdmissionQueue {
-            state: Mutex::new(State { items: VecDeque::new(), closed: false }),
-            not_empty: Condvar::new(),
-            not_full: Condvar::new(),
+            shards: (0..shards)
+                .map(|_| Shard {
+                    items: Mutex::new(VecDeque::new()),
+                    len: AtomicUsize::new(0),
+                })
+                .collect(),
+            depth: AtomicUsize::new(0),
             bound: bound.max(1),
+            closed: AtomicBool::new(false),
+            doorbell: Doorbell::new(),
+            vacancy: Doorbell::new(),
+            ticket: AtomicUsize::new(0),
         }
     }
 
-    /// Enqueue one item, blocking while the queue is at its bound.
-    /// Returns the item back as `Err` if the queue has been closed
-    /// (shutdown or a failed worker) so the caller can account for it.
-    pub fn push(&self, item: T) -> Result<(), T> {
-        let mut st = self.state.lock().unwrap();
+    /// Number of shards (1 = the classic shared queue).
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Reserve one slot against the aggregate bound.  Success means the
+    /// caller owns a queue position and MUST deposit; failure means the
+    /// bound is genuinely hit right now.
+    fn try_reserve(&self) -> bool {
+        let mut cur = self.depth.load(Ordering::SeqCst);
         loop {
-            if st.closed {
+            if cur >= self.bound {
+                return false;
+            }
+            match self.depth.compare_exchange(
+                cur, cur + 1, Ordering::SeqCst, Ordering::SeqCst)
+            {
+                Ok(_) => return true,
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// Power-of-two-choices shard pick: a round-robin probe plus one
+    /// scrambled probe, keep the shallower.  Ties go to the round-robin
+    /// probe so every shard is reachable even from an empty start.
+    fn pick_shard(&self) -> usize {
+        let n = self.shards.len();
+        if n == 1 {
+            return 0;
+        }
+        let t = self.ticket.fetch_add(1, Ordering::Relaxed);
+        let a = t % n;
+        let h = (t as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let b = (a + 1 + ((h >> 33) as usize) % (n - 1)) % n;
+        if self.shards[b].len.load(Ordering::SeqCst)
+            < self.shards[a].len.load(Ordering::SeqCst)
+        {
+            b
+        } else {
+            a
+        }
+    }
+
+    fn deposit(&self, item: T) {
+        self.deposit_to(self.pick_shard(), item);
+    }
+
+    fn deposit_to(&self, s: usize, item: T) {
+        let shard = &self.shards[s];
+        let mut items = shard.items.lock().unwrap();
+        items.push_back(item);
+        shard.len.store(items.len(), Ordering::SeqCst);
+        drop(items);
+        self.doorbell.ring();
+    }
+
+    /// Enqueue one item, blocking while the aggregate depth is at its
+    /// bound.  Returns the item back as `Err` if the queue has been
+    /// closed (shutdown or a failed worker) so the caller can account
+    /// for it.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        loop {
+            if self.closed.load(Ordering::SeqCst) {
                 return Err(item);
             }
-            if st.items.len() < self.bound {
-                break;
+            if self.try_reserve() {
+                return self.deposit_reserved(item);
             }
-            st = self.not_full.wait(st).unwrap();
+            self.vacancy.wait_until(None, || {
+                self.closed.load(Ordering::SeqCst)
+                    || self.depth.load(Ordering::SeqCst) < self.bound
+            });
         }
-        st.items.push_back(item);
-        drop(st);
-        self.not_empty.notify_one();
-        Ok(())
     }
 
     /// Non-blocking enqueue: admit the item iff the queue is open and
-    /// below its bound.  Never waits — this is the admission-verdict
-    /// path, where "would block" must surface as an explicit `Full`.
+    /// the aggregate depth is below its bound.  Never waits — this is
+    /// the admission-verdict path, where "would block" must surface as
+    /// an explicit `Full`.
     pub fn try_push(&self, item: T) -> Result<(), TryPushError<T>> {
-        let mut st = self.state.lock().unwrap();
-        if st.closed {
+        if self.closed.load(Ordering::SeqCst) {
             return Err(TryPushError::Closed(item));
         }
-        if st.items.len() >= self.bound {
+        if !self.try_reserve() {
             return Err(TryPushError::Full(item));
         }
-        st.items.push_back(item);
-        drop(st);
-        self.not_empty.notify_one();
+        self.deposit_reserved(item).map_err(TryPushError::Closed)
+    }
+
+    /// Second half of a push that already holds a reservation: re-check
+    /// the close flag and either deposit or undo.  The re-check closes
+    /// a strand-a-request race the old single-mutex queue excluded by
+    /// construction: without it, a client could load `closed == false`,
+    /// a failing worker could close the queue, every worker could
+    /// observe `depth == 0 && closed` and exit, and only then would the
+    /// client deposit — into a queue nobody will ever drain.  With it
+    /// (plus the workers' exit-time depth re-check in
+    /// [`pop_batch_keyed`]), a reservation made before close is always
+    /// drained by a worker, and one that races close is undone here so
+    /// the caller can resolve the item itself.
+    fn deposit_reserved(&self, item: T) -> Result<(), T> {
+        if self.closed.load(Ordering::SeqCst) {
+            self.depth.fetch_sub(1, Ordering::SeqCst);
+            self.vacancy.ring();
+            return Err(item);
+        }
+        self.deposit(item);
         Ok(())
     }
 
-    /// Pop up to `max` items from the front.  Blocks until at least one
-    /// item is available (or the queue is closed), then waits at most
-    /// `wait` for the batch to fill.  The fill target is clamped to the
-    /// queue bound: with `bound < max` the queue can never hold a full
-    /// batch (producers block at the bound), so "bound waiting" is
-    /// "full" and the worker must not burn the whole `wait` every cycle.
-    /// An empty return means closed *and* fully drained — the worker's
-    /// signal to exit.
+    /// Scan shards in ring order from `worker`, moving out up to `max`
+    /// total items whose key matches `batch_key` (seeding the key from
+    /// the first available item when unset — the first non-empty
+    /// shard's head is always taken, so no shard or class starves).
+    /// Skipped items keep their order.  Decrements the aggregate gauge
+    /// by what was taken and rings producers waiting for room.
+    ///
+    /// Cost note: a keyed sweep over a shard with incompatible items is
+    /// O(shard length) (pop + rebuild under the shard lock).  That is
+    /// the inherent price of selective dequeue; it is bounded by the
+    /// shard's share of the aggregate bound, and the phase-2 fill loop
+    /// only re-sweeps on a depth change within `max_batch_wait`, so
+    /// homogeneous traffic (the common case) never pays it.
+    fn collect_into<K, F>(&self, worker: usize, max: usize, key: &F,
+                          batch_key: &mut Option<K>, out: &mut Vec<T>)
+    where
+        K: PartialEq,
+        F: Fn(&T) -> K,
+    {
+        let n = self.shards.len();
+        let start = worker % n;
+        let before = out.len();
+        for i in 0..n {
+            if out.len() >= max {
+                break;
+            }
+            let shard = &self.shards[(start + i) % n];
+            if shard.len.load(Ordering::SeqCst) == 0 {
+                continue;
+            }
+            let mut items = shard.items.lock().unwrap();
+            let mut skipped: VecDeque<T> = VecDeque::new();
+            while out.len() < max {
+                let Some(it) = items.pop_front() else { break };
+                let matches = match batch_key {
+                    None => true,
+                    Some(k) => key(&it) == *k,
+                };
+                if matches {
+                    if batch_key.is_none() {
+                        *batch_key = Some(key(&it));
+                    }
+                    out.push(it);
+                } else {
+                    skipped.push_back(it);
+                }
+            }
+            if !skipped.is_empty() {
+                // skipped items go back in front of the untouched tail,
+                // in their original order
+                skipped.extend(items.drain(..));
+                *items = skipped;
+            }
+            shard.len.store(items.len(), Ordering::SeqCst);
+        }
+        let taken = out.len() - before;
+        if taken > 0 {
+            self.depth.fetch_sub(taken, Ordering::SeqCst);
+            self.vacancy.ring();
+        }
+    }
+
+    /// Pop up to `max` items as the (single-shard) worker 0.
     pub fn pop_batch(&self, max: usize, wait: Duration) -> Vec<T> {
+        self.pop_batch_as(0, max, wait)
+    }
+
+    /// Pop up to `max` items preferring `worker`'s own shard, stealing
+    /// from siblings in ring order when it runs dry.
+    pub fn pop_batch_as(&self, worker: usize, max: usize,
+                        wait: Duration) -> Vec<T> {
+        self.pop_batch_keyed(worker, max, wait, |_| ())
+    }
+
+    /// Class-aware pop: like [`pop_batch_as`], but the first available
+    /// item seeds a batch key and only key-equal items join the batch
+    /// (the worker uses the SLO compatibility key from `batcher.rs`).
+    /// Blocks until at least one item is available (or the queue is
+    /// closed), then waits at most `wait` for compatible items to fill
+    /// the batch.  The fill target is clamped to the aggregate bound:
+    /// with `bound < max` the queue can never hold a full batch, so
+    /// "bound waiting" is "full" and the worker must not burn the whole
+    /// `wait` every cycle.  An empty return means closed *and* fully
+    /// drained — the worker's signal to exit.
+    pub fn pop_batch_keyed<K, F>(&self, worker: usize, max: usize,
+                                 wait: Duration, key: F) -> Vec<T>
+    where
+        K: PartialEq,
+        F: Fn(&T) -> K,
+    {
         let max = max.max(1);
         let target = max.min(self.bound);
-        let mut st = self.state.lock().unwrap();
+        let mut out: Vec<T> = Vec::new();
+        let mut batch_key: Option<K> = None;
+        let mut spins = 0usize;
+        // phase 1: block until at least one item is in hand, or the
+        // queue is closed and fully drained
         loop {
-            // phase 1: block until work exists or shutdown is complete
-            while st.items.is_empty() {
-                if st.closed {
-                    return Vec::new();
-                }
-                st = self.not_empty.wait(st).unwrap();
+            self.collect_into(worker, max, &key, &mut batch_key, &mut out);
+            if !out.is_empty() {
+                break;
             }
-            // phase 2: bounded wait for a fuller batch
-            let deadline = Instant::now() + wait;
-            while st.items.len() < target && !st.closed {
-                let now = Instant::now();
-                if now >= deadline {
-                    break;
+            if self.depth.load(Ordering::SeqCst) == 0 {
+                if self.closed.load(Ordering::SeqCst) {
+                    // exit-time re-check, paired with deposit_reserved:
+                    // a submit may have reserved between our depth load
+                    // and the close flag landing.  A reservation made
+                    // before close always bumps the gauge before we get
+                    // here (SeqCst), so "still zero now" means no item
+                    // can be in flight — safe to exit.
+                    if self.depth.load(Ordering::SeqCst) == 0 {
+                        return out;
+                    }
+                    continue;
                 }
-                let (guard, timeout) = self
-                    .not_empty
-                    .wait_timeout(st, deadline - now)
-                    .unwrap();
-                st = guard;
-                if st.items.is_empty() {
-                    // another worker drained the queue while we slept
-                    break;
-                }
-                if timeout.timed_out() {
-                    break;
+                self.doorbell.wait_until(None, || {
+                    self.depth.load(Ordering::SeqCst) > 0
+                        || self.closed.load(Ordering::SeqCst)
+                });
+            } else {
+                // an admitted item is still in flight to its shard
+                // (between its depth reservation and its deposit).
+                // Spin briefly — the window is normally nanoseconds —
+                // then back off to the doorbell (deposits ring it) so
+                // a preempted producer is not fought for CPU by every
+                // idle worker on an oversubscribed host.
+                spins += 1;
+                if spins < 64 {
+                    std::thread::yield_now();
+                } else {
+                    self.doorbell.wait_until(
+                        Some(Instant::now() + Duration::from_micros(100)),
+                        || {
+                            self.closed.load(Ordering::SeqCst)
+                                || self.depth.load(Ordering::SeqCst) == 0
+                                || self.shards.iter().any(|s| {
+                                    s.len.load(Ordering::SeqCst) > 0
+                                })
+                        });
                 }
             }
-            if st.items.is_empty() {
-                if st.closed {
-                    return Vec::new();
-                }
-                continue; // restart phase 1
-            }
-            let take = st.items.len().min(max);
-            let out: Vec<T> = st.items.drain(..take).collect();
-            let leftover = !st.items.is_empty();
-            drop(st);
-            self.not_full.notify_all();
-            if leftover {
-                // hand remaining work to an idle sibling promptly
-                self.not_empty.notify_one();
-            }
-            return out;
         }
+        // phase 2: bounded wait for compatible items to fill the batch.
+        // The doorbell predicate is edge-style (any depth change since
+        // the last sweep), so incompatible arrivals wake us once each
+        // instead of spinning, and the deadline bounds the total wait.
+        if out.len() < target && !wait.is_zero() {
+            let deadline = Instant::now() + wait;
+            while out.len() < target && !self.closed.load(Ordering::SeqCst) {
+                let seen = self.depth.load(Ordering::SeqCst);
+                self.collect_into(worker, max, &key, &mut batch_key,
+                                  &mut out);
+                if out.len() >= target {
+                    break;
+                }
+                if !self.doorbell.wait_until(Some(deadline), || {
+                    self.depth.load(Ordering::SeqCst) != seen
+                        || self.closed.load(Ordering::SeqCst)
+                }) {
+                    break; // timed out
+                }
+            }
+            // final sweep: a deposit may have raced the close/timeout
+            self.collect_into(worker, max, &key, &mut batch_key, &mut out);
+        }
+        if self.depth.load(Ordering::SeqCst) > 0 {
+            // hand remaining work to an idle sibling promptly
+            self.doorbell.ring();
+        }
+        out
     }
 
     /// Close the queue: pending pushes fail, workers drain and exit.
     pub fn close(&self) {
-        let mut st = self.state.lock().unwrap();
-        st.closed = true;
-        drop(st);
-        self.not_empty.notify_all();
-        self.not_full.notify_all();
+        self.closed.store(true, Ordering::SeqCst);
+        self.doorbell.ring_all();
+        self.vacancy.ring_all();
     }
 
     pub fn is_closed(&self) -> bool {
-        self.state.lock().unwrap().closed
+        self.closed.load(Ordering::SeqCst)
     }
 
-    /// Current backlog depth (what the capacity controller observes).
+    /// Current aggregate backlog depth — one atomic load, no lock.
+    /// This is what the capacity controller observes per batch and what
+    /// report sampling reads; neither ever contends with submit/pop.
     pub fn len(&self) -> usize {
-        self.state.lock().unwrap().items.len()
+        self.depth.load(Ordering::SeqCst)
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    #[cfg(test)]
+    fn shard_len(&self, s: usize) -> usize {
+        self.shards[s].len.load(Ordering::SeqCst)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Arc;
 
     #[test]
     fn fifo_order_and_batch_bounds() {
@@ -206,7 +512,7 @@ mod tests {
 
     #[test]
     fn push_blocks_at_bound_until_popped() {
-        let q = std::sync::Arc::new(AdmissionQueue::new(2));
+        let q = Arc::new(AdmissionQueue::new(2));
         q.push(0u64).unwrap();
         q.push(1).unwrap();
         let q2 = q.clone();
@@ -259,7 +565,7 @@ mod tests {
 
     #[test]
     fn concurrent_producers_consumers_lose_nothing() {
-        let q = std::sync::Arc::new(AdmissionQueue::new(8));
+        let q = Arc::new(AdmissionQueue::new(8));
         let n_producers = 4;
         let per_producer = 100u64;
         let mut producers = Vec::new();
@@ -297,5 +603,149 @@ mod tests {
         let want: Vec<u64> =
             (0..n_producers as u64 * per_producer).collect();
         assert_eq!(all, want, "requests dropped or duplicated");
+    }
+
+    #[test]
+    fn sharded_spreads_submissions_across_all_shards() {
+        let q = AdmissionQueue::sharded(64, 4);
+        for id in 0..32u64 {
+            q.push(id).unwrap();
+        }
+        assert_eq!(q.len(), 32, "aggregate gauge must count all shards");
+        for s in 0..4 {
+            assert!(q.shard_len(s) > 0,
+                    "p2c left shard {s} empty: {:?}",
+                    (0..4).map(|i| q.shard_len(i)).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn single_popper_steals_across_all_shards() {
+        // worker 2's own shard runs dry long before the backlog does:
+        // ring-order stealing must still drain every shard
+        let q = AdmissionQueue::sharded(64, 4);
+        for id in 0..32u64 {
+            q.push(id).unwrap();
+        }
+        let mut got: Vec<u64> = Vec::new();
+        while got.len() < 32 {
+            let batch = q.pop_batch_as(2, 8, Duration::ZERO);
+            assert!(!batch.is_empty(), "pop on a non-empty queue");
+            assert!(batch.len() <= 8);
+            got.extend(batch);
+        }
+        got.sort_unstable();
+        assert_eq!(got, (0..32).collect::<Vec<_>>(),
+                   "stealing dropped or duplicated items");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn sharded_bound_is_aggregate_not_per_shard() {
+        let q = AdmissionQueue::sharded(4, 4);
+        for id in 0..4u64 {
+            assert!(q.try_push(id).is_ok(), "room below the aggregate bound");
+        }
+        match q.try_push(4) {
+            Err(TryPushError::Full(item)) => assert_eq!(item, 4),
+            other => panic!("want Full at aggregate bound, got {other:?}"),
+        }
+        let got = q.pop_batch_as(3, 2, Duration::ZERO);
+        assert_eq!(got.len(), 2);
+        assert!(q.try_push(4).is_ok());
+        assert!(q.try_push(5).is_ok());
+        assert!(matches!(q.try_push(6), Err(TryPushError::Full(_))),
+                "aggregate bound must re-engage exactly");
+    }
+
+    #[test]
+    fn sharded_close_drains_every_shard() {
+        let q = AdmissionQueue::sharded(32, 3);
+        for id in 0..10u64 {
+            q.push(id).unwrap();
+        }
+        q.close();
+        let mut got: Vec<u64> = Vec::new();
+        loop {
+            let batch = q.pop_batch_as(1, 4, Duration::ZERO);
+            if batch.is_empty() {
+                break;
+            }
+            got.extend(batch);
+        }
+        got.sort_unstable();
+        assert_eq!(got, (0..10).collect::<Vec<_>>());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn keyed_pop_returns_homogeneous_batches_and_preserves_order() {
+        let q = AdmissionQueue::new(16); // single shard: deterministic
+        for id in 0..6u64 {
+            q.push(id).unwrap();
+        }
+        let key = |id: &u64| *id % 2;
+        let a = q.pop_batch_keyed(0, 8, Duration::ZERO, key);
+        assert_eq!(a, vec![0, 2, 4],
+                   "head seeds the key; the other class is skipped");
+        assert_eq!(q.len(), 3);
+        let b = q.pop_batch_keyed(0, 8, Duration::ZERO, key);
+        assert_eq!(b, vec![1, 3, 5], "skipped items kept their order");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn keyed_pop_respects_max_within_class() {
+        let q = AdmissionQueue::new(16);
+        for id in 0..8u64 {
+            q.push(id).unwrap();
+        }
+        let got = q.pop_batch_keyed(0, 3, Duration::ZERO, |_| ());
+        assert_eq!(got, vec![0, 1, 2]);
+        assert_eq!(q.len(), 5);
+    }
+
+    #[test]
+    fn sharded_concurrent_stealing_consumers_lose_nothing() {
+        let q = Arc::new(AdmissionQueue::sharded(16, 4));
+        let n_producers = 4;
+        let per_producer = 150u64;
+        let mut producers = Vec::new();
+        for p in 0..n_producers {
+            let q = q.clone();
+            producers.push(std::thread::spawn(move || {
+                for i in 0..per_producer {
+                    q.push(p as u64 * per_producer + i).unwrap();
+                }
+            }));
+        }
+        let mut consumers = Vec::new();
+        for w in 0..4usize {
+            let q = q.clone();
+            consumers.push(std::thread::spawn(move || {
+                let mut ids = Vec::new();
+                loop {
+                    let got =
+                        q.pop_batch_as(w, 5, Duration::from_micros(200));
+                    if got.is_empty() {
+                        return ids;
+                    }
+                    ids.extend(got);
+                }
+            }));
+        }
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<u64> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        let want: Vec<u64> =
+            (0..n_producers as u64 * per_producer).collect();
+        assert_eq!(all, want, "requests dropped or duplicated");
+        assert_eq!(q.len(), 0, "aggregate gauge must return to zero");
     }
 }

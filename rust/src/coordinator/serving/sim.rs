@@ -177,6 +177,105 @@ pub fn factory(spec: SimSpec, tiers: Vec<f32>)
     }
 }
 
+/// Drive one hermetic sim-pipeline point: flood-submit `n` requests
+/// into an engine with the given worker/shard topology over `spec`,
+/// wait every response out, and return the report.  With a near-zero
+/// latency spec, wall-clock is dominated by the host pipeline
+/// (admission, shard selection, stealing, batch formation), which is
+/// exactly what the shared-vs-sharded queue comparison in
+/// `BENCH_serving.json` measures.  `shards = 1` reproduces the
+/// pre-sharding single shared deque; `shards = workers` (or 0 = auto)
+/// is the sharded work-stealing topology.
+pub fn pipeline_point(spec: SimSpec, workers: usize, shards: usize,
+                      n: usize) -> Result<super::ServeReport> {
+    let cfg = super::ServeConfig::sim()
+        .with_workers(workers)
+        .with_queue_shards(shards)
+        .with_queue_bound(128)
+        .with_max_batch_wait(Duration::from_micros(200));
+    let caps = cfg.capacities();
+    let engine = super::ElasticEngine::start(cfg, factory(spec, caps))?;
+    let responses: Vec<super::Response> = (0..n as u64)
+        .map(|id| {
+            engine.submit(super::Request::new(id, vec![1; spec.seq_len]))
+        })
+        .collect();
+    for r in responses {
+        r.wait()
+            .map_err(|e| anyhow::anyhow!("sim pipeline serve failed: {e}"))?;
+    }
+    engine.shutdown()
+}
+
+/// One row of the machine-readable sim-pipeline record
+/// (`BENCH_serving.json`).
+pub struct BenchRow {
+    /// topology label: "shared" (1 shard) or "sharded" (1 per worker)
+    pub queue: &'static str,
+    pub workers: usize,
+    pub shards: usize,
+    pub report: super::ServeReport,
+}
+
+/// Write the sim-pipeline results as `BENCH_serving.json`-style JSON:
+/// req/s, p50/p99 latency and mean capacity per (queue topology,
+/// worker count), plus the sharded/shared throughput ratio per worker
+/// count — the cross-PR perf-trajectory record.  Written by both the
+/// release-mode `hotpath` bench (the number that counts) and the
+/// hermetic `tests/bench_gate.rs` suite (so every tier-1 run refreshes
+/// the file even where `cargo bench` never runs).
+pub fn write_bench_json(path: &std::path::Path, source: &str,
+                        spec: SimSpec, requests: usize,
+                        rows: &[BenchRow]) -> Result<()> {
+    use crate::json::Value;
+    let spec_obj = Value::Obj(vec![
+        ("batch".into(), Value::Num(spec.batch as f64)),
+        ("seq_len".into(), Value::Num(spec.seq_len as f64)),
+        ("base_ms".into(), Value::Num(spec.base_ms)),
+        ("ms_per_capacity".into(), Value::Num(spec.ms_per_capacity)),
+        ("jitter_ms".into(), Value::Num(spec.jitter_ms)),
+        ("seed".into(), Value::Num(spec.seed as f64)),
+    ]);
+    let results: Vec<Value> = rows
+        .iter()
+        .map(|r| {
+            Value::Obj(vec![
+                ("queue".into(), Value::Str(r.queue.to_string())),
+                ("workers".into(), Value::Num(r.workers as f64)),
+                ("shards".into(), Value::Num(r.shards as f64)),
+                ("req_per_s".into(),
+                 Value::Num(r.report.throughput_rps())),
+                ("p50_ms".into(), Value::Num(r.report.latency_p(0.5))),
+                ("p99_ms".into(), Value::Num(r.report.latency_p(0.99))),
+                ("mean_capacity".into(),
+                 Value::Num(r.report.mean_capacity())),
+                ("served".into(),
+                 Value::Num(r.report.completions.len() as f64)),
+            ])
+        })
+        .collect();
+    let mut speedups: Vec<(String, Value)> = Vec::new();
+    for r in rows.iter().filter(|r| r.queue == "sharded") {
+        if let Some(base) = rows
+            .iter()
+            .find(|b| b.queue == "shared" && b.workers == r.workers)
+        {
+            let ratio = r.report.throughput_rps()
+                / base.report.throughput_rps().max(1e-9);
+            speedups.push((format!("w{}", r.workers), Value::Num(ratio)));
+        }
+    }
+    let doc = Value::Obj(vec![
+        ("bench".into(), Value::Str("sim_pipeline".into())),
+        ("source".into(), Value::Str(source.to_string())),
+        ("requests".into(), Value::Num(requests as f64)),
+        ("spec".into(), spec_obj),
+        ("results".into(), Value::Arr(results)),
+        ("speedup_sharded_over_shared".into(), Value::Obj(speedups)),
+    ]);
+    crate::metrics::write_file(path, &crate::json::to_string_pretty(&doc))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -211,6 +310,36 @@ mod tests {
         assert!(e.execute(1.0, &[0; 5]).is_err(), "wrong token count");
         assert!(e.execute(0.33, &[0; 6]).is_err(), "unconfigured tier");
         assert_eq!(e.log.len(), 1);
+    }
+
+    #[test]
+    fn pipeline_point_serves_everything_and_bench_json_roundtrips() {
+        let spec = SimSpec { batch: 4, seq_len: 8, ..SimSpec::instant() };
+        let shared = pipeline_point(spec, 2, 1, 24).unwrap();
+        let sharded = pipeline_point(spec, 2, 2, 24).unwrap();
+        assert_eq!(shared.completions.len(), 24);
+        assert_eq!(sharded.completions.len(), 24);
+        let rows = vec![
+            BenchRow { queue: "shared", workers: 2, shards: 1,
+                       report: shared },
+            BenchRow { queue: "sharded", workers: 2, shards: 2,
+                       report: sharded },
+        ];
+        let path = std::env::temp_dir().join(format!(
+            "ef_bench_serving_{}.json", std::process::id()));
+        write_bench_json(&path, "sim.rs unit test", spec, 24, &rows)
+            .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let doc = crate::json::parse(&text).unwrap();
+        assert_eq!(doc.req("bench").unwrap().as_str().unwrap(),
+                   "sim_pipeline");
+        assert_eq!(doc.req("results").unwrap().as_arr().unwrap().len(), 2);
+        let ratio = doc
+            .req("speedup_sharded_over_shared").unwrap()
+            .req("w2").unwrap()
+            .as_f64().unwrap();
+        assert!(ratio.is_finite() && ratio > 0.0, "ratio {ratio}");
     }
 
     #[test]

@@ -14,7 +14,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::batcher::form_batch;
+use super::batcher::{batch_key, form_batch};
 use super::report::{Completion, ShedRecord};
 use super::{EngineShared, Pending, Reply, ServeError};
 
@@ -159,12 +159,19 @@ impl Executor for XlaExecutor {
     }
 }
 
-/// The worker loop: pop a FIFO run of admitted requests, shed the ones
-/// whose deadline already expired, pick a tier from the global backlog
-/// plus the batch's SLO constraints, form the padded batch, execute,
-/// and resolve each request's [`super::Response`] with its logits row
-/// and timings.  Returns the number of batches executed; exits when the
-/// queue is closed and drained.
+/// The worker loop: pop a run of *class-compatible* admitted requests
+/// (own admission shard first, stealing from hot siblings when it runs
+/// dry), shed the ones whose deadline already expired, pick a tier from
+/// the global backlog plus the batch's SLO constraints, form the padded
+/// batch, execute, and resolve each request's [`super::Response`] with
+/// its logits row and timings.  Returns the number of batches executed;
+/// exits when the queue is closed and drained.
+///
+/// Batch compatibility is [`batch_key`]: every popped run shares one
+/// floor rung and one deadline band, so a quality floor never drags
+/// best-effort neighbours up a tier and a tight deadline never drags
+/// relaxed neighbours down one (the strictest constraint in a batch
+/// binds all of it — so batches are formed to agree on constraints).
 ///
 /// All timings are measured on one monotonic clock: `submitted` (the
 /// admission stamp) -> `exec_start` -> `done`.  `queue_ms + exec_ms ==
@@ -175,7 +182,9 @@ pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
     let seq_len = exec.seq_len();
     let mut batches = 0usize;
     loop {
-        let popped = shared.queue.pop_batch(batch, shared.max_batch_wait);
+        let popped = shared.queue.pop_batch_keyed(
+            worker, batch, shared.max_batch_wait,
+            |p: &Pending| batch_key(&p.req.slo, &shared.caps));
         if popped.is_empty() {
             return Ok(batches); // closed and drained
         }
@@ -208,8 +217,11 @@ pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
         if live.is_empty() {
             continue; // the whole run was past-deadline
         }
-        // the controller sees the global post-pop backlog plus this
-        // batch's tightest deadline slack and strictest quality floor
+        // the controller sees the global post-pop backlog (one atomic
+        // load off the sharded queue's depth gauge — no queue lock)
+        // plus this batch's tightest deadline slack and strictest
+        // quality floor; the floor is the max over a run that already
+        // shares one floor rung, so the clamp binds every member alike
         let tier = shared.controller.lock().unwrap().choose_for_batch(
             shared.queue.len(), floor, slack_ms);
         let exec_start = Instant::now();

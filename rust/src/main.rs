@@ -11,7 +11,7 @@
 //!                  [--seed S]
 //!   serve-sim      [--requests N] [--rates a,b,c] [--workers W]
 //!                  [--batch B] [--seq-len T] [--queue-bound Q]
-//!                  [--depth-per-tier D] [--seed S]
+//!                  [--queue-shards K] [--depth-per-tier D] [--seed S]
 //!   info           --config C
 //!
 //! Everything except `serve-sim` runs off the AOT artifacts in
@@ -361,11 +361,15 @@ fn print_report(report: &ServeReport, failed: usize) {
 /// row per offered rate.  Runs anywhere — no artifacts, no XLA runtime.
 fn cmd_serve_sim(args: &Args) -> Result<()> {
     args.check_known(&["requests", "rates", "workers", "batch", "seq-len",
-                       "queue-bound", "depth-per-tier", "seed"])?;
+                       "queue-bound", "queue-shards", "depth-per-tier",
+                       "seed"])?;
     let n = args.usize_or("requests", 512)?;
     let workers = args.usize_or("workers", 4)?;
     let seed = args.u64_or("seed", 42)?;
     let queue_bound = args.usize_or("queue-bound", 64)?;
+    // 0 = auto (one admission shard per worker); 1 = the classic
+    // shared queue, kept for A/B comparison
+    let queue_shards = args.usize_or("queue-shards", 0)?;
     let depth_per_tier = args.f64_or("depth-per-tier", 8.0)?;
     let rates = args.f64_list_or("rates", &[250.0, 1000.0, 4000.0])?;
     if rates.iter().any(|r| !r.is_finite() || *r <= 0.0) {
@@ -384,11 +388,14 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
     }
 
     println!("serve-sim: {n} requests per point, {workers} worker(s), \
-              batch {} x seq {}, queue bound {queue_bound}",
-             spec.batch, spec.seq_len);
+              batch {} x seq {}, queue bound {queue_bound}, \
+              {} admission shard(s)",
+             spec.batch, spec.seq_len,
+             if queue_shards == 0 { workers } else { queue_shards });
     for rate in rates {
         let (report, shed) = run_sim_point(spec, workers, queue_bound,
-                                           depth_per_tier, n, rate, seed)?;
+                                           queue_shards, depth_per_tier,
+                                           n, rate, seed)?;
         let tiers: Vec<String> = report
             .tier_counts
             .iter()
@@ -407,11 +414,12 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
 }
 
 fn run_sim_point(spec: SimSpec, workers: usize, queue_bound: usize,
-                 depth_per_tier: f64, n: usize, rate: f64, seed: u64)
-                 -> Result<(ServeReport, usize)> {
+                 queue_shards: usize, depth_per_tier: f64, n: usize,
+                 rate: f64, seed: u64) -> Result<(ServeReport, usize)> {
     let cfg = ServeConfig::sim()
         .with_workers(workers)
         .with_queue_bound(queue_bound)
+        .with_queue_shards(queue_shards)
         .with_depth_per_tier(depth_per_tier)
         .with_max_batch_wait(Duration::from_millis(2));
     let caps = cfg.capacities();

@@ -4,9 +4,11 @@
 //! pipeline through the handle-based client API: light load serves the
 //! top tier, sustained overload sheds capacity, tight-deadline SLO
 //! classes are shed or floor-tiered while relaxed classes on the same
-//! queue are served, admission verdicts only shed on a genuinely full
-//! queue, shutdown drains every admitted request, and N workers beat
-//! one worker on wall-clock.
+//! queue are served, class-aware batch formation keeps floored and
+//! best-effort requests out of each other's batches, admission verdicts
+//! only shed when the aggregate bound across all shards is genuinely
+//! hit, shutdown drains every admitted request (work stealing included),
+//! and N workers beat one worker on wall-clock.
 
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
@@ -238,6 +240,64 @@ fn floor_tier_class_holds_capacity_while_best_effort_sheds() {
     assert!(premium.mean_capacity > effort.mean_capacity,
             "premium {:.3} <= best-effort {:.3}",
             premium.mean_capacity, effort.mean_capacity);
+}
+
+#[test]
+fn class_aware_batching_shields_best_effort_from_floors() {
+    // sustained overload, batch 4, premium (floor 1.0) and best-effort
+    // interleaved on one queue: with class-aware batch formation the
+    // two classes never share a batch, so premium stays pinned at 1.0
+    // while the majority of best-effort requests shed below it.
+    // Before this, the strictest floor in a mixed batch dragged every
+    // best-effort neighbour up to tier 1.0 with it (which is why the
+    // older floor test had to use batch = 1 to mean anything).
+    let spec = SimSpec {
+        batch: 4,
+        base_ms: 1.0,
+        ms_per_capacity: 1.0,
+        jitter_ms: 0.0,
+        ..SimSpec::standard()
+    };
+    let cfg = ServeConfig::sim()
+        .with_workers(1)
+        .with_queue_bound(128)
+        .with_depth_per_tier(0.5)
+        .with_max_batch_wait(Duration::from_millis(1));
+    let caps = cfg.capacities();
+    let engine =
+        ElasticEngine::start(cfg, sim::factory(spec, caps)).unwrap();
+    let floored = SloClass::named("premium").with_floor_tier(1.0);
+    let n = 64;
+    let mut responses = Vec::with_capacity(n);
+    for id in 0..n as u64 {
+        let slo = if id % 2 == 0 {
+            floored.clone()
+        } else {
+            SloClass::best_effort()
+        };
+        responses.push(engine.submit(
+            Request::new(id, sim_tokens(id, spec.seq_len)).with_slo(slo)));
+    }
+    let mut premium_tiers = Vec::new();
+    let mut effort_tiers = Vec::new();
+    for r in responses {
+        let reply = r.wait().expect("no deadlines: everything is served");
+        if reply.completion.class == "premium" {
+            premium_tiers.push(reply.completion.tier);
+        } else {
+            effort_tiers.push(reply.completion.tier);
+        }
+    }
+    let report = engine.shutdown().unwrap();
+    assert_eq!(report.completions.len(), n);
+    assert_ids_exactly_once(&report, n);
+    assert!(premium_tiers.iter().all(|&t| t == 1.0),
+            "floored class served below its floor: {premium_tiers:?}");
+    let shed = effort_tiers.iter().filter(|&&t| t < 1.0).count();
+    assert!(shed * 2 > effort_tiers.len(),
+            "best-effort mostly rode premium batches at tier 1.0 \
+             ({shed}/{} shed): {effort_tiers:?}",
+            effort_tiers.len());
 }
 
 /// Executor whose `execute` blocks until the shared gate opens —
