@@ -35,8 +35,9 @@ fn main() {
 /// host pipeline (admission queue, controller, batch formation).  Each
 /// worker count runs twice — `shared` pins every worker on one deque
 /// (the pre-sharding topology), `sharded` gives each worker its own
-/// shard with work stealing — and the comparison lands in
-/// `BENCH_serving.json` at the repo root.
+/// shard with work stealing — plus one heterogeneous fast/slow
+/// two-class point (per-class capacity controllers), and everything
+/// lands in `BENCH_serving.json` at the repo root.
 fn sim_pipeline_bench() -> anyhow::Result<()> {
     println!("--- serving pipeline (SimExecutor, hermetic) ---");
     let n = 2048usize;
@@ -59,9 +60,30 @@ fn sim_pipeline_bench() -> anyhow::Result<()> {
                      report.throughput_rps(), report.latency_p(0.5),
                      report.latency_p(0.99), report.mean_capacity());
             rows.push(sim::BenchRow { queue: label, workers, shards,
-                                      report });
+                                      classes: String::new(), report });
         }
     }
+    // heterogeneous topology: 2 fast workers + 2 slow (4x latency)
+    // workers behind the same sharded queue, one controller per class
+    let slow = SimSpec {
+        base_ms: spec.base_ms * 4.0,
+        ms_per_capacity: spec.ms_per_capacity * 4.0,
+        ..spec
+    };
+    let report = sim::pipeline_point_classes(
+        &[("fast", spec, 2), ("slow", slow, 2)], 4, n)?;
+    println!("sim_serving_hetero_fast2_slow2   \
+              {:>8.0} req/s  p50 {:>8.2} ms  p99 {:>8.2} ms  \
+              mean cap {:.2}",
+             report.throughput_rps(), report.latency_p(0.5),
+             report.latency_p(0.99), report.mean_capacity());
+    rows.push(sim::BenchRow {
+        queue: "hetero",
+        workers: 4,
+        shards: 4,
+        classes: "fast=2:slow=2".into(),
+        report,
+    });
     let path = std::path::Path::new(
         concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serving.json"));
     sim::write_bench_json(path, "benches/hotpath.rs (release)", spec, n,

@@ -1,9 +1,10 @@
 //! The paper's system contribution at L3: post-training self-distillation
 //! orchestration (producing router checkpoints) plus an elastic serving
 //! subsystem that realizes "variable inference time compute" as an
-//! operable system (bounded admission queue -> shared capacity
-//! controller -> N worker threads -> `Executor` backends: PJRT or the
-//! deterministic simulator; see serving/README.md).
+//! operable system (sharded bounded admission queue -> heterogeneous
+//! worker classes, one capacity controller per class -> `Executor`
+//! backends: PJRT or the deterministic simulator; see
+//! serving/README.md).
 
 #[cfg(feature = "pjrt")]
 pub mod generation;

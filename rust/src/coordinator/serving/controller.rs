@@ -21,13 +21,18 @@
 //! optimistically (no demotion), so cold starts behave exactly like the
 //! old backlog-only controller.
 //!
-//! In the multi-worker engine one controller instance is shared behind
-//! a mutex and observes the *global* backlog — read off the sharded
-//! admission queue's atomic depth gauge, so observing it never takes a
-//! queue lock — and all workers shed together.  The floor clamp uses
-//! the same [`floor_rung`](super::batcher::floor_rung) rule as the
-//! batch-compatibility key, so a batch grouped as "rung r" is always
-//! clamped to exactly rung r, never split by rounding disagreements.
+//! In the multi-worker engine there is one controller instance **per
+//! worker class** (see `WorkerClass` in the engine module), each behind
+//! its own mutex: per-tier exec-time EWMAs learned on one backend class
+//! (a fast GPU) never demote — or mask demotion for — batches served by
+//! another (a slow CPU).  Every controller observes the same *global*
+//! backlog, read off the sharded admission queue's atomic depth gauge,
+//! so observing it never takes a queue lock and all classes shed
+//! backlog together while their latency models stay isolated.  The
+//! floor clamp uses the same [`floor_rung`](super::batcher::floor_rung)
+//! rule as the batch-compatibility key, so a batch grouped as "rung r"
+//! is always clamped to exactly rung r, never split by rounding
+//! disagreements.
 
 use super::batcher::floor_rung;
 use super::tier_matches;
@@ -144,6 +149,17 @@ impl CapacityController {
             .iter()
             .position(|&t| tier_matches(t, tier))
             .and_then(|i| self.exec_ms[i])
+    }
+
+    /// Snapshot of every learned estimate, `(tier, ms-if-observed)` in
+    /// ladder order — what the engine folds into the report's
+    /// per-worker-class sections at shutdown.
+    pub fn exec_estimates(&self) -> Vec<(f32, Option<f64>)> {
+        self.tiers
+            .iter()
+            .copied()
+            .zip(self.exec_ms.iter().copied())
+            .collect()
     }
 
     /// Pure mapping (for tests / property checks): tier for a given

@@ -11,12 +11,18 @@
 //!           │         │            │    (sharded AdmissionQueue:
 //!           ▼         ▼            ▼     per-worker deques + atomic
 //!       worker 0  worker 1  worker N-1   depth gauge + work stealing)
-//!       pop_batch_keyed (own shard first, steal siblings;
-//!                        class-compatible runs only)     batcher.rs
+//!       └─ class "fast" ─┘  └─ "slow" ─┘  (WorkerClass: one executor
+//!                                          factory + one controller
+//!                                          per device class)
+//!       pop_batch_keyed (tightest-slack head seeds the run,
+//!                        ring order breaks ties — deadline-
+//!                        aware stealing; class-compatible
+//!                        runs only)                      batcher.rs
 //!                 -> shed expired deadlines              worker.rs
-//!                 -> CapacityController                  controller.rs
-//!                    (backlog EWMA via the atomic gauge
-//!                     + deadline slack + SLO floor rungs)
+//!                 -> per-class CapacityController        controller.rs
+//!                    (backlog EWMA via the shared atomic
+//!                     gauge + deadline slack vs THIS
+//!                     class's learned exec times + floors)
 //!       form_batch (pad to B×T)                          batcher.rs
 //!       Executor::execute(tier, tokens) -> logits
 //!          |            |
@@ -27,7 +33,8 @@
 //!              \     |     /
 //!       per-request Response resolution (one-shot slot)
 //!              +
-//!       [ServeReport] with per-SLO-class sections        report.rs
+//!       [ServeReport] with per-SLO-class and             report.rs
+//!        per-worker-class sections
 //! ```
 //!
 //! [`ElasticEngine::start`] spawns the workers and returns an
@@ -42,15 +49,28 @@
 //! [`Admission`] verdict instead of blocking on a full queue.
 //!
 //! Every request carries an [`SloClass`]: an optional latency deadline
-//! plus a quality floor tier.  Both flow into the shared
-//! [`CapacityController`] — deadlines pull the served tier down
+//! plus a quality floor tier.  Both flow into the serving worker
+//! class's [`CapacityController`] — deadlines pull the served tier down
 //! (cheaper = faster) and may shed a request outright once expired,
 //! floors clamp it up — and [`ServeReport::class_sections`] accounts
-//! for each class separately.  PJRT handles are not `Send`, so each
-//! worker constructs its own [`Executor`] on its own thread via the
-//! factory passed to [`ElasticEngine::start`]; the [`SimExecutor`]
-//! implementor makes the whole submit → admit → batch → tier-select →
-//! execute → resolve pipeline runnable without artifacts.
+//! for each class separately.
+//!
+//! The fleet itself may be **heterogeneous**: [`ServeConfig`] carries
+//! [`WorkerClass`]es (name + worker count + executor factory — e.g. 2
+//! GPU-backed workers and 2 CPU-backed ones behind the same queue),
+//! started with [`ElasticEngine::start_fleet`].  Each class gets its
+//! own capacity controller, so per-tier exec-time EWMAs learned on a
+//! fast backend never demote (or mask demotion for) requests served by
+//! a slow one, while all classes observe the same lock-free aggregate
+//! depth gauge.  [`ElasticEngine::start`] is the one-class special
+//! case.  [`ServeReport::worker_class_sections`] reports each class's
+//! tier mix and learned latency model.
+//!
+//! PJRT handles are not `Send`, so each worker constructs its own
+//! [`Executor`] on its own thread via its class's factory; the
+//! [`SimExecutor`] implementor makes the whole submit → admit → batch →
+//! tier-select → execute → resolve pipeline runnable without artifacts
+//! (per-class `SimSpec`s simulate a mixed fleet hermetically).
 
 pub mod batcher;
 pub mod controller;
@@ -62,7 +82,10 @@ pub mod worker;
 pub use batcher::{batch_key, floor_rung, form_batch, Batch, BatchKey};
 pub use controller::CapacityController;
 pub use queue::{AdmissionQueue, TryPushError};
-pub use report::{ClassStats, Completion, ServeReport, ShedRecord};
+pub use report::{
+    ClassStats, Completion, ServeReport, ShedRecord, WorkerClassInfo,
+    WorkerClassStats,
+};
 pub use sim::{SimExecutor, SimSpec};
 pub use worker::{ExecOutput, Executor};
 #[cfg(feature = "pjrt")]
@@ -154,6 +177,48 @@ pub(crate) fn tier_matches(a: f32, b: f32) -> bool {
     (a - b).abs() < TIER_EPS
 }
 
+/// Boxed-executor factory owned by one worker class: called once per
+/// worker, *on that worker's thread* (PJRT handles are not `Send`),
+/// with the worker's global fleet index — so e.g. seeded sim executors
+/// get distinct RNG streams even across classes.
+pub type ExecutorFactory =
+    dyn Fn(usize) -> Result<Box<dyn Executor>> + Send + Sync;
+
+/// One class of workers in a (possibly heterogeneous) fleet: a name
+/// (keys the report's [`WorkerClassStats`] sections), a worker count,
+/// and the executor factory those workers build their backends with.
+/// Each class gets its **own** [`CapacityController`], so the per-tier
+/// exec-time EWMAs learned on one device class never leak into
+/// another's deadline decisions.
+#[derive(Clone)]
+pub struct WorkerClass {
+    pub name: String,
+    pub workers: usize,
+    pub factory: Arc<ExecutorFactory>,
+}
+
+impl WorkerClass {
+    pub fn new<F>(name: &str, workers: usize, factory: F) -> WorkerClass
+    where
+        F: Fn(usize) -> Result<Box<dyn Executor>> + Send + Sync + 'static,
+    {
+        WorkerClass {
+            name: name.into(),
+            workers: workers.max(1),
+            factory: Arc::new(factory),
+        }
+    }
+}
+
+impl fmt::Debug for WorkerClass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("WorkerClass")
+            .field("name", &self.name)
+            .field("workers", &self.workers)
+            .finish_non_exhaustive()
+    }
+}
+
 /// Engine configuration.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -163,7 +228,10 @@ pub struct ServeConfig {
     pub depth_per_tier: f64,
     /// max time a worker waits filling a batch before running partial
     pub max_batch_wait: Duration,
-    /// number of execution workers (each owns one `Executor`)
+    /// number of execution workers (each owns one `Executor`) for the
+    /// single-class [`ElasticEngine::start`] path; ignored when
+    /// `worker_classes` is non-empty (the classes carry their own
+    /// counts)
     pub workers: usize,
     /// admission queue bound (aggregate across all shards): `submit`
     /// blocks at the bound (backpressure), `try_submit` sheds with an
@@ -173,6 +241,10 @@ pub struct ServeConfig {
     /// 1 = the pre-sharding single shared deque, kept for A/B
     /// benchmarking (see `BENCH_serving.json`) and tiny deployments
     pub queue_shards: usize,
+    /// heterogeneous fleet topology for [`ElasticEngine::start_fleet`]:
+    /// one entry per device class (empty = single-class engine via
+    /// [`ElasticEngine::start`])
+    pub worker_classes: Vec<WorkerClass>,
 }
 
 impl ServeConfig {
@@ -191,6 +263,7 @@ impl ServeConfig {
             workers: 1,
             queue_bound: 256,
             queue_shards: 0,
+            worker_classes: Vec::new(),
         }
     }
 
@@ -218,6 +291,30 @@ impl ServeConfig {
     pub fn with_queue_shards(mut self, shards: usize) -> ServeConfig {
         self.queue_shards = shards;
         self
+    }
+
+    /// Append one worker class to the fleet topology (started with
+    /// [`ElasticEngine::start_fleet`]).  `factory` is called once per
+    /// worker of this class, on that worker's thread, with the worker's
+    /// global fleet index.
+    pub fn with_worker_class<F>(mut self, name: &str, workers: usize,
+                                factory: F) -> ServeConfig
+    where
+        F: Fn(usize) -> Result<Box<dyn Executor>> + Send + Sync + 'static,
+    {
+        self.worker_classes.push(WorkerClass::new(name, workers, factory));
+        self
+    }
+
+    /// Total workers across the configured topology: the sum of the
+    /// class counts, or the flat `workers` field when no classes are
+    /// declared.
+    pub fn total_workers(&self) -> usize {
+        if self.worker_classes.is_empty() {
+            self.workers.max(1)
+        } else {
+            self.worker_classes.iter().map(|c| c.workers.max(1)).sum()
+        }
     }
 
     pub fn with_depth_per_tier(mut self, depth: f64) -> ServeConfig {
@@ -425,39 +522,86 @@ pub(crate) struct Pending {
 /// State shared between the handle and all worker threads.
 pub(crate) struct EngineShared {
     pub queue: AdmissionQueue<Pending>,
-    pub controller: Mutex<CapacityController>,
+    /// one capacity controller per worker class, indexed by class id:
+    /// exec-time EWMAs learned on one backend class never demote (or
+    /// mask demotion for) batches served by another, while every
+    /// controller observes the same lock-free aggregate depth gauge
+    pub controllers: Vec<Mutex<CapacityController>>,
+    /// (class name, worker count) per class, indexed by class id
+    pub classes: Vec<(String, usize)>,
     pub completions: Mutex<Vec<Completion>>,
     pub sheds: Mutex<Vec<ShedRecord>>,
     pub errors: Mutex<Vec<String>>,
     pub max_batch_wait: Duration,
     /// configured capacity ladder, descending — workers derive each
     /// request's batch-compatibility key against it without locking
-    /// the controller
+    /// any controller
     pub caps: Vec<f32>,
 }
 
 /// The serving engine: [`start`](Self::start) spawns N execution
 /// workers behind a shared bounded queue and returns an
-/// [`EngineHandle`] for submitting requests and shutting down.
+/// [`EngineHandle`] for submitting requests and shutting down;
+/// [`start_fleet`](Self::start_fleet) does the same for a
+/// heterogeneous [`WorkerClass`] topology.
 ///
 /// The engine is backend-agnostic: it only knows the [`Executor`]
 /// trait.  Because PJRT handles are not `Send`, executors are
-/// constructed *on* their worker thread by the `factory` (called once
-/// per worker with the worker index).
+/// constructed *on* their worker thread by their class's factory
+/// (called once per worker with the global worker index).
 pub struct ElasticEngine;
 
 impl ElasticEngine {
-    /// Spawn the worker fleet and return once every worker's executor
-    /// is built and warm (so submission timings never include
-    /// compile/warmup), or with an error if any worker failed to
-    /// initialize — in which case the whole fleet is torn down.
+    /// Spawn a single-class worker fleet — the one-factory special case
+    /// of [`start_fleet`](Self::start_fleet) — and return once every
+    /// worker's executor is built and warm (so submission timings never
+    /// include compile/warmup), or with an error if any worker failed
+    /// to initialize — in which case the whole fleet is torn down.
     pub fn start<F>(cfg: ServeConfig, factory: F) -> Result<EngineHandle>
     where
         F: Fn(usize) -> Result<Box<dyn Executor>> + Send + Sync + 'static,
     {
+        anyhow::ensure!(
+            cfg.worker_classes.is_empty(),
+            "ServeConfig declares worker classes; start their fleet with \
+             ElasticEngine::start_fleet (start's factory would be \
+             ambiguous)");
+        let class = WorkerClass::new("default", cfg.workers, factory);
+        ElasticEngine::start_classes(cfg, vec![class])
+    }
+
+    /// Spawn the heterogeneous fleet declared in
+    /// [`ServeConfig::worker_classes`]: all classes share one admission
+    /// queue and one tier ladder, but each class builds its executors
+    /// from its own factory and learns its own per-tier latency model
+    /// in its own [`CapacityController`].
+    pub fn start_fleet(cfg: ServeConfig) -> Result<EngineHandle> {
+        anyhow::ensure!(
+            !cfg.worker_classes.is_empty(),
+            "no worker classes declared; add ServeConfig::\
+             with_worker_class entries or use ElasticEngine::start");
+        let classes = cfg.worker_classes.clone();
+        ElasticEngine::start_classes(cfg, classes)
+    }
+
+    fn start_classes(cfg: ServeConfig, classes: Vec<WorkerClass>)
+                     -> Result<EngineHandle> {
         let caps = cfg.capacities();
         anyhow::ensure!(!caps.is_empty(), "no serving tiers configured");
-        let workers = cfg.workers.max(1);
+        anyhow::ensure!(
+            classes.iter().all(|c| !c.name.is_empty()),
+            "worker class names must be non-empty");
+        {
+            let mut names: Vec<&str> =
+                classes.iter().map(|c| c.name.as_str()).collect();
+            names.sort_unstable();
+            let n = names.len();
+            names.dedup();
+            anyhow::ensure!(names.len() == n,
+                            "duplicate worker class names");
+        }
+        let workers: usize =
+            classes.iter().map(|c| c.workers.max(1)).sum();
         let shards = if cfg.queue_shards == 0 {
             workers
         } else {
@@ -465,80 +609,98 @@ impl ElasticEngine {
         };
         let shared = Arc::new(EngineShared {
             queue: AdmissionQueue::sharded(cfg.queue_bound, shards),
-            controller: Mutex::new(CapacityController::new(
-                caps.clone(), cfg.depth_per_tier)),
+            controllers: classes
+                .iter()
+                .map(|_| {
+                    Mutex::new(CapacityController::new(
+                        caps.clone(), cfg.depth_per_tier))
+                })
+                .collect(),
+            classes: classes
+                .iter()
+                .map(|c| (c.name.clone(), c.workers.max(1)))
+                .collect(),
             completions: Mutex::new(Vec::new()),
             sheds: Mutex::new(Vec::new()),
             errors: Mutex::new(Vec::new()),
             max_batch_wait: cfg.max_batch_wait,
             caps: caps.clone(),
         });
-        let factory = Arc::new(factory);
         let init = Arc::new(InitLatch::new());
         let caps = Arc::new(caps);
         let mut threads: Vec<JoinHandle<()>> = Vec::with_capacity(workers);
-        for w in 0..workers {
-            let shared = shared.clone();
-            let factory = factory.clone();
-            let init = init.clone();
-            let caps = caps.clone();
-            let spawned = std::thread::Builder::new()
-                .name(format!("elastic-worker-{w}"))
-                .spawn(move || {
-                    // Abnormal exit (Err *or* panic, before or after
-                    // init) must close the queue — else submitters block
-                    // forever on a dead fleet — and must report to the
-                    // init latch exactly once so `start` never hangs.
-                    let mut guard = WorkerGuard {
-                        shared: shared.clone(),
-                        init: init.clone(),
-                        worker: w,
-                        reported: false,
-                        clean_exit: false,
-                    };
-                    // executor built on this thread: PJRT handles never
-                    // cross a thread boundary
-                    let mut exec = match (factory.as_ref())(w) {
-                        Ok(e) => e,
-                        Err(e) => {
-                            guard.reported = true;
-                            init.arrive(Some(format!(
-                                "worker {w}: executor init: {e:#}")));
-                            return; // guard closes the queue
+        let mut w = 0usize;
+        for (ci, class) in classes.iter().enumerate() {
+            for _ in 0..class.workers.max(1) {
+                let shared = shared.clone();
+                let factory = class.factory.clone();
+                let init = init.clone();
+                let caps = caps.clone();
+                let cname = class.name.clone();
+                let spawned = std::thread::Builder::new()
+                    .name(format!("elastic-{cname}-{w}"))
+                    .spawn(move || {
+                        // Abnormal exit (Err *or* panic, before or after
+                        // init) must close the queue — else submitters
+                        // block forever on a dead fleet — and must report
+                        // to the init latch exactly once so `start` never
+                        // hangs.
+                        let mut guard = WorkerGuard {
+                            shared: shared.clone(),
+                            init: init.clone(),
+                            worker: w,
+                            reported: false,
+                            clean_exit: false,
+                        };
+                        // executor built on this thread: PJRT handles
+                        // never cross a thread boundary
+                        let mut exec = match (factory.as_ref())(w) {
+                            Ok(e) => e,
+                            Err(e) => {
+                                guard.reported = true;
+                                init.arrive(Some(format!(
+                                    "worker {w} ({cname}): executor \
+                                     init: {e:#}")));
+                                return; // guard closes the queue
+                            }
+                        };
+                        // a ladder mismatch between ServeConfig and the
+                        // class factory should abort here, not per-batch
+                        // mid-run
+                        for &c in caps.iter() {
+                            if !exec.supports(c) {
+                                guard.reported = true;
+                                init.arrive(Some(format!(
+                                    "worker {w} ({cname}): {} executor \
+                                     does not support configured tier {c}",
+                                    exec.name())));
+                                return; // guard closes the queue
+                            }
                         }
-                    };
-                    // a ladder mismatch between ServeConfig and the
-                    // factory should abort here, not per-batch mid-run
-                    for &c in caps.iter() {
-                        if !exec.supports(c) {
-                            guard.reported = true;
-                            init.arrive(Some(format!(
-                                "worker {w}: {} executor does not \
-                                 support configured tier {c}",
-                                exec.name())));
-                            return; // guard closes the queue
+                        guard.reported = true;
+                        init.arrive(None);
+                        match worker::run_worker(&shared, w, ci,
+                                                 exec.as_mut()) {
+                            Ok(_batches) => guard.clean_exit = true,
+                            Err(e) => {
+                                shared.errors.lock().unwrap().push(format!(
+                                    "worker {w} ({cname}): execution: \
+                                     {e:#}"));
+                                // guard closes the queue
+                            }
                         }
-                    }
-                    guard.reported = true;
-                    init.arrive(None);
-                    match worker::run_worker(&shared, w, exec.as_mut()) {
-                        Ok(_batches) => guard.clean_exit = true,
-                        Err(e) => {
-                            shared.errors.lock().unwrap().push(format!(
-                                "worker {w}: execution: {e:#}"));
-                            // guard closes the queue
+                    });
+                match spawned {
+                    Ok(t) => threads.push(t),
+                    Err(e) => {
+                        shared.queue.close();
+                        for t in threads {
+                            let _ = t.join();
                         }
+                        anyhow::bail!("spawning worker {w}: {e}");
                     }
-                });
-            match spawned {
-                Ok(t) => threads.push(t),
-                Err(e) => {
-                    shared.queue.close();
-                    for t in threads {
-                        let _ = t.join();
-                    }
-                    anyhow::bail!("spawning worker {w}: {e}");
                 }
+                w += 1;
             }
         }
 
@@ -582,9 +744,17 @@ impl EngineHandle {
     /// before the push.
     pub fn submit(&self, req: Request) -> Response {
         let (responder, response) = Response::channel(req.id);
+        // deadline-carrying requests are flagged urgent so the queue's
+        // deadline-aware steal peek engages only while any are enqueued
+        let urgent = req.slo.deadline.is_some();
         let pending =
             Pending { submitted: Instant::now(), req, responder };
-        if let Err(p) = self.shared.queue.push(pending) {
+        let pushed = if urgent {
+            self.shared.queue.push_urgent(pending)
+        } else {
+            self.shared.queue.push(pending)
+        };
+        if let Err(p) = pushed {
             p.responder.fulfil(Err(ServeError::ShuttingDown));
         }
         response
@@ -596,9 +766,15 @@ impl EngineHandle {
     /// bounded queue is genuinely at its bound.
     pub fn try_submit(&self, req: Request) -> Admission {
         let (responder, response) = Response::channel(req.id);
+        let urgent = req.slo.deadline.is_some();
         let pending =
             Pending { submitted: Instant::now(), req, responder };
-        match self.shared.queue.try_push(pending) {
+        let pushed = if urgent {
+            self.shared.queue.try_push_urgent(pending)
+        } else {
+            self.shared.queue.try_push(pending)
+        };
+        match pushed {
             Ok(()) => Admission::Accepted(response),
             Err(TryPushError::Full(_)) => {
                 Admission::Shed(ShedReason::QueueFull)
@@ -628,6 +804,13 @@ impl EngineHandle {
 
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// The fleet topology: `(class name, workers)` per worker class, in
+    /// declaration order (a single-factory engine reports one "default"
+    /// class).
+    pub fn worker_classes(&self) -> Vec<(String, usize)> {
+        self.shared.classes.clone()
     }
 
     /// Drain and join: close admission, let the workers finish the
@@ -669,8 +852,22 @@ impl EngineHandle {
                           errors.join(" | "));
         }
         let wall = self.started.elapsed().as_secs_f64();
+        // snapshot each class's learned latency model into the report:
+        // heterogeneous runs are judged by their per-class estimates
+        let class_infos: Vec<WorkerClassInfo> = self
+            .shared
+            .classes
+            .iter()
+            .zip(self.shared.controllers.iter())
+            .map(|((name, workers), ctl)| WorkerClassInfo {
+                name: name.clone(),
+                workers: *workers,
+                exec_estimates_ms: ctl.lock().unwrap().exec_estimates(),
+            })
+            .collect();
         Ok(ServeReport::new(completions, sheds, wall, &self.shared.caps,
-                            self.workers))
+                            self.workers)
+            .with_worker_classes(class_infos))
     }
 }
 
@@ -789,6 +986,96 @@ mod tests {
         }
         let report = engine.shutdown().unwrap();
         assert_eq!(report.completions.len(), 16);
+    }
+
+    #[test]
+    fn fleet_of_two_classes_serves_and_reports_both() {
+        let cfg = ServeConfig::sim()
+            .with_queue_bound(64)
+            .with_worker_class(
+                "fast", 2,
+                sim::factory(SimSpec::instant(),
+                             ServeConfig::sim().capacities()))
+            .with_worker_class(
+                "slow", 1,
+                sim::factory(SimSpec::instant(),
+                             ServeConfig::sim().capacities()));
+        assert_eq!(cfg.total_workers(), 3);
+        let engine = ElasticEngine::start_fleet(cfg).unwrap();
+        assert_eq!(engine.workers(), 3);
+        assert_eq!(engine.queue_shards(), 3,
+                   "auto sharding follows the fleet total");
+        assert_eq!(engine.worker_classes(),
+                   vec![("fast".to_string(), 2), ("slow".to_string(), 1)]);
+        let seq = SimSpec::instant().seq_len;
+        let responses: Vec<Response> = (0..24u64)
+            .map(|id| engine.submit(Request::new(id, vec![0; seq])))
+            .collect();
+        for r in responses {
+            r.wait().expect("fleet must serve everything");
+        }
+        let report = engine.shutdown().unwrap();
+        assert_eq!(report.completions.len(), 24);
+        assert_eq!(report.worker_classes.len(), 2);
+        assert!(report.completions.iter().all(
+            |c| c.worker_class == "fast" || c.worker_class == "slow"));
+        // global worker ids partition by declaration order: 0-1 fast,
+        // 2 slow
+        assert!(report.completions.iter().all(|c| match c.worker {
+            0 | 1 => c.worker_class == "fast",
+            2 => c.worker_class == "slow",
+            _ => false,
+        }));
+    }
+
+    #[test]
+    fn start_rejects_configs_that_declare_classes() {
+        let cfg = ServeConfig::sim().with_worker_class(
+            "fast", 1,
+            sim::factory(SimSpec::instant(),
+                         ServeConfig::sim().capacities()));
+        let err = ElasticEngine::start(
+            cfg, sim::factory(SimSpec::instant(),
+                              ServeConfig::sim().capacities()))
+            .err()
+            .expect("start with declared classes must fail");
+        assert!(format!("{err:#}").contains("start_fleet"), "{err:#}");
+    }
+
+    #[test]
+    fn start_fleet_rejects_empty_and_duplicate_topologies() {
+        let err = ElasticEngine::start_fleet(ServeConfig::sim())
+            .err()
+            .expect("empty topology must fail");
+        assert!(format!("{err:#}").contains("no worker classes"),
+                "{err:#}");
+        let caps = ServeConfig::sim().capacities();
+        let cfg = ServeConfig::sim()
+            .with_worker_class(
+                "gpu", 1, sim::factory(SimSpec::instant(), caps.clone()))
+            .with_worker_class(
+                "gpu", 1, sim::factory(SimSpec::instant(), caps));
+        let err = ElasticEngine::start_fleet(cfg)
+            .err()
+            .expect("duplicate class names must fail");
+        assert!(format!("{err:#}").contains("duplicate"), "{err:#}");
+    }
+
+    #[test]
+    fn fleet_init_failure_names_the_class() {
+        let caps = ServeConfig::sim().capacities();
+        let cfg = ServeConfig::sim()
+            .with_worker_class(
+                "ok", 1, sim::factory(SimSpec::instant(), caps))
+            .with_worker_class("broken", 1, |w| {
+                anyhow::bail!("no device for worker {w}")
+            });
+        let err = ElasticEngine::start_fleet(cfg)
+            .err()
+            .expect("failing class factory must fail start_fleet");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("broken") && msg.contains("executor init"),
+                "{msg}");
     }
 
     #[test]

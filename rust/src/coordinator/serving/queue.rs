@@ -19,13 +19,25 @@
 //!    power-of-two-choices: a round-robin probe plus one scrambled
 //!    probe, keep the shallower (ties go to the round-robin probe, so
 //!    every shard is reachable).
-//!  * **Work stealing.**  [`pop_batch_as`] scans shards in ring order
-//!    starting at the worker's own: an idle worker drains a hot
-//!    sibling's shard instead of sleeping.  The ring always takes the
-//!    first available head, so no shard starves.
+//!  * **Deadline-aware work stealing.**  [`pop_batch_as`] scans shards
+//!    in ring order starting at the worker's own: an idle worker drains
+//!    a hot sibling's shard instead of sleeping.  When seeding a batch,
+//!    [`pop_batch_keyed`] peeks every non-empty shard's head and takes
+//!    the one with the *tightest slack* (per the caller's slack
+//!    function — the worker passes remaining deadline budget), so under
+//!    mixed SLO load the run closest to its deadline is served first.
+//!    Ties fall back to ring order.  Two guards keep this honest:
+//!    the peek only engages while the queue holds items flagged urgent
+//!    at push time ([`push_urgent`](AdmissionQueue::push_urgent) — the
+//!    engine flags deadline-carrying requests), so deadline-free
+//!    traffic pays exactly the old first-non-empty-shard cost; and
+//!    every `FAIR_SEED_EVERY`-th seed ignores slack and takes the
+//!    plain ring-order head, so a no-deadline head is served within a
+//!    bounded number of its own worker's batches even under sustained
+//!    deadline'd load (EDF priority, bounded unfairness).
 //!  * **Class-aware batches.**  [`pop_batch_keyed`] seeds a batch with
-//!    the first available item and then only collects items whose key
-//!    matches (skipped items keep their order) — the mechanism behind
+//!    the chosen head and then only collects items whose key matches
+//!    (skipped items keep their order) — the mechanism behind
 //!    SLO-compatible batch formation in the worker (see `batcher.rs`).
 //!  * **Drain-on-close.**  [`close`] wakes every sleeper; a pop that
 //!    returns empty means closed *and* fully drained, exactly as
@@ -127,6 +139,12 @@ impl Doorbell {
     }
 }
 
+/// Every `FAIR_SEED_EVERY`-th batch seed ignores slack and takes the
+/// plain ring-order head: deadline'd traffic gets EDF priority, but a
+/// no-deadline head still gets a guaranteed 1-in-K share of its own
+/// worker's seeds, so its wait is bounded under any load.
+const FAIR_SEED_EVERY: usize = 8;
+
 /// Sharded bounded FIFO queue shared by the submitting clients and the
 /// workers.  See the module docs for the contracts.
 pub struct AdmissionQueue<T> {
@@ -141,6 +159,18 @@ pub struct AdmissionQueue<T> {
     vacancy: Doorbell,
     /// submit-side probe ticket (round-robin base of the two choices)
     ticket: AtomicUsize,
+    /// enqueued items flagged urgent at push time (finite deadline
+    /// slack).  The deadline-aware seed peek is skipped while this is
+    /// zero, so deadline-free traffic never pays the cross-shard peek.
+    /// (Items popped through a slack-less path — e.g. the shutdown
+    /// drain via [`pop_batch`](AdmissionQueue::pop_batch) — are not
+    /// decremented; the counter may over-approximate, which only means
+    /// a redundant peek, never a missed urgent item.)
+    urgent: AtomicUsize,
+    /// seed round counter driving the `FAIR_SEED_EVERY` escape; starts
+    /// at 1 so the first urgent seed is slack-aware (deterministic for
+    /// tests and for the common lightly-loaded case)
+    seed_tick: AtomicUsize,
 }
 
 impl<T> AdmissionQueue<T> {
@@ -167,6 +197,8 @@ impl<T> AdmissionQueue<T> {
             doorbell: Doorbell::new(),
             vacancy: Doorbell::new(),
             ticket: AtomicUsize::new(0),
+            urgent: AtomicUsize::new(0),
+            seed_tick: AtomicUsize::new(1),
         }
     }
 
@@ -232,12 +264,25 @@ impl<T> AdmissionQueue<T> {
     /// closed (shutdown or a failed worker) so the caller can account
     /// for it.
     pub fn push(&self, item: T) -> Result<(), T> {
+        self.push_with(item, false)
+    }
+
+    /// Like [`push`](Self::push), but flags the item *urgent* — it
+    /// carries a finite deadline slack, so the deadline-aware seed peek
+    /// must engage while it is enqueued.  The engine routes
+    /// deadline-carrying requests here; urgency must agree with the pop
+    /// side's slack function (`urgent` ⟺ `slack(item).is_finite()`).
+    pub fn push_urgent(&self, item: T) -> Result<(), T> {
+        self.push_with(item, true)
+    }
+
+    fn push_with(&self, item: T, urgent: bool) -> Result<(), T> {
         loop {
             if self.closed.load(Ordering::SeqCst) {
                 return Err(item);
             }
             if self.try_reserve() {
-                return self.deposit_reserved(item);
+                return self.deposit_reserved(item, urgent);
             }
             self.vacancy.wait_until(None, || {
                 self.closed.load(Ordering::SeqCst)
@@ -251,13 +296,23 @@ impl<T> AdmissionQueue<T> {
     /// the admission-verdict path, where "would block" must surface as
     /// an explicit `Full`.
     pub fn try_push(&self, item: T) -> Result<(), TryPushError<T>> {
+        self.try_push_with(item, false)
+    }
+
+    /// Non-blocking [`push_urgent`](Self::push_urgent).
+    pub fn try_push_urgent(&self, item: T) -> Result<(), TryPushError<T>> {
+        self.try_push_with(item, true)
+    }
+
+    fn try_push_with(&self, item: T, urgent: bool)
+                     -> Result<(), TryPushError<T>> {
         if self.closed.load(Ordering::SeqCst) {
             return Err(TryPushError::Closed(item));
         }
         if !self.try_reserve() {
             return Err(TryPushError::Full(item));
         }
-        self.deposit_reserved(item).map_err(TryPushError::Closed)
+        self.deposit_reserved(item, urgent).map_err(TryPushError::Closed)
     }
 
     /// Second half of a push that already holds a reservation: re-check
@@ -271,73 +326,179 @@ impl<T> AdmissionQueue<T> {
     /// [`pop_batch_keyed`]), a reservation made before close is always
     /// drained by a worker, and one that races close is undone here so
     /// the caller can resolve the item itself.
-    fn deposit_reserved(&self, item: T) -> Result<(), T> {
+    fn deposit_reserved(&self, item: T, urgent: bool) -> Result<(), T> {
         if self.closed.load(Ordering::SeqCst) {
             self.depth.fetch_sub(1, Ordering::SeqCst);
             self.vacancy.ring();
             return Err(item);
         }
+        if urgent {
+            // incremented BEFORE the deposit: a consumer can only take
+            // (and decrement for) the item after it lands in a shard,
+            // so the counter never underflows
+            self.urgent.fetch_add(1, Ordering::SeqCst);
+        }
         self.deposit(item);
         Ok(())
     }
 
-    /// Scan shards in ring order from `worker`, moving out up to `max`
-    /// total items whose key matches `batch_key` (seeding the key from
-    /// the first available item when unset — the first non-empty
-    /// shard's head is always taken, so no shard or class starves).
-    /// Skipped items keep their order.  Decrements the aggregate gauge
-    /// by what was taken and rings producers waiting for room.
-    ///
-    /// Cost note: a keyed sweep over a shard with incompatible items is
-    /// O(shard length) (pop + rebuild under the shard lock).  That is
-    /// the inherent price of selective dequeue; it is bounded by the
-    /// shard's share of the aggregate bound, and the phase-2 fill loop
-    /// only re-sweeps on a depth change within `max_batch_wait`, so
-    /// homogeneous traffic (the common case) never pays it.
-    fn collect_into<K, F>(&self, worker: usize, max: usize, key: &F,
-                          batch_key: &mut Option<K>, out: &mut Vec<T>)
+    /// Saturating decrement of the urgent gauge (a slack-less pop path
+    /// may have skipped decrements, so never trust it to cover `n`).
+    fn urgent_sub(&self, n: usize) {
+        let mut cur = self.urgent.load(Ordering::SeqCst);
+        while cur > 0 {
+            let next = cur.saturating_sub(n);
+            match self.urgent.compare_exchange(
+                cur, next, Ordering::SeqCst, Ordering::SeqCst)
+            {
+                Ok(_) => return,
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// Move up to `max - out.len()` key-compatible items out of one
+    /// shard (seeding `batch_key` from the shard's head when unset).
+    /// Skipped items keep their order.  The caller owns the aggregate
+    /// gauge accounting.
+    fn sweep_shard<K, F>(&self, s: usize, max: usize, key: &F,
+                         batch_key: &mut Option<K>, out: &mut Vec<T>)
     where
         K: PartialEq,
         F: Fn(&T) -> K,
     {
+        let shard = &self.shards[s];
+        if shard.len.load(Ordering::SeqCst) == 0 {
+            return;
+        }
+        let mut items = shard.items.lock().unwrap();
+        let mut skipped: VecDeque<T> = VecDeque::new();
+        while out.len() < max {
+            let Some(it) = items.pop_front() else { break };
+            let matches = match batch_key {
+                None => true,
+                Some(k) => key(&it) == *k,
+            };
+            if matches {
+                if batch_key.is_none() {
+                    *batch_key = Some(key(&it));
+                }
+                out.push(it);
+            } else {
+                skipped.push_back(it);
+            }
+        }
+        if !skipped.is_empty() {
+            // skipped items go back in front of the untouched tail,
+            // in their original order
+            skipped.extend(items.drain(..));
+            *items = skipped;
+        }
+        shard.len.store(items.len(), Ordering::SeqCst);
+    }
+
+    /// Scan shards from `worker`, moving out up to `max` total items
+    /// whose key matches `batch_key`.  When the key is unset (batch
+    /// seeding) and urgent items are enqueued, the seed is
+    /// **deadline-aware**: every non-empty shard's head is peeked and
+    /// the tightest-slack one (smallest `slack(head)`) is taken first,
+    /// ring order from the worker's own shard breaking ties; every
+    /// `FAIR_SEED_EVERY`-th such seed skips the peek and takes the
+    /// plain ring-order head instead (bounded unfairness — see the
+    /// module docs).  With no urgent items enqueued the seed is plain
+    /// ring order, exactly the pre-deadline-aware behavior.  The fill
+    /// sweep after the seed is plain ring order.  Skipped items keep
+    /// their order.  Decrements the aggregate gauge (and the urgent
+    /// gauge) by what was taken and rings producers waiting for room.
+    ///
+    /// Cost notes: the seed peek is one brief lock per non-empty shard,
+    /// paid once per batch and only while deadline'd items are enqueued
+    /// (single-shard and deadline-free queues skip it entirely); a
+    /// keyed sweep over a shard with incompatible items is O(shard
+    /// length) (pop + rebuild under the shard lock).  That is the
+    /// inherent price of selective dequeue; it is bounded by the
+    /// shard's share of the aggregate bound, and the phase-2 fill loop
+    /// only re-sweeps on a depth change within `max_batch_wait`, so
+    /// homogeneous traffic (the common case) never pays it.
+    fn collect_into<K, F, S>(&self, worker: usize, max: usize, key: &F,
+                             slack: &S, batch_key: &mut Option<K>,
+                             out: &mut Vec<T>)
+    where
+        K: PartialEq,
+        F: Fn(&T) -> K,
+        S: Fn(&T) -> f64,
+    {
         let n = self.shards.len();
         let start = worker % n;
         let before = out.len();
+        let mut seeded: Option<usize> = None;
+        // the deadline-aware peek only engages when urgent items are
+        // actually enqueued (deadline-free traffic — the common case —
+        // pays exactly the old first-non-empty-shard seed), and every
+        // FAIR_SEED_EVERY-th urgent seed falls back to ring order so a
+        // no-deadline head is still served within a bounded number of
+        // its own worker's batches
+        if batch_key.is_none()
+            && n > 1
+            && self.urgent.load(Ordering::SeqCst) > 0
+            && self.seed_tick.fetch_add(1, Ordering::Relaxed)
+                % FAIR_SEED_EVERY
+                != 0
+        {
+            // deadline-aware seed: prefer the tightest-slack head
+            let mut best: Option<(usize, f64)> = None;
+            for i in 0..n {
+                let s = (start + i) % n;
+                let shard = &self.shards[s];
+                if shard.len.load(Ordering::SeqCst) == 0 {
+                    continue;
+                }
+                let items = shard.items.lock().unwrap();
+                if let Some(head) = items.front() {
+                    let sl = slack(head);
+                    // strict < keeps the ring-order tiebreak
+                    let better = match best {
+                        None => true,
+                        Some((_, b)) => sl < b,
+                    };
+                    if better {
+                        best = Some((s, sl));
+                    }
+                }
+            }
+            if let Some((s, _)) = best {
+                self.sweep_shard(s, max, key, batch_key, out);
+                // the seed sweep took everything compatible there; the
+                // racing case (another worker emptied it first) falls
+                // through to normal ring-order seeding below
+                if batch_key.is_some() {
+                    seeded = Some(s);
+                }
+            }
+        }
         for i in 0..n {
             if out.len() >= max {
                 break;
             }
-            let shard = &self.shards[(start + i) % n];
-            if shard.len.load(Ordering::SeqCst) == 0 {
+            let s = (start + i) % n;
+            if seeded == Some(s) {
                 continue;
             }
-            let mut items = shard.items.lock().unwrap();
-            let mut skipped: VecDeque<T> = VecDeque::new();
-            while out.len() < max {
-                let Some(it) = items.pop_front() else { break };
-                let matches = match batch_key {
-                    None => true,
-                    Some(k) => key(&it) == *k,
-                };
-                if matches {
-                    if batch_key.is_none() {
-                        *batch_key = Some(key(&it));
-                    }
-                    out.push(it);
-                } else {
-                    skipped.push_back(it);
-                }
-            }
-            if !skipped.is_empty() {
-                // skipped items go back in front of the untouched tail,
-                // in their original order
-                skipped.extend(items.drain(..));
-                *items = skipped;
-            }
-            shard.len.store(items.len(), Ordering::SeqCst);
+            self.sweep_shard(s, max, key, batch_key, out);
         }
         let taken = out.len() - before;
         if taken > 0 {
+            // retire taken urgent items from the gauge (skip the slack
+            // calls entirely when nothing urgent is enqueued)
+            if self.urgent.load(Ordering::SeqCst) > 0 {
+                let urgent_taken = out[before..]
+                    .iter()
+                    .filter(|it| slack(it).is_finite())
+                    .count();
+                if urgent_taken > 0 {
+                    self.urgent_sub(urgent_taken);
+                }
+            }
             self.depth.fetch_sub(taken, Ordering::SeqCst);
             self.vacancy.ring();
         }
@@ -352,24 +513,28 @@ impl<T> AdmissionQueue<T> {
     /// from siblings in ring order when it runs dry.
     pub fn pop_batch_as(&self, worker: usize, max: usize,
                         wait: Duration) -> Vec<T> {
-        self.pop_batch_keyed(worker, max, wait, |_| ())
+        self.pop_batch_keyed(worker, max, wait, |_| (), |_| f64::INFINITY)
     }
 
-    /// Class-aware pop: like [`pop_batch_as`], but the first available
-    /// item seeds a batch key and only key-equal items join the batch
-    /// (the worker uses the SLO compatibility key from `batcher.rs`).
-    /// Blocks until at least one item is available (or the queue is
-    /// closed), then waits at most `wait` for compatible items to fill
-    /// the batch.  The fill target is clamped to the aggregate bound:
-    /// with `bound < max` the queue can never hold a full batch, so
-    /// "bound waiting" is "full" and the worker must not burn the whole
-    /// `wait` every cycle.  An empty return means closed *and* fully
-    /// drained — the worker's signal to exit.
-    pub fn pop_batch_keyed<K, F>(&self, worker: usize, max: usize,
-                                 wait: Duration, key: F) -> Vec<T>
+    /// Class-aware, deadline-aware pop: the tightest-slack available
+    /// head (per `slack`; ring order from `worker`'s own shard breaks
+    /// ties) seeds a batch key and only key-equal items join the batch
+    /// (the worker uses the SLO compatibility key from `batcher.rs` and
+    /// remaining deadline budget as slack; `f64::INFINITY` = no
+    /// deadline).  Blocks until at least one item is available (or the
+    /// queue is closed), then waits at most `wait` for compatible items
+    /// to fill the batch.  The fill target is clamped to the aggregate
+    /// bound: with `bound < max` the queue can never hold a full batch,
+    /// so "bound waiting" is "full" and the worker must not burn the
+    /// whole `wait` every cycle.  An empty return means closed *and*
+    /// fully drained — the worker's signal to exit.
+    pub fn pop_batch_keyed<K, F, S>(&self, worker: usize, max: usize,
+                                    wait: Duration, key: F, slack: S)
+                                    -> Vec<T>
     where
         K: PartialEq,
         F: Fn(&T) -> K,
+        S: Fn(&T) -> f64,
     {
         let max = max.max(1);
         let target = max.min(self.bound);
@@ -379,7 +544,8 @@ impl<T> AdmissionQueue<T> {
         // phase 1: block until at least one item is in hand, or the
         // queue is closed and fully drained
         loop {
-            self.collect_into(worker, max, &key, &mut batch_key, &mut out);
+            self.collect_into(worker, max, &key, &slack, &mut batch_key,
+                              &mut out);
             if !out.is_empty() {
                 break;
             }
@@ -430,12 +596,16 @@ impl<T> AdmissionQueue<T> {
         if out.len() < target && !wait.is_zero() {
             let deadline = Instant::now() + wait;
             while out.len() < target && !self.closed.load(Ordering::SeqCst) {
-                let seen = self.depth.load(Ordering::SeqCst);
-                self.collect_into(worker, max, &key, &mut batch_key,
+                self.collect_into(worker, max, &key, &slack, &mut batch_key,
                                   &mut out);
                 if out.len() >= target {
                     break;
                 }
+                // `seen` is the *post-sweep* depth: a partial take above
+                // changes the gauge, and capturing the pre-sweep value
+                // made the wait below return immediately — one wasted
+                // self-wake + re-sweep per partial batch
+                let seen = self.depth.load(Ordering::SeqCst);
                 if !self.doorbell.wait_until(Some(deadline), || {
                     self.depth.load(Ordering::SeqCst) != seen
                         || self.closed.load(Ordering::SeqCst)
@@ -444,7 +614,8 @@ impl<T> AdmissionQueue<T> {
                 }
             }
             // final sweep: a deposit may have raced the close/timeout
-            self.collect_into(worker, max, &key, &mut batch_key, &mut out);
+            self.collect_into(worker, max, &key, &slack, &mut batch_key,
+                              &mut out);
         }
         if self.depth.load(Ordering::SeqCst) > 0 {
             // hand remaining work to an idle sibling promptly
@@ -478,6 +649,26 @@ impl<T> AdmissionQueue<T> {
     #[cfg(test)]
     fn shard_len(&self, s: usize) -> usize {
         self.shards[s].len.load(Ordering::SeqCst)
+    }
+
+    /// Deterministic shard placement for tests (bypasses the p2c pick).
+    #[cfg(test)]
+    fn push_to_shard(&self, s: usize, item: T) {
+        assert!(self.try_reserve(), "push_to_shard over the bound");
+        self.deposit_to(s, item);
+    }
+
+    /// [`push_to_shard`](Self::push_to_shard) for an urgent item.
+    #[cfg(test)]
+    fn push_to_shard_urgent(&self, s: usize, item: T) {
+        assert!(self.try_reserve(), "push_to_shard over the bound");
+        self.urgent.fetch_add(1, Ordering::SeqCst);
+        self.deposit_to(s, item);
+    }
+
+    #[cfg(test)]
+    fn urgent_len(&self) -> usize {
+        self.urgent.load(Ordering::SeqCst)
     }
 }
 
@@ -685,11 +876,12 @@ mod tests {
             q.push(id).unwrap();
         }
         let key = |id: &u64| *id % 2;
-        let a = q.pop_batch_keyed(0, 8, Duration::ZERO, key);
+        let slack = |_: &u64| f64::INFINITY;
+        let a = q.pop_batch_keyed(0, 8, Duration::ZERO, key, slack);
         assert_eq!(a, vec![0, 2, 4],
                    "head seeds the key; the other class is skipped");
         assert_eq!(q.len(), 3);
-        let b = q.pop_batch_keyed(0, 8, Duration::ZERO, key);
+        let b = q.pop_batch_keyed(0, 8, Duration::ZERO, key, slack);
         assert_eq!(b, vec![1, 3, 5], "skipped items kept their order");
         assert!(q.is_empty());
     }
@@ -700,9 +892,121 @@ mod tests {
         for id in 0..8u64 {
             q.push(id).unwrap();
         }
-        let got = q.pop_batch_keyed(0, 3, Duration::ZERO, |_| ());
+        let got = q.pop_batch_keyed(0, 3, Duration::ZERO, |_| (),
+                                    |_| f64::INFINITY);
         assert_eq!(got, vec![0, 1, 2]);
         assert_eq!(q.len(), 5);
+    }
+
+    #[test]
+    fn steal_seed_prefers_tightest_slack_head() {
+        // satellite acceptance: three shards, one item each.  Ring
+        // order from worker 0 would seed shard 0's relaxed head (it is
+        // also the oldest admission); deadline-aware seeding must take
+        // the tightest-slack compatible head first — shard 1, then
+        // shard 2, and the relaxed head last.
+        let q = AdmissionQueue::sharded(16, 3);
+        q.push_to_shard(0, 0u64); // relaxed: no deadline
+        q.push_to_shard_urgent(1, 1); // tight: 5 ms of slack
+        q.push_to_shard_urgent(2, 2); // medium: 50 ms of slack
+        let slack = |id: &u64| [f64::INFINITY, 5.0, 50.0][*id as usize];
+        // every id is its own class, so each pop returns only its seed
+        let key = |id: &u64| *id;
+        let a = q.pop_batch_keyed(0, 4, Duration::ZERO, key, slack);
+        assert_eq!(a, vec![1], "tightest-slack head must seed first");
+        assert_eq!(q.urgent_len(), 1, "taken urgent items must retire");
+        let b = q.pop_batch_keyed(0, 4, Duration::ZERO, key, slack);
+        assert_eq!(b, vec![2], "then the next-tightest");
+        let c = q.pop_batch_keyed(0, 4, Duration::ZERO, key, slack);
+        assert_eq!(c, vec![0], "the relaxed head goes last");
+        assert!(q.is_empty());
+        assert_eq!(q.urgent_len(), 0);
+    }
+
+    #[test]
+    fn seed_peek_disengages_without_urgent_items() {
+        // deadline-free traffic must pay the plain ring-order seed: a
+        // later-shard head with (nominally) tighter slack is NOT
+        // preferred when nothing was pushed urgent — the slack peek is
+        // gated on the urgent gauge, not on the slack function
+        let q = AdmissionQueue::sharded(16, 2);
+        q.push_to_shard(0, 0u64);
+        q.push_to_shard(1, 1);
+        let slack = |id: &u64| if *id == 1 { 1.0 } else { f64::INFINITY };
+        let key = |id: &u64| *id;
+        let got = q.pop_batch_keyed(0, 1, Duration::ZERO, key, slack);
+        assert_eq!(got, vec![0],
+                   "no urgent items enqueued => ring-order seed");
+    }
+
+    #[test]
+    fn fair_seed_escape_bounds_relaxed_head_wait() {
+        // sustained urgent load on shard 1 vs one relaxed head on
+        // shard 0: slack-aware seeds serve the urgent heads, but the
+        // FAIR_SEED_EVERY-th seed must fall back to ring order and
+        // serve the relaxed head — its wait is bounded, not starved
+        let q = AdmissionQueue::sharded(32, 2);
+        q.push_to_shard(0, 100u64); // relaxed: no deadline
+        for id in 0..10u64 {
+            q.push_to_shard_urgent(1, id); // tight, tightest first
+        }
+        // closed so the final pop returns empty instead of blocking
+        // (pops still drain everything queued before the close)
+        q.close();
+        let slack = |id: &u64| {
+            if *id < 100 { *id as f64 + 1.0 } else { f64::INFINITY }
+        };
+        let key = |id: &u64| *id; // every pop takes exactly its seed
+        let mut order = Vec::new();
+        while let Some(&got) =
+            q.pop_batch_keyed(0, 1, Duration::ZERO, key, slack).first()
+        {
+            order.push(got);
+        }
+        // seed_tick starts at 1, so seeds 1..=7 are slack-aware (urgent
+        // heads 0..7 in FIFO order), the 8th is the ring-order escape
+        // (the relaxed head), then slack-aware resumes
+        assert_eq!(order, vec![0, 1, 2, 3, 4, 5, 6, 100, 7, 8, 9],
+                   "relaxed head must be served by the fairness escape");
+        assert_eq!(q.urgent_len(), 0);
+    }
+
+    #[test]
+    fn steal_seed_ties_break_in_ring_order() {
+        // equal slack everywhere (the all-best-effort case): the seed
+        // must fall back to ring order from the worker's own shard, so
+        // no shard starves
+        let q = AdmissionQueue::sharded(16, 3);
+        q.push_to_shard(0, 0u64);
+        q.push_to_shard(1, 1);
+        q.push_to_shard(2, 2);
+        let got =
+            q.pop_batch_as(2, 1, Duration::ZERO);
+        assert_eq!(got, vec![2], "worker 2's ring starts at its own shard");
+        let got = q.pop_batch_as(2, 1, Duration::ZERO);
+        assert_eq!(got, vec![0], "then wraps in ring order");
+    }
+
+    #[test]
+    fn seed_slack_only_picks_the_head_batch_still_groups_by_key() {
+        // the tight head seeds the batch; key-compatible items from
+        // other shards still join it, incompatible ones stay queued
+        let q = AdmissionQueue::sharded(16, 2);
+        q.push_to_shard(0, 10u64); // relaxed (even = key 0)
+        q.push_to_shard_urgent(0, 13); // tight (odd = key 1), buried
+        q.push_to_shard_urgent(1, 11); // tight (odd = key 1)
+        // slack: odd ids are tight, even ids have no deadline
+        let slack =
+            |id: &u64| if *id % 2 == 1 { 1.0 } else { f64::INFINITY };
+        let key = |id: &u64| *id % 2;
+        let got = q.pop_batch_keyed(0, 4, Duration::ZERO, key, slack);
+        // shard 1's head (11) is the tightest *head*; 13 is tight too
+        // but buried behind a relaxed head, so it cannot seed — it
+        // joins 11's batch as a key-compatible steal instead
+        assert_eq!(got, vec![11, 13],
+                   "tight head seeds; compatible buried item joins");
+        let rest = q.pop_batch_keyed(0, 4, Duration::ZERO, key, slack);
+        assert_eq!(rest, vec![10], "the relaxed head is served next");
     }
 
     #[test]

@@ -1,5 +1,8 @@
 //! Completion records and the aggregate serving report, including the
-//! per-SLO-class sections the handle API's contracts are judged by.
+//! per-SLO-class sections the handle API's contracts are judged by and
+//! the per-worker-class sections a heterogeneous fleet is judged by
+//! (which hardware class served what, at which tiers, with which
+//! learned latency model).
 
 use super::tier_matches;
 use crate::metrics::{summarize, Summary};
@@ -20,6 +23,9 @@ pub struct Completion {
     pub tier: f32,
     /// index of the worker that executed the request's batch
     pub worker: usize,
+    /// name of the worker class that executed the request's batch
+    /// ("default" for a single-factory engine)
+    pub worker_class: String,
     pub queue_ms: f64,
     pub exec_ms: f64,
     pub total_ms: f64,
@@ -33,6 +39,8 @@ pub struct Completion {
 pub struct ShedRecord {
     pub id: u64,
     pub class: String,
+    /// worker class of the worker that shed it
+    pub worker_class: String,
 }
 
 /// Per-SLO-class section of the report.
@@ -47,6 +55,36 @@ pub struct ClassStats {
     pub mean_capacity: f64,
 }
 
+/// Identity and learned state of one worker class, snapshotted by the
+/// engine at shutdown.
+#[derive(Debug, Clone)]
+pub struct WorkerClassInfo {
+    pub name: String,
+    pub workers: usize,
+    /// the class controller's per-tier exec-time EWMAs, `(tier,
+    /// ms-if-observed)` in ladder order — `None` means this class never
+    /// executed a batch at that tier
+    pub exec_estimates_ms: Vec<(f32, Option<f64>)>,
+}
+
+/// Per-worker-class section of the report: how one hardware class
+/// fared behind the shared queue — served/shed split, latency, tier
+/// mix, and the exec-time model its own controller learned.
+#[derive(Debug, Clone)]
+pub struct WorkerClassStats {
+    pub class: String,
+    pub workers: usize,
+    pub served: usize,
+    /// requests this class's workers shed for an expired deadline
+    pub shed: usize,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub mean_capacity: f64,
+    /// completions per configured tier, same ladder as the aggregate
+    pub tier_counts: Vec<(f32, usize)>,
+    pub exec_estimates_ms: Vec<(f32, Option<f64>)>,
+}
+
 /// Aggregate serving report.
 #[derive(Debug, Clone)]
 pub struct ServeReport {
@@ -55,6 +93,12 @@ pub struct ServeReport {
     pub wall_secs: f64,
     pub tier_counts: Vec<(f32, usize)>,
     pub workers: usize,
+    /// worker-class identities + learned estimates (engine shutdown
+    /// attaches these via [`with_worker_classes`]; hand-built reports
+    /// may leave it empty)
+    ///
+    /// [`with_worker_classes`]: ServeReport::with_worker_classes
+    pub worker_classes: Vec<WorkerClassInfo>,
 }
 
 impl ServeReport {
@@ -71,7 +115,22 @@ impl ServeReport {
                 tc.1 += 1;
             }
         }
-        ServeReport { completions, sheds, wall_secs, tier_counts, workers }
+        ServeReport {
+            completions,
+            sheds,
+            wall_secs,
+            tier_counts,
+            workers,
+            worker_classes: Vec::new(),
+        }
+    }
+
+    /// Attach the fleet's worker-class identities and their learned
+    /// exec-time estimates (the engine does this at shutdown).
+    pub fn with_worker_classes(mut self, classes: Vec<WorkerClassInfo>)
+                               -> ServeReport {
+        self.worker_classes = classes;
+        self
     }
 
     pub fn throughput_rps(&self) -> f64 {
@@ -156,6 +215,78 @@ impl ServeReport {
             })
             .collect()
     }
+
+    /// Per-worker-class sections, in fleet declaration order: which
+    /// hardware class served what.  Classes come from the attached
+    /// [`WorkerClassInfo`]s plus any class names present only in the
+    /// records (hand-built reports), so no executing class is hidden.
+    pub fn worker_class_sections(&self) -> Vec<WorkerClassStats> {
+        let mut classes: Vec<(String, usize, Vec<(f32, Option<f64>)>)> =
+            self.worker_classes
+                .iter()
+                .map(|i| {
+                    (i.name.clone(), i.workers, i.exec_estimates_ms.clone())
+                })
+                .collect();
+        let names = self
+            .completions
+            .iter()
+            .map(|c| c.worker_class.as_str())
+            .chain(self.sheds.iter().map(|s| s.worker_class.as_str()));
+        for name in names {
+            if !classes.iter().any(|(n, _, _)| n == name) {
+                classes.push((name.to_string(), 0, Vec::new()));
+            }
+        }
+        classes
+            .into_iter()
+            .map(|(name, workers, exec_estimates_ms)| {
+                let mut lat: Vec<f64> = Vec::new();
+                let mut cap = 0.0f64;
+                let mut tier_counts: Vec<(f32, usize)> = self
+                    .tier_counts
+                    .iter()
+                    .map(|(t, _)| (*t, 0usize))
+                    .collect();
+                for c in self
+                    .completions
+                    .iter()
+                    .filter(|c| c.worker_class == name)
+                {
+                    lat.push(c.total_ms);
+                    cap += c.tier as f64;
+                    if let Some(tc) = tier_counts
+                        .iter_mut()
+                        .find(|(t, _)| tier_matches(*t, c.tier))
+                    {
+                        tc.1 += 1;
+                    }
+                }
+                lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let served = lat.len();
+                let shed = self
+                    .sheds
+                    .iter()
+                    .filter(|s| s.worker_class == name)
+                    .count();
+                WorkerClassStats {
+                    class: name,
+                    workers,
+                    served,
+                    shed,
+                    p50_ms: percentile_nearest_rank(&lat, 0.5),
+                    p99_ms: percentile_nearest_rank(&lat, 0.99),
+                    mean_capacity: if served == 0 {
+                        0.0
+                    } else {
+                        cap / served as f64
+                    },
+                    tier_counts,
+                    exec_estimates_ms,
+                }
+            })
+            .collect()
+    }
 }
 
 /// Nearest-rank percentile over a *sorted* slice.  `q <= 0` returns the
@@ -180,6 +311,7 @@ mod tests {
             class: "best-effort".into(),
             tier: 1.0,
             worker: 0,
+            worker_class: "default".into(),
             queue_ms: 0.0,
             exec_ms: ms,
             total_ms: ms,
@@ -267,8 +399,16 @@ mod tests {
         tight.tier = 0.25;
         completions.push(tight);
         let sheds = vec![
-            ShedRecord { id: 101, class: "tight".into() },
-            ShedRecord { id: 102, class: "tight".into() },
+            ShedRecord {
+                id: 101,
+                class: "tight".into(),
+                worker_class: "default".into(),
+            },
+            ShedRecord {
+                id: 102,
+                class: "tight".into(),
+                worker_class: "default".into(),
+            },
         ];
         let r = ServeReport::new(completions, sheds, 1.0, &[1.0, 0.25], 1);
         let sections = r.class_sections();
@@ -288,13 +428,81 @@ mod tests {
     fn class_sections_include_fully_shed_classes() {
         // a class whose every request was shed must still get a section
         // (served = 0) — otherwise the report hides the starved class
-        let sheds =
-            vec![ShedRecord { id: 0, class: "starved".into() }];
+        let sheds = vec![ShedRecord {
+            id: 0,
+            class: "starved".into(),
+            worker_class: "default".into(),
+        }];
         let r = ServeReport::new(Vec::new(), sheds, 1.0, &[1.0], 1);
         let sections = r.class_sections();
         assert_eq!(sections.len(), 1);
         assert_eq!(sections[0].class, "starved");
         assert_eq!((sections[0].served, sections[0].shed), (0, 1));
         assert_eq!(sections[0].mean_capacity, 0.0);
+    }
+
+    #[test]
+    fn worker_class_sections_partition_by_executing_class() {
+        // 4 completions on "fast" at tier 1.0, 2 on "slow" at tier
+        // 0.25, one slow-side shed: sections must partition by the
+        // executing class and surface each class's learned estimates
+        let mut completions = Vec::new();
+        for i in 0..6u64 {
+            let mut c = completion(i, 1.0 + i as f64);
+            if i < 4 {
+                c.worker_class = "fast".into();
+            } else {
+                c.worker_class = "slow".into();
+                c.tier = 0.25;
+                c.worker = 1;
+            }
+            completions.push(c);
+        }
+        let sheds = vec![ShedRecord {
+            id: 100,
+            class: "tight".into(),
+            worker_class: "slow".into(),
+        }];
+        let infos = vec![
+            WorkerClassInfo {
+                name: "fast".into(),
+                workers: 1,
+                exec_estimates_ms: vec![(1.0, Some(0.5)), (0.25, None)],
+            },
+            WorkerClassInfo {
+                name: "slow".into(),
+                workers: 1,
+                exec_estimates_ms: vec![(1.0, Some(40.0)), (0.25, None)],
+            },
+        ];
+        let r = ServeReport::new(completions, sheds, 1.0, &[1.0, 0.25], 2)
+            .with_worker_classes(infos);
+        let sections = r.worker_class_sections();
+        assert_eq!(sections.len(), 2);
+        let fast = sections.iter().find(|s| s.class == "fast").unwrap();
+        assert_eq!((fast.served, fast.shed, fast.workers), (4, 0, 1));
+        assert_eq!(fast.mean_capacity, 1.0);
+        assert_eq!(fast.tier_counts, vec![(1.0, 4), (0.25, 0)]);
+        assert_eq!(fast.exec_estimates_ms[0], (1.0, Some(0.5)));
+        let slow = sections.iter().find(|s| s.class == "slow").unwrap();
+        assert_eq!((slow.served, slow.shed), (2, 1));
+        assert!((slow.mean_capacity - 0.25).abs() < 1e-9);
+        assert_eq!(slow.tier_counts, vec![(1.0, 0), (0.25, 2)]);
+        assert_eq!(slow.exec_estimates_ms[0], (1.0, Some(40.0)));
+    }
+
+    #[test]
+    fn worker_class_sections_include_classes_absent_from_infos() {
+        // a hand-built report with no attached infos must still derive
+        // a section for every executing class it has records for
+        let mut c = completion(0, 2.0);
+        c.worker_class = "mystery".into();
+        let r = ServeReport::new(vec![c], Vec::new(), 1.0, &[1.0], 1);
+        let sections = r.worker_class_sections();
+        assert_eq!(sections.len(), 1);
+        assert_eq!(sections[0].class, "mystery");
+        assert_eq!(sections[0].served, 1);
+        assert_eq!(sections[0].workers, 0, "unknown fleet size reads 0");
+        assert!(sections[0].exec_estimates_ms.is_empty());
     }
 }

@@ -207,13 +207,52 @@ pub fn pipeline_point(spec: SimSpec, workers: usize, shards: usize,
     engine.shutdown()
 }
 
+/// Drive one hermetic *heterogeneous* sim-pipeline point: a named
+/// worker class per `(name, spec, workers)` entry — e.g. a fast-GPU
+/// class and a slow-CPU class with very different `SimSpec` latency
+/// models — behind one sharded queue, flood-submit `n` requests, wait
+/// every response out, and return the report (whose
+/// `worker_class_sections` carry each class's tier mix and learned
+/// exec estimates).  All specs must agree on `seq_len` (one token
+/// shape per engine); batch sizes may differ per class.
+pub fn pipeline_point_classes(classes: &[(&str, SimSpec, usize)],
+                              shards: usize, n: usize)
+                              -> Result<super::ServeReport> {
+    anyhow::ensure!(!classes.is_empty(), "no worker classes given");
+    let seq_len = classes[0].1.seq_len;
+    anyhow::ensure!(
+        classes.iter().all(|(_, s, _)| s.seq_len == seq_len),
+        "worker classes must share one seq_len");
+    let mut cfg = super::ServeConfig::sim()
+        .with_queue_shards(shards)
+        .with_queue_bound(128)
+        .with_max_batch_wait(Duration::from_micros(200));
+    let caps = cfg.capacities();
+    for (name, spec, workers) in classes {
+        cfg = cfg.with_worker_class(name, *workers,
+                                    factory(*spec, caps.clone()));
+    }
+    let engine = super::ElasticEngine::start_fleet(cfg)?;
+    let responses: Vec<super::Response> = (0..n as u64)
+        .map(|id| engine.submit(super::Request::new(id, vec![1; seq_len])))
+        .collect();
+    for r in responses {
+        r.wait()
+            .map_err(|e| anyhow::anyhow!("hetero sim serve failed: {e}"))?;
+    }
+    engine.shutdown()
+}
+
 /// One row of the machine-readable sim-pipeline record
 /// (`BENCH_serving.json`).
 pub struct BenchRow {
-    /// topology label: "shared" (1 shard) or "sharded" (1 per worker)
+    /// topology label: "shared" (1 shard), "sharded" (1 per worker), or
+    /// "hetero" (sharded + heterogeneous worker classes)
     pub queue: &'static str,
     pub workers: usize,
     pub shards: usize,
+    /// worker-class topology, e.g. "fast=2:slow=2"; empty = homogeneous
+    pub classes: String,
     pub report: super::ServeReport,
 }
 
@@ -239,10 +278,11 @@ pub fn write_bench_json(path: &std::path::Path, source: &str,
     let results: Vec<Value> = rows
         .iter()
         .map(|r| {
-            Value::Obj(vec![
+            let mut fields = vec![
                 ("queue".into(), Value::Str(r.queue.to_string())),
                 ("workers".into(), Value::Num(r.workers as f64)),
                 ("shards".into(), Value::Num(r.shards as f64)),
+                ("worker_classes".into(), Value::Str(r.classes.clone())),
                 ("req_per_s".into(),
                  Value::Num(r.report.throughput_rps())),
                 ("p50_ms".into(), Value::Num(r.report.latency_p(0.5))),
@@ -251,7 +291,28 @@ pub fn write_bench_json(path: &std::path::Path, source: &str,
                  Value::Num(r.report.mean_capacity())),
                 ("served".into(),
                  Value::Num(r.report.completions.len() as f64)),
-            ])
+            ];
+            if r.report.worker_classes.len() > 1 {
+                // heterogeneous rows also record how each device class
+                // fared — the per-class controllers are the point
+                let secs: Vec<Value> = r
+                    .report
+                    .worker_class_sections()
+                    .into_iter()
+                    .map(|s| {
+                        Value::Obj(vec![
+                            ("class".into(), Value::Str(s.class)),
+                            ("workers".into(),
+                             Value::Num(s.workers as f64)),
+                            ("served".into(), Value::Num(s.served as f64)),
+                            ("mean_capacity".into(),
+                             Value::Num(s.mean_capacity)),
+                        ])
+                    })
+                    .collect();
+                fields.push(("class_sections".into(), Value::Arr(secs)));
+            }
+            Value::Obj(fields)
         })
         .collect();
     let mut speedups: Vec<(String, Value)> = Vec::new();
@@ -321,9 +382,9 @@ mod tests {
         assert_eq!(sharded.completions.len(), 24);
         let rows = vec![
             BenchRow { queue: "shared", workers: 2, shards: 1,
-                       report: shared },
+                       classes: String::new(), report: shared },
             BenchRow { queue: "sharded", workers: 2, shards: 2,
-                       report: sharded },
+                       classes: String::new(), report: sharded },
         ];
         let path = std::env::temp_dir().join(format!(
             "ef_bench_serving_{}.json", std::process::id()));
@@ -340,6 +401,41 @@ mod tests {
             .req("w2").unwrap()
             .as_f64().unwrap();
         assert!(ratio.is_finite() && ratio > 0.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn hetero_pipeline_point_serves_everything_and_reports_classes() {
+        let fast = SimSpec { batch: 4, seq_len: 8, ..SimSpec::instant() };
+        let slow = SimSpec { base_ms: 0.2, ..fast };
+        let report =
+            pipeline_point_classes(&[("fast", fast, 2), ("slow", slow, 2)],
+                                   4, 32)
+                .unwrap();
+        assert_eq!(report.completions.len(), 32);
+        let mut ids: Vec<u64> =
+            report.completions.iter().map(|c| c.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..32).collect::<Vec<_>>());
+        assert_eq!(report.worker_classes.len(), 2);
+        let rows = vec![BenchRow {
+            queue: "hetero",
+            workers: 4,
+            shards: 4,
+            classes: "fast=2:slow=2".into(),
+            report,
+        }];
+        let path = std::env::temp_dir().join(format!(
+            "ef_bench_hetero_{}.json", std::process::id()));
+        write_bench_json(&path, "sim.rs unit test", fast, 32, &rows)
+            .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let doc = crate::json::parse(&text).unwrap();
+        let row = &doc.req("results").unwrap().as_arr().unwrap()[0];
+        assert_eq!(row.req("worker_classes").unwrap().as_str().unwrap(),
+                   "fast=2:slow=2");
+        let secs = row.req("class_sections").unwrap().as_arr().unwrap();
+        assert_eq!(secs.len(), 2, "hetero rows carry per-class sections");
     }
 
     #[test]

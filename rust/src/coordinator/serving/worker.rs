@@ -160,11 +160,13 @@ impl Executor for XlaExecutor {
 }
 
 /// The worker loop: pop a run of *class-compatible* admitted requests
-/// (own admission shard first, stealing from hot siblings when it runs
+/// (the tightest-slack available head seeds the run — deadline-aware
+/// stealing — own shard winning ties, siblings drained when it runs
 /// dry), shed the ones whose deadline already expired, pick a tier from
-/// the global backlog plus the batch's SLO constraints, form the padded
-/// batch, execute, and resolve each request's [`super::Response`] with
-/// its logits row and timings.  Returns the number of batches executed;
+/// the global backlog plus the batch's SLO constraints via **this
+/// worker class's own** capacity controller, form the padded batch,
+/// execute, and resolve each request's [`super::Response`] with its
+/// logits row and timings.  Returns the number of batches executed;
 /// exits when the queue is closed and drained.
 ///
 /// Batch compatibility is [`batch_key`]: every popped run shares one
@@ -174,17 +176,33 @@ impl Executor for XlaExecutor {
 /// binds all of it — so batches are formed to agree on constraints).
 ///
 /// All timings are measured on one monotonic clock: `submitted` (the
-/// admission stamp) -> `exec_start` -> `done`.  `queue_ms + exec_ms ==
-/// total_ms` exactly, and neither can go negative on fast completions.
+/// admission stamp) -> `exec_start` (stamped immediately before the
+/// backend call, so host-side batch formation bills as queue time, not
+/// exec time) -> `done`.  `queue_ms + exec_ms == total_ms` exactly, and
+/// neither can go negative on fast completions.
 pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
-                         exec: &mut dyn Executor) -> Result<usize> {
+                         class_idx: usize, exec: &mut dyn Executor)
+                         -> Result<usize> {
     let batch = exec.batch().max(1);
     let seq_len = exec.seq_len();
+    let class_name = shared.classes[class_idx].0.clone();
+    let controller = &shared.controllers[class_idx];
     let mut batches = 0usize;
     loop {
         let popped = shared.queue.pop_batch_keyed(
             worker, batch, shared.max_batch_wait,
-            |p: &Pending| batch_key(&p.req.slo, &shared.caps));
+            |p: &Pending| batch_key(&p.req.slo, &shared.caps),
+            // steal priority: remaining deadline budget in ms (may have
+            // gone negative — an expired request is the most urgent of
+            // all: it is shed below, freeing its queue slot and
+            // resolving its Response promptly)
+            |p: &Pending| match p.req.slo.deadline {
+                None => f64::INFINITY,
+                Some(d) => {
+                    d.as_secs_f64() * 1e3
+                        - p.submitted.elapsed().as_secs_f64() * 1e3
+                }
+            });
         if popped.is_empty() {
             return Ok(batches); // closed and drained
         }
@@ -192,15 +210,17 @@ pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
         // and collect the survivors' SLO constraints for the controller
         let now = Instant::now();
         let mut live: Vec<Pending> = Vec::with_capacity(popped.len());
+        let mut expired: Vec<ShedRecord> = Vec::new();
         let mut floor = 0.0f32;
         let mut slack_ms: Option<f64> = None;
         for p in popped {
             let waited = now.saturating_duration_since(p.submitted);
             if let Some(deadline) = p.req.slo.deadline {
                 if waited >= deadline {
-                    shared.sheds.lock().unwrap().push(ShedRecord {
+                    expired.push(ShedRecord {
                         id: p.req.id,
                         class: p.req.slo.name.clone(),
+                        worker_class: class_name.clone(),
                     });
                     p.responder.fulfil(Err(ServeError::DeadlineExceeded));
                     continue;
@@ -214,17 +234,21 @@ pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
             floor = floor.max(p.req.slo.floor_tier);
             live.push(p);
         }
+        if !expired.is_empty() {
+            // one lock for the whole run's sheds, mirroring the
+            // one-lock-per-batch completions path below
+            shared.sheds.lock().unwrap().append(&mut expired);
+        }
         if live.is_empty() {
             continue; // the whole run was past-deadline
         }
-        // the controller sees the global post-pop backlog (one atomic
-        // load off the sharded queue's depth gauge — no queue lock)
-        // plus this batch's tightest deadline slack and strictest
+        // this class's controller sees the global post-pop backlog (one
+        // atomic load off the sharded queue's depth gauge — no queue
+        // lock) plus this batch's tightest deadline slack and strictest
         // quality floor; the floor is the max over a run that already
         // shares one floor rung, so the clamp binds every member alike
-        let tier = shared.controller.lock().unwrap().choose_for_batch(
+        let tier = controller.lock().unwrap().choose_for_batch(
             shared.queue.len(), floor, slack_ms);
-        let exec_start = Instant::now();
         // split each Pending into its request (consumed by form_batch)
         // and its response half; form_batch preserves order, so the two
         // vectors stay aligned
@@ -235,6 +259,10 @@ pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
             reqs.push(p.req);
         }
         let formed = form_batch(reqs, batch, seq_len);
+        // stamped after batch formation, immediately before the backend
+        // call: the documented clock is admission -> exec start -> done,
+        // and host-side formation is queue time, not exec time
+        let exec_start = Instant::now();
         let out = match exec.execute(tier, &formed.tokens) {
             Ok(out) => out,
             Err(e) => {
@@ -254,7 +282,9 @@ pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
         let exec_ms = done
             .saturating_duration_since(exec_start)
             .as_secs_f64() * 1e3;
-        shared.controller.lock().unwrap().observe_exec(tier, exec_ms);
+        // feed the latency model of THIS class only: a slow backend's
+        // timings never pollute a fast class's deadline decisions
+        controller.lock().unwrap().observe_exec(tier, exec_ms);
         // the executor contract is one equal-size logits row per batch
         // slot (padded rows included); a violating backend must surface
         // as an error, not as silently truncated rows handed to callers
@@ -282,6 +312,7 @@ pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
                 class: req.slo.name.clone(),
                 tier,
                 worker,
+                worker_class: class_name.clone(),
                 queue_ms,
                 exec_ms,
                 total_ms: queue_ms + exec_ms,

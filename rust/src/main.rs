@@ -12,6 +12,7 @@
 //!   serve-sim      [--requests N] [--rates a,b,c] [--workers W]
 //!                  [--batch B] [--seq-len T] [--queue-bound Q]
 //!                  [--queue-shards K] [--depth-per-tier D] [--seed S]
+//!                  [--worker-classes fast=2:slow=2@4]
 //!   info           --config C
 //!
 //! Everything except `serve-sim` runs off the AOT artifacts in
@@ -83,6 +84,9 @@ elastiformer — ElastiFormer reproduction (see DESIGN.md)
   elastiformer serve --config lm_tiny --requests 64 --rate 100 --workers 1
   elastiformer serve-sim --requests 512 --rates 250,1000,4000 --workers 4
        flags: --batch B --seq-len T --queue-bound Q --depth-per-tier D
+              --worker-classes name=count[@latency-mult]:...
+              (e.g. fast=2:slow=2@4 — a heterogeneous fleet with
+               per-class capacity controllers; overrides --workers)
   elastiformer info --config lm_tiny";
 
 /// The artifact-backed subcommands need the PJRT runtime layer; when
@@ -362,7 +366,7 @@ fn print_report(report: &ServeReport, failed: usize) {
 fn cmd_serve_sim(args: &Args) -> Result<()> {
     args.check_known(&["requests", "rates", "workers", "batch", "seq-len",
                        "queue-bound", "queue-shards", "depth-per-tier",
-                       "seed"])?;
+                       "seed", "worker-classes"])?;
     let n = args.usize_or("requests", 512)?;
     let workers = args.usize_or("workers", 4)?;
     let seed = args.u64_or("seed", 42)?;
@@ -371,6 +375,13 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
     // shared queue, kept for A/B comparison
     let queue_shards = args.usize_or("queue-shards", 0)?;
     let depth_per_tier = args.f64_or("depth-per-tier", 8.0)?;
+    // heterogeneous fleet: "fast=2:slow=2@4" = 2 fast workers plus 2
+    // workers whose sim latency model is scaled 4x, each class under
+    // its own capacity controller; None = homogeneous --workers fleet
+    let classes = match args.str_opt("worker-classes") {
+        Some(s) => Some(parse_worker_classes(s)?),
+        None => None,
+    };
     let rates = args.f64_list_or("rates", &[250.0, 1000.0, 4000.0])?;
     if rates.iter().any(|r| !r.is_finite() || *r <= 0.0) {
         bail!("--rates must all be finite and > 0 (req/s), got {rates:?}");
@@ -387,15 +398,28 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
         bail!("--batch and --seq-len must be >= 1");
     }
 
-    println!("serve-sim: {n} requests per point, {workers} worker(s), \
-              batch {} x seq {}, queue bound {queue_bound}, \
-              {} admission shard(s)",
+    let total_workers = match &classes {
+        Some(cs) => cs.iter().map(|(_, w, _)| *w).sum::<usize>(),
+        None => workers,
+    };
+    let topology = match &classes {
+        Some(cs) => cs
+            .iter()
+            .map(|(name, w, mult)| format!("{name}={w}@{mult}"))
+            .collect::<Vec<_>>()
+            .join(":"),
+        None => "homogeneous".into(),
+    };
+    println!("serve-sim: {n} requests per point, {total_workers} \
+              worker(s) ({topology}), batch {} x seq {}, queue bound \
+              {queue_bound}, {} admission shard(s)",
              spec.batch, spec.seq_len,
-             if queue_shards == 0 { workers } else { queue_shards });
+             if queue_shards == 0 { total_workers } else { queue_shards });
     for rate in rates {
         let (report, shed) = run_sim_point(spec, workers, queue_bound,
                                            queue_shards, depth_per_tier,
-                                           n, rate, seed)?;
+                                           classes.as_deref(), n, rate,
+                                           seed)?;
         let tiers: Vec<String> = report
             .tier_counts
             .iter()
@@ -409,21 +433,90 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
                  report.throughput_rps(), report.latency_p(0.5),
                  report.latency_p(0.99), report.mean_capacity(),
                  tiers.join(" "));
+        if classes.is_some() {
+            // per-worker-class split: each class's share, tier mix and
+            // the exec-time model its own controller learned
+            for s in report.worker_class_sections() {
+                let est = s
+                    .exec_estimates_ms
+                    .first()
+                    .and_then(|(_, e)| *e)
+                    .map(|e| format!("{e:.2} ms"))
+                    .unwrap_or_else(|| "-".into());
+                println!("    class {:<10} ({} workers) | served {:>5} | \
+                          p99 {:>7.2} ms | mean cap {:.2} | \
+                          est@top {est}",
+                         s.class, s.workers, s.served, s.p99_ms,
+                         s.mean_capacity);
+            }
+        }
     }
     Ok(())
 }
 
+/// Parse `--worker-classes fast=2:slow=2@4` into `(name, workers,
+/// latency multiplier)` triples; the multiplier scales the sim spec's
+/// `base_ms`/`ms_per_capacity` for that class (default 1.0).
+fn parse_worker_classes(s: &str) -> Result<Vec<(String, usize, f64)>> {
+    let mut out = Vec::new();
+    for part in s.split(':').filter(|p| !p.is_empty()) {
+        let (name, rest) = part.split_once('=').ok_or_else(|| {
+            anyhow::anyhow!("--worker-classes wants \
+                             name=count[@latency-mult] entries \
+                             separated by ':', got {part:?}")
+        })?;
+        let (count_s, mult_s) = match rest.split_once('@') {
+            Some((c, m)) => (c, Some(m)),
+            None => (rest, None),
+        };
+        let count: usize = count_s.parse().map_err(
+            |_| anyhow::anyhow!("bad worker count in {part:?}"))?;
+        let mult: f64 = match mult_s {
+            Some(m) => m.parse().map_err(|_| {
+                anyhow::anyhow!("bad latency multiplier in {part:?}")
+            })?,
+            None => 1.0,
+        };
+        anyhow::ensure!(count >= 1,
+                        "worker count must be >= 1 in {part:?}");
+        anyhow::ensure!(!name.is_empty(), "empty class name in {part:?}");
+        anyhow::ensure!(mult.is_finite() && mult > 0.0,
+                        "latency multiplier must be finite and > 0 \
+                         in {part:?}");
+        out.push((name.to_string(), count, mult));
+    }
+    anyhow::ensure!(!out.is_empty(), "--worker-classes is empty");
+    Ok(out)
+}
+
+#[allow(clippy::too_many_arguments)]
 fn run_sim_point(spec: SimSpec, workers: usize, queue_bound: usize,
-                 queue_shards: usize, depth_per_tier: f64, n: usize,
+                 queue_shards: usize, depth_per_tier: f64,
+                 classes: Option<&[(String, usize, f64)]>, n: usize,
                  rate: f64, seed: u64) -> Result<(ServeReport, usize)> {
-    let cfg = ServeConfig::sim()
+    let mut cfg = ServeConfig::sim()
         .with_workers(workers)
         .with_queue_bound(queue_bound)
         .with_queue_shards(queue_shards)
         .with_depth_per_tier(depth_per_tier)
         .with_max_batch_wait(Duration::from_millis(2));
     let caps = cfg.capacities();
-    let engine = ElasticEngine::start(cfg, sim::factory(spec, caps))?;
+    let engine = match classes {
+        None => ElasticEngine::start(cfg, sim::factory(spec, caps))?,
+        Some(cs) => {
+            for (name, class_workers, mult) in cs {
+                let class_spec = SimSpec {
+                    base_ms: spec.base_ms * mult,
+                    ms_per_capacity: spec.ms_per_capacity * mult,
+                    ..spec
+                };
+                cfg = cfg.with_worker_class(
+                    name, *class_workers,
+                    sim::factory(class_spec, caps.clone()));
+            }
+            ElasticEngine::start_fleet(cfg)?
+        }
+    };
     let seq_len = spec.seq_len;
     let mut rng = Rng::new(seed ^ 0xA11F);
     let mut responses = Vec::with_capacity(n);

@@ -2,9 +2,11 @@
 //! comparison as the `hotpath` bench — the pre-sharding shared
 //! single-deque admission queue vs the sharded work-stealing queue at
 //! 4 workers under a near-zero-latency `SimSpec` (host overhead
-//! dominates) — and writes the machine-readable `BENCH_serving.json`
-//! at the repo root, so every tier-1 `cargo test` run refreshes the
-//! perf record even where `cargo bench` never runs.
+//! dominates), plus a heterogeneous fast/slow two-class topology
+//! (per-worker-class capacity controllers) — and writes the
+//! machine-readable `BENCH_serving.json` at the repo root, so every
+//! tier-1 `cargo test` run refreshes the perf record even where
+//! `cargo bench` never runs.
 //!
 //! Debug-build timings on shared CI runners are noisy, so this test
 //! asserts *structure* (exactly-once service under both topologies, a
@@ -40,8 +42,30 @@ fn bench_gate_records_shared_vs_sharded_pipeline() {
         ids.sort_unstable();
         assert_eq!(ids, (0..n as u64).collect::<Vec<_>>(),
                    "{label}: dropped or duplicated requests");
-        rows.push(BenchRow { queue: label, workers, shards, report });
+        rows.push(BenchRow { queue: label, workers, shards,
+                             classes: String::new(), report });
     }
+    // heterogeneous topology: 2 fast + 2 slow (4x latency) workers,
+    // one capacity controller per class — the mixed-fleet perf record
+    let slow = SimSpec {
+        base_ms: spec.base_ms * 4.0,
+        ms_per_capacity: spec.ms_per_capacity * 4.0,
+        ..spec
+    };
+    let hetero = sim::pipeline_point_classes(
+        &[("fast", spec, 2), ("slow", slow, 2)], workers, n)
+        .unwrap_or_else(|e| panic!("hetero pipeline failed: {e:#}"));
+    assert_eq!(hetero.completions.len(), n, "hetero: requests lost");
+    let mut ids: Vec<u64> =
+        hetero.completions.iter().map(|c| c.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..n as u64).collect::<Vec<_>>(),
+               "hetero: dropped or duplicated requests");
+    assert_eq!(hetero.worker_classes.len(), 2,
+               "hetero report must carry both worker classes");
+    rows.push(BenchRow { queue: "hetero", workers, shards: workers,
+                         classes: "fast=2:slow=2".into(),
+                         report: hetero });
     let path = Path::new(
         concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serving.json"));
     // never stomp an authoritative release-mode record with debug
@@ -69,7 +93,25 @@ fn bench_gate_records_shared_vs_sharded_pipeline() {
         assert_eq!(doc.req("bench").unwrap().as_str().unwrap(),
                    "sim_pipeline");
         let results = doc.req("results").unwrap().as_arr().unwrap();
-        assert_eq!(results.len(), 2);
+        assert_eq!(results.len(), 3);
+        let hetero_row = results
+            .iter()
+            .find(|r| {
+                r.req("queue")
+                    .ok()
+                    .and_then(|q| q.as_str().ok())
+                    .is_some_and(|q| q == "hetero")
+            })
+            .expect("record must carry the heterogeneous-topology row");
+        assert_eq!(
+            hetero_row.req("worker_classes").unwrap().as_str().unwrap(),
+            "fast=2:slow=2");
+        assert_eq!(
+            hetero_row
+                .req("class_sections").unwrap()
+                .as_arr().unwrap()
+                .len(),
+            2, "hetero row must carry both per-class sections");
         let speedup = doc
             .req("speedup_sharded_over_shared").unwrap()
             .req("w4").unwrap()

@@ -1,0 +1,58 @@
+//! Helpers shared by the integration-test crates (each declares
+//! `mod common;`).  Cargo does not build `tests/common/` as its own
+//! test target — only direct `tests/*.rs` files.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use elastiformer::coordinator::serving::{
+    ExecOutput, Executor, SimExecutor, SimSpec,
+};
+
+/// Sim executor that counts its executed batches — lets
+/// heterogeneous-fleet tests *know* (not hope) that a given worker
+/// class participated before asserting on its learned estimates.
+pub struct CountingSim {
+    inner: SimExecutor,
+    count: Arc<AtomicUsize>,
+}
+
+impl Executor for CountingSim {
+    fn batch(&self) -> usize {
+        self.inner.batch()
+    }
+
+    fn seq_len(&self) -> usize {
+        self.inner.seq_len()
+    }
+
+    fn execute(&mut self, tier: f32, tokens: &[i32]) -> Result<ExecOutput> {
+        let out = self.inner.execute(tier, tokens)?;
+        self.count.fetch_add(1, Ordering::SeqCst);
+        Ok(out)
+    }
+
+    fn supports(&self, tier: f32) -> bool {
+        self.inner.supports(tier)
+    }
+
+    fn name(&self) -> &'static str {
+        "counting-sim"
+    }
+}
+
+/// Worker-class executor factory over [`CountingSim`]: one fresh
+/// counting sim executor per worker, all feeding one shared counter.
+pub fn counting_factory(spec: SimSpec, caps: Vec<f32>,
+                        count: Arc<AtomicUsize>)
+                        -> impl Fn(usize) -> Result<Box<dyn Executor>>
+                            + Send + Sync + 'static {
+    move |worker| {
+        Ok(Box::new(CountingSim {
+            inner: SimExecutor::new(spec, &caps, worker).record_log(false),
+            count: count.clone(),
+        }) as Box<dyn Executor>)
+    }
+}

@@ -12,8 +12,11 @@ use elastiformer::coordinator::schedule::LrSchedule;
 use elastiformer::coordinator::serving::{
     floor_rung, form_batch, sim, AdmissionQueue, CapacityController,
     ElasticEngine, ExecOutput, Executor, Request, Response, ServeConfig,
-    SimSpec, SloClass,
+    ServeError, SimSpec, SloClass,
 };
+
+mod common;
+use common::counting_factory;
 use elastiformer::data::loader::Batcher;
 use elastiformer::data::{capgen, imagen, Tokenizer};
 use elastiformer::json::{self, Value};
@@ -286,6 +289,153 @@ fn prop_sharded_queue_exactly_once_across_steals() {
         if all != want {
             return Err(format!("{} of {} popped exactly once",
                                all.len(), want.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_per_class_controllers_isolate_exec_estimates() {
+    // tentpole invariant: a slow worker class under load never changes
+    // a fast class's tier choice.  Across random topologies (worker
+    // counts, batch sizes, shard counts), a fast (instant) and a slow
+    // (base-latency >= 2x the deadline) sim class share one queue; both
+    // are warmed at tier 1.0 with best-effort traffic, then deadline'd
+    // requests are submitted one at a time.  The fast class's own
+    // estimate (~0ms) always fits the slack, so every fast-served
+    // deadline'd completion must stay at tier 1.0 — under the old
+    // single shared controller, the slow class's observations inflated
+    // the shared estimate and demoted fast-served batches too.  The
+    // slow class's estimate must stay its own: demotion there is
+    // *required*, and the learned estimates must diverge.
+    check("per_class_controller_isolation", 5, |rng| {
+        let fast_workers = 1 + rng.below(2);
+        let slow_workers = 1 + rng.below(2);
+        let batch = 1 + rng.below(3);
+        let slow_ms = 80.0 + rng.f64() * 60.0; // 80..140ms per batch
+        // the budget sits far above an instant batch and far below a
+        // slow one, so neither verdict hinges on scheduler luck
+        let deadline = Duration::from_millis(40);
+        let cfg0 = ServeConfig::sim();
+        let caps = cfg0.capacities();
+        let fast_spec = SimSpec { batch, seq_len: 8, ..SimSpec::instant() };
+        let slow_spec = SimSpec {
+            batch,
+            seq_len: 8,
+            base_ms: slow_ms,
+            ms_per_capacity: 0.0,
+            jitter_ms: 0.0,
+            ..SimSpec::standard()
+        };
+        let fast_count = Arc::new(AtomicUsize::new(0));
+        let slow_count = Arc::new(AtomicUsize::new(0));
+        let cfg = cfg0
+            .with_queue_bound(64)
+            .with_queue_shards(rng.below(4)) // incl. shared + steal-heavy
+            .with_depth_per_tier(1e9) // backlog never demotes
+            .with_max_batch_wait(Duration::ZERO)
+            .with_worker_class(
+                "fast", fast_workers,
+                counting_factory(fast_spec, caps.clone(),
+                                 fast_count.clone()))
+            .with_worker_class(
+                "slow", slow_workers,
+                counting_factory(slow_spec, caps, slow_count.clone()));
+        let engine = ElasticEngine::start_fleet(cfg)
+            .map_err(|e| format!("start_fleet failed: {e:#}"))?;
+        let mut id = 0u64;
+        // warm both latency models at tier 1.0 until the counters
+        // prove both classes executed
+        let mut rounds = 0usize;
+        while fast_count.load(Ordering::SeqCst) == 0
+            || slow_count.load(Ordering::SeqCst) == 0
+        {
+            rounds += 1;
+            if rounds > 200 {
+                return Err("a class never executed a warmup batch".into());
+            }
+            let warm: Vec<Response> = (0..8)
+                .map(|_| {
+                    let r = engine.submit(sim_request(id, vec![0; 8]));
+                    id += 1;
+                    r
+                })
+                .collect();
+            for r in warm {
+                r.wait().map_err(|e| format!("warmup failed: {e}"))?;
+            }
+        }
+        // deadline'd phase, one at a time (slack at pop ~= the budget);
+        // run until the slow class has provably served one
+        let slo = SloClass::named("dl").with_deadline(deadline);
+        let slow_before = slow_count.load(Ordering::SeqCst);
+        let mut submitted = 0usize;
+        while submitted < 6
+            || slow_count.load(Ordering::SeqCst) == slow_before
+        {
+            submitted += 1;
+            if submitted > 300 {
+                return Err(
+                    "slow class never served a deadline'd request".into());
+            }
+            let r = engine.submit(
+                sim_request(id, vec![0; 8]).with_slo(slo.clone()));
+            id += 1;
+            match r.wait() {
+                Ok(_) => {}
+                // a scheduler stall past the whole budget sheds the
+                // request — rare, legitimate, and accounted below
+                Err(ServeError::DeadlineExceeded) => {}
+                Err(e) => {
+                    return Err(format!("deadline'd serve failed: {e}"));
+                }
+            }
+        }
+        let report = engine
+            .shutdown()
+            .map_err(|e| format!("engine failed: {e:#}"))?;
+        if report.completions.len() + report.sheds.len() != id as usize {
+            return Err(format!("{} served + {} shed != {id} submitted",
+                               report.completions.len(),
+                               report.sheds.len()));
+        }
+        // the isolation claim, per completion
+        for c in report.completions.iter().filter(|c| c.class == "dl") {
+            if c.worker_class == "fast" && c.tier != 1.0 {
+                return Err(format!(
+                    "slow-class load changed a fast-served tier: {c:?}"));
+            }
+            if c.worker_class == "slow" && c.tier >= 1.0 {
+                return Err(format!(
+                    "slow-served deadline'd batch not demoted: {c:?}"));
+            }
+        }
+        // and the learned estimates stay per-class
+        let sections = report.worker_class_sections();
+        let top_est = |name: &str| {
+            sections
+                .iter()
+                .find(|s| s.class == name)
+                .and_then(|s| {
+                    s.exec_estimates_ms
+                        .iter()
+                        .find(|(t, _)| (*t - 1.0).abs() < 1e-6)
+                        .and_then(|(_, e)| *e)
+                })
+        };
+        let fast_est =
+            top_est("fast").ok_or("fast class has no 1.0 estimate")?;
+        let slow_est =
+            top_est("slow").ok_or("slow class has no 1.0 estimate")?;
+        if slow_est < slow_ms * 0.75 {
+            return Err(format!(
+                "slow estimate {slow_est} ms forgot its {slow_ms} ms \
+                 latency model"));
+        }
+        if fast_est >= slow_est {
+            return Err(format!(
+                "estimates did not diverge: fast {fast_est} >= \
+                 slow {slow_est}"));
         }
         Ok(())
     });

@@ -10,6 +10,7 @@
 //! hit, shutdown drains every admitted request (work stealing included),
 //! and N workers beat one worker on wall-clock.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
@@ -18,7 +19,11 @@ use anyhow::Result;
 use elastiformer::coordinator::serving::{
     sim, Admission, ElasticEngine, ExecOutput, Executor, Request, Response,
     ServeConfig, ServeError, ServeReport, ShedReason, SimSpec, SloClass,
+    WorkerClassStats,
 };
+
+mod common;
+use common::counting_factory;
 
 fn sim_tokens(id: u64, seq_len: usize) -> Vec<i32> {
     (0..seq_len).map(|i| ((id as usize + i) % 97) as i32).collect()
@@ -298,6 +303,144 @@ fn class_aware_batching_shields_best_effort_from_floors() {
             "best-effort mostly rode premium batches at tier 1.0 \
              ({shed}/{} shed): {effort_tiers:?}",
             effort_tiers.len());
+}
+
+#[test]
+fn heterogeneous_fleet_isolates_per_class_controllers() {
+    // acceptance gate for worker classes: one fast (instant) and one
+    // slow (~200ms/batch) executor class behind the same queue, each
+    // with its OWN capacity controller.  After both classes have
+    // demonstrably executed batches at tier 1.0 (so both latency
+    // models are warm), requests with a 120ms deadline are submitted
+    // one at a time: a fast worker's own estimate (~0ms) fits the
+    // slack, so fast-served requests stay at the top tier; the slow
+    // class's 200ms estimate blows it, so slow-served requests are
+    // demoted down the ladder.  With the old single shared controller
+    // the slow observations inflated the shared tier-1.0 estimate and
+    // demoted *every* deadline'd batch, fast workers included — the
+    // cross-class pollution this test pins down.
+    let cfg0 = ServeConfig::sim();
+    let caps = cfg0.capacities();
+    let fast_spec = SimSpec { batch: 2, ..SimSpec::instant() };
+    let slow_spec = SimSpec {
+        batch: 2,
+        base_ms: 200.0,
+        ms_per_capacity: 0.0,
+        jitter_ms: 0.0,
+        ..SimSpec::standard()
+    };
+    let fast_count = Arc::new(AtomicUsize::new(0));
+    let slow_count = Arc::new(AtomicUsize::new(0));
+    let cfg = cfg0
+        .with_queue_bound(256)
+        .with_depth_per_tier(1e9) // the backlog signal never demotes
+        .with_max_batch_wait(Duration::ZERO)
+        .with_worker_class(
+            "fast", 1,
+            counting_factory(fast_spec, caps.clone(), fast_count.clone()))
+        .with_worker_class(
+            "slow", 1,
+            counting_factory(slow_spec, caps.clone(), slow_count.clone()));
+    let engine = ElasticEngine::start_fleet(cfg).unwrap();
+    let seq = fast_spec.seq_len;
+    let mut id = 0u64;
+
+    // phase 1 — warm both latency models with best-effort traffic (all
+    // of it runs at tier 1.0: huge depth_per_tier, no deadlines).  Loop
+    // until the counters prove both classes executed at least once.
+    let mut rounds = 0usize;
+    while fast_count.load(Ordering::SeqCst) == 0
+        || slow_count.load(Ordering::SeqCst) == 0
+    {
+        rounds += 1;
+        assert!(rounds <= 200,
+                "a worker class never executed a warmup batch \
+                 (fast {}, slow {})",
+                fast_count.load(Ordering::SeqCst),
+                slow_count.load(Ordering::SeqCst));
+        let warm: Vec<Response> = (0..8)
+            .map(|_| {
+                let r = engine.submit(Request::new(id, sim_tokens(id, seq)));
+                id += 1;
+                r
+            })
+            .collect();
+        for r in warm {
+            r.wait().expect("warmup request must be served");
+        }
+    }
+
+    // phase 2 — deadline'd requests, one at a time so the slack at pop
+    // is ~the full 120ms budget.  Keep going until the slow class has
+    // provably served some of them (its counter moved), so the
+    // per-class tier-mix assertions below cannot vacuously pass.
+    let slo = SloClass::named("dl").with_deadline(Duration::from_millis(120));
+    let slow_before = slow_count.load(Ordering::SeqCst);
+    let mut submitted_dl = 0usize;
+    while submitted_dl < 12
+        || slow_count.load(Ordering::SeqCst) < slow_before + 2
+    {
+        assert!(submitted_dl <= 400,
+                "slow class never served a deadline'd request");
+        let r = engine.submit(
+            Request::new(id, sim_tokens(id, seq)).with_slo(slo.clone()));
+        id += 1;
+        submitted_dl += 1;
+        // served late is fine (expiry is only checked at pop); what
+        // may NOT happen is a shed — slack at pop is ~120ms
+        r.wait().expect("one-at-a-time deadline'd request must serve");
+    }
+
+    let report = engine.shutdown().unwrap();
+    // every submitted request resolved exactly once into the report
+    assert_eq!(report.completions.len(), id as usize);
+    let mut ids: Vec<u64> = report.completions.iter().map(|c| c.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..id).collect::<Vec<_>>(),
+               "requests dropped or duplicated");
+
+    // distinct learned exec estimates per class in the report
+    let sections = report.worker_class_sections();
+    assert_eq!(sections.len(), 2);
+    let fast_sec = sections.iter().find(|s| s.class == "fast").unwrap();
+    let slow_sec = sections.iter().find(|s| s.class == "slow").unwrap();
+    let top_est = |s: &WorkerClassStats| {
+        s.exec_estimates_ms
+            .iter()
+            .find(|(t, _)| (*t - 1.0).abs() < 1e-6)
+            .and_then(|(_, e)| *e)
+    };
+    let fast_est = top_est(fast_sec).expect("fast class executed at 1.0");
+    let slow_est = top_est(slow_sec).expect("slow class executed at 1.0");
+    assert!(slow_est >= 150.0,
+            "slow estimate {slow_est} ms below its 200ms latency model");
+    assert!(fast_est < slow_est,
+            "per-class estimates did not diverge: fast {fast_est}, \
+             slow {slow_est}");
+
+    // isolation: the slow class's latency model never demoted a
+    // fast-served batch; slow-served deadline'd batches ARE demoted
+    let mut slow_served_dl = 0usize;
+    for c in report.completions.iter().filter(|c| c.class == "dl") {
+        if c.worker_class == "fast" {
+            assert_eq!(c.tier, 1.0,
+                       "slow-class pollution demoted a fast-served \
+                        request: {c:?}");
+        } else {
+            slow_served_dl += 1;
+            assert!(c.tier < 1.0,
+                    "slow-served deadline'd request not demoted: {c:?}");
+        }
+    }
+    assert!(slow_served_dl >= 1,
+            "counter said slow served deadline'd work, report disagrees");
+    // ...which is exactly a distinct per-class tier mix
+    assert!(slow_sec.mean_capacity < fast_sec.mean_capacity,
+            "tier mixes did not diverge: slow {:.3} vs fast {:.3}",
+            slow_sec.mean_capacity, fast_sec.mean_capacity);
+    assert!(slow_sec.tier_counts.iter().any(|(t, n)| *t < 1.0 && *n > 0),
+            "slow class shows no demoted completions: {:?}",
+            slow_sec.tier_counts);
 }
 
 /// Executor whose `execute` blocks until the shared gate opens —
