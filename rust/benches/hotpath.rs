@@ -84,6 +84,29 @@ fn sim_pipeline_bench() -> anyhow::Result<()> {
         classes: "fast=2:slow=2".into(),
         report,
     });
+    // streaming decode: 64 concurrent sessions x 16 tokens through
+    // submit_stream — continuous batching with a per-step tier
+    // decision; tokens/s is the row's headline figure
+    let (sessions, decode_steps) = (64usize, 16usize);
+    let report = sim::streaming_point(spec, 4, 4, sessions, decode_steps)?;
+    let first_token = if report.stream_done.is_empty() {
+        0.0
+    } else {
+        report.stream_done.iter().map(|s| s.first_token_ms).sum::<f64>()
+            / report.stream_done.len() as f64
+    };
+    println!("sim_serving_streaming_s{sessions}x{decode_steps}   \
+              {:>8.0} tok/s  mean first-token {:>6.2} ms  \
+              sessions {}/{}",
+             report.tokens_per_s(), first_token,
+             report.stream_done.len(), report.sessions_started);
+    rows.push(sim::BenchRow {
+        queue: "streaming",
+        workers: 4,
+        shards: 4,
+        classes: String::new(),
+        report,
+    });
     let path = std::path::Path::new(
         concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serving.json"));
     sim::write_bench_json(path, "benches/hotpath.rs (release)", spec, n,

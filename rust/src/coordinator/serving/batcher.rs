@@ -22,13 +22,31 @@ use std::time::Duration;
 
 use super::{Request, SloClass, TIER_EPS};
 
-/// Compatibility key for class-aware batch formation: two requests may
+/// Which kind of work a queued item represents — the third batch-key
+/// dimension, introduced with the streaming decode subsystem.  One
+/// executed batch is one workload: a **prefill** batch processes whole
+/// prompts (one-shot requests, and a decode session's first step), a
+/// **decode** batch advances in-flight sessions by one token each.
+/// The two never mix: their per-row cost profiles differ, and a decode
+/// step's output is consumed by the session table, not a caller's
+/// `Response`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StepKind {
+    /// full-prompt computation: one-shot requests and session step 0
+    Prefill,
+    /// one autoregressive step of a live decode session (step >= 1)
+    Decode,
+}
+
+/// Compatibility key for class-aware batch formation: two items may
 /// share an execution batch iff their keys are equal.  Keys are stable
-/// for the lifetime of a request (derived from its configured SLO, not
-/// from elapsed time), so an item's class never changes while it sits
-/// in the queue.
+/// for the lifetime of a queued item (derived from its configured SLO
+/// and its step kind, not from elapsed time), so an item's class never
+/// changes while it sits in the queue.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct BatchKey {
+    /// prefill vs decode — the streaming subsystem's workload split
+    pub step_kind: StepKind,
     /// index of the ladder rung the quality floor clamps to
     /// (`tiers.len() - 1` = unconstrained best-effort)
     pub floor_rung: usize,
@@ -36,10 +54,18 @@ pub struct BatchKey {
     pub deadline_band: u32,
 }
 
-/// Compute the compatibility key for one request's SLO against the
-/// configured capacity ladder (descending).
+/// Compute the compatibility key for one *prefill* item's SLO against
+/// the configured capacity ladder (descending) — the one-shot request
+/// path.  Decode steps use [`batch_key_for`].
 pub fn batch_key(slo: &SloClass, tiers: &[f32]) -> BatchKey {
+    batch_key_for(StepKind::Prefill, slo, tiers)
+}
+
+/// Compute the compatibility key for one item of the given step kind.
+pub fn batch_key_for(kind: StepKind, slo: &SloClass, tiers: &[f32])
+                     -> BatchKey {
     BatchKey {
+        step_kind: kind,
         floor_rung: floor_rung(tiers, slo.floor_tier),
         deadline_band: deadline_band(slo.deadline),
     }
@@ -96,21 +122,37 @@ pub struct Batch {
 pub fn form_batch(requests: Vec<Request>, batch: usize, seq_len: usize)
                   -> Batch {
     assert!(!requests.is_empty(), "form_batch on empty request set");
-    assert!(requests.len() <= batch,
-            "form_batch overfull: {} > {batch}", requests.len());
+    let rows: Vec<&[i32]> =
+        requests.iter().map(|r| r.tokens.as_slice()).collect();
+    let tokens = form_rows(&rows, batch, seq_len);
+    let padded_rows = batch - requests.len();
+    Batch { requests, tokens, padded_rows }
+}
+
+/// Row-level batch formation: flatten `rows` into a `batch * seq_len`
+/// token buffer under the same clamp/pad/repeat rules as
+/// [`form_batch`].  This is what the worker loop uses directly — a
+/// decode step's compute row comes from the session table, not from a
+/// `Request` — and what `form_batch` delegates to.
+///
+/// Panics if `rows` is empty or longer than `batch`.
+pub fn form_rows(rows: &[&[i32]], batch: usize, seq_len: usize)
+                 -> Vec<i32> {
+    assert!(!rows.is_empty(), "form_rows on empty row set");
+    assert!(rows.len() <= batch,
+            "form_rows overfull: {} > {batch}", rows.len());
     let mut tokens = Vec::with_capacity(batch * seq_len);
-    for r in &requests {
-        let n = r.tokens.len().min(seq_len);
-        tokens.extend_from_slice(&r.tokens[..n]);
+    for row in rows {
+        let n = row.len().min(seq_len);
+        tokens.extend_from_slice(&row[..n]);
         tokens.resize(tokens.len() + (seq_len - n), 0);
     }
-    let padded_rows = batch - requests.len();
-    for _ in 0..padded_rows {
+    for _ in 0..batch - rows.len() {
         let row_start = tokens.len() - seq_len;
         tokens.extend_from_within(row_start..row_start + seq_len);
     }
     debug_assert_eq!(tokens.len(), batch * seq_len);
-    Batch { requests, tokens, padded_rows }
+    tokens
 }
 
 #[cfg(test)]
@@ -186,6 +228,35 @@ mod tests {
         assert_ne!(deadline_band(Some(Duration::from_millis(3))),
                    deadline_band(Some(Duration::from_millis(5))));
         assert_ne!(deadline_band(Some(Duration::from_millis(5))), u32::MAX);
+    }
+
+    #[test]
+    fn step_kinds_never_share_a_batch_key() {
+        // the streaming subsystem's workload split: a decode step and a
+        // prefill with the *identical* SLO must still never batch
+        // together, while two decode steps from different sessions with
+        // compatible SLOs do
+        let caps = LADDER.to_vec();
+        let slo = SloClass::named("s").with_floor_tier(0.5);
+        let prefill = batch_key_for(StepKind::Prefill, &slo, &caps);
+        let decode = batch_key_for(StepKind::Decode, &slo, &caps);
+        assert_ne!(prefill, decode, "prefill and decode must never mix");
+        assert_eq!(prefill, batch_key(&slo, &caps),
+                   "one-shot requests are prefill-kind");
+        let decode2 =
+            batch_key_for(StepKind::Decode, &SloClass::named("t")
+                .with_floor_tier(0.5), &caps);
+        assert_eq!(decode, decode2,
+                   "compatible decode steps batch across sessions");
+    }
+
+    #[test]
+    fn form_rows_matches_form_batch_layout() {
+        let reqs = vec![req(0, vec![1, 2, 3]), req(1, vec![4])];
+        let via_batch = form_batch(reqs, 3, 3).tokens;
+        let via_rows = form_rows(&[&[1, 2, 3], &[4]], 3, 3);
+        assert_eq!(via_batch, via_rows);
+        assert_eq!(via_rows, vec![1, 2, 3, 4, 0, 0, 4, 0, 0]);
     }
 
     #[test]

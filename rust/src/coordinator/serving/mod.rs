@@ -66,6 +66,21 @@
 //! case.  [`ServeReport::worker_class_sections`] reports each class's
 //! tier mix and learned latency model.
 //!
+//! The engine serves **two workloads** behind the same queue and
+//! fleet: one-shot requests (above) and **streaming decode sessions**
+//! ([`submit_stream`](EngineHandle::submit_stream), `stream/`).  A
+//! session prefills its prompt, then re-enters the admission queue for
+//! every generated token — decode steps from many sessions batch
+//! together (continuous batching, with a step-kind batch-key dimension
+//! keeping prefill and decode apart) and every step gets a *fresh*
+//! tier decision from its serving class's controller, so a session's
+//! compute degrades gracefully as its deadline budget burns.  Tokens
+//! stream to the client through a bounded [`StreamResponse`] channel
+//! ending in exactly one `Done`/`Shed` — the same exactly-once
+//! drop-guard discipline as `Response`.
+//! [`ServeReport::stream_sections`] accounts for sessions separately
+//! (tokens/s, per-step tier trajectories, first-token latency).
+//!
 //! PJRT handles are not `Send`, so each worker constructs its own
 //! [`Executor`] on its own thread via its class's factory; the
 //! [`SimExecutor`] implementor makes the whole submit → admit → batch →
@@ -77,16 +92,24 @@ pub mod controller;
 pub mod queue;
 pub mod report;
 pub mod sim;
+pub mod stream;
 pub mod worker;
 
-pub use batcher::{batch_key, floor_rung, form_batch, Batch, BatchKey};
+pub use batcher::{
+    batch_key, batch_key_for, floor_rung, form_batch, form_rows, Batch,
+    BatchKey, StepKind,
+};
 pub use controller::CapacityController;
 pub use queue::{AdmissionQueue, TryPushError};
 pub use report::{
-    ClassStats, Completion, ServeReport, ShedRecord, WorkerClassInfo,
-    WorkerClassStats,
+    ClassStats, Completion, ServeReport, ShedCause, ShedRecord,
+    StreamSection, StreamShedRecord, WorkerClassInfo, WorkerClassStats,
 };
 pub use sim::{SimExecutor, SimSpec};
+pub use stream::{
+    DecodeSession, StreamEvent, StreamRequest, StreamResponse,
+    StreamStats, StreamTimeout,
+};
 pub use worker::{ExecOutput, Executor};
 #[cfg(feature = "pjrt")]
 pub use worker::XlaExecutor;
@@ -511,12 +534,75 @@ pub enum ShedReason {
     ShuttingDown,
 }
 
-/// One queued unit: the request, its admission stamp (the clock base
-/// for queue-wait accounting), and the write half of its response.
+/// What a queued work item resolves into: a one-shot request's
+/// response slot, or one step of a live decode session (the session's
+/// authoritative state lives in the [`stream::SessionTable`]).
+pub(crate) enum Outcome {
+    OneShot(Responder),
+    Stream(stream::StreamStep),
+}
+
+/// One queued unit: the request envelope (id, SLO; tokens only for
+/// one-shots — a decode step's compute row comes from the session
+/// table), its admission stamp (the clock base for *this item's*
+/// queue-wait accounting; a decode step is re-stamped at every
+/// re-admission), and its outcome half.
 pub(crate) struct Pending {
     pub req: Request,
     pub submitted: Instant,
-    pub responder: Responder,
+    pub outcome: Outcome,
+}
+
+impl Pending {
+    /// Which workload this item belongs to: one-shot requests and a
+    /// session's step 0 are prompt passes (prefill); later session
+    /// steps are decode.  Feeds the batch key's step-kind dimension,
+    /// so the two workloads never share an executed batch.
+    pub(crate) fn kind(&self) -> StepKind {
+        match &self.outcome {
+            Outcome::OneShot(_) => StepKind::Prefill,
+            Outcome::Stream(st) if st.step == 0 => StepKind::Prefill,
+            Outcome::Stream(_) => StepKind::Decode,
+        }
+    }
+
+    /// Has this item's deadline expired at `now`?  One-shots burn
+    /// their budget from item admission; decode steps burn the
+    /// *session's* budget from session admission.
+    pub(crate) fn deadline_expired_at(&self, now: Instant) -> bool {
+        let Some(deadline) = self.req.slo.deadline else {
+            return false;
+        };
+        now.saturating_duration_since(self.deadline_base()) >= deadline
+    }
+
+    /// Remaining deadline budget in ms at `now` (`None` = no
+    /// deadline; may be negative for an expired item — maximally
+    /// urgent).  For decode steps this is the session's remaining
+    /// budget **divided by its remaining steps** — the per-step
+    /// allowance the controller can actually spend on this batch — so
+    /// a session degrades tiers gradually as its budget burns.
+    pub(crate) fn slack_ms_at(&self, now: Instant) -> Option<f64> {
+        let deadline = self.req.slo.deadline?;
+        let elapsed = now.saturating_duration_since(self.deadline_base());
+        let slack =
+            deadline.as_secs_f64() * 1e3 - elapsed.as_secs_f64() * 1e3;
+        match &self.outcome {
+            Outcome::OneShot(_) => Some(slack),
+            Outcome::Stream(st) => {
+                let remaining =
+                    st.max_steps.saturating_sub(st.step).max(1);
+                Some(slack / remaining as f64)
+            }
+        }
+    }
+
+    fn deadline_base(&self) -> Instant {
+        match &self.outcome {
+            Outcome::OneShot(_) => self.submitted,
+            Outcome::Stream(st) => st.started,
+        }
+    }
 }
 
 /// State shared between the handle and all worker threads.
@@ -537,6 +623,16 @@ pub(crate) struct EngineShared {
     /// request's batch-compatibility key against it without locking
     /// any controller
     pub caps: Vec<f32>,
+    /// live decode sessions (the streaming subsystem's owner of
+    /// session state; workers read compute rows and route step
+    /// results through it)
+    pub sessions: stream::SessionTable,
+    /// completed decode sessions (terminal `Done`), appended by
+    /// workers one lock per batch
+    pub stream_done: Mutex<Vec<StreamStats>>,
+    /// shed decode sessions (terminal `Shed`), appended by workers and
+    /// by engine-side teardown
+    pub stream_shed: Mutex<Vec<StreamShedRecord>>,
 }
 
 /// The serving engine: [`start`](Self::start) spawns N execution
@@ -625,6 +721,9 @@ impl ElasticEngine {
             errors: Mutex::new(Vec::new()),
             max_batch_wait: cfg.max_batch_wait,
             caps: caps.clone(),
+            sessions: stream::SessionTable::new(),
+            stream_done: Mutex::new(Vec::new()),
+            stream_shed: Mutex::new(Vec::new()),
         });
         let init = Arc::new(InitLatch::new());
         let caps = Arc::new(caps);
@@ -747,15 +846,21 @@ impl EngineHandle {
         // deadline-carrying requests are flagged urgent so the queue's
         // deadline-aware steal peek engages only while any are enqueued
         let urgent = req.slo.deadline.is_some();
-        let pending =
-            Pending { submitted: Instant::now(), req, responder };
+        let pending = Pending {
+            submitted: Instant::now(),
+            req,
+            outcome: Outcome::OneShot(responder),
+        };
         let pushed = if urgent {
             self.shared.queue.push_urgent(pending)
         } else {
             self.shared.queue.push(pending)
         };
         if let Err(p) = pushed {
-            p.responder.fulfil(Err(ServeError::ShuttingDown));
+            self.record_engine_shed(&p);
+            if let Outcome::OneShot(responder) = p.outcome {
+                responder.fulfil(Err(ServeError::ShuttingDown));
+            }
         }
         response
     }
@@ -767,8 +872,11 @@ impl EngineHandle {
     pub fn try_submit(&self, req: Request) -> Admission {
         let (responder, response) = Response::channel(req.id);
         let urgent = req.slo.deadline.is_some();
-        let pending =
-            Pending { submitted: Instant::now(), req, responder };
+        let pending = Pending {
+            submitted: Instant::now(),
+            req,
+            outcome: Outcome::OneShot(responder),
+        };
         let pushed = if urgent {
             self.shared.queue.try_push_urgent(pending)
         } else {
@@ -779,10 +887,79 @@ impl EngineHandle {
             Err(TryPushError::Full(_)) => {
                 Admission::Shed(ShedReason::QueueFull)
             }
-            Err(TryPushError::Closed(_)) => {
+            Err(TryPushError::Closed(p)) => {
+                // engine-side rejection: logged so the report's shed
+                // totals reconcile with client-observed verdicts
+                // (QueueFull sheds are deliberately NOT logged — they
+                // never enter the engine and a load sweep would bury
+                // the report under them)
+                self.record_engine_shed(&p);
                 Admission::Shed(ShedReason::ShuttingDown)
             }
         }
+    }
+
+    /// Log one engine-side `ShuttingDown` rejection (worker_class
+    /// "engine": no worker ever saw the request).
+    fn record_engine_shed(&self, p: &Pending) {
+        self.shared.sheds.lock().unwrap().push(ShedRecord {
+            id: p.req.id,
+            class: p.req.slo.name.clone(),
+            worker_class: "engine".into(),
+            cause: ShedCause::ShuttingDown,
+        });
+    }
+
+    /// Start one streaming decode session: the prompt is prefilled,
+    /// then up to `max_steps` tokens are generated autoregressively,
+    /// each step re-entering the admission queue and getting a fresh
+    /// per-step tier decision from the serving class's capacity
+    /// controller (decode steps from many sessions batch together —
+    /// continuous batching).  Tokens stream back through the returned
+    /// [`StreamResponse`] as they land; the stream always ends in
+    /// exactly one `Done` or `Shed` event.  Blocks at the admission
+    /// bound like [`submit`](Self::submit); if the engine is shutting
+    /// down, the stream resolves immediately to `Shed(ShuttingDown)`.
+    ///
+    /// The session's `SloClass` governs the whole session: `deadline`
+    /// is the total budget from submission to the last token (burned
+    /// budget shrinks the per-step slack the controller sees, so a
+    /// session degrades tiers gracefully before it is ever shed), and
+    /// `floor_tier` clamps every step.
+    pub fn submit_stream(&self, req: StreamRequest) -> StreamResponse {
+        // channel sized to the session: a full run (max_steps tokens +
+        // one terminal) never blocks a worker on a slow consumer
+        let cap = req.max_steps.max(1) + 1;
+        let (sender, response) = stream::channel(req.id, cap);
+        let urgent = req.slo.deadline.is_some();
+        let pending =
+            self.shared.sessions.admit(req, sender, Instant::now());
+        let pushed = if urgent {
+            self.shared.queue.push_urgent(pending)
+        } else {
+            self.shared.queue.push(pending)
+        };
+        if let Err(p) = pushed {
+            if let Outcome::Stream(st) = p.outcome {
+                if let Some(rec) = self.shared.sessions.shed(
+                    st.session, ServeError::ShuttingDown, "engine")
+                {
+                    self.shared.stream_shed.lock().unwrap().push(rec);
+                }
+            }
+        }
+        response
+    }
+
+    /// Begin a graceful shutdown without consuming the handle: stop
+    /// admission (subsequent `submit`s resolve to `ShuttingDown`,
+    /// `try_submit`s return `Shed(ShuttingDown)` — both logged as
+    /// engine-side shed records), let the workers drain the backlog,
+    /// and shed in-flight decode sessions at their next step boundary.
+    /// Call [`shutdown`](Self::shutdown) afterwards to join the fleet
+    /// and collect the report.
+    pub fn close(&self) {
+        self.shared.queue.close();
     }
 
     /// Current aggregate admission backlog (what the controller
@@ -829,14 +1006,41 @@ impl EngineHandle {
         }
         // all workers are gone; anything still queued (fleet died
         // before draining) must be resolved, not leaked
+        let mut engine_stream_sheds: Vec<StreamShedRecord> = Vec::new();
         loop {
             let left = self.shared.queue.pop_batch(256, Duration::ZERO);
             if left.is_empty() {
                 break;
             }
             for p in left {
-                p.responder.fulfil(Err(ServeError::ShuttingDown));
+                match p.outcome {
+                    Outcome::OneShot(responder) => {
+                        responder.fulfil(Err(ServeError::ShuttingDown));
+                    }
+                    Outcome::Stream(st) => {
+                        if let Some(rec) = self.shared.sessions.shed(
+                            st.session, ServeError::ShuttingDown,
+                            "engine")
+                        {
+                            engine_stream_sheds.push(rec);
+                        }
+                    }
+                }
             }
+        }
+        // sessions with no queued step left (their in-flight item died
+        // with a worker) must still get their terminal event — the
+        // streaming exactly-once backbone at teardown
+        engine_stream_sheds.extend(self
+            .shared
+            .sessions
+            .shed_all(ServeError::ShuttingDown, "engine"));
+        if !engine_stream_sheds.is_empty() {
+            self.shared
+                .stream_shed
+                .lock()
+                .unwrap()
+                .append(&mut engine_stream_sheds);
         }
         let mut errors =
             std::mem::take(&mut *self.shared.errors.lock().unwrap());
@@ -844,6 +1048,10 @@ impl EngineHandle {
             std::mem::take(&mut *self.shared.completions.lock().unwrap());
         let sheds =
             std::mem::take(&mut *self.shared.sheds.lock().unwrap());
+        let stream_done =
+            std::mem::take(&mut *self.shared.stream_done.lock().unwrap());
+        let stream_shed =
+            std::mem::take(&mut *self.shared.stream_shed.lock().unwrap());
         if panics > 0 {
             errors.push(format!("{panics} worker(s) panicked"));
         }
@@ -867,7 +1075,9 @@ impl EngineHandle {
             .collect();
         Ok(ServeReport::new(completions, sheds, wall, &self.shared.caps,
                             self.workers)
-            .with_worker_classes(class_infos))
+            .with_worker_classes(class_infos)
+            .with_streams(self.shared.sessions.sessions_started(),
+                          stream_done, stream_shed))
     }
 }
 

@@ -15,10 +15,16 @@
 //!    [`len`](AdmissionQueue::len) a single atomic load, so the
 //!    capacity controller and report sampling never contend with
 //!    submit/pop.
-//!  * **Submit-side balance.**  Deposits pick a shard by
-//!    power-of-two-choices: a round-robin probe plus one scrambled
-//!    probe, keep the shallower (ties go to the round-robin probe, so
-//!    every shard is reachable).
+//!  * **Submit-side balance, slack-weighted under mixed SLO load.**
+//!    Deposits pick a shard by power-of-two-choices: a round-robin
+//!    probe plus one scrambled probe.  With no deadline'd work
+//!    enqueued the shallower probe wins (ties go to the round-robin
+//!    probe, so every shard is reachable) — the classic depth rule.
+//!    While the urgent gauge is nonzero, placement weighs queued
+//!    urgent work first: urgent pushes cluster onto urgent-rich
+//!    probes and relaxed pushes avoid them (depth breaks ties), so
+//!    the deadline-aware seed peek below — which skips urgent-free
+//!    shards — has fewer shards to lock.
 //!  * **Deadline-aware work stealing.**  [`pop_batch_as`] scans shards
 //!    in ring order starting at the worker's own: an idle worker drains
 //!    a hot sibling's shard instead of sleeping.  When seeding a batch,
@@ -42,6 +48,12 @@
 //!  * **Drain-on-close.**  [`close`] wakes every sleeper; a pop that
 //!    returns empty means closed *and* fully drained, exactly as
 //!    before.
+//!  * **Continuation re-admission.**  [`requeue`](AdmissionQueue::requeue)
+//!    deposits a decode session's next step without reserving against
+//!    the admission bound (a continuation is not a new admission;
+//!    bounding it would deadlock the workers that must drain it) while
+//!    still counting on the depth gauge, so the backlog signal and
+//!    `Shed(QueueFull)` stay honest.
 //!
 //! Blocking uses two "doorbells" (a lost-wakeup-proof mutex/condvar
 //! pair with a sleeper count so the uncontended path skips the lock):
@@ -68,13 +80,23 @@ pub enum TryPushError<T> {
     Closed(T),
 }
 
-/// One admission shard: a small FIFO deque plus a mirror of its length
-/// that submit-side probing reads without the lock.
+/// One admission shard: a small FIFO deque plus lock-free mirrors of
+/// its length and its urgent-item count that submit-side probing and
+/// the pop-side seed peek read without the lock.
 struct Shard<T> {
     items: Mutex<VecDeque<T>>,
     /// mirror of `items.len()`, written under the shard lock, read
     /// lock-free by `pick_shard` and the pop-side empty-shard skip
     len: AtomicUsize,
+    /// queued items flagged urgent at push time, maintained under the
+    /// shard lock (incremented on deposit, decremented when a sweep
+    /// takes a finite-slack item).  Read lock-free by the slack-biased
+    /// submit placement and by the deadline-aware seed peek, which
+    /// skips shards holding no urgent work.  Like the queue-wide
+    /// gauge, a slack-less pop path may skip decrements, so it can
+    /// over-approximate — costing a redundant peek, never a missed
+    /// urgent item.
+    urgent: AtomicUsize,
 }
 
 /// Lost-wakeup-proof sleep/wake pair.  Waiters register in `sleepers`,
@@ -189,6 +211,7 @@ impl<T> AdmissionQueue<T> {
                 .map(|_| Shard {
                     items: Mutex::new(VecDeque::new()),
                     len: AtomicUsize::new(0),
+                    urgent: AtomicUsize::new(0),
                 })
                 .collect(),
             depth: AtomicUsize::new(0),
@@ -226,9 +249,22 @@ impl<T> AdmissionQueue<T> {
     }
 
     /// Power-of-two-choices shard pick: a round-robin probe plus one
-    /// scrambled probe, keep the shallower.  Ties go to the round-robin
-    /// probe so every shard is reachable even from an empty start.
-    fn pick_shard(&self) -> usize {
+    /// scrambled probe.  With no urgent work enqueued the tiebreak is
+    /// purely depth (keep the shallower; ties go to the round-robin
+    /// probe so every shard is reachable even from an empty start).
+    ///
+    /// While the urgent gauge is nonzero, placement is **slack
+    /// weighted**: an urgent push prefers the probe already holding
+    /// more urgent work (urgent items concentrate on few shards, so
+    /// the deadline-aware seed peek in [`pop_batch_keyed`] — which
+    /// skips urgent-free shards — locks fewer of them), and a relaxed
+    /// push prefers the probe holding *less* urgent work (relaxed
+    /// arrivals stop landing in front of deadline'd items and the
+    /// urgent shards stay short).  Depth breaks urgency ties, so the
+    /// old balance rule is recovered exactly whenever urgency does not
+    /// distinguish the probes — and always when no deadline'd work is
+    /// enqueued (unit-tested).
+    fn pick_shard(&self, urgent: bool) -> usize {
         let n = self.shards.len();
         if n == 1 {
             return 0;
@@ -237,6 +273,15 @@ impl<T> AdmissionQueue<T> {
         let a = t % n;
         let h = (t as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
         let b = (a + 1 + ((h >> 33) as usize) % (n - 1)) % n;
+        if self.urgent.load(Ordering::SeqCst) > 0 {
+            let ua = self.shards[a].urgent.load(Ordering::SeqCst);
+            let ub = self.shards[b].urgent.load(Ordering::SeqCst);
+            if ua != ub {
+                // urgent work clusters; relaxed work steers clear
+                let b_wins = if urgent { ub > ua } else { ub < ua };
+                return if b_wins { b } else { a };
+            }
+        }
         if self.shards[b].len.load(Ordering::SeqCst)
             < self.shards[a].len.load(Ordering::SeqCst)
         {
@@ -246,15 +291,18 @@ impl<T> AdmissionQueue<T> {
         }
     }
 
-    fn deposit(&self, item: T) {
-        self.deposit_to(self.pick_shard(), item);
+    fn deposit(&self, item: T, urgent: bool) {
+        self.deposit_to(self.pick_shard(urgent), item, urgent);
     }
 
-    fn deposit_to(&self, s: usize, item: T) {
+    fn deposit_to(&self, s: usize, item: T, urgent: bool) {
         let shard = &self.shards[s];
         let mut items = shard.items.lock().unwrap();
         items.push_back(item);
         shard.len.store(items.len(), Ordering::SeqCst);
+        if urgent {
+            shard.urgent.fetch_add(1, Ordering::SeqCst);
+        }
         drop(items);
         self.doorbell.ring();
     }
@@ -338,7 +386,37 @@ impl<T> AdmissionQueue<T> {
             // so the counter never underflows
             self.urgent.fetch_add(1, Ordering::SeqCst);
         }
-        self.deposit(item);
+        self.deposit(item, urgent);
+        Ok(())
+    }
+
+    /// Re-enqueue a *continuation* — a decode session's next step —
+    /// without reserving against the admission bound.  Continuations
+    /// are not new admissions: making them compete for bound slots
+    /// would let a full queue deadlock the workers that must drain it
+    /// (every worker blocked re-admitting the step it just finished).
+    /// The item still counts on the depth gauge, so the controller's
+    /// backlog signal sees it and new `try_submit`s shed while the
+    /// engine is saturated with in-flight sessions; the gauge may
+    /// transiently exceed `bound`, which the reserve CAS already
+    /// treats as full.  Fails only if the queue has been closed.
+    pub fn requeue(&self, item: T, urgent: bool) -> Result<(), T> {
+        if self.closed.load(Ordering::SeqCst) {
+            return Err(item);
+        }
+        self.depth.fetch_add(1, Ordering::SeqCst);
+        // same strand-race re-check as deposit_reserved: a close
+        // between the flag load and the gauge bump must undo, or the
+        // item deposits into a queue no worker will drain
+        if self.closed.load(Ordering::SeqCst) {
+            self.depth.fetch_sub(1, Ordering::SeqCst);
+            self.vacancy.ring();
+            return Err(item);
+        }
+        if urgent {
+            self.urgent.fetch_add(1, Ordering::SeqCst);
+        }
+        self.deposit(item, urgent);
         Ok(())
     }
 
@@ -359,18 +437,25 @@ impl<T> AdmissionQueue<T> {
 
     /// Move up to `max - out.len()` key-compatible items out of one
     /// shard (seeding `batch_key` from the shard's head when unset).
-    /// Skipped items keep their order.  The caller owns the aggregate
-    /// gauge accounting.
-    fn sweep_shard<K, F>(&self, s: usize, max: usize, key: &F,
-                         batch_key: &mut Option<K>, out: &mut Vec<T>)
+    /// Skipped items keep their order.  Taken finite-slack items are
+    /// retired from the shard's urgent mirror (skipped while the
+    /// queue-wide urgent gauge is zero, so deadline-free traffic never
+    /// pays the slack calls).  The caller owns the aggregate gauge
+    /// accounting.
+    fn sweep_shard<K, F, S>(&self, s: usize, max: usize, key: &F,
+                            slack: &S, batch_key: &mut Option<K>,
+                            out: &mut Vec<T>)
     where
         K: PartialEq,
         F: Fn(&T) -> K,
+        S: Fn(&T) -> f64,
     {
         let shard = &self.shards[s];
         if shard.len.load(Ordering::SeqCst) == 0 {
             return;
         }
+        let track_urgent = self.urgent.load(Ordering::SeqCst) > 0;
+        let mut urgent_taken = 0usize;
         let mut items = shard.items.lock().unwrap();
         let mut skipped: VecDeque<T> = VecDeque::new();
         while out.len() < max {
@@ -382,6 +467,9 @@ impl<T> AdmissionQueue<T> {
             if matches {
                 if batch_key.is_none() {
                     *batch_key = Some(key(&it));
+                }
+                if track_urgent && slack(&it).is_finite() {
+                    urgent_taken += 1;
                 }
                 out.push(it);
             } else {
@@ -395,6 +483,20 @@ impl<T> AdmissionQueue<T> {
             *items = skipped;
         }
         shard.len.store(items.len(), Ordering::SeqCst);
+        if urgent_taken > 0 {
+            // saturating: a slack-less pop path (shutdown drain) may
+            // have skipped decrements, leaving the mirror stale-high
+            let mut cur = shard.urgent.load(Ordering::SeqCst);
+            while cur > 0 {
+                match shard.urgent.compare_exchange(
+                    cur, cur.saturating_sub(urgent_taken),
+                    Ordering::SeqCst, Ordering::SeqCst)
+                {
+                    Ok(_) => break,
+                    Err(now) => cur = now,
+                }
+            }
+        }
     }
 
     /// Scan shards from `worker`, moving out up to `max` total items
@@ -445,12 +547,19 @@ impl<T> AdmissionQueue<T> {
                 % FAIR_SEED_EVERY
                 != 0
         {
-            // deadline-aware seed: prefer the tightest-slack head
+            // deadline-aware seed: prefer the tightest-slack head.
+            // Only shards whose urgent mirror is nonzero are peeked —
+            // with slack-weighted submit placement clustering urgent
+            // work, that is typically far fewer than "every non-empty
+            // shard" (the pre-PR-5 cost).  A relaxed-only shard can
+            // never win the peek anyway: its head's slack is infinite.
             let mut best: Option<(usize, f64)> = None;
             for i in 0..n {
                 let s = (start + i) % n;
                 let shard = &self.shards[s];
-                if shard.len.load(Ordering::SeqCst) == 0 {
+                if shard.len.load(Ordering::SeqCst) == 0
+                    || shard.urgent.load(Ordering::SeqCst) == 0
+                {
                     continue;
                 }
                 let items = shard.items.lock().unwrap();
@@ -467,7 +576,7 @@ impl<T> AdmissionQueue<T> {
                 }
             }
             if let Some((s, _)) = best {
-                self.sweep_shard(s, max, key, batch_key, out);
+                self.sweep_shard(s, max, key, slack, batch_key, out);
                 // the seed sweep took everything compatible there; the
                 // racing case (another worker emptied it first) falls
                 // through to normal ring-order seeding below
@@ -484,12 +593,13 @@ impl<T> AdmissionQueue<T> {
             if seeded == Some(s) {
                 continue;
             }
-            self.sweep_shard(s, max, key, batch_key, out);
+            self.sweep_shard(s, max, key, slack, batch_key, out);
         }
         let taken = out.len() - before;
         if taken > 0 {
-            // retire taken urgent items from the gauge (skip the slack
-            // calls entirely when nothing urgent is enqueued)
+            // retire taken urgent items from the queue-wide gauge (skip
+            // the slack calls entirely when nothing urgent is enqueued;
+            // the per-shard mirrors were already retired by the sweeps)
             if self.urgent.load(Ordering::SeqCst) > 0 {
                 let urgent_taken = out[before..]
                     .iter()
@@ -655,7 +765,7 @@ impl<T> AdmissionQueue<T> {
     #[cfg(test)]
     fn push_to_shard(&self, s: usize, item: T) {
         assert!(self.try_reserve(), "push_to_shard over the bound");
-        self.deposit_to(s, item);
+        self.deposit_to(s, item, false);
     }
 
     /// [`push_to_shard`](Self::push_to_shard) for an urgent item.
@@ -663,7 +773,7 @@ impl<T> AdmissionQueue<T> {
     fn push_to_shard_urgent(&self, s: usize, item: T) {
         assert!(self.try_reserve(), "push_to_shard over the bound");
         self.urgent.fetch_add(1, Ordering::SeqCst);
-        self.deposit_to(s, item);
+        self.deposit_to(s, item, true);
     }
 
     #[cfg(test)]
@@ -896,6 +1006,92 @@ mod tests {
                                     |_| f64::INFINITY);
         assert_eq!(got, vec![0, 1, 2]);
         assert_eq!(q.len(), 5);
+    }
+
+    #[test]
+    fn placement_stays_depth_p2c_without_urgent_items() {
+        // satellite acceptance (half 1): with no deadline'd work
+        // enqueued, submit placement must be exactly the old depth-only
+        // p2c.  With 2 shards both probes are always examined, so the
+        // pick is deterministic: the shallower shard wins.
+        let q = AdmissionQueue::sharded(16, 2);
+        for id in 0..3u64 {
+            q.push_to_shard(0, id);
+        }
+        q.push(100).unwrap();
+        assert_eq!(q.shard_len(1), 1,
+                   "relaxed push must take the shallower shard");
+        assert_eq!(q.shard_len(0), 3);
+    }
+
+    #[test]
+    fn urgent_placement_clusters_on_urgent_rich_shard() {
+        // satellite acceptance (half 2a): while urgent work is
+        // enqueued, an urgent push prefers the probe already holding
+        // urgent items — even when it is deeper — so the seed peek has
+        // fewer shards to visit.
+        let q = AdmissionQueue::sharded(16, 2);
+        q.push_to_shard_urgent(0, 0u64);
+        q.push_to_shard(0, 1); // shard 0: depth 2 (1 urgent); shard 1: 0
+        q.push_urgent(2).unwrap();
+        assert_eq!(q.shard_len(0), 3,
+                   "urgent push must cluster with queued urgent work");
+        assert_eq!(q.shard_len(1), 0);
+        assert_eq!(q.urgent_len(), 2);
+    }
+
+    #[test]
+    fn relaxed_placement_avoids_urgent_shard_despite_depth() {
+        // satellite acceptance (half 2b): a relaxed push under mixed
+        // SLO load steers away from the urgent shard even when the
+        // urgent-free shard is deeper — relaxed arrivals must not land
+        // in front of deadline'd items
+        let q = AdmissionQueue::sharded(16, 2);
+        q.push_to_shard_urgent(0, 0u64); // shard 0: depth 1, urgent 1
+        for id in 1..4u64 {
+            q.push_to_shard(1, id); // shard 1: depth 3, urgent 0
+        }
+        q.push(100).unwrap();
+        assert_eq!(q.shard_len(1), 4,
+                   "relaxed push must avoid the urgent shard");
+        assert_eq!(q.shard_len(0), 1);
+    }
+
+    #[test]
+    fn requeue_bypasses_bound_but_respects_close() {
+        let q = AdmissionQueue::new(1);
+        q.push(0u64).unwrap();
+        assert!(matches!(q.try_push(1), Err(TryPushError::Full(_))));
+        // a continuation is not a new admission: it must land even at
+        // the bound, and the gauge must count it
+        q.requeue(2, false).unwrap();
+        assert_eq!(q.len(), 2);
+        // new admissions still see "full" while over the bound
+        assert!(matches!(q.try_push(3), Err(TryPushError::Full(_))));
+        let got = q.pop_batch(8, Duration::ZERO);
+        assert_eq!(got, vec![0, 2]);
+        assert_eq!(q.len(), 0);
+        q.close();
+        match q.requeue(4, true) {
+            Err(item) => assert_eq!(item, 4),
+            Ok(()) => panic!("requeue into a closed queue must fail"),
+        }
+        assert_eq!(q.len(), 0, "failed requeue must not leak the gauge");
+    }
+
+    #[test]
+    fn urgent_requeue_feeds_the_slack_seed() {
+        // a decode step requeued urgent must engage the deadline-aware
+        // seed exactly like an urgent push (the gauges agree)
+        let q = AdmissionQueue::sharded(16, 2);
+        q.push_to_shard(0, 0u64); // relaxed head on the worker's shard
+        q.requeue(1, true).unwrap(); // urgent continuation, p2c-placed
+        assert_eq!(q.urgent_len(), 1);
+        let slack = |id: &u64| if *id == 1 { 1.0 } else { f64::INFINITY };
+        let key = |id: &u64| *id;
+        let got = q.pop_batch_keyed(0, 1, Duration::ZERO, key, slack);
+        assert_eq!(got, vec![1], "urgent continuation must seed first");
+        assert_eq!(q.urgent_len(), 0);
     }
 
     #[test]

@@ -32,15 +32,46 @@ pub struct Completion {
     pub batch_size: usize,
 }
 
-/// One request shed at execution time (deadline already expired when a
-/// worker picked it up); admission-time sheds never enter the engine
-/// and therefore never appear in the report.
+/// Why a request was shed — the dimension that lets `ServeReport` shed
+/// totals reconcile exactly with client-observed verdicts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedCause {
+    /// a worker found the deadline already expired at pop time
+    DeadlineExceeded,
+    /// the engine refused or abandoned the request because admission
+    /// was closed (client saw `Shed(ShuttingDown)` or a
+    /// `ServeError::ShuttingDown` resolution)
+    ShuttingDown,
+}
+
+/// One shed one-shot request: a worker-side deadline shed, or an
+/// engine-side `ShuttingDown` rejection (`worker_class == "engine"`,
+/// since no worker ever saw it).  `Shed(QueueFull)` admission verdicts
+/// are deliberately not logged: they never enter the engine, and an
+/// overload sweep would bury the report under them.
 #[derive(Debug, Clone)]
 pub struct ShedRecord {
     pub id: u64,
     pub class: String,
-    /// worker class of the worker that shed it
+    /// worker class of the worker that shed it ("engine" for
+    /// engine-side rejections)
     pub worker_class: String,
+    pub cause: ShedCause,
+}
+
+/// One shed decode session (terminal `StreamEvent::Shed`): which
+/// session, how far it got, and why.
+#[derive(Debug, Clone)]
+pub struct StreamShedRecord {
+    /// caller-chosen session id
+    pub id: u64,
+    /// SLO class name the session ran under
+    pub class: String,
+    /// worker class that shed it ("engine" at teardown)
+    pub worker_class: String,
+    /// tokens the session had generated (and delivered) before the shed
+    pub steps_done: usize,
+    pub reason: super::ServeError,
 }
 
 /// Per-SLO-class section of the report.
@@ -85,6 +116,33 @@ pub struct WorkerClassStats {
     pub exec_estimates_ms: Vec<(f32, Option<f64>)>,
 }
 
+/// Per-SLO-class section of the *streaming* report: how one class's
+/// decode sessions fared — completion/shed split, token throughput,
+/// session and first-token latency, and the per-step tier histogram
+/// (how often decode steps ran at each ladder rung — the engine-level
+/// picture of per-step elasticity).
+#[derive(Debug, Clone)]
+pub struct StreamSection {
+    pub class: String,
+    /// sessions that generated their full budget (terminal `Done`)
+    pub completed: usize,
+    /// sessions terminated early (terminal `Shed`)
+    pub shed: usize,
+    /// tokens generated and delivered, including a shed session's
+    /// pre-shed tokens
+    pub tokens: usize,
+    /// `tokens / wall_secs` — the streaming throughput figure
+    pub tokens_per_s: f64,
+    /// session wall-time percentiles over completed sessions
+    pub p50_session_ms: f64,
+    pub p99_session_ms: f64,
+    /// mean submit → first-token latency over completed sessions
+    pub mean_first_token_ms: f64,
+    /// decode-step count per configured tier over completed sessions'
+    /// trajectories, same ladder as the aggregate `tier_counts`
+    pub tier_step_counts: Vec<(f32, usize)>,
+}
+
 /// Aggregate serving report.
 #[derive(Debug, Clone)]
 pub struct ServeReport {
@@ -99,6 +157,14 @@ pub struct ServeReport {
     ///
     /// [`with_worker_classes`]: ServeReport::with_worker_classes
     pub worker_classes: Vec<WorkerClassInfo>,
+    /// decode sessions ever admitted — the reconciliation base:
+    /// `sessions_started == stream_done.len() + stream_shed.len()`
+    /// after a clean shutdown
+    pub sessions_started: usize,
+    /// completed decode sessions, with their per-step trajectories
+    pub stream_done: Vec<super::StreamStats>,
+    /// shed decode sessions
+    pub stream_shed: Vec<StreamShedRecord>,
 }
 
 impl ServeReport {
@@ -122,6 +188,9 @@ impl ServeReport {
             tier_counts,
             workers,
             worker_classes: Vec::new(),
+            sessions_started: 0,
+            stream_done: Vec::new(),
+            stream_shed: Vec::new(),
         }
     }
 
@@ -130,6 +199,17 @@ impl ServeReport {
     pub fn with_worker_classes(mut self, classes: Vec<WorkerClassInfo>)
                                -> ServeReport {
         self.worker_classes = classes;
+        self
+    }
+
+    /// Attach the streaming subsystem's session logs (the engine does
+    /// this at shutdown).
+    pub fn with_streams(mut self, started: usize,
+                        done: Vec<super::StreamStats>,
+                        shed: Vec<StreamShedRecord>) -> ServeReport {
+        self.sessions_started = started;
+        self.stream_done = done;
+        self.stream_shed = shed;
         self
     }
 
@@ -211,6 +291,93 @@ impl ServeReport {
                     } else {
                         cap / served as f64
                     },
+                }
+            })
+            .collect()
+    }
+
+    /// Total streaming token throughput: every delivered token
+    /// (completed sessions' full budgets plus shed sessions' pre-shed
+    /// tokens) over the report's wall time.
+    pub fn tokens_per_s(&self) -> f64 {
+        let tokens: usize = self
+            .stream_done
+            .iter()
+            .map(|s| s.steps)
+            .chain(self.stream_shed.iter().map(|s| s.steps_done))
+            .sum();
+        tokens as f64 / self.wall_secs.max(1e-9)
+    }
+
+    /// Per-SLO-class sections of the streaming report, sorted by class
+    /// name: completion/shed split, token throughput, session latency
+    /// percentiles, first-token latency, and the per-step tier
+    /// trajectory histogram (over completed sessions — a shed
+    /// session's trajectory dies with it; its delivered tokens still
+    /// count toward throughput).
+    pub fn stream_sections(&self) -> Vec<StreamSection> {
+        let mut names: Vec<&str> = self
+            .stream_done
+            .iter()
+            .map(|s| s.class.as_str())
+            .chain(self.stream_shed.iter().map(|s| s.class.as_str()))
+            .collect();
+        names.sort_unstable();
+        names.dedup();
+        names
+            .into_iter()
+            .map(|name| {
+                let done: Vec<&super::StreamStats> = self
+                    .stream_done
+                    .iter()
+                    .filter(|s| s.class == name)
+                    .collect();
+                let shed: Vec<&StreamShedRecord> = self
+                    .stream_shed
+                    .iter()
+                    .filter(|s| s.class == name)
+                    .collect();
+                let tokens: usize = done.iter().map(|s| s.steps).sum::<usize>()
+                    + shed.iter().map(|s| s.steps_done).sum::<usize>();
+                let mut session_ms: Vec<f64> =
+                    done.iter().map(|s| s.total_ms).collect();
+                session_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let mut tier_step_counts: Vec<(f32, usize)> = self
+                    .tier_counts
+                    .iter()
+                    .map(|(t, _)| (*t, 0usize))
+                    .collect();
+                for s in &done {
+                    for &tier in &s.tiers {
+                        if let Some(tc) = tier_step_counts
+                            .iter_mut()
+                            .find(|(t, _)| tier_matches(*t, tier))
+                        {
+                            tc.1 += 1;
+                        }
+                    }
+                }
+                let first_token: f64 = done
+                    .iter()
+                    .map(|s| s.first_token_ms)
+                    .sum::<f64>();
+                StreamSection {
+                    class: name.to_string(),
+                    completed: done.len(),
+                    shed: shed.len(),
+                    tokens,
+                    tokens_per_s: tokens as f64
+                        / self.wall_secs.max(1e-9),
+                    p50_session_ms:
+                        percentile_nearest_rank(&session_ms, 0.5),
+                    p99_session_ms:
+                        percentile_nearest_rank(&session_ms, 0.99),
+                    mean_first_token_ms: if done.is_empty() {
+                        0.0
+                    } else {
+                        first_token / done.len() as f64
+                    },
+                    tier_step_counts,
                 }
             })
             .collect()
@@ -403,11 +570,13 @@ mod tests {
                 id: 101,
                 class: "tight".into(),
                 worker_class: "default".into(),
+                cause: ShedCause::DeadlineExceeded,
             },
             ShedRecord {
                 id: 102,
                 class: "tight".into(),
                 worker_class: "default".into(),
+                cause: ShedCause::DeadlineExceeded,
             },
         ];
         let r = ServeReport::new(completions, sheds, 1.0, &[1.0, 0.25], 1);
@@ -432,6 +601,7 @@ mod tests {
             id: 0,
             class: "starved".into(),
             worker_class: "default".into(),
+            cause: ShedCause::DeadlineExceeded,
         }];
         let r = ServeReport::new(Vec::new(), sheds, 1.0, &[1.0], 1);
         let sections = r.class_sections();
@@ -462,6 +632,7 @@ mod tests {
             id: 100,
             class: "tight".into(),
             worker_class: "slow".into(),
+            cause: ShedCause::DeadlineExceeded,
         }];
         let infos = vec![
             WorkerClassInfo {
@@ -489,6 +660,65 @@ mod tests {
         assert!((slow.mean_capacity - 0.25).abs() < 1e-9);
         assert_eq!(slow.tier_counts, vec![(1.0, 0), (0.25, 2)]);
         assert_eq!(slow.exec_estimates_ms[0], (1.0, Some(40.0)));
+    }
+
+    fn stream_stats(id: u64, class: &str, tiers: Vec<f32>, total_ms: f64)
+                    -> crate::coordinator::serving::StreamStats {
+        crate::coordinator::serving::StreamStats {
+            id,
+            class: class.into(),
+            steps: tiers.len(),
+            tiers,
+            total_ms,
+            first_token_ms: total_ms / 2.0,
+        }
+    }
+
+    #[test]
+    fn stream_sections_split_classes_and_histogram_step_tiers() {
+        let done = vec![
+            stream_stats(0, "chat", vec![1.0, 1.0, 0.5], 30.0),
+            stream_stats(1, "chat", vec![0.5, 0.5, 0.5], 10.0),
+            stream_stats(2, "bulk", vec![0.25], 5.0),
+        ];
+        let shed = vec![StreamShedRecord {
+            id: 3,
+            class: "chat".into(),
+            worker_class: "default".into(),
+            steps_done: 2,
+            reason: crate::coordinator::serving::ServeError::
+                DeadlineExceeded,
+        }];
+        let r = ServeReport::new(Vec::new(), Vec::new(), 2.0,
+                                 &[1.0, 0.5, 0.25], 1)
+            .with_streams(4, done, shed);
+        assert_eq!(r.sessions_started, 4);
+        // 3 + 3 + 1 delivered by completed sessions, 2 by the shed one
+        assert!((r.tokens_per_s() - 9.0 / 2.0).abs() < 1e-9);
+        let sections = r.stream_sections();
+        assert_eq!(sections.len(), 2, "one section per SLO class");
+        let chat = sections.iter().find(|s| s.class == "chat").unwrap();
+        assert_eq!((chat.completed, chat.shed), (2, 1));
+        assert_eq!(chat.tokens, 8, "shed session's tokens still count");
+        assert!((chat.tokens_per_s - 4.0).abs() < 1e-9);
+        assert_eq!(chat.p50_session_ms, 10.0);
+        assert_eq!(chat.p99_session_ms, 30.0);
+        assert!((chat.mean_first_token_ms - 10.0).abs() < 1e-9);
+        // trajectory histogram: 2 steps at 1.0, 4 at 0.5, none at 0.25
+        assert_eq!(chat.tier_step_counts,
+                   vec![(1.0, 2), (0.5, 4), (0.25, 0)]);
+        let bulk = sections.iter().find(|s| s.class == "bulk").unwrap();
+        assert_eq!((bulk.completed, bulk.shed, bulk.tokens), (1, 0, 1));
+        assert_eq!(bulk.tier_step_counts,
+                   vec![(1.0, 0), (0.5, 0), (0.25, 1)]);
+    }
+
+    #[test]
+    fn reports_without_streams_have_empty_stream_sections() {
+        let r = report(&[1.0, 2.0]);
+        assert_eq!(r.sessions_started, 0);
+        assert!(r.stream_sections().is_empty());
+        assert_eq!(r.tokens_per_s(), 0.0);
     }
 
     #[test]

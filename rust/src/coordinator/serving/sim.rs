@@ -243,11 +243,56 @@ pub fn pipeline_point_classes(classes: &[(&str, SimSpec, usize)],
     engine.shutdown()
 }
 
+/// Drive one hermetic *streaming* pipeline point: `sessions`
+/// concurrent decode sessions of `decode_steps` tokens each through
+/// `submit_stream` on a sharded engine over `spec` — prompts prefill,
+/// every generated token is a re-admitted decode step batching across
+/// sessions (continuous batching), and each session's stream must end
+/// in `Done`.  Returns the report, whose `stream_done` carries every
+/// session's per-step tier trajectory and whose
+/// [`tokens_per_s`](super::ServeReport::tokens_per_s) is the
+/// streaming throughput figure recorded in `BENCH_serving.json`.
+pub fn streaming_point(spec: SimSpec, workers: usize, shards: usize,
+                       sessions: usize, decode_steps: usize)
+                       -> Result<super::ServeReport> {
+    let cfg = super::ServeConfig::sim()
+        .with_workers(workers)
+        .with_queue_shards(shards)
+        .with_queue_bound(128)
+        .with_max_batch_wait(Duration::from_micros(200));
+    let caps = cfg.capacities();
+    let prompt_len = (spec.seq_len / 2).max(1);
+    let engine = super::ElasticEngine::start(cfg, factory(spec, caps))?;
+    let streams: Vec<super::StreamResponse> = (0..sessions as u64)
+        .map(|id| {
+            engine.submit_stream(super::StreamRequest::new(
+                id, vec![1; prompt_len], decode_steps))
+        })
+        .collect();
+    for s in streams {
+        let stats = s
+            .wait()
+            .map_err(|e| anyhow::anyhow!("sim stream shed: {e}"))?;
+        anyhow::ensure!(stats.steps == decode_steps,
+                        "session {} stopped at {} of {decode_steps} steps",
+                        stats.id, stats.steps);
+    }
+    let report = engine.shutdown()?;
+    anyhow::ensure!(
+        report.sessions_started
+            == report.stream_done.len() + report.stream_shed.len(),
+        "stream logs do not reconcile: {} started, {} done, {} shed",
+        report.sessions_started, report.stream_done.len(),
+        report.stream_shed.len());
+    Ok(report)
+}
+
 /// One row of the machine-readable sim-pipeline record
 /// (`BENCH_serving.json`).
 pub struct BenchRow {
-    /// topology label: "shared" (1 shard), "sharded" (1 per worker), or
-    /// "hetero" (sharded + heterogeneous worker classes)
+    /// topology label: "shared" (1 shard), "sharded" (1 per worker),
+    /// "hetero" (sharded + heterogeneous worker classes), or
+    /// "streaming" (decode sessions through `submit_stream`)
     pub queue: &'static str,
     pub workers: usize,
     pub shards: usize,
@@ -292,6 +337,24 @@ pub fn write_bench_json(path: &std::path::Path, source: &str,
                 ("served".into(),
                  Value::Num(r.report.completions.len() as f64)),
             ];
+            if r.report.sessions_started > 0 {
+                // streaming rows record the session economy: how many
+                // sessions ran, how many tokens landed, and tokens/s
+                let done = &r.report.stream_done;
+                let steps: usize = done.iter().map(|s| s.steps).sum::<usize>()
+                    + r.report.stream_shed.iter()
+                        .map(|s| s.steps_done).sum::<usize>();
+                fields.push(("sessions".into(),
+                             Value::Num(r.report.sessions_started as f64)));
+                fields.push(("sessions_completed".into(),
+                             Value::Num(done.len() as f64)));
+                fields.push(("sessions_shed".into(),
+                             Value::Num(r.report.stream_shed.len() as f64)));
+                fields.push(("stream_tokens".into(),
+                             Value::Num(steps as f64)));
+                fields.push(("tokens_per_s".into(),
+                             Value::Num(r.report.tokens_per_s())));
+            }
             if r.report.worker_classes.len() > 1 {
                 // heterogeneous rows also record how each device class
                 // fared — the per-class controllers are the point
@@ -436,6 +499,40 @@ mod tests {
                    "fast=2:slow=2");
         let secs = row.req("class_sections").unwrap().as_arr().unwrap();
         assert_eq!(secs.len(), 2, "hetero rows carry per-class sections");
+    }
+
+    #[test]
+    fn streaming_point_completes_sessions_and_bench_row_roundtrips() {
+        let spec = SimSpec { batch: 4, seq_len: 8, ..SimSpec::instant() };
+        let report = streaming_point(spec, 2, 2, 6, 5).unwrap();
+        assert_eq!(report.sessions_started, 6);
+        assert_eq!(report.stream_done.len(), 6);
+        assert!(report.stream_shed.is_empty());
+        assert!(report.stream_done.iter().all(
+            |s| s.steps == 5 && s.tiers.len() == 5));
+        assert!(report.tokens_per_s() > 0.0);
+        let rows = vec![BenchRow {
+            queue: "streaming",
+            workers: 2,
+            shards: 2,
+            classes: String::new(),
+            report,
+        }];
+        let path = std::env::temp_dir().join(format!(
+            "ef_bench_streaming_{}.json", std::process::id()));
+        write_bench_json(&path, "sim.rs unit test", spec, 6, &rows)
+            .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let doc = crate::json::parse(&text).unwrap();
+        let row = &doc.req("results").unwrap().as_arr().unwrap()[0];
+        assert_eq!(row.req("queue").unwrap().as_str().unwrap(),
+                   "streaming");
+        assert_eq!(row.req("sessions").unwrap().as_f64().unwrap(), 6.0);
+        assert_eq!(row.req("stream_tokens").unwrap().as_f64().unwrap(),
+                   30.0);
+        let tps = row.req("tokens_per_s").unwrap().as_f64().unwrap();
+        assert!(tps.is_finite() && tps > 0.0, "tokens/s {tps}");
     }
 
     #[test]

@@ -1,0 +1,724 @@
+//! Streaming decode sessions — the engine's first *stateful* workload.
+//!
+//! A one-shot request enters the admission queue once and leaves with a
+//! single `Response`.  A **decode session** re-enters the queue on
+//! every autoregressive step: `EngineHandle::submit_stream` registers a
+//! [`DecodeSession`] in the [`SessionTable`] and admits its step-0 item
+//! (a *prefill* — the prompt pass); each completed step samples one
+//! token, streams it to the client as a [`StreamEvent::Token`], and —
+//! if the session has budget left — is turned by the table into a
+//! fresh *decode* work item that re-enters the same sharded queue.
+//! Decode steps from many sessions therefore batch together under the
+//! ordinary `batcher::batch_key` compatibility rules (continuous
+//! batching), with the [`StepKind`](super::batcher::StepKind)
+//! dimension keeping prefill and decode runs apart.
+//!
+//! Because every step is a fresh pass through admission, every step
+//! gets a **fresh tier decision** from the serving class's
+//! `CapacityController` — the paper's per-step input-dependent compute
+//! made operational.  The worker feeds the controller the session's
+//! *remaining per-step budget* (`deadline slack / steps left`), so a
+//! session that started comfortably at tier 1.0 degrades down the
+//! ladder as its budget burns instead of being shed at the cliff.
+//!
+//! Delivery discipline mirrors the one-shot `Response` slot: the
+//! engine holds exactly one [`StreamSender`] per session (it lives in
+//! the session's table entry), every terminal outcome goes through its
+//! exactly-once guard, and its drop guard emits a final
+//! [`StreamEvent::Shed`] if nothing else did — so a `StreamResponse`
+//! always observes `Token* (Done | Shed)`, across worker panics,
+//! mid-decode shutdown, and expired deadlines (property-tested in
+//! `tests/properties.rs`).
+//!
+//! The channel is bounded, sized to the session (`max_steps` tokens
+//! plus one terminal event): memory per session is bounded while the
+//! engine never blocks on a slow consumer — a worker thread stalled on
+//! one client's unread tokens would stall every session behind it.  A
+//! dropped `StreamResponse` discards further tokens silently.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use super::report::StreamShedRecord;
+use super::{Pending, Request, ServeError, SloClass};
+
+/// One streaming decode request: a prompt to prefill, a token budget,
+/// and the SLO the whole *session* runs under (`deadline` is the total
+/// session budget, submit → last token; `floor_tier` clamps every
+/// step's tier).
+#[derive(Debug, Clone)]
+pub struct StreamRequest {
+    /// caller-chosen correlation id, echoed in stats and records
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    /// number of tokens to generate (clamped to >= 1 at admission)
+    pub max_steps: usize,
+    pub slo: SloClass,
+}
+
+impl StreamRequest {
+    pub fn new(id: u64, prompt: Vec<i32>, max_steps: usize)
+               -> StreamRequest {
+        StreamRequest {
+            id,
+            prompt,
+            max_steps,
+            slo: SloClass::best_effort(),
+        }
+    }
+
+    pub fn with_slo(mut self, slo: SloClass) -> StreamRequest {
+        self.slo = slo;
+        self
+    }
+}
+
+/// What a [`StreamResponse`] yields, in order: zero or more `Token`s
+/// (strictly increasing `step`, starting at 0), then exactly one
+/// terminal `Done` or `Shed`.
+#[derive(Debug, Clone)]
+pub enum StreamEvent {
+    /// one generated token, with the step index and the capacity tier
+    /// the step's batch was served at
+    Token { step: usize, tier: f32, token: i32 },
+    /// the session generated its full `max_steps` budget
+    Done(StreamStats),
+    /// the session was terminated early; no further tokens will come
+    /// (tokens already delivered remain valid)
+    Shed(ServeError),
+}
+
+impl StreamEvent {
+    /// Is this event a terminal (`Done`/`Shed`)?
+    pub fn is_terminal(&self) -> bool {
+        !matches!(self, StreamEvent::Token { .. })
+    }
+}
+
+/// Per-session completion record, delivered inside
+/// [`StreamEvent::Done`] and aggregated by
+/// `ServeReport::stream_sections`.
+#[derive(Debug, Clone)]
+pub struct StreamStats {
+    /// the caller-chosen session id
+    pub id: u64,
+    /// SLO class name the session ran under
+    pub class: String,
+    /// tokens generated (== `max_steps` for a `Done` session)
+    pub steps: usize,
+    /// tier served at each step, in step order — the per-step
+    /// elasticity trajectory
+    pub tiers: Vec<f32>,
+    /// session wall time, submit → last token, ms
+    pub total_ms: f64,
+    /// submit → first token (prefill) latency, ms
+    pub first_token_ms: f64,
+}
+
+enum ChanState {
+    /// terminal not yet enqueued
+    Open,
+    /// terminal enqueued but not yet consumed by the receiver
+    Terminated,
+    /// terminal consumed: `recv` returns `None` from here on
+    Finished,
+}
+
+struct Chan {
+    inner: Mutex<ChanInner>,
+    cv: Condvar,
+}
+
+struct ChanInner {
+    events: VecDeque<StreamEvent>,
+    state: ChanState,
+    rx_alive: bool,
+    /// token-event bound (terminals are always accepted): sized to the
+    /// session at creation, so a full run never blocks the engine
+    cap: usize,
+}
+
+/// Create one session channel: (engine-side sender, caller-side
+/// response).  `cap` bounds buffered token events.
+pub(crate) fn channel(id: u64, cap: usize)
+                      -> (StreamSender, StreamResponse) {
+    let chan = Arc::new(Chan {
+        inner: Mutex::new(ChanInner {
+            events: VecDeque::new(),
+            state: ChanState::Open,
+            rx_alive: true,
+            cap: cap.max(1),
+        }),
+        cv: Condvar::new(),
+    });
+    (StreamSender { chan: chan.clone(), done: false },
+     StreamResponse { id, chan })
+}
+
+/// Engine-side write half of a session stream.  Not `Clone`: there is
+/// exactly one per session (owned by its [`SessionTable`] entry), and
+/// its drop guard emits `Shed(Dropped)` if no explicit terminal did —
+/// the exactly-once backbone, mirroring the one-shot `Responder`.
+pub(crate) struct StreamSender {
+    chan: Arc<Chan>,
+    done: bool,
+}
+
+impl StreamSender {
+    /// Deliver one token event.  Never blocks: the channel is sized to
+    /// the session, and a dropped receiver discards tokens silently.
+    pub(crate) fn token(&self, step: usize, tier: f32, token: i32) {
+        let mut inner = self.chan.inner.lock().unwrap();
+        if !inner.rx_alive || inner.events.len() >= inner.cap {
+            return; // receiver gone, or a runaway producer: drop
+        }
+        inner.events.push_back(StreamEvent::Token { step, tier, token });
+        drop(inner);
+        self.chan.cv.notify_all();
+    }
+
+    /// Terminal success.  Exactly-once: later terminals are ignored.
+    pub(crate) fn finish(mut self, stats: StreamStats) {
+        self.terminate(StreamEvent::Done(stats));
+    }
+
+    /// Terminal failure.  Exactly-once: later terminals are ignored.
+    pub(crate) fn shed(mut self, err: ServeError) {
+        self.terminate(StreamEvent::Shed(err));
+    }
+
+    fn terminate(&mut self, ev: StreamEvent) {
+        if self.done {
+            return;
+        }
+        self.done = true;
+        let mut inner = self.chan.inner.lock().unwrap();
+        if matches!(inner.state, ChanState::Open) {
+            // terminals bypass the token cap: they are the last event
+            inner.events.push_back(ev);
+            inner.state = ChanState::Terminated;
+        }
+        drop(inner);
+        self.chan.cv.notify_all();
+    }
+}
+
+impl Drop for StreamSender {
+    fn drop(&mut self) {
+        self.terminate(StreamEvent::Shed(ServeError::Dropped));
+    }
+}
+
+/// [`StreamResponse::recv_timeout`] gave up: no event arrived within
+/// the timeout, but the stream is still live.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamTimeout;
+
+/// Caller-side read half: consume the session's events as they land.
+/// Yields `Token`s in step order, then exactly one `Done`/`Shed`, then
+/// `None`.  Dropping it mid-stream is safe — the engine keeps decoding
+/// (or shedding) the session; its remaining tokens are discarded.
+pub struct StreamResponse {
+    id: u64,
+    chan: Arc<Chan>,
+}
+
+impl StreamResponse {
+    /// The caller-chosen session id this stream answers.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block for the next event; `None` means the terminal event has
+    /// already been consumed — the stream is over.
+    pub fn recv(&self) -> Option<StreamEvent> {
+        let mut inner = self.chan.inner.lock().unwrap();
+        loop {
+            if let Some(ev) = inner.events.pop_front() {
+                if ev.is_terminal() {
+                    inner.state = ChanState::Finished;
+                }
+                return Some(ev);
+            }
+            if matches!(inner.state, ChanState::Finished) {
+                return None;
+            }
+            inner = self.chan.cv.wait(inner).unwrap();
+        }
+    }
+
+    /// Like [`recv`](Self::recv) but gives up after `timeout`:
+    /// `Err(StreamTimeout)` means nothing arrived in time (the stream
+    /// is still live), `Ok(None)` means the stream is over.
+    pub fn recv_timeout(&self, timeout: std::time::Duration)
+                        -> Result<Option<StreamEvent>, StreamTimeout> {
+        let deadline = Instant::now() + timeout;
+        let mut inner = self.chan.inner.lock().unwrap();
+        loop {
+            if let Some(ev) = inner.events.pop_front() {
+                if ev.is_terminal() {
+                    inner.state = ChanState::Finished;
+                }
+                return Ok(Some(ev));
+            }
+            if matches!(inner.state, ChanState::Finished) {
+                return Ok(None);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(StreamTimeout);
+            }
+            let (guard, _) = self
+                .chan
+                .cv
+                .wait_timeout(inner, deadline - now)
+                .unwrap();
+            inner = guard;
+        }
+    }
+
+    /// Drain the stream to its terminal, discarding token events:
+    /// `Ok(stats)` if the session completed, `Err(reason)` if it was
+    /// shed.
+    pub fn wait(self) -> Result<StreamStats, ServeError> {
+        loop {
+            match self.recv() {
+                Some(StreamEvent::Token { .. }) => continue,
+                Some(StreamEvent::Done(stats)) => return Ok(stats),
+                Some(StreamEvent::Shed(err)) => return Err(err),
+                // unreachable: the terminal precedes None, and we
+                // consume every event ourselves
+                None => return Err(ServeError::Dropped),
+            }
+        }
+    }
+}
+
+impl Drop for StreamResponse {
+    fn drop(&mut self) {
+        let mut inner = self.chan.inner.lock().unwrap();
+        inner.rx_alive = false;
+        inner.events.clear(); // nobody will read them
+    }
+}
+
+/// One live decode session, owned by the [`SessionTable`].
+pub struct DecodeSession {
+    /// caller-chosen id (echoed in events, stats and shed records)
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    /// tokens generated so far, in step order
+    pub generated: Vec<i32>,
+    pub max_steps: usize,
+    pub slo: SloClass,
+    /// session admission stamp — the deadline clock and the base of
+    /// `total_ms`/`first_token_ms`
+    pub(crate) started: Instant,
+    /// tier served at each completed step
+    pub(crate) tiers: Vec<f32>,
+    pub(crate) first_token_ms: f64,
+    pub(crate) sender: StreamSender,
+}
+
+/// Thin, queue-circulating handle for one pending decode step.  The
+/// session's authoritative state (prompt, generated tokens, the stream
+/// sender) stays in the [`SessionTable`]; the item carries only what
+/// the queue's key/slack closures need without a table lock.
+pub(crate) struct StreamStep {
+    /// session key in the table (engine-internal, collision-free even
+    /// when callers reuse ids)
+    pub session: u64,
+    /// 0-based index of the step this item will execute (0 = prefill)
+    pub step: usize,
+    pub max_steps: usize,
+    /// session admission stamp (deadline clock — NOT this step's
+    /// re-admission stamp)
+    pub started: Instant,
+}
+
+/// What the table decided after one executed step.
+pub(crate) enum Advance {
+    /// the session has budget left: re-admit this item
+    Requeue(Pending),
+    /// the session just generated its last token; stats recorded here
+    /// were already delivered through the stream
+    Done(StreamStats),
+    /// the session no longer exists (terminated concurrently) — the
+    /// step result is discarded
+    Gone,
+}
+
+/// Owner of all live decode sessions: registers new sessions, serves
+/// each step's compute row to the workers, and turns every completed
+/// step into either a re-admission or a terminal event.  One instance
+/// per engine, shared by the handle and every worker.
+pub(crate) struct SessionTable {
+    sessions: Mutex<HashMap<u64, DecodeSession>>,
+    next_key: AtomicU64,
+    started: AtomicUsize,
+}
+
+impl Default for SessionTable {
+    fn default() -> SessionTable {
+        SessionTable::new()
+    }
+}
+
+impl SessionTable {
+    pub(crate) fn new() -> SessionTable {
+        SessionTable {
+            sessions: Mutex::new(HashMap::new()),
+            next_key: AtomicU64::new(0),
+            started: AtomicUsize::new(0),
+        }
+    }
+
+    /// Sessions ever admitted (the reconciliation base: every started
+    /// session ends in exactly one completion or shed record).
+    pub(crate) fn sessions_started(&self) -> usize {
+        self.started.load(Ordering::SeqCst)
+    }
+
+    /// Register one new session and build its step-0 (prefill) work
+    /// item.  The caller pushes the item into the admission queue.
+    pub(crate) fn admit(&self, req: StreamRequest, sender: StreamSender,
+                        started: Instant) -> Pending {
+        let key = self.next_key.fetch_add(1, Ordering::SeqCst);
+        let max_steps = req.max_steps.max(1);
+        let slo = req.slo.clone();
+        self.sessions.lock().unwrap().insert(key, DecodeSession {
+            id: req.id,
+            prompt: req.prompt,
+            generated: Vec::new(),
+            max_steps,
+            slo: req.slo,
+            started,
+            tiers: Vec::new(),
+            first_token_ms: 0.0,
+            sender,
+        });
+        self.started.fetch_add(1, Ordering::SeqCst);
+        Pending {
+            req: Request { id: req.id, tokens: Vec::new(), slo },
+            submitted: started,
+            outcome: super::Outcome::Stream(StreamStep {
+                session: key,
+                step: 0,
+                max_steps,
+                started,
+            }),
+        }
+    }
+
+    /// The compute row for one session's next step: the last `seq_len`
+    /// tokens of `prompt ++ generated` (a sliding window once the
+    /// sequence outgrows the executor shape; `form_rows` zero-pads
+    /// shorter rows).  `None` if the session no longer exists.
+    pub(crate) fn compute_row(&self, key: u64, seq_len: usize)
+                              -> Option<Vec<i32>> {
+        let sessions = self.sessions.lock().unwrap();
+        let sess = sessions.get(&key)?;
+        let total = sess.prompt.len() + sess.generated.len();
+        let start = total.saturating_sub(seq_len);
+        let mut row = Vec::with_capacity(total - start);
+        if start < sess.prompt.len() {
+            row.extend_from_slice(&sess.prompt[start..]);
+            row.extend_from_slice(&sess.generated);
+        } else {
+            row.extend_from_slice(
+                &sess.generated[start - sess.prompt.len()..]);
+        }
+        Some(row)
+    }
+
+    /// Record one executed step: deliver the token event, then either
+    /// hand back the session's next work item (continuous batching:
+    /// the caller re-admits it) or complete the session.  `now` is the
+    /// worker's post-execution stamp.
+    pub(crate) fn advance(&self, st: &StreamStep, token: i32, tier: f32,
+                          now: Instant) -> Advance {
+        let mut sessions = self.sessions.lock().unwrap();
+        let Some(sess) = sessions.get_mut(&st.session) else {
+            return Advance::Gone;
+        };
+        sess.generated.push(token);
+        sess.tiers.push(tier);
+        if st.step == 0 {
+            sess.first_token_ms =
+                now.saturating_duration_since(sess.started)
+                    .as_secs_f64() * 1e3;
+        }
+        sess.sender.token(st.step, tier, token);
+        if sess.generated.len() >= sess.max_steps {
+            let sess = sessions.remove(&st.session).unwrap();
+            drop(sessions);
+            let stats = StreamStats {
+                id: sess.id,
+                class: sess.slo.name.clone(),
+                steps: sess.generated.len(),
+                tiers: sess.tiers.clone(),
+                total_ms: now
+                    .saturating_duration_since(sess.started)
+                    .as_secs_f64() * 1e3,
+                first_token_ms: sess.first_token_ms,
+            };
+            sess.sender.finish(stats.clone());
+            return Advance::Done(stats);
+        }
+        let req = Request {
+            id: sess.id,
+            tokens: Vec::new(),
+            slo: sess.slo.clone(),
+        };
+        drop(sessions);
+        Advance::Requeue(Pending {
+            req,
+            submitted: now,
+            outcome: super::Outcome::Stream(StreamStep {
+                session: st.session,
+                step: st.step + 1,
+                max_steps: st.max_steps,
+                started: st.started,
+            }),
+        })
+    }
+
+    /// Terminate one session with a `Shed` event and return its record
+    /// for the engine's stream-shed log.  `None` if the session no
+    /// longer exists (already terminated).
+    pub(crate) fn shed(&self, key: u64, err: ServeError,
+                       worker_class: &str) -> Option<StreamShedRecord> {
+        let sess = self.sessions.lock().unwrap().remove(&key)?;
+        let rec = StreamShedRecord {
+            id: sess.id,
+            class: sess.slo.name.clone(),
+            worker_class: worker_class.to_string(),
+            steps_done: sess.generated.len(),
+            reason: err.clone(),
+        };
+        sess.sender.shed(err);
+        Some(rec)
+    }
+
+    /// Terminate every remaining session (engine shutdown: sessions
+    /// whose in-flight step died with a worker, or that never got one).
+    pub(crate) fn shed_all(&self, err: ServeError, worker_class: &str)
+                           -> Vec<StreamShedRecord> {
+        let drained: Vec<DecodeSession> = {
+            let mut sessions = self.sessions.lock().unwrap();
+            sessions.drain().map(|(_, s)| s).collect()
+        };
+        drained
+            .into_iter()
+            .map(|sess| {
+                let rec = StreamShedRecord {
+                    id: sess.id,
+                    class: sess.slo.name.clone(),
+                    worker_class: worker_class.to_string(),
+                    steps_done: sess.generated.len(),
+                    reason: err.clone(),
+                };
+                sess.sender.shed(err.clone());
+                rec
+            })
+            .collect()
+    }
+
+    /// Number of currently live sessions (test observability).
+    #[cfg(test)]
+    pub(crate) fn live(&self) -> usize {
+        self.sessions.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn channel_delivers_tokens_then_exactly_one_terminal() {
+        let (tx, rx) = channel(7, 8);
+        tx.token(0, 1.0, 42);
+        tx.token(1, 0.5, 43);
+        tx.finish(StreamStats {
+            id: 7,
+            class: "best-effort".into(),
+            steps: 2,
+            tiers: vec![1.0, 0.5],
+            total_ms: 1.0,
+            first_token_ms: 0.5,
+        });
+        assert_eq!(rx.id(), 7);
+        match rx.recv() {
+            Some(StreamEvent::Token { step: 0, tier, token: 42 }) => {
+                assert_eq!(tier, 1.0);
+            }
+            other => panic!("want token 0, got {other:?}"),
+        }
+        assert!(matches!(rx.recv(),
+                         Some(StreamEvent::Token { step: 1, .. })));
+        match rx.recv() {
+            Some(StreamEvent::Done(stats)) => {
+                assert_eq!(stats.steps, 2);
+                assert_eq!(stats.tiers, vec![1.0, 0.5]);
+            }
+            other => panic!("want Done, got {other:?}"),
+        }
+        assert!(rx.recv().is_none(), "after the terminal: None forever");
+        assert!(rx.recv().is_none());
+    }
+
+    #[test]
+    fn dropped_sender_sheds_with_dropped() {
+        let (tx, rx) = channel(0, 4);
+        tx.token(0, 1.0, 1);
+        drop(tx); // no explicit terminal: the drop guard must emit one
+        assert!(matches!(rx.recv(), Some(StreamEvent::Token { .. })));
+        match rx.recv() {
+            Some(StreamEvent::Shed(ServeError::Dropped)) => {}
+            other => panic!("want Shed(Dropped), got {other:?}"),
+        }
+        assert!(rx.recv().is_none());
+    }
+
+    #[test]
+    fn explicit_shed_wins_over_drop_guard() {
+        let (tx, rx) = channel(0, 4);
+        tx.shed(ServeError::ShuttingDown);
+        // shed consumed the sender; its drop guard must not double-fire
+        match rx.recv() {
+            Some(StreamEvent::Shed(ServeError::ShuttingDown)) => {}
+            other => panic!("want Shed(ShuttingDown), got {other:?}"),
+        }
+        assert!(rx.recv().is_none());
+    }
+
+    #[test]
+    fn recv_timeout_distinguishes_live_from_finished() {
+        let (tx, rx) = channel(0, 4);
+        assert!(rx.recv_timeout(Duration::from_millis(10)).is_err(),
+                "live stream with no event must time out");
+        tx.shed(ServeError::DeadlineExceeded);
+        assert!(matches!(rx.recv_timeout(Duration::from_secs(5)),
+                         Ok(Some(StreamEvent::Shed(_)))));
+        assert!(matches!(rx.recv_timeout(Duration::from_millis(1)),
+                         Ok(None)),
+                "finished stream must report None, not a timeout");
+    }
+
+    #[test]
+    fn dropped_receiver_discards_tokens_but_sender_survives() {
+        let (tx, rx) = channel(0, 4);
+        drop(rx);
+        tx.token(0, 1.0, 1); // must not block or panic
+        tx.finish(StreamStats {
+            id: 0,
+            class: "x".into(),
+            steps: 1,
+            tiers: vec![1.0],
+            total_ms: 0.0,
+            first_token_ms: 0.0,
+        });
+    }
+
+    #[test]
+    fn table_windows_compute_rows_to_seq_len() {
+        let table = SessionTable::new();
+        let (tx, _rx) = channel(1, 8);
+        let pending = table.admit(
+            StreamRequest::new(1, vec![10, 11, 12], 4), tx,
+            Instant::now());
+        let key = match &pending.outcome {
+            crate::coordinator::serving::Outcome::Stream(st) => st.session,
+            _ => panic!("stream admit must yield a stream item"),
+        };
+        assert_eq!(table.sessions_started(), 1);
+        assert_eq!(table.live(), 1);
+        // prompt shorter than seq_len: the whole prompt
+        assert_eq!(table.compute_row(key, 8).unwrap(), vec![10, 11, 12]);
+        // prompt longer than seq_len: the tail window
+        assert_eq!(table.compute_row(key, 2).unwrap(), vec![11, 12]);
+        // generated tokens extend the window
+        let st = StreamStep {
+            session: key, step: 0, max_steps: 4,
+            started: Instant::now(),
+        };
+        match table.advance(&st, 99, 1.0, Instant::now()) {
+            Advance::Requeue(_) => {}
+            _ => panic!("budget left: must requeue"),
+        }
+        assert_eq!(table.compute_row(key, 3).unwrap(), vec![11, 12, 99]);
+        // unknown keys are None, not a panic
+        assert!(table.compute_row(key + 100, 4).is_none());
+    }
+
+    #[test]
+    fn table_completes_at_max_steps_and_sheds_exactly_once() {
+        let table = SessionTable::new();
+        let (tx, rx) = channel(5, 8);
+        let t0 = Instant::now();
+        let pending =
+            table.admit(StreamRequest::new(5, vec![1], 2), tx, t0);
+        let key = match &pending.outcome {
+            crate::coordinator::serving::Outcome::Stream(st) => st.session,
+            _ => panic!("stream admit must yield a stream item"),
+        };
+        let st0 = StreamStep { session: key, step: 0, max_steps: 2,
+                               started: t0 };
+        let st1 = match table.advance(&st0, 7, 1.0, Instant::now()) {
+            Advance::Requeue(p) => match p.outcome {
+                crate::coordinator::serving::Outcome::Stream(st) => st,
+                _ => panic!("requeue must stay a stream item"),
+            },
+            _ => panic!("step 0 of 2 must requeue"),
+        };
+        match table.advance(&st1, 8, 0.5, Instant::now()) {
+            Advance::Done(stats) => {
+                assert_eq!(stats.steps, 2);
+                assert_eq!(stats.tiers, vec![1.0, 0.5]);
+                assert!(stats.first_token_ms >= 0.0);
+            }
+            _ => panic!("step 1 of 2 must complete"),
+        }
+        assert_eq!(table.live(), 0);
+        // the session is gone: advancing or shedding it is a no-op
+        assert!(matches!(table.advance(&st1, 9, 1.0, Instant::now()),
+                         Advance::Gone));
+        assert!(table.shed(key, ServeError::ShuttingDown, "engine")
+            .is_none());
+        // the stream saw both tokens then exactly one Done
+        assert!(matches!(rx.recv(),
+                         Some(StreamEvent::Token { step: 0, token: 7, .. })));
+        assert!(matches!(rx.recv(),
+                         Some(StreamEvent::Token { step: 1, token: 8, .. })));
+        assert!(matches!(rx.recv(), Some(StreamEvent::Done(_))));
+        assert!(rx.recv().is_none());
+    }
+
+    #[test]
+    fn shed_all_terminates_every_live_session() {
+        let table = SessionTable::new();
+        let mut rxs = Vec::new();
+        for id in 0..3u64 {
+            let (tx, rx) = channel(id, 4);
+            table.admit(StreamRequest::new(id, vec![1], 4), tx,
+                        Instant::now());
+            rxs.push(rx);
+        }
+        let recs = table.shed_all(ServeError::ShuttingDown, "engine");
+        assert_eq!(recs.len(), 3);
+        assert!(recs.iter().all(|r| r.worker_class == "engine"
+            && r.steps_done == 0
+            && r.reason == ServeError::ShuttingDown));
+        assert_eq!(table.live(), 0);
+        for rx in rxs {
+            match rx.wait() {
+                Err(ServeError::ShuttingDown) => {}
+                other => panic!("want ShuttingDown, got {other:?}"),
+            }
+        }
+    }
+}

@@ -14,9 +14,10 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::batcher::{batch_key, form_batch};
-use super::report::{Completion, ShedRecord};
-use super::{EngineShared, Pending, Reply, ServeError};
+use super::batcher::{batch_key_for, form_rows};
+use super::report::{Completion, ShedCause, ShedRecord, StreamShedRecord};
+use super::stream::Advance;
+use super::{EngineShared, Outcome, Pending, Reply, ServeError};
 
 #[cfg(feature = "pjrt")]
 use super::tier_matches;
@@ -159,21 +160,75 @@ impl Executor for XlaExecutor {
     }
 }
 
-/// The worker loop: pop a run of *class-compatible* admitted requests
+/// Greedy sampling: the argmax index of one logits row.  Real vocab
+/// heads yield a token id; the sim backend's single-logit rows yield 0.
+fn sample_token(row: &[f32]) -> i32 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in row.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Terminate every item of a failing batch: one-shots resolve to
+/// `ExecFailed`, decode sessions are shed through the session table
+/// (their stream's terminal event) and logged to the engine's
+/// stream-shed record under one lock.
+fn fail_batch(shared: &EngineShared, items: Vec<Pending>, msg: &str,
+              class_name: &str) {
+    let mut recs: Vec<StreamShedRecord> = Vec::new();
+    for p in items {
+        match p.outcome {
+            Outcome::OneShot(responder) => responder
+                .fulfil(Err(ServeError::ExecFailed(msg.to_string()))),
+            Outcome::Stream(st) => {
+                if let Some(rec) = shared.sessions.shed(
+                    st.session,
+                    ServeError::ExecFailed(msg.to_string()),
+                    class_name)
+                {
+                    recs.push(rec);
+                }
+            }
+        }
+    }
+    if !recs.is_empty() {
+        shared.stream_shed.lock().unwrap().append(&mut recs);
+    }
+}
+
+/// The worker loop: pop a run of *class-compatible* admitted work items
 /// (the tightest-slack available head seeds the run — deadline-aware
 /// stealing — own shard winning ties, siblings drained when it runs
 /// dry), shed the ones whose deadline already expired, pick a tier from
-/// the global backlog plus the batch's SLO constraints via **this
-/// worker class's own** capacity controller, form the padded batch,
-/// execute, and resolve each request's [`super::Response`] with its
-/// logits row and timings.  Returns the number of batches executed;
-/// exits when the queue is closed and drained.
+/// the global backlog plus the run's SLO constraints via **this worker
+/// class's own** capacity controller, form the padded batch, execute,
+/// and route each item's result: a one-shot request's [`super::Response`]
+/// resolves with its logits row and timings; a decode step streams its
+/// sampled token to the session's client and is turned by the
+/// [`super::stream::SessionTable`] into either a **re-admission** of
+/// the session's next step (continuous batching) or the session's
+/// terminal `Done`.  Returns the number of batches executed; exits when
+/// the queue is closed and drained.
 ///
-/// Batch compatibility is [`batch_key`]: every popped run shares one
-/// floor rung and one deadline band, so a quality floor never drags
-/// best-effort neighbours up a tier and a tight deadline never drags
-/// relaxed neighbours down one (the strictest constraint in a batch
-/// binds all of it — so batches are formed to agree on constraints).
+/// Batch compatibility is [`batch_key_for`]: every popped run shares
+/// one step kind (prefill vs decode — the two workloads never mix in a
+/// batch), one floor rung and one deadline band, so a quality floor
+/// never drags best-effort neighbours up a tier and a tight deadline
+/// never drags relaxed neighbours down one (the strictest constraint
+/// in a batch binds all of it — so batches are formed to agree on
+/// constraints).
+///
+/// Deadline clocks differ per workload: a one-shot's budget runs from
+/// its admission stamp; a decode session's budget runs from *session*
+/// admission, and the slack fed to the controller is the remaining
+/// budget **divided by the steps left** — the session's per-step
+/// allowance — so a session degrades tiers gradually as budget burns
+/// instead of riding the top tier into a cliff-edge shed.
 ///
 /// All timings are measured on one monotonic clock: `submitted` (the
 /// admission stamp) -> `exec_start` (stamped immediately before the
@@ -191,18 +246,16 @@ pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
     loop {
         let popped = shared.queue.pop_batch_keyed(
             worker, batch, shared.max_batch_wait,
-            |p: &Pending| batch_key(&p.req.slo, &shared.caps),
-            // steal priority: remaining deadline budget in ms (may have
-            // gone negative — an expired request is the most urgent of
-            // all: it is shed below, freeing its queue slot and
-            // resolving its Response promptly)
-            |p: &Pending| match p.req.slo.deadline {
-                None => f64::INFINITY,
-                Some(d) => {
-                    d.as_secs_f64() * 1e3
-                        - p.submitted.elapsed().as_secs_f64() * 1e3
-                }
-            });
+            |p: &Pending| {
+                batch_key_for(p.kind(), &p.req.slo, &shared.caps)
+            },
+            // steal priority: remaining deadline budget in ms, per
+            // step for decode sessions (may have gone negative — an
+            // expired item is the most urgent of all: it is shed
+            // below, freeing its queue slot and resolving its client
+            // promptly)
+            |p: &Pending| p.slack_ms_at(Instant::now())
+                .unwrap_or(f64::INFINITY));
         if popped.is_empty() {
             return Ok(batches); // closed and drained
         }
@@ -211,21 +264,34 @@ pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
         let now = Instant::now();
         let mut live: Vec<Pending> = Vec::with_capacity(popped.len());
         let mut expired: Vec<ShedRecord> = Vec::new();
+        let mut stream_sheds: Vec<StreamShedRecord> = Vec::new();
         let mut floor = 0.0f32;
         let mut slack_ms: Option<f64> = None;
         for p in popped {
-            let waited = now.saturating_duration_since(p.submitted);
-            if let Some(deadline) = p.req.slo.deadline {
-                if waited >= deadline {
-                    expired.push(ShedRecord {
-                        id: p.req.id,
-                        class: p.req.slo.name.clone(),
-                        worker_class: class_name.clone(),
-                    });
-                    p.responder.fulfil(Err(ServeError::DeadlineExceeded));
-                    continue;
+            if p.deadline_expired_at(now) {
+                match p.outcome {
+                    Outcome::OneShot(responder) => {
+                        expired.push(ShedRecord {
+                            id: p.req.id,
+                            class: p.req.slo.name.clone(),
+                            worker_class: class_name.clone(),
+                            cause: ShedCause::DeadlineExceeded,
+                        });
+                        responder
+                            .fulfil(Err(ServeError::DeadlineExceeded));
+                    }
+                    Outcome::Stream(st) => {
+                        if let Some(rec) = shared.sessions.shed(
+                            st.session, ServeError::DeadlineExceeded,
+                            &class_name)
+                        {
+                            stream_sheds.push(rec);
+                        }
+                    }
                 }
-                let s = (deadline - waited).as_secs_f64() * 1e3;
+                continue;
+            }
+            if let Some(s) = p.slack_ms_at(now) {
                 slack_ms = Some(match slack_ms {
                     Some(prev) => prev.min(s),
                     None => s,
@@ -239,43 +305,64 @@ pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
             // one-lock-per-batch completions path below
             shared.sheds.lock().unwrap().append(&mut expired);
         }
+        if !stream_sheds.is_empty() {
+            shared.stream_shed.lock().unwrap().append(&mut stream_sheds);
+        }
         if live.is_empty() {
             continue; // the whole run was past-deadline
         }
         // this class's controller sees the global post-pop backlog (one
         // atomic load off the sharded queue's depth gauge — no queue
-        // lock) plus this batch's tightest deadline slack and strictest
-        // quality floor; the floor is the max over a run that already
-        // shares one floor rung, so the clamp binds every member alike
+        // lock) plus this batch's tightest deadline slack (per-step for
+        // decode) and strictest quality floor; the floor is the max
+        // over a run that already shares one floor rung, so the clamp
+        // binds every member alike.  Decode steps get this decision
+        // FRESH every step — per-step elastic compute.
         let tier = controller.lock().unwrap().choose_for_batch(
             shared.queue.len(), floor, slack_ms);
-        // split each Pending into its request (consumed by form_batch)
-        // and its response half; form_batch preserves order, so the two
-        // vectors stay aligned
-        let mut meta = Vec::with_capacity(live.len());
-        let mut reqs = Vec::with_capacity(live.len());
-        for p in live {
-            meta.push((p.submitted, p.responder));
-            reqs.push(p.req);
+        // build each item's compute row: a one-shot's row is its
+        // request tokens, a decode step's is the session's current
+        // window from the table; `items` and `rows` stay aligned
+        let mut rows: Vec<Vec<i32>> = Vec::with_capacity(live.len());
+        let mut items: Vec<Pending> = Vec::with_capacity(live.len());
+        for mut p in live {
+            match &p.outcome {
+                Outcome::OneShot(_) => {
+                    rows.push(std::mem::take(&mut p.req.tokens));
+                }
+                Outcome::Stream(st) => {
+                    match shared.sessions.compute_row(st.session, seq_len)
+                    {
+                        Some(row) => rows.push(row),
+                        // session already terminated: drop the stale
+                        // step (its stream got its terminal elsewhere)
+                        None => continue,
+                    }
+                }
+            }
+            items.push(p);
         }
-        let formed = form_batch(reqs, batch, seq_len);
+        if items.is_empty() {
+            continue;
+        }
+        let row_refs: Vec<&[i32]> =
+            rows.iter().map(|r| r.as_slice()).collect();
+        let tokens = form_rows(&row_refs, batch, seq_len);
         // stamped after batch formation, immediately before the backend
         // call: the documented clock is admission -> exec start -> done,
         // and host-side formation is queue time, not exec time
         let exec_start = Instant::now();
-        let out = match exec.execute(tier, &formed.tokens) {
+        let out = match exec.execute(tier, &tokens) {
             Ok(out) => out,
             Err(e) => {
                 let msg = format!(
                     "{} worker {worker}: tier {tier} batch of {}: {e:#}",
-                    exec.name(), formed.requests.len());
-                for (_, responder) in meta {
-                    responder
-                        .fulfil(Err(ServeError::ExecFailed(msg.clone())));
-                }
+                    exec.name(), items.len());
+                let n = items.len();
+                fail_batch(shared, items, &msg, &class_name);
                 return Err(e.context(format!(
-                    "{} worker {worker}: tier {tier} batch of {}",
-                    exec.name(), formed.requests.len())));
+                    "{} worker {worker}: tier {tier} batch of {n}",
+                    exec.name())));
             }
         };
         let done = Instant::now();
@@ -293,38 +380,84 @@ pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
                 "{} worker {worker}: executor returned {} logits, not a \
                  multiple of batch {batch}",
                 exec.name(), out.logits.len());
-            for (_, responder) in meta {
-                responder.fulfil(Err(ServeError::ExecFailed(msg.clone())));
-            }
+            fail_batch(shared, items, &msg, &class_name);
             return Err(anyhow::anyhow!(msg));
         }
-        let n = formed.requests.len();
+        let n = items.len();
         let row_len = out.logits.len() / batch;
         let mut batch_completions = Vec::with_capacity(n);
-        for (i, (req, (submitted, responder))) in
-            formed.requests.into_iter().zip(meta).enumerate()
-        {
-            let queue_ms = exec_start
-                .saturating_duration_since(submitted)
-                .as_secs_f64() * 1e3;
-            let completion = Completion {
-                id: req.id,
-                class: req.slo.name.clone(),
-                tier,
-                worker,
-                worker_class: class_name.clone(),
-                queue_ms,
-                exec_ms,
-                total_ms: queue_ms + exec_ms,
-                batch_size: n,
-            };
-            batch_completions.push(completion.clone());
-            let logits =
-                out.logits[i * row_len..(i + 1) * row_len].to_vec();
-            responder.fulfil(Ok(Reply { completion, logits }));
+        let mut stream_done = Vec::new();
+        let mut stream_sheds: Vec<StreamShedRecord> = Vec::new();
+        for (i, p) in items.into_iter().enumerate() {
+            let row = &out.logits[i * row_len..(i + 1) * row_len];
+            match p.outcome {
+                Outcome::OneShot(responder) => {
+                    let queue_ms = exec_start
+                        .saturating_duration_since(p.submitted)
+                        .as_secs_f64() * 1e3;
+                    let completion = Completion {
+                        id: p.req.id,
+                        class: p.req.slo.name.clone(),
+                        tier,
+                        worker,
+                        worker_class: class_name.clone(),
+                        queue_ms,
+                        exec_ms,
+                        total_ms: queue_ms + exec_ms,
+                        batch_size: n,
+                    };
+                    batch_completions.push(completion.clone());
+                    responder.fulfil(Ok(Reply {
+                        completion,
+                        logits: row.to_vec(),
+                    }));
+                }
+                Outcome::Stream(st) => {
+                    // sample the step's token, stream it, and let the
+                    // session table turn the completed step into a
+                    // re-admission or the session's terminal
+                    let token = sample_token(row);
+                    match shared.sessions.advance(&st, token, tier, done)
+                    {
+                        Advance::Requeue(next) => {
+                            let urgent =
+                                next.req.slo.deadline.is_some();
+                            if let Err(stale) =
+                                shared.queue.requeue(next, urgent)
+                            {
+                                // queue closed mid-decode: terminate
+                                // the session now, not at a step that
+                                // will never run
+                                if let Outcome::Stream(st) =
+                                    stale.outcome
+                                {
+                                    if let Some(rec) =
+                                        shared.sessions.shed(
+                                            st.session,
+                                            ServeError::ShuttingDown,
+                                            &class_name)
+                                    {
+                                        stream_sheds.push(rec);
+                                    }
+                                }
+                            }
+                        }
+                        Advance::Done(stats) => stream_done.push(stats),
+                        Advance::Gone => {}
+                    }
+                }
+            }
         }
-        // one lock for the whole batch, not one per request
-        shared.completions.lock().unwrap().extend(batch_completions);
+        // one lock per log for the whole batch, not one per item
+        if !batch_completions.is_empty() {
+            shared.completions.lock().unwrap().extend(batch_completions);
+        }
+        if !stream_done.is_empty() {
+            shared.stream_done.lock().unwrap().append(&mut stream_done);
+        }
+        if !stream_sheds.is_empty() {
+            shared.stream_shed.lock().unwrap().append(&mut stream_sheds);
+        }
         batches += 1;
     }
 }

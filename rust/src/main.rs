@@ -13,6 +13,7 @@
 //!                  [--batch B] [--seq-len T] [--queue-bound Q]
 //!                  [--queue-shards K] [--depth-per-tier D] [--seed S]
 //!                  [--worker-classes fast=2:slow=2@4]
+//!                  [--stream N] [--decode-steps K]
 //!   info           --config C
 //!
 //! Everything except `serve-sim` runs off the AOT artifacts in
@@ -26,7 +27,7 @@ use anyhow::{bail, Result};
 use elastiformer::cli::Args;
 use elastiformer::coordinator::serving::{
     sim, Admission, ElasticEngine, Request, Response, ServeConfig,
-    ServeReport, SimSpec,
+    ServeReport, SimSpec, StreamRequest,
 };
 use elastiformer::rng::Rng;
 
@@ -87,6 +88,10 @@ elastiformer — ElastiFormer reproduction (see DESIGN.md)
               --worker-classes name=count[@latency-mult]:...
               (e.g. fast=2:slow=2@4 — a heterogeneous fleet with
                per-class capacity controllers; overrides --workers)
+              --stream N --decode-steps K
+              (N streaming decode sessions of K tokens each ride along
+               with the one-shot load — continuous batching with
+               per-step tier decisions; per-class stream report lines)
   elastiformer info --config lm_tiny";
 
 /// The artifact-backed subcommands need the PJRT runtime layer; when
@@ -366,11 +371,16 @@ fn print_report(report: &ServeReport, failed: usize) {
 fn cmd_serve_sim(args: &Args) -> Result<()> {
     args.check_known(&["requests", "rates", "workers", "batch", "seq-len",
                        "queue-bound", "queue-shards", "depth-per-tier",
-                       "seed", "worker-classes"])?;
+                       "seed", "worker-classes", "stream",
+                       "decode-steps"])?;
     let n = args.usize_or("requests", 512)?;
     let workers = args.usize_or("workers", 4)?;
     let seed = args.u64_or("seed", 42)?;
     let queue_bound = args.usize_or("queue-bound", 64)?;
+    // streaming sidecar load: N decode sessions of K tokens each,
+    // interleaved with the one-shot arrivals (continuous batching)
+    let stream_n = args.usize_or("stream", 0)?;
+    let decode_steps = args.usize_or("decode-steps", 16)?;
     // 0 = auto (one admission shard per worker); 1 = the classic
     // shared queue, kept for A/B comparison
     let queue_shards = args.usize_or("queue-shards", 0)?;
@@ -397,6 +407,9 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
     if spec.batch == 0 || spec.seq_len == 0 {
         bail!("--batch and --seq-len must be >= 1");
     }
+    if stream_n > 0 && decode_steps == 0 {
+        bail!("--decode-steps must be >= 1 when --stream is set");
+    }
 
     let total_workers = match &classes {
         Some(cs) => cs.iter().map(|(_, w, _)| *w).sum::<usize>(),
@@ -412,14 +425,20 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
     };
     println!("serve-sim: {n} requests per point, {total_workers} \
               worker(s) ({topology}), batch {} x seq {}, queue bound \
-              {queue_bound}, {} admission shard(s)",
+              {queue_bound}, {} admission shard(s){}",
              spec.batch, spec.seq_len,
-             if queue_shards == 0 { total_workers } else { queue_shards });
+             if queue_shards == 0 { total_workers } else { queue_shards },
+             if stream_n > 0 {
+                 format!(", {stream_n} decode session(s) x \
+                          {decode_steps} step(s)")
+             } else {
+                 String::new()
+             });
     for rate in rates {
         let (report, shed) = run_sim_point(spec, workers, queue_bound,
                                            queue_shards, depth_per_tier,
                                            classes.as_deref(), n, rate,
-                                           seed)?;
+                                           seed, stream_n, decode_steps)?;
         let tiers: Vec<String> = report
             .tier_counts
             .iter()
@@ -433,6 +452,25 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
                  report.throughput_rps(), report.latency_p(0.5),
                  report.latency_p(0.99), report.mean_capacity(),
                  tiers.join(" "));
+        if stream_n > 0 {
+            // streaming economy per SLO class: session split, token
+            // throughput, first-token latency, and how the per-step
+            // tier trajectory distributed over the ladder
+            for s in report.stream_sections() {
+                let tiers: Vec<String> = s
+                    .tier_step_counts
+                    .iter()
+                    .map(|(t, c)| format!("{t:.2}:{c}"))
+                    .collect();
+                println!("    stream {:<10} done {:>4} shed {:>3} | \
+                          {:>6} tok {:>8.1} tok/s | first-token \
+                          {:>7.2} ms | p99 session {:>8.2} ms | \
+                          step tiers {}",
+                         s.class, s.completed, s.shed, s.tokens,
+                         s.tokens_per_s, s.mean_first_token_ms,
+                         s.p99_session_ms, tiers.join(" "));
+            }
+        }
         if classes.is_some() {
             // per-worker-class split: each class's share, tier mix and
             // the exec-time model its own controller learned
@@ -493,7 +531,8 @@ fn parse_worker_classes(s: &str) -> Result<Vec<(String, usize, f64)>> {
 fn run_sim_point(spec: SimSpec, workers: usize, queue_bound: usize,
                  queue_shards: usize, depth_per_tier: f64,
                  classes: Option<&[(String, usize, f64)]>, n: usize,
-                 rate: f64, seed: u64) -> Result<(ServeReport, usize)> {
+                 rate: f64, seed: u64, stream_n: usize,
+                 decode_steps: usize) -> Result<(ServeReport, usize)> {
     let mut cfg = ServeConfig::sim()
         .with_workers(workers)
         .with_queue_bound(queue_bound)
@@ -520,8 +559,21 @@ fn run_sim_point(spec: SimSpec, workers: usize, queue_bound: usize,
     let seq_len = spec.seq_len;
     let mut rng = Rng::new(seed ^ 0xA11F);
     let mut responses = Vec::with_capacity(n);
+    let mut streams = Vec::with_capacity(stream_n);
+    let stream_every =
+        if stream_n > 0 { (n / stream_n).max(1) } else { usize::MAX };
     let mut shed = 0usize;
     for id in 0..n as u64 {
+        // streaming sidecar: spread session starts across the arrival
+        // process so decode steps overlap (and batch) with one-shot
+        // prefill traffic — the continuous-batching demonstration
+        if streams.len() < stream_n && id as usize % stream_every == 0 {
+            let prompt: Vec<i32> = (0..seq_len.min(8))
+                .map(|i| ((id as usize + i) % 97) as i32)
+                .collect();
+            streams.push(engine.submit_stream(StreamRequest::new(
+                1_000_000 + id, prompt, decode_steps)));
+        }
         let tokens: Vec<i32> = (0..seq_len)
             .map(|i| ((id as usize + i) % 97) as i32)
             .collect();
@@ -537,9 +589,31 @@ fn run_sim_point(spec: SimSpec, workers: usize, queue_bound: usize,
             std::thread::sleep(Duration::from_secs_f64(gap));
         }
     }
+    // --stream larger than --requests (or a sparse interleave) leaves
+    // sessions unstarted after the arrival loop: start the remainder
+    // now rather than silently capping the requested streaming load
+    while streams.len() < stream_n {
+        let id = 2_000_000 + streams.len() as u64;
+        let prompt: Vec<i32> = (0..seq_len.min(8))
+            .map(|i| ((id as usize + i) % 97) as i32)
+            .collect();
+        streams.push(engine.submit_stream(StreamRequest::new(
+            id, prompt, decode_steps)));
+    }
     let failed = drain_responses(responses);
     if failed > 0 {
         bail!("{failed} admitted sim requests resolved with an error");
+    }
+    // best-effort sessions on an open engine must complete; drain
+    // their terminals before shutdown so the report sees them as Done
+    let mut stream_failed = 0usize;
+    for s in streams {
+        if s.wait().is_err() {
+            stream_failed += 1;
+        }
+    }
+    if stream_failed > 0 {
+        bail!("{stream_failed} decode session(s) were shed unexpectedly");
     }
     let report = engine.shutdown()?;
     Ok((report, shed))

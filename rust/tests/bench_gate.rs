@@ -3,10 +3,11 @@
 //! single-deque admission queue vs the sharded work-stealing queue at
 //! 4 workers under a near-zero-latency `SimSpec` (host overhead
 //! dominates), plus a heterogeneous fast/slow two-class topology
-//! (per-worker-class capacity controllers) — and writes the
-//! machine-readable `BENCH_serving.json` at the repo root, so every
-//! tier-1 `cargo test` run refreshes the perf record even where
-//! `cargo bench` never runs.
+//! (per-worker-class capacity controllers) and a streaming decode
+//! point (concurrent sessions through `submit_stream`, tokens/s) —
+//! and writes the machine-readable `BENCH_serving.json` at the repo
+//! root, so every tier-1 `cargo test` run refreshes the perf record
+//! even where `cargo bench` never runs.
 //!
 //! Debug-build timings on shared CI runners are noisy, so this test
 //! asserts *structure* (exactly-once service under both topologies, a
@@ -66,6 +67,23 @@ fn bench_gate_records_shared_vs_sharded_pipeline() {
     rows.push(BenchRow { queue: "hetero", workers, shards: workers,
                          classes: "fast=2:slow=2".into(),
                          report: hetero });
+    // streaming decode row: concurrent sessions through submit_stream,
+    // every token a re-admitted decode step (continuous batching).
+    // streaming_point itself asserts every session completes and the
+    // session logs reconcile (started == done + shed).
+    let (sessions, decode_steps) = (32usize, 8usize);
+    let streaming =
+        sim::streaming_point(spec, workers, workers, sessions,
+                             decode_steps)
+            .unwrap_or_else(|e| panic!("streaming pipeline failed: {e:#}"));
+    assert_eq!(streaming.stream_done.len(), sessions,
+               "streaming: sessions lost");
+    assert!(streaming.stream_done.iter().all(
+        |s| s.steps == decode_steps && s.tiers.len() == decode_steps),
+            "streaming: truncated tier trajectories");
+    assert!(streaming.tokens_per_s() > 0.0);
+    rows.push(BenchRow { queue: "streaming", workers, shards: workers,
+                         classes: String::new(), report: streaming });
     let path = Path::new(
         concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serving.json"));
     // never stomp an authoritative release-mode record with debug
@@ -93,7 +111,29 @@ fn bench_gate_records_shared_vs_sharded_pipeline() {
         assert_eq!(doc.req("bench").unwrap().as_str().unwrap(),
                    "sim_pipeline");
         let results = doc.req("results").unwrap().as_arr().unwrap();
-        assert_eq!(results.len(), 3);
+        assert_eq!(results.len(), 4);
+        let streaming_row = results
+            .iter()
+            .find(|r| {
+                r.req("queue")
+                    .ok()
+                    .and_then(|q| q.as_str().ok())
+                    .is_some_and(|q| q == "streaming")
+            })
+            .expect("record must carry the streaming row");
+        let tps = streaming_row
+            .req("tokens_per_s").unwrap()
+            .as_f64().unwrap();
+        assert!(tps.is_finite() && tps > 0.0,
+                "nonsense streaming tokens/s {tps}");
+        assert_eq!(
+            streaming_row.req("sessions").unwrap().as_f64().unwrap(),
+            32.0);
+        assert_eq!(
+            streaming_row
+                .req("stream_tokens").unwrap()
+                .as_f64().unwrap(),
+            (32 * 8) as f64);
         let hetero_row = results
             .iter()
             .find(|r| {

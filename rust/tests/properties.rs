@@ -12,7 +12,7 @@ use elastiformer::coordinator::schedule::LrSchedule;
 use elastiformer::coordinator::serving::{
     floor_rung, form_batch, sim, AdmissionQueue, CapacityController,
     ElasticEngine, ExecOutput, Executor, Request, Response, ServeConfig,
-    ServeError, SimSpec, SloClass,
+    ServeError, SimSpec, SloClass, StreamEvent, StreamRequest,
 };
 
 mod common;
@@ -538,6 +538,131 @@ fn prop_every_submit_resolves_exactly_once_across_panics_and_shutdown() {
                                 everything was served"
                         .into());
                 }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_every_stream_terminates_in_exactly_one_done_or_shed() {
+    // streaming backbone: every submit_stream observes Token* then
+    // exactly one terminal (Done | Shed) then end-of-stream — across
+    // panicking executors (possibly before the first batch), mid-decode
+    // shutdown, expired deadlines, mixed one-shot traffic, and random
+    // (workers, shards, batch, bound) topologies.  Token steps are
+    // strictly ordered from 0, and on a clean shutdown the report's
+    // session logs reconcile exactly with what the clients observed.
+    check("stream_exactly_once", 10, |rng| {
+        let sessions = 1 + rng.below(8);
+        let max_steps = 1 + rng.below(5);
+        let workers = 1 + rng.below(3);
+        let batch = 1 + rng.below(4);
+        let panic_after = rng.below(16); // 0 => instant fleet death
+        let executed = Arc::new(AtomicUsize::new(0));
+        let cfg = ServeConfig::sim()
+            .with_workers(workers)
+            .with_queue_shards(rng.below(workers + 2))
+            .with_queue_bound(1 + rng.below(32))
+            .with_max_batch_wait(Duration::ZERO);
+        let factory_counter = executed.clone();
+        let engine = ElasticEngine::start(cfg, move |_| {
+            Ok(Box::new(PanicAfter {
+                executed: factory_counter.clone(),
+                panic_after,
+                batch,
+            }) as Box<dyn Executor>)
+        })
+        .map_err(|e| format!("start failed: {e:#}"))?;
+        let mut streams = Vec::new();
+        let mut oneshots = Vec::new();
+        for id in 0..sessions as u64 {
+            let mut req = StreamRequest::new(id, vec![1; 4], max_steps);
+            if rng.chance(0.3) {
+                // near-instant deadline: exercises the expired-session
+                // shed path and the urgent queue machinery for decode
+                req = req.with_slo(SloClass::named("dl").with_deadline(
+                    Duration::from_micros(rng.below(500) as u64)));
+            }
+            streams.push(engine.submit_stream(req));
+            if rng.chance(0.5) {
+                // one-shot traffic interleaves with decode steps
+                oneshots.push(
+                    engine.submit(sim_request(1000 + id, vec![0; 8])));
+            }
+        }
+        // shutdown races live sessions: mid-decode close is the norm
+        // here, not the exception
+        let shutdown_result = engine.shutdown();
+        for r in oneshots {
+            if r.wait_timeout(Duration::from_secs(30)).is_none() {
+                return Err("a one-shot response never resolved".into());
+            }
+        }
+        let mut done = 0usize;
+        let mut shed = 0usize;
+        for s in streams {
+            let mut next_step = 0usize;
+            let mut terminals = 0usize;
+            let mut completed = false;
+            loop {
+                match s.recv_timeout(Duration::from_secs(30)) {
+                    Ok(Some(StreamEvent::Token { step, .. })) => {
+                        if step != next_step {
+                            return Err(format!(
+                                "token step {step}, want {next_step}"));
+                        }
+                        next_step += 1;
+                    }
+                    Ok(Some(StreamEvent::Done(stats))) => {
+                        terminals += 1;
+                        completed = true;
+                        if stats.steps != max_steps {
+                            return Err(format!(
+                                "Done with {} of {max_steps} steps",
+                                stats.steps));
+                        }
+                        if stats.steps != next_step {
+                            return Err(format!(
+                                "Done says {} steps, client saw \
+                                 {next_step} tokens", stats.steps));
+                        }
+                    }
+                    Ok(Some(StreamEvent::Shed(_))) => {
+                        terminals += 1;
+                    }
+                    Ok(None) => break,
+                    Err(_) => {
+                        return Err("a stream never terminated".into());
+                    }
+                }
+            }
+            if terminals != 1 {
+                return Err(format!(
+                    "{terminals} terminal events on one stream"));
+            }
+            if completed {
+                done += 1;
+            } else {
+                shed += 1;
+            }
+        }
+        if done + shed != sessions {
+            return Err(format!("{done} + {shed} != {sessions}"));
+        }
+        // a surviving fleet's report must reconcile with the clients
+        if let Ok(report) = shutdown_result {
+            if report.sessions_started != sessions {
+                return Err(format!(
+                    "report started {} != {sessions} submitted",
+                    report.sessions_started));
+            }
+            if report.stream_done.len() != done
+                || report.stream_shed.len() != shed
+            {
+                return Err(format!(
+                    "report {}/{} vs client {done}/{shed} done/shed",
+                    report.stream_done.len(), report.stream_shed.len()));
             }
         }
         Ok(())

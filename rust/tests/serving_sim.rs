@@ -8,7 +8,12 @@
 //! best-effort requests out of each other's batches, admission verdicts
 //! only shed when the aggregate bound across all shards is genuinely
 //! hit, shutdown drains every admitted request (work stealing included),
-//! and N workers beat one worker on wall-clock.
+//! and N workers beat one worker on wall-clock.  The streaming decode
+//! subsystem is exercised end to end: concurrent sessions batch across
+//! sessions (continuous batching), tight-budget sessions degrade tiers
+//! per step instead of being shed, mid-decode close terminates streams
+//! at the step boundary, and engine-side rejections reconcile with the
+//! report's shed log.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -17,8 +22,9 @@ use std::time::Duration;
 use anyhow::Result;
 
 use elastiformer::coordinator::serving::{
-    sim, Admission, ElasticEngine, ExecOutput, Executor, Request, Response,
-    ServeConfig, ServeError, ServeReport, ShedReason, SimSpec, SloClass,
+    sim, Admission, ElasticEngine, ExecOutput, Executor, Request,
+    Response, ServeConfig, ServeError, ServeReport, ShedCause,
+    ShedReason, SimSpec, SloClass, StreamEvent, StreamRequest,
     WorkerClassStats,
 };
 
@@ -441,6 +447,340 @@ fn heterogeneous_fleet_isolates_per_class_controllers() {
     assert!(slow_sec.tier_counts.iter().any(|(t, n)| *t < 1.0 && *n > 0),
             "slow class shows no demoted completions: {:?}",
             slow_sec.tier_counts);
+}
+
+/// Executor that records, for every row of every batch it runs, the
+/// row's session marker (token 0) and its first post-prompt slot — the
+/// witness for cross-session continuous batching — and emits 3-logit
+/// rows whose argmax is index 2, so sampled decode tokens are the
+/// distinctive value 2 (a row whose post-prompt slot holds 2 is
+/// provably a decode step, not padding).  Its first `execute` blocks
+/// until the shared gate opens, so the test can admit every session
+/// before the single worker runs a single batch (deterministic
+/// interleaving).
+/// `(marker, first post-prompt token)` per row, one entry per batch.
+type RowLog = Arc<Mutex<Vec<Vec<(i32, i32)>>>>;
+
+struct BatchSpyExec {
+    batch: usize,
+    seq_len: usize,
+    prompt_len: usize,
+    rows_seen: RowLog,
+    gate: Arc<(Mutex<bool>, Condvar)>,
+}
+
+impl Executor for BatchSpyExec {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+    fn execute(&mut self, _tier: f32, tokens: &[i32])
+               -> Result<ExecOutput> {
+        {
+            let (lock, cv) = &*self.gate;
+            let mut open = lock.lock().unwrap();
+            while !*open {
+                open = cv.wait(open).unwrap();
+            }
+        }
+        let rows: Vec<(i32, i32)> = (0..self.batch)
+            .map(|r| (tokens[r * self.seq_len],
+                      tokens[r * self.seq_len + self.prompt_len]))
+            .collect();
+        self.rows_seen.lock().unwrap().push(rows);
+        // per row: [0, 1, 9] -> argmax index 2 -> sampled token 2
+        let mut logits = Vec::with_capacity(self.batch * 3);
+        for _ in 0..self.batch {
+            logits.extend_from_slice(&[0.0, 1.0, 9.0]);
+        }
+        Ok(ExecOutput { logits })
+    }
+}
+
+#[test]
+fn streaming_sessions_batch_across_sessions_in_step_order() {
+    // tentpole acceptance: N concurrent decode sessions on ONE worker.
+    // Step 0 (prefill) batches the four prompts; every later step is a
+    // decode item re-admitted by the session table, and since the
+    // single worker re-admits all four before its next pop, decode
+    // steps from different sessions must share batches (continuous
+    // batching).  Each client must see its tokens in strict step order
+    // ending in exactly one Done.
+    let (batch, seq_len, prompt_len) = (4usize, 16usize, 4usize);
+    let steps = 5usize;
+    let rows_seen: RowLog = Arc::new(Mutex::new(Vec::new()));
+    let gate = Arc::new((Mutex::new(false), Condvar::new()));
+    let spy_rows = rows_seen.clone();
+    let spy_gate = gate.clone();
+    let cfg = ServeConfig::sim()
+        .with_workers(1)
+        .with_max_batch_wait(Duration::from_millis(2));
+    let engine = ElasticEngine::start(cfg, move |_| {
+        Ok(Box::new(BatchSpyExec {
+            batch,
+            seq_len,
+            prompt_len,
+            rows_seen: spy_rows.clone(),
+            gate: spy_gate.clone(),
+        }) as Box<dyn Executor>)
+    })
+    .unwrap();
+    let n_sessions = 4usize;
+    let streams: Vec<_> = (0..n_sessions as u64)
+        .map(|id| {
+            // marker prompt: every row of session id starts with
+            // 100 + id, and stays shorter than seq_len so the marker
+            // survives the sliding window
+            engine.submit_stream(StreamRequest::new(
+                id, vec![100 + id as i32; prompt_len], steps))
+        })
+        .collect();
+    // every session is admitted before the first batch may run: the
+    // interleaving below is deterministic, not a race
+    open_gate(&gate);
+    for s in streams {
+        let sid = s.id();
+        let mut expect_step = 0usize;
+        let mut terminal = 0usize;
+        loop {
+            match s.recv() {
+                Some(StreamEvent::Token { step, tier, token }) => {
+                    assert_eq!(step, expect_step,
+                               "session {sid}: out-of-order step");
+                    assert_eq!(token, 2, "argmax of [0,1,9] is index 2");
+                    assert!(tier > 0.0);
+                    expect_step += 1;
+                }
+                Some(StreamEvent::Done(stats)) => {
+                    terminal += 1;
+                    assert_eq!(stats.id, sid);
+                    assert_eq!(stats.steps, steps);
+                    assert_eq!(stats.tiers.len(), steps);
+                    assert!(stats.total_ms >= stats.first_token_ms);
+                }
+                Some(StreamEvent::Shed(e)) => {
+                    panic!("session {sid} shed on an open engine: {e}")
+                }
+                None => break,
+            }
+        }
+        assert_eq!(expect_step, steps,
+                   "session {sid}: {expect_step} of {steps} tokens");
+        assert_eq!(terminal, 1, "exactly one terminal per stream");
+    }
+    let report = engine.shutdown().unwrap();
+    assert_eq!(report.sessions_started, n_sessions);
+    assert_eq!(report.stream_done.len(), n_sessions);
+    assert!(report.stream_shed.is_empty());
+    assert_eq!(report.sessions_started,
+               report.stream_done.len() + report.stream_shed.len(),
+               "session logs must reconcile");
+    // the continuous-batching witness: some executed batch carried
+    // *decode* rows (first post-prompt slot holds the sampled token 2,
+    // which zero-padding and raw prompts cannot produce) from at least
+    // two distinct sessions (distinct markers)
+    let seen = rows_seen.lock().unwrap();
+    let interleaved = seen.iter().any(|rows| {
+        let mut decode_markers: Vec<i32> = rows
+            .iter()
+            .filter(|(_, post)| *post == 2)
+            .map(|(marker, _)| *marker)
+            .collect();
+        decode_markers.sort_unstable();
+        decode_markers.dedup();
+        decode_markers.len() >= 2
+    });
+    assert!(interleaved,
+            "no batch mixed decode steps from two sessions: {seen:?}");
+    // and the report aggregates the stream economy
+    let sections = report.stream_sections();
+    assert_eq!(sections.len(), 1);
+    assert_eq!(sections[0].tokens, n_sessions * steps);
+    assert!(sections[0].tokens_per_s > 0.0);
+    assert_eq!(report.tokens_per_s(), sections[0].tokens_per_s);
+}
+
+#[test]
+fn tight_deadline_session_degrades_tiers_instead_of_shed() {
+    // the graceful-degradation contract: a session whose total budget
+    // cannot afford every step at tier 1.0 must be demoted down the
+    // ladder step by step (slack / remaining steps shrinks below the
+    // learned tier-1.0 exec estimate) and still finish with Done —
+    // never a cliff-edge shed.  Latencies are tier-proportional and
+    // large relative to scheduler noise: tier 1.0 ~= 64ms/batch,
+    // 0.75 ~= 49ms, 0.5 ~= 34ms, 0.25 ~= 19ms.
+    let spec = SimSpec {
+        batch: 1,
+        base_ms: 4.0,
+        ms_per_capacity: 60.0,
+        jitter_ms: 0.0,
+        ..SimSpec::standard()
+    };
+    let cfg = ServeConfig::sim()
+        .with_workers(1)
+        .with_depth_per_tier(1e9) // the backlog signal never demotes
+        .with_max_batch_wait(Duration::ZERO);
+    let caps = cfg.capacities();
+    let engine =
+        ElasticEngine::start(cfg, sim::factory(spec, caps)).unwrap();
+    // warm the tier-1.0 exec estimate (~64ms) with best-effort traffic
+    for id in 0..2u64 {
+        engine
+            .submit(Request::new(id, sim_tokens(id, spec.seq_len)))
+            .wait()
+            .expect("warmup must serve");
+    }
+    // 6 steps at tier 1.0 would cost ~384ms; the 340ms budget cannot
+    // afford that (per-step allowance 340/6 ~= 56.7ms < the >= 64ms
+    // learned estimate — the sim sleep never undershoots, so the
+    // demotion side is noise-proof), so the controller demotes — and
+    // at ~49ms per 0.75 step the session's last pop lands ~95ms before
+    // the deadline, so even a long scheduler stall cannot shed it
+    // (stalls only demote further, which shrinks step cost and grows
+    // the margin)
+    let steps = 6usize;
+    let slo = SloClass::named("tight")
+        .with_deadline(Duration::from_millis(340));
+    let stats = engine
+        .submit_stream(
+            StreamRequest::new(50, vec![1; 4], steps).with_slo(slo))
+        .wait()
+        .expect("tight session must degrade and complete, not shed");
+    assert_eq!(stats.steps, steps);
+    assert_eq!(stats.tiers.len(), steps);
+    assert!(stats.tiers.iter().any(|&t| t < 1.0),
+            "no step was demoted: {:?}", stats.tiers);
+    let report = engine.shutdown().unwrap();
+    assert_eq!(report.stream_done.len(), 1);
+    assert!(report.stream_shed.is_empty(),
+            "graceful degradation must avoid the shed");
+}
+
+#[test]
+fn mid_decode_close_sheds_sessions_at_the_step_boundary() {
+    // mid-decode shutdown: a long session is decoding when admission
+    // closes.  Its already-delivered tokens stay valid and the stream
+    // must end in exactly one Shed(ShuttingDown) — at the next step
+    // boundary, not after draining hundreds of queued steps.
+    let spec = SimSpec {
+        batch: 1,
+        base_ms: 2.0,
+        ms_per_capacity: 0.0,
+        jitter_ms: 0.0,
+        ..SimSpec::standard()
+    };
+    let cfg = ServeConfig::sim()
+        .with_workers(1)
+        .with_max_batch_wait(Duration::ZERO);
+    let caps = cfg.capacities();
+    let engine =
+        ElasticEngine::start(cfg, sim::factory(spec, caps)).unwrap();
+    let s = engine.submit_stream(
+        StreamRequest::new(9, vec![1; 4], 100_000));
+    // let a few tokens land first
+    let mut got = 0usize;
+    while got < 3 {
+        match s.recv_timeout(Duration::from_secs(30)) {
+            Ok(Some(StreamEvent::Token { .. })) => got += 1,
+            other => panic!("want a token, got {other:?}"),
+        }
+    }
+    engine.close();
+    let mut terminal = None;
+    loop {
+        match s.recv_timeout(Duration::from_secs(30)) {
+            Ok(Some(StreamEvent::Token { .. })) => got += 1,
+            Ok(Some(StreamEvent::Shed(e))) => {
+                terminal = Some(e);
+            }
+            Ok(Some(StreamEvent::Done(_))) => {
+                panic!("a 100k-step session cannot have finished")
+            }
+            Ok(None) => break,
+            Err(_) => panic!("stream never terminated after close"),
+        }
+    }
+    assert_eq!(terminal, Some(ServeError::ShuttingDown));
+    let report = engine.shutdown().unwrap();
+    assert_eq!(report.sessions_started, 1);
+    assert_eq!(report.stream_shed.len(), 1);
+    assert_eq!(report.stream_shed[0].steps_done, got,
+               "shed record must count the delivered tokens");
+    assert_eq!(report.sessions_started,
+               report.stream_done.len() + report.stream_shed.len());
+}
+
+#[test]
+fn close_records_engine_side_sheds_that_reconcile_with_verdicts() {
+    // satellite acceptance: every client-observed ShuttingDown verdict
+    // must have a matching engine-side shed record, so report totals
+    // reconcile.  Before this, a try_submit refused during shutdown
+    // vanished from the report entirely.
+    let spec = SimSpec::instant();
+    let cfg = ServeConfig::sim().with_workers(1);
+    let caps = cfg.capacities();
+    let engine =
+        ElasticEngine::start(cfg, sim::factory(spec, caps)).unwrap();
+    let seq = spec.seq_len;
+    let served: Vec<Response> = (0..3u64)
+        .map(|id| engine.submit(Request::new(id, sim_tokens(id, seq))))
+        .collect();
+    for r in served {
+        r.wait().expect("pre-close submissions must serve");
+    }
+    engine.close();
+    // count the client-observed ShuttingDown verdicts after close
+    let mut observed = 0usize;
+    for id in 10..12u64 {
+        match engine.try_submit(Request::new(id, sim_tokens(id, seq))) {
+            Admission::Shed(ShedReason::ShuttingDown) => observed += 1,
+            Admission::Shed(r) => {
+                panic!("want ShuttingDown verdict, got {r:?}")
+            }
+            Admission::Accepted(_) => {
+                panic!("closed engine accepted a request")
+            }
+        }
+    }
+    match engine
+        .submit(Request::new(12, sim_tokens(12, seq)))
+        .wait()
+    {
+        Err(ServeError::ShuttingDown) => observed += 1,
+        other => panic!("want ShuttingDown, got {other:?}"),
+    }
+    // a refused stream session must reconcile too: one started, one
+    // engine-shed, terminal Shed(ShuttingDown) on the stream
+    match engine
+        .submit_stream(StreamRequest::new(13, vec![1; 4], 4))
+        .wait()
+    {
+        Err(ServeError::ShuttingDown) => {}
+        other => panic!("want stream ShuttingDown, got {other:?}"),
+    }
+    let report = engine.shutdown().unwrap();
+    assert_eq!(report.completions.len(), 3);
+    let engine_sheds: Vec<_> = report
+        .sheds
+        .iter()
+        .filter(|s| s.cause == ShedCause::ShuttingDown)
+        .collect();
+    assert_eq!(engine_sheds.len(), observed,
+               "shed log must reconcile with client verdicts");
+    assert!(engine_sheds.iter().all(|s| s.worker_class == "engine"),
+            "engine-side sheds carry the engine pseudo-class");
+    assert_eq!(report.sessions_started, 1);
+    assert_eq!(report.stream_shed.len(), 1);
+    assert_eq!(report.stream_shed[0].reason, ServeError::ShuttingDown);
+    // the per-SLO-class sections surface the rejections
+    let sections = report.class_sections();
+    let be = sections
+        .iter()
+        .find(|s| s.class == "best-effort")
+        .expect("best-effort section");
+    assert_eq!(be.shed, observed);
 }
 
 /// Executor whose `execute` blocks until the shared gate opens —
