@@ -106,6 +106,7 @@ pub use report::{
     StreamSection, StreamShedRecord, WorkerClassInfo, WorkerClassStats,
 };
 pub use sim::{SimExecutor, SimSpec};
+pub use stream::arena::SessionArena;
 pub use stream::{
     DecodeSession, StreamEvent, StreamRequest, StreamResponse,
     StreamStats, StreamTimeout,
@@ -268,6 +269,10 @@ pub struct ServeConfig {
     /// one entry per device class (empty = single-class engine via
     /// [`ElasticEngine::start`])
     pub worker_classes: Vec<WorkerClass>,
+    /// pages per worker-class [`SessionArena`] — cached decode windows
+    /// held between steps of a streaming session; 0 disables the arena
+    /// (every decode step recomputes its window from the session table)
+    pub arena_pages: usize,
 }
 
 impl ServeConfig {
@@ -287,6 +292,7 @@ impl ServeConfig {
             queue_bound: 256,
             queue_shards: 0,
             worker_classes: Vec::new(),
+            arena_pages: 64,
         }
     }
 
@@ -313,6 +319,13 @@ impl ServeConfig {
     /// Override the admission shard count (0 = one shard per worker).
     pub fn with_queue_shards(mut self, shards: usize) -> ServeConfig {
         self.queue_shards = shards;
+        self
+    }
+
+    /// Override the per-worker-class session-arena size (0 disables
+    /// the arena — every decode step recomputes its window).
+    pub fn with_arena_pages(mut self, pages: usize) -> ServeConfig {
+        self.arena_pages = pages;
         self
     }
 
@@ -633,6 +646,22 @@ pub(crate) struct EngineShared {
     /// shed decode sessions (terminal `Shed`), appended by workers and
     /// by engine-side teardown
     pub stream_shed: Mutex<Vec<StreamShedRecord>>,
+    /// one paged session arena per worker class, indexed by class id:
+    /// workers of a class share cached decode windows, while classes
+    /// never fight over each other's pages
+    pub arenas: Vec<stream::arena::SessionArena>,
+}
+
+impl EngineShared {
+    /// Free a terminated session's cached window in every class arena.
+    /// Idempotent (each arena recycles at most once), so racing
+    /// terminal paths — worker `Done`, engine shed, shutdown sweep —
+    /// cannot double-free or leak a page.
+    pub(crate) fn recycle_session(&self, session: u64) {
+        for arena in &self.arenas {
+            arena.recycle(session);
+        }
+    }
 }
 
 /// The serving engine: [`start`](Self::start) spawns N execution
@@ -724,6 +753,10 @@ impl ElasticEngine {
             sessions: stream::SessionTable::new(),
             stream_done: Mutex::new(Vec::new()),
             stream_shed: Mutex::new(Vec::new()),
+            arenas: classes
+                .iter()
+                .map(|_| stream::arena::SessionArena::new(cfg.arena_pages))
+                .collect(),
         });
         let init = Arc::new(InitLatch::new());
         let caps = Arc::new(caps);
@@ -932,20 +965,26 @@ impl EngineHandle {
         let cap = req.max_steps.max(1) + 1;
         let (sender, response) = stream::channel(req.id, cap);
         let urgent = req.slo.deadline.is_some();
-        let pending =
-            self.shared.sessions.admit(req, sender, Instant::now());
-        let pushed = if urgent {
-            self.shared.queue.push_urgent(pending)
-        } else {
-            self.shared.queue.push(pending)
+        // admit pins the session to one shard; the prefill and every
+        // continuation land there, so the workers that drain it keep
+        // its arena page warm (placement affinity)
+        let pending = self.shared.sessions.admit(
+            req, sender, Instant::now(), self.shared.queue.shards());
+        let shard = match &pending.outcome {
+            Outcome::Stream(st) => st.shard,
+            Outcome::OneShot(_) => unreachable!(
+                "admit always yields a stream outcome"),
         };
-        if let Err(p) = pushed {
+        if let Err(p) =
+            self.shared.queue.push_pinned(shard, pending, urgent)
+        {
             if let Outcome::Stream(st) = p.outcome {
                 if let Some(rec) = self.shared.sessions.shed(
                     st.session, ServeError::ShuttingDown, "engine")
                 {
                     self.shared.stream_shed.lock().unwrap().push(rec);
                 }
+                self.shared.recycle_session(st.session);
             }
         }
         response
@@ -1024,6 +1063,7 @@ impl EngineHandle {
                         {
                             engine_stream_sheds.push(rec);
                         }
+                        self.shared.recycle_session(st.session);
                     }
                 }
             }
@@ -1035,6 +1075,11 @@ impl EngineHandle {
             .shared
             .sessions
             .shed_all(ServeError::ShuttingDown, "engine"));
+        // every live session now has its terminal; all remaining pages
+        // belong to terminated sessions — free them in one sweep
+        for arena in &self.shared.arenas {
+            arena.clear();
+        }
         if !engine_stream_sheds.is_empty() {
             self.shared
                 .stream_shed
@@ -1067,17 +1112,24 @@ impl EngineHandle {
             .classes
             .iter()
             .zip(self.shared.controllers.iter())
-            .map(|((name, workers), ctl)| WorkerClassInfo {
+            .zip(self.shared.arenas.iter())
+            .map(|(((name, workers), ctl), arena)| WorkerClassInfo {
                 name: name.clone(),
                 workers: *workers,
                 exec_estimates_ms: ctl.lock().unwrap().exec_estimates(),
+                cache_hits: arena.hits(),
+                cache_misses: arena.misses(),
             })
             .collect();
+        let (hits, misses) = self.shared.arenas.iter().fold(
+            (0usize, 0usize),
+            |(h, m), a| (h + a.hits(), m + a.misses()));
         Ok(ServeReport::new(completions, sheds, wall, &self.shared.caps,
                             self.workers)
             .with_worker_classes(class_infos)
             .with_streams(self.shared.sessions.sessions_started(),
-                          stream_done, stream_shed))
+                          stream_done, stream_shed)
+            .with_cache(hits, misses))
     }
 }
 

@@ -54,6 +54,18 @@
 //!    bounding it would deadlock the workers that must drain it) while
 //!    still counting on the depth gauge, so the backlog signal and
 //!    `Shed(QueueFull)` stay honest.
+//!  * **Placement affinity.**  A stateful item can be pinned to a
+//!    shard: [`requeue_to`](AdmissionQueue::requeue_to) re-deposits a
+//!    continuation onto its *affine* shard instead of p2c (the engine
+//!    pins each decode session at admission, so its steps keep landing
+//!    where its arena pages live), [`push_pinned`](AdmissionQueue::push_pinned)
+//!    does the same for a bound-reserving admission (the session's
+//!    prefill), and the deadline-aware seed peek prices a head sitting
+//!    on its own affine shard as *cheaper to serve* (its cached state
+//!    is right there — stealing it elsewhere pays a recompute), via a
+//!    fixed slack credit rather than depth alone.  Items with no
+//!    affinity (every one-shot, and every caller of the non-affine
+//!    entry points) behave exactly as before.
 //!
 //! Blocking uses two "doorbells" (a lost-wakeup-proof mutex/condvar
 //! pair with a sleeper count so the uncontended path skips the lock):
@@ -166,6 +178,16 @@ impl Doorbell {
 /// no-deadline head still gets a guaranteed 1-in-K share of its own
 /// worker's seeds, so its wait is bounded under any load.
 const FAIR_SEED_EVERY: usize = 8;
+
+/// Slack credit (ms) the deadline-aware seed peek grants a head that
+/// sits on its own affine shard: serving it from here reuses its
+/// cached arena state, while stealing it to a cold shard pays a
+/// full-window recompute.  The credit models that recompute cost, so
+/// between two comparably tight heads the cache-holding shard wins;
+/// a genuinely tighter deadline elsewhere still outranks the credit.
+/// `INFINITY - credit == INFINITY`, so affinity never promotes a
+/// deadline-free head into the urgent peek.
+const AFFINE_SEED_CREDIT_MS: f64 = 5.0;
 
 /// Sharded bounded FIFO queue shared by the submitting clients and the
 /// workers.  See the module docs for the contracts.
@@ -312,7 +334,7 @@ impl<T> AdmissionQueue<T> {
     /// closed (shutdown or a failed worker) so the caller can account
     /// for it.
     pub fn push(&self, item: T) -> Result<(), T> {
-        self.push_with(item, false)
+        self.push_with(item, false, None)
     }
 
     /// Like [`push`](Self::push), but flags the item *urgent* — it
@@ -321,16 +343,28 @@ impl<T> AdmissionQueue<T> {
     /// deadline-carrying requests here; urgency must agree with the pop
     /// side's slack function (`urgent` ⟺ `slack(item).is_finite()`).
     pub fn push_urgent(&self, item: T) -> Result<(), T> {
-        self.push_with(item, true)
+        self.push_with(item, true, None)
     }
 
-    fn push_with(&self, item: T, urgent: bool) -> Result<(), T> {
+    /// [`push`](Self::push)/[`push_urgent`](Self::push_urgent) with the
+    /// shard chosen by the caller instead of p2c (`shard` wraps modulo
+    /// the shard count).  The engine uses this to land a new decode
+    /// session's prefill on the session's affine shard, so its arena
+    /// pages are laid down where every later step will look for them.
+    /// Bound, close and gauge semantics are identical to `push`.
+    pub fn push_pinned(&self, shard: usize, item: T, urgent: bool)
+                       -> Result<(), T> {
+        self.push_with(item, urgent, Some(shard))
+    }
+
+    fn push_with(&self, item: T, urgent: bool, at: Option<usize>)
+                 -> Result<(), T> {
         loop {
             if self.closed.load(Ordering::SeqCst) {
                 return Err(item);
             }
             if self.try_reserve() {
-                return self.deposit_reserved(item, urgent);
+                return self.deposit_reserved(item, urgent, at);
             }
             self.vacancy.wait_until(None, || {
                 self.closed.load(Ordering::SeqCst)
@@ -360,7 +394,8 @@ impl<T> AdmissionQueue<T> {
         if !self.try_reserve() {
             return Err(TryPushError::Full(item));
         }
-        self.deposit_reserved(item, urgent).map_err(TryPushError::Closed)
+        self.deposit_reserved(item, urgent, None)
+            .map_err(TryPushError::Closed)
     }
 
     /// Second half of a push that already holds a reservation: re-check
@@ -374,7 +409,8 @@ impl<T> AdmissionQueue<T> {
     /// [`pop_batch_keyed`]), a reservation made before close is always
     /// drained by a worker, and one that races close is undone here so
     /// the caller can resolve the item itself.
-    fn deposit_reserved(&self, item: T, urgent: bool) -> Result<(), T> {
+    fn deposit_reserved(&self, item: T, urgent: bool, at: Option<usize>)
+                        -> Result<(), T> {
         if self.closed.load(Ordering::SeqCst) {
             self.depth.fetch_sub(1, Ordering::SeqCst);
             self.vacancy.ring();
@@ -386,7 +422,12 @@ impl<T> AdmissionQueue<T> {
             // so the counter never underflows
             self.urgent.fetch_add(1, Ordering::SeqCst);
         }
-        self.deposit(item, urgent);
+        match at {
+            Some(s) => {
+                self.deposit_to(s % self.shards.len(), item, urgent)
+            }
+            None => self.deposit(item, urgent),
+        }
         Ok(())
     }
 
@@ -401,6 +442,24 @@ impl<T> AdmissionQueue<T> {
     /// transiently exceed `bound`, which the reserve CAS already
     /// treats as full.  Fails only if the queue has been closed.
     pub fn requeue(&self, item: T, urgent: bool) -> Result<(), T> {
+        self.requeue_at(item, urgent, None)
+    }
+
+    /// Affine [`requeue`](Self::requeue): deposit the continuation onto
+    /// `shard` (modulo the shard count) instead of p2c.  The engine
+    /// routes every decode step here with the session's pinned shard,
+    /// so a session's steps — and the arena pages its serving workers
+    /// hold — stay together instead of scattering across the ring.
+    /// Close semantics are identical to `requeue`: the item comes back
+    /// as `Err` with no gauge leak, never a block (property-tested —
+    /// an affine requeue against a closed queue must not deadlock).
+    pub fn requeue_to(&self, shard: usize, item: T, urgent: bool)
+                      -> Result<(), T> {
+        self.requeue_at(item, urgent, Some(shard))
+    }
+
+    fn requeue_at(&self, item: T, urgent: bool, at: Option<usize>)
+                  -> Result<(), T> {
         if self.closed.load(Ordering::SeqCst) {
             return Err(item);
         }
@@ -416,7 +475,12 @@ impl<T> AdmissionQueue<T> {
         if urgent {
             self.urgent.fetch_add(1, Ordering::SeqCst);
         }
-        self.deposit(item, urgent);
+        match at {
+            Some(s) => {
+                self.deposit_to(s % self.shards.len(), item, urgent)
+            }
+            None => self.deposit(item, urgent),
+        }
         Ok(())
     }
 
@@ -522,13 +586,16 @@ impl<T> AdmissionQueue<T> {
     /// shard's share of the aggregate bound, and the phase-2 fill loop
     /// only re-sweeps on a depth change within `max_batch_wait`, so
     /// homogeneous traffic (the common case) never pays it.
-    fn collect_into<K, F, S>(&self, worker: usize, max: usize, key: &F,
-                             slack: &S, batch_key: &mut Option<K>,
-                             out: &mut Vec<T>)
+    #[allow(clippy::too_many_arguments)]
+    fn collect_into<K, F, S, A>(&self, worker: usize, max: usize, key: &F,
+                                slack: &S, affine: &A,
+                                batch_key: &mut Option<K>,
+                                out: &mut Vec<T>)
     where
         K: PartialEq,
         F: Fn(&T) -> K,
         S: Fn(&T) -> f64,
+        A: Fn(&T) -> Option<usize>,
     {
         let n = self.shards.len();
         let start = worker % n;
@@ -564,7 +631,18 @@ impl<T> AdmissionQueue<T> {
                 }
                 let items = shard.items.lock().unwrap();
                 if let Some(head) = items.front() {
-                    let sl = slack(head);
+                    let mut sl = slack(head);
+                    // affinity-aware steal cost: a head sitting on its
+                    // own affine shard is cheaper to serve from here
+                    // (its arena pages are local — stealing it to a
+                    // cold shard would pay a recompute), so it peeks
+                    // as if its slack were tighter by a fixed credit.
+                    // Affinity-free items (`None` — every one-shot)
+                    // keep their raw slack, and INFINITY stays
+                    // INFINITY, so existing behavior is untouched.
+                    if affine(head).map(|a| a % n) == Some(s) {
+                        sl -= AFFINE_SEED_CREDIT_MS;
+                    }
                     // strict < keeps the ring-order tiebreak
                     let better = match best {
                         None => true,
@@ -646,6 +724,27 @@ impl<T> AdmissionQueue<T> {
         F: Fn(&T) -> K,
         S: Fn(&T) -> f64,
     {
+        self.pop_batch_keyed_affine(worker, max, wait, key, slack,
+                                    |_| None)
+    }
+
+    /// [`pop_batch_keyed`](Self::pop_batch_keyed) with an affinity
+    /// function: `affine(item)` names the shard the item is pinned to
+    /// (`None` = unpinned).  The deadline-aware seed peek grants a
+    /// head sitting on its own affine shard a fixed slack credit
+    /// ([`AFFINE_SEED_CREDIT_MS`]) — cache-holding shards are cheaper
+    /// to serve than raw slack suggests, because serving the head
+    /// elsewhere pays a full-window recompute.  With `affine = |_|
+    /// None` this is exactly `pop_batch_keyed`.
+    pub fn pop_batch_keyed_affine<K, F, S, A>(
+        &self, worker: usize, max: usize, wait: Duration, key: F,
+        slack: S, affine: A) -> Vec<T>
+    where
+        K: PartialEq,
+        F: Fn(&T) -> K,
+        S: Fn(&T) -> f64,
+        A: Fn(&T) -> Option<usize>,
+    {
         let max = max.max(1);
         let target = max.min(self.bound);
         let mut out: Vec<T> = Vec::new();
@@ -654,8 +753,8 @@ impl<T> AdmissionQueue<T> {
         // phase 1: block until at least one item is in hand, or the
         // queue is closed and fully drained
         loop {
-            self.collect_into(worker, max, &key, &slack, &mut batch_key,
-                              &mut out);
+            self.collect_into(worker, max, &key, &slack, &affine,
+                              &mut batch_key, &mut out);
             if !out.is_empty() {
                 break;
             }
@@ -706,8 +805,8 @@ impl<T> AdmissionQueue<T> {
         if out.len() < target && !wait.is_zero() {
             let deadline = Instant::now() + wait;
             while out.len() < target && !self.closed.load(Ordering::SeqCst) {
-                self.collect_into(worker, max, &key, &slack, &mut batch_key,
-                                  &mut out);
+                self.collect_into(worker, max, &key, &slack, &affine,
+                                  &mut batch_key, &mut out);
                 if out.len() >= target {
                     break;
                 }
@@ -724,8 +823,8 @@ impl<T> AdmissionQueue<T> {
                 }
             }
             // final sweep: a deposit may have raced the close/timeout
-            self.collect_into(worker, max, &key, &slack, &mut batch_key,
-                              &mut out);
+            self.collect_into(worker, max, &key, &slack, &affine,
+                              &mut batch_key, &mut out);
         }
         if self.depth.load(Ordering::SeqCst) > 0 {
             // hand remaining work to an idle sibling promptly
@@ -1077,6 +1176,93 @@ mod tests {
             Ok(()) => panic!("requeue into a closed queue must fail"),
         }
         assert_eq!(q.len(), 0, "failed requeue must not leak the gauge");
+    }
+
+    #[test]
+    fn requeue_to_lands_on_the_affine_shard() {
+        let q = AdmissionQueue::sharded(16, 4);
+        // p2c would spread these; the affine requeue must not
+        for id in 0..6u64 {
+            q.requeue_to(2, id, false).unwrap();
+        }
+        assert_eq!(q.shard_len(2), 6,
+                   "every affine continuation must land on its shard");
+        assert_eq!(q.len(), 6);
+        // out-of-range shard hints wrap instead of panicking
+        q.requeue_to(6, 100, false).unwrap();
+        assert_eq!(q.shard_len(2), 7);
+    }
+
+    #[test]
+    fn push_pinned_lands_on_the_affine_shard_and_respects_bound() {
+        let q = AdmissionQueue::sharded(2, 4);
+        q.push_pinned(1, 0u64, false).unwrap();
+        q.push_pinned(1, 1, true).unwrap();
+        assert_eq!(q.shard_len(1), 2);
+        assert_eq!(q.urgent_len(), 1);
+        // the aggregate bound still applies to pinned admissions
+        assert!(matches!(q.try_push(9), Err(TryPushError::Full(_))));
+        q.close();
+        assert!(q.push_pinned(1, 2, false).is_err());
+    }
+
+    #[test]
+    fn requeue_to_into_closed_queue_fails_fast_without_leaks() {
+        // satellite acceptance: an affine requeue against a closed
+        // queue must return the item promptly (never block on a
+        // doorbell nobody rings) and must not leak the depth gauge
+        let q = AdmissionQueue::sharded(4, 2);
+        q.close();
+        for id in 0..8u64 {
+            match q.requeue_to(id as usize, id, id % 2 == 0) {
+                Err(item) => assert_eq!(item, id),
+                Ok(()) => panic!("requeue_to into a closed queue"),
+            }
+        }
+        assert_eq!(q.len(), 0, "failed affine requeues leaked the gauge");
+        assert!(q.pop_batch(8, Duration::ZERO).is_empty());
+    }
+
+    #[test]
+    fn affine_head_wins_the_seed_peek_over_a_slightly_tighter_head() {
+        // two urgent heads: shard 0 holds slack 10 (no affinity),
+        // shard 1 holds slack 12 *pinned to shard 1*.  Raw slack would
+        // seed shard 0; the affinity credit (5 ms) prices shard 1's
+        // head at 7 — cheaper to serve where its cache lives.
+        let q = AdmissionQueue::sharded(16, 2);
+        q.push_to_shard_urgent(0, 10u64);
+        q.push_to_shard_urgent(1, 21);
+        let slack = |id: &u64| if *id == 10 { 10.0 } else { 12.0 };
+        let affine =
+            |id: &u64| if *id == 21 { Some(1usize) } else { None };
+        let key = |id: &u64| *id;
+        let got = q.pop_batch_keyed_affine(0, 1, Duration::ZERO, key,
+                                           slack, affine);
+        assert_eq!(got, vec![21],
+                   "cache-holding head must win the steal peek");
+        // without affinity the raw slack decides, proving the credit
+        // (not ordering luck) flipped the choice above
+        let q2 = AdmissionQueue::sharded(16, 2);
+        q2.push_to_shard_urgent(0, 10u64);
+        q2.push_to_shard_urgent(1, 21);
+        let got = q2.pop_batch_keyed(0, 1, Duration::ZERO, key, slack);
+        assert_eq!(got, vec![10]);
+    }
+
+    #[test]
+    fn affinity_credit_never_outranks_a_truly_tight_deadline() {
+        // shard 1's head is pinned here but slack 30; shard 0's head
+        // has 2 ms left — the credit (5 ms) must not starve it
+        let q = AdmissionQueue::sharded(16, 2);
+        q.push_to_shard_urgent(0, 1u64);
+        q.push_to_shard_urgent(1, 2);
+        let slack = |id: &u64| if *id == 1 { 2.0 } else { 30.0 };
+        let affine =
+            |id: &u64| if *id == 2 { Some(1usize) } else { None };
+        let got = q.pop_batch_keyed_affine(0, 1, Duration::ZERO,
+                                           |id: &u64| *id, slack, affine);
+        assert_eq!(got, vec![1],
+                   "a genuinely tighter deadline outranks affinity");
     }
 
     #[test]

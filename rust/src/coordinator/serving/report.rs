@@ -96,6 +96,10 @@ pub struct WorkerClassInfo {
     /// ms-if-observed)` in ladder order — `None` means this class never
     /// executed a batch at that tier
     pub exec_estimates_ms: Vec<(f32, Option<f64>)>,
+    /// decode-step rows this class served from its session arena
+    pub cache_hits: usize,
+    /// decode-step rows this class recomputed from the session table
+    pub cache_misses: usize,
 }
 
 /// Per-worker-class section of the report: how one hardware class
@@ -114,6 +118,10 @@ pub struct WorkerClassStats {
     /// completions per configured tier, same ladder as the aggregate
     pub tier_counts: Vec<(f32, usize)>,
     pub exec_estimates_ms: Vec<(f32, Option<f64>)>,
+    /// decode-step rows served from this class's session arena vs
+    /// recomputed from the session table
+    pub cache_hits: usize,
+    pub cache_misses: usize,
 }
 
 /// Per-SLO-class section of the *streaming* report: how one class's
@@ -165,6 +173,11 @@ pub struct ServeReport {
     pub stream_done: Vec<super::StreamStats>,
     /// shed decode sessions
     pub stream_shed: Vec<StreamShedRecord>,
+    /// decode-step rows served from the session arenas (all classes)
+    pub cache_hits: usize,
+    /// decode-step rows recomputed from the session table (arena miss,
+    /// spill, or disabled arena)
+    pub cache_misses: usize,
 }
 
 impl ServeReport {
@@ -191,6 +204,8 @@ impl ServeReport {
             sessions_started: 0,
             stream_done: Vec::new(),
             stream_shed: Vec::new(),
+            cache_hits: 0,
+            cache_misses: 0,
         }
     }
 
@@ -211,6 +226,27 @@ impl ServeReport {
         self.stream_done = done;
         self.stream_shed = shed;
         self
+    }
+
+    /// Attach the session arenas' aggregate decode-row cache counters
+    /// (the engine does this at shutdown).
+    pub fn with_cache(mut self, hits: usize, misses: usize)
+                      -> ServeReport {
+        self.cache_hits = hits;
+        self.cache_misses = misses;
+        self
+    }
+
+    /// Fraction of decode-step rows served from a session arena
+    /// instead of the full-window recompute (0.0 when no decode step
+    /// ever consulted an arena).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
     }
 
     pub fn throughput_rps(&self) -> f64 {
@@ -388,26 +424,30 @@ impl ServeReport {
     /// [`WorkerClassInfo`]s plus any class names present only in the
     /// records (hand-built reports), so no executing class is hidden.
     pub fn worker_class_sections(&self) -> Vec<WorkerClassStats> {
-        let mut classes: Vec<(String, usize, Vec<(f32, Option<f64>)>)> =
-            self.worker_classes
-                .iter()
-                .map(|i| {
-                    (i.name.clone(), i.workers, i.exec_estimates_ms.clone())
-                })
-                .collect();
+        type ClassSeed =
+            (String, usize, Vec<(f32, Option<f64>)>, usize, usize);
+        let mut classes: Vec<ClassSeed> = self
+            .worker_classes
+            .iter()
+            .map(|i| {
+                (i.name.clone(), i.workers, i.exec_estimates_ms.clone(),
+                 i.cache_hits, i.cache_misses)
+            })
+            .collect();
         let names = self
             .completions
             .iter()
             .map(|c| c.worker_class.as_str())
             .chain(self.sheds.iter().map(|s| s.worker_class.as_str()));
         for name in names {
-            if !classes.iter().any(|(n, _, _)| n == name) {
-                classes.push((name.to_string(), 0, Vec::new()));
+            if !classes.iter().any(|(n, ..)| n == name) {
+                classes.push((name.to_string(), 0, Vec::new(), 0, 0));
             }
         }
         classes
             .into_iter()
-            .map(|(name, workers, exec_estimates_ms)| {
+            .map(|(name, workers, exec_estimates_ms, cache_hits,
+                   cache_misses)| {
                 let mut lat: Vec<f64> = Vec::new();
                 let mut cap = 0.0f64;
                 let mut tier_counts: Vec<(f32, usize)> = self
@@ -450,6 +490,8 @@ impl ServeReport {
                     },
                     tier_counts,
                     exec_estimates_ms,
+                    cache_hits,
+                    cache_misses,
                 }
             })
             .collect()
@@ -639,11 +681,15 @@ mod tests {
                 name: "fast".into(),
                 workers: 1,
                 exec_estimates_ms: vec![(1.0, Some(0.5)), (0.25, None)],
+                cache_hits: 12,
+                cache_misses: 4,
             },
             WorkerClassInfo {
                 name: "slow".into(),
                 workers: 1,
                 exec_estimates_ms: vec![(1.0, Some(40.0)), (0.25, None)],
+                cache_hits: 0,
+                cache_misses: 0,
             },
         ];
         let r = ServeReport::new(completions, sheds, 1.0, &[1.0, 0.25], 2)
@@ -655,6 +701,7 @@ mod tests {
         assert_eq!(fast.mean_capacity, 1.0);
         assert_eq!(fast.tier_counts, vec![(1.0, 4), (0.25, 0)]);
         assert_eq!(fast.exec_estimates_ms[0], (1.0, Some(0.5)));
+        assert_eq!((fast.cache_hits, fast.cache_misses), (12, 4));
         let slow = sections.iter().find(|s| s.class == "slow").unwrap();
         assert_eq!((slow.served, slow.shed), (2, 1));
         assert!((slow.mean_capacity - 0.25).abs() < 1e-9);
@@ -671,6 +718,7 @@ mod tests {
             tiers,
             total_ms,
             first_token_ms: total_ms / 2.0,
+            tokens_dropped: 0,
         }
     }
 
@@ -719,6 +767,17 @@ mod tests {
         assert_eq!(r.sessions_started, 0);
         assert!(r.stream_sections().is_empty());
         assert_eq!(r.tokens_per_s(), 0.0);
+    }
+
+    #[test]
+    fn cache_hit_rate_is_hits_over_consulted_lookups() {
+        let r = report(&[1.0]);
+        assert_eq!(r.cache_hit_rate(), 0.0,
+                   "no lookups must read 0.0, not NaN");
+        let r = report(&[1.0]).with_cache(3, 1);
+        assert!((r.cache_hit_rate() - 0.75).abs() < 1e-9);
+        let r = report(&[1.0]).with_cache(0, 5);
+        assert_eq!(r.cache_hit_rate(), 0.0);
     }
 
     #[test]

@@ -37,6 +37,11 @@ pub struct SimSpec {
     pub ms_per_capacity: f64,
     /// uniform noise added on top (0 disables)
     pub jitter_ms: f64,
+    /// modeled cost of *preparing* one window token for a batch row:
+    /// a recomputed row (arena miss) pays `seq_len` tokens, a cached
+    /// row (arena hit) pays 1 — the KV-saving the session arena is
+    /// judged by (0 disables window-cost modeling entirely)
+    pub recompute_ms_per_token: f64,
     pub seed: u64,
 }
 
@@ -48,6 +53,7 @@ impl SimSpec {
             base_ms: 0.5,
             ms_per_capacity: 1.5,
             jitter_ms: 0.2,
+            recompute_ms_per_token: 0.0,
             seed: 0x51AB,
         }
     }
@@ -86,6 +92,10 @@ pub struct SimExecutor {
     tiers: Vec<f32>,
     rng: Rng,
     record: bool,
+    /// row mix of the batch about to execute, as announced by the
+    /// worker through [`Executor::note_batch_mix`]: (recomputed rows,
+    /// arena-cached rows); consumed (and reset) by the next `execute`
+    pending_mix: (usize, usize),
     /// every executed batch, in this worker's execution order (only
     /// recorded when enabled — see [`SimExecutor::record_log`])
     pub log: Vec<SimBatchLog>,
@@ -105,6 +115,7 @@ impl SimExecutor {
             rng: Rng::new(spec.seed
                 ^ (worker as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15)),
             record: true,
+            pending_mix: (0, 0),
             log: Vec::new(),
         }
     }
@@ -140,7 +151,14 @@ impl Executor for SimExecutor {
         anyhow::ensure!(
             self.tiers.iter().any(|&t| tier_matches(t, tier)),
             "sim executor: tier {tier} not in {:?}", self.tiers);
-        let modeled_ms = self.latency_ms(tier);
+        // window-preparation cost: a recomputed row rebuilds its whole
+        // sliding window (O(seq_len)), an arena-cached row appends one
+        // token (O(1)) — the modeled saving the session arena buys
+        let (recompute_rows, cached_rows) =
+            std::mem::take(&mut self.pending_mix);
+        let window_ms = self.spec.recompute_ms_per_token
+            * (recompute_rows * self.spec.seq_len + cached_rows) as f64;
+        let modeled_ms = self.latency_ms(tier) + window_ms;
         let t0 = Instant::now();
         if modeled_ms > 0.0 {
             std::thread::sleep(Duration::from_secs_f64(modeled_ms / 1e3));
@@ -161,6 +179,11 @@ impl Executor for SimExecutor {
 
     fn name(&self) -> &'static str {
         "sim"
+    }
+
+    fn note_batch_mix(&mut self, recompute_rows: usize,
+                      cached_rows: usize) {
+        self.pending_mix = (recompute_rows, cached_rows);
     }
 }
 
@@ -354,6 +377,8 @@ pub fn write_bench_json(path: &std::path::Path, source: &str,
                              Value::Num(steps as f64)));
                 fields.push(("tokens_per_s".into(),
                              Value::Num(r.report.tokens_per_s())));
+                fields.push(("cache_hit_rate".into(),
+                             Value::Num(r.report.cache_hit_rate())));
             }
             if r.report.worker_classes.len() > 1 {
                 // heterogeneous rows also record how each device class
@@ -533,6 +558,40 @@ mod tests {
                    30.0);
         let tps = row.req("tokens_per_s").unwrap().as_f64().unwrap();
         assert!(tps.is_finite() && tps > 0.0, "tokens/s {tps}");
+        // the default arena is live, so some decode rows must have hit
+        let chr = row.req("cache_hit_rate").unwrap().as_f64().unwrap();
+        assert!(chr.is_finite() && chr > 0.0, "cache hit rate {chr}");
+    }
+
+    #[test]
+    fn recomputed_rows_cost_seq_len_and_cached_rows_cost_one() {
+        let spec = SimSpec {
+            batch: 4,
+            seq_len: 16,
+            base_ms: 0.0,
+            ms_per_capacity: 0.0,
+            jitter_ms: 0.0,
+            recompute_ms_per_token: 0.001,
+            ..SimSpec::standard()
+        };
+        let tokens = vec![0; spec.batch * spec.seq_len];
+        let mut e = SimExecutor::new(spec, &[1.0], 0);
+        e.note_batch_mix(4, 0);
+        e.execute(1.0, &tokens).unwrap();
+        e.note_batch_mix(0, 4);
+        e.execute(1.0, &tokens).unwrap();
+        // the announced mix is consumed: an unannounced batch pays no
+        // window cost at all
+        e.execute(1.0, &tokens).unwrap();
+        let recompute = e.log[0].modeled_ms;
+        let cached = e.log[1].modeled_ms;
+        assert!((recompute - 0.001 * 64.0).abs() < 1e-12,
+                "recompute {recompute}");
+        assert!((cached - 0.001 * 4.0).abs() < 1e-12, "cached {cached}");
+        assert_eq!(e.log[2].modeled_ms, 0.0);
+        assert!(recompute / cached > 10.0,
+                "hit path must be O(1) in window length, got \
+                 {recompute} vs {cached}");
     }
 
     #[test]

@@ -1,0 +1,323 @@
+//! Per-worker-class paged session-state arena — the KV-cache analogue
+//! for the sim serving engine.
+//!
+//! Every decode step needs the session's current sliding window (the
+//! last `seq_len` tokens of `prompt ++ generated`).  Before the arena,
+//! each re-admitted step recomputed that window from the
+//! [`SessionTable`](super::SessionTable) under its locks, so per-step
+//! cost grew with window length — the exact redundancy ElastiFormer
+//! exists to remove.  The arena keeps each live session's *next*
+//! window in a fixed pool of pages, deposited by the worker that just
+//! executed the previous step:
+//!
+//! - **hit**: the page's `next_step` matches the step about to run —
+//!   the cached window is served directly, no table access, no window
+//!   reconstruction (O(1) in window length on the modeled sim cost);
+//! - **miss / spill**: the page was evicted (pool full), the step was
+//!   stolen by a worker class that never served this session, or the
+//!   cached step index is stale — fall back to the table recompute;
+//! - **recycle**: every terminal path (`Done`, `Shed`, `shed_all`,
+//!   worker panic cleanup) frees the session's page exactly once;
+//!   recycling is idempotent, so racing terminal paths cannot
+//!   double-free or leak.
+//!
+//! One arena per **worker class**: workers of a class share executors
+//! of one shape, so their pages are interchangeable, while a fast and
+//! a slow class never fight over slots.  Placement affinity (the
+//! session's pinned queue shard, see
+//! [`StreamStep::shard`](super::StreamStep)) keeps continuations
+//! landing on the workers that hold the pages, which is what makes
+//! the hit rate high rather than accidental.
+//!
+//! The pool is fixed-size by construction (`pages` slots, allocated
+//! once): admitting more concurrent sessions than pages does not grow
+//! memory — least-recently-touched pages spill, and spilled sessions
+//! keep decoding through the recompute path.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// One page slot: a session's cached window, valid for exactly one
+/// upcoming step.
+struct Page {
+    session: u64,
+    /// the step index this window serves — a lookup for any other
+    /// step is a miss (stale page), so a page can never feed a wrong
+    /// row to a reordered or replayed step
+    next_step: usize,
+    /// the session's sliding window for `next_step`, already trimmed
+    /// to the executor's `seq_len`
+    window: Vec<i32>,
+}
+
+struct ArenaInner {
+    /// fixed pool, allocated once at construction
+    slots: Vec<Option<Page>>,
+    /// slot indices currently unoccupied
+    free: Vec<usize>,
+    /// session key → occupied slot index
+    by_session: HashMap<u64, usize>,
+    /// least-recently-touched session order, front = next to spill
+    lru: VecDeque<u64>,
+}
+
+impl ArenaInner {
+    /// Pool invariant: every slot is either free or owned by exactly
+    /// one session.
+    fn check(&self) {
+        debug_assert_eq!(self.free.len() + self.by_session.len(),
+                         self.slots.len(),
+                         "arena slot leak or double-free");
+        debug_assert_eq!(self.lru.len(), self.by_session.len(),
+                         "lru out of sync with the session map");
+    }
+
+    fn touch(&mut self, session: u64) {
+        if let Some(pos) = self.lru.iter().position(|&s| s == session) {
+            self.lru.remove(pos);
+        }
+        self.lru.push_back(session);
+    }
+}
+
+/// Paged cache of per-session decode windows for one worker class.
+/// All methods are lock-internal and safe to call from every worker
+/// thread; `pages == 0` builds a disabled arena (every lookup misses,
+/// every store is a no-op) so the recompute path stays exercisable.
+pub struct SessionArena {
+    inner: Mutex<ArenaInner>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+    recycled: AtomicUsize,
+    evicted: AtomicUsize,
+}
+
+impl SessionArena {
+    pub fn new(pages: usize) -> SessionArena {
+        SessionArena {
+            inner: Mutex::new(ArenaInner {
+                slots: (0..pages).map(|_| None).collect(),
+                free: (0..pages).rev().collect(),
+                by_session: HashMap::new(),
+                lru: VecDeque::new(),
+            }),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+            recycled: AtomicUsize::new(0),
+            evicted: AtomicUsize::new(0),
+        }
+    }
+
+    /// Serve the cached window for `session`'s step `step`, if the
+    /// arena holds a page valid for exactly that step.  Counts a hit
+    /// or a miss — callers only consult the arena for decode steps
+    /// (step >= 1), so prefills never dilute the hit rate.
+    pub fn lookup(&self, session: u64, step: usize) -> Option<Vec<i32>> {
+        let mut inner = self.inner.lock().unwrap();
+        let hit = inner.by_session.get(&session).copied().and_then(|i| {
+            inner.slots[i]
+                .as_ref()
+                .filter(|p| p.next_step == step)
+                .map(|p| p.window.clone())
+        });
+        match hit {
+            Some(window) => {
+                inner.touch(session);
+                drop(inner);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(window)
+            }
+            None => {
+                drop(inner);
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Deposit `session`'s window for its upcoming `next_step`,
+    /// claiming a page (or refreshing the session's existing one).
+    /// When the pool is full the least-recently-touched *other*
+    /// session spills — its next lookup misses and recomputes.
+    pub fn store(&self, session: u64, next_step: usize,
+                 window: Vec<i32>) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.slots.is_empty() {
+            return; // arena disabled
+        }
+        let slot = match inner.by_session.get(&session).copied() {
+            Some(i) => i,
+            None => {
+                let i = match inner.free.pop() {
+                    Some(i) => i,
+                    None => {
+                        // spill the coldest session to make room
+                        let victim = inner
+                            .lru
+                            .pop_front()
+                            .expect("full pool must have an lru entry");
+                        let i = inner
+                            .by_session
+                            .remove(&victim)
+                            .expect("lru entry must own a slot");
+                        inner.slots[i] = None;
+                        self.evicted.fetch_add(1, Ordering::Relaxed);
+                        i
+                    }
+                };
+                inner.by_session.insert(session, i);
+                i
+            }
+        };
+        inner.slots[slot] = Some(Page { session, next_step, window });
+        inner.touch(session);
+        inner.check();
+    }
+
+    /// Free `session`'s page.  Idempotent: returns `true` only for
+    /// the call that actually freed a page, so racing terminal paths
+    /// (worker Done vs engine shed vs shutdown sweep) recycle exactly
+    /// once and a session with no page is a harmless no-op.
+    pub fn recycle(&self, session: u64) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(i) = inner.by_session.remove(&session) else {
+            return false;
+        };
+        debug_assert!(
+            inner.slots[i].as_ref().is_some_and(|p| p.session == session),
+            "session map points at a foreign page");
+        inner.slots[i] = None;
+        inner.free.push(i);
+        if let Some(pos) = inner.lru.iter().position(|&s| s == session) {
+            inner.lru.remove(pos);
+        }
+        inner.check();
+        drop(inner);
+        self.recycled.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Free every page (engine shutdown, after `shed_all`).
+    pub fn clear(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        let sessions: Vec<u64> =
+            inner.by_session.keys().copied().collect();
+        for session in sessions {
+            let i = inner.by_session.remove(&session).unwrap();
+            inner.slots[i] = None;
+            inner.free.push(i);
+            self.recycled.fetch_add(1, Ordering::Relaxed);
+        }
+        inner.lru.clear();
+        inner.check();
+    }
+
+    /// Sessions currently holding a page.
+    pub fn live(&self) -> usize {
+        self.inner.lock().unwrap().by_session.len()
+    }
+
+    /// Decode-step lookups served from cache.
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Decode-step lookups that fell back to the table recompute.
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Pages freed by terminal paths (each counted once).
+    pub fn recycled(&self) -> usize {
+        self.recycled.load(Ordering::Relaxed)
+    }
+
+    /// Pages spilled to make room under pool pressure.
+    pub fn evicted(&self) -> usize {
+        self.evicted.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn store_then_lookup_hits_exactly_the_stored_step() {
+        let arena = SessionArena::new(4);
+        arena.store(7, 3, vec![1, 2, 3]);
+        // wrong step: stale page must miss, not serve a wrong row
+        assert!(arena.lookup(7, 2).is_none());
+        assert!(arena.lookup(7, 4).is_none());
+        assert_eq!(arena.lookup(7, 3), Some(vec![1, 2, 3]));
+        // unknown session misses
+        assert!(arena.lookup(8, 3).is_none());
+        assert_eq!(arena.hits(), 1);
+        assert_eq!(arena.misses(), 3);
+    }
+
+    #[test]
+    fn refresh_replaces_the_sessions_page_in_place() {
+        let arena = SessionArena::new(1);
+        arena.store(1, 1, vec![10]);
+        arena.store(1, 2, vec![10, 11]);
+        assert!(arena.lookup(1, 1).is_none(), "old step must be stale");
+        assert_eq!(arena.lookup(1, 2), Some(vec![10, 11]));
+        assert_eq!(arena.live(), 1);
+        assert_eq!(arena.evicted(), 0,
+                   "refreshing a held page is not an eviction");
+    }
+
+    #[test]
+    fn full_pool_spills_the_coldest_session() {
+        let arena = SessionArena::new(2);
+        arena.store(1, 1, vec![1]);
+        arena.store(2, 1, vec![2]);
+        arena.lookup(1, 1); // session 1 is now the warmest
+        arena.store(3, 1, vec![3]); // must evict session 2
+        assert_eq!(arena.evicted(), 1);
+        assert!(arena.lookup(2, 1).is_none(), "spilled session misses");
+        assert_eq!(arena.lookup(1, 1), Some(vec![1]));
+        assert_eq!(arena.lookup(3, 1), Some(vec![3]));
+        assert_eq!(arena.live(), 2);
+    }
+
+    #[test]
+    fn recycle_is_exactly_once_and_idempotent() {
+        let arena = SessionArena::new(2);
+        arena.store(5, 1, vec![5]);
+        assert!(arena.recycle(5), "first recycle frees the page");
+        assert!(!arena.recycle(5), "second recycle is a no-op");
+        assert!(!arena.recycle(99), "never-stored session is a no-op");
+        assert_eq!(arena.recycled(), 1);
+        assert_eq!(arena.live(), 0);
+        // the slot is reusable afterwards
+        arena.store(6, 1, vec![6]);
+        arena.store(7, 1, vec![7]);
+        assert_eq!(arena.live(), 2);
+        assert_eq!(arena.evicted(), 0);
+    }
+
+    #[test]
+    fn disabled_arena_misses_everything_quietly() {
+        let arena = SessionArena::new(0);
+        arena.store(1, 1, vec![1]);
+        assert!(arena.lookup(1, 1).is_none());
+        assert!(!arena.recycle(1));
+        assert_eq!(arena.live(), 0);
+    }
+
+    #[test]
+    fn clear_frees_every_page_once() {
+        let arena = SessionArena::new(4);
+        for s in 0..3u64 {
+            arena.store(s, 1, vec![s as i32]);
+        }
+        arena.clear();
+        assert_eq!(arena.live(), 0);
+        assert_eq!(arena.recycled(), 3);
+        arena.clear(); // idempotent
+        assert_eq!(arena.recycled(), 3);
+    }
+}

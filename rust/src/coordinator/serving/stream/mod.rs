@@ -34,7 +34,28 @@
 //! plus one terminal event): memory per session is bounded while the
 //! engine never blocks on a slow consumer — a worker thread stalled on
 //! one client's unread tokens would stall every session behind it.  A
-//! dropped `StreamResponse` discards further tokens silently.
+//! dropped `StreamResponse` discards further tokens silently; a token
+//! refused at the cap for a *live* receiver is counted
+//! ([`StreamStats::tokens_dropped`]) instead of vanishing, and
+//! `SessionTable::admit` asserts the cap covers the session's step
+//! budget so the counter stays zero on every engine-constructed
+//! channel.
+//!
+//! The event-order contract (`Token* (Done|Shed)`) is enforced **by
+//! the channel itself**: [`StreamSender::token`] discards tokens once
+//! a terminal has been enqueued.  That guard is what lets the
+//! [`SessionTable`] deliver events under its *per-session* entry locks
+//! — an `advance` racing a `shed` can lose the race safely — instead
+//! of serializing every decode step in the fleet on one table-wide
+//! mutex (the pre-arena design).
+//!
+//! Cached decode state lives in the per-worker-class [`arena`]
+//! module: each completed step deposits the session's next window row
+//! into the executing class's paged arena, so the next step is served
+//! incrementally (O(1) in window length on the modeled sim cost)
+//! instead of recomputed from the table.
+
+pub mod arena;
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -115,6 +136,11 @@ pub struct StreamStats {
     pub total_ms: f64,
     /// submit → first token (prefill) latency, ms
     pub first_token_ms: f64,
+    /// tokens refused at the channel cap while the receiver was still
+    /// alive — a step-index gap the client can now account for instead
+    /// of silently losing.  Always 0 for engine-constructed channels
+    /// (the cap is sized to `max_steps`, asserted at admission).
+    pub tokens_dropped: usize,
 }
 
 enum ChanState {
@@ -138,6 +164,11 @@ struct ChanInner {
     /// token-event bound (terminals are always accepted): sized to the
     /// session at creation, so a full run never blocks the engine
     cap: usize,
+    /// tokens refused at the cap while the receiver was alive — a real
+    /// loss the client would see as a step gap, surfaced through
+    /// [`StreamStats::tokens_dropped`] (post-terminal and
+    /// dead-receiver discards are *not* drops: they are the contract)
+    dropped: usize,
 }
 
 /// Create one session channel: (engine-side sender, caller-side
@@ -150,6 +181,7 @@ pub(crate) fn channel(id: u64, cap: usize)
             state: ChanState::Open,
             rx_alive: true,
             cap: cap.max(1),
+            dropped: 0,
         }),
         cv: Condvar::new(),
     });
@@ -169,14 +201,45 @@ pub(crate) struct StreamSender {
 impl StreamSender {
     /// Deliver one token event.  Never blocks: the channel is sized to
     /// the session, and a dropped receiver discards tokens silently.
+    ///
+    /// Order is enforced *here*, not by the caller's locking: once a
+    /// terminal has been enqueued (`state != Open`) the token is
+    /// discarded, so an `advance` that loses a race against a `shed`
+    /// cannot violate the `Token* (Done|Shed)` contract.  This guard
+    /// is what makes per-session table locking safe.
     pub(crate) fn token(&self, step: usize, tier: f32, token: i32) {
         let mut inner = self.chan.inner.lock().unwrap();
-        if !inner.rx_alive || inner.events.len() >= inner.cap {
-            return; // receiver gone, or a runaway producer: drop
+        if !matches!(inner.state, ChanState::Open) {
+            return; // terminal already enqueued: the contract wins
+        }
+        if !inner.rx_alive {
+            return; // receiver gone: nobody will read it
+        }
+        if inner.events.len() >= inner.cap {
+            // a live receiver just lost a token — count it so the
+            // terminal stats can surface the gap
+            inner.dropped += 1;
+            return;
         }
         inner.events.push_back(StreamEvent::Token { step, tier, token });
         drop(inner);
         self.chan.cv.notify_all();
+    }
+
+    /// Tokens refused at the cap for a live receiver so far.
+    pub(crate) fn drops(&self) -> usize {
+        self.chan.inner.lock().unwrap().dropped
+    }
+
+    /// The channel's token-event bound (terminals bypass it).
+    pub(crate) fn cap(&self) -> usize {
+        self.chan.inner.lock().unwrap().cap
+    }
+
+    /// Has this sender already delivered its terminal?  Used by the
+    /// table to detect a session terminated by a concurrent path.
+    pub(crate) fn is_done(&self) -> bool {
+        self.done
     }
 
     /// Terminal success.  Exactly-once: later terminals are ignored.
@@ -184,8 +247,21 @@ impl StreamSender {
         self.terminate(StreamEvent::Done(stats));
     }
 
+    /// Non-consuming [`finish`](Self::finish): for senders that stay
+    /// embedded in a shared per-session entry (the entry itself is
+    /// dropped later; the drop guard sees `done` and stays quiet).
+    pub(crate) fn finish_ref(&mut self, stats: StreamStats) {
+        self.terminate(StreamEvent::Done(stats));
+    }
+
     /// Terminal failure.  Exactly-once: later terminals are ignored.
     pub(crate) fn shed(mut self, err: ServeError) {
+        self.terminate(StreamEvent::Shed(err));
+    }
+
+    /// Non-consuming [`shed`](Self::shed), same contract as
+    /// [`finish_ref`](Self::finish_ref).
+    pub(crate) fn shed_ref(&mut self, err: ServeError) {
         self.terminate(StreamEvent::Shed(err));
     }
 
@@ -336,6 +412,11 @@ pub(crate) struct StreamStep {
     /// session admission stamp (deadline clock — NOT this step's
     /// re-admission stamp)
     pub started: Instant,
+    /// affine queue shard, pinned at admission: continuations are
+    /// re-deposited here (not p2c) so the workers that hold the
+    /// session's arena pages keep serving it, and the steal peek
+    /// prices cache-holding heads as cheaper to serve
+    pub shard: usize,
 }
 
 /// What the table decided after one executed step.
@@ -350,12 +431,29 @@ pub(crate) enum Advance {
     Gone,
 }
 
+/// One registered session behind its own lock.  The table's map holds
+/// `Arc<SessionEntry>`, so the table-wide mutex is held only for the
+/// key lookup (or insert/remove) — step bookkeeping and event delivery
+/// happen under this per-session lock, and decode steps of *different*
+/// sessions never contend.
+pub(crate) struct SessionEntry {
+    state: Mutex<DecodeSession>,
+}
+
 /// Owner of all live decode sessions: registers new sessions, serves
 /// each step's compute row to the workers, and turns every completed
 /// step into either a re-admission or a terminal event.  One instance
 /// per engine, shared by the handle and every worker.
+///
+/// Locking discipline: the map mutex and a session's entry mutex are
+/// never held together *across* sessions, and nothing takes the map
+/// mutex while holding an entry mutex — `advance` drops the entry
+/// guard before removing a completed session.  A terminal racing a
+/// step is resolved by the sender: whichever path terminates first
+/// wins (`is_done`), and a late `token()` is discarded by the
+/// channel's own order guard.
 pub(crate) struct SessionTable {
-    sessions: Mutex<HashMap<u64, DecodeSession>>,
+    sessions: Mutex<HashMap<u64, Arc<SessionEntry>>>,
     next_key: AtomicU64,
     started: AtomicUsize,
 }
@@ -383,22 +481,37 @@ impl SessionTable {
 
     /// Register one new session and build its step-0 (prefill) work
     /// item.  The caller pushes the item into the admission queue.
+    /// `shards` is the queue's shard count: the session is pinned to
+    /// shard `key % shards` for the life of the stream (placement
+    /// affinity — continuations and arena pages stay together).
+    ///
+    /// Panics if the sender's channel cap cannot hold the session's
+    /// full token budget: a correctly sized channel is the invariant
+    /// that keeps [`StreamStats::tokens_dropped`] at zero.
     pub(crate) fn admit(&self, req: StreamRequest, sender: StreamSender,
-                        started: Instant) -> Pending {
+                        started: Instant, shards: usize) -> Pending {
         let key = self.next_key.fetch_add(1, Ordering::SeqCst);
         let max_steps = req.max_steps.max(1);
+        assert!(sender.cap() >= max_steps,
+                "stream channel cap {} cannot hold max_steps {}: a full \
+                 run would drop tokens for a live receiver",
+                sender.cap(), max_steps);
+        let shard = (key % shards.max(1) as u64) as usize;
         let slo = req.slo.clone();
-        self.sessions.lock().unwrap().insert(key, DecodeSession {
-            id: req.id,
-            prompt: req.prompt,
-            generated: Vec::new(),
-            max_steps,
-            slo: req.slo,
-            started,
-            tiers: Vec::new(),
-            first_token_ms: 0.0,
-            sender,
+        let entry = Arc::new(SessionEntry {
+            state: Mutex::new(DecodeSession {
+                id: req.id,
+                prompt: req.prompt,
+                generated: Vec::new(),
+                max_steps,
+                slo: req.slo,
+                started,
+                tiers: Vec::new(),
+                first_token_ms: 0.0,
+                sender,
+            }),
         });
+        self.sessions.lock().unwrap().insert(key, entry);
         self.started.fetch_add(1, Ordering::SeqCst);
         Pending {
             req: Request { id: req.id, tokens: Vec::new(), slo },
@@ -408,18 +521,30 @@ impl SessionTable {
                 step: 0,
                 max_steps,
                 started,
+                shard,
             }),
         }
+    }
+
+    /// Clone one session's entry handle out of the map (the table lock
+    /// is held only for this lookup).
+    fn entry(&self, key: u64) -> Option<Arc<SessionEntry>> {
+        self.sessions.lock().unwrap().get(&key).cloned()
     }
 
     /// The compute row for one session's next step: the last `seq_len`
     /// tokens of `prompt ++ generated` (a sliding window once the
     /// sequence outgrows the executor shape; `form_rows` zero-pads
-    /// shorter rows).  `None` if the session no longer exists.
+    /// shorter rows).  `None` if the session no longer exists.  This
+    /// is the *recompute* path — the arena hit path serves the same
+    /// window without touching the table at all.
     pub(crate) fn compute_row(&self, key: u64, seq_len: usize)
                               -> Option<Vec<i32>> {
-        let sessions = self.sessions.lock().unwrap();
-        let sess = sessions.get(&key)?;
+        let entry = self.entry(key)?;
+        let sess = entry.state.lock().unwrap();
+        if sess.sender.is_done() {
+            return None; // terminated concurrently: step is stale
+        }
         let total = sess.prompt.len() + sess.generated.len();
         let start = total.saturating_sub(seq_len);
         let mut row = Vec::with_capacity(total - start);
@@ -437,12 +562,20 @@ impl SessionTable {
     /// hand back the session's next work item (continuous batching:
     /// the caller re-admits it) or complete the session.  `now` is the
     /// worker's post-execution stamp.
+    ///
+    /// Runs under the session's *own* lock — concurrent steps of other
+    /// sessions proceed untouched.  Delivery inside the entry lock is
+    /// safe against a racing `shed` because the channel itself
+    /// enforces event order.
     pub(crate) fn advance(&self, st: &StreamStep, token: i32, tier: f32,
                           now: Instant) -> Advance {
-        let mut sessions = self.sessions.lock().unwrap();
-        let Some(sess) = sessions.get_mut(&st.session) else {
+        let Some(entry) = self.entry(st.session) else {
             return Advance::Gone;
         };
+        let mut sess = entry.state.lock().unwrap();
+        if sess.sender.is_done() {
+            return Advance::Gone; // shed won the race: discard the step
+        }
         sess.generated.push(token);
         sess.tiers.push(tier);
         if st.step == 0 {
@@ -452,8 +585,6 @@ impl SessionTable {
         }
         sess.sender.token(st.step, tier, token);
         if sess.generated.len() >= sess.max_steps {
-            let sess = sessions.remove(&st.session).unwrap();
-            drop(sessions);
             let stats = StreamStats {
                 id: sess.id,
                 class: sess.slo.name.clone(),
@@ -463,8 +594,11 @@ impl SessionTable {
                     .saturating_duration_since(sess.started)
                     .as_secs_f64() * 1e3,
                 first_token_ms: sess.first_token_ms,
+                tokens_dropped: sess.sender.drops(),
             };
-            sess.sender.finish(stats.clone());
+            sess.sender.finish_ref(stats.clone());
+            drop(sess); // entry lock released before the map lock
+            self.sessions.lock().unwrap().remove(&st.session);
             return Advance::Done(stats);
         }
         let req = Request {
@@ -472,7 +606,7 @@ impl SessionTable {
             tokens: Vec::new(),
             slo: sess.slo.clone(),
         };
-        drop(sessions);
+        drop(sess);
         Advance::Requeue(Pending {
             req,
             submitted: now,
@@ -481,16 +615,23 @@ impl SessionTable {
                 step: st.step + 1,
                 max_steps: st.max_steps,
                 started: st.started,
+                shard: st.shard,
             }),
         })
     }
 
     /// Terminate one session with a `Shed` event and return its record
     /// for the engine's stream-shed log.  `None` if the session no
-    /// longer exists (already terminated).
+    /// longer exists or already terminated (a racing `advance` may
+    /// still hold an entry handle; the sender's exactly-once guard and
+    /// the channel's order guard make the race benign).
     pub(crate) fn shed(&self, key: u64, err: ServeError,
                        worker_class: &str) -> Option<StreamShedRecord> {
-        let sess = self.sessions.lock().unwrap().remove(&key)?;
+        let entry = self.sessions.lock().unwrap().remove(&key)?;
+        let mut sess = entry.state.lock().unwrap();
+        if sess.sender.is_done() {
+            return None; // completion won the race: nothing to shed
+        }
         let rec = StreamShedRecord {
             id: sess.id,
             class: sess.slo.name.clone(),
@@ -498,7 +639,7 @@ impl SessionTable {
             steps_done: sess.generated.len(),
             reason: err.clone(),
         };
-        sess.sender.shed(err);
+        sess.sender.shed_ref(err);
         Some(rec)
     }
 
@@ -506,13 +647,17 @@ impl SessionTable {
     /// whose in-flight step died with a worker, or that never got one).
     pub(crate) fn shed_all(&self, err: ServeError, worker_class: &str)
                            -> Vec<StreamShedRecord> {
-        let drained: Vec<DecodeSession> = {
+        let drained: Vec<Arc<SessionEntry>> = {
             let mut sessions = self.sessions.lock().unwrap();
-            sessions.drain().map(|(_, s)| s).collect()
+            sessions.drain().map(|(_, e)| e).collect()
         };
         drained
             .into_iter()
-            .map(|sess| {
+            .filter_map(|entry| {
+                let mut sess = entry.state.lock().unwrap();
+                if sess.sender.is_done() {
+                    return None; // already terminated concurrently
+                }
                 let rec = StreamShedRecord {
                     id: sess.id,
                     class: sess.slo.name.clone(),
@@ -520,8 +665,8 @@ impl SessionTable {
                     steps_done: sess.generated.len(),
                     reason: err.clone(),
                 };
-                sess.sender.shed(err.clone());
-                rec
+                sess.sender.shed_ref(err.clone());
+                Some(rec)
             })
             .collect()
     }
@@ -550,6 +695,7 @@ mod tests {
             tiers: vec![1.0, 0.5],
             total_ms: 1.0,
             first_token_ms: 0.5,
+            tokens_dropped: 0,
         });
         assert_eq!(rx.id(), 7);
         match rx.recv() {
@@ -621,6 +767,7 @@ mod tests {
             tiers: vec![1.0],
             total_ms: 0.0,
             first_token_ms: 0.0,
+            tokens_dropped: 0,
         });
     }
 
@@ -630,7 +777,7 @@ mod tests {
         let (tx, _rx) = channel(1, 8);
         let pending = table.admit(
             StreamRequest::new(1, vec![10, 11, 12], 4), tx,
-            Instant::now());
+            Instant::now(), 4);
         let key = match &pending.outcome {
             crate::coordinator::serving::Outcome::Stream(st) => st.session,
             _ => panic!("stream admit must yield a stream item"),
@@ -644,7 +791,7 @@ mod tests {
         // generated tokens extend the window
         let st = StreamStep {
             session: key, step: 0, max_steps: 4,
-            started: Instant::now(),
+            started: Instant::now(), shard: 0,
         };
         match table.advance(&st, 99, 1.0, Instant::now()) {
             Advance::Requeue(_) => {}
@@ -661,13 +808,13 @@ mod tests {
         let (tx, rx) = channel(5, 8);
         let t0 = Instant::now();
         let pending =
-            table.admit(StreamRequest::new(5, vec![1], 2), tx, t0);
+            table.admit(StreamRequest::new(5, vec![1], 2), tx, t0, 4);
         let key = match &pending.outcome {
             crate::coordinator::serving::Outcome::Stream(st) => st.session,
             _ => panic!("stream admit must yield a stream item"),
         };
         let st0 = StreamStep { session: key, step: 0, max_steps: 2,
-                               started: t0 };
+                               started: t0, shard: 0 };
         let st1 = match table.advance(&st0, 7, 1.0, Instant::now()) {
             Advance::Requeue(p) => match p.outcome {
                 crate::coordinator::serving::Outcome::Stream(st) => st,
@@ -699,13 +846,139 @@ mod tests {
     }
 
     #[test]
+    fn post_terminal_token_is_discarded_by_the_channel() {
+        // the order contract must hold even when the producer races a
+        // terminal: the channel itself discards late tokens, with no
+        // table lock in the picture
+        let (mut tx, rx) = channel(3, 8);
+        tx.token(0, 1.0, 10);
+        tx.shed_ref(ServeError::DeadlineExceeded);
+        tx.token(1, 1.0, 11); // late step from a racing worker
+        tx.token(2, 1.0, 12);
+        assert!(matches!(rx.recv(),
+                         Some(StreamEvent::Token { step: 0, .. })));
+        assert!(matches!(rx.recv(),
+                         Some(StreamEvent::Shed(
+                             ServeError::DeadlineExceeded))));
+        assert!(rx.recv().is_none(),
+                "tokens pushed after the terminal must never surface");
+    }
+
+    #[test]
+    fn cap_drops_for_a_live_receiver_are_counted() {
+        // cap 2, three tokens, receiver alive and unread: the third is
+        // refused — but counted, so the terminal stats surface the gap
+        let (mut tx, rx) = channel(9, 2);
+        tx.token(0, 1.0, 1);
+        tx.token(1, 1.0, 2);
+        tx.token(2, 1.0, 3); // over cap: dropped, not lost silently
+        assert_eq!(tx.drops(), 1);
+        let stats = StreamStats {
+            id: 9,
+            class: "x".into(),
+            steps: 3,
+            tiers: vec![1.0; 3],
+            total_ms: 1.0,
+            first_token_ms: 0.5,
+            tokens_dropped: tx.drops(),
+        };
+        tx.finish_ref(stats);
+        assert!(matches!(rx.recv(),
+                         Some(StreamEvent::Token { step: 0, .. })));
+        assert!(matches!(rx.recv(),
+                         Some(StreamEvent::Token { step: 1, .. })));
+        match rx.recv() {
+            Some(StreamEvent::Done(stats)) => {
+                assert_eq!(stats.tokens_dropped, 1,
+                           "the gap must be visible in the stats");
+            }
+            other => panic!("want Done, got {other:?}"),
+        }
+        assert!(rx.recv().is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot hold max_steps")]
+    fn admit_rejects_a_channel_too_small_for_the_budget() {
+        let table = SessionTable::new();
+        let (tx, _rx) = channel(1, 2); // cap 2 < max_steps 8
+        table.admit(StreamRequest::new(1, vec![1], 8), tx,
+                    Instant::now(), 4);
+    }
+
+    #[test]
+    fn concurrent_advance_and_shed_keep_strict_order() {
+        // the bug-2 regression: with per-session entry locks there is
+        // no table-wide mutex serializing advance against shed — the
+        // channel's own guards must keep the event stream well-formed
+        // under every interleaving
+        for delay_us in [0u64, 50, 200, 800, 2000] {
+            let table = Arc::new(SessionTable::new());
+            let (tx, rx) = channel(1, 128);
+            let pending = table.admit(
+                StreamRequest::new(1, vec![1, 2], 100), tx,
+                Instant::now(), 4);
+            let mut st = match pending.outcome {
+                crate::coordinator::serving::Outcome::Stream(st) => st,
+                _ => panic!("stream admit must yield a stream item"),
+            };
+            let session_key = st.session;
+            let t = {
+                let table = Arc::clone(&table);
+                std::thread::spawn(move || loop {
+                    match table.advance(&st, st.step as i32, 1.0,
+                                        Instant::now()) {
+                        Advance::Requeue(p) => {
+                            st = match p.outcome {
+                                crate::coordinator::serving::Outcome
+                                    ::Stream(s) => s,
+                                _ => unreachable!(),
+                            };
+                            std::thread::sleep(
+                                Duration::from_micros(100));
+                        }
+                        Advance::Done(_) => return true,
+                        Advance::Gone => return false,
+                    }
+                })
+            };
+            std::thread::sleep(Duration::from_micros(delay_us));
+            let shed_rec =
+                table.shed(session_key, ServeError::ShuttingDown, "test");
+            let done = t.join().unwrap();
+            // exactly one terminal path won
+            assert!(done != shed_rec.is_some(),
+                    "session must end in exactly one of Done/Shed \
+                     (done={done}, shed={})", shed_rec.is_some());
+            // the client stream: strictly increasing steps, then one
+            // terminal, then None — no post-terminal tokens, ever
+            let mut next_step = 0usize;
+            let mut terminals = 0usize;
+            while let Some(ev) = rx.recv() {
+                match ev {
+                    StreamEvent::Token { step, .. } => {
+                        assert_eq!(terminals, 0,
+                                   "token after a terminal");
+                        assert_eq!(step, next_step,
+                                   "steps must be gapless in order");
+                        next_step += 1;
+                    }
+                    _ => terminals += 1,
+                }
+            }
+            assert_eq!(terminals, 1, "exactly one terminal event");
+            assert_eq!(table.live(), 0);
+        }
+    }
+
+    #[test]
     fn shed_all_terminates_every_live_session() {
         let table = SessionTable::new();
         let mut rxs = Vec::new();
         for id in 0..3u64 {
             let (tx, rx) = channel(id, 4);
             table.admit(StreamRequest::new(id, vec![1], 4), tx,
-                        Instant::now());
+                        Instant::now(), 2);
             rxs.push(rx);
         }
         let recs = table.shed_all(ServeError::ShuttingDown, "engine");

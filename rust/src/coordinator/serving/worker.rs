@@ -53,6 +53,17 @@ pub trait Executor {
     fn supports(&self, _tier: f32) -> bool {
         true
     }
+    /// Cost hint for the *next* `execute` call: how many of its rows
+    /// carry a full-window recompute (one-shot prefills, decode cache
+    /// misses) vs a cached incremental window from the session arena.
+    /// Real backends ignore it (the work is whatever the tensors
+    /// hold); the sim backend uses it to model the KV-cache saving —
+    /// a cached row costs O(1) in window length, a recompute row
+    /// O(seq_len) — so the bench record shows the hit path beating
+    /// the recompute path on modeled cost.
+    fn note_batch_mix(&mut self, _recompute_rows: usize,
+                      _cached_rows: usize) {
+    }
     /// backend name for reports/logs
     fn name(&self) -> &'static str {
         "executor"
@@ -193,6 +204,7 @@ fn fail_batch(shared: &EngineShared, items: Vec<Pending>, msg: &str,
                 {
                     recs.push(rec);
                 }
+                shared.recycle_session(st.session);
             }
         }
     }
@@ -242,9 +254,10 @@ pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
     let seq_len = exec.seq_len();
     let class_name = shared.classes[class_idx].0.clone();
     let controller = &shared.controllers[class_idx];
+    let arena = &shared.arenas[class_idx];
     let mut batches = 0usize;
     loop {
-        let popped = shared.queue.pop_batch_keyed(
+        let popped = shared.queue.pop_batch_keyed_affine(
             worker, batch, shared.max_batch_wait,
             |p: &Pending| {
                 batch_key_for(p.kind(), &p.req.slo, &shared.caps)
@@ -255,7 +268,15 @@ pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
             // below, freeing its queue slot and resolving its client
             // promptly)
             |p: &Pending| p.slack_ms_at(Instant::now())
-                .unwrap_or(f64::INFINITY));
+                .unwrap_or(f64::INFINITY),
+            // affinity: a decode continuation is pinned to its
+            // session's shard, where the arena pages live.  Prefills
+            // (step 0) have no cached state yet, and one-shots never
+            // do — no affinity, exactly the old steal cost.
+            |p: &Pending| match &p.outcome {
+                Outcome::Stream(st) if st.step > 0 => Some(st.shard),
+                _ => None,
+            });
         if popped.is_empty() {
             return Ok(batches); // closed and drained
         }
@@ -287,6 +308,7 @@ pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
                         {
                             stream_sheds.push(rec);
                         }
+                        shared.recycle_session(st.session);
                     }
                 }
                 continue;
@@ -321,22 +343,40 @@ pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
         let tier = controller.lock().unwrap().choose_for_batch(
             shared.queue.len(), floor, slack_ms);
         // build each item's compute row: a one-shot's row is its
-        // request tokens, a decode step's is the session's current
-        // window from the table; `items` and `rows` stay aligned
+        // request tokens, a decode step's is served from this class's
+        // arena when a live page matches the step (the incremental hit
+        // path — no table locks, no window rebuild) and recomputed
+        // from the session table otherwise (cold start, spilled page,
+        // or a step stolen across classes); `items` and `rows` stay
+        // aligned
         let mut rows: Vec<Vec<i32>> = Vec::with_capacity(live.len());
         let mut items: Vec<Pending> = Vec::with_capacity(live.len());
+        let mut cached_rows = 0usize;
         for mut p in live {
             match &p.outcome {
                 Outcome::OneShot(_) => {
                     rows.push(std::mem::take(&mut p.req.tokens));
                 }
                 Outcome::Stream(st) => {
-                    match shared.sessions.compute_row(st.session, seq_len)
-                    {
-                        Some(row) => rows.push(row),
-                        // session already terminated: drop the stale
-                        // step (its stream got its terminal elsewhere)
-                        None => continue,
+                    let hit = if st.step > 0 {
+                        arena.lookup(st.session, st.step)
+                    } else {
+                        None // prefill: nothing cached yet
+                    };
+                    match hit {
+                        Some(row) => {
+                            cached_rows += 1;
+                            rows.push(row);
+                        }
+                        None => match shared.sessions
+                            .compute_row(st.session, seq_len)
+                        {
+                            Some(row) => rows.push(row),
+                            // session already terminated: drop the
+                            // stale step (its stream got its terminal
+                            // elsewhere)
+                            None => continue,
+                        },
                     }
                 }
             }
@@ -348,6 +388,8 @@ pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
         let row_refs: Vec<&[i32]> =
             rows.iter().map(|r| r.as_slice()).collect();
         let tokens = form_rows(&row_refs, batch, seq_len);
+        drop(row_refs);
+        exec.note_batch_mix(items.len() - cached_rows, cached_rows);
         // stamped after batch formation, immediately before the backend
         // call: the documented clock is admission -> exec start -> done,
         // and host-side formation is queue time, not exec time
@@ -420,10 +462,25 @@ pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
                     match shared.sessions.advance(&st, token, tier, done)
                     {
                         Advance::Requeue(next) => {
+                            // deposit the session's *next* window into
+                            // this class's arena before the step
+                            // becomes visible to any worker: append
+                            // the sampled token to the window we just
+                            // executed and slide it — the incremental
+                            // update the recompute path exists to
+                            // avoid
+                            let mut win = std::mem::take(&mut rows[i]);
+                            win.push(token);
+                            if win.len() > seq_len {
+                                let cut = win.len() - seq_len;
+                                win.drain(..cut);
+                            }
+                            arena.store(st.session, st.step + 1, win);
                             let urgent =
                                 next.req.slo.deadline.is_some();
                             if let Err(stale) =
-                                shared.queue.requeue(next, urgent)
+                                shared.queue.requeue_to(
+                                    st.shard, next, urgent)
                             {
                                 // queue closed mid-decode: terminate
                                 // the session now, not at a step that
@@ -439,11 +496,20 @@ pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
                                     {
                                         stream_sheds.push(rec);
                                     }
+                                    shared.recycle_session(st.session);
                                 }
                             }
                         }
-                        Advance::Done(stats) => stream_done.push(stats),
-                        Advance::Gone => {}
+                        Advance::Done(stats) => {
+                            shared.recycle_session(st.session);
+                            stream_done.push(stats);
+                        }
+                        // terminated concurrently: whoever shed it
+                        // already recycled; a second recycle is a
+                        // guaranteed no-op either way
+                        Advance::Gone => {
+                            shared.recycle_session(st.session);
+                        }
                     }
                 }
             }

@@ -92,6 +92,10 @@ elastiformer — ElastiFormer reproduction (see DESIGN.md)
               (N streaming decode sessions of K tokens each ride along
                with the one-shot load — continuous batching with
                per-step tier decisions; per-class stream report lines)
+              --arena-pages P
+              (session-arena pages per worker class: cached decode
+               windows with shard-affine placement; 0 disables the
+               arena — every decode step recomputes its window)
   elastiformer info --config lm_tiny";
 
 /// The artifact-backed subcommands need the PJRT runtime layer; when
@@ -372,7 +376,7 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
     args.check_known(&["requests", "rates", "workers", "batch", "seq-len",
                        "queue-bound", "queue-shards", "depth-per-tier",
                        "seed", "worker-classes", "stream",
-                       "decode-steps"])?;
+                       "decode-steps", "arena-pages"])?;
     let n = args.usize_or("requests", 512)?;
     let workers = args.usize_or("workers", 4)?;
     let seed = args.u64_or("seed", 42)?;
@@ -381,6 +385,10 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
     // interleaved with the one-shot arrivals (continuous batching)
     let stream_n = args.usize_or("stream", 0)?;
     let decode_steps = args.usize_or("decode-steps", 16)?;
+    // session-arena pages per worker class (0 = decode steps always
+    // recompute their window from the session table)
+    let arena_pages =
+        args.usize_or("arena-pages", ServeConfig::standard().arena_pages)?;
     // 0 = auto (one admission shard per worker); 1 = the classic
     // shared queue, kept for A/B comparison
     let queue_shards = args.usize_or("queue-shards", 0)?;
@@ -438,7 +446,8 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
         let (report, shed) = run_sim_point(spec, workers, queue_bound,
                                            queue_shards, depth_per_tier,
                                            classes.as_deref(), n, rate,
-                                           seed, stream_n, decode_steps)?;
+                                           seed, stream_n, decode_steps,
+                                           arena_pages)?;
         let tiers: Vec<String> = report
             .tier_counts
             .iter()
@@ -470,6 +479,12 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
                          s.tokens_per_s, s.mean_first_token_ms,
                          s.p99_session_ms, tiers.join(" "));
             }
+            // session-arena economy: decode rows served from cached
+            // windows vs recomputed from the session table
+            println!("    arena  hit rate {:>5.1}% | {} cached row(s), \
+                      {} recomputed",
+                     report.cache_hit_rate() * 100.0,
+                     report.cache_hits, report.cache_misses);
         }
         if classes.is_some() {
             // per-worker-class split: each class's share, tier mix and
@@ -481,9 +496,17 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
                     .and_then(|(_, e)| *e)
                     .map(|e| format!("{e:.2} ms"))
                     .unwrap_or_else(|| "-".into());
+                let arena = if s.cache_hits + s.cache_misses > 0 {
+                    format!(" | arena {:.1}% of {}",
+                            100.0 * s.cache_hits as f64
+                                / (s.cache_hits + s.cache_misses) as f64,
+                            s.cache_hits + s.cache_misses)
+                } else {
+                    String::new()
+                };
                 println!("    class {:<10} ({} workers) | served {:>5} | \
                           p99 {:>7.2} ms | mean cap {:.2} | \
-                          est@top {est}",
+                          est@top {est}{arena}",
                          s.class, s.workers, s.served, s.p99_ms,
                          s.mean_capacity);
             }
@@ -532,12 +555,14 @@ fn run_sim_point(spec: SimSpec, workers: usize, queue_bound: usize,
                  queue_shards: usize, depth_per_tier: f64,
                  classes: Option<&[(String, usize, f64)]>, n: usize,
                  rate: f64, seed: u64, stream_n: usize,
-                 decode_steps: usize) -> Result<(ServeReport, usize)> {
+                 decode_steps: usize, arena_pages: usize)
+                 -> Result<(ServeReport, usize)> {
     let mut cfg = ServeConfig::sim()
         .with_workers(workers)
         .with_queue_bound(queue_bound)
         .with_queue_shards(queue_shards)
         .with_depth_per_tier(depth_per_tier)
+        .with_arena_pages(arena_pages)
         .with_max_batch_wait(Duration::from_millis(2));
     let caps = cfg.capacities();
     let engine = match classes {

@@ -72,8 +72,12 @@ fn bench_gate_records_shared_vs_sharded_pipeline() {
     // streaming_point itself asserts every session completes and the
     // session logs reconcile (started == done + shed).
     let (sessions, decode_steps) = (32usize, 8usize);
+    // nonzero window-modeling so the recorded tokens/s reflects the
+    // arena's O(1)-vs-O(seq_len) row-preparation saving
+    let stream_spec =
+        SimSpec { recompute_ms_per_token: 0.002, ..spec };
     let streaming =
-        sim::streaming_point(spec, workers, workers, sessions,
+        sim::streaming_point(stream_spec, workers, workers, sessions,
                              decode_steps)
             .unwrap_or_else(|e| panic!("streaming pipeline failed: {e:#}"));
     assert_eq!(streaming.stream_done.len(), sessions,
@@ -82,6 +86,8 @@ fn bench_gate_records_shared_vs_sharded_pipeline() {
         |s| s.steps == decode_steps && s.tiers.len() == decode_steps),
             "streaming: truncated tier trajectories");
     assert!(streaming.tokens_per_s() > 0.0);
+    assert!(streaming.cache_hits > 0,
+            "the default session arena must serve some decode rows");
     rows.push(BenchRow { queue: "streaming", workers, shards: workers,
                          classes: String::new(), report: streaming });
     let path = Path::new(
@@ -134,6 +140,12 @@ fn bench_gate_records_shared_vs_sharded_pipeline() {
                 .req("stream_tokens").unwrap()
                 .as_f64().unwrap(),
             (32 * 8) as f64);
+        let hit_rate = streaming_row
+            .req("cache_hit_rate").unwrap()
+            .as_f64().unwrap();
+        assert!(hit_rate.is_finite() && hit_rate > 0.0,
+                "streaming row must record a nonzero session-arena \
+                 hit rate, got {hit_rate}");
         let hetero_row = results
             .iter()
             .find(|r| {

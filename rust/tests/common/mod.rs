@@ -41,6 +41,11 @@ impl Executor for CountingSim {
     fn name(&self) -> &'static str {
         "counting-sim"
     }
+
+    fn note_batch_mix(&mut self, recompute_rows: usize,
+                      cached_rows: usize) {
+        self.inner.note_batch_mix(recompute_rows, cached_rows);
+    }
 }
 
 /// Worker-class executor factory over [`CountingSim`]: one fresh

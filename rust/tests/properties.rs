@@ -669,6 +669,210 @@ fn prop_every_stream_terminates_in_exactly_one_done_or_shed() {
     });
 }
 
+#[test]
+fn prop_arena_pages_recycle_exactly_once_under_racing_terminals() {
+    // arena backbone: when every terminal path (worker Done, engine
+    // shed, shutdown sweep) races to free the same session's page,
+    // exactly one recycle call wins per stored session — no leak, no
+    // double-free — and the pool invariant (free + live == slots,
+    // enforced by debug_asserts inside the arena) survives arbitrary
+    // store/lookup traffic interleaved with the recycling.
+    check("arena_recycle_exactly_once", 12, |rng| {
+        let pages = 1 + rng.below(12);
+        let sessions = 1 + rng.below(24);
+        let racers = 2 + rng.below(3);
+        let arena = Arc::new(
+            elastiformer::coordinator::serving::SessionArena::new(pages));
+        for s in 0..sessions as u64 {
+            arena.store(s, 1, vec![s as i32]);
+        }
+        let stored = arena.live(); // <= pages; the rest spilled
+        let evicted_before = arena.evicted();
+        let wins = Arc::new(AtomicUsize::new(0));
+        let mut threads = Vec::new();
+        for t in 0..racers {
+            let arena = arena.clone();
+            let wins = wins.clone();
+            threads.push(std::thread::spawn(move || {
+                for s in 0..sessions as u64 {
+                    // interleave cache traffic with the terminal race
+                    if t == 0 && s % 3 == 0 {
+                        arena.lookup(s, 1);
+                    }
+                    if arena.recycle(s) {
+                        wins.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+            }));
+        }
+        for t in threads {
+            t.join().map_err(|_| "racer panicked".to_string())?;
+        }
+        let won = wins.load(Ordering::SeqCst);
+        if won != stored {
+            return Err(format!(
+                "{won} recycles won for {stored} live pages \
+                 ({sessions} sessions, {pages} pages)"));
+        }
+        if arena.recycled() != stored {
+            return Err(format!("recycled counter {} != {stored}",
+                               arena.recycled()));
+        }
+        if arena.live() != 0 {
+            return Err(format!("{} pages leaked", arena.live()));
+        }
+        if arena.evicted() != evicted_before {
+            return Err("recycling must never count as eviction".into());
+        }
+        // the freed pool is fully reusable afterwards
+        for s in 0..pages as u64 {
+            arena.store(1000 + s, 1, vec![0]);
+        }
+        if arena.live() != pages {
+            return Err(format!("pool shrank to {} of {pages}",
+                               arena.live()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_streaming_with_arena_survives_panics_and_shutdown_races() {
+    // arena + engine teardown: decode sessions over a panicking fleet
+    // with mid-decode shutdown must still deliver exactly one terminal
+    // per stream, and the report's cache counters must reconcile
+    // (every hit and miss is a decode-step lookup; a hit can only come
+    // from a live arena).  Page leaks and double-frees would trip the
+    // arena's internal debug_assert invariants inside the workers,
+    // surfacing here as worker panics on every debug-build run.
+    check("streaming_arena_teardown", 8, |rng| {
+        let sessions = 1 + rng.below(6);
+        let max_steps = 1 + rng.below(6);
+        let workers = 1 + rng.below(3);
+        let pages = rng.below(5); // incl. 0 = disabled arena
+        let panic_after = 2 + rng.below(16);
+        let executed = Arc::new(AtomicUsize::new(0));
+        let spec = SimSpec { batch: 2, seq_len: 8, ..SimSpec::instant() };
+        let cfg = ServeConfig::sim()
+            .with_workers(workers)
+            .with_queue_shards(rng.below(workers + 2))
+            .with_arena_pages(pages)
+            .with_max_batch_wait(Duration::ZERO);
+        let caps = cfg.capacities();
+        let factory_counter = executed.clone();
+        let engine = ElasticEngine::start(cfg, move |w| {
+            if panic_after < 6 {
+                // hostile fleet: dies mid-decode
+                Ok(Box::new(PanicAfter {
+                    executed: factory_counter.clone(),
+                    panic_after,
+                    batch: 2,
+                }) as Box<dyn Executor>)
+            } else {
+                Ok(Box::new(
+                    elastiformer::coordinator::serving::SimExecutor::new(
+                        spec, &caps, w).record_log(false))
+                    as Box<dyn Executor>)
+            }
+        })
+        .map_err(|e| format!("start failed: {e:#}"))?;
+        let streams: Vec<_> = (0..sessions as u64)
+            .map(|id| {
+                engine.submit_stream(
+                    StreamRequest::new(id, vec![1; 4], max_steps))
+            })
+            .collect();
+        // mid-decode shutdown is the norm here, not the exception
+        let shutdown_result = engine.shutdown();
+        for s in streams {
+            let mut terminals = 0usize;
+            loop {
+                match s.recv_timeout(Duration::from_secs(30)) {
+                    Ok(Some(StreamEvent::Token { .. })) => {}
+                    Ok(Some(_)) => terminals += 1,
+                    Ok(None) => break,
+                    Err(_) => {
+                        return Err("a stream never terminated".into());
+                    }
+                }
+            }
+            if terminals != 1 {
+                return Err(format!("{terminals} terminals on a stream"));
+            }
+        }
+        if let Ok(report) = shutdown_result {
+            if pages == 0 && report.cache_hits != 0 {
+                return Err(format!(
+                    "disabled arena reported {} hits",
+                    report.cache_hits));
+            }
+            if report.sessions_started != sessions {
+                return Err(format!(
+                    "report started {} != {sessions}",
+                    report.sessions_started));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_affine_requeue_into_a_closed_queue_fails_fast() {
+    // teardown-safety for placement affinity: once the queue is
+    // closed, concurrent `requeue_to`/`push_pinned` calls from many
+    // threads must all return Err promptly (no deadlock, no hang), the
+    // item must come back to the caller, and the depth gauge must
+    // account only the items actually deposited before the close.
+    check("affine_requeue_closed", 15, |rng| {
+        let shards = 1 + rng.below(4);
+        let bound = 1 + rng.below(16);
+        let q = Arc::new(AdmissionQueue::sharded(bound, shards));
+        let pre = rng.below(bound.min(4));
+        for i in 0..pre as u64 {
+            q.push_pinned(rng.below(shards * 2), i, false)
+                .map_err(|_| "pinned push rejected while open")?;
+        }
+        q.close();
+        let mut threads = Vec::new();
+        for t in 0..3u64 {
+            let q = q.clone();
+            let shard = rng.below(shards * 2);
+            threads.push(std::thread::spawn(move || {
+                for i in 0..16u64 {
+                    let item = 1000 + t * 100 + i;
+                    match q.requeue_to(shard, item, i % 2 == 0) {
+                        Ok(()) => return Err(format!(
+                            "closed queue accepted requeue of {item}")),
+                        Err(back) => {
+                            if back != item {
+                                return Err(format!(
+                                    "lost item: sent {item}, got {back}"));
+                            }
+                        }
+                    }
+                    if q.push_pinned(shard, item, false).is_ok() {
+                        return Err(
+                            "closed queue accepted a pinned push".into());
+                    }
+                }
+                Ok(())
+            }));
+        }
+        for t in threads {
+            t.join().map_err(|_| "requeue thread hung or panicked")??;
+        }
+        // the pre-close deposits are still drainable, nothing else is
+        let drained = q.pop_batch(64, Duration::ZERO).len();
+        if drained != pre {
+            return Err(format!("drained {drained}, deposited {pre}"));
+        }
+        if q.len() != 0 {
+            return Err(format!("depth gauge stuck at {}", q.len()));
+        }
+        Ok(())
+    });
+}
+
 /// Executor that fails any batch whose rows carry different floor-rung
 /// markers — the hostile probe for class-aware batch formation.  Each
 /// request's token row is its rung index replicated, and padded rows

@@ -603,6 +603,71 @@ fn streaming_sessions_batch_across_sessions_in_step_order() {
 }
 
 #[test]
+fn arena_hits_make_decode_cheaper_than_recompute() {
+    // tentpole acceptance: with window-preparation modeled (a
+    // recomputed decode row costs seq_len token-units, an arena-cached
+    // row costs 1), the same streaming load must finish measurably
+    // faster with a live session arena than with the arena disabled.
+    // Modeled gap per decode round here: 4 rows x 32 tokens = 128ms
+    // recompute vs 4ms cached — wide enough that scheduler noise
+    // cannot flip the comparison.
+    let spec = SimSpec {
+        batch: 4,
+        seq_len: 32,
+        base_ms: 0.0,
+        ms_per_capacity: 0.0,
+        jitter_ms: 0.0,
+        recompute_ms_per_token: 1.0,
+        ..SimSpec::standard()
+    };
+    let (sessions, steps) = (4usize, 6usize);
+    let run_with = |pages: usize| -> ServeReport {
+        let cfg = ServeConfig::sim()
+            .with_workers(1)
+            .with_arena_pages(pages)
+            .with_max_batch_wait(Duration::from_millis(1));
+        let caps = cfg.capacities();
+        let engine =
+            ElasticEngine::start(cfg, sim::factory(spec, caps)).unwrap();
+        let streams: Vec<_> = (0..sessions as u64)
+            .map(|id| {
+                engine.submit_stream(
+                    StreamRequest::new(id, vec![1; 8], steps))
+            })
+            .collect();
+        for s in streams {
+            let stats =
+                s.wait().expect("open-engine session must complete");
+            assert_eq!(stats.steps, steps);
+        }
+        let report = engine.shutdown().unwrap();
+        assert_eq!(report.stream_done.len(), sessions);
+        assert!(report.stream_shed.is_empty());
+        report
+    };
+    let hit = run_with(64);
+    let miss = run_with(0);
+    assert!(hit.cache_hits > 0,
+            "a live arena must serve some decode rows from cache");
+    assert!(hit.cache_hit_rate() > 0.5,
+            "single-worker affine decode should mostly hit, got {:.2} \
+             ({} hits / {} misses)",
+            hit.cache_hit_rate(), hit.cache_hits, hit.cache_misses);
+    assert_eq!(miss.cache_hits, 0,
+               "a disabled arena can never serve a row");
+    assert_eq!(miss.cache_hit_rate(), 0.0);
+    assert!(miss.wall_secs > hit.wall_secs * 1.5,
+            "recompute-only run must pay the modeled window cost: \
+             {:.3}s recompute vs {:.3}s cached",
+            miss.wall_secs, hit.wall_secs);
+    // the per-class report section carries the same economy
+    let classes = hit.worker_class_sections();
+    assert_eq!(classes.len(), 1);
+    assert_eq!(classes[0].cache_hits, hit.cache_hits);
+    assert_eq!(classes[0].cache_misses, hit.cache_misses);
+}
+
+#[test]
 fn tight_deadline_session_degrades_tiers_instead_of_shed() {
     // the graceful-degradation contract: a session whose total budget
     // cannot afford every step at tier 1.0 must be demoted down the
