@@ -114,6 +114,28 @@ fn sim_pipeline_bench() -> anyhow::Result<()> {
         classes: String::new(),
         report,
     });
+    // speculative decode: the same sessions, but each admission
+    // drafts up to 4 tokens at the cheapest floored tier and verifies
+    // them in one top-tier pass.  Mild tier-dependent divergence makes
+    // acceptance imperfect, so the recorded accept rate is a real
+    // figure; tokens-per-admission > 1.0 is the row's headline (plain
+    // decode is exactly 1.0 by construction).
+    let spec_spec = SimSpec { divergence: 0.05, ..stream_spec };
+    let report = sim::speculative_point(spec_spec, 4, 4, sessions,
+                                        decode_steps, 4)?;
+    println!("sim_serving_speculative_s{sessions}x{decode_steps}_k4   \
+              {:>8.0} tok/s  accept {:>5.1}%  {:.2} tok/admission  \
+              sessions {}/{}",
+             report.tokens_per_s(), report.spec_accept_rate() * 100.0,
+             report.tokens_per_admission(), report.stream_done.len(),
+             report.sessions_started);
+    rows.push(sim::BenchRow {
+        queue: "speculative",
+        workers: 4,
+        shards: 4,
+        classes: String::new(),
+        report,
+    });
     let path = std::path::Path::new(
         concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serving.json"));
     sim::write_bench_json(path, "benches/hotpath.rs (release)", spec, n,

@@ -27,15 +27,26 @@ use super::{Request, SloClass, TIER_EPS};
 /// executed batch is one workload: a **prefill** batch processes whole
 /// prompts (one-shot requests, and a decode session's first step), a
 /// **decode** batch advances in-flight sessions by one token each.
-/// The two never mix: their per-row cost profiles differ, and a decode
-/// step's output is consumed by the session table, not a caller's
-/// `Response`.
+/// The kinds never mix: their per-row cost profiles differ, and a
+/// decode step's output is consumed by the session table, not a
+/// caller's `Response`.
+///
+/// The speculative decode subsystem (`stream/spec.rs`) adds two more
+/// kinds with the same never-mix rule: a **draft** batch runs `k`
+/// cheap low-tier micro-steps per session, a **verify** batch checks
+/// whole draft runs (`k+1` rows per session) in one top-tier pass.
+/// Draft and verify batches still group *across* sessions — the key
+/// splits by workload, not by session.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum StepKind {
     /// full-prompt computation: one-shot requests and session step 0
     Prefill,
     /// one autoregressive step of a live decode session (step >= 1)
     Decode,
+    /// speculative draft: k cheap low-tier steps for one session
+    Draft,
+    /// speculative verify: one top-tier pass over a session's draft run
+    Verify,
 }
 
 /// Compatibility key for class-aware batch formation: two items may
@@ -240,7 +251,14 @@ mod tests {
         let slo = SloClass::named("s").with_floor_tier(0.5);
         let prefill = batch_key_for(StepKind::Prefill, &slo, &caps);
         let decode = batch_key_for(StepKind::Decode, &slo, &caps);
-        assert_ne!(prefill, decode, "prefill and decode must never mix");
+        let draft = batch_key_for(StepKind::Draft, &slo, &caps);
+        let verify = batch_key_for(StepKind::Verify, &slo, &caps);
+        let kinds = [prefill, decode, draft, verify];
+        for (i, a) in kinds.iter().enumerate() {
+            for b in kinds.iter().skip(i + 1) {
+                assert_ne!(a, b, "step kinds must never share a batch");
+            }
+        }
         assert_eq!(prefill, batch_key(&slo, &caps),
                    "one-shot requests are prefill-kind");
         let decode2 =
@@ -248,6 +266,11 @@ mod tests {
                 .with_floor_tier(0.5), &caps);
         assert_eq!(decode, decode2,
                    "compatible decode steps batch across sessions");
+        // draft and verify items batch across sessions the same way
+        let draft2 = batch_key_for(StepKind::Draft, &SloClass::named("t")
+            .with_floor_tier(0.5), &caps);
+        assert_eq!(draft, draft2,
+                   "compatible draft steps batch across sessions");
     }
 
     #[test]

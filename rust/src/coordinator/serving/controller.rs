@@ -56,6 +56,11 @@ pub struct CapacityController {
     /// observations; `None` until the tier has been executed once
     exec_ms: Vec<Option<f64>>,
     exec_alpha: f64,
+    /// learned speculative-decode accept rate (fraction of drafted
+    /// tokens the top-tier verify pass agreed with), EWMA over verify
+    /// resolutions on this class; `None` until the first verify
+    accept_ewma: Option<f64>,
+    accept_alpha: f64,
 }
 
 impl CapacityController {
@@ -75,6 +80,8 @@ impl CapacityController {
             alpha: 0.4,
             exec_ms,
             exec_alpha: 0.3,
+            accept_ewma: None,
+            accept_alpha: 0.4,
         }
     }
 
@@ -160,6 +167,51 @@ impl CapacityController {
             .copied()
             .zip(self.exec_ms.iter().copied())
             .collect()
+    }
+
+    /// Feed back one resolved speculative verify pass: `accepted` of
+    /// `drafted` proposed tokens agreed with the top-tier verifier.
+    /// Drives [`draft_k`](Self::draft_k) — the accept rate is a
+    /// *per-class* learned signal, like the exec-time EWMAs, because
+    /// the draft tier's agreement with the top tier depends on the
+    /// backend serving the class.
+    pub fn observe_accept(&mut self, accepted: usize, drafted: usize) {
+        if drafted == 0 {
+            return;
+        }
+        let rate = (accepted.min(drafted) as f64) / drafted as f64;
+        self.accept_ewma = Some(match self.accept_ewma {
+            Some(prev) => {
+                self.accept_alpha * rate
+                    + (1.0 - self.accept_alpha) * prev
+            }
+            None => rate,
+        });
+    }
+
+    /// Learned speculative accept rate on this class, if any verify
+    /// pass has resolved yet.
+    pub fn accept_rate(&self) -> Option<f64> {
+        self.accept_ewma
+    }
+
+    /// How many tokens a session should draft per admission, given the
+    /// configured ceiling `max_k`.  Unobserved classes draft the full
+    /// `max_k` (optimistic, like the cold-start exec estimates);
+    /// otherwise `k` scales linearly with the learned accept rate and
+    /// never drops below 1.  The floor is the no-regret guarantee:
+    /// with `k == 1` a rejected draft costs exactly one wasted
+    /// verification pass, so speculative mode can never trail plain
+    /// decode by more than that even against an adversarial verifier.
+    pub fn draft_k(&self, max_k: usize) -> usize {
+        let max_k = max_k.max(1);
+        match self.accept_ewma {
+            None => max_k,
+            Some(rate) => {
+                let extra = (max_k - 1) as f64 * rate.clamp(0.0, 1.0);
+                1 + extra.round() as usize
+            }
+        }
     }
 
     /// Pure mapping (for tests / property checks): tier for a given
@@ -283,6 +335,35 @@ mod tests {
         // 5ms slack wants 0.25, but the 0.5 floor wins: quality floors
         // are a contract, lateness is only a preference
         assert_eq!(c.choose_for_batch(0, 0.5, Some(5.0)), 0.5);
+    }
+
+    #[test]
+    fn draft_k_is_optimistic_until_observed_then_tracks_accepts() {
+        let mut c = CapacityController::new(vec![1.0, 0.5], 4.0);
+        assert_eq!(c.accept_rate(), None);
+        // cold start: draft the configured ceiling
+        assert_eq!(c.draft_k(4), 4);
+        assert_eq!(c.draft_k(1), 1);
+        assert_eq!(c.draft_k(0), 1, "ceiling clamps to >= 1");
+        // perfect agreement keeps k at the ceiling
+        c.observe_accept(4, 4);
+        assert_eq!(c.accept_rate(), Some(1.0));
+        assert_eq!(c.draft_k(4), 4);
+        // total rejection collapses k toward the floor of 1
+        for _ in 0..16 {
+            c.observe_accept(0, 4);
+        }
+        let rate = c.accept_rate().unwrap();
+        assert!(rate < 0.05, "ewma must decay under rejection: {rate}");
+        assert_eq!(c.draft_k(4), 1,
+                   "rejected drafts must shrink k to the floor");
+        // a first observation of zero pins the floor immediately
+        let mut cold = CapacityController::new(vec![1.0], 1.0);
+        cold.observe_accept(0, 3);
+        assert_eq!(cold.draft_k(8), 1);
+        // zero-draft observations are ignored (no division blowup)
+        cold.observe_accept(5, 0);
+        assert_eq!(cold.accept_rate(), Some(0.0));
     }
 
     #[test]

@@ -103,7 +103,8 @@ pub use controller::CapacityController;
 pub use queue::{AdmissionQueue, TryPushError};
 pub use report::{
     ClassStats, Completion, ServeReport, ShedCause, ShedRecord,
-    StreamSection, StreamShedRecord, WorkerClassInfo, WorkerClassStats,
+    SpecSection, StreamSection, StreamShedRecord, WorkerClassInfo,
+    WorkerClassStats,
 };
 pub use sim::{SimExecutor, SimSpec};
 pub use stream::arena::SessionArena;
@@ -273,6 +274,12 @@ pub struct ServeConfig {
     /// held between steps of a streaming session; 0 disables the arena
     /// (every decode step recomputes its window from the session table)
     pub arena_pages: usize,
+    /// speculative draft ceiling for decode sessions: each admission
+    /// drafts up to `spec_k` tokens at a cheap tier and verifies them
+    /// in one top-tier pass (`stream::spec`).  0 (the default) =
+    /// plain one-token decode.  The effective per-batch `k` adapts to
+    /// the class's learned accept rate, never exceeding this ceiling.
+    pub spec_k: usize,
 }
 
 impl ServeConfig {
@@ -293,6 +300,7 @@ impl ServeConfig {
             queue_shards: 0,
             worker_classes: Vec::new(),
             arena_pages: 64,
+            spec_k: 0,
         }
     }
 
@@ -326,6 +334,13 @@ impl ServeConfig {
     /// the arena — every decode step recomputes its window).
     pub fn with_arena_pages(mut self, pages: usize) -> ServeConfig {
         self.arena_pages = pages;
+        self
+    }
+
+    /// Enable speculative decode with a draft ceiling of `k` tokens
+    /// per admission (0 disables it — plain one-token decode).
+    pub fn with_spec_k(mut self, k: usize) -> ServeConfig {
+        self.spec_k = k;
         self
     }
 
@@ -569,13 +584,19 @@ pub(crate) struct Pending {
 impl Pending {
     /// Which workload this item belongs to: one-shot requests and a
     /// session's step 0 are prompt passes (prefill); later session
-    /// steps are decode.  Feeds the batch key's step-kind dimension,
-    /// so the two workloads never share an executed batch.
+    /// steps are decode, draft, or verify per the step's phase
+    /// ([`stream::spec::StepPhase`]).  Feeds the batch key's
+    /// step-kind dimension, so the workloads never share an executed
+    /// batch (drafts run cheap tiers, verifies run the top tier).
     pub(crate) fn kind(&self) -> StepKind {
         match &self.outcome {
             Outcome::OneShot(_) => StepKind::Prefill,
             Outcome::Stream(st) if st.step == 0 => StepKind::Prefill,
-            Outcome::Stream(_) => StepKind::Decode,
+            Outcome::Stream(st) => match st.phase {
+                stream::spec::StepPhase::Decode => StepKind::Decode,
+                stream::spec::StepPhase::Draft => StepKind::Draft,
+                stream::spec::StepPhase::Verify => StepKind::Verify,
+            },
         }
     }
 
@@ -650,6 +671,14 @@ pub(crate) struct EngineShared {
     /// workers of a class share cached decode windows, while classes
     /// never fight over each other's pages
     pub arenas: Vec<stream::arena::SessionArena>,
+    /// speculative draft ceiling (`ServeConfig::spec_k`): 0 = plain
+    /// decode; > 0 routes admitted sessions through draft/verify steps
+    pub spec_k: usize,
+    /// per-class speculative counters (drafted / accepted / rejected),
+    /// indexed by class id; updated only at verify resolution so
+    /// `drafted == accepted + rejected` holds even when a session is
+    /// shed mid-draft
+    pub spec: Vec<stream::spec::SpecCounters>,
 }
 
 impl EngineShared {
@@ -756,6 +785,11 @@ impl ElasticEngine {
             arenas: classes
                 .iter()
                 .map(|_| stream::arena::SessionArena::new(cfg.arena_pages))
+                .collect(),
+            spec_k: cfg.spec_k,
+            spec: classes
+                .iter()
+                .map(|_| stream::spec::SpecCounters::new())
                 .collect(),
         });
         let init = Arc::new(InitLatch::new());
@@ -969,7 +1003,12 @@ impl EngineHandle {
         // continuation land there, so the workers that drain it keep
         // its arena page warm (placement affinity)
         let pending = self.shared.sessions.admit(
-            req, sender, Instant::now(), self.shared.queue.shards());
+            req,
+            sender,
+            Instant::now(),
+            self.shared.queue.shards(),
+            self.shared.spec_k,
+        );
         let shard = match &pending.outcome {
             Outcome::Stream(st) => st.shard,
             Outcome::OneShot(_) => unreachable!(
@@ -999,6 +1038,35 @@ impl EngineHandle {
     /// and collect the report.
     pub fn close(&self) {
         self.shared.queue.close();
+    }
+
+    /// Graceful drain: refuse NEW admissions (fresh `submit`s and
+    /// `submit_stream`s are turned away as if shutting down) while
+    /// live decode sessions keep running — their continuations still
+    /// requeue and their remaining steps execute normally.  Polls
+    /// until every session has reached a terminal (`Done`) and the
+    /// backlog is empty, or `timeout` elapses; then hard-closes the
+    /// queue either way (sessions still live at the deadline are shed
+    /// at their next step boundary, exactly as [`close`](Self::close)).
+    /// Returns `true` iff the fleet drained fully within the budget.
+    /// Call [`shutdown`](Self::shutdown) afterwards to join the
+    /// workers and collect the report.
+    pub fn close_drain(&self, timeout: Duration) -> bool {
+        self.shared.queue.drain();
+        let deadline = Instant::now() + timeout;
+        let drained = loop {
+            if self.shared.sessions.live() == 0
+                && self.shared.queue.is_empty()
+            {
+                break true;
+            }
+            if Instant::now() >= deadline {
+                break false;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        };
+        self.shared.queue.close();
+        drained
     }
 
     /// Current aggregate admission backlog (what the controller
@@ -1113,23 +1181,36 @@ impl EngineHandle {
             .iter()
             .zip(self.shared.controllers.iter())
             .zip(self.shared.arenas.iter())
-            .map(|(((name, workers), ctl), arena)| WorkerClassInfo {
-                name: name.clone(),
-                workers: *workers,
-                exec_estimates_ms: ctl.lock().unwrap().exec_estimates(),
-                cache_hits: arena.hits(),
-                cache_misses: arena.misses(),
+            .zip(self.shared.spec.iter())
+            .map(|((((name, workers), ctl), arena), spec)| {
+                WorkerClassInfo {
+                    name: name.clone(),
+                    workers: *workers,
+                    exec_estimates_ms: ctl.lock().unwrap().exec_estimates(),
+                    cache_hits: arena.hits(),
+                    cache_misses: arena.misses(),
+                    drafted: spec.drafted(),
+                    accepted: spec.accepted(),
+                    rejected: spec.rejected(),
+                    verifies: spec.verifies(),
+                }
             })
             .collect();
         let (hits, misses) = self.shared.arenas.iter().fold(
             (0usize, 0usize),
             |(h, m), a| (h + a.hits(), m + a.misses()));
+        let (drafted, accepted, rejected) = self.shared.spec.iter().fold(
+            (0usize, 0usize, 0usize),
+            |(d, a, r), s| (d + s.drafted(), a + s.accepted(),
+                            r + s.rejected()));
         Ok(ServeReport::new(completions, sheds, wall, &self.shared.caps,
                             self.workers)
             .with_worker_classes(class_infos)
             .with_streams(self.shared.sessions.sessions_started(),
                           stream_done, stream_shed)
-            .with_cache(hits, misses))
+            .with_cache(hits, misses)
+            .with_spec(drafted, accepted, rejected,
+                       self.shared.sessions.step_items()))
     }
 }
 

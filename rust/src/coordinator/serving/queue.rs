@@ -197,6 +197,11 @@ pub struct AdmissionQueue<T> {
     depth: AtomicUsize,
     bound: usize,
     closed: AtomicBool,
+    /// soft-close flag ([`drain`](AdmissionQueue::drain)): new
+    /// admissions are refused as if the queue were closed, while
+    /// continuations (`requeue`/`requeue_to`) keep landing — so live
+    /// decode sessions can run to completion before the hard close
+    draining: AtomicBool,
     /// consumers sleep here for work
     doorbell: Doorbell,
     /// producers sleep here for room
@@ -239,6 +244,7 @@ impl<T> AdmissionQueue<T> {
             depth: AtomicUsize::new(0),
             bound: bound.max(1),
             closed: AtomicBool::new(false),
+            draining: AtomicBool::new(false),
             doorbell: Doorbell::new(),
             vacancy: Doorbell::new(),
             ticket: AtomicUsize::new(0),
@@ -357,17 +363,24 @@ impl<T> AdmissionQueue<T> {
         self.push_with(item, urgent, Some(shard))
     }
 
+    /// Is the queue refusing *new admissions*?  True once closed or
+    /// draining; continuations check only the hard-close flag.
+    fn refusing_admissions(&self) -> bool {
+        self.closed.load(Ordering::SeqCst)
+            || self.draining.load(Ordering::SeqCst)
+    }
+
     fn push_with(&self, item: T, urgent: bool, at: Option<usize>)
                  -> Result<(), T> {
         loop {
-            if self.closed.load(Ordering::SeqCst) {
+            if self.refusing_admissions() {
                 return Err(item);
             }
             if self.try_reserve() {
                 return self.deposit_reserved(item, urgent, at);
             }
             self.vacancy.wait_until(None, || {
-                self.closed.load(Ordering::SeqCst)
+                self.refusing_admissions()
                     || self.depth.load(Ordering::SeqCst) < self.bound
             });
         }
@@ -388,7 +401,7 @@ impl<T> AdmissionQueue<T> {
 
     fn try_push_with(&self, item: T, urgent: bool)
                      -> Result<(), TryPushError<T>> {
-        if self.closed.load(Ordering::SeqCst) {
+        if self.refusing_admissions() {
             return Err(TryPushError::Closed(item));
         }
         if !self.try_reserve() {
@@ -411,7 +424,7 @@ impl<T> AdmissionQueue<T> {
     /// the caller can resolve the item itself.
     fn deposit_reserved(&self, item: T, urgent: bool, at: Option<usize>)
                         -> Result<(), T> {
-        if self.closed.load(Ordering::SeqCst) {
+        if self.refusing_admissions() {
             self.depth.fetch_sub(1, Ordering::SeqCst);
             self.vacancy.ring();
             return Err(item);
@@ -840,6 +853,23 @@ impl<T> AdmissionQueue<T> {
         self.vacancy.ring_all();
     }
 
+    /// Begin a graceful drain: refuse new admissions (pushes fail
+    /// exactly as if the queue were closed) while continuations keep
+    /// flowing, so in-flight decode sessions run to completion instead
+    /// of shedding at the next step boundary.  Producers blocked at
+    /// the bound are woken to observe the refusal.  The caller decides
+    /// when to follow up with the hard [`close`](Self::close).
+    pub fn drain(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+        self.vacancy.ring_all();
+    }
+
+    /// Has a graceful drain begun?  (A closed queue may report either;
+    /// `drain` is a one-way soft stage before `close`.)
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
     pub fn is_closed(&self) -> bool {
         self.closed.load(Ordering::SeqCst)
     }
@@ -1176,6 +1206,40 @@ mod tests {
             Ok(()) => panic!("requeue into a closed queue must fail"),
         }
         assert_eq!(q.len(), 0, "failed requeue must not leak the gauge");
+    }
+
+    #[test]
+    fn drain_refuses_admissions_but_keeps_continuations_flowing() {
+        let q = AdmissionQueue::new(4);
+        q.push(0u64).unwrap();
+        q.drain();
+        assert!(q.is_draining());
+        assert!(!q.is_closed(), "draining is not the hard close");
+        assert!(q.push(1).is_err(),
+                "new admissions must be refused while draining");
+        assert!(matches!(q.try_push(2), Err(TryPushError::Closed(_))),
+                "drain surfaces to clients as a shutdown, not Full");
+        // continuations are the whole point: they must keep landing
+        q.requeue(3, false).unwrap();
+        q.requeue_to(0, 4, true).unwrap();
+        let got = q.pop_batch(8, Duration::ZERO);
+        assert_eq!(got, vec![0, 3, 4]);
+        q.close();
+        assert!(q.requeue(5, false).is_err(),
+                "the hard close still stops continuations");
+    }
+
+    #[test]
+    fn drain_wakes_producers_blocked_at_the_bound() {
+        let q = Arc::new(AdmissionQueue::new(1));
+        q.push(0u64).unwrap();
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || q2.push(1u64));
+        std::thread::sleep(Duration::from_millis(20));
+        q.drain();
+        assert!(t.join().unwrap().is_err(),
+                "a producer blocked at the bound must fail fast on \
+                 drain, not sleep through shutdown");
     }
 
     #[test]

@@ -100,6 +100,15 @@ pub struct WorkerClassInfo {
     pub cache_hits: usize,
     /// decode-step rows this class recomputed from the session table
     pub cache_misses: usize,
+    /// speculative proposals this class resolved (counted at verify
+    /// resolution, so `drafted == accepted + rejected` always holds)
+    pub drafted: usize,
+    /// proposals the verifier agreed with (emitted at the draft tier)
+    pub accepted: usize,
+    /// proposals discarded at the first disagreement
+    pub rejected: usize,
+    /// verify passes this class resolved — the speculative cycle count
+    pub verifies: usize,
 }
 
 /// Per-worker-class section of the report: how one hardware class
@@ -151,6 +160,30 @@ pub struct StreamSection {
     pub tier_step_counts: Vec<(f32, usize)>,
 }
 
+/// Per-worker-class section of the *speculative* report: how one
+/// class's draft/verify cycles fared — proposal volume, accept split,
+/// the learned accept rate, and the tokens-per-admission estimate its
+/// cycles imply.  Only classes that resolved at least one verify pass
+/// get a section (a plain-decode fleet reports none).
+#[derive(Debug, Clone)]
+pub struct SpecSection {
+    pub class: String,
+    /// proposals resolved (`drafted == accepted + rejected` always)
+    pub drafted: usize,
+    pub accepted: usize,
+    pub rejected: usize,
+    /// verify passes resolved — the cycle count
+    pub verifies: usize,
+    /// `accepted / drafted` (0.0 when nothing was drafted)
+    pub accept_rate: f64,
+    /// estimated tokens per admission item over this class's
+    /// speculative cycles: each cycle enqueues two items (the draft
+    /// step and its verify re-admission) and emits `accepted + 1`
+    /// tokens (the agreeing prefix plus the verifier's own token), so
+    /// the estimate is `(accepted + verifies) / (2 * verifies)`
+    pub tokens_per_admission: f64,
+}
+
 /// Aggregate serving report.
 #[derive(Debug, Clone)]
 pub struct ServeReport {
@@ -178,6 +211,19 @@ pub struct ServeReport {
     /// decode-step rows recomputed from the session table (arena miss,
     /// spill, or disabled arena)
     pub cache_misses: usize,
+    /// speculative proposals resolved fleet-wide (at verify time):
+    /// `spec_drafted == spec_accepted + spec_rejected` by construction
+    pub spec_drafted: usize,
+    /// proposals the top-tier verifier agreed with
+    pub spec_accepted: usize,
+    /// proposals discarded at the first disagreement
+    pub spec_rejected: usize,
+    /// streaming admission items ever enqueued — the session admit
+    /// plus every continuation (decode, draft, *and* verify steps);
+    /// the denominator of [`tokens_per_admission`]
+    ///
+    /// [`tokens_per_admission`]: ServeReport::tokens_per_admission
+    pub stream_step_items: usize,
 }
 
 impl ServeReport {
@@ -206,6 +252,10 @@ impl ServeReport {
             stream_shed: Vec::new(),
             cache_hits: 0,
             cache_misses: 0,
+            spec_drafted: 0,
+            spec_accepted: 0,
+            spec_rejected: 0,
+            stream_step_items: 0,
         }
     }
 
@@ -235,6 +285,72 @@ impl ServeReport {
         self.cache_hits = hits;
         self.cache_misses = misses;
         self
+    }
+
+    /// Attach the speculative-decode totals and the streaming
+    /// admission-item count (the engine does this at shutdown).
+    pub fn with_spec(mut self, drafted: usize, accepted: usize,
+                     rejected: usize, step_items: usize) -> ServeReport {
+        self.spec_drafted = drafted;
+        self.spec_accepted = accepted;
+        self.spec_rejected = rejected;
+        self.stream_step_items = step_items;
+        self
+    }
+
+    /// Fleet-wide speculative accept rate: `accepted / drafted`, 0.0
+    /// when no proposal was ever verified (plain decode, or every
+    /// speculative session shed mid-draft).
+    pub fn spec_accept_rate(&self) -> f64 {
+        if self.spec_drafted == 0 {
+            0.0
+        } else {
+            self.spec_accepted as f64 / self.spec_drafted as f64
+        }
+    }
+
+    /// Delivered stream tokens per admission item (admit + every
+    /// requeued continuation, draft and verify steps included).
+    /// Plain decode is exactly 1.0 — every item emits one token — so
+    /// any value above 1.0 is speculative acceptance paying for its
+    /// verification batches.  0.0 when no stream item was ever
+    /// enqueued.
+    pub fn tokens_per_admission(&self) -> f64 {
+        if self.stream_step_items == 0 {
+            return 0.0;
+        }
+        let tokens: usize = self
+            .stream_done
+            .iter()
+            .map(|s| s.steps)
+            .chain(self.stream_shed.iter().map(|s| s.steps_done))
+            .sum();
+        tokens as f64 / self.stream_step_items as f64
+    }
+
+    /// Per-worker-class sections of the speculative report, in fleet
+    /// declaration order: proposal volume, accept split and rate, and
+    /// the per-class tokens-per-admission estimate.  Classes that
+    /// never resolved a verify pass are omitted.
+    pub fn spec_sections(&self) -> Vec<SpecSection> {
+        self.worker_classes
+            .iter()
+            .filter(|i| i.verifies > 0)
+            .map(|i| SpecSection {
+                class: i.name.clone(),
+                drafted: i.drafted,
+                accepted: i.accepted,
+                rejected: i.rejected,
+                verifies: i.verifies,
+                accept_rate: if i.drafted == 0 {
+                    0.0
+                } else {
+                    i.accepted as f64 / i.drafted as f64
+                },
+                tokens_per_admission: (i.accepted + i.verifies) as f64
+                    / (2 * i.verifies) as f64,
+            })
+            .collect()
     }
 
     /// Fraction of decode-step rows served from a session arena
@@ -683,6 +799,10 @@ mod tests {
                 exec_estimates_ms: vec![(1.0, Some(0.5)), (0.25, None)],
                 cache_hits: 12,
                 cache_misses: 4,
+                drafted: 0,
+                accepted: 0,
+                rejected: 0,
+                verifies: 0,
             },
             WorkerClassInfo {
                 name: "slow".into(),
@@ -690,6 +810,10 @@ mod tests {
                 exec_estimates_ms: vec![(1.0, Some(40.0)), (0.25, None)],
                 cache_hits: 0,
                 cache_misses: 0,
+                drafted: 0,
+                accepted: 0,
+                rejected: 0,
+                verifies: 0,
             },
         ];
         let r = ServeReport::new(completions, sheds, 1.0, &[1.0, 0.25], 2)
@@ -778,6 +902,61 @@ mod tests {
         assert!((r.cache_hit_rate() - 0.75).abs() < 1e-9);
         let r = report(&[1.0]).with_cache(0, 5);
         assert_eq!(r.cache_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn spec_sections_cover_only_classes_that_verified() {
+        let infos = vec![
+            WorkerClassInfo {
+                name: "spec".into(),
+                workers: 1,
+                exec_estimates_ms: vec![(1.0, Some(1.0))],
+                cache_hits: 0,
+                cache_misses: 0,
+                drafted: 8,
+                accepted: 6,
+                rejected: 2,
+                verifies: 2,
+            },
+            WorkerClassInfo {
+                name: "plain".into(),
+                workers: 1,
+                exec_estimates_ms: vec![(1.0, Some(1.0))],
+                cache_hits: 0,
+                cache_misses: 0,
+                drafted: 0,
+                accepted: 0,
+                rejected: 0,
+                verifies: 0,
+            },
+        ];
+        let r = ServeReport::new(Vec::new(), Vec::new(), 1.0, &[1.0], 2)
+            .with_worker_classes(infos)
+            .with_spec(8, 6, 2, 0);
+        let sections = r.spec_sections();
+        assert_eq!(sections.len(), 1, "plain class gets no section");
+        let s = &sections[0];
+        assert_eq!(s.class, "spec");
+        assert_eq!(s.drafted, s.accepted + s.rejected);
+        assert!((s.accept_rate - 0.75).abs() < 1e-9);
+        // 2 cycles = 4 admission items, 6 + 2 tokens -> 2.0 per item
+        assert!((s.tokens_per_admission - 2.0).abs() < 1e-9);
+        assert!((r.spec_accept_rate() - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tokens_per_admission_is_unity_for_plain_decode() {
+        // 3 delivered tokens over 3 admission items (admit + 2
+        // requeues) — the plain-decode identity the CI gate leans on
+        let done = vec![stream_stats(0, "chat", vec![1.0, 1.0, 1.0], 3.0)];
+        let r = ServeReport::new(Vec::new(), Vec::new(), 1.0, &[1.0], 1)
+            .with_streams(1, done, Vec::new())
+            .with_spec(0, 0, 0, 3);
+        assert!((r.tokens_per_admission() - 1.0).abs() < 1e-9);
+        assert_eq!(r.spec_accept_rate(), 0.0);
+        // no items ever enqueued reads 0.0, not NaN
+        let empty = report(&[1.0]);
+        assert_eq!(empty.tokens_per_admission(), 0.0);
     }
 
     #[test]

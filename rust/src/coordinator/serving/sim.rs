@@ -42,6 +42,15 @@ pub struct SimSpec {
     /// row (arena hit) pays 1 — the KV-saving the session arena is
     /// judged by (0 disables window-cost modeling entirely)
     pub recompute_ms_per_token: f64,
+    /// probability that a row sampled at a *floored* tier disagrees
+    /// with the top tier, scaled by how far below the top the tier
+    /// sits: a row at `tier` diverges with probability `divergence *
+    /// (1 - tier / top_tier)`, so the top tier itself never diverges
+    /// and cheaper draft tiers disagree more often — the
+    /// tier-dependent error model speculative decoding is judged by.
+    /// 0 (the default) keeps every tier's argmax identical, exactly
+    /// as before.
+    pub divergence: f64,
     pub seed: u64,
 }
 
@@ -54,6 +63,7 @@ impl SimSpec {
             ms_per_capacity: 1.5,
             jitter_ms: 0.2,
             recompute_ms_per_token: 0.0,
+            divergence: 0.0,
             seed: 0x51AB,
         }
     }
@@ -166,6 +176,31 @@ impl Executor for SimExecutor {
         let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
         if self.record {
             self.log.push(SimBatchLog { tier, modeled_ms, wall_ms });
+        }
+        if self.spec.divergence > 0.0 {
+            // tier-dependent disagreement: two logits per row, where
+            // token 0 is "the top tier's answer" and token 1 is a
+            // divergent sample.  A row at the top tier always argmaxes
+            // to 0; a floored row flips to 1 with probability
+            // `divergence * (1 - tier / top_tier)` — cheap draft tiers
+            // disagree with their verifier more often, which is the
+            // acceptance dynamics speculative decode must survive
+            let top = self
+                .tiers
+                .iter()
+                .cloned()
+                .fold(f32::NEG_INFINITY, f32::max) as f64;
+            let p = self.spec.divergence
+                * (1.0 - (tier as f64 / top.max(1e-9))).max(0.0);
+            let mut logits = Vec::with_capacity(2 * self.spec.batch);
+            for _ in 0..self.spec.batch {
+                if p > 0.0 && self.rng.f64() < p {
+                    logits.extend_from_slice(&[0.0, tier]);
+                } else {
+                    logits.extend_from_slice(&[tier, 0.0]);
+                }
+            }
+            return Ok(ExecOutput { logits });
         }
         // one synthetic logit row per batch slot: the tier served.
         // deterministic, and enough for callers to check that logits
@@ -310,6 +345,60 @@ pub fn streaming_point(spec: SimSpec, workers: usize, shards: usize,
     Ok(report)
 }
 
+/// Drive one hermetic *speculative* streaming point: like
+/// [`streaming_point`], but sessions draft up to `spec_k` tokens per
+/// admission at the lowest floored tier and verify them in one
+/// top-tier pass (`stream::spec`).  With `spec.divergence` > 0 the
+/// draft tier genuinely disagrees with the verifier some of the time,
+/// so the report's accept rate lands strictly between 0 and 1.
+/// Asserts the speculative ledger reconciles (`drafted == accepted +
+/// rejected`, and per-class sections agree with the totals) before
+/// returning the report.
+pub fn speculative_point(spec: SimSpec, workers: usize, shards: usize,
+                         sessions: usize, decode_steps: usize,
+                         spec_k: usize) -> Result<super::ServeReport> {
+    let cfg = super::ServeConfig::sim()
+        .with_workers(workers)
+        .with_queue_shards(shards)
+        .with_queue_bound(128)
+        .with_max_batch_wait(Duration::from_micros(200))
+        .with_spec_k(spec_k);
+    let caps = cfg.capacities();
+    let prompt_len = (spec.seq_len / 2).max(1);
+    let engine = super::ElasticEngine::start(cfg, factory(spec, caps))?;
+    let streams: Vec<super::StreamResponse> = (0..sessions as u64)
+        .map(|id| {
+            engine.submit_stream(super::StreamRequest::new(
+                id, vec![1; prompt_len], decode_steps))
+        })
+        .collect();
+    for s in streams {
+        let stats = s
+            .wait()
+            .map_err(|e| anyhow::anyhow!("sim spec stream shed: {e}"))?;
+        anyhow::ensure!(stats.steps == decode_steps,
+                        "session {} stopped at {} of {decode_steps} steps",
+                        stats.id, stats.steps);
+    }
+    let report = engine.shutdown()?;
+    anyhow::ensure!(
+        report.sessions_started
+            == report.stream_done.len() + report.stream_shed.len(),
+        "stream logs do not reconcile: {} started, {} done, {} shed",
+        report.sessions_started, report.stream_done.len(),
+        report.stream_shed.len());
+    anyhow::ensure!(
+        report.spec_drafted == report.spec_accepted + report.spec_rejected,
+        "speculative ledger does not reconcile: {} drafted != {} \
+         accepted + {} rejected",
+        report.spec_drafted, report.spec_accepted, report.spec_rejected);
+    for s in report.spec_sections() {
+        anyhow::ensure!(s.drafted == s.accepted + s.rejected,
+                        "class {} ledger does not reconcile", s.class);
+    }
+    Ok(report)
+}
+
 /// One row of the machine-readable sim-pipeline record
 /// (`BENCH_serving.json`).
 pub struct BenchRow {
@@ -341,6 +430,7 @@ pub fn write_bench_json(path: &std::path::Path, source: &str,
         ("base_ms".into(), Value::Num(spec.base_ms)),
         ("ms_per_capacity".into(), Value::Num(spec.ms_per_capacity)),
         ("jitter_ms".into(), Value::Num(spec.jitter_ms)),
+        ("divergence".into(), Value::Num(spec.divergence)),
         ("seed".into(), Value::Num(spec.seed as f64)),
     ]);
     let results: Vec<Value> = rows
@@ -379,6 +469,13 @@ pub fn write_bench_json(path: &std::path::Path, source: &str,
                              Value::Num(r.report.tokens_per_s())));
                 fields.push(("cache_hit_rate".into(),
                              Value::Num(r.report.cache_hit_rate())));
+                // the speculative economy: how often the cheap draft
+                // tier agreed with the verifier, and how many tokens
+                // each admission item bought (1.0 = plain decode)
+                fields.push(("spec_accept_rate".into(),
+                             Value::Num(r.report.spec_accept_rate())));
+                fields.push(("tokens_per_admission".into(),
+                             Value::Num(r.report.tokens_per_admission())));
             }
             if r.report.worker_classes.len() > 1 {
                 // heterogeneous rows also record how each device class
@@ -561,6 +658,71 @@ mod tests {
         // the default arena is live, so some decode rows must have hit
         let chr = row.req("cache_hit_rate").unwrap().as_f64().unwrap();
         assert!(chr.is_finite() && chr > 0.0, "cache hit rate {chr}");
+    }
+
+    #[test]
+    fn divergence_flips_floored_rows_but_never_the_top_tier() {
+        let spec = SimSpec {
+            batch: 8,
+            seq_len: 4,
+            divergence: 1.0,
+            ..SimSpec::instant()
+        };
+        let tokens = vec![0; spec.batch * spec.seq_len];
+        let mut e = SimExecutor::new(spec, &[1.0, 0.25], 0);
+        // top tier: divergence probability is exactly 0 — the verifier
+        // is the ground truth and never disagrees with itself
+        let out = e.execute(1.0, &tokens).unwrap();
+        assert_eq!(out.logits.len(), 16, "two logits per row");
+        for row in out.logits.chunks(2) {
+            assert!(row[0] > row[1], "top tier row diverged: {row:?}");
+        }
+        // floored tier at full divergence: p = 0.75, so over a few
+        // batches some rows flip to token 1 and some stay at token 0
+        let (mut flips, mut total) = (0usize, 0usize);
+        for _ in 0..8 {
+            let out = e.execute(0.25, &tokens).unwrap();
+            for row in out.logits.chunks(2) {
+                total += 1;
+                if row[1] > row[0] {
+                    flips += 1;
+                }
+            }
+        }
+        assert!(flips > 0, "floored tier never diverged");
+        assert!(flips < total, "floored tier always diverged");
+        // divergence 0 preserves the legacy single-logit rows exactly
+        let plain_spec = SimSpec {
+            batch: 8,
+            seq_len: 4,
+            ..SimSpec::instant()
+        };
+        let mut plain = SimExecutor::new(plain_spec, &[1.0, 0.25], 0);
+        assert_eq!(plain.execute(0.25, &tokens).unwrap().logits,
+                   vec![0.25f32; 8]);
+    }
+
+    #[test]
+    fn speculative_point_reconciles_and_beats_plain_admission_economy() {
+        let spec = SimSpec {
+            batch: 8,
+            seq_len: 8,
+            divergence: 0.05,
+            ..SimSpec::instant()
+        };
+        let report = speculative_point(spec, 2, 2, 6, 12, 4).unwrap();
+        assert_eq!(report.stream_done.len(), 6);
+        assert!(report.stream_shed.is_empty());
+        assert!(report.spec_drafted > 0, "speculative mode must draft");
+        assert_eq!(report.spec_drafted,
+                   report.spec_accepted + report.spec_rejected);
+        assert!(report.spec_accept_rate() > 0.0,
+                "mild divergence must still accept most drafts");
+        assert!(report.tokens_per_admission() > 1.0,
+                "accepted drafts must beat the one-token-per-item \
+                 plain-decode economy, got {}",
+                report.tokens_per_admission());
+        assert!(!report.spec_sections().is_empty());
     }
 
     #[test]

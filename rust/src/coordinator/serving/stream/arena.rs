@@ -33,6 +33,19 @@
 //! once): admitting more concurrent sessions than pages does not grow
 //! memory — least-recently-touched pages spill, and spilled sessions
 //! keep decoding through the recompute path.
+//!
+//! **Speculative decode** ([`spec`](super::spec)) rides the same page
+//! lifecycle with one refinement: a *draft* step reads its base
+//! window through the normal `lookup` path, but its micro-rounds
+//! evolve the window locally and deposit **nothing** — the page (and
+//! the session table) still describe the pre-draft state while the
+//! proposals are in flight.  Only the *verify* resolution stores a
+//! page, keyed to the step index after the accepted prefix, so a
+//! rejected draft leaves no poisoned window behind: the next draft
+//! re-reads the authoritative state.  Terminal paths recycle exactly
+//! once whether a session dies mid-draft, mid-verify, or in plain
+//! decode — the draft buffer lives in the session table, never in a
+//! page, so there is no second allocation to leak.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};

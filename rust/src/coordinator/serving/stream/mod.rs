@@ -54,8 +54,18 @@
 //! into the executing class's paged arena, so the next step is served
 //! incrementally (O(1) in window length on the modeled sim cost)
 //! instead of recomputed from the table.
+//!
+//! Speculative decode (the [`spec`] module) layers a second step
+//! shape on top: when the engine runs with `spec_k > 0`, a session's
+//! post-prefill steps alternate between **draft** items (k cheap
+//! low-tier micro-steps producing proposed tokens) and **verify**
+//! items (one top-tier pass over the whole draft run).  The table
+//! still owns all authoritative state — the draft buffer lives inside
+//! [`DecodeSession`] and is consumed exactly once by the verify
+//! resolution, whether the proposals are accepted or rejected.
 
 pub mod arena;
+pub mod spec;
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -64,6 +74,7 @@ use std::time::Instant;
 
 use super::report::StreamShedRecord;
 use super::{Pending, Request, ServeError, SloClass};
+use spec::{DraftBuf, StepPhase};
 
 /// One streaming decode request: a prompt to prefill, a token budget,
 /// and the SLO the whole *session* runs under (`deadline` is the total
@@ -396,6 +407,12 @@ pub struct DecodeSession {
     pub(crate) tiers: Vec<f32>,
     pub(crate) first_token_ms: f64,
     pub(crate) sender: StreamSender,
+    /// speculative draft ceiling for this session (0 = plain decode);
+    /// snapshotted from the engine config at admission
+    pub(crate) spec_k: usize,
+    /// in-flight speculative proposals: filled by a draft step,
+    /// consumed exactly once by the matching verify resolution
+    pub(crate) draft: Option<DraftBuf>,
 }
 
 /// Thin, queue-circulating handle for one pending decode step.  The
@@ -417,6 +434,10 @@ pub(crate) struct StreamStep {
     /// session's arena pages keep serving it, and the steal peek
     /// prices cache-holding heads as cheaper to serve
     pub shard: usize,
+    /// which step shape this item executes as: plain decode, a
+    /// speculative draft run, or the matching verify pass.  Step 0 is
+    /// always a prefill regardless of phase (see `Pending::kind`).
+    pub phase: StepPhase,
 }
 
 /// What the table decided after one executed step.
@@ -456,6 +477,12 @@ pub(crate) struct SessionTable {
     sessions: Mutex<HashMap<u64, Arc<SessionEntry>>>,
     next_key: AtomicU64,
     started: AtomicUsize,
+    /// stream work items ever handed to the queue (the step-0 admit
+    /// plus every requeue — draft and verify items included).  The
+    /// denominator of the report's tokens-per-admission metric: plain
+    /// decode pays exactly one item per token, speculative decode
+    /// fewer when drafts are accepted.
+    step_items: AtomicUsize,
 }
 
 impl Default for SessionTable {
@@ -470,6 +497,7 @@ impl SessionTable {
             sessions: Mutex::new(HashMap::new()),
             next_key: AtomicU64::new(0),
             started: AtomicUsize::new(0),
+            step_items: AtomicUsize::new(0),
         }
     }
 
@@ -477,6 +505,19 @@ impl SessionTable {
     /// session ends in exactly one completion or shed record).
     pub(crate) fn sessions_started(&self) -> usize {
         self.started.load(Ordering::SeqCst)
+    }
+
+    /// Stream work items ever handed to the queue (see the field doc).
+    pub(crate) fn step_items(&self) -> usize {
+        self.step_items.load(Ordering::SeqCst)
+    }
+
+    /// Count one stream work item entering circulation.  Every path
+    /// that constructs a stream `Pending` (admit, decode requeue, the
+    /// spec module's draft→verify and verify→draft hops) calls this
+    /// exactly once per item.
+    pub(crate) fn note_step_item(&self) {
+        self.step_items.fetch_add(1, Ordering::SeqCst);
     }
 
     /// Register one new session and build its step-0 (prefill) work
@@ -488,8 +529,13 @@ impl SessionTable {
     /// Panics if the sender's channel cap cannot hold the session's
     /// full token budget: a correctly sized channel is the invariant
     /// that keeps [`StreamStats::tokens_dropped`] at zero.
+    ///
+    /// `spec_k` is the engine's speculative draft ceiling (0 = plain
+    /// decode): it decides whether post-prefill steps circulate as
+    /// `Draft`/`Verify` items or plain `Decode` items.
     pub(crate) fn admit(&self, req: StreamRequest, sender: StreamSender,
-                        started: Instant, shards: usize) -> Pending {
+                        started: Instant, shards: usize,
+                        spec_k: usize) -> Pending {
         let key = self.next_key.fetch_add(1, Ordering::SeqCst);
         let max_steps = req.max_steps.max(1);
         assert!(sender.cap() >= max_steps,
@@ -509,10 +555,13 @@ impl SessionTable {
                 tiers: Vec::new(),
                 first_token_ms: 0.0,
                 sender,
+                spec_k,
+                draft: None,
             }),
         });
         self.sessions.lock().unwrap().insert(key, entry);
         self.started.fetch_add(1, Ordering::SeqCst);
+        self.note_step_item();
         Pending {
             req: Request { id: req.id, tokens: Vec::new(), slo },
             submitted: started,
@@ -522,6 +571,7 @@ impl SessionTable {
                 max_steps,
                 started,
                 shard,
+                phase: StepPhase::Decode,
             }),
         }
     }
@@ -606,7 +656,15 @@ impl SessionTable {
             tokens: Vec::new(),
             slo: sess.slo.clone(),
         };
+        // a speculative session's post-prefill steps circulate as
+        // draft runs; plain sessions keep the one-token decode shape
+        let phase = if sess.spec_k > 0 {
+            StepPhase::Draft
+        } else {
+            StepPhase::Decode
+        };
         drop(sess);
+        self.note_step_item();
         Advance::Requeue(Pending {
             req,
             submitted: now,
@@ -616,6 +674,7 @@ impl SessionTable {
                 max_steps: st.max_steps,
                 started: st.started,
                 shard: st.shard,
+                phase,
             }),
         })
     }
@@ -671,8 +730,8 @@ impl SessionTable {
             .collect()
     }
 
-    /// Number of currently live sessions (test observability).
-    #[cfg(test)]
+    /// Number of currently live sessions — what `close_drain` polls to
+    /// decide the fleet has finished its in-flight work.
     pub(crate) fn live(&self) -> usize {
         self.sessions.lock().unwrap().len()
     }
@@ -777,7 +836,7 @@ mod tests {
         let (tx, _rx) = channel(1, 8);
         let pending = table.admit(
             StreamRequest::new(1, vec![10, 11, 12], 4), tx,
-            Instant::now(), 4);
+            Instant::now(), 4, 0);
         let key = match &pending.outcome {
             crate::coordinator::serving::Outcome::Stream(st) => st.session,
             _ => panic!("stream admit must yield a stream item"),
@@ -792,6 +851,7 @@ mod tests {
         let st = StreamStep {
             session: key, step: 0, max_steps: 4,
             started: Instant::now(), shard: 0,
+            phase: StepPhase::Decode,
         };
         match table.advance(&st, 99, 1.0, Instant::now()) {
             Advance::Requeue(_) => {}
@@ -808,13 +868,14 @@ mod tests {
         let (tx, rx) = channel(5, 8);
         let t0 = Instant::now();
         let pending =
-            table.admit(StreamRequest::new(5, vec![1], 2), tx, t0, 4);
+            table.admit(StreamRequest::new(5, vec![1], 2), tx, t0, 4, 0);
         let key = match &pending.outcome {
             crate::coordinator::serving::Outcome::Stream(st) => st.session,
             _ => panic!("stream admit must yield a stream item"),
         };
         let st0 = StreamStep { session: key, step: 0, max_steps: 2,
-                               started: t0, shard: 0 };
+                               started: t0, shard: 0,
+                               phase: StepPhase::Decode };
         let st1 = match table.advance(&st0, 7, 1.0, Instant::now()) {
             Advance::Requeue(p) => match p.outcome {
                 crate::coordinator::serving::Outcome::Stream(st) => st,
@@ -903,7 +964,7 @@ mod tests {
         let table = SessionTable::new();
         let (tx, _rx) = channel(1, 2); // cap 2 < max_steps 8
         table.admit(StreamRequest::new(1, vec![1], 8), tx,
-                    Instant::now(), 4);
+                    Instant::now(), 4, 0);
     }
 
     #[test]
@@ -917,7 +978,7 @@ mod tests {
             let (tx, rx) = channel(1, 128);
             let pending = table.admit(
                 StreamRequest::new(1, vec![1, 2], 100), tx,
-                Instant::now(), 4);
+                Instant::now(), 4, 0);
             let mut st = match pending.outcome {
                 crate::coordinator::serving::Outcome::Stream(st) => st,
                 _ => panic!("stream admit must yield a stream item"),
@@ -978,7 +1039,7 @@ mod tests {
         for id in 0..3u64 {
             let (tx, rx) = channel(id, 4);
             table.admit(StreamRequest::new(id, vec![1], 4), tx,
-                        Instant::now(), 2);
+                        Instant::now(), 2, 0);
             rxs.push(rx);
         }
         let recs = table.shed_all(ServeError::ShuttingDown, "engine");

@@ -1,0 +1,901 @@
+//! Speculative decode — the elastic ladder drafting for itself.
+//!
+//! ElastiFormer's thesis is that one model runs at many compute
+//! levels, with self-consistency against the full-compute output as
+//! the acceptance signal.  This module turns that into serving speed:
+//! when the engine runs with `spec_k > 0`, a decode session's
+//! post-prefill steps alternate between two step shapes instead of
+//! the one-token decode loop —
+//!
+//!  * a **draft** item runs `k` cheap micro-steps at the *lowest*
+//!    tier the session's floor allows, proposing `k` tokens from the
+//!    session's current window (served through the ordinary arena hit
+//!    path — the draft's base window is a page lookup, not a window
+//!    rebuild);
+//!  * the matching **verify** item re-enters the queue on the
+//!    session's affine shard (`requeue_to`, so the draft's class keeps
+//!    serving it) and checks the whole proposal in ONE top-tier pass:
+//!    `k + 1` rows, where row `j` is the base window extended by the
+//!    first `j` proposed tokens.  Row `j`'s sampled token is the
+//!    top tier's own prediction for position `j` — so the longest
+//!    agreeing prefix of the proposals is exactly the run of tokens
+//!    the full-compute model would have produced itself, and the
+//!    first disagreeing position already carries the verifier's
+//!    replacement token.  Every verify therefore emits between 1 and
+//!    `k + 1` tokens (accepted prefix + the verifier's token at the
+//!    first disagreement, or a bonus token after a fully-accepted
+//!    run): progress is guaranteed even under total rejection.
+//!
+//! The proposals live in the session's [`DraftBuf`] between the two
+//! passes and are consumed **exactly once** by the verify resolution
+//! — accepted or rejected, the buffer (and the arena page the next
+//! window is deposited under) is recycled on every terminal path the
+//! plain decode loop already covers, so mid-draft sheds, worker
+//! panics and shutdown leak nothing.
+//!
+//! `k` adapts per class: every verify resolution feeds the class
+//! controller's accept-rate EWMA
+//! ([`CapacityController::observe_accept`]), and each draft batch
+//! asks [`CapacityController::draft_k`] how much speculation the
+//! learned rate justifies.  Under persistent rejection `k` collapses
+//! to 1, so speculative mode can never trail plain decode by more
+//! than one wasted verification pass per token — the no-regret floor
+//! the adversarial tests pin down.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::super::batcher::{floor_rung, form_rows};
+use super::super::report::StreamShedRecord;
+use super::super::worker::{fail_batch, sample_token, Executor};
+use super::super::{EngineShared, Outcome, Pending, Request, ServeError};
+use super::{Advance, SessionTable, StreamStats, StreamStep};
+
+/// Which step shape a queued stream item executes as.  Step 0 is
+/// always a prefill regardless of phase; the phase routes steps >= 1
+/// into the plain decode path or the speculative draft/verify loop
+/// (the `StepKind` dimension of the batch key keeps the three shapes
+/// from ever sharing an executed batch).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepPhase {
+    /// one token per admission — the plain decode loop
+    Decode,
+    /// propose `k` tokens at a cheap tier
+    Draft,
+    /// check the session's proposals in one top-tier pass
+    Verify,
+}
+
+/// One session's in-flight speculative proposals, stashed by a draft
+/// step and consumed exactly once by the matching verify resolution.
+pub(crate) struct DraftBuf {
+    /// the window the draft run started from: the verify pass derives
+    /// its `k + 1` rows from this base, so verification never depends
+    /// on the (possibly spilled) arena page
+    pub base_row: Vec<i32>,
+    /// proposed tokens, draft order
+    pub tokens: Vec<i32>,
+    /// tier the proposals were drafted at (recorded in the session's
+    /// tier trajectory for every accepted token)
+    pub tier: f32,
+}
+
+/// Per-worker-class speculative accounting, mirrored into the
+/// report's `WorkerClassInfo` at shutdown.  The three counters are
+/// updated together at verify resolution — never at draft time — so
+/// `drafted == accepted + rejected` holds under mid-draft sheds (a
+/// proposal that never reaches verification is not "drafted" for
+/// accounting purposes: no verification batch was spent on it).
+#[derive(Debug, Default)]
+pub(crate) struct SpecCounters {
+    drafted: AtomicUsize,
+    accepted: AtomicUsize,
+    rejected: AtomicUsize,
+    verifies: AtomicUsize,
+}
+
+impl SpecCounters {
+    pub(crate) fn new() -> SpecCounters {
+        SpecCounters::default()
+    }
+
+    /// Record one resolved verify pass: `accepted` of `drafted`
+    /// proposals agreed with the verifier.
+    pub(crate) fn add(&self, drafted: usize, accepted: usize) {
+        let accepted = accepted.min(drafted);
+        self.drafted.fetch_add(drafted, Ordering::SeqCst);
+        self.accepted.fetch_add(accepted, Ordering::SeqCst);
+        self.rejected.fetch_add(drafted - accepted, Ordering::SeqCst);
+        self.verifies.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub(crate) fn drafted(&self) -> usize {
+        self.drafted.load(Ordering::SeqCst)
+    }
+
+    pub(crate) fn accepted(&self) -> usize {
+        self.accepted.load(Ordering::SeqCst)
+    }
+
+    pub(crate) fn rejected(&self) -> usize {
+        self.rejected.load(Ordering::SeqCst)
+    }
+
+    /// Resolved verify passes — the per-class cycle count that turns
+    /// accept totals into a tokens-per-admission estimate.
+    pub(crate) fn verifies(&self) -> usize {
+        self.verifies.load(Ordering::SeqCst)
+    }
+}
+
+/// Longest agreeing prefix: how many leading proposals match the
+/// verifier's own predictions.  `verifier[j]` is the top tier's token
+/// for position `j` (computed on the base window extended by the
+/// first `j` proposals), so agreement is positional and order-strict.
+pub(crate) fn accept_prefix(proposed: &[i32], verifier: &[i32]) -> usize {
+    proposed
+        .iter()
+        .zip(verifier.iter())
+        .take_while(|(p, v)| p == v)
+        .count()
+}
+
+/// What one verify resolution decided, alongside the session's next
+/// move.  `drafted`/`accepted` feed the class counters and the
+/// controller's accept-rate EWMA; `next_window` (present iff the
+/// session requeues) is the post-acceptance window the worker
+/// deposits into its class arena under the next step index.
+pub(crate) struct VerifyResolution {
+    pub advance: Advance,
+    pub drafted: usize,
+    pub accepted: usize,
+    pub next_window: Option<Vec<i32>>,
+}
+
+impl SessionTable {
+    /// Stash one completed draft run in its session and hand back the
+    /// verify item to re-admit (on the session's affine shard).
+    /// `None` if the session terminated concurrently — the proposals
+    /// die with it (the caller recycles the arena pages; no counters
+    /// move, see [`SpecCounters`]).
+    pub(crate) fn stash_draft(&self, st: &StreamStep, base_row: Vec<i32>,
+                              tokens: Vec<i32>, tier: f32, now: Instant)
+                              -> Option<Pending> {
+        let entry = self.entry(st.session)?;
+        let mut sess = entry.state.lock().unwrap();
+        if sess.sender.is_done() {
+            return None; // shed won the race: discard the proposals
+        }
+        sess.draft = Some(DraftBuf { base_row, tokens, tier });
+        let req = Request {
+            id: sess.id,
+            tokens: Vec::new(),
+            slo: sess.slo.clone(),
+        };
+        drop(sess);
+        self.note_step_item();
+        Some(Pending {
+            req,
+            submitted: now,
+            outcome: Outcome::Stream(StreamStep {
+                session: st.session,
+                step: st.step,
+                max_steps: st.max_steps,
+                started: st.started,
+                shard: st.shard,
+                phase: StepPhase::Verify,
+            }),
+        })
+    }
+
+    /// How many proposals a session's pending verify carries (`None`
+    /// if the session or its draft buffer is gone) — what the verify
+    /// batch packer uses to budget rows without building them yet.
+    pub(crate) fn draft_len(&self, key: u64) -> Option<usize> {
+        let entry = self.entry(key)?;
+        let sess = entry.state.lock().unwrap();
+        if sess.sender.is_done() {
+            return None;
+        }
+        sess.draft.as_ref().map(|d| d.tokens.len())
+    }
+
+    /// The `k + 1` verification rows for one session's stashed draft:
+    /// row `j` is the base window extended by the first `j` proposals
+    /// (trimmed to the executor window).  Non-destructive — the
+    /// buffer is consumed by [`resolve_verify`](Self::resolve_verify).
+    /// `None` if the session or its draft buffer is gone.
+    pub(crate) fn verify_rows(&self, key: u64, seq_len: usize)
+                              -> Option<Vec<Vec<i32>>> {
+        let entry = self.entry(key)?;
+        let sess = entry.state.lock().unwrap();
+        if sess.sender.is_done() {
+            return None;
+        }
+        let draft = sess.draft.as_ref()?;
+        let k = draft.tokens.len();
+        let mut rows = Vec::with_capacity(k + 1);
+        for j in 0..=k {
+            let mut row = draft.base_row.clone();
+            row.extend_from_slice(&draft.tokens[..j]);
+            if row.len() > seq_len {
+                let cut = row.len() - seq_len;
+                row.drain(..cut);
+            }
+            rows.push(row);
+        }
+        Some(rows)
+    }
+
+    /// Resolve one verified draft run: consume the session's draft
+    /// buffer exactly once, accept the longest agreeing prefix, emit
+    /// the accepted tokens plus the verifier's token at the first
+    /// disagreement (or its bonus token after a full accept) through
+    /// the stream in order, and hand back the session's next move.
+    ///
+    /// `verifier_tokens` are the top-tier samples for the `k + 1`
+    /// verification rows, in row order.  Emission is capped at the
+    /// session's remaining budget, so a near-complete session never
+    /// overshoots `max_steps`.
+    pub(crate) fn resolve_verify(&self, st: &StreamStep,
+                                 verifier_tokens: &[i32],
+                                 verify_tier: f32, seq_len: usize,
+                                 now: Instant) -> VerifyResolution {
+        let gone = VerifyResolution {
+            advance: Advance::Gone,
+            drafted: 0,
+            accepted: 0,
+            next_window: None,
+        };
+        let Some(entry) = self.entry(st.session) else {
+            return gone;
+        };
+        let mut sess = entry.state.lock().unwrap();
+        if sess.sender.is_done() {
+            return gone; // shed won the race: buffer dies with it
+        }
+        let Some(draft) = sess.draft.take() else {
+            return gone; // stale verify: nothing to resolve
+        };
+        let k = draft.tokens.len();
+        debug_assert_eq!(verifier_tokens.len(), k + 1,
+                         "one verifier token per verification row");
+        let accepted = accept_prefix(
+            &draft.tokens,
+            &verifier_tokens[..k.min(verifier_tokens.len())]);
+        // accepted proposals, then the verifier's own token: the
+        // replacement at the first disagreement, or the bonus token
+        // extending a fully-accepted run — capped to remaining budget
+        let budget = sess.max_steps.saturating_sub(sess.generated.len());
+        let emit = (accepted + 1).min(budget.max(1));
+        let mut next_window = draft.base_row;
+        for i in 0..emit {
+            let (token, tier) = if i < accepted {
+                (draft.tokens[i], draft.tier)
+            } else {
+                (*verifier_tokens.get(i).unwrap_or(&0), verify_tier)
+            };
+            let step = sess.generated.len();
+            sess.generated.push(token);
+            sess.tiers.push(tier);
+            sess.sender.token(step, tier, token);
+            next_window.push(token);
+        }
+        if next_window.len() > seq_len {
+            let cut = next_window.len() - seq_len;
+            next_window.drain(..cut);
+        }
+        if sess.generated.len() >= sess.max_steps {
+            let stats = StreamStats {
+                id: sess.id,
+                class: sess.slo.name.clone(),
+                steps: sess.generated.len(),
+                tiers: sess.tiers.clone(),
+                total_ms: now
+                    .saturating_duration_since(sess.started)
+                    .as_secs_f64() * 1e3,
+                first_token_ms: sess.first_token_ms,
+                tokens_dropped: sess.sender.drops(),
+            };
+            sess.sender.finish_ref(stats.clone());
+            drop(sess); // entry lock released before the map lock
+            self.sessions.lock().unwrap().remove(&st.session);
+            return VerifyResolution {
+                advance: Advance::Done(stats),
+                drafted: k,
+                accepted,
+                next_window: None,
+            };
+        }
+        let req = Request {
+            id: sess.id,
+            tokens: Vec::new(),
+            slo: sess.slo.clone(),
+        };
+        drop(sess);
+        self.note_step_item();
+        VerifyResolution {
+            advance: Advance::Requeue(Pending {
+                req,
+                submitted: now,
+                outcome: Outcome::Stream(StreamStep {
+                    session: st.session,
+                    step: st.step + emit,
+                    max_steps: st.max_steps,
+                    started: st.started,
+                    shard: st.shard,
+                    phase: StepPhase::Draft,
+                }),
+            }),
+            drafted: k,
+            accepted,
+            next_window: Some(next_window),
+        }
+    }
+}
+
+/// Run one popped **draft** batch: build each session's base window
+/// (arena hit path first, table recompute fallback), execute `k`
+/// cheap micro-steps at the lowest floored tier, stash the proposals,
+/// and re-admit each session's verify item on its affine shard.
+/// Mirrors the main worker loop's error discipline (`fail_batch` on
+/// executor failure) and its one-lock-per-log batching.  Returns the
+/// number of executed batches (the `k` micro-steps count as one).
+pub(crate) fn run_draft_batch(shared: &EngineShared, worker: usize,
+                              class_idx: usize, class_name: &str,
+                              exec: &mut dyn Executor, floor: f32,
+                              live: Vec<Pending>) -> Result<usize> {
+    let batch = exec.batch().max(1);
+    let seq_len = exec.seq_len();
+    let controller = &shared.controllers[class_idx];
+    let arena = &shared.arenas[class_idx];
+    // the draft tier: the cheapest rung the batch's strictest floor
+    // allows.  Speculation exists to make drafting cheap; the floor
+    // contract still binds every proposed token.
+    let tier = shared.caps[floor_rung(&shared.caps, floor)];
+    // adaptive k: the class's learned accept rate scales how much
+    // speculation is worth buying; clamped so the verify pass
+    // (k + 1 rows) always fits one executor batch
+    let k = {
+        let ctl = controller.lock().unwrap();
+        ctl.draft_k(shared.spec_k)
+    }
+    .min(batch.saturating_sub(1))
+    .max(1);
+    let mut windows: Vec<Vec<i32>> = Vec::with_capacity(live.len());
+    let mut items: Vec<Pending> = Vec::with_capacity(live.len());
+    let mut cached_rows = 0usize;
+    for p in live {
+        let Outcome::Stream(st) = &p.outcome else {
+            unreachable!("draft batches contain only stream items");
+        };
+        let hit = arena.lookup(st.session, st.step);
+        match hit {
+            Some(row) => {
+                cached_rows += 1;
+                windows.push(row);
+            }
+            None => match shared.sessions.compute_row(st.session, seq_len)
+            {
+                Some(row) => windows.push(row),
+                None => continue, // session terminated: stale step
+            },
+        }
+        items.push(p);
+    }
+    if items.is_empty() {
+        return Ok(0);
+    }
+    // per-session draft depth: never draft past the session's budget
+    let depths: Vec<usize> = items
+        .iter()
+        .map(|p| match &p.outcome {
+            Outcome::Stream(st) => {
+                k.min(st.max_steps.saturating_sub(st.step)).max(1)
+            }
+            Outcome::OneShot(_) => unreachable!(),
+        })
+        .collect();
+    let rounds = depths.iter().copied().max().unwrap_or(1);
+    let mut bases: Vec<Vec<i32>> = windows.clone();
+    let mut proposals: Vec<Vec<i32>> =
+        vec![Vec::with_capacity(rounds); items.len()];
+    for round in 0..rounds {
+        let row_refs: Vec<&[i32]> =
+            windows.iter().map(|r| r.as_slice()).collect();
+        let tokens = form_rows(&row_refs, batch, seq_len);
+        drop(row_refs);
+        // only the first micro-step pays the batch's recompute mix;
+        // later rounds extend windows already in hand — the arena's
+        // incremental cost model applies to every one of them
+        if round == 0 {
+            exec.note_batch_mix(items.len() - cached_rows, cached_rows);
+        } else {
+            exec.note_batch_mix(0, items.len());
+        }
+        let exec_start = Instant::now();
+        let out = match exec.execute(tier, &tokens) {
+            Ok(out) => out,
+            Err(e) => {
+                let msg = format!(
+                    "{} worker {worker}: draft tier {tier} batch of {}: \
+                     {e:#}",
+                    exec.name(), items.len());
+                let n = items.len();
+                fail_batch(shared, items, &msg, class_name);
+                return Err(e.context(format!(
+                    "{} worker {worker}: draft tier {tier} batch of {n}",
+                    exec.name())));
+            }
+        };
+        let exec_ms = Instant::now()
+            .saturating_duration_since(exec_start)
+            .as_secs_f64() * 1e3;
+        controller.lock().unwrap().observe_exec(tier, exec_ms);
+        if out.logits.len() % batch != 0 {
+            let msg = format!(
+                "{} worker {worker}: executor returned {} logits, not a \
+                 multiple of batch {batch}",
+                exec.name(), out.logits.len());
+            fail_batch(shared, items, &msg, class_name);
+            return Err(anyhow::anyhow!(msg));
+        }
+        let row_len = out.logits.len() / batch;
+        for (i, win) in windows.iter_mut().enumerate() {
+            if round >= depths[i] {
+                continue; // this session's budget is shorter
+            }
+            let row = &out.logits[i * row_len..(i + 1) * row_len];
+            let token = sample_token(row);
+            proposals[i].push(token);
+            win.push(token);
+            if win.len() > seq_len {
+                let cut = win.len() - seq_len;
+                win.drain(..cut);
+            }
+        }
+    }
+    // stash every session's proposals and re-admit its verify pass on
+    // the affine shard; a closed queue terminates the session now
+    let now = Instant::now();
+    let mut stream_sheds: Vec<StreamShedRecord> = Vec::new();
+    for (i, p) in items.into_iter().enumerate() {
+        let Outcome::Stream(st) = p.outcome else {
+            unreachable!();
+        };
+        let base_row = std::mem::take(&mut bases[i]);
+        let tokens = std::mem::take(&mut proposals[i]);
+        match shared.sessions.stash_draft(&st, base_row, tokens, tier,
+                                          now) {
+            Some(verify) => {
+                let urgent = verify.req.slo.deadline.is_some();
+                if let Err(stale) =
+                    shared.queue.requeue_to(st.shard, verify, urgent)
+                {
+                    if let Outcome::Stream(st) = stale.outcome {
+                        if let Some(rec) = shared.sessions.shed(
+                            st.session, ServeError::ShuttingDown,
+                            class_name)
+                        {
+                            stream_sheds.push(rec);
+                        }
+                        shared.recycle_session(st.session);
+                    }
+                }
+            }
+            // session terminated concurrently: proposals discarded,
+            // pages freed (recycle is idempotent)
+            None => shared.recycle_session(st.session),
+        }
+    }
+    if !stream_sheds.is_empty() {
+        shared.stream_shed.lock().unwrap().append(&mut stream_sheds);
+    }
+    Ok(1)
+}
+
+/// Run one popped **verify** batch: pack sessions while their
+/// `k + 1`-row verification fits the executor batch (overflow items
+/// go straight back to their affine shards untouched), execute ONE
+/// top-tier pass, and resolve each session — emit the accepted
+/// prefix + the verifier's token, feed the class accept-rate EWMA and
+/// counters, deposit the next window in the arena, and requeue the
+/// next draft (or complete the session).  Returns executed batches
+/// (0 when every popped item was stale or deferred).
+pub(crate) fn run_verify_batch(shared: &EngineShared, worker: usize,
+                               class_idx: usize, class_name: &str,
+                               exec: &mut dyn Executor,
+                               live: Vec<Pending>) -> Result<usize> {
+    let batch = exec.batch().max(1);
+    let seq_len = exec.seq_len();
+    let controller = &shared.controllers[class_idx];
+    let arena = &shared.arenas[class_idx];
+    // verification is always the TOP tier: the whole point is the
+    // full-compute model's own opinion of the cheap proposals
+    let tier = shared.caps[0];
+    let mut items: Vec<Pending> = Vec::new();
+    let mut rows: Vec<Vec<i32>> = Vec::new();
+    let mut spans: Vec<(usize, usize)> = Vec::new(); // (row offset, k)
+    let mut stream_sheds: Vec<StreamShedRecord> = Vec::new();
+    for p in live {
+        let Outcome::Stream(st) = &p.outcome else {
+            unreachable!("verify batches contain only stream items");
+        };
+        let Some(k) = shared.sessions.draft_len(st.session) else {
+            // session or buffer gone: stale step, free its pages
+            shared.recycle_session(st.session);
+            continue;
+        };
+        debug_assert!(k + 1 <= batch,
+                      "draft_k is clamped to batch - 1 at draft time");
+        if rows.len() + k + 1 > batch {
+            // no room in this pass: defer the whole session untouched
+            // (its buffer stays stashed; the item keeps its identity)
+            let urgent = p.req.slo.deadline.is_some();
+            let Outcome::Stream(st) = &p.outcome else {
+                unreachable!();
+            };
+            let shard = st.shard;
+            let session = st.session;
+            if let Err(stale) = shared.queue.requeue_to(shard, p, urgent)
+            {
+                if let Outcome::Stream(st) = stale.outcome {
+                    if let Some(rec) = shared.sessions.shed(
+                        st.session, ServeError::ShuttingDown, class_name)
+                    {
+                        stream_sheds.push(rec);
+                    }
+                    shared.recycle_session(session);
+                }
+            }
+            continue;
+        }
+        match shared.sessions.verify_rows(st.session, seq_len) {
+            Some(vrows) => {
+                spans.push((rows.len(), k));
+                rows.extend(vrows);
+                items.push(p);
+            }
+            None => shared.recycle_session(st.session),
+        }
+    }
+    if items.is_empty() {
+        if !stream_sheds.is_empty() {
+            shared.stream_shed.lock().unwrap().append(&mut stream_sheds);
+        }
+        return Ok(0);
+    }
+    let row_refs: Vec<&[i32]> =
+        rows.iter().map(|r| r.as_slice()).collect();
+    let tokens = form_rows(&row_refs, batch, seq_len);
+    drop(row_refs);
+    // verification rows are full-window passes rebuilt from the draft
+    // buffer — recompute-cost rows in the arena's cost model
+    exec.note_batch_mix(rows.len(), 0);
+    let exec_start = Instant::now();
+    let out = match exec.execute(tier, &tokens) {
+        Ok(out) => out,
+        Err(e) => {
+            let msg = format!(
+                "{} worker {worker}: verify tier {tier} batch of {}: \
+                 {e:#}",
+                exec.name(), items.len());
+            let n = items.len();
+            fail_batch(shared, items, &msg, class_name);
+            return Err(e.context(format!(
+                "{} worker {worker}: verify tier {tier} batch of {n}",
+                exec.name())));
+        }
+    };
+    let done = Instant::now();
+    let exec_ms = done
+        .saturating_duration_since(exec_start)
+        .as_secs_f64() * 1e3;
+    controller.lock().unwrap().observe_exec(tier, exec_ms);
+    if out.logits.len() % batch != 0 {
+        let msg = format!(
+            "{} worker {worker}: executor returned {} logits, not a \
+             multiple of batch {batch}",
+            exec.name(), out.logits.len());
+        fail_batch(shared, items, &msg, class_name);
+        return Err(anyhow::anyhow!(msg));
+    }
+    let row_len = out.logits.len() / batch;
+    let counters = &shared.spec[class_idx];
+    let mut stream_done: Vec<StreamStats> = Vec::new();
+    for (p, (offset, k)) in items.into_iter().zip(spans) {
+        let Outcome::Stream(st) = p.outcome else {
+            unreachable!();
+        };
+        let verifier_tokens: Vec<i32> = (0..=k)
+            .map(|j| {
+                let r = offset + j;
+                sample_token(&out.logits[r * row_len..(r + 1) * row_len])
+            })
+            .collect();
+        let res = shared.sessions.resolve_verify(
+            &st, &verifier_tokens, tier, seq_len, done);
+        if res.drafted > 0 {
+            counters.add(res.drafted, res.accepted);
+            controller
+                .lock()
+                .unwrap()
+                .observe_accept(res.accepted, res.drafted);
+        }
+        match res.advance {
+            Advance::Requeue(next) => {
+                if let (Some(win), Outcome::Stream(nst)) =
+                    (res.next_window, &next.outcome)
+                {
+                    arena.store(nst.session, nst.step, win);
+                }
+                let urgent = next.req.slo.deadline.is_some();
+                if let Err(stale) =
+                    shared.queue.requeue_to(st.shard, next, urgent)
+                {
+                    if let Outcome::Stream(st) = stale.outcome {
+                        if let Some(rec) = shared.sessions.shed(
+                            st.session, ServeError::ShuttingDown,
+                            class_name)
+                        {
+                            stream_sheds.push(rec);
+                        }
+                        shared.recycle_session(st.session);
+                    }
+                }
+            }
+            Advance::Done(stats) => {
+                shared.recycle_session(st.session);
+                stream_done.push(stats);
+            }
+            Advance::Gone => {
+                shared.recycle_session(st.session);
+            }
+        }
+    }
+    if !stream_done.is_empty() {
+        shared.stream_done.lock().unwrap().append(&mut stream_done);
+    }
+    if !stream_sheds.is_empty() {
+        shared.stream_shed.lock().unwrap().append(&mut stream_sheds);
+    }
+    Ok(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{channel, StreamRequest};
+    use super::*;
+
+    fn admit_spec(table: &SessionTable, id: u64, prompt: Vec<i32>,
+                  max_steps: usize, spec_k: usize)
+                  -> (StreamStep, super::super::StreamResponse) {
+        let (tx, rx) = channel(id, max_steps + 1);
+        let pending = table.admit(
+            StreamRequest::new(id, prompt, max_steps), tx,
+            Instant::now(), 4, spec_k);
+        let st = match pending.outcome {
+            Outcome::Stream(st) => st,
+            _ => panic!("stream admit must yield a stream item"),
+        };
+        (st, rx)
+    }
+
+    #[test]
+    fn accept_prefix_is_the_longest_agreeing_run() {
+        assert_eq!(accept_prefix(&[1, 2, 3], &[1, 2, 3, 9]), 3);
+        assert_eq!(accept_prefix(&[1, 2, 3], &[1, 9, 3, 9]), 1);
+        assert_eq!(accept_prefix(&[1, 2, 3], &[9, 2, 3, 9]), 0);
+        assert_eq!(accept_prefix(&[], &[7]), 0);
+    }
+
+    #[test]
+    fn spec_counters_reconcile_by_construction() {
+        let c = SpecCounters::new();
+        c.add(4, 3);
+        c.add(2, 0);
+        c.add(3, 3);
+        assert_eq!(c.drafted(), 9);
+        assert_eq!(c.accepted(), 6);
+        assert_eq!(c.rejected(), 3);
+        assert_eq!(c.drafted(), c.accepted() + c.rejected());
+        assert_eq!(c.verifies(), 3, "one cycle per resolved verify");
+        // over-reporting accepts is clamped, the invariant holds
+        c.add(2, 5);
+        assert_eq!(c.drafted(), c.accepted() + c.rejected());
+    }
+
+    #[test]
+    fn speculative_sessions_requeue_as_drafts_after_prefill() {
+        let table = SessionTable::new();
+        let (st, _rx) = admit_spec(&table, 1, vec![5], 8, 4);
+        assert_eq!(st.phase, StepPhase::Decode, "step 0 is a prefill");
+        match table.advance(&st, 7, 1.0, Instant::now()) {
+            Advance::Requeue(p) => match p.outcome {
+                Outcome::Stream(next) => {
+                    assert_eq!(next.phase, StepPhase::Draft,
+                               "spec sessions draft after prefill");
+                    assert_eq!(next.step, 1);
+                }
+                _ => panic!("requeue must stay a stream item"),
+            },
+            _ => panic!("budget left: must requeue"),
+        }
+    }
+
+    #[test]
+    fn stash_then_verify_rows_extend_the_base_window() {
+        let table = SessionTable::new();
+        let (st, _rx) = admit_spec(&table, 2, vec![5], 8, 3);
+        let verify = table
+            .stash_draft(&st, vec![5, 7], vec![20, 21], 0.25,
+                         Instant::now())
+            .expect("live session must stash");
+        match &verify.outcome {
+            Outcome::Stream(v) => {
+                assert_eq!(v.phase, StepPhase::Verify);
+                assert_eq!(v.step, st.step, "verify re-checks the same \
+                                             position");
+                assert_eq!(v.shard, st.shard, "affinity preserved");
+            }
+            _ => panic!("verify must be a stream item"),
+        }
+        assert_eq!(table.draft_len(st.session), Some(2));
+        let rows = table.verify_rows(st.session, 3).unwrap();
+        assert_eq!(rows.len(), 3, "k + 1 rows");
+        assert_eq!(rows[0], vec![5, 7]);
+        assert_eq!(rows[1], vec![5, 7, 20]);
+        assert_eq!(rows[2], vec![7, 20, 21], "trimmed to seq_len");
+    }
+
+    #[test]
+    fn resolve_verify_accepts_prefix_and_falls_back_to_verifier() {
+        let table = SessionTable::new();
+        let (st0, rx) = admit_spec(&table, 3, vec![5], 8, 3);
+        // prefill emits token 100 at step 0
+        let st = match table.advance(&st0, 100, 1.0, Instant::now()) {
+            Advance::Requeue(p) => match p.outcome {
+                Outcome::Stream(st) => st,
+                _ => unreachable!(),
+            },
+            _ => panic!("must requeue"),
+        };
+        table
+            .stash_draft(&st, vec![5, 100], vec![20, 21, 22], 0.25,
+                         Instant::now())
+            .unwrap();
+        // verifier agrees with 20, 21 but wants 30 at position 2
+        let res = table.resolve_verify(&st, &[20, 21, 30, 31], 1.0, 8,
+                                       Instant::now());
+        assert_eq!(res.drafted, 3);
+        assert_eq!(res.accepted, 2);
+        let next = match res.advance {
+            Advance::Requeue(p) => match p.outcome {
+                Outcome::Stream(st) => st,
+                _ => unreachable!(),
+            },
+            other => panic!(
+                "budget left: must requeue, got {:?}",
+                matches!(other, Advance::Done(_))),
+        };
+        assert_eq!(next.step, st.step + 3,
+                   "accepted prefix + the verifier's replacement");
+        assert_eq!(next.phase, StepPhase::Draft);
+        assert_eq!(res.next_window.unwrap(), vec![5, 100, 20, 21, 30]);
+        // the draft buffer is consumed exactly once
+        assert_eq!(table.draft_len(st.session), None);
+        // client saw prefill + 3 speculative tokens, in order
+        let mut steps = Vec::new();
+        let mut tokens = Vec::new();
+        while let Ok(Some(ev)) =
+            rx.recv_timeout(std::time::Duration::from_millis(50))
+        {
+            if let super::super::StreamEvent::Token { step, token, .. } =
+                ev
+            {
+                steps.push(step);
+                tokens.push(token);
+            } else {
+                break;
+            }
+        }
+        assert_eq!(steps, vec![0, 1, 2, 3]);
+        assert_eq!(tokens, vec![100, 20, 21, 30]);
+    }
+
+    #[test]
+    fn resolve_verify_total_rejection_still_makes_progress() {
+        let table = SessionTable::new();
+        let (st0, _rx) = admit_spec(&table, 4, vec![5], 8, 3);
+        let st = match table.advance(&st0, 100, 1.0, Instant::now()) {
+            Advance::Requeue(p) => match p.outcome {
+                Outcome::Stream(st) => st,
+                _ => unreachable!(),
+            },
+            _ => panic!("must requeue"),
+        };
+        table
+            .stash_draft(&st, vec![5, 100], vec![20, 21], 0.25,
+                         Instant::now())
+            .unwrap();
+        let res = table.resolve_verify(&st, &[90, 91, 92], 1.0, 8,
+                                       Instant::now());
+        assert_eq!(res.accepted, 0);
+        assert_eq!(res.drafted, 2);
+        match res.advance {
+            Advance::Requeue(p) => match p.outcome {
+                Outcome::Stream(next) => assert_eq!(
+                    next.step, st.step + 1,
+                    "the verifier's own token is always emitted"),
+                _ => unreachable!(),
+            },
+            _ => panic!("must requeue"),
+        }
+    }
+
+    #[test]
+    fn resolve_verify_caps_emission_at_the_session_budget() {
+        let table = SessionTable::new();
+        // max_steps 3: prefill emits one, so budget for spec is 2
+        let (st0, rx) = admit_spec(&table, 5, vec![5], 3, 4);
+        let st = match table.advance(&st0, 100, 1.0, Instant::now()) {
+            Advance::Requeue(p) => match p.outcome {
+                Outcome::Stream(st) => st,
+                _ => unreachable!(),
+            },
+            _ => panic!("must requeue"),
+        };
+        table
+            .stash_draft(&st, vec![5, 100], vec![20, 21, 22, 23], 0.25,
+                         Instant::now())
+            .unwrap();
+        // full agreement would emit 5 tokens; the budget allows 2
+        let res = table.resolve_verify(&st, &[20, 21, 22, 23, 24], 1.0,
+                                       8, Instant::now());
+        assert_eq!(res.drafted, 4);
+        assert_eq!(res.accepted, 4);
+        match res.advance {
+            Advance::Done(stats) => {
+                assert_eq!(stats.steps, 3, "never overshoots max_steps");
+            }
+            _ => panic!("budget exhausted: must complete"),
+        }
+        assert_eq!(table.live(), 0);
+        let stats = rx.wait().expect("session completed");
+        assert_eq!(stats.steps, 3);
+        assert_eq!(stats.tiers.len(), 3,
+                   "one tier record per emitted token");
+    }
+
+    #[test]
+    fn shed_session_discards_draft_and_verify_resolution() {
+        let table = SessionTable::new();
+        let (st0, rx) = admit_spec(&table, 6, vec![5], 8, 3);
+        let st = match table.advance(&st0, 100, 1.0, Instant::now()) {
+            Advance::Requeue(p) => match p.outcome {
+                Outcome::Stream(st) => st,
+                _ => unreachable!(),
+            },
+            _ => panic!("must requeue"),
+        };
+        table
+            .stash_draft(&st, vec![5, 100], vec![20], 0.25,
+                         Instant::now())
+            .unwrap();
+        let rec = table.shed(st.session, ServeError::ShuttingDown,
+                             "test");
+        assert!(rec.is_some());
+        // a late verify resolution is Gone and moves no counters
+        let res = table.resolve_verify(&st, &[20, 21], 1.0, 8,
+                                       Instant::now());
+        assert!(matches!(res.advance, Advance::Gone));
+        assert_eq!(res.drafted, 0);
+        // a late stash is refused too
+        assert!(table
+            .stash_draft(&st, vec![5], vec![9], 0.25, Instant::now())
+            .is_none());
+        assert!(matches!(rx.wait(), Err(ServeError::ShuttingDown)));
+    }
+}

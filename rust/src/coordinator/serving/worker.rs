@@ -14,9 +14,9 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::batcher::{batch_key_for, form_rows};
+use super::batcher::{batch_key_for, form_rows, StepKind};
 use super::report::{Completion, ShedCause, ShedRecord, StreamShedRecord};
-use super::stream::Advance;
+use super::stream::{spec, Advance};
 use super::{EngineShared, Outcome, Pending, Reply, ServeError};
 
 #[cfg(feature = "pjrt")]
@@ -173,7 +173,10 @@ impl Executor for XlaExecutor {
 
 /// Greedy sampling: the argmax index of one logits row.  Real vocab
 /// heads yield a token id; the sim backend's single-logit rows yield 0.
-fn sample_token(row: &[f32]) -> i32 {
+/// Shared with the speculative runners in `stream::spec`, so draft,
+/// verify and plain decode all sample identically — the acceptance
+/// test is exact token equality.
+pub(crate) fn sample_token(row: &[f32]) -> i32 {
     let mut best = 0usize;
     let mut best_v = f32::NEG_INFINITY;
     for (i, &v) in row.iter().enumerate() {
@@ -189,8 +192,8 @@ fn sample_token(row: &[f32]) -> i32 {
 /// `ExecFailed`, decode sessions are shed through the session table
 /// (their stream's terminal event) and logged to the engine's
 /// stream-shed record under one lock.
-fn fail_batch(shared: &EngineShared, items: Vec<Pending>, msg: &str,
-              class_name: &str) {
+pub(crate) fn fail_batch(shared: &EngineShared, items: Vec<Pending>,
+                         msg: &str, class_name: &str) {
     let mut recs: Vec<StreamShedRecord> = Vec::new();
     for p in items {
         match p.outcome {
@@ -332,6 +335,26 @@ pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
         }
         if live.is_empty() {
             continue; // the whole run was past-deadline
+        }
+        // speculative step shapes run through their own runners: a
+        // draft batch is k cheap micro-steps over the same rows, a
+        // verify batch packs k+1 rows per session — neither fits the
+        // one-row-per-item path below.  The batch key guarantees the
+        // popped run is homogeneous in kind, so the head decides.
+        match live[0].kind() {
+            StepKind::Draft => {
+                batches += spec::run_draft_batch(
+                    shared, worker, class_idx, &class_name, exec,
+                    floor, live)?;
+                continue;
+            }
+            StepKind::Verify => {
+                batches += spec::run_verify_batch(
+                    shared, worker, class_idx, &class_name, exec,
+                    live)?;
+                continue;
+            }
+            StepKind::Prefill | StepKind::Decode => {}
         }
         // this class's controller sees the global post-pop backlog (one
         // atomic load off the sharded queue's depth gauge — no queue

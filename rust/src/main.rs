@@ -14,6 +14,7 @@
 //!                  [--queue-shards K] [--depth-per-tier D] [--seed S]
 //!                  [--worker-classes fast=2:slow=2@4]
 //!                  [--stream N] [--decode-steps K]
+//!                  [--spec-k K] [--divergence D]
 //!   info           --config C
 //!
 //! Everything except `serve-sim` runs off the AOT artifacts in
@@ -96,6 +97,13 @@ elastiformer — ElastiFormer reproduction (see DESIGN.md)
               (session-arena pages per worker class: cached decode
                windows with shard-affine placement; 0 disables the
                arena — every decode step recomputes its window)
+              --spec-k K --divergence D
+              (speculative decode: each session drafts up to K tokens
+               per admission at the cheapest floored tier and verifies
+               them in one top-tier pass; K adapts to the learned
+               accept rate.  D in [0,1] makes floored tiers disagree
+               with the verifier, scaled by tier distance; 0 = always
+               agree)
   elastiformer info --config lm_tiny";
 
 /// The artifact-backed subcommands need the PJRT runtime layer; when
@@ -376,7 +384,8 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
     args.check_known(&["requests", "rates", "workers", "batch", "seq-len",
                        "queue-bound", "queue-shards", "depth-per-tier",
                        "seed", "worker-classes", "stream",
-                       "decode-steps", "arena-pages"])?;
+                       "decode-steps", "arena-pages", "spec-k",
+                       "divergence"])?;
     let n = args.usize_or("requests", 512)?;
     let workers = args.usize_or("workers", 4)?;
     let seed = args.u64_or("seed", 42)?;
@@ -389,6 +398,13 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
     // recompute their window from the session table)
     let arena_pages =
         args.usize_or("arena-pages", ServeConfig::standard().arena_pages)?;
+    // speculative decode: draft ceiling per admission (0 = plain
+    // decode) and the sim's tier-dependent disagreement probability
+    let spec_k = args.usize_or("spec-k", 0)?;
+    let divergence = args.f64_or("divergence", 0.0)?;
+    if !(0.0..=1.0).contains(&divergence) {
+        bail!("--divergence must be in [0, 1], got {divergence}");
+    }
     // 0 = auto (one admission shard per worker); 1 = the classic
     // shared queue, kept for A/B comparison
     let queue_shards = args.usize_or("queue-shards", 0)?;
@@ -412,11 +428,16 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
     spec.batch = args.usize_or("batch", spec.batch)?;
     spec.seq_len = args.usize_or("seq-len", spec.seq_len)?;
     spec.seed = seed;
+    spec.divergence = divergence;
     if spec.batch == 0 || spec.seq_len == 0 {
         bail!("--batch and --seq-len must be >= 1");
     }
     if stream_n > 0 && decode_steps == 0 {
         bail!("--decode-steps must be >= 1 when --stream is set");
+    }
+    if spec_k > 0 && stream_n == 0 {
+        bail!("--spec-k needs --stream N: speculative decode only \
+               applies to streaming sessions");
     }
 
     let total_workers = match &classes {
@@ -447,7 +468,7 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
                                            queue_shards, depth_per_tier,
                                            classes.as_deref(), n, rate,
                                            seed, stream_n, decode_steps,
-                                           arena_pages)?;
+                                           arena_pages, spec_k)?;
         let tiers: Vec<String> = report
             .tier_counts
             .iter()
@@ -485,6 +506,18 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
                       {} recomputed",
                      report.cache_hit_rate() * 100.0,
                      report.cache_hits, report.cache_misses);
+            if spec_k > 0 {
+                // speculative economy: how often the cheap draft tier
+                // agreed with the verifier, and the admission-item
+                // payoff (1.0 = plain decode)
+                println!("    spec   accept {:>5.1}% | drafted {} \
+                          accepted {} rejected {} | {:.2} \
+                          tok/admission",
+                         report.spec_accept_rate() * 100.0,
+                         report.spec_drafted, report.spec_accepted,
+                         report.spec_rejected,
+                         report.tokens_per_admission());
+            }
         }
         if classes.is_some() {
             // per-worker-class split: each class's share, tier mix and
@@ -555,7 +588,8 @@ fn run_sim_point(spec: SimSpec, workers: usize, queue_bound: usize,
                  queue_shards: usize, depth_per_tier: f64,
                  classes: Option<&[(String, usize, f64)]>, n: usize,
                  rate: f64, seed: u64, stream_n: usize,
-                 decode_steps: usize, arena_pages: usize)
+                 decode_steps: usize, arena_pages: usize,
+                 spec_k: usize)
                  -> Result<(ServeReport, usize)> {
     let mut cfg = ServeConfig::sim()
         .with_workers(workers)
@@ -563,6 +597,7 @@ fn run_sim_point(spec: SimSpec, workers: usize, queue_bound: usize,
         .with_queue_shards(queue_shards)
         .with_depth_per_tier(depth_per_tier)
         .with_arena_pages(arena_pages)
+        .with_spec_k(spec_k)
         .with_max_batch_wait(Duration::from_millis(2));
     let caps = cfg.capacities();
     let engine = match classes {

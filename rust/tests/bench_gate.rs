@@ -3,11 +3,13 @@
 //! single-deque admission queue vs the sharded work-stealing queue at
 //! 4 workers under a near-zero-latency `SimSpec` (host overhead
 //! dominates), plus a heterogeneous fast/slow two-class topology
-//! (per-worker-class capacity controllers) and a streaming decode
-//! point (concurrent sessions through `submit_stream`, tokens/s) —
-//! and writes the machine-readable `BENCH_serving.json` at the repo
-//! root, so every tier-1 `cargo test` run refreshes the perf record
-//! even where `cargo bench` never runs.
+//! (per-worker-class capacity controllers), a streaming decode point
+//! (concurrent sessions through `submit_stream`, tokens/s), and a
+//! speculative decode point (draft/verify cycles — accept rate and
+//! tokens-per-admission) — and writes the machine-readable
+//! `BENCH_serving.json` at the repo root, so every tier-1 `cargo
+//! test` run refreshes the perf record even where `cargo bench` never
+//! runs.
 //!
 //! Debug-build timings on shared CI runners are noisy, so this test
 //! asserts *structure* (exactly-once service under both topologies, a
@@ -90,6 +92,31 @@ fn bench_gate_records_shared_vs_sharded_pipeline() {
             "the default session arena must serve some decode rows");
     rows.push(BenchRow { queue: "streaming", workers, shards: workers,
                          classes: String::new(), report: streaming });
+    // speculative decode row: sessions draft at the cheapest floored
+    // tier and verify at the top tier; speculative_point itself
+    // asserts the ledger reconciles (drafted == accepted + rejected).
+    // Mild divergence keeps the accept rate strictly below 1 while
+    // the admission economy stays above plain decode's 1.0.
+    let spec_stream =
+        SimSpec { divergence: 0.05, ..stream_spec };
+    let speculative =
+        sim::speculative_point(spec_stream, workers, workers, sessions,
+                               decode_steps, 4)
+            .unwrap_or_else(|e| {
+                panic!("speculative pipeline failed: {e:#}")
+            });
+    assert_eq!(speculative.stream_done.len(), sessions,
+               "speculative: sessions lost");
+    assert!(speculative.spec_drafted > 0,
+            "speculative point must draft");
+    assert!(speculative.spec_accept_rate() > 0.0,
+            "mild divergence must still accept most drafts");
+    assert!(speculative.tokens_per_admission() > 1.0,
+            "speculative decode must beat the one-token-per-item \
+             plain economy, got {}",
+            speculative.tokens_per_admission());
+    rows.push(BenchRow { queue: "speculative", workers, shards: workers,
+                         classes: String::new(), report: speculative });
     let path = Path::new(
         concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serving.json"));
     // never stomp an authoritative release-mode record with debug
@@ -117,7 +144,7 @@ fn bench_gate_records_shared_vs_sharded_pipeline() {
         assert_eq!(doc.req("bench").unwrap().as_str().unwrap(),
                    "sim_pipeline");
         let results = doc.req("results").unwrap().as_arr().unwrap();
-        assert_eq!(results.len(), 4);
+        assert_eq!(results.len(), 5);
         let streaming_row = results
             .iter()
             .find(|r| {
@@ -146,6 +173,26 @@ fn bench_gate_records_shared_vs_sharded_pipeline() {
         assert!(hit_rate.is_finite() && hit_rate > 0.0,
                 "streaming row must record a nonzero session-arena \
                  hit rate, got {hit_rate}");
+        let spec_row = results
+            .iter()
+            .find(|r| {
+                r.req("queue")
+                    .ok()
+                    .and_then(|q| q.as_str().ok())
+                    .is_some_and(|q| q == "speculative")
+            })
+            .expect("record must carry the speculative row");
+        let accept = spec_row
+            .req("spec_accept_rate").unwrap()
+            .as_f64().unwrap();
+        assert!(accept.is_finite() && accept > 0.0 && accept <= 1.0,
+                "nonsense speculative accept rate {accept}");
+        let tpa = spec_row
+            .req("tokens_per_admission").unwrap()
+            .as_f64().unwrap();
+        assert!(tpa.is_finite() && tpa > 1.0,
+                "speculative tokens/admission must beat plain decode's \
+                 1.0, got {tpa}");
         let hetero_row = results
             .iter()
             .find(|r| {

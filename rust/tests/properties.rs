@@ -816,6 +816,191 @@ fn prop_streaming_with_arena_survives_panics_and_shutdown_races() {
     });
 }
 
+/// Executor whose top-tier and draft-tier predictions always disagree
+/// (token 0 vs token 1) — the adversarial verifier that rejects every
+/// speculative proposal — and which can also panic after a globally
+/// shared batch budget, like [`PanicAfter`].
+struct RejectingPanicExec {
+    executed: Arc<AtomicUsize>,
+    panic_after: usize,
+    batch: usize,
+    top: f32,
+}
+
+impl Executor for RejectingPanicExec {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn seq_len(&self) -> usize {
+        8
+    }
+    fn execute(&mut self, tier: f32, _tokens: &[i32])
+               -> anyhow::Result<ExecOutput> {
+        let k = self.executed.fetch_add(1, Ordering::SeqCst);
+        if k >= self.panic_after {
+            panic!("injected executor panic at batch {k}");
+        }
+        let row: [f32; 2] = if tier >= self.top - 1e-6 {
+            [1.0, 0.0] // verifier: token 0
+        } else {
+            [0.0, 1.0] // draft tiers: token 1 — always rejected
+        };
+        let mut logits = Vec::with_capacity(self.batch * 2);
+        for _ in 0..self.batch {
+            logits.extend_from_slice(&row);
+        }
+        Ok(ExecOutput { logits })
+    }
+}
+
+#[test]
+fn prop_speculative_sessions_terminate_exactly_once_under_rejection_and_panics() {
+    // speculative backbone: with draft/verify cycles in the pipeline,
+    // every stream still observes Token* (strictly ordered from 0)
+    // then exactly one terminal then end-of-stream — across fleets
+    // that panic after a random batch budget (possibly before the
+    // first draft), adversarial verifiers that reject every proposal,
+    // random spec_k, random arena sizes (incl. disabled), and
+    // mid-decode shutdown.  Page recycling is exercised implicitly:
+    // the arena's internal pool invariants (free + live == slots)
+    // debug_assert inside the workers, so a draft- or verify-path leak
+    // or double-free surfaces here as worker panics on every
+    // debug-build run.  On a clean shutdown the session logs AND the
+    // speculative ledger (drafted == accepted + rejected) reconcile.
+    check("spec_exactly_once", 10, |rng| {
+        let sessions = 1 + rng.below(6);
+        let max_steps = 1 + rng.below(6);
+        let workers = 1 + rng.below(3);
+        let batch = 2 + rng.below(6);
+        let spec_k = 1 + rng.below(4);
+        let panic_after = rng.below(20); // 0 => instant fleet death
+        let always_reject = rng.chance(0.5);
+        let executed = Arc::new(AtomicUsize::new(0));
+        let cfg = ServeConfig::sim()
+            .with_workers(workers)
+            .with_queue_shards(rng.below(workers + 2))
+            .with_queue_bound(1 + rng.below(32))
+            .with_arena_pages(rng.below(5)) // incl. 0 = disabled
+            .with_spec_k(spec_k)
+            .with_max_batch_wait(Duration::ZERO);
+        let top = cfg.capacities()[0];
+        let counter = executed.clone();
+        let engine = if always_reject {
+            ElasticEngine::start(cfg, move |_| {
+                Ok(Box::new(RejectingPanicExec {
+                    executed: counter.clone(),
+                    panic_after,
+                    batch,
+                    top,
+                }) as Box<dyn Executor>)
+            })
+        } else {
+            // PanicAfter's single-logit rows argmax to token 0 at every
+            // tier, so drafts always agree — the full-accept extreme
+            ElasticEngine::start(cfg, move |_| {
+                Ok(Box::new(PanicAfter {
+                    executed: counter.clone(),
+                    panic_after,
+                    batch,
+                }) as Box<dyn Executor>)
+            })
+        }
+        .map_err(|e| format!("start failed: {e:#}"))?;
+        let streams: Vec<_> = (0..sessions as u64)
+            .map(|id| {
+                engine.submit_stream(
+                    StreamRequest::new(id, vec![1; 4], max_steps))
+            })
+            .collect();
+        // mid-decode shutdown races live draft/verify cycles
+        let shutdown_result = engine.shutdown();
+        let mut done = 0usize;
+        let mut shed = 0usize;
+        for s in streams {
+            let mut next_step = 0usize;
+            let mut terminals = 0usize;
+            let mut completed = false;
+            loop {
+                match s.recv_timeout(Duration::from_secs(30)) {
+                    Ok(Some(StreamEvent::Token { step, .. })) => {
+                        if step != next_step {
+                            return Err(format!(
+                                "token step {step}, want {next_step}"));
+                        }
+                        next_step += 1;
+                    }
+                    Ok(Some(StreamEvent::Done(stats))) => {
+                        terminals += 1;
+                        completed = true;
+                        if stats.steps != max_steps
+                            || stats.steps != next_step
+                        {
+                            return Err(format!(
+                                "Done says {} steps, budget {max_steps}, \
+                                 client saw {next_step}", stats.steps));
+                        }
+                    }
+                    Ok(Some(StreamEvent::Shed(_))) => {
+                        terminals += 1;
+                    }
+                    Ok(None) => break,
+                    Err(_) => {
+                        return Err("a stream never terminated".into());
+                    }
+                }
+            }
+            if terminals != 1 {
+                return Err(format!(
+                    "{terminals} terminal events on one stream"));
+            }
+            if completed {
+                done += 1;
+            } else {
+                shed += 1;
+            }
+        }
+        if done + shed != sessions {
+            return Err(format!("{done} + {shed} != {sessions}"));
+        }
+        // a surviving fleet's report must reconcile with the clients
+        // AND with itself
+        if let Ok(report) = shutdown_result {
+            if report.sessions_started != sessions {
+                return Err(format!(
+                    "report started {} != {sessions} submitted",
+                    report.sessions_started));
+            }
+            if report.stream_done.len() != done
+                || report.stream_shed.len() != shed
+            {
+                return Err(format!(
+                    "report {}/{} vs client {done}/{shed} done/shed",
+                    report.stream_done.len(), report.stream_shed.len()));
+            }
+            if report.spec_drafted
+                != report.spec_accepted + report.spec_rejected
+            {
+                return Err(format!(
+                    "speculative ledger broken: {} drafted != {} \
+                     accepted + {} rejected", report.spec_drafted,
+                    report.spec_accepted, report.spec_rejected));
+            }
+            if always_reject && report.spec_accepted != 0 {
+                return Err(format!(
+                    "always-rejecting verifier accepted {} drafts",
+                    report.spec_accepted));
+            }
+            for sec in report.spec_sections() {
+                if sec.drafted != sec.accepted + sec.rejected {
+                    return Err(format!(
+                        "class {} section ledger broken", sec.class));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_affine_requeue_into_a_closed_queue_fails_fast() {
     // teardown-safety for placement affinity: once the queue is

@@ -986,6 +986,283 @@ fn responses_outlive_the_handle_across_shutdown() {
 }
 
 #[test]
+fn close_drain_lets_live_sessions_finish_before_shutdown() {
+    // graceful-drain satellite: sessions live at close_drain time must
+    // run their remaining steps to completion (terminal Done), unlike
+    // close() which sheds them at the next step boundary.  Latencies
+    // are real enough that the sessions are provably mid-decode when
+    // the drain begins.
+    let spec = SimSpec {
+        batch: 4,
+        base_ms: 2.0,
+        ms_per_capacity: 0.0,
+        jitter_ms: 0.0,
+        ..SimSpec::standard()
+    };
+    let cfg = ServeConfig::sim()
+        .with_workers(1)
+        .with_max_batch_wait(Duration::from_millis(1));
+    let caps = cfg.capacities();
+    let engine =
+        ElasticEngine::start(cfg, sim::factory(spec, caps)).unwrap();
+    let steps = 20usize;
+    let streams: Vec<_> = (0..3u64)
+        .map(|id| {
+            engine.submit_stream(StreamRequest::new(id, vec![1; 4], steps))
+        })
+        .collect();
+    // provably mid-decode: every session has delivered a token but
+    // cannot have finished (19 more steps x >= 2ms each remain)
+    for s in &streams {
+        match s.recv_timeout(Duration::from_secs(30)) {
+            Ok(Some(StreamEvent::Token { step: 0, .. })) => {}
+            other => panic!("want first token, got {other:?}"),
+        }
+    }
+    let drained = engine.close_drain(Duration::from_secs(60));
+    assert!(drained, "bounded-budget sessions must drain in time");
+    // after the drain the engine refuses new work like a closed one
+    match engine.try_submit(Request::new(90, sim_tokens(90, spec.seq_len)))
+    {
+        Admission::Shed(ShedReason::ShuttingDown) => {}
+        other => panic!("drained engine must refuse, got {other:?}"),
+    }
+    for s in streams {
+        let sid = s.id();
+        let mut tokens = 1usize; // the step-0 token consumed above
+        let mut done = 0usize;
+        loop {
+            match s.recv_timeout(Duration::from_secs(30)) {
+                Ok(Some(StreamEvent::Token { .. })) => tokens += 1,
+                Ok(Some(StreamEvent::Done(stats))) => {
+                    done += 1;
+                    assert_eq!(stats.steps, steps);
+                }
+                Ok(Some(StreamEvent::Shed(e))) => {
+                    panic!("session {sid} shed during graceful drain: {e}")
+                }
+                Ok(None) => break,
+                Err(_) => panic!("session {sid} never terminated"),
+            }
+        }
+        assert_eq!(tokens, steps, "session {sid} truncated");
+        assert_eq!(done, 1, "exactly one terminal per stream");
+    }
+    let report = engine.shutdown().unwrap();
+    assert_eq!(report.sessions_started, 3);
+    assert_eq!(report.stream_done.len(), 3);
+    assert!(report.stream_shed.is_empty(),
+            "graceful drain must not shed bounded sessions");
+}
+
+#[test]
+fn close_drain_timeout_falls_back_to_the_hard_close() {
+    // the drain budget is a deadline, not a promise: a session that
+    // cannot finish inside it is shed at its next step boundary,
+    // exactly as close() — the engine never hangs on an unbounded
+    // session
+    let spec = SimSpec {
+        batch: 1,
+        base_ms: 2.0,
+        ms_per_capacity: 0.0,
+        jitter_ms: 0.0,
+        ..SimSpec::standard()
+    };
+    let cfg = ServeConfig::sim()
+        .with_workers(1)
+        .with_max_batch_wait(Duration::ZERO);
+    let caps = cfg.capacities();
+    let engine =
+        ElasticEngine::start(cfg, sim::factory(spec, caps)).unwrap();
+    let s = engine.submit_stream(
+        StreamRequest::new(7, vec![1; 4], 100_000));
+    match s.recv_timeout(Duration::from_secs(30)) {
+        Ok(Some(StreamEvent::Token { .. })) => {}
+        other => panic!("want a token, got {other:?}"),
+    }
+    let drained = engine.close_drain(Duration::from_millis(1));
+    assert!(!drained, "a 100k-step session cannot drain in 1ms");
+    let mut shed = None;
+    loop {
+        match s.recv_timeout(Duration::from_secs(30)) {
+            Ok(Some(StreamEvent::Token { .. })) => {}
+            Ok(Some(StreamEvent::Shed(e))) => shed = Some(e),
+            Ok(Some(StreamEvent::Done(_))) => {
+                panic!("a 100k-step session cannot have finished")
+            }
+            Ok(None) => break,
+            Err(_) => panic!("stream never terminated after drain"),
+        }
+    }
+    assert_eq!(shed, Some(ServeError::ShuttingDown));
+    let report = engine.shutdown().unwrap();
+    assert_eq!(report.stream_shed.len(), 1);
+}
+
+#[test]
+fn speculative_sessions_stream_in_order_and_reconcile() {
+    // speculative e2e over the sim's tier-dependent divergence model:
+    // sessions draft at the cheapest tier and verify at the top tier,
+    // clients still see every token in strict step order with exactly
+    // one Done, and the report's speculative ledger reconciles.
+    let spec = SimSpec {
+        batch: 8,
+        seq_len: 16,
+        divergence: 0.2,
+        ..SimSpec::instant()
+    };
+    let cfg = ServeConfig::sim()
+        .with_workers(1)
+        .with_spec_k(3)
+        .with_max_batch_wait(Duration::from_millis(1));
+    let caps = cfg.capacities();
+    let top = caps[0];
+    let engine =
+        ElasticEngine::start(cfg, sim::factory(spec, caps)).unwrap();
+    let steps = 10usize;
+    let streams: Vec<_> = (0..3u64)
+        .map(|id| {
+            engine.submit_stream(StreamRequest::new(id, vec![1; 4], steps))
+        })
+        .collect();
+    let mut saw_draft_tier = false;
+    for s in streams {
+        let sid = s.id();
+        let mut expect_step = 0usize;
+        let mut done = 0usize;
+        loop {
+            match s.recv_timeout(Duration::from_secs(30)) {
+                Ok(Some(StreamEvent::Token { step, tier, .. })) => {
+                    assert_eq!(step, expect_step,
+                               "session {sid}: out-of-order step");
+                    expect_step += 1;
+                    if step > 0 && tier < top {
+                        // a token emitted at a sub-top tier after
+                        // prefill is an accepted draft riding the
+                        // cheap tier
+                        saw_draft_tier = true;
+                    }
+                }
+                Ok(Some(StreamEvent::Done(stats))) => {
+                    done += 1;
+                    assert_eq!(stats.steps, steps);
+                    assert_eq!(stats.tiers.len(), steps);
+                }
+                Ok(Some(StreamEvent::Shed(e))) => {
+                    panic!("session {sid} shed on an open engine: {e}")
+                }
+                Ok(None) => break,
+                Err(_) => panic!("session {sid} never terminated"),
+            }
+        }
+        assert_eq!(expect_step, steps,
+                   "session {sid}: {expect_step} of {steps} tokens");
+        assert_eq!(done, 1, "exactly one terminal per stream");
+    }
+    let report = engine.shutdown().unwrap();
+    assert_eq!(report.stream_done.len(), 3);
+    assert!(report.stream_shed.is_empty());
+    assert!(report.spec_drafted > 0, "speculative engine must draft");
+    assert_eq!(report.spec_drafted,
+               report.spec_accepted + report.spec_rejected,
+               "speculative ledger must reconcile");
+    assert!(report.spec_accepted > 0,
+            "20% divergence must still accept most drafts");
+    assert!(saw_draft_tier,
+            "accepted drafts must stream at the cheap draft tier");
+    let sections = report.spec_sections();
+    assert_eq!(sections.len(), 1);
+    assert_eq!(sections[0].drafted,
+               sections[0].accepted + sections[0].rejected);
+    assert!(report.tokens_per_admission() > 1.0,
+            "healthy acceptance must beat plain decode's 1.0, got {}",
+            report.tokens_per_admission());
+}
+
+/// Executor that makes the draft and verify tiers *always* disagree:
+/// the top tier argmaxes to token 0, every lower tier to token 1 — the
+/// adversarial worst case for speculative decoding.
+struct AlwaysRejectExec {
+    batch: usize,
+    seq_len: usize,
+    top: f32,
+}
+
+impl Executor for AlwaysRejectExec {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+    fn execute(&mut self, tier: f32, _tokens: &[i32])
+               -> Result<ExecOutput> {
+        let row: [f32; 2] = if tier >= self.top - 1e-6 {
+            [1.0, 0.0] // verifier: token 0
+        } else {
+            [0.0, 1.0] // any draft tier: token 1
+        };
+        let mut logits = Vec::with_capacity(self.batch * 2);
+        for _ in 0..self.batch {
+            logits.extend_from_slice(&row);
+        }
+        Ok(ExecOutput { logits })
+    }
+}
+
+#[test]
+fn always_rejected_drafts_shrink_k_and_still_finish_every_session() {
+    // the no-regret floor: with a verifier that rejects every single
+    // proposal, sessions still finish (each verify emits the
+    // verifier's own fallback token), and the per-class accept-rate
+    // EWMA drags the adaptive k to its floor of 1 — so the wasted
+    // drafting is bounded near one proposal per emitted token instead
+    // of spec_k per token.
+    let (batch, seq_len, spec_k) = (8usize, 16usize, 4usize);
+    let cfg = ServeConfig::sim()
+        .with_workers(1)
+        .with_spec_k(spec_k)
+        .with_max_batch_wait(Duration::from_millis(1));
+    let top = cfg.capacities()[0];
+    let engine = ElasticEngine::start(cfg, move |_| {
+        Ok(Box::new(AlwaysRejectExec { batch, seq_len, top })
+            as Box<dyn Executor>)
+    })
+    .unwrap();
+    let (sessions, steps) = (3usize, 8usize);
+    let streams: Vec<_> = (0..sessions as u64)
+        .map(|id| {
+            engine.submit_stream(StreamRequest::new(id, vec![1; 4], steps))
+        })
+        .collect();
+    for s in streams {
+        let stats = s.wait().expect(
+            "total rejection must degrade to plain decode, not kill \
+             the session");
+        assert_eq!(stats.steps, steps);
+    }
+    let report = engine.shutdown().unwrap();
+    assert_eq!(report.stream_done.len(), sessions);
+    assert!(report.stream_shed.is_empty());
+    assert_eq!(report.spec_accepted, 0, "nothing may be accepted");
+    assert!(report.spec_drafted > 0);
+    assert_eq!(report.spec_drafted, report.spec_rejected,
+               "total rejection: drafted == rejected");
+    // every verify emits exactly one fallback token, so there are at
+    // most (steps - 1) cycles per session; the first cycles may draft
+    // up to spec_k before the EWMA reacts, every later cycle drafts
+    // the floor of 1 — comfortably under the all-spec_k worst case
+    let cycles = sessions * (steps - 1);
+    assert!(report.spec_drafted < cycles * spec_k,
+            "adaptive k never shrank: {} drafted over {} cycles \
+             at ceiling {}",
+            report.spec_drafted, cycles, spec_k);
+    assert!(report.spec_drafted <= cycles + sessions * spec_k,
+            "draft waste must be bounded near one per cycle, got {} \
+             over {} cycles", report.spec_drafted, cycles);
+}
+
+#[test]
 fn four_workers_at_least_double_one_worker_throughput() {
     // acceptance gate: same synthetic load, 4 workers vs 1 — requests
     // per wall-second must at least double.  depth_per_tier is huge so
