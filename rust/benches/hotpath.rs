@@ -60,7 +60,9 @@ fn sim_pipeline_bench() -> anyhow::Result<()> {
                      report.throughput_rps(), report.latency_p(0.5),
                      report.latency_p(0.99), report.mean_capacity());
             rows.push(sim::BenchRow { queue: label, workers, shards,
-                                      classes: String::new(), report });
+                                      classes: String::new(),
+                                      fault_rate: 0.0, submitted: 0,
+                                      report });
         }
     }
     // heterogeneous topology: 2 fast workers + 2 slow (4x latency)
@@ -82,6 +84,8 @@ fn sim_pipeline_bench() -> anyhow::Result<()> {
         workers: 4,
         shards: 4,
         classes: "fast=2:slow=2".into(),
+        fault_rate: 0.0,
+        submitted: 0,
         report,
     });
     // streaming decode: 64 concurrent sessions x 16 tokens through
@@ -112,6 +116,8 @@ fn sim_pipeline_bench() -> anyhow::Result<()> {
         workers: 4,
         shards: 4,
         classes: String::new(),
+        fault_rate: 0.0,
+        submitted: 0,
         report,
     });
     // speculative decode: the same sessions, but each admission
@@ -134,6 +140,46 @@ fn sim_pipeline_bench() -> anyhow::Result<()> {
         workers: 4,
         shards: 4,
         classes: String::new(),
+        fault_rate: 0.0,
+        submitted: 0,
+        report,
+    });
+    // chaos injection: the speculative workload under a seeded fault
+    // plan — 10% transient failures skewed toward cheap tiers, plus
+    // one always-poisoned request the quarantine ladder must shed —
+    // and the row records availability plus the fault-ladder economy.
+    let fault_rate = 0.1;
+    let fault_spec = SimSpec {
+        fault: elastiformer::coordinator::serving::FaultPlan {
+            fail_p: fault_rate,
+            tier_bias: 0.5,
+            poison_token: 661,
+            ..Default::default()
+        },
+        ..spec_spec
+    };
+    let (fault_n, fault_sessions) = (256usize, 16usize);
+    let report = sim::faults_point(fault_spec, 4, 4, fault_n,
+                                   fault_sessions, decode_steps, 4)?;
+    let served = report.completions.len() + report.stream_done.len();
+    let submitted = fault_n + fault_sessions;
+    let (mut retries, mut poisoned, mut respawns) = (0usize, 0usize, 0usize);
+    for s in report.fault_sections() {
+        retries += s.retries;
+        poisoned += s.poisoned;
+        respawns += s.respawns;
+    }
+    println!("sim_serving_faults_p{fault_rate}   \
+              availability {:.4}  retries {retries}  \
+              poisoned {poisoned}  respawns {respawns}",
+             served as f64 / submitted as f64);
+    rows.push(sim::BenchRow {
+        queue: "faults",
+        workers: 4,
+        shards: 4,
+        classes: String::new(),
+        fault_rate,
+        submitted,
         report,
     });
     let path = std::path::Path::new(

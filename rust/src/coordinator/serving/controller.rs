@@ -37,6 +37,36 @@
 use super::batcher::floor_rung;
 use super::tier_matches;
 
+/// EWMA weight on each batch-health observation feeding the breaker.
+const FAIL_ALPHA: f64 = 0.3;
+/// failure-rate EWMA above which a Closed breaker trips Open
+const OPEN_AT: f64 = 0.5;
+/// minimum observations before the breaker is allowed to trip — a
+/// single failed first batch must not brown out a cold class
+const MIN_OBS: usize = 4;
+/// worker pop-cycles an Open breaker waits before probing Half-open
+const COOLDOWN_TICKS: usize = 16;
+/// accept-rate EWMA below which draft tier escalates one rung
+const DRAFT_ESCALATE_BELOW: f64 = 0.5;
+
+/// Per-class circuit-breaker state, driven by the failure-rate EWMA
+/// over batch outcomes ([`CapacityController::observe_batch_outcome`]).
+///
+///  * **Closed** — healthy: batches run at the controller's chosen
+///    tier.
+///  * **Open** — tripped: the class backs off the queue and serves
+///    whatever it still pops in *brownout* (cheapest floored tier);
+///    after a cooldown of [`COOLDOWN_TICKS`] pop-cycles it probes.
+///  * **HalfOpen** — probing: batches run at the NORMAL tier (recovery
+///    must be tested at real quality, not at brownout quality); one
+///    healthy batch closes the breaker, one failure re-opens it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
 /// See module docs.  Invariants (property-tested in
 /// `tests/properties.rs`):
 ///  * `tier_for_depth` is monotone non-increasing in depth
@@ -61,6 +91,17 @@ pub struct CapacityController {
     /// resolutions on this class; `None` until the first verify
     accept_ewma: Option<f64>,
     accept_alpha: f64,
+    /// failure-rate EWMA over batch outcomes (1.0 = every batch saw a
+    /// transient fault), the breaker's trip signal
+    fail_ewma: f64,
+    /// batch outcomes observed since the last Closed reset (the
+    /// breaker needs [`MIN_OBS`] before it may trip)
+    fail_obs: usize,
+    breaker: BreakerState,
+    /// pop-cycles left before an Open breaker probes Half-open
+    cooldown: usize,
+    /// Closed → Open transitions over this controller's lifetime
+    trips: usize,
 }
 
 impl CapacityController {
@@ -82,6 +123,11 @@ impl CapacityController {
             exec_alpha: 0.3,
             accept_ewma: None,
             accept_alpha: 0.4,
+            fail_ewma: 0.0,
+            fail_obs: 0,
+            breaker: BreakerState::Closed,
+            cooldown: 0,
+            trips: 0,
         }
     }
 
@@ -212,6 +258,83 @@ impl CapacityController {
                 1 + extra.round() as usize
             }
         }
+    }
+
+    /// Which tier a draft batch should run at, given the batch's
+    /// strictest quality floor.  Normally the cheapest floored rung —
+    /// speculation exists to make drafting cheap — but when the
+    /// learned accept rate is persistently low
+    /// (< [`DRAFT_ESCALATE_BELOW`]), the cheap proposals are mostly
+    /// being thrown away at verification, so drafting one rung higher
+    /// buys agreement instead of burning verify passes.  Unobserved
+    /// classes stay optimistic (cheapest rung), like cold-start exec
+    /// estimates.
+    pub fn draft_tier(&self, floor: f32) -> f32 {
+        let base = floor_rung(&self.tiers, floor);
+        match self.accept_ewma {
+            Some(rate) if rate < DRAFT_ESCALATE_BELOW && base > 0 => {
+                self.tiers[base - 1]
+            }
+            _ => self.tiers[base],
+        }
+    }
+
+    /// Feed back one executed batch's *health* (did the fault ladder
+    /// see any transient failure?) and drive the breaker state
+    /// machine.  Called by workers once per batch — including the
+    /// batches a Half-open probe serves, whose outcome decides between
+    /// closing and re-opening.
+    pub fn observe_batch_outcome(&mut self, ok: bool) {
+        let sample = if ok { 0.0 } else { 1.0 };
+        self.fail_ewma =
+            FAIL_ALPHA * sample + (1.0 - FAIL_ALPHA) * self.fail_ewma;
+        self.fail_obs += 1;
+        match self.breaker {
+            BreakerState::Closed => {
+                if self.fail_obs >= MIN_OBS && self.fail_ewma > OPEN_AT {
+                    self.breaker = BreakerState::Open;
+                    self.trips += 1;
+                    self.cooldown = COOLDOWN_TICKS;
+                }
+            }
+            BreakerState::HalfOpen => {
+                if ok {
+                    // recovery confirmed at real quality: reset the
+                    // trip signal so old faults never count twice
+                    self.breaker = BreakerState::Closed;
+                    self.fail_ewma = 0.0;
+                    self.fail_obs = 0;
+                } else {
+                    self.breaker = BreakerState::Open;
+                    self.cooldown = COOLDOWN_TICKS;
+                }
+            }
+            // Open transitions only via breaker_tick's cooldown
+            BreakerState::Open => {}
+        }
+    }
+
+    /// One worker pop-cycle: burn cooldown while Open (reaching zero
+    /// moves to Half-open — time to probe) and return the state the
+    /// cycle should serve under.
+    pub fn breaker_tick(&mut self) -> BreakerState {
+        if self.breaker == BreakerState::Open {
+            self.cooldown = self.cooldown.saturating_sub(1);
+            if self.cooldown == 0 {
+                self.breaker = BreakerState::HalfOpen;
+            }
+        }
+        self.breaker
+    }
+
+    /// Current breaker state, without ticking.
+    pub fn breaker_state(&self) -> BreakerState {
+        self.breaker
+    }
+
+    /// Closed → Open transitions so far (report material).
+    pub fn breaker_trips(&self) -> usize {
+        self.trips
     }
 
     /// Pure mapping (for tests / property checks): tier for a given
@@ -364,6 +487,85 @@ mod tests {
         // zero-draft observations are ignored (no division blowup)
         cold.observe_accept(5, 0);
         assert_eq!(cold.accept_rate(), Some(0.0));
+    }
+
+    #[test]
+    fn breaker_trips_after_min_obs_and_cools_to_half_open() {
+        let mut c = CapacityController::new(vec![1.0, 0.5], 4.0);
+        assert_eq!(c.breaker_state(), BreakerState::Closed);
+        // three straight failures: EWMA is high but MIN_OBS unmet
+        for _ in 0..MIN_OBS - 1 {
+            c.observe_batch_outcome(false);
+        }
+        assert_eq!(c.breaker_state(), BreakerState::Closed,
+                   "must not trip before MIN_OBS observations");
+        c.observe_batch_outcome(false);
+        assert_eq!(c.breaker_state(), BreakerState::Open);
+        assert_eq!(c.breaker_trips(), 1);
+        // Open holds through the cooldown, then probes
+        for _ in 0..COOLDOWN_TICKS - 1 {
+            assert_eq!(c.breaker_tick(), BreakerState::Open);
+        }
+        assert_eq!(c.breaker_tick(), BreakerState::HalfOpen);
+    }
+
+    #[test]
+    fn half_open_probe_closes_on_success_reopens_on_failure() {
+        let mut c = CapacityController::new(vec![1.0], 1.0);
+        for _ in 0..MIN_OBS {
+            c.observe_batch_outcome(false);
+        }
+        for _ in 0..COOLDOWN_TICKS {
+            c.breaker_tick();
+        }
+        assert_eq!(c.breaker_state(), BreakerState::HalfOpen);
+        // failed probe: straight back to Open, full cooldown again
+        c.observe_batch_outcome(false);
+        assert_eq!(c.breaker_state(), BreakerState::Open);
+        assert_eq!(c.breaker_trips(), 1,
+                   "a re-open from Half-open is not a new trip");
+        for _ in 0..COOLDOWN_TICKS {
+            c.breaker_tick();
+        }
+        // healthy probe: Closed with the trip signal reset, so the
+        // next trip needs MIN_OBS fresh failures
+        c.observe_batch_outcome(true);
+        assert_eq!(c.breaker_state(), BreakerState::Closed);
+        c.observe_batch_outcome(false);
+        assert_eq!(c.breaker_state(), BreakerState::Closed,
+                   "old faults must not count after recovery");
+    }
+
+    #[test]
+    fn healthy_stream_never_trips_the_breaker() {
+        let mut c = CapacityController::new(vec![1.0, 0.5], 4.0);
+        for _ in 0..100 {
+            c.observe_batch_outcome(true);
+        }
+        // a lone fault in a long healthy run stays Closed
+        c.observe_batch_outcome(false);
+        assert_eq!(c.breaker_state(), BreakerState::Closed);
+        assert_eq!(c.breaker_trips(), 0);
+    }
+
+    #[test]
+    fn draft_tier_escalates_one_rung_under_rejection() {
+        let mut c =
+            CapacityController::new(vec![1.0, 0.75, 0.5, 0.25], 4.0);
+        // cold start: optimistic, cheapest floored rung
+        assert_eq!(c.draft_tier(0.0), 0.25);
+        assert_eq!(c.draft_tier(0.5), 0.5);
+        // high accept rate keeps the cheap rung
+        c.observe_accept(4, 4);
+        assert_eq!(c.draft_tier(0.0), 0.25);
+        // persistent rejection escalates exactly one rung
+        for _ in 0..16 {
+            c.observe_accept(0, 4);
+        }
+        assert_eq!(c.draft_tier(0.0), 0.5);
+        assert_eq!(c.draft_tier(0.5), 0.75);
+        // the top rung has nowhere to escalate to
+        assert_eq!(c.draft_tier(1.0), 1.0);
     }
 
     #[test]

@@ -99,14 +99,14 @@ pub use batcher::{
     batch_key, batch_key_for, floor_rung, form_batch, form_rows, Batch,
     BatchKey, StepKind,
 };
-pub use controller::CapacityController;
+pub use controller::{BreakerState, CapacityController};
 pub use queue::{AdmissionQueue, TryPushError};
 pub use report::{
-    ClassStats, Completion, ServeReport, ShedCause, ShedRecord,
-    SpecSection, StreamSection, StreamShedRecord, WorkerClassInfo,
-    WorkerClassStats,
+    ClassStats, Completion, FaultSection, ServeReport, ShedCause,
+    ShedRecord, SpecSection, StreamSection, StreamShedRecord,
+    WorkerClassInfo, WorkerClassStats,
 };
-pub use sim::{SimExecutor, SimSpec};
+pub use sim::{FaultPlan, SimExecutor, SimSpec};
 pub use stream::arena::SessionArena;
 pub use stream::{
     DecodeSession, StreamEvent, StreamRequest, StreamResponse,
@@ -117,6 +117,8 @@ pub use worker::{ExecOutput, Executor};
 pub use worker::XlaExecutor;
 
 use std::fmt;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -244,6 +246,77 @@ impl fmt::Debug for WorkerClass {
     }
 }
 
+/// Fault-tolerance policy for the fleet: how hard workers fight before
+/// giving up on a batch, and how often a class may rebuild a crashed
+/// executor before its workers are allowed to die.
+///
+/// Executor errors are classified in two kinds.  **Transient** errors
+/// (any plain `Err` from [`Executor::execute`]) are retried with
+/// bounded exponential backoff; a batch still failing after the
+/// retries is *bisected* and the halves retried independently, so a
+/// single poison request is quarantined (resolved with
+/// [`ServeError::Poisoned`]) while its co-batched neighbours survive.
+/// **Fatal** errors (a panic inside `execute`, or an error chain
+/// carrying a [`FatalExecError`]) mean the executor itself is gone:
+/// the worker's in-flight items are requeued and its supervisor
+/// rebuilds the executor through the class factory — at most
+/// `restart_budget` times per class — before the worker is allowed to
+/// die.  Only when the *last* live worker dies does the engine close.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultPolicy {
+    /// transient-failure retries per (sub-)batch before bisection;
+    /// 0 = bisect on the first failure
+    pub max_retries: usize,
+    /// base backoff before retry `n` (doubling per retry, capped at
+    /// 64x); 0 disables the sleep entirely (hermetic tests)
+    pub backoff_ms: u64,
+    /// executor rebuilds each worker *class* may spend on fatal
+    /// faults before its crashing workers are allowed to die;
+    /// 0 = never respawn (every fatal fault kills its worker)
+    pub restart_budget: usize,
+}
+
+impl FaultPolicy {
+    pub fn with_max_retries(mut self, retries: usize) -> FaultPolicy {
+        self.max_retries = retries;
+        self
+    }
+
+    pub fn with_backoff_ms(mut self, ms: u64) -> FaultPolicy {
+        self.backoff_ms = ms;
+        self
+    }
+
+    pub fn with_restart_budget(mut self, budget: usize) -> FaultPolicy {
+        self.restart_budget = budget;
+        self
+    }
+}
+
+impl Default for FaultPolicy {
+    fn default() -> FaultPolicy {
+        FaultPolicy { max_retries: 2, backoff_ms: 1, restart_budget: 4 }
+    }
+}
+
+/// Marker error for **fatal** executor faults: wrap (or chain) one of
+/// these in the `Err` returned by [`Executor::execute`] to tell the
+/// worker its backend is unrecoverable — no retry, no bisection; the
+/// batch is requeued and the supervisor rebuilds the executor under
+/// the class's [`FaultPolicy::restart_budget`].  A panic inside
+/// `execute` is treated identically.  Plain `Err`s without this
+/// marker are transient and go through the retry/bisect ladder.
+#[derive(Debug, Clone)]
+pub struct FatalExecError(pub String);
+
+impl fmt::Display for FatalExecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "fatal executor fault: {}", self.0)
+    }
+}
+
+impl std::error::Error for FatalExecError {}
+
 /// Engine configuration.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -280,6 +353,9 @@ pub struct ServeConfig {
     /// plain one-token decode.  The effective per-batch `k` adapts to
     /// the class's learned accept rate, never exceeding this ceiling.
     pub spec_k: usize,
+    /// retry/backoff, poison-quarantine and respawn policy (see
+    /// [`FaultPolicy`])
+    pub fault_policy: FaultPolicy,
 }
 
 impl ServeConfig {
@@ -301,6 +377,7 @@ impl ServeConfig {
             worker_classes: Vec::new(),
             arena_pages: 64,
             spec_k: 0,
+            fault_policy: FaultPolicy::default(),
         }
     }
 
@@ -341,6 +418,14 @@ impl ServeConfig {
     /// per admission (0 disables it — plain one-token decode).
     pub fn with_spec_k(mut self, k: usize) -> ServeConfig {
         self.spec_k = k;
+        self
+    }
+
+    /// Override the fleet's fault-tolerance policy (retry count,
+    /// backoff base, per-class restart budget).
+    pub fn with_fault_policy(mut self, policy: FaultPolicy)
+                             -> ServeConfig {
+        self.fault_policy = policy;
         self
     }
 
@@ -398,6 +483,11 @@ pub enum ServeError {
     Dropped,
     /// the executor failed on the request's batch
     ExecFailed(String),
+    /// the request was quarantined: its batch kept failing through the
+    /// retry/bisect ladder until this request alone still failed — it
+    /// is the poison, and it was shed so its co-batched neighbours
+    /// could be served
+    Poisoned(String),
 }
 
 impl fmt::Display for ServeError {
@@ -414,6 +504,9 @@ impl fmt::Display for ServeError {
             }
             ServeError::ExecFailed(msg) => {
                 write!(f, "executor failed: {msg}")
+            }
+            ServeError::Poisoned(msg) => {
+                write!(f, "request quarantined as poison: {msg}")
             }
         }
     }
@@ -679,6 +772,52 @@ pub(crate) struct EngineShared {
     /// `drafted == accepted + rejected` holds even when a session is
     /// shed mid-draft
     pub spec: Vec<stream::spec::SpecCounters>,
+    /// fleet fault-tolerance policy (retries, backoff, restart budget)
+    pub policy: FaultPolicy,
+    /// workers still running (init failures and abnormal deaths both
+    /// decrement); the admission queue closes only when this hits 0 —
+    /// one dead worker is a capacity loss, not an outage
+    pub live_workers: AtomicUsize,
+    /// per-class supervision state, indexed by class id
+    pub health: Vec<ClassHealth>,
+    /// per-class fault-ladder counters, indexed by class id
+    pub faults: Vec<FaultStats>,
+}
+
+/// Per-class supervision state: how many workers failed to init, how
+/// many restart tokens remain, and how many respawns were spent.
+#[derive(Debug)]
+pub(crate) struct ClassHealth {
+    /// workers of this class that never finished init (factory error,
+    /// ladder mismatch, or startup panic) — a class whose every worker
+    /// fails init still fails `start` outright
+    pub init_failures: AtomicUsize,
+    /// restart tokens left (seeded from `FaultPolicy::restart_budget`)
+    pub restarts_left: AtomicUsize,
+    /// executors successfully rebuilt after a fatal fault
+    pub respawns: AtomicUsize,
+}
+
+impl ClassHealth {
+    fn new(budget: usize) -> ClassHealth {
+        ClassHealth {
+            init_failures: AtomicUsize::new(0),
+            restarts_left: AtomicUsize::new(budget),
+            respawns: AtomicUsize::new(0),
+        }
+    }
+}
+
+/// Per-class counters for the retry → bisect → quarantine ladder,
+/// mirrored into [`WorkerClassInfo`] at shutdown.
+#[derive(Debug, Default)]
+pub(crate) struct FaultStats {
+    /// transient execute failures that were retried
+    pub retries: AtomicUsize,
+    /// batch bisections after retries were exhausted
+    pub splits: AtomicUsize,
+    /// units (requests / sessions) quarantined as poison
+    pub poisoned: AtomicUsize,
 }
 
 impl EngineShared {
@@ -689,6 +828,15 @@ impl EngineShared {
     pub(crate) fn recycle_session(&self, session: u64) {
         for arena in &self.arenas {
             arena.recycle(session);
+        }
+    }
+
+    /// One worker is gone (init failure or death, clean or not).
+    /// Closes the admission queue only when the LAST live worker goes:
+    /// a fleet with any worker left keeps serving — degraded, not dead.
+    pub(crate) fn note_worker_dead(&self) {
+        if self.live_workers.fetch_sub(1, Ordering::SeqCst) == 1 {
+            self.queue.close();
         }
     }
 }
@@ -791,6 +939,13 @@ impl ElasticEngine {
                 .iter()
                 .map(|_| stream::spec::SpecCounters::new())
                 .collect(),
+            policy: cfg.fault_policy,
+            live_workers: AtomicUsize::new(workers),
+            health: classes
+                .iter()
+                .map(|_| ClassHealth::new(cfg.fault_policy.restart_budget))
+                .collect(),
+            faults: classes.iter().map(|_| FaultStats::default()).collect(),
         });
         let init = Arc::new(InitLatch::new());
         let caps = Arc::new(caps);
@@ -806,28 +961,29 @@ impl ElasticEngine {
                 let spawned = std::thread::Builder::new()
                     .name(format!("elastic-{cname}-{w}"))
                     .spawn(move || {
-                        // Abnormal exit (Err *or* panic, before or after
-                        // init) must close the queue — else submitters
-                        // block forever on a dead fleet — and must report
-                        // to the init latch exactly once so `start` never
-                        // hangs.
-                        let mut guard = WorkerGuard {
+                        // Every exit — clean drain, init failure, or
+                        // death after exhausting the restart budget —
+                        // decrements the live-worker gauge; the LAST
+                        // worker out closes the queue so submitters
+                        // never block on a dead fleet.  The watch also
+                        // reports to the init latch exactly once, so
+                        // `start` never hangs on a panicking factory.
+                        let mut watch = DeathWatch {
                             shared: shared.clone(),
                             init: init.clone(),
                             worker: w,
+                            class_idx: ci,
                             reported: false,
-                            clean_exit: false,
                         };
                         // executor built on this thread: PJRT handles
                         // never cross a thread boundary
                         let mut exec = match (factory.as_ref())(w) {
                             Ok(e) => e,
                             Err(e) => {
-                                guard.reported = true;
-                                init.arrive(Some(format!(
+                                watch.fail_init(format!(
                                     "worker {w} ({cname}): executor \
-                                     init: {e:#}")));
-                                return; // guard closes the queue
+                                     init: {e:#}"));
+                                return;
                             }
                         };
                         // a ladder mismatch between ServeConfig and the
@@ -835,24 +991,53 @@ impl ElasticEngine {
                         // mid-run
                         for &c in caps.iter() {
                             if !exec.supports(c) {
-                                guard.reported = true;
-                                init.arrive(Some(format!(
+                                watch.fail_init(format!(
                                     "worker {w} ({cname}): {} executor \
                                      does not support configured tier {c}",
-                                    exec.name())));
-                                return; // guard closes the queue
+                                    exec.name()));
+                                return;
                             }
                         }
-                        guard.reported = true;
+                        watch.reported = true;
                         init.arrive(None);
-                        match worker::run_worker(&shared, w, ci,
-                                                 exec.as_mut()) {
-                            Ok(_batches) => guard.clean_exit = true,
-                            Err(e) => {
-                                shared.errors.lock().unwrap().push(format!(
-                                    "worker {w} ({cname}): execution: \
-                                     {e:#}"));
-                                // guard closes the queue
+                        // Supervised serve loop: a FATAL worker fault
+                        // (panic inside execute, or a FatalExecError in
+                        // the chain) hands the in-flight batch back
+                        // here instead of killing the engine.  While
+                        // the class has restart tokens, the executor is
+                        // rebuilt through the factory and the batch
+                        // requeued (pinned sessions re-home via the
+                        // same requeue_to path stealing already uses);
+                        // once the budget is spent, the batch resolves
+                        // and the worker dies — the watch closes the
+                        // queue only if it was the last one alive.
+                        loop {
+                            match worker::run_worker(&shared, w, ci,
+                                                     exec.as_mut()) {
+                                Ok(_batches) => break, // closed + drained
+                                Err(fault) => {
+                                    shared.errors.lock().unwrap().push(
+                                        format!(
+                                            "worker {w} ({cname}): \
+                                             execution: {}", fault.msg));
+                                    match respawn_executor(
+                                        factory.as_ref(), &shared, &caps,
+                                        w, ci, &cname)
+                                    {
+                                        Some(fresh) => {
+                                            exec = fresh;
+                                            requeue_inflight(
+                                                &shared, fault.inflight,
+                                                &cname);
+                                        }
+                                        None => {
+                                            worker::fail_batch(
+                                                &shared, fault.inflight,
+                                                &fault.msg, &cname);
+                                            break; // watch notes death
+                                        }
+                                    }
+                                }
                             }
                         }
                     });
@@ -874,12 +1059,26 @@ impl ElasticEngine {
         // serving clock starts at readiness, not at spawn
         let failures = init.wait_for(workers);
         if !failures.is_empty() {
-            shared.queue.close();
-            for t in threads {
-                let _ = t.join();
+            // Degraded start: a class that kept at least one initialized
+            // worker serves on at reduced capacity (the init errors are
+            // recorded for the report's worker_errors).  Only a class
+            // whose EVERY worker failed init is unservable — floored
+            // traffic routed to it would hang — so that still aborts.
+            let zero_class = shared.classes.iter().enumerate().any(
+                |(ci, (_, n))| {
+                    shared.health[ci].init_failures.load(Ordering::SeqCst)
+                        >= *n
+                });
+            if zero_class {
+                shared.queue.close();
+                for t in threads {
+                    let _ = t.join();
+                }
+                anyhow::bail!("{}/{workers} workers failed to start: {}",
+                              failures.len(), failures.join(" | "));
             }
-            anyhow::bail!("{}/{workers} workers failed to start: {}",
-                          failures.len(), failures.join(" | "));
+            shared.errors.lock().unwrap()
+                .extend(failures.iter().cloned());
         }
         Ok(EngineHandle {
             shared,
@@ -1155,7 +1354,7 @@ impl EngineHandle {
                 .unwrap()
                 .append(&mut engine_stream_sheds);
         }
-        let mut errors =
+        let errors =
             std::mem::take(&mut *self.shared.errors.lock().unwrap());
         let completions =
             std::mem::take(&mut *self.shared.completions.lock().unwrap());
@@ -1165,12 +1364,20 @@ impl EngineHandle {
             std::mem::take(&mut *self.shared.stream_done.lock().unwrap());
         let stream_shed =
             std::mem::take(&mut *self.shared.stream_shed.lock().unwrap());
+        // Worker-level faults are a fleet health record, not a failure
+        // of THIS call: every response above was resolved exactly once,
+        // so the report is complete and the errors ride along in
+        // `worker_errors` for post-mortems.  Only a join-level panic —
+        // an unwind that escaped the supervision loop itself — still
+        // makes shutdown fail.
         if panics > 0 {
-            errors.push(format!("{panics} worker(s) panicked"));
-        }
-        if !errors.is_empty() {
-            anyhow::bail!("{} worker failure(s): {}", errors.len(),
-                          errors.join(" | "));
+            anyhow::bail!("{panics} worker(s) panicked{}",
+                          if errors.is_empty() {
+                              String::new()
+                          } else {
+                              format!(" ({} recorded fault(s): {})",
+                                      errors.len(), errors.join(" | "))
+                          });
         }
         let wall = self.started.elapsed().as_secs_f64();
         // snapshot each class's learned latency model into the report:
@@ -1182,17 +1389,29 @@ impl EngineHandle {
             .zip(self.shared.controllers.iter())
             .zip(self.shared.arenas.iter())
             .zip(self.shared.spec.iter())
-            .map(|((((name, workers), ctl), arena), spec)| {
+            .zip(self.shared.faults.iter())
+            .zip(self.shared.health.iter())
+            .map(|((((((name, workers), ctl), arena), spec), faults),
+                   health)| {
+                let (exec_estimates_ms, breaker_trips) = {
+                    let ctl = ctl.lock().unwrap();
+                    (ctl.exec_estimates(), ctl.breaker_trips())
+                };
                 WorkerClassInfo {
                     name: name.clone(),
                     workers: *workers,
-                    exec_estimates_ms: ctl.lock().unwrap().exec_estimates(),
+                    exec_estimates_ms,
                     cache_hits: arena.hits(),
                     cache_misses: arena.misses(),
                     drafted: spec.drafted(),
                     accepted: spec.accepted(),
                     rejected: spec.rejected(),
                     verifies: spec.verifies(),
+                    retries: faults.retries.load(Ordering::SeqCst),
+                    splits: faults.splits.load(Ordering::SeqCst),
+                    poisoned: faults.poisoned.load(Ordering::SeqCst),
+                    respawns: health.respawns.load(Ordering::SeqCst),
+                    breaker_trips,
                 }
             })
             .collect();
@@ -1210,7 +1429,8 @@ impl EngineHandle {
                           stream_done, stream_shed)
             .with_cache(hits, misses)
             .with_spec(drafted, accepted, rejected,
-                       self.shared.sessions.step_items()))
+                       self.shared.sessions.step_items())
+            .with_worker_errors(errors))
     }
 }
 
@@ -1257,26 +1477,135 @@ impl InitLatch {
     }
 }
 
-/// Worker-thread drop guard: on any abnormal exit (error return or
-/// panic, before or after init) it closes the admission queue so no
-/// submitter or sibling blocks forever, and reports to the init latch
-/// if this thread has not yet (exactly-once, so `start` cannot hang).
-struct WorkerGuard {
+/// Worker-thread drop guard: every exit — clean drain, init failure,
+/// supervised death, or an unwinding panic that escaped supervision —
+/// decrements the fleet's live-worker gauge exactly once, so the
+/// admission queue closes only when the LAST worker is gone (one dead
+/// worker is lost capacity, not an outage).  It also reports to the
+/// init latch if this thread has not yet (exactly-once, so `start`
+/// cannot hang on a panicking factory).
+struct DeathWatch {
     shared: Arc<EngineShared>,
     init: Arc<InitLatch>,
     worker: usize,
+    class_idx: usize,
     reported: bool,
-    clean_exit: bool,
 }
 
-impl Drop for WorkerGuard {
+impl DeathWatch {
+    /// Record an init failure (factory error or ladder mismatch) and
+    /// report it to the latch; the caller returns right after, so the
+    /// drop decrements the live gauge.
+    fn fail_init(&mut self, msg: String) {
+        self.shared.health[self.class_idx]
+            .init_failures
+            .fetch_add(1, Ordering::SeqCst);
+        self.reported = true;
+        self.init.arrive(Some(msg));
+    }
+}
+
+impl Drop for DeathWatch {
     fn drop(&mut self) {
-        if !self.clean_exit {
-            self.shared.queue.close();
-        }
         if !self.reported {
+            // factory panic: counts as an init failure for the
+            // degraded-start census, and the latch must still hear
+            // about it or `start` hangs
+            self.shared.health[self.class_idx]
+                .init_failures
+                .fetch_add(1, Ordering::SeqCst);
             self.init.arrive(Some(format!(
                 "worker {} died during startup", self.worker)));
+        }
+        self.shared.note_worker_dead();
+    }
+}
+
+/// Try to rebuild a dead worker's executor through its class factory,
+/// spending one restart token from the class budget.  Returns `None`
+/// when the budget is exhausted or the rebuild itself fails (the token
+/// is consumed either way — a factory that fails on respawn should not
+/// get unlimited attempts).  The factory call is unwind-caught: a
+/// panicking factory is a failed respawn, not a dead supervisor.
+fn respawn_executor(factory: &ExecutorFactory, shared: &EngineShared,
+                    caps: &[f32], worker: usize, class_idx: usize,
+                    cname: &str) -> Option<Box<dyn Executor>> {
+    let health = &shared.health[class_idx];
+    if health
+        .restarts_left
+        .fetch_update(Ordering::SeqCst, Ordering::SeqCst,
+                      |n| n.checked_sub(1))
+        .is_err()
+    {
+        shared.errors.lock().unwrap().push(format!(
+            "worker {worker} ({cname}): restart budget exhausted"));
+        return None;
+    }
+    let rebuilt =
+        std::panic::catch_unwind(AssertUnwindSafe(|| factory(worker)));
+    let exec = match rebuilt {
+        Ok(Ok(exec)) => exec,
+        Ok(Err(e)) => {
+            shared.errors.lock().unwrap().push(format!(
+                "worker {worker} ({cname}): respawn failed: {e:#}"));
+            return None;
+        }
+        Err(_) => {
+            shared.errors.lock().unwrap().push(format!(
+                "worker {worker} ({cname}): respawn factory panicked"));
+            return None;
+        }
+    };
+    // same ladder probe as startup: a rebuilt executor that lost a
+    // tier would fault again on the first floored batch
+    for &c in caps {
+        if !exec.supports(c) {
+            shared.errors.lock().unwrap().push(format!(
+                "worker {worker} ({cname}): respawned executor does \
+                 not support configured tier {c}"));
+            return None;
+        }
+    }
+    health.respawns.fetch_add(1, Ordering::SeqCst);
+    Some(exec)
+}
+
+/// Put a faulted worker's in-flight batch back on the queue so the
+/// respawned executor (or a stealing sibling) serves it.  Streaming
+/// steps re-home to their pinned shard via `requeue_to` — the same
+/// path stealing uses — so arena affinity survives the respawn.  If
+/// the queue closed meanwhile (fleet-wide teardown won the race), the
+/// items resolve as `ShuttingDown`, never leak.
+fn requeue_inflight(shared: &EngineShared, items: Vec<Pending>,
+                    class_name: &str) {
+    for p in items {
+        let urgent = p.req.slo.deadline.is_some();
+        let pin = match &p.outcome {
+            Outcome::Stream(st) => Some(st.shard),
+            Outcome::OneShot(_) => None,
+        };
+        let stale = match pin {
+            Some(shard) => shared.queue.requeue_to(shard, p, urgent),
+            None => shared.queue.requeue(p, urgent),
+        };
+        if let Err(p) = stale {
+            shared.sheds.lock().unwrap().push(ShedRecord {
+                id: p.req.id,
+                class: p.req.slo.name.clone(),
+                worker_class: class_name.to_string(),
+                cause: ShedCause::ShuttingDown,
+            });
+            match p.outcome {
+                Outcome::OneShot(responder) => {
+                    responder.fulfil(Err(ServeError::ShuttingDown));
+                }
+                Outcome::Stream(st) => {
+                    shared.sessions.shed(st.session,
+                                         ServeError::ShuttingDown,
+                                         class_name);
+                    shared.recycle_session(st.session);
+                }
+            }
         }
     }
 }
@@ -1423,9 +1752,9 @@ mod tests {
 
     #[test]
     fn start_surfaces_factory_panics_instead_of_hanging() {
-        // the WorkerGuard must close the queue and report to the init
-        // latch on a panicking factory, so start() returns Err instead
-        // of blocking forever on a latch nobody will arrive at
+        // the DeathWatch must report to the init latch on a panicking
+        // factory, so start() returns Err instead of blocking forever
+        // on a latch nobody will arrive at
         let err = ElasticEngine::start(
             ServeConfig::sim().with_workers(1),
             |_| panic!("factory blew up"))
@@ -1482,10 +1811,12 @@ mod tests {
     }
 
     #[test]
-    fn submit_after_worker_death_resolves_not_hangs() {
-        // factory succeeds, executor fails on the first batch: the
-        // worker dies and closes the queue, so later submits must
-        // resolve with ShuttingDown instead of blocking forever
+    fn always_failing_executor_quarantines_requests_not_the_engine() {
+        // factory succeeds, executor fails every batch transiently:
+        // the retry ladder exhausts, the singleton is quarantined as
+        // poison — and the ENGINE STAYS UP.  Later submits resolve
+        // Poisoned too, never ShuttingDown (pre-supervision, the
+        // first failure killed the worker and closed the queue)
         struct FailExec;
         impl Executor for FailExec {
             fn batch(&self) -> usize {
@@ -1500,18 +1831,160 @@ mod tests {
             }
         }
         let engine = ElasticEngine::start(
-            ServeConfig::sim().with_workers(1),
+            ServeConfig::sim().with_workers(1).with_fault_policy(
+                FaultPolicy::default().with_backoff_ms(0)),
             |_| Ok(Box::new(FailExec) as Box<dyn Executor>))
             .unwrap();
         let first = engine.submit(Request::new(0, vec![0; 4]));
         match first.wait() {
-            Err(ServeError::ExecFailed(msg)) => {
+            Err(ServeError::Poisoned(msg)) => {
                 assert!(msg.contains("backend exploded"), "{msg}");
+            }
+            other => panic!("want Poisoned, got {other:?}"),
+        }
+        assert!(!engine.shared.queue.is_closed(),
+                "a transient-faulting batch must not kill the fleet");
+        let late = engine.submit(Request::new(1, vec![0; 4]));
+        match late.wait_timeout(Duration::from_secs(5)) {
+            Some(Err(ServeError::Poisoned(_))) => {}
+            other => panic!("want Poisoned, got {other:?}"),
+        }
+        let report = engine
+            .shutdown()
+            .expect("absorbed transient faults must not fail shutdown");
+        let faults = report.fault_sections();
+        assert_eq!(faults.len(), 1, "one faulting class");
+        assert_eq!(faults[0].poisoned, 2, "both submits quarantined");
+        assert!(faults[0].retries >= 2,
+                "each quarantine rode the retry ladder first");
+        assert_eq!(
+            report.sheds.iter()
+                .filter(|s| s.cause == ShedCause::Poisoned)
+                .count(),
+            2, "poisoned sheds are logged with their own cause");
+    }
+
+    #[test]
+    fn degraded_start_tolerates_partial_init_with_a_surviving_worker() {
+        // one of two workers fails init: the class still has capacity,
+        // so the engine starts degraded — the failure is recorded in
+        // worker_errors, and the surviving worker serves everything
+        let spec = SimSpec::instant();
+        let caps = ServeConfig::sim().capacities();
+        let engine = ElasticEngine::start(
+            ServeConfig::sim().with_workers(2),
+            move |w| {
+                if w == 1 {
+                    anyhow::bail!("no device for worker {w}");
+                }
+                Ok(Box::new(SimExecutor::new(spec, &caps, w))
+                    as Box<dyn Executor>)
+            })
+            .unwrap();
+        let responses: Vec<Response> = (0..8u64)
+            .map(|id| engine.submit(Request::new(id, vec![0; spec.seq_len])))
+            .collect();
+        for r in responses {
+            r.wait().expect("degraded fleet must still serve");
+        }
+        let report = engine.shutdown().unwrap();
+        assert_eq!(report.completions.len(), 8);
+        assert!(report.worker_errors.iter().any(
+                    |e| e.contains("no device")),
+                "init failure must be recorded: {:?}",
+                report.worker_errors);
+    }
+
+    #[test]
+    fn fatal_fault_respawns_executor_and_inflight_requests_survive() {
+        // the first executor instance dies fatally mid-batch; the
+        // supervisor rebuilds it through the factory, the in-flight
+        // batch is requeued, and every request is served — callers
+        // never observe the fault
+        struct FlakyExec {
+            deaths: Arc<AtomicUsize>,
+        }
+        impl Executor for FlakyExec {
+            fn batch(&self) -> usize {
+                2
+            }
+            fn seq_len(&self) -> usize {
+                4
+            }
+            fn execute(&mut self, tier: f32, _tokens: &[i32])
+                       -> Result<ExecOutput> {
+                if self.deaths
+                    .compare_exchange(0, 1, Ordering::SeqCst,
+                                      Ordering::SeqCst)
+                    .is_ok()
+                {
+                    return Err(FatalExecError("device lost".into())
+                        .into());
+                }
+                Ok(ExecOutput { logits: vec![tier; 2] })
+            }
+        }
+        let deaths = Arc::new(AtomicUsize::new(0));
+        let d = deaths.clone();
+        let engine = ElasticEngine::start(
+            ServeConfig::sim().with_workers(1).with_fault_policy(
+                FaultPolicy::default().with_backoff_ms(0)),
+            move |_| Ok(Box::new(FlakyExec { deaths: d.clone() })
+                as Box<dyn Executor>))
+            .unwrap();
+        let responses: Vec<Response> = (0..6u64)
+            .map(|id| engine.submit(Request::new(id, vec![0; 4])))
+            .collect();
+        for r in responses {
+            r.wait().expect("respawned executor must serve the requeue");
+        }
+        let report = engine.shutdown().unwrap();
+        assert_eq!(report.completions.len(), 6);
+        assert_eq!(deaths.load(Ordering::SeqCst), 1, "exactly one death");
+        let faults = report.fault_sections();
+        assert_eq!(faults.len(), 1);
+        assert_eq!(faults[0].respawns, 1);
+        assert!(report.worker_errors.iter().any(
+                    |e| e.contains("device lost")),
+                "the absorbed fault must be recorded: {:?}",
+                report.worker_errors);
+    }
+
+    #[test]
+    fn exhausted_restart_budget_finally_closes_the_engine() {
+        // every executor instance dies fatally on every batch: the
+        // respawn ladder burns the class budget, the last failure
+        // sheds the in-flight batch, and only THEN does the fleet's
+        // final worker exit and close admission
+        struct AlwaysFatal;
+        impl Executor for AlwaysFatal {
+            fn batch(&self) -> usize {
+                1
+            }
+            fn seq_len(&self) -> usize {
+                4
+            }
+            fn execute(&mut self, _tier: f32, _tokens: &[i32])
+                       -> Result<ExecOutput> {
+                Err(FatalExecError("device gone".into()).into())
+            }
+        }
+        let engine = ElasticEngine::start(
+            ServeConfig::sim().with_workers(1).with_fault_policy(
+                FaultPolicy::default()
+                    .with_backoff_ms(0)
+                    .with_restart_budget(1)),
+            |_| Ok(Box::new(AlwaysFatal) as Box<dyn Executor>))
+            .unwrap();
+        let first = engine.submit(Request::new(0, vec![0; 4]));
+        match first.wait() {
+            Err(ServeError::ExecFailed(msg)) => {
+                assert!(msg.contains("device gone"), "{msg}");
             }
             other => panic!("want ExecFailed, got {other:?}"),
         }
-        // the response resolves before the dying worker's guard closes
-        // the queue; wait for the close so the late submit can't race
+        // the response resolves before the dying worker closes the
+        // queue; wait for the close so the late submit can't race
         // into a still-open queue with no worker left to drain it
         while !engine.shared.queue.is_closed() {
             std::thread::yield_now();
@@ -1521,7 +1994,14 @@ mod tests {
             Some(Err(ServeError::ShuttingDown)) => {}
             other => panic!("want ShuttingDown, got {other:?}"),
         }
-        let err = engine.shutdown().expect_err("worker failure surfaces");
-        assert!(format!("{err:#}").contains("backend exploded"), "{err:#}");
+        let report = engine
+            .shutdown()
+            .expect("budget exhaustion is recorded, not a panic");
+        let faults = report.fault_sections();
+        assert_eq!(faults.len(), 1);
+        assert_eq!(faults[0].respawns, 1, "the one budgeted respawn ran");
+        assert!(report.worker_errors.iter().any(
+                    |e| e.contains("restart budget exhausted")),
+                "{:?}", report.worker_errors);
     }
 }

@@ -88,7 +88,10 @@ pub enum TryPushError<T> {
     /// the aggregate depth is at its bound — the only condition that
     /// may surface to clients as a `Shed(QueueFull)` admission verdict
     Full(T),
-    /// the queue has been closed (shutdown or a failed worker)
+    /// the queue has been closed — shutdown, or the *last* live
+    /// worker died (a supervised worker fault respawns the executor
+    /// instead of closing the queue; see the restart budget in
+    /// `FaultPolicy`)
     Closed(T),
 }
 
@@ -337,8 +340,9 @@ impl<T> AdmissionQueue<T> {
 
     /// Enqueue one item, blocking while the aggregate depth is at its
     /// bound.  Returns the item back as `Err` if the queue has been
-    /// closed (shutdown or a failed worker) so the caller can account
-    /// for it.
+    /// closed (shutdown, or the last live worker died — individual
+    /// worker faults are supervised and respawned, not queue-closing)
+    /// so the caller can account for it.
     pub fn push(&self, item: T) -> Result<(), T> {
         self.push_with(item, false, None)
     }

@@ -42,6 +42,10 @@ pub enum ShedCause {
     /// was closed (client saw `Shed(ShuttingDown)` or a
     /// `ServeError::ShuttingDown` resolution)
     ShuttingDown,
+    /// the quarantine ladder isolated the request as the poison of a
+    /// repeatedly-failing batch (client saw `ServeError::Poisoned`);
+    /// its co-batched neighbours were retried and served
+    Poisoned,
 }
 
 /// One shed one-shot request: a worker-side deadline shed, or an
@@ -109,6 +113,21 @@ pub struct WorkerClassInfo {
     pub rejected: usize,
     /// verify passes this class resolved — the speculative cycle count
     pub verifies: usize,
+    /// transient execute failures retried in place by this class's
+    /// workers (each backoff attempt after the first try counts one)
+    pub retries: usize,
+    /// bisections the quarantine ladder performed (each split of a
+    /// still-failing span into two independently-retried halves)
+    pub splits: usize,
+    /// units quarantined as poison after the ladder isolated them to a
+    /// single request (or verify row group) that kept failing
+    pub poisoned: usize,
+    /// executors rebuilt through the class factory after a fatal fault
+    /// or panic, under the class's restart budget
+    pub respawns: usize,
+    /// circuit-breaker trips (Closed -> Open transitions; a HalfOpen
+    /// probe failing back to Open is the same incident, not a new trip)
+    pub breaker_trips: usize,
 }
 
 /// Per-worker-class section of the report: how one hardware class
@@ -184,6 +203,26 @@ pub struct SpecSection {
     pub tokens_per_admission: f64,
 }
 
+/// Per-worker-class section of the *fault* report: what the tolerance
+/// ladder did for one class — in-place retries, quarantine bisections,
+/// poisoned units, supervised respawns, and circuit-breaker trips.
+/// Only classes that saw at least one fault event get a section (a
+/// healthy fleet reports none).
+#[derive(Debug, Clone)]
+pub struct FaultSection {
+    pub class: String,
+    /// transient failures retried in place
+    pub retries: usize,
+    /// quarantine-ladder bisections
+    pub splits: usize,
+    /// units shed as [`ShedCause::Poisoned`]
+    pub poisoned: usize,
+    /// executors rebuilt through the class factory
+    pub respawns: usize,
+    /// Closed -> Open breaker transitions
+    pub breaker_trips: usize,
+}
+
 /// Aggregate serving report.
 #[derive(Debug, Clone)]
 pub struct ServeReport {
@@ -224,6 +263,11 @@ pub struct ServeReport {
     ///
     /// [`tokens_per_admission`]: ServeReport::tokens_per_admission
     pub stream_step_items: usize,
+    /// every worker-side error the engine absorbed without dying:
+    /// execute faults that were retried past, respawn causes, degraded
+    /// startup failures.  Empty on a healthy run; populated entries
+    /// mean the fleet survived something, not that the run failed.
+    pub worker_errors: Vec<String>,
 }
 
 impl ServeReport {
@@ -256,6 +300,7 @@ impl ServeReport {
             spec_accepted: 0,
             spec_rejected: 0,
             stream_step_items: 0,
+            worker_errors: Vec::new(),
         }
     }
 
@@ -296,6 +341,37 @@ impl ServeReport {
         self.spec_rejected = rejected;
         self.stream_step_items = step_items;
         self
+    }
+
+    /// Attach the worker errors the engine absorbed (the engine does
+    /// this at shutdown).
+    pub fn with_worker_errors(mut self, errors: Vec<String>)
+                              -> ServeReport {
+        self.worker_errors = errors;
+        self
+    }
+
+    /// Per-worker-class sections of the fault report, in fleet
+    /// declaration order: retries, quarantine bisections, poisoned
+    /// units, respawns, breaker trips.  Classes with no fault event at
+    /// all are omitted — a healthy fleet reports an empty vec.
+    pub fn fault_sections(&self) -> Vec<FaultSection> {
+        self.worker_classes
+            .iter()
+            .filter(|i| {
+                i.retries + i.splits + i.poisoned + i.respawns
+                    + i.breaker_trips
+                    > 0
+            })
+            .map(|i| FaultSection {
+                class: i.name.clone(),
+                retries: i.retries,
+                splits: i.splits,
+                poisoned: i.poisoned,
+                respawns: i.respawns,
+                breaker_trips: i.breaker_trips,
+            })
+            .collect()
     }
 
     /// Fleet-wide speculative accept rate: `accepted / drafted`, 0.0
@@ -803,6 +879,11 @@ mod tests {
                 accepted: 0,
                 rejected: 0,
                 verifies: 0,
+                retries: 0,
+                splits: 0,
+                poisoned: 0,
+                respawns: 0,
+                breaker_trips: 0,
             },
             WorkerClassInfo {
                 name: "slow".into(),
@@ -814,6 +895,11 @@ mod tests {
                 accepted: 0,
                 rejected: 0,
                 verifies: 0,
+                retries: 0,
+                splits: 0,
+                poisoned: 0,
+                respawns: 0,
+                breaker_trips: 0,
             },
         ];
         let r = ServeReport::new(completions, sheds, 1.0, &[1.0, 0.25], 2)
@@ -917,6 +1003,11 @@ mod tests {
                 accepted: 6,
                 rejected: 2,
                 verifies: 2,
+                retries: 0,
+                splits: 0,
+                poisoned: 0,
+                respawns: 0,
+                breaker_trips: 0,
             },
             WorkerClassInfo {
                 name: "plain".into(),
@@ -928,6 +1019,11 @@ mod tests {
                 accepted: 0,
                 rejected: 0,
                 verifies: 0,
+                retries: 0,
+                splits: 0,
+                poisoned: 0,
+                respawns: 0,
+                breaker_trips: 0,
             },
         ];
         let r = ServeReport::new(Vec::new(), Vec::new(), 1.0, &[1.0], 2)
@@ -957,6 +1053,45 @@ mod tests {
         // no items ever enqueued reads 0.0, not NaN
         let empty = report(&[1.0]);
         assert_eq!(empty.tokens_per_admission(), 0.0);
+    }
+
+    #[test]
+    fn fault_sections_cover_only_classes_with_fault_events() {
+        let healthy = WorkerClassInfo {
+            name: "healthy".into(),
+            workers: 2,
+            exec_estimates_ms: vec![(1.0, Some(1.0))],
+            cache_hits: 0,
+            cache_misses: 0,
+            drafted: 0,
+            accepted: 0,
+            rejected: 0,
+            verifies: 0,
+            retries: 0,
+            splits: 0,
+            poisoned: 0,
+            respawns: 0,
+            breaker_trips: 0,
+        };
+        let mut flaky = healthy.clone();
+        flaky.name = "flaky".into();
+        flaky.retries = 7;
+        flaky.splits = 2;
+        flaky.poisoned = 1;
+        flaky.respawns = 1;
+        flaky.breaker_trips = 1;
+        let r = ServeReport::new(Vec::new(), Vec::new(), 1.0, &[1.0], 4)
+            .with_worker_classes(vec![healthy, flaky])
+            .with_worker_errors(vec!["worker 3: execution: boom".into()]);
+        let sections = r.fault_sections();
+        assert_eq!(sections.len(), 1, "healthy class gets no section");
+        let s = &sections[0];
+        assert_eq!(s.class, "flaky");
+        assert_eq!((s.retries, s.splits, s.poisoned), (7, 2, 1));
+        assert_eq!((s.respawns, s.breaker_trips), (1, 1));
+        assert_eq!(r.worker_errors.len(), 1);
+        // a report with no fault events at all reads clean
+        assert!(report(&[1.0]).fault_sections().is_empty());
     }
 
     #[test]

@@ -24,7 +24,38 @@ use anyhow::Result;
 
 use super::tier_matches;
 use super::worker::{ExecOutput, Executor};
+use super::FatalExecError;
 use crate::rng::Rng;
+
+/// Seeded chaos plan for the simulated backend: every fault the
+/// engine's tolerance ladder must survive, drawn from the same
+/// per-worker deterministic RNG stream as the latency model, so a
+/// given `(seed, plan)` replays the exact same fault sequence on
+/// every run.  `Default` is all-zeros — no faults, bit-identical to
+/// the pre-chaos simulator.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct FaultPlan {
+    /// per-execute probability of a *transient* failure (an `Err`
+    /// without the fatal marker — retryable in place)
+    pub fail_p: f64,
+    /// per-execute probability of a *fatal* fault (a
+    /// [`FatalExecError`] — the executor must be torn down and
+    /// respawned through the class factory)
+    pub fatal_p: f64,
+    /// per-execute probability of a latency spike
+    pub spike_p: f64,
+    /// extra modeled latency of one spike (ms)
+    pub spike_ms: f64,
+    /// tier skew on `fail_p`: > 0 makes *cheaper* tiers proportionally
+    /// flakier (`p = fail_p * (1 + tier_bias * (1 - tier/top))`), so
+    /// brownout-vs-shed dynamics can be exercised per rung; 0 = flat
+    pub tier_bias: f64,
+    /// deterministic poison marker: any batch whose token tensor
+    /// contains this value *always* fails transiently, regardless of
+    /// retries — the quarantine ladder's target.  0 disables (padded
+    /// rows are zero-filled, so 0 can never be a marker).
+    pub poison_token: i32,
+}
 
 /// Parameters of the simulated backend (all latencies per *batch*).
 #[derive(Debug, Clone, Copy)]
@@ -51,6 +82,9 @@ pub struct SimSpec {
     /// 0 (the default) keeps every tier's argmax identical, exactly
     /// as before.
     pub divergence: f64,
+    /// injected chaos (fault probabilities, poison marker, latency
+    /// spikes); `FaultPlan::default()` = no faults
+    pub fault: FaultPlan,
     pub seed: u64,
 }
 
@@ -64,6 +98,7 @@ impl SimSpec {
             jitter_ms: 0.2,
             recompute_ms_per_token: 0.0,
             divergence: 0.0,
+            fault: FaultPlan::default(),
             seed: 0x51AB,
         }
     }
@@ -77,6 +112,12 @@ impl SimSpec {
             jitter_ms: 0.0,
             ..SimSpec::standard()
         }
+    }
+
+    /// Attach a chaos plan.
+    pub fn with_fault(mut self, fault: FaultPlan) -> SimSpec {
+        self.fault = fault;
+        self
     }
 }
 
@@ -161,6 +202,44 @@ impl Executor for SimExecutor {
         anyhow::ensure!(
             self.tiers.iter().any(|&t| tier_matches(t, tier)),
             "sim executor: tier {tier} not in {:?}", self.tiers);
+        // ---- injected chaos (every draw gated behind p > 0, so a
+        // zero FaultPlan consumes no RNG and legacy streams replay
+        // bit-identically) ----
+        let plan = self.spec.fault;
+        if plan.poison_token != 0 && tokens.contains(&plan.poison_token)
+        {
+            // the deterministic poison: ALWAYS a transient failure, so
+            // retries never clear it and only the bisect ladder can
+            // isolate the marked request
+            anyhow::bail!("sim executor: poison token {} in batch",
+                          plan.poison_token);
+        }
+        if plan.fatal_p > 0.0 && self.rng.f64() < plan.fatal_p {
+            return Err(FatalExecError(
+                "sim executor: injected fatal fault".into()).into());
+        }
+        if plan.fail_p > 0.0 {
+            let top = self
+                .tiers
+                .iter()
+                .cloned()
+                .fold(f32::NEG_INFINITY, f32::max) as f64;
+            let skew = 1.0
+                + plan.tier_bias
+                    * (1.0 - tier as f64 / top.max(1e-9)).max(0.0);
+            if self.rng.f64() < plan.fail_p * skew {
+                anyhow::bail!(
+                    "sim executor: injected transient fault at tier \
+                     {tier}");
+            }
+        }
+        let spike_ms = if plan.spike_p > 0.0
+            && self.rng.f64() < plan.spike_p
+        {
+            plan.spike_ms
+        } else {
+            0.0
+        };
         // window-preparation cost: a recomputed row rebuilds its whole
         // sliding window (O(seq_len)), an arena-cached row appends one
         // token (O(1)) — the modeled saving the session arena buys
@@ -168,7 +247,7 @@ impl Executor for SimExecutor {
             std::mem::take(&mut self.pending_mix);
         let window_ms = self.spec.recompute_ms_per_token
             * (recompute_rows * self.spec.seq_len + cached_rows) as f64;
-        let modeled_ms = self.latency_ms(tier) + window_ms;
+        let modeled_ms = self.latency_ms(tier) + window_ms + spike_ms;
         let t0 = Instant::now();
         if modeled_ms > 0.0 {
             std::thread::sleep(Duration::from_secs_f64(modeled_ms / 1e3));
@@ -399,17 +478,112 @@ pub fn speculative_point(spec: SimSpec, workers: usize, shards: usize,
     Ok(report)
 }
 
+/// Drive one hermetic *chaos* point: `n` one-shot requests plus
+/// `sessions` speculative decode sessions through an engine whose sim
+/// backend injects the given [`FaultPlan`] — transient failures ride
+/// the retry ladder, fatal faults exercise supervised respawn, and
+/// (when `fault.poison_token != 0`) request id 0 is submitted as a
+/// deterministic poison that must shed as
+/// [`ServeError::Poisoned`](super::ServeError::Poisoned) while every
+/// co-batched neighbour completes.  Asserts exactly-once resolution
+/// for every submission and that the engine NEVER closed under way
+/// (no `ShuttingDown` verdict before shutdown), then returns the
+/// report; callers judge availability as
+/// `(completions + stream done) / (n + sessions)`.
+pub fn faults_point(spec: SimSpec, workers: usize, shards: usize,
+                    n: usize, sessions: usize, decode_steps: usize,
+                    spec_k: usize) -> Result<super::ServeReport> {
+    let cfg = super::ServeConfig::sim()
+        .with_workers(workers)
+        .with_queue_shards(shards)
+        .with_queue_bound(128)
+        .with_max_batch_wait(Duration::from_micros(200))
+        .with_spec_k(spec_k)
+        // zero backoff keeps the hermetic run fast (the retry COUNT is
+        // what the ladder is judged by, not the sleep), and a roomy
+        // restart budget lets injected fatal faults exercise respawn
+        // without ever exhausting the fleet mid-run
+        .with_fault_policy(super::FaultPolicy::default()
+            .with_backoff_ms(0)
+            .with_restart_budget(16));
+    let caps = cfg.capacities();
+    let prompt_len = (spec.seq_len / 2).max(1);
+    let poison = spec.fault.poison_token;
+    let engine = super::ElasticEngine::start(cfg, factory(spec, caps))?;
+    let responses: Vec<super::Response> = (0..n as u64)
+        .map(|id| {
+            let tokens = if id == 0 && poison != 0 {
+                vec![poison; spec.seq_len]
+            } else {
+                vec![1; spec.seq_len]
+            };
+            engine.submit(super::Request::new(id, tokens))
+        })
+        .collect();
+    let streams: Vec<super::StreamResponse> = (0..sessions as u64)
+        .map(|id| {
+            engine.submit_stream(super::StreamRequest::new(
+                n as u64 + id, vec![1; prompt_len], decode_steps))
+        })
+        .collect();
+    for (i, r) in responses.into_iter().enumerate() {
+        match r.wait() {
+            Ok(_) => {}
+            Err(super::ServeError::Poisoned(_)) => {
+                anyhow::ensure!(
+                    poison != 0 && i == 0,
+                    "request {i} quarantined but only id 0 is poison");
+            }
+            Err(e) => anyhow::bail!(
+                "chaos one-shot {i} resolved {e} — the fleet must \
+                 absorb transient faults without an outage"),
+        }
+    }
+    for s in streams {
+        match s.wait() {
+            Ok(stats) => anyhow::ensure!(
+                stats.steps == decode_steps,
+                "session {} stopped at {} of {decode_steps} steps",
+                stats.id, stats.steps),
+            Err(e) => anyhow::bail!(
+                "chaos session shed {e} — streams must survive \
+                 injected faults"),
+        }
+    }
+    let report = engine.shutdown()?;
+    anyhow::ensure!(
+        report.sessions_started
+            == report.stream_done.len() + report.stream_shed.len(),
+        "stream logs do not reconcile: {} started, {} done, {} shed",
+        report.sessions_started, report.stream_done.len(),
+        report.stream_shed.len());
+    if poison != 0 {
+        anyhow::ensure!(
+            report.completions.len() == n.saturating_sub(1),
+            "poison run must serve exactly n-1 one-shots, served {} \
+             of {n}",
+            report.completions.len());
+    }
+    Ok(report)
+}
+
 /// One row of the machine-readable sim-pipeline record
 /// (`BENCH_serving.json`).
 pub struct BenchRow {
     /// topology label: "shared" (1 shard), "sharded" (1 per worker),
-    /// "hetero" (sharded + heterogeneous worker classes), or
-    /// "streaming" (decode sessions through `submit_stream`)
+    /// "hetero" (sharded + heterogeneous worker classes), "streaming"
+    /// (decode sessions through `submit_stream`), or "faults" (chaos
+    /// injection through [`faults_point`])
     pub queue: &'static str,
     pub workers: usize,
     pub shards: usize,
     /// worker-class topology, e.g. "fast=2:slow=2"; empty = homogeneous
     pub classes: String,
+    /// injected transient fault rate (chaos rows; 0 elsewhere)
+    pub fault_rate: f64,
+    /// total submissions (one-shots + sessions) behind this row; > 0
+    /// marks a chaos row and enables the availability fields
+    pub submitted: usize,
     pub report: super::ServeReport,
 }
 
@@ -476,6 +650,38 @@ pub fn write_bench_json(path: &std::path::Path, source: &str,
                              Value::Num(r.report.spec_accept_rate())));
                 fields.push(("tokens_per_admission".into(),
                              Value::Num(r.report.tokens_per_admission())));
+            }
+            if r.submitted > 0 {
+                // chaos rows record availability under injected
+                // faults plus the fault-ladder economy (retries,
+                // bisections, quarantines, respawns, breaker trips)
+                let served = r.report.completions.len()
+                    + r.report.stream_done.len();
+                let (mut retries, mut splits, mut poisoned) = (0, 0, 0);
+                let (mut respawns, mut trips) = (0, 0);
+                for s in r.report.fault_sections() {
+                    retries += s.retries;
+                    splits += s.splits;
+                    poisoned += s.poisoned;
+                    respawns += s.respawns;
+                    trips += s.breaker_trips;
+                }
+                fields.push(("fault_rate".into(),
+                             Value::Num(r.fault_rate)));
+                fields.push(("submitted".into(),
+                             Value::Num(r.submitted as f64)));
+                fields.push(("availability".into(),
+                             Value::Num(served as f64
+                                 / r.submitted as f64)));
+                fields.push(("retries".into(),
+                             Value::Num(retries as f64)));
+                fields.push(("splits".into(), Value::Num(splits as f64)));
+                fields.push(("poisoned".into(),
+                             Value::Num(poisoned as f64)));
+                fields.push(("respawns".into(),
+                             Value::Num(respawns as f64)));
+                fields.push(("breaker_trips".into(),
+                             Value::Num(trips as f64)));
             }
             if r.report.worker_classes.len() > 1 {
                 // heterogeneous rows also record how each device class
@@ -567,9 +773,11 @@ mod tests {
         assert_eq!(sharded.completions.len(), 24);
         let rows = vec![
             BenchRow { queue: "shared", workers: 2, shards: 1,
-                       classes: String::new(), report: shared },
+                       classes: String::new(), fault_rate: 0.0,
+                       submitted: 0, report: shared },
             BenchRow { queue: "sharded", workers: 2, shards: 2,
-                       classes: String::new(), report: sharded },
+                       classes: String::new(), fault_rate: 0.0,
+                       submitted: 0, report: sharded },
         ];
         let path = std::env::temp_dir().join(format!(
             "ef_bench_serving_{}.json", std::process::id()));
@@ -607,6 +815,8 @@ mod tests {
             workers: 4,
             shards: 4,
             classes: "fast=2:slow=2".into(),
+            fault_rate: 0.0,
+            submitted: 0,
             report,
         }];
         let path = std::env::temp_dir().join(format!(
@@ -638,6 +848,8 @@ mod tests {
             workers: 2,
             shards: 2,
             classes: String::new(),
+            fault_rate: 0.0,
+            submitted: 0,
             report,
         }];
         let path = std::env::temp_dir().join(format!(
@@ -723,6 +935,109 @@ mod tests {
                  plain-decode economy, got {}",
                 report.tokens_per_admission());
         assert!(!report.spec_sections().is_empty());
+    }
+
+    #[test]
+    fn zero_fault_plan_replays_legacy_rng_streams_bit_identically() {
+        // the chaos draws are gated behind p > 0: a default FaultPlan
+        // must consume no RNG, so pre-chaos latency/divergence
+        // sequences replay exactly
+        let spec = SimSpec { batch: 2, seq_len: 2, ..SimSpec::standard() };
+        let tokens = vec![1; 4];
+        let mut a = SimExecutor::new(spec, &[1.0], 0);
+        let mut b = SimExecutor::new(
+            spec.with_fault(FaultPlan::default()), &[1.0], 0);
+        for _ in 0..6 {
+            a.execute(1.0, &tokens).unwrap();
+            b.execute(1.0, &tokens).unwrap();
+        }
+        let am: Vec<f64> = a.log.iter().map(|l| l.modeled_ms).collect();
+        let bm: Vec<f64> = b.log.iter().map(|l| l.modeled_ms).collect();
+        assert_eq!(am, bm);
+    }
+
+    #[test]
+    fn injected_faults_are_deterministic_and_classified() {
+        let spec = SimSpec {
+            batch: 2,
+            seq_len: 2,
+            fault: FaultPlan { fail_p: 0.5, ..FaultPlan::default() },
+            ..SimSpec::instant()
+        };
+        let tokens = vec![1; 4];
+        let run = |mut e: SimExecutor| -> Vec<bool> {
+            (0..32).map(|_| e.execute(1.0, &tokens).is_ok()).collect()
+        };
+        let xs = run(SimExecutor::new(spec, &[1.0], 0));
+        let ys = run(SimExecutor::new(spec, &[1.0], 0));
+        assert_eq!(xs, ys, "same seed must inject the same faults");
+        assert!(xs.iter().any(|&ok| ok) && xs.iter().any(|&ok| !ok),
+                "fail_p 0.5 must both fail and succeed over 32 draws");
+        // fatal faults carry the FatalExecError marker in the chain
+        let fatal_spec = SimSpec {
+            fault: FaultPlan { fatal_p: 1.0, ..FaultPlan::default() },
+            ..spec
+        };
+        let mut f = SimExecutor::new(fatal_spec, &[1.0], 0);
+        let err = f.execute(1.0, &tokens).unwrap_err();
+        assert!(err.chain().any(
+                    |c| c.downcast_ref::<FatalExecError>().is_some()),
+                "injected fatal fault must be marked fatal");
+        // the poison marker always fails, independent of the RNG
+        let poison_spec = SimSpec {
+            fault: FaultPlan { poison_token: 7,
+                               ..FaultPlan::default() },
+            ..spec
+        };
+        let mut p = SimExecutor::new(poison_spec, &[1.0], 0);
+        for _ in 0..8 {
+            assert!(p.execute(1.0, &[7, 1, 1, 1]).is_err());
+        }
+        assert!(p.execute(1.0, &tokens).is_ok(),
+                "unpoisoned batches still serve");
+    }
+
+    #[test]
+    fn faults_point_quarantines_poison_and_bench_row_roundtrips() {
+        let spec = SimSpec {
+            batch: 4,
+            seq_len: 8,
+            fault: FaultPlan { fail_p: 0.2, poison_token: 7,
+                               ..FaultPlan::default() },
+            ..SimSpec::instant()
+        };
+        let report = faults_point(spec, 2, 2, 40, 4, 5, 2).unwrap();
+        assert_eq!(report.completions.len(), 39,
+                   "all but the poison one-shot must serve");
+        assert_eq!(report.stream_done.len(), 4);
+        let secs = report.fault_sections();
+        assert!(!secs.is_empty(), "chaos must leave fault sections");
+        assert!(secs.iter().map(|s| s.poisoned).sum::<usize>() >= 1);
+        assert!(secs.iter().map(|s| s.retries).sum::<usize>() > 0,
+                "fail_p 0.2 must force retries");
+        let rows = vec![BenchRow {
+            queue: "faults",
+            workers: 2,
+            shards: 2,
+            classes: String::new(),
+            fault_rate: 0.2,
+            submitted: 44,
+            report,
+        }];
+        let path = std::env::temp_dir().join(format!(
+            "ef_bench_faults_{}.json", std::process::id()));
+        write_bench_json(&path, "sim.rs unit test", spec, 44, &rows)
+            .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let doc = crate::json::parse(&text).unwrap();
+        let row = &doc.req("results").unwrap().as_arr().unwrap()[0];
+        assert_eq!(row.req("queue").unwrap().as_str().unwrap(), "faults");
+        let avail = row.req("availability").unwrap().as_f64().unwrap();
+        assert!(avail > 0.9 && avail <= 1.0, "availability {avail}");
+        let poisoned = row.req("poisoned").unwrap().as_f64().unwrap();
+        let submitted = row.req("submitted").unwrap().as_f64().unwrap();
+        assert!(poisoned >= 1.0 && poisoned <= submitted);
     }
 
     #[test]

@@ -28,7 +28,12 @@
 //! [`StreamEvent::Shed`] if nothing else did — so a `StreamResponse`
 //! always observes `Token* (Done | Shed)`, across worker panics,
 //! mid-decode shutdown, and expired deadlines (property-tested in
-//! `tests/properties.rs`).
+//! `tests/properties.rs`).  A session whose decode row keeps failing
+//! under the worker's retry/bisect ladder is shed with
+//! `ServeError::Poisoned` — quarantining one poison session while its
+//! co-batched neighbours (and co-packed verify rows) keep streaming —
+//! and a supervised worker respawn re-homes the session's next step to
+//! its pinned shard via the same `requeue_to` path stealing uses.
 //!
 //! The channel is bounded, sized to the session (`max_steps` tokens
 //! plus one terminal event): memory per session is bounded while the

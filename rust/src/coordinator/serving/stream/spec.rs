@@ -47,9 +47,9 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::super::batcher::{floor_rung, form_rows};
 use super::super::report::StreamShedRecord;
-use super::super::worker::{fail_batch, sample_token, Executor};
+use super::super::worker::{execute_quarantine, sample_token, Executor,
+                           UnitFate, WorkerFault};
 use super::super::{EngineShared, Outcome, Pending, Request, ServeError};
 use super::{Advance, SessionTable, StreamStats, StreamStep};
 
@@ -338,32 +338,35 @@ impl SessionTable {
 
 /// Run one popped **draft** batch: build each session's base window
 /// (arena hit path first, table recompute fallback), execute `k`
-/// cheap micro-steps at the lowest floored tier, stash the proposals,
-/// and re-admit each session's verify item on its affine shard.
-/// Mirrors the main worker loop's error discipline (`fail_batch` on
-/// executor failure) and its one-lock-per-log batching.  Returns the
-/// number of executed batches (the `k` micro-steps count as one).
+/// cheap micro-steps at the draft tier, stash the proposals, and
+/// re-admit each session's verify item on its affine shard.  Mirrors
+/// the main worker loop's fault discipline (the retry → bisect →
+/// quarantine ladder per micro-round; FATAL faults escalate as
+/// [`WorkerFault`] with the batch intact — a requeued draft rebuilds
+/// idempotently from the arena/table) and its one-lock-per-log
+/// batching.  Returns the number of executed batches (the `k`
+/// micro-steps count as one).
 pub(crate) fn run_draft_batch(shared: &EngineShared, worker: usize,
                               class_idx: usize, class_name: &str,
                               exec: &mut dyn Executor, floor: f32,
-                              live: Vec<Pending>) -> Result<usize> {
+                              live: Vec<Pending>)
+                              -> Result<usize, WorkerFault> {
     let batch = exec.batch().max(1);
     let seq_len = exec.seq_len();
     let controller = &shared.controllers[class_idx];
     let arena = &shared.arenas[class_idx];
-    // the draft tier: the cheapest rung the batch's strictest floor
-    // allows.  Speculation exists to make drafting cheap; the floor
-    // contract still binds every proposed token.
-    let tier = shared.caps[floor_rung(&shared.caps, floor)];
-    // adaptive k: the class's learned accept rate scales how much
-    // speculation is worth buying; clamped so the verify pass
-    // (k + 1 rows) always fits one executor batch
-    let k = {
+    // the draft tier: normally the cheapest rung the batch's
+    // strictest floor allows — but a persistently LOW accept rate
+    // means the cheap proposals are being thrown away, so the
+    // controller may escalate one rung (`draft_tier`).  Adaptive k
+    // rides the same lock: the learned accept rate scales how much
+    // speculation is worth buying, clamped so the verify pass
+    // (k + 1 rows) always fits one executor batch.
+    let (tier, k) = {
         let ctl = controller.lock().unwrap();
-        ctl.draft_k(shared.spec_k)
-    }
-    .min(batch.saturating_sub(1))
-    .max(1);
+        (ctl.draft_tier(floor), ctl.draft_k(shared.spec_k))
+    };
+    let k = k.min(batch.saturating_sub(1)).max(1);
     let mut windows: Vec<Vec<i32>> = Vec::with_capacity(live.len());
     let mut items: Vec<Pending> = Vec::with_capacity(live.len());
     let mut cached_rows = 0usize;
@@ -389,7 +392,7 @@ pub(crate) fn run_draft_batch(shared: &EngineShared, worker: usize,
         return Ok(0);
     }
     // per-session draft depth: never draft past the session's budget
-    let depths: Vec<usize> = items
+    let mut depths: Vec<usize> = items
         .iter()
         .map(|p| match &p.outcome {
             Outcome::Stream(st) => {
@@ -402,11 +405,17 @@ pub(crate) fn run_draft_batch(shared: &EngineShared, worker: usize,
     let mut bases: Vec<Vec<i32>> = windows.clone();
     let mut proposals: Vec<Vec<i32>> =
         vec![Vec::with_capacity(rounds); items.len()];
+    let mut stream_sheds: Vec<StreamShedRecord> = Vec::new();
     for round in 0..rounds {
-        let row_refs: Vec<&[i32]> =
-            windows.iter().map(|r| r.as_slice()).collect();
-        let tokens = form_rows(&row_refs, batch, seq_len);
-        drop(row_refs);
+        if items.is_empty()
+            || round >= depths.iter().copied().max().unwrap_or(0)
+        {
+            break; // everyone left is drafted out (or quarantined)
+        }
+        // each micro-round runs the fault ladder with one ROW per
+        // unit, so a poison session is isolated per round
+        let units: Vec<Vec<Vec<i32>>> =
+            windows.iter().map(|w| vec![w.clone()]).collect();
         // only the first micro-step pays the batch's recompute mix;
         // later rounds extend windows already in hand — the arena's
         // incremental cost model applies to every one of them
@@ -415,52 +424,67 @@ pub(crate) fn run_draft_batch(shared: &EngineShared, worker: usize,
         } else {
             exec.note_batch_mix(0, items.len());
         }
-        let exec_start = Instant::now();
-        let out = match exec.execute(tier, &tokens) {
-            Ok(out) => out,
-            Err(e) => {
-                let msg = format!(
-                    "{} worker {worker}: draft tier {tier} batch of {}: \
-                     {e:#}",
-                    exec.name(), items.len());
+        let (fates, any_fail) = match execute_quarantine(
+            shared, class_idx, exec, tier, &units)
+        {
+            Ok(ok) => ok,
+            Err(fatal) => {
+                // FATAL: escalate with every item intact — nothing is
+                // stashed yet, so a requeued draft restarts cleanly
+                controller.lock().unwrap().observe_batch_outcome(false);
                 let n = items.len();
-                fail_batch(shared, items, &msg, class_name);
-                return Err(e.context(format!(
-                    "{} worker {worker}: draft tier {tier} batch of {n}",
-                    exec.name())));
+                return Err(WorkerFault {
+                    msg: format!(
+                        "{} worker {worker}: draft tier {tier} batch \
+                         of {n}: {fatal}",
+                        exec.name()),
+                    inflight: items,
+                });
             }
         };
-        let exec_ms = Instant::now()
-            .saturating_duration_since(exec_start)
-            .as_secs_f64() * 1e3;
-        controller.lock().unwrap().observe_exec(tier, exec_ms);
-        if out.logits.len() % batch != 0 {
-            let msg = format!(
-                "{} worker {worker}: executor returned {} logits, not a \
-                 multiple of batch {batch}",
-                exec.name(), out.logits.len());
-            fail_batch(shared, items, &msg, class_name);
-            return Err(anyhow::anyhow!(msg));
+        controller.lock().unwrap().observe_batch_outcome(!any_fail);
+        let mut poisoned: Vec<(usize, String)> = Vec::new();
+        for (i, fate) in fates.into_iter().enumerate() {
+            match fate {
+                UnitFate::Served(unit_rows) => {
+                    if round >= depths[i] {
+                        continue; // this session's budget is shorter
+                    }
+                    let token = sample_token(&unit_rows[0]);
+                    proposals[i].push(token);
+                    let win = &mut windows[i];
+                    win.push(token);
+                    if win.len() > seq_len {
+                        let cut = win.len() - seq_len;
+                        win.drain(..cut);
+                    }
+                }
+                UnitFate::Poisoned(msg) => poisoned.push((i, msg)),
+            }
         }
-        let row_len = out.logits.len() / batch;
-        for (i, win) in windows.iter_mut().enumerate() {
-            if round >= depths[i] {
-                continue; // this session's budget is shorter
+        // quarantined sessions leave the round arrays entirely (shed
+        // with the Poisoned verdict) — left in place they would
+        // re-fail every remaining micro-round
+        for (i, msg) in poisoned.into_iter().rev() {
+            let p = items.remove(i);
+            let Outcome::Stream(st) = p.outcome else {
+                unreachable!();
+            };
+            if let Some(rec) = shared.sessions.shed(
+                st.session, ServeError::Poisoned(msg), class_name)
+            {
+                stream_sheds.push(rec);
             }
-            let row = &out.logits[i * row_len..(i + 1) * row_len];
-            let token = sample_token(row);
-            proposals[i].push(token);
-            win.push(token);
-            if win.len() > seq_len {
-                let cut = win.len() - seq_len;
-                win.drain(..cut);
-            }
+            shared.recycle_session(st.session);
+            windows.remove(i);
+            bases.remove(i);
+            proposals.remove(i);
+            depths.remove(i);
         }
     }
     // stash every session's proposals and re-admit its verify pass on
     // the affine shard; a closed queue terminates the session now
     let now = Instant::now();
-    let mut stream_sheds: Vec<StreamShedRecord> = Vec::new();
     for (i, p) in items.into_iter().enumerate() {
         let Outcome::Stream(st) = p.outcome else {
             unreachable!();
@@ -507,7 +531,8 @@ pub(crate) fn run_draft_batch(shared: &EngineShared, worker: usize,
 pub(crate) fn run_verify_batch(shared: &EngineShared, worker: usize,
                                class_idx: usize, class_name: &str,
                                exec: &mut dyn Executor,
-                               live: Vec<Pending>) -> Result<usize> {
+                               live: Vec<Pending>)
+                               -> Result<usize, WorkerFault> {
     let batch = exec.batch().max(1);
     let seq_len = exec.seq_len();
     let controller = &shared.controllers[class_idx];
@@ -516,8 +541,11 @@ pub(crate) fn run_verify_batch(shared: &EngineShared, worker: usize,
     // full-compute model's own opinion of the cheap proposals
     let tier = shared.caps[0];
     let mut items: Vec<Pending> = Vec::new();
-    let mut rows: Vec<Vec<i32>> = Vec::new();
-    let mut spans: Vec<(usize, usize)> = Vec::new(); // (row offset, k)
+    // one quarantine unit per SESSION: its k + 1 verification rows
+    // live or die together — bisection isolates a poison session, not
+    // a poison row of one (the rows are one request's data)
+    let mut units: Vec<Vec<Vec<i32>>> = Vec::new();
+    let mut used_rows = 0usize;
     let mut stream_sheds: Vec<StreamShedRecord> = Vec::new();
     for p in live {
         let Outcome::Stream(st) = &p.outcome else {
@@ -530,7 +558,7 @@ pub(crate) fn run_verify_batch(shared: &EngineShared, worker: usize,
         };
         debug_assert!(k + 1 <= batch,
                       "draft_k is clamped to batch - 1 at draft time");
-        if rows.len() + k + 1 > batch {
+        if used_rows + k + 1 > batch {
             // no room in this pass: defer the whole session untouched
             // (its buffer stays stashed; the item keeps its identity)
             let urgent = p.req.slo.deadline.is_some();
@@ -554,8 +582,8 @@ pub(crate) fn run_verify_batch(shared: &EngineShared, worker: usize,
         }
         match shared.sessions.verify_rows(st.session, seq_len) {
             Some(vrows) => {
-                spans.push((rows.len(), k));
-                rows.extend(vrows);
+                used_rows += vrows.len();
+                units.push(vrows);
                 items.push(p);
             }
             None => shared.recycle_session(st.session),
@@ -567,53 +595,55 @@ pub(crate) fn run_verify_batch(shared: &EngineShared, worker: usize,
         }
         return Ok(0);
     }
-    let row_refs: Vec<&[i32]> =
-        rows.iter().map(|r| r.as_slice()).collect();
-    let tokens = form_rows(&row_refs, batch, seq_len);
-    drop(row_refs);
     // verification rows are full-window passes rebuilt from the draft
     // buffer — recompute-cost rows in the arena's cost model
-    exec.note_batch_mix(rows.len(), 0);
-    let exec_start = Instant::now();
-    let out = match exec.execute(tier, &tokens) {
-        Ok(out) => out,
-        Err(e) => {
-            let msg = format!(
-                "{} worker {worker}: verify tier {tier} batch of {}: \
-                 {e:#}",
-                exec.name(), items.len());
+    exec.note_batch_mix(used_rows, 0);
+    let (fates, any_fail) = match execute_quarantine(
+        shared, class_idx, exec, tier, &units)
+    {
+        Ok(ok) => ok,
+        Err(fatal) => {
+            // FATAL: escalate with the packed sessions intact — their
+            // draft buffers stay stashed, so a requeued verify item
+            // rebuilds its rows idempotently
+            controller.lock().unwrap().observe_batch_outcome(false);
             let n = items.len();
-            fail_batch(shared, items, &msg, class_name);
-            return Err(e.context(format!(
-                "{} worker {worker}: verify tier {tier} batch of {n}",
-                exec.name())));
+            return Err(WorkerFault {
+                msg: format!(
+                    "{} worker {worker}: verify tier {tier} batch of \
+                     {n}: {fatal}",
+                    exec.name()),
+                inflight: items,
+            });
         }
     };
+    controller.lock().unwrap().observe_batch_outcome(!any_fail);
     let done = Instant::now();
-    let exec_ms = done
-        .saturating_duration_since(exec_start)
-        .as_secs_f64() * 1e3;
-    controller.lock().unwrap().observe_exec(tier, exec_ms);
-    if out.logits.len() % batch != 0 {
-        let msg = format!(
-            "{} worker {worker}: executor returned {} logits, not a \
-             multiple of batch {batch}",
-            exec.name(), out.logits.len());
-        fail_batch(shared, items, &msg, class_name);
-        return Err(anyhow::anyhow!(msg));
-    }
-    let row_len = out.logits.len() / batch;
     let counters = &shared.spec[class_idx];
     let mut stream_done: Vec<StreamStats> = Vec::new();
-    for (p, (offset, k)) in items.into_iter().zip(spans) {
+    for (p, fate) in items.into_iter().zip(fates) {
         let Outcome::Stream(st) = p.outcome else {
             unreachable!();
         };
-        let verifier_tokens: Vec<i32> = (0..=k)
-            .map(|j| {
-                let r = offset + j;
-                sample_token(&out.logits[r * row_len..(r + 1) * row_len])
-            })
+        let unit_rows = match fate {
+            UnitFate::Served(rows) => rows,
+            UnitFate::Poisoned(msg) => {
+                // the poison session sheds alone; its co-packed
+                // neighbours resolve normally.  Counters deliberately
+                // do NOT move — they move only at verify resolution,
+                // so drafted == accepted + rejected still holds.
+                if let Some(rec) = shared.sessions.shed(
+                    st.session, ServeError::Poisoned(msg), class_name)
+                {
+                    stream_sheds.push(rec);
+                }
+                shared.recycle_session(st.session);
+                continue;
+            }
+        };
+        let verifier_tokens: Vec<i32> = unit_rows
+            .iter()
+            .map(|r| sample_token(r))
             .collect();
         let res = shared.sessions.resolve_verify(
             &st, &verifier_tokens, tier, seq_len, done);

@@ -10,14 +10,18 @@
 //! the full submit → admit → batch → tier-select → execute → resolve
 //! path through [`super::SimExecutor`] with no artifacts on disk.
 
-use std::time::Instant;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use super::batcher::{batch_key_for, form_rows, StepKind};
+use super::batcher::{batch_key_for, floor_rung, form_rows, StepKind};
+use super::controller::BreakerState;
 use super::report::{Completion, ShedCause, ShedRecord, StreamShedRecord};
 use super::stream::{spec, Advance};
-use super::{EngineShared, Outcome, Pending, Reply, ServeError};
+use super::{EngineShared, FatalExecError, Outcome, Pending, Reply,
+            ServeError};
 
 #[cfg(feature = "pjrt")]
 use super::tier_matches;
@@ -216,6 +220,189 @@ pub(crate) fn fail_batch(shared: &EngineShared, items: Vec<Pending>,
     }
 }
 
+/// A FATAL worker fault: the executor (or the backend under it) is in
+/// an unknown state — a panic escaped `execute`, or the error chain
+/// carried a [`FatalExecError`] marker.  The worker loop hands its
+/// in-flight items back to the engine's supervision loop, which
+/// rebuilds the executor through the class factory (restart budget
+/// permitting) and requeues the batch.
+pub(crate) struct WorkerFault {
+    pub msg: String,
+    pub inflight: Vec<Pending>,
+}
+
+/// One classified `Executor::execute` attempt.
+enum ExecTry {
+    Ok(ExecOutput),
+    /// retryable: the executor survives (I/O hiccup, transient backend
+    /// error) — the batch can be retried on the same executor
+    Transient(String),
+    /// NOT retryable: a panic crossed the call, or the backend tagged
+    /// the error fatal — the executor must be torn down and rebuilt
+    Fatal(String),
+}
+
+/// Call the executor once and classify the outcome.  Panics are caught
+/// here (the executor is behind `&mut`, hence `AssertUnwindSafe`: a
+/// Fatal verdict means the executor is discarded, never reused, so
+/// broken invariants cannot leak into a later call).
+fn call_exec(exec: &mut dyn Executor, tier: f32, tokens: &[i32])
+             -> ExecTry {
+    match std::panic::catch_unwind(
+        AssertUnwindSafe(|| exec.execute(tier, tokens)))
+    {
+        Ok(Ok(out)) => ExecTry::Ok(out),
+        Ok(Err(e)) => {
+            let fatal = e.chain().any(
+                |c| c.downcast_ref::<FatalExecError>().is_some());
+            let msg = format!("{e:#}");
+            if fatal {
+                ExecTry::Fatal(msg)
+            } else {
+                ExecTry::Transient(msg)
+            }
+        }
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".into());
+            ExecTry::Fatal(format!("executor panicked: {msg}"))
+        }
+    }
+}
+
+/// What the retry → bisect → quarantine ladder decided for one *unit*
+/// (a one-shot request, one decode/draft step row, or one session's
+/// packed verify rows).
+pub(crate) enum UnitFate {
+    /// executed: one logits row per input row of the unit
+    Served(Vec<Vec<f32>>),
+    /// still failing alone after every retry — the poison; shed it
+    /// with the final failure message, everyone else survives
+    Poisoned(String),
+}
+
+/// Execute `units` (each unit = the rows that must live or die
+/// together) through the fault ladder at `tier`:
+///
+/// 1. **retry** — transient failures retry in place with bounded
+///    exponential backoff (`FaultPolicy::{max_retries, backoff_ms}`);
+/// 2. **bisect** — a span still failing after retries splits in half
+///    and each half retries independently, so one bad unit cannot
+///    take innocent co-batched neighbours down with it;
+/// 3. **quarantine** — a *singleton* span that still fails is the
+///    poison: its fate is `Poisoned` and the ladder moves on.
+///
+/// Returns the per-unit fates (aligned with `units`) plus whether any
+/// transient failure was observed (feeds the class breaker), or
+/// `Err(msg)` on a FATAL fault — executor state is unknown, the caller
+/// must escalate to supervision with the batch intact.
+pub(crate) fn execute_quarantine(shared: &EngineShared, class_idx: usize,
+                                 exec: &mut dyn Executor, tier: f32,
+                                 units: &[Vec<Vec<i32>>])
+                                 -> Result<(Vec<UnitFate>, bool), String> {
+    let mut fates: Vec<Option<UnitFate>> =
+        (0..units.len()).map(|_| None).collect();
+    let failed = exec_span(shared, class_idx, exec, tier, units, 0,
+                           units.len(), &mut fates)?;
+    Ok((fates
+            .into_iter()
+            .map(|f| f.expect("ladder assigns every unit a fate"))
+            .collect(),
+        failed))
+}
+
+/// One rung of the ladder: retry `units[lo..hi]` as a single batch,
+/// then bisect or quarantine.  Recursion depth is log2(batch) — a
+/// handful of frames for any real batch dimension.
+#[allow(clippy::too_many_arguments)]
+fn exec_span(shared: &EngineShared, class_idx: usize,
+             exec: &mut dyn Executor, tier: f32,
+             units: &[Vec<Vec<i32>>], lo: usize, hi: usize,
+             fates: &mut [Option<UnitFate>]) -> Result<bool, String> {
+    let batch = exec.batch().max(1);
+    let seq_len = exec.seq_len();
+    let policy = shared.policy;
+    let faults = &shared.faults[class_idx];
+    let rows: Vec<&[i32]> = units[lo..hi]
+        .iter()
+        .flat_map(|u| u.iter().map(|r| r.as_slice()))
+        .collect();
+    let tokens = form_rows(&rows, batch, seq_len);
+    drop(rows);
+    let mut failed = false;
+    let mut last_msg = String::new();
+    for attempt in 0..=policy.max_retries {
+        if attempt > 0 {
+            faults.retries.fetch_add(1, Ordering::SeqCst);
+            // bounded exponential backoff: the shift saturates at 64x
+            // so a large max_retries cannot overflow into a sleep of
+            // centuries
+            let backoff =
+                policy.backoff_ms * (1u64 << (attempt - 1).min(6));
+            if backoff > 0 {
+                std::thread::sleep(Duration::from_millis(backoff));
+            }
+        }
+        let exec_start = Instant::now();
+        match call_exec(exec, tier, &tokens) {
+            ExecTry::Ok(out) => {
+                // the executor contract is one equal-size logits row
+                // per batch slot; a violating backend is retried like
+                // any transient fault (and quarantined if persistent)
+                if out.logits.is_empty() || out.logits.len() % batch != 0
+                {
+                    failed = true;
+                    last_msg = format!(
+                        "{} returned {} logits, not a multiple of \
+                         batch {batch}",
+                        exec.name(), out.logits.len());
+                    continue;
+                }
+                // only successful attempts feed the latency model:
+                // fault spikes are breaker business, not tier business
+                let exec_ms = exec_start.elapsed().as_secs_f64() * 1e3;
+                shared.controllers[class_idx]
+                    .lock()
+                    .unwrap()
+                    .observe_exec(tier, exec_ms);
+                let row_len = out.logits.len() / batch;
+                let mut r = 0usize;
+                for (ui, unit) in units[lo..hi].iter().enumerate() {
+                    let mut unit_rows = Vec::with_capacity(unit.len());
+                    for _ in 0..unit.len() {
+                        unit_rows.push(
+                            out.logits[r * row_len..(r + 1) * row_len]
+                                .to_vec());
+                        r += 1;
+                    }
+                    fates[lo + ui] = Some(UnitFate::Served(unit_rows));
+                }
+                return Ok(failed);
+            }
+            ExecTry::Transient(msg) => {
+                failed = true;
+                last_msg = msg;
+            }
+            ExecTry::Fatal(msg) => return Err(msg),
+        }
+    }
+    // retries exhausted on this span: bisect if it can still be split,
+    // quarantine the singleton otherwise
+    if hi - lo >= 2 {
+        faults.splits.fetch_add(1, Ordering::SeqCst);
+        let mid = lo + (hi - lo) / 2;
+        exec_span(shared, class_idx, exec, tier, units, lo, mid, fates)?;
+        exec_span(shared, class_idx, exec, tier, units, mid, hi, fates)?;
+    } else {
+        faults.poisoned.fetch_add(1, Ordering::SeqCst);
+        fates[lo] = Some(UnitFate::Poisoned(last_msg));
+    }
+    Ok(true)
+}
+
 /// The worker loop: pop a run of *class-compatible* admitted work items
 /// (the tightest-slack available head seeds the run — deadline-aware
 /// stealing — own shard winning ties, siblings drained when it runs
@@ -250,9 +437,17 @@ pub(crate) fn fail_batch(shared: &EngineShared, items: Vec<Pending>,
 /// backend call, so host-side batch formation bills as queue time, not
 /// exec time) -> `done`.  `queue_ms + exec_ms == total_ms` exactly, and
 /// neither can go negative on fast completions.
+///
+/// Faults never exit this loop quietly: transient execute failures run
+/// the retry → bisect → quarantine ladder in place
+/// ([`execute_quarantine`]), and only a FATAL fault (panic or
+/// [`FatalExecError`]) returns — as `Err(WorkerFault)` carrying the
+/// in-flight batch, so the engine's supervision loop can rebuild the
+/// executor and requeue the work.  `Ok` means the queue closed and
+/// drained.
 pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
                          class_idx: usize, exec: &mut dyn Executor)
-                         -> Result<usize> {
+                         -> Result<usize, WorkerFault> {
     let batch = exec.batch().max(1);
     let seq_len = exec.seq_len();
     let class_name = shared.classes[class_idx].0.clone();
@@ -260,6 +455,16 @@ pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
     let arena = &shared.arenas[class_idx];
     let mut batches = 0usize;
     loop {
+        // one breaker tick per pop cycle: an Open class backs off the
+        // shared queue briefly (healthy classes win the steal race for
+        // its would-be batches) and serves whatever it does pop in
+        // brownout — at the cheapest floored tier — instead of
+        // shedding; Half-open probes at the normally-chosen tier so
+        // recovery is actually tested at real quality
+        let breaker = controller.lock().unwrap().breaker_tick();
+        if breaker == BreakerState::Open {
+            std::thread::sleep(Duration::from_millis(1));
+        }
         let popped = shared.queue.pop_batch_keyed_affine(
             worker, batch, shared.max_batch_wait,
             |p: &Pending| {
@@ -362,9 +567,15 @@ pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
         // decode) and strictest quality floor; the floor is the max
         // over a run that already shares one floor rung, so the clamp
         // binds every member alike.  Decode steps get this decision
-        // FRESH every step — per-step elastic compute.
-        let tier = controller.lock().unwrap().choose_for_batch(
-            shared.queue.len(), floor, slack_ms);
+        // FRESH every step — per-step elastic compute.  An Open
+        // breaker overrides the choice with brownout: the cheapest
+        // rung the batch's quality floor allows.
+        let tier = if breaker == BreakerState::Open {
+            shared.caps[floor_rung(&shared.caps, floor)]
+        } else {
+            controller.lock().unwrap().choose_for_batch(
+                shared.queue.len(), floor, slack_ms)
+        };
         // build each item's compute row: a one-shot's row is its
         // request tokens, a decode step's is served from this class's
         // arena when a live page matches the step (the incremental hit
@@ -408,53 +619,90 @@ pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
         if items.is_empty() {
             continue;
         }
-        let row_refs: Vec<&[i32]> =
-            rows.iter().map(|r| r.as_slice()).collect();
-        let tokens = form_rows(&row_refs, batch, seq_len);
-        drop(row_refs);
+        // quarantine granularity on this path is one ROW: each unit is
+        // a single one-shot request or a single decode step, so the
+        // bisect ladder can isolate exactly one poison item
+        let mut units: Vec<Vec<Vec<i32>>> =
+            rows.into_iter().map(|r| vec![r]).collect();
         exec.note_batch_mix(items.len() - cached_rows, cached_rows);
         // stamped after batch formation, immediately before the backend
         // call: the documented clock is admission -> exec start -> done,
-        // and host-side formation is queue time, not exec time
+        // and host-side formation is queue time, not exec time (the
+        // ladder's retries and backoff DO bill as exec time — the
+        // client waited on them)
         let exec_start = Instant::now();
-        let out = match exec.execute(tier, &tokens) {
-            Ok(out) => out,
-            Err(e) => {
-                let msg = format!(
-                    "{} worker {worker}: tier {tier} batch of {}: {e:#}",
-                    exec.name(), items.len());
-                let n = items.len();
-                fail_batch(shared, items, &msg, &class_name);
-                return Err(e.context(format!(
-                    "{} worker {worker}: tier {tier} batch of {n}",
-                    exec.name())));
+        let (fates, any_fail) = match execute_quarantine(
+            shared, class_idx, exec, tier, &units)
+        {
+            Ok(ok) => ok,
+            Err(fatal) => {
+                // FATAL: executor state unknown.  Hand the batch back
+                // intact — one-shot tokens restored (they were moved
+                // into the unit rows above) — so supervision can
+                // rebuild the executor and requeue the work; nothing
+                // here has been resolved yet, so the requeue cannot
+                // double-deliver.
+                controller.lock().unwrap().observe_batch_outcome(false);
+                let mut inflight = items;
+                for (i, p) in inflight.iter_mut().enumerate() {
+                    if matches!(p.outcome, Outcome::OneShot(_)) {
+                        p.req.tokens = std::mem::take(&mut units[i][0]);
+                    }
+                }
+                let n = inflight.len();
+                return Err(WorkerFault {
+                    msg: format!(
+                        "{} worker {worker}: tier {tier} batch of {n}: \
+                         {fatal}",
+                        exec.name()),
+                    inflight,
+                });
             }
         };
+        // the breaker judges whole-batch health: any transient fault in
+        // the ladder counts one failed observation for this class
+        controller.lock().unwrap().observe_batch_outcome(!any_fail);
         let done = Instant::now();
         let exec_ms = done
             .saturating_duration_since(exec_start)
             .as_secs_f64() * 1e3;
-        // feed the latency model of THIS class only: a slow backend's
-        // timings never pollute a fast class's deadline decisions
-        controller.lock().unwrap().observe_exec(tier, exec_ms);
-        // the executor contract is one equal-size logits row per batch
-        // slot (padded rows included); a violating backend must surface
-        // as an error, not as silently truncated rows handed to callers
-        if out.logits.len() % batch != 0 {
-            let msg = format!(
-                "{} worker {worker}: executor returned {} logits, not a \
-                 multiple of batch {batch}",
-                exec.name(), out.logits.len());
-            fail_batch(shared, items, &msg, &class_name);
-            return Err(anyhow::anyhow!(msg));
-        }
         let n = items.len();
-        let row_len = out.logits.len() / batch;
         let mut batch_completions = Vec::with_capacity(n);
+        let mut poison_sheds: Vec<ShedRecord> = Vec::new();
         let mut stream_done = Vec::new();
         let mut stream_sheds: Vec<StreamShedRecord> = Vec::new();
-        for (i, p) in items.into_iter().enumerate() {
-            let row = &out.logits[i * row_len..(i + 1) * row_len];
+        for (i, (p, fate)) in items.into_iter().zip(fates).enumerate() {
+            let unit_rows = match fate {
+                UnitFate::Served(unit_rows) => unit_rows,
+                UnitFate::Poisoned(msg) => {
+                    // the quarantined unit resolves with an explicit
+                    // Poisoned verdict — its co-batched neighbours
+                    // resolve normally below
+                    match p.outcome {
+                        Outcome::OneShot(responder) => {
+                            poison_sheds.push(ShedRecord {
+                                id: p.req.id,
+                                class: p.req.slo.name.clone(),
+                                worker_class: class_name.clone(),
+                                cause: ShedCause::Poisoned,
+                            });
+                            responder
+                                .fulfil(Err(ServeError::Poisoned(msg)));
+                        }
+                        Outcome::Stream(st) => {
+                            if let Some(rec) = shared.sessions.shed(
+                                st.session, ServeError::Poisoned(msg),
+                                &class_name)
+                            {
+                                stream_sheds.push(rec);
+                            }
+                            shared.recycle_session(st.session);
+                        }
+                    }
+                    continue;
+                }
+            };
+            let row = &unit_rows[0];
             match p.outcome {
                 Outcome::OneShot(responder) => {
                     let queue_ms = exec_start
@@ -492,7 +740,8 @@ pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
                             // executed and slide it — the incremental
                             // update the recompute path exists to
                             // avoid
-                            let mut win = std::mem::take(&mut rows[i]);
+                            let mut win =
+                                std::mem::take(&mut units[i][0]);
                             win.push(token);
                             if win.len() > seq_len {
                                 let cut = win.len() - seq_len;
@@ -540,6 +789,9 @@ pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
         // one lock per log for the whole batch, not one per item
         if !batch_completions.is_empty() {
             shared.completions.lock().unwrap().extend(batch_completions);
+        }
+        if !poison_sheds.is_empty() {
+            shared.sheds.lock().unwrap().append(&mut poison_sheds);
         }
         if !stream_done.is_empty() {
             shared.stream_done.lock().unwrap().append(&mut stream_done);

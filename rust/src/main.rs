@@ -14,7 +14,7 @@
 //!                  [--queue-shards K] [--depth-per-tier D] [--seed S]
 //!                  [--worker-classes fast=2:slow=2@4]
 //!                  [--stream N] [--decode-steps K]
-//!                  [--spec-k K] [--divergence D]
+//!                  [--spec-k K] [--divergence D] [--fault-rate P]
 //!   info           --config C
 //!
 //! Everything except `serve-sim` runs off the AOT artifacts in
@@ -28,7 +28,7 @@ use anyhow::{bail, Result};
 use elastiformer::cli::Args;
 use elastiformer::coordinator::serving::{
     sim, Admission, ElasticEngine, Request, Response, ServeConfig,
-    ServeReport, SimSpec, StreamRequest,
+    ServeError, ServeReport, SimSpec, StreamRequest,
 };
 use elastiformer::rng::Rng;
 
@@ -104,6 +104,12 @@ elastiformer — ElastiFormer reproduction (see DESIGN.md)
                accept rate.  D in [0,1] makes floored tiers disagree
                with the verifier, scaled by tier distance; 0 = always
                agree)
+              --fault-rate P
+              (chaos injection: per-execute transient failure
+               probability in the sim backend, skewed toward cheap
+               tiers.  The fault ladder retries with backoff, bisects
+               still-failing batches, and quarantines poison requests;
+               survived faults land in the report's fault sections)
   elastiformer info --config lm_tiny";
 
 /// The artifact-backed subcommands need the PJRT runtime layer; when
@@ -334,6 +340,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 /// Wait out every per-request response; returns how many resolved to a
 /// serve error (shed deadline, worker failure, shutdown).
+#[cfg(feature = "pjrt")]
 fn drain_responses(responses: Vec<Response>) -> usize {
     let mut failed = 0usize;
     for r in responses {
@@ -385,7 +392,7 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
                        "queue-bound", "queue-shards", "depth-per-tier",
                        "seed", "worker-classes", "stream",
                        "decode-steps", "arena-pages", "spec-k",
-                       "divergence"])?;
+                       "divergence", "fault-rate"])?;
     let n = args.usize_or("requests", 512)?;
     let workers = args.usize_or("workers", 4)?;
     let seed = args.u64_or("seed", 42)?;
@@ -404,6 +411,13 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
     let divergence = args.f64_or("divergence", 0.0)?;
     if !(0.0..=1.0).contains(&divergence) {
         bail!("--divergence must be in [0, 1], got {divergence}");
+    }
+    // chaos injection: per-execute transient failure probability for
+    // the sim backend; the fault ladder (retry -> bisect -> quarantine)
+    // must absorb it without an outage
+    let fault_rate = args.f64_or("fault-rate", 0.0)?;
+    if !(0.0..1.0).contains(&fault_rate) {
+        bail!("--fault-rate must be in [0, 1), got {fault_rate}");
     }
     // 0 = auto (one admission shard per worker); 1 = the classic
     // shared queue, kept for A/B comparison
@@ -429,6 +443,10 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
     spec.seq_len = args.usize_or("seq-len", spec.seq_len)?;
     spec.seed = seed;
     spec.divergence = divergence;
+    if fault_rate > 0.0 {
+        spec.fault.fail_p = fault_rate;
+        spec.fault.tier_bias = 0.5; // cheap tiers proportionally flakier
+    }
     if spec.batch == 0 || spec.seq_len == 0 {
         bail!("--batch and --seq-len must be >= 1");
     }
@@ -464,11 +482,11 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
                  String::new()
              });
     for rate in rates {
-        let (report, shed) = run_sim_point(spec, workers, queue_bound,
-                                           queue_shards, depth_per_tier,
-                                           classes.as_deref(), n, rate,
-                                           seed, stream_n, decode_steps,
-                                           arena_pages, spec_k)?;
+        let (report, shed, poisoned) =
+            run_sim_point(spec, workers, queue_bound, queue_shards,
+                          depth_per_tier, classes.as_deref(), n, rate,
+                          seed, stream_n, decode_steps, arena_pages,
+                          spec_k)?;
         let tiers: Vec<String> = report
             .tier_counts
             .iter()
@@ -518,6 +536,22 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
                          report.spec_rejected,
                          report.tokens_per_admission());
             }
+        }
+        // fault-tolerance economy: what the ladder absorbed on the way
+        // to this row (retries, bisections, quarantines, respawns),
+        // plus anything the fleet survived but recorded
+        for f in report.fault_sections() {
+            println!("    faults {:<10} retries {:>4} | splits {:>3} | \
+                      quarantined {:>3} | respawns {:>2} | \
+                      breaker trips {:>2}",
+                     f.class, f.retries, f.splits, f.poisoned,
+                     f.respawns, f.breaker_trips);
+        }
+        if poisoned > 0 {
+            println!("    {poisoned} request(s) quarantined as poison");
+        }
+        for e in &report.worker_errors {
+            println!("    worker error (survived): {e}");
         }
         if classes.is_some() {
             // per-worker-class split: each class's share, tier mix and
@@ -590,7 +624,7 @@ fn run_sim_point(spec: SimSpec, workers: usize, queue_bound: usize,
                  rate: f64, seed: u64, stream_n: usize,
                  decode_steps: usize, arena_pages: usize,
                  spec_k: usize)
-                 -> Result<(ServeReport, usize)> {
+                 -> Result<(ServeReport, usize, usize)> {
     let mut cfg = ServeConfig::sim()
         .with_workers(workers)
         .with_queue_bound(queue_bound)
@@ -660,7 +694,17 @@ fn run_sim_point(spec: SimSpec, workers: usize, queue_bound: usize,
         streams.push(engine.submit_stream(StreamRequest::new(
             id, prompt, decode_steps)));
     }
-    let failed = drain_responses(responses);
+    let (mut failed, mut poisoned) = (0usize, 0usize);
+    for r in responses {
+        match r.wait() {
+            Ok(_) => {}
+            // a quarantined request is the fault ladder working as
+            // designed — the bisection isolated a poison batch and
+            // shed only it — so it is counted, not fatal
+            Err(ServeError::Poisoned(_)) => poisoned += 1,
+            Err(_) => failed += 1,
+        }
+    }
     if failed > 0 {
         bail!("{failed} admitted sim requests resolved with an error");
     }
@@ -676,7 +720,7 @@ fn run_sim_point(spec: SimSpec, workers: usize, queue_bound: usize,
         bail!("{stream_failed} decode session(s) were shed unexpectedly");
     }
     let report = engine.shutdown()?;
-    Ok((report, shed))
+    Ok((report, shed, poisoned))
 }
 
 #[cfg(feature = "pjrt")]

@@ -22,7 +22,7 @@
 use std::path::Path;
 
 use elastiformer::coordinator::serving::sim::{self, BenchRow};
-use elastiformer::coordinator::serving::SimSpec;
+use elastiformer::coordinator::serving::{FaultPlan, SimSpec};
 use elastiformer::json;
 
 #[test]
@@ -46,7 +46,8 @@ fn bench_gate_records_shared_vs_sharded_pipeline() {
         assert_eq!(ids, (0..n as u64).collect::<Vec<_>>(),
                    "{label}: dropped or duplicated requests");
         rows.push(BenchRow { queue: label, workers, shards,
-                             classes: String::new(), report });
+                             classes: String::new(), fault_rate: 0.0,
+                             submitted: 0, report });
     }
     // heterogeneous topology: 2 fast + 2 slow (4x latency) workers,
     // one capacity controller per class — the mixed-fleet perf record
@@ -68,6 +69,7 @@ fn bench_gate_records_shared_vs_sharded_pipeline() {
                "hetero report must carry both worker classes");
     rows.push(BenchRow { queue: "hetero", workers, shards: workers,
                          classes: "fast=2:slow=2".into(),
+                         fault_rate: 0.0, submitted: 0,
                          report: hetero });
     // streaming decode row: concurrent sessions through submit_stream,
     // every token a re-admitted decode step (continuous batching).
@@ -91,7 +93,8 @@ fn bench_gate_records_shared_vs_sharded_pipeline() {
     assert!(streaming.cache_hits > 0,
             "the default session arena must serve some decode rows");
     rows.push(BenchRow { queue: "streaming", workers, shards: workers,
-                         classes: String::new(), report: streaming });
+                         classes: String::new(), fault_rate: 0.0,
+                         submitted: 0, report: streaming });
     // speculative decode row: sessions draft at the cheapest floored
     // tier and verify at the top tier; speculative_point itself
     // asserts the ledger reconciles (drafted == accepted + rejected).
@@ -116,7 +119,40 @@ fn bench_gate_records_shared_vs_sharded_pipeline() {
              plain economy, got {}",
             speculative.tokens_per_admission());
     rows.push(BenchRow { queue: "speculative", workers, shards: workers,
-                         classes: String::new(), report: speculative });
+                         classes: String::new(), fault_rate: 0.0,
+                         submitted: 0, report: speculative });
+    // chaos row: the same speculative workload under a seeded fault
+    // plan — 10% transient failures skewed toward cheap tiers plus one
+    // always-poisoned request — records availability and the
+    // fault-ladder economy (retries, bisections, quarantines).
+    // faults_point itself asserts that only the poison request is
+    // quarantined and every session completes its full budget.
+    let fault_rate = 0.1;
+    let fault_spec = SimSpec {
+        fault: FaultPlan {
+            fail_p: fault_rate,
+            tier_bias: 0.5,
+            poison_token: 661,
+            ..FaultPlan::default()
+        },
+        ..spec_stream
+    };
+    let (fn_oneshots, fn_sessions) = (128usize, 8usize);
+    let faults = sim::faults_point(fault_spec, workers, workers,
+                                   fn_oneshots, fn_sessions,
+                                   decode_steps, 4)
+        .unwrap_or_else(|e| panic!("chaos pipeline failed: {e:#}"));
+    // the poison one-shot is shed, everything else must survive
+    assert_eq!(faults.completions.len(), fn_oneshots - 1,
+               "faults: non-poison requests lost");
+    assert_eq!(faults.stream_done.len(), fn_sessions,
+               "faults: sessions lost");
+    assert!(!faults.fault_sections().is_empty(),
+            "chaos run must record fault-ladder activity");
+    rows.push(BenchRow { queue: "faults", workers, shards: workers,
+                         classes: String::new(), fault_rate,
+                         submitted: fn_oneshots + fn_sessions,
+                         report: faults });
     let path = Path::new(
         concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serving.json"));
     // never stomp an authoritative release-mode record with debug
@@ -144,7 +180,7 @@ fn bench_gate_records_shared_vs_sharded_pipeline() {
         assert_eq!(doc.req("bench").unwrap().as_str().unwrap(),
                    "sim_pipeline");
         let results = doc.req("results").unwrap().as_arr().unwrap();
-        assert_eq!(results.len(), 5);
+        assert_eq!(results.len(), 6);
         let streaming_row = results
             .iter()
             .find(|r| {
@@ -211,6 +247,35 @@ fn bench_gate_records_shared_vs_sharded_pipeline() {
                 .as_arr().unwrap()
                 .len(),
             2, "hetero row must carry both per-class sections");
+        let faults_row = results
+            .iter()
+            .find(|r| {
+                r.req("queue")
+                    .ok()
+                    .and_then(|q| q.as_str().ok())
+                    .is_some_and(|q| q == "faults")
+            })
+            .expect("record must carry the chaos-injection row");
+        let avail = faults_row
+            .req("availability").unwrap()
+            .as_f64().unwrap();
+        assert!(avail.is_finite() && avail > 0.9 && avail <= 1.0,
+                "nonsense chaos availability {avail}");
+        let submitted = faults_row
+            .req("submitted").unwrap()
+            .as_f64().unwrap();
+        let poisoned = faults_row
+            .req("poisoned").unwrap()
+            .as_f64().unwrap();
+        assert!(poisoned >= 1.0 && poisoned <= submitted,
+                "chaos row must quarantine the poison request and \
+                 nothing close to everything: {poisoned} of {submitted}");
+        let retries = faults_row
+            .req("retries").unwrap()
+            .as_f64().unwrap();
+        assert!(retries > 0.0,
+                "a 10% transient fault rate must exercise the retry \
+                 ladder, recorded {retries}");
         let speedup = doc
             .req("speedup_sharded_over_shared").unwrap()
             .req("w4").unwrap()

@@ -11,8 +11,9 @@ use elastiformer::checkpoint::Checkpoint;
 use elastiformer::coordinator::schedule::LrSchedule;
 use elastiformer::coordinator::serving::{
     floor_rung, form_batch, sim, AdmissionQueue, CapacityController,
-    ElasticEngine, ExecOutput, Executor, Request, Response, ServeConfig,
-    ServeError, SimSpec, SloClass, StreamEvent, StreamRequest,
+    ElasticEngine, ExecOutput, Executor, FaultPlan, FaultPolicy, Request,
+    Response, ServeConfig, ServeError, SimSpec, SloClass, StreamEvent,
+    StreamRequest,
 };
 
 mod common;
@@ -995,6 +996,152 @@ fn prop_speculative_sessions_terminate_exactly_once_under_rejection_and_panics()
                     return Err(format!(
                         "class {} section ledger broken", sec.class));
                 }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_no_request_lost_under_chaos() {
+    // fault-layer backbone: across chaos-injected sim fleets (random
+    // transient/fatal/spike plans with tier skew) and hostile
+    // PanicAfter fleets with tiny restart budgets, plus mid-run
+    // shutdown racing live retry ladders and draft/verify cycles,
+    // every submit still resolves exactly once and every stream still
+    // terminates in exactly one terminal event.  Injected faults are
+    // supervised — shutdown itself must stay Ok — and on the report
+    // the speculative ledger reconciles, a clean plan leaves no fault
+    // sections, and in the PanicAfter arm (where abnormal exits are
+    // exactly countable from the shared batch counter) the respawn
+    // counter equals min(abnormal exits, restart budget), with the
+    // budget-exhausted breadcrumb recorded whenever exits overran it.
+    check("no_request_lost_under_chaos", 10, |rng| {
+        let n = 1 + rng.below(40);
+        let sessions = rng.below(5);
+        let max_steps = 1 + rng.below(4);
+        let workers = 1 + rng.below(3);
+        let batch = 1 + rng.below(4);
+        let hostile = rng.chance(0.5);
+        let panic_after = rng.below(24); // 0 => instant fleet death
+        let budget = rng.below(4); // incl. 0 = no respawns allowed
+        let executed = Arc::new(AtomicUsize::new(0));
+        let policy = FaultPolicy::default()
+            .with_backoff_ms(0)
+            .with_restart_budget(if hostile { budget } else { 32 });
+        let fault = FaultPlan {
+            fail_p: if rng.chance(0.25) { 0.0 } else { rng.f64() * 0.25 },
+            fatal_p: if rng.chance(0.5) { 0.0 } else { rng.f64() * 0.04 },
+            spike_p: rng.f64() * 0.2,
+            spike_ms: rng.f64() * 2.0,
+            tier_bias: rng.f64() * 0.5,
+            poison_token: 0,
+        };
+        let cfg = ServeConfig::sim()
+            .with_workers(workers)
+            .with_queue_shards(rng.below(workers + 2))
+            .with_queue_bound(1 + rng.below(32))
+            .with_spec_k(1 + rng.below(3))
+            .with_fault_policy(policy)
+            .with_max_batch_wait(Duration::ZERO);
+        let caps = cfg.capacities();
+        let engine = if hostile {
+            let counter = executed.clone();
+            ElasticEngine::start(cfg, move |_| {
+                Ok(Box::new(PanicAfter {
+                    executed: counter.clone(),
+                    panic_after,
+                    batch,
+                }) as Box<dyn Executor>)
+            })
+        } else {
+            let spec =
+                SimSpec { batch, seq_len: 8, fault, ..SimSpec::instant() };
+            ElasticEngine::start(cfg, sim::factory(spec, caps))
+        }
+        .map_err(|e| format!("start failed: {e:#}"))?;
+        let responses: Vec<Response> = (0..n as u64)
+            .map(|id| engine.submit(sim_request(id, vec![1; 8])))
+            .collect();
+        let streams: Vec<_> = (0..sessions as u64)
+            .map(|id| {
+                engine.submit_stream(
+                    StreamRequest::new(1000 + id, vec![1; 4], max_steps))
+            })
+            .collect();
+        // mid-run shutdown: the close races live retries and respawns
+        let shutdown_result = engine.shutdown();
+        let mut served = 0usize;
+        for r in responses {
+            match r.wait_timeout(Duration::from_secs(30)) {
+                Some(Ok(_)) => served += 1,
+                Some(Err(_)) => {} // shed/quarantined/failed: resolved
+                None => return Err("a response never resolved".into()),
+            }
+        }
+        for s in streams {
+            let mut terminals = 0usize;
+            loop {
+                match s.recv_timeout(Duration::from_secs(30)) {
+                    Ok(Some(StreamEvent::Token { .. })) => {}
+                    Ok(Some(_)) => terminals += 1,
+                    Ok(None) => break,
+                    Err(_) => {
+                        return Err("a stream never terminated".into());
+                    }
+                }
+            }
+            if terminals != 1 {
+                return Err(format!(
+                    "{terminals} terminal events on one stream"));
+            }
+        }
+        // injected faults are supervised: never a join-level panic
+        let report = shutdown_result
+            .map_err(|e| format!("shutdown errored: {e:#}"))?;
+        if report.completions.len() != served {
+            return Err(format!("report says {} served, callers saw {served}",
+                               report.completions.len()));
+        }
+        if report.spec_drafted
+            != report.spec_accepted + report.spec_rejected
+        {
+            return Err(format!(
+                "speculative ledger broken: {} drafted != {} accepted \
+                 + {} rejected", report.spec_drafted,
+                report.spec_accepted, report.spec_rejected));
+        }
+        let respawns: usize =
+            report.fault_sections().iter().map(|s| s.respawns).sum();
+        if hostile {
+            // every execute bumped the shared counter before deciding
+            // to panic, so calls past the threshold are exactly the
+            // abnormal exits — and each one spends one respawn attempt
+            let exits = executed
+                .load(Ordering::SeqCst)
+                .saturating_sub(panic_after);
+            if respawns != exits.min(budget) {
+                return Err(format!(
+                    "{respawns} respawns for {exits} abnormal exits \
+                     under budget {budget}"));
+            }
+            if exits > budget
+                && !report
+                    .worker_errors
+                    .iter()
+                    .any(|e| e.contains("restart budget exhausted"))
+            {
+                return Err(
+                    "budget overrun left no breadcrumb in \
+                     worker_errors".into());
+            }
+        } else if fault.fail_p == 0.0 && fault.fatal_p == 0.0 {
+            // spikes are latency, not faults: a clean plan must leave
+            // the fault ledger empty
+            if !report.fault_sections().is_empty() {
+                return Err(format!(
+                    "clean fault plan produced fault sections: {:?}",
+                    report.fault_sections()));
             }
         }
         Ok(())

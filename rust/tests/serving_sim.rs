@@ -22,8 +22,8 @@ use std::time::Duration;
 use anyhow::Result;
 
 use elastiformer::coordinator::serving::{
-    sim, Admission, ElasticEngine, ExecOutput, Executor, Request,
-    Response, ServeConfig, ServeError, ServeReport, ShedCause,
+    sim, Admission, ElasticEngine, ExecOutput, Executor, FaultPlan,
+    Request, Response, ServeConfig, ServeError, ServeReport, ShedCause,
     ShedReason, SimSpec, SloClass, StreamEvent, StreamRequest,
     WorkerClassStats,
 };
@@ -1260,6 +1260,157 @@ fn always_rejected_drafts_shrink_k_and_still_finish_every_session() {
     assert!(report.spec_drafted <= cycles + sessions * spec_k,
             "draft waste must be bounded near one per cycle, got {} \
              over {} cycles", report.spec_drafted, cycles);
+}
+
+#[test]
+fn chaos_fleet_absorbs_faults_with_high_availability() {
+    // robustness acceptance: 10% injected transient fault rate plus a
+    // deterministic poison request, speculative decode on.  The fleet
+    // must absorb every fault without ever closing — every innocent
+    // submission resolves served, only the poison is quarantined as
+    // Poisoned — and availability stays >= 0.99.
+    let spec = SimSpec {
+        batch: 4,
+        seq_len: 16,
+        divergence: 0.1,
+        fault: FaultPlan {
+            fail_p: 0.1,
+            tier_bias: 0.5,
+            poison_token: 661,
+            ..FaultPlan::default()
+        },
+        ..SimSpec::instant()
+    };
+    let (n, sessions, steps, spec_k) = (120usize, 8usize, 6usize, 3usize);
+    // faults_point itself asserts the hard contracts: no one-shot may
+    // resolve anything but Ok (or Poisoned, for the poison id only),
+    // every session must run its full budget, and the stream logs must
+    // reconcile — any engine closure under way fails it
+    let report = sim::faults_point(spec, 4, 4, n, sessions, steps, spec_k)
+        .expect("the fleet must absorb injected faults without an outage");
+    let submitted = n + sessions;
+    let served = report.completions.len() + report.stream_done.len();
+    let availability = served as f64 / submitted as f64;
+    assert!(availability >= 0.99,
+            "availability {availability:.4} under 10% faults \
+             ({served}/{submitted})");
+    assert_eq!(report.completions.len(), n - 1,
+               "exactly the poison one-shot is lost");
+    assert_eq!(report.stream_done.len(), sessions,
+               "every decode session finished");
+    // the quarantine is visible in the shed log with its own cause
+    assert!(report.sheds.iter().any(|s| s.cause == ShedCause::Poisoned),
+            "poison shed missing from the log: {:?}", report.sheds);
+    // and the fault ladder's work is accounted per class
+    let faults = report.fault_sections();
+    assert!(!faults.is_empty(), "chaos must leave fault sections");
+    let retries: usize = faults.iter().map(|f| f.retries).sum();
+    let poisoned: usize = faults.iter().map(|f| f.poisoned).sum();
+    assert!(retries > 0, "10% fault rate must exercise the retry ladder");
+    assert!(poisoned >= 1, "the poison unit must be counted");
+    // the speculative ledger still reconciles under chaos
+    assert_eq!(report.spec_drafted,
+               report.spec_accepted + report.spec_rejected,
+               "chaos must not corrupt the speculative ledger");
+}
+
+/// Executor whose *bottom* draft rung always disagrees with the
+/// verifier while every higher rung always agrees — the accept-rate
+/// signal that draft-tier escalation is judged by.
+struct RungSensitiveExec {
+    batch: usize,
+    seq_len: usize,
+    bottom: f32,
+}
+
+impl Executor for RungSensitiveExec {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+    fn execute(&mut self, tier: f32, _tokens: &[i32])
+               -> Result<ExecOutput> {
+        let row: [f32; 2] = if (tier - self.bottom).abs() < 1e-6 {
+            [0.0, 1.0] // bottom rung: token 1 — always rejected
+        } else {
+            [1.0, 0.0] // any higher rung (and the verifier): token 0
+        };
+        let mut logits = Vec::with_capacity(self.batch * 2);
+        for _ in 0..self.batch {
+            logits.extend_from_slice(&row);
+        }
+        Ok(ExecOutput { logits })
+    }
+}
+
+#[test]
+fn low_accept_rate_escalates_draft_tier_one_rung() {
+    // draft-tier feedback: with the bottom rung's proposals always
+    // rejected, the per-class accept-rate EWMA collapses and the
+    // drafter must move one rung up — where proposals agree and are
+    // accepted.  Any accepted proposal at the second-lowest tier is
+    // proof of the escalation (the bottom rung can never be accepted
+    // by construction).
+    let (batch, seq_len, spec_k) = (8usize, 16usize, 3usize);
+    let cfg = ServeConfig::sim()
+        .with_workers(1)
+        .with_spec_k(spec_k)
+        .with_max_batch_wait(Duration::from_millis(1));
+    let caps = cfg.capacities();
+    let bottom = *caps.last().unwrap();
+    let second = caps[caps.len() - 2];
+    let engine = ElasticEngine::start(cfg, move |_| {
+        Ok(Box::new(RungSensitiveExec { batch, seq_len, bottom })
+            as Box<dyn Executor>)
+    })
+    .unwrap();
+    let (sessions, steps) = (3usize, 12usize);
+    let streams: Vec<_> = (0..sessions as u64)
+        .map(|id| {
+            engine.submit_stream(StreamRequest::new(id, vec![1; 4], steps))
+        })
+        .collect();
+    let mut saw_escalated_accept = false;
+    for s in streams {
+        let sid = s.id();
+        let mut got = 0usize;
+        loop {
+            match s.recv_timeout(Duration::from_secs(30)) {
+                Ok(Some(StreamEvent::Token { step, tier, .. })) => {
+                    got += 1;
+                    // post-prefill tokens are either accepted drafts
+                    // (emitted at the draft tier) or verifier fallback
+                    // tokens (top tier); the second-lowest rung can
+                    // only mean an accepted escalated draft
+                    if step > 0 && (tier - second).abs() < 1e-6 {
+                        saw_escalated_accept = true;
+                    }
+                }
+                Ok(Some(StreamEvent::Done(stats))) => {
+                    assert_eq!(stats.steps, steps);
+                }
+                Ok(Some(StreamEvent::Shed(e))) => {
+                    panic!("session {sid} shed on an open engine: {e}")
+                }
+                Ok(None) => break,
+                Err(_) => panic!("session {sid} never terminated"),
+            }
+        }
+        assert_eq!(got, steps, "session {sid} truncated");
+    }
+    let report = engine.shutdown().unwrap();
+    assert_eq!(report.stream_done.len(), sessions);
+    assert!(report.spec_rejected > 0,
+            "bottom-rung drafts must be rejected first");
+    assert!(report.spec_accepted > 0,
+            "escalated drafts at tier {second} must be accepted — the \
+             accept-rate feedback never escalated");
+    assert!(saw_escalated_accept,
+            "accepted drafts must stream at the escalated rung");
+    assert_eq!(report.spec_drafted,
+               report.spec_accepted + report.spec_rejected);
 }
 
 #[test]
