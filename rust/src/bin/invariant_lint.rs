@@ -1,0 +1,83 @@
+//! Binary wrapper for the serving-subsystem invariant linter (the
+//! scanner itself is `elastiformer::lint`, so the test harness in
+//! `rust/tests/invariant_lint.rs` can drive it as a library).
+//!
+//! Usage:
+//!
+//! ```text
+//! cargo run --bin invariant-lint -- rust/src                # gate (CI)
+//! cargo run --bin invariant-lint -- --list-allows rust/src  # escape audit
+//! ```
+//!
+//! Exit codes: 0 clean, 1 findings, 2 usage/IO error.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use elastiformer::lint;
+
+fn main() -> ExitCode {
+    let mut list_allows = false;
+    let mut root: Option<String> = None;
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--list-allows" => list_allows = true,
+            "--help" | "-h" => {
+                println!(
+                    "invariant-lint [--list-allows] [ROOT]\n\
+                     scan ROOT (default rust/src) for serving-subsystem \
+                     concurrency-invariant violations");
+                return ExitCode::SUCCESS;
+            }
+            other if other.starts_with('-') => {
+                eprintln!("invariant-lint: unknown flag {other}");
+                return ExitCode::from(2);
+            }
+            other => root = Some(other.to_string()),
+        }
+    }
+    let root = root.unwrap_or_else(|| {
+        // default works from the workspace root; fall back to the
+        // crate dir so `cargo run` from rust/ also just works
+        if Path::new("rust/src").is_dir() {
+            "rust/src".to_string()
+        } else {
+            "src".to_string()
+        }
+    });
+    let root = Path::new(&root);
+    if !root.is_dir() {
+        eprintln!("invariant-lint: {} is not a directory",
+                  root.display());
+        return ExitCode::from(2);
+    }
+    let (findings, allows) = match lint::scan_tree(root) {
+        Ok(out) => out,
+        Err(e) => {
+            eprintln!("invariant-lint: scanning {}: {e}",
+                      root.display());
+            return ExitCode::from(2);
+        }
+    };
+    if list_allows {
+        // the exception budget: every escape with file/line/reason,
+        // uploadable as a CI artifact for per-PR review
+        for a in &allows {
+            println!("{a}");
+        }
+        println!("{} allow escape(s)", allows.len());
+        return ExitCode::SUCCESS;
+    }
+    for f in &findings {
+        println!("{f}");
+    }
+    if findings.is_empty() {
+        println!(
+            "invariant-lint: clean ({} allow escape(s) in force — \
+             run --list-allows for the audit)", allows.len());
+        ExitCode::SUCCESS
+    } else {
+        println!("invariant-lint: {} finding(s)", findings.len());
+        ExitCode::FAILURE
+    }
+}

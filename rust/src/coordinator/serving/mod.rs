@@ -119,11 +119,13 @@ pub use worker::XlaExecutor;
 use std::fmt;
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
+
+use crate::sync::{Rank, RankedCondvar, RankedMutex};
 
 /// Service contract one request is submitted under: an optional total
 /// latency deadline and a minimum acceptable capacity tier.  The class
@@ -529,8 +531,10 @@ enum SlotState {
 }
 
 struct Slot {
-    state: Mutex<SlotState>,
-    cv: Condvar,
+    // Rank::ResponseSlot is a leaf: nothing else is ever acquired
+    // while a slot is held (resolution writes and returns)
+    state: RankedMutex<SlotState>,
+    cv: RankedCondvar,
 }
 
 /// One-shot completion future for a submitted request, backed by a
@@ -547,8 +551,9 @@ impl Response {
     /// Create the (engine-side responder, caller-side response) pair.
     pub(crate) fn channel(id: u64) -> (Responder, Response) {
         let slot = Arc::new(Slot {
-            state: Mutex::new(SlotState::Pending),
-            cv: Condvar::new(),
+            state: RankedMutex::new(Rank::ResponseSlot,
+                                    SlotState::Pending),
+            cv: RankedCondvar::new(),
         });
         (Responder { slot: slot.clone(), done: false },
          Response { id, slot })
@@ -561,19 +566,19 @@ impl Response {
 
     /// Has the engine resolved this response yet?  (Non-blocking.)
     pub fn is_ready(&self) -> bool {
-        !matches!(*self.slot.state.lock().unwrap(), SlotState::Pending)
+        !matches!(*self.slot.state.lock(), SlotState::Pending)
     }
 
     /// Block until the engine resolves this request.
     pub fn wait(self) -> Result<Reply, ServeError> {
-        let mut st = self.slot.state.lock().unwrap();
+        let mut st = self.slot.state.lock();
         loop {
             if let SlotState::Ready(r) =
                 std::mem::replace(&mut *st, SlotState::Pending)
             {
                 return r;
             }
-            st = self.slot.cv.wait(st).unwrap();
+            st = self.slot.cv.wait(st);
         }
     }
 
@@ -582,7 +587,7 @@ impl Response {
     pub fn wait_timeout(self, timeout: Duration)
                         -> Option<Result<Reply, ServeError>> {
         let deadline = Instant::now() + timeout;
-        let mut st = self.slot.state.lock().unwrap();
+        let mut st = self.slot.state.lock();
         loop {
             if let SlotState::Ready(r) =
                 std::mem::replace(&mut *st, SlotState::Pending)
@@ -593,11 +598,8 @@ impl Response {
             if now >= deadline {
                 return None;
             }
-            let (guard, _) = self
-                .slot
-                .cv
-                .wait_timeout(st, deadline - now)
-                .unwrap();
+            let (guard, _) =
+                self.slot.cv.wait_timeout(st, deadline - now);
             st = guard;
         }
     }
@@ -622,7 +624,7 @@ impl Responder {
             return;
         }
         self.done = true;
-        let mut st = self.slot.state.lock().unwrap();
+        let mut st = self.slot.state.lock();
         *st = SlotState::Ready(outcome);
         drop(st);
         self.slot.cv.notify_all();
@@ -739,12 +741,16 @@ pub(crate) struct EngineShared {
     /// exec-time EWMAs learned on one backend class never demote (or
     /// mask demotion for) batches served by another, while every
     /// controller observes the same lock-free aggregate depth gauge
-    pub controllers: Vec<Mutex<CapacityController>>,
+    pub controllers: Vec<RankedMutex<CapacityController>>,
     /// (class name, worker count) per class, indexed by class id
     pub classes: Vec<(String, usize)>,
-    pub completions: Mutex<Vec<Completion>>,
-    pub sheds: Mutex<Vec<ShedRecord>>,
-    pub errors: Mutex<Vec<String>>,
+    // The four report logs below all carry Rank::ShedLog: they are
+    // appended one statement at a time and never held together, so a
+    // shared near-last rank keeps the table small without permitting
+    // any nesting among them.  Errors ranks strictly last.
+    pub completions: RankedMutex<Vec<Completion>>,
+    pub sheds: RankedMutex<Vec<ShedRecord>>,
+    pub errors: RankedMutex<Vec<String>>,
     pub max_batch_wait: Duration,
     /// configured capacity ladder, descending — workers derive each
     /// request's batch-compatibility key against it without locking
@@ -756,10 +762,10 @@ pub(crate) struct EngineShared {
     pub sessions: stream::SessionTable,
     /// completed decode sessions (terminal `Done`), appended by
     /// workers one lock per batch
-    pub stream_done: Mutex<Vec<StreamStats>>,
+    pub stream_done: RankedMutex<Vec<StreamStats>>,
     /// shed decode sessions (terminal `Shed`), appended by workers and
     /// by engine-side teardown
-    pub stream_shed: Mutex<Vec<StreamShedRecord>>,
+    pub stream_shed: RankedMutex<Vec<StreamShedRecord>>,
     /// one paged session arena per worker class, indexed by class id:
     /// workers of a class share cached decode windows, while classes
     /// never fight over each other's pages
@@ -835,7 +841,10 @@ impl EngineShared {
     /// Closes the admission queue only when the LAST live worker goes:
     /// a fleet with any worker left keeps serving — degraded, not dead.
     pub(crate) fn note_worker_dead(&self) {
-        if self.live_workers.fetch_sub(1, Ordering::SeqCst) == 1 {
+        // AcqRel, Arc-refcount style: the decrement publishes this
+        // worker's final writes (Release) and the thread that observes
+        // 1 → 0 acquires all of them before closing the queue
+        if self.live_workers.fetch_sub(1, Ordering::AcqRel) == 1 {
             self.queue.close();
         }
     }
@@ -914,22 +923,24 @@ impl ElasticEngine {
             controllers: classes
                 .iter()
                 .map(|_| {
-                    Mutex::new(CapacityController::new(
-                        caps.clone(), cfg.depth_per_tier))
+                    RankedMutex::new(Rank::Controller,
+                                     CapacityController::new(
+                                         caps.clone(),
+                                         cfg.depth_per_tier))
                 })
                 .collect(),
             classes: classes
                 .iter()
                 .map(|c| (c.name.clone(), c.workers.max(1)))
                 .collect(),
-            completions: Mutex::new(Vec::new()),
-            sheds: Mutex::new(Vec::new()),
-            errors: Mutex::new(Vec::new()),
+            completions: RankedMutex::new(Rank::ShedLog, Vec::new()),
+            sheds: RankedMutex::new(Rank::ShedLog, Vec::new()),
+            errors: RankedMutex::new(Rank::Errors, Vec::new()),
             max_batch_wait: cfg.max_batch_wait,
             caps: caps.clone(),
             sessions: stream::SessionTable::new(),
-            stream_done: Mutex::new(Vec::new()),
-            stream_shed: Mutex::new(Vec::new()),
+            stream_done: RankedMutex::new(Rank::ShedLog, Vec::new()),
+            stream_shed: RankedMutex::new(Rank::ShedLog, Vec::new()),
             arenas: classes
                 .iter()
                 .map(|_| stream::arena::SessionArena::new(cfg.arena_pages))
@@ -1016,7 +1027,7 @@ impl ElasticEngine {
                                                      exec.as_mut()) {
                                 Ok(_batches) => break, // closed + drained
                                 Err(fault) => {
-                                    shared.errors.lock().unwrap().push(
+                                    shared.errors.lock().push(
                                         format!(
                                             "worker {w} ({cname}): \
                                              execution: {}", fault.msg));
@@ -1066,7 +1077,10 @@ impl ElasticEngine {
             // traffic routed to it would hang — so that still aborts.
             let zero_class = shared.classes.iter().enumerate().any(
                 |(ci, (_, n))| {
-                    shared.health[ci].init_failures.load(Ordering::SeqCst)
+                    // Relaxed: every fetch_add happened before that
+                    // worker's init.arrive, and wait_for's latch lock
+                    // ordered those arrivals before this read
+                    shared.health[ci].init_failures.load(Ordering::Relaxed)
                         >= *n
                 });
             if zero_class {
@@ -1077,7 +1091,7 @@ impl ElasticEngine {
                 anyhow::bail!("{}/{workers} workers failed to start: {}",
                               failures.len(), failures.join(" | "));
             }
-            shared.errors.lock().unwrap()
+            shared.errors.lock()
                 .extend(failures.iter().cloned());
         }
         Ok(EngineHandle {
@@ -1168,7 +1182,7 @@ impl EngineHandle {
     /// Log one engine-side `ShuttingDown` rejection (worker_class
     /// "engine": no worker ever saw the request).
     fn record_engine_shed(&self, p: &Pending) {
-        self.shared.sheds.lock().unwrap().push(ShedRecord {
+        self.shared.sheds.lock().push(ShedRecord {
             id: p.req.id,
             class: p.req.slo.name.clone(),
             worker_class: "engine".into(),
@@ -1220,7 +1234,7 @@ impl EngineHandle {
                 if let Some(rec) = self.shared.sessions.shed(
                     st.session, ServeError::ShuttingDown, "engine")
                 {
-                    self.shared.stream_shed.lock().unwrap().push(rec);
+                    self.shared.stream_shed.lock().push(rec);
                 }
                 self.shared.recycle_session(st.session);
             }
@@ -1351,19 +1365,18 @@ impl EngineHandle {
             self.shared
                 .stream_shed
                 .lock()
-                .unwrap()
                 .append(&mut engine_stream_sheds);
         }
         let errors =
-            std::mem::take(&mut *self.shared.errors.lock().unwrap());
+            std::mem::take(&mut *self.shared.errors.lock());
         let completions =
-            std::mem::take(&mut *self.shared.completions.lock().unwrap());
+            std::mem::take(&mut *self.shared.completions.lock());
         let sheds =
-            std::mem::take(&mut *self.shared.sheds.lock().unwrap());
+            std::mem::take(&mut *self.shared.sheds.lock());
         let stream_done =
-            std::mem::take(&mut *self.shared.stream_done.lock().unwrap());
+            std::mem::take(&mut *self.shared.stream_done.lock());
         let stream_shed =
-            std::mem::take(&mut *self.shared.stream_shed.lock().unwrap());
+            std::mem::take(&mut *self.shared.stream_shed.lock());
         // Worker-level faults are a fleet health record, not a failure
         // of THIS call: every response above was resolved exactly once,
         // so the report is complete and the errors ride along in
@@ -1394,7 +1407,7 @@ impl EngineHandle {
             .map(|((((((name, workers), ctl), arena), spec), faults),
                    health)| {
                 let (exec_estimates_ms, breaker_trips) = {
-                    let ctl = ctl.lock().unwrap();
+                    let ctl = ctl.lock();
                     (ctl.exec_estimates(), ctl.breaker_trips())
                 };
                 WorkerClassInfo {
@@ -1407,10 +1420,12 @@ impl EngineHandle {
                     accepted: spec.accepted(),
                     rejected: spec.rejected(),
                     verifies: spec.verifies(),
-                    retries: faults.retries.load(Ordering::SeqCst),
-                    splits: faults.splits.load(Ordering::SeqCst),
-                    poisoned: faults.poisoned.load(Ordering::SeqCst),
-                    respawns: health.respawns.load(Ordering::SeqCst),
+                    // Relaxed: pure statistics, read after the worker
+                    // joins above (the join is the synchronization point)
+                    retries: faults.retries.load(Ordering::Relaxed),
+                    splits: faults.splits.load(Ordering::Relaxed),
+                    poisoned: faults.poisoned.load(Ordering::Relaxed),
+                    respawns: health.respawns.load(Ordering::Relaxed),
                     breaker_trips,
                 }
             })
@@ -1446,20 +1461,22 @@ impl Drop for EngineHandle {
 /// (`Some(msg)`) exactly once; only `start` blocks on it.  No worker
 /// ever waits here, so no unwind path can strand a peer.
 struct InitLatch {
-    state: Mutex<(usize, Vec<String>)>,
-    cv: Condvar,
+    // Rank::InitLatch is a leaf like ResponseSlot: arrivals write and
+    // return, and no other serving lock is taken under it
+    state: RankedMutex<(usize, Vec<String>)>,
+    cv: RankedCondvar,
 }
 
 impl InitLatch {
     fn new() -> InitLatch {
         InitLatch {
-            state: Mutex::new((0, Vec::new())),
-            cv: Condvar::new(),
+            state: RankedMutex::new(Rank::InitLatch, (0, Vec::new())),
+            cv: RankedCondvar::new(),
         }
     }
 
     fn arrive(&self, failure: Option<String>) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock();
         st.0 += 1;
         if let Some(msg) = failure {
             st.1.push(msg);
@@ -1469,9 +1486,9 @@ impl InitLatch {
     }
 
     fn wait_for(&self, target: usize) -> Vec<String> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock();
         while st.0 < target {
-            st = self.cv.wait(st).unwrap();
+            st = self.cv.wait(st);
         }
         st.1.clone()
     }
@@ -1497,9 +1514,11 @@ impl DeathWatch {
     /// report it to the latch; the caller returns right after, so the
     /// drop decrements the live gauge.
     fn fail_init(&mut self, msg: String) {
+        // Relaxed: the increment is published to start's census read
+        // by the init.arrive latch handoff that follows it
         self.shared.health[self.class_idx]
             .init_failures
-            .fetch_add(1, Ordering::SeqCst);
+            .fetch_add(1, Ordering::Relaxed);
         self.reported = true;
         self.init.arrive(Some(msg));
     }
@@ -1513,7 +1532,7 @@ impl Drop for DeathWatch {
             // about it or `start` hangs
             self.shared.health[self.class_idx]
                 .init_failures
-                .fetch_add(1, Ordering::SeqCst);
+                .fetch_add(1, Ordering::Relaxed);
             self.init.arrive(Some(format!(
                 "worker {} died during startup", self.worker)));
         }
@@ -1531,13 +1550,15 @@ fn respawn_executor(factory: &ExecutorFactory, shared: &EngineShared,
                     caps: &[f32], worker: usize, class_idx: usize,
                     cname: &str) -> Option<Box<dyn Executor>> {
     let health = &shared.health[class_idx];
+    // Relaxed: a pure token counter — the CAS itself decides who gets
+    // the restart, no payload rides on its ordering
     if health
         .restarts_left
-        .fetch_update(Ordering::SeqCst, Ordering::SeqCst,
+        .fetch_update(Ordering::Relaxed, Ordering::Relaxed,
                       |n| n.checked_sub(1))
         .is_err()
     {
-        shared.errors.lock().unwrap().push(format!(
+        shared.errors.lock().push(format!(
             "worker {worker} ({cname}): restart budget exhausted"));
         return None;
     }
@@ -1546,12 +1567,12 @@ fn respawn_executor(factory: &ExecutorFactory, shared: &EngineShared,
     let exec = match rebuilt {
         Ok(Ok(exec)) => exec,
         Ok(Err(e)) => {
-            shared.errors.lock().unwrap().push(format!(
+            shared.errors.lock().push(format!(
                 "worker {worker} ({cname}): respawn failed: {e:#}"));
             return None;
         }
         Err(_) => {
-            shared.errors.lock().unwrap().push(format!(
+            shared.errors.lock().push(format!(
                 "worker {worker} ({cname}): respawn factory panicked"));
             return None;
         }
@@ -1560,13 +1581,14 @@ fn respawn_executor(factory: &ExecutorFactory, shared: &EngineShared,
     // tier would fault again on the first floored batch
     for &c in caps {
         if !exec.supports(c) {
-            shared.errors.lock().unwrap().push(format!(
+            shared.errors.lock().push(format!(
                 "worker {worker} ({cname}): respawned executor does \
                  not support configured tier {c}"));
             return None;
         }
     }
-    health.respawns.fetch_add(1, Ordering::SeqCst);
+    // Relaxed statistic: read by report assembly after the joins
+    health.respawns.fetch_add(1, Ordering::Relaxed);
     Some(exec)
 }
 
@@ -1589,7 +1611,7 @@ fn requeue_inflight(shared: &EngineShared, items: Vec<Pending>,
             None => shared.queue.requeue(p, urgent),
         };
         if let Err(p) = stale {
-            shared.sheds.lock().unwrap().push(ShedRecord {
+            shared.sheds.lock().push(ShedRecord {
                 id: p.req.id,
                 class: p.req.slo.name.clone(),
                 worker_class: class_name.to_string(),
@@ -1811,6 +1833,44 @@ mod tests {
     }
 
     #[test]
+    fn teardown_survives_locks_poisoned_by_a_panicking_holder() {
+        // A thread panics while holding the shed log and the error
+        // log.  Pre-RankedMutex every later `.lock().unwrap()` on
+        // those logs — the workers' batch appends and shutdown's
+        // drains included — would have cascaded the panic; the ranked
+        // locks absorb the poison, so serving continues and shutdown
+        // still assembles a complete ServeReport.
+        let cfg = ServeConfig::sim().with_workers(1);
+        let caps = cfg.capacities();
+        let engine = ElasticEngine::start(
+            cfg, sim::factory(SimSpec::instant(), caps)).unwrap();
+        let seq = SimSpec::instant().seq_len;
+        let responses: Vec<Response> = (0..4u64)
+            .map(|id| engine.submit(Request::new(id, vec![0; seq])))
+            .collect();
+        for r in responses {
+            r.wait().expect("sim request must be served");
+        }
+        let shared = engine.shared.clone();
+        let holder = std::thread::spawn(move || {
+            // ShedLog then Errors: rank-increasing, so the checker
+            // stays quiet — the panic is the point here
+            let _sheds = shared.sheds.lock();
+            let _errors = shared.errors.lock();
+            panic!("die holding the report logs");
+        });
+        assert!(holder.join().is_err(), "holder must have panicked");
+        let late = engine.submit(Request::new(99, vec![0; seq]));
+        late.wait().expect("poisoned logs must not break serving");
+        let report = engine
+            .shutdown()
+            .expect("shutdown must complete after lock poisoning");
+        assert_eq!(report.completions.len(), 5,
+                   "every served request reaches the report");
+        assert!(report.sheds.is_empty());
+    }
+
+    #[test]
     fn always_failing_executor_quarantines_requests_not_the_engine() {
         // factory succeeds, executor fails every batch transiently:
         // the retry ladder exhausts, the singleton is quarantined as
@@ -1914,8 +1974,8 @@ mod tests {
             fn execute(&mut self, tier: f32, _tokens: &[i32])
                        -> Result<ExecOutput> {
                 if self.deaths
-                    .compare_exchange(0, 1, Ordering::SeqCst,
-                                      Ordering::SeqCst)
+                    .compare_exchange(0, 1, Ordering::Relaxed,
+                                      Ordering::Relaxed)
                     .is_ok()
                 {
                     return Err(FatalExecError("device lost".into())
@@ -1940,7 +2000,8 @@ mod tests {
         }
         let report = engine.shutdown().unwrap();
         assert_eq!(report.completions.len(), 6);
-        assert_eq!(deaths.load(Ordering::SeqCst), 1, "exactly one death");
+        assert_eq!(deaths.load(Ordering::Relaxed), 1,
+                   "exactly one death");
         let faults = report.fault_sections();
         assert_eq!(faults.len(), 1);
         assert_eq!(faults[0].respawns, 1);

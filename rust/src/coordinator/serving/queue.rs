@@ -69,17 +69,24 @@
 //!
 //! Blocking uses two "doorbells" (a lost-wakeup-proof mutex/condvar
 //! pair with a sleeper count so the uncontended path skips the lock):
-//! consumers sleep for work, producers sleep for room.  `Mutex` is held
-//! only for deque surgery on one shard at a time; the gauge, the closed
-//! flag and the shard-length mirrors are all `SeqCst` atomics.
+//! consumers sleep for work, producers sleep for room.  The shard lock
+//! (a `RankedMutex` at rank `QueueShard` — see `crate::sync` for the
+//! lock-order table) is held only for deque surgery on one shard at a
+//! time.  Ordering audit (PR 9): the depth gauge, the close flags, the
+//! queue-wide urgent gauge and the doorbell sleeper counts stay
+//! `SeqCst` — they carry the strand-a-request handshake (see
+//! `deposit_reserved` / the exit-time re-check in `pop_batch_keyed`)
+//! and the Dekker-style sleepers-vs-ready fast path — while the
+//! per-shard length/urgent mirrors are advisory `Relaxed` hints.
 //!
 //! The queue is generic over its item: the engine stores `Pending`
 //! (request + response slot), the tests push bare ids.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+use crate::sync::{Rank, RankedCondvar, RankedMutex};
 
 /// Why a non-blocking push was refused.  The item is handed back so the
 /// caller can account for it (e.g. resolve its response slot).
@@ -99,9 +106,12 @@ pub enum TryPushError<T> {
 /// its length and its urgent-item count that submit-side probing and
 /// the pop-side seed peek read without the lock.
 struct Shard<T> {
-    items: Mutex<VecDeque<T>>,
+    items: RankedMutex<VecDeque<T>>,
     /// mirror of `items.len()`, written under the shard lock, read
-    /// lock-free by `pick_shard` and the pop-side empty-shard skip
+    /// lock-free by `pick_shard` and the pop-side empty-shard skip.
+    /// Relaxed: purely an advisory placement/skip hint — the SeqCst
+    /// depth gauge owns drain/exit correctness, so a stale read costs
+    /// at most one redundant lock or one deferred peek
     len: AtomicUsize,
     /// queued items flagged urgent at push time, maintained under the
     /// shard lock (incremented on deposit, decremented when a sweep
@@ -110,7 +120,7 @@ struct Shard<T> {
     /// skips shards holding no urgent work.  Like the queue-wide
     /// gauge, a slack-less pop path may skip decrements, so it can
     /// over-approximate — costing a redundant peek, never a missed
-    /// urgent item.
+    /// urgent item.  Relaxed, same advisory-hint rationale as `len`.
     urgent: AtomicUsize,
 }
 
@@ -120,16 +130,20 @@ struct Shard<T> {
 /// notify (skipped entirely while nobody is registered), so a wake
 /// issued between a waiter's check and its park cannot be lost.
 struct Doorbell {
-    gate: Mutex<()>,
-    cv: Condvar,
+    gate: RankedMutex<()>,
+    cv: RankedCondvar,
+    /// registered waiters.  SeqCst (Dekker-style): the waiter's
+    /// register→re-check and the waker's make-ready→check-sleepers
+    /// must interleave in one total order, or the skip-the-lock fast
+    /// path in [`ring`](Doorbell::ring) could miss a racing sleeper.
     sleepers: AtomicUsize,
 }
 
 impl Doorbell {
     fn new() -> Doorbell {
         Doorbell {
-            gate: Mutex::new(()),
-            cv: Condvar::new(),
+            gate: RankedMutex::new(Rank::Doorbell, ()),
+            cv: RankedCondvar::new(),
             sleepers: AtomicUsize::new(0),
         }
     }
@@ -140,18 +154,18 @@ impl Doorbell {
     fn wait_until(&self, deadline: Option<Instant>,
                   ready: impl Fn() -> bool) -> bool {
         self.sleepers.fetch_add(1, Ordering::SeqCst);
-        let mut gate = self.gate.lock().unwrap();
+        let mut gate = self.gate.lock();
         let mut on_time = true;
         while !ready() {
             match deadline {
-                None => gate = self.cv.wait(gate).unwrap(),
+                None => gate = self.cv.wait(gate),
                 Some(d) => {
                     let now = Instant::now();
                     if now >= d {
                         on_time = false;
                         break;
                     }
-                    let (g, _) = self.cv.wait_timeout(gate, d - now).unwrap();
+                    let (g, _) = self.cv.wait_timeout(gate, d - now);
                     gate = g;
                 }
             }
@@ -171,7 +185,7 @@ impl Doorbell {
 
     /// Unconditional wake (close path: must not miss a racing sleeper).
     fn ring_all(&self) {
-        let _gate = self.gate.lock().unwrap();
+        let _gate = self.gate.lock();
         self.cv.notify_all();
     }
 }
@@ -239,7 +253,8 @@ impl<T> AdmissionQueue<T> {
         AdmissionQueue {
             shards: (0..shards)
                 .map(|_| Shard {
-                    items: Mutex::new(VecDeque::new()),
+                    items: RankedMutex::new(Rank::QueueShard,
+                                            VecDeque::new()),
                     len: AtomicUsize::new(0),
                     urgent: AtomicUsize::new(0),
                 })
@@ -305,16 +320,18 @@ impl<T> AdmissionQueue<T> {
         let h = (t as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
         let b = (a + 1 + ((h >> 33) as usize) % (n - 1)) % n;
         if self.urgent.load(Ordering::SeqCst) > 0 {
-            let ua = self.shards[a].urgent.load(Ordering::SeqCst);
-            let ub = self.shards[b].urgent.load(Ordering::SeqCst);
+            // Relaxed mirror reads: placement is a heuristic — a stale
+            // probe only mis-balances one deposit, never loses an item
+            let ua = self.shards[a].urgent.load(Ordering::Relaxed);
+            let ub = self.shards[b].urgent.load(Ordering::Relaxed);
             if ua != ub {
                 // urgent work clusters; relaxed work steers clear
                 let b_wins = if urgent { ub > ua } else { ub < ua };
                 return if b_wins { b } else { a };
             }
         }
-        if self.shards[b].len.load(Ordering::SeqCst)
-            < self.shards[a].len.load(Ordering::SeqCst)
+        if self.shards[b].len.load(Ordering::Relaxed)
+            < self.shards[a].len.load(Ordering::Relaxed)
         {
             b
         } else {
@@ -328,11 +345,13 @@ impl<T> AdmissionQueue<T> {
 
     fn deposit_to(&self, s: usize, item: T, urgent: bool) {
         let shard = &self.shards[s];
-        let mut items = shard.items.lock().unwrap();
+        let mut items = shard.items.lock();
+        // Relaxed mirror writes (advisory hints; published by the
+        // shard-lock release for anyone who locks after us)
         items.push_back(item);
-        shard.len.store(items.len(), Ordering::SeqCst);
+        shard.len.store(items.len(), Ordering::Relaxed);
         if urgent {
-            shard.urgent.fetch_add(1, Ordering::SeqCst);
+            shard.urgent.fetch_add(1, Ordering::Relaxed);
         }
         drop(items);
         self.doorbell.ring();
@@ -532,12 +551,15 @@ impl<T> AdmissionQueue<T> {
         S: Fn(&T) -> f64,
     {
         let shard = &self.shards[s];
-        if shard.len.load(Ordering::SeqCst) == 0 {
+        // Relaxed empty-skip: a stale nonzero costs one redundant
+        // lock; a stale zero defers this shard to the next sweep (the
+        // SeqCst depth gauge keeps the worker looping until drained)
+        if shard.len.load(Ordering::Relaxed) == 0 {
             return;
         }
         let track_urgent = self.urgent.load(Ordering::SeqCst) > 0;
         let mut urgent_taken = 0usize;
-        let mut items = shard.items.lock().unwrap();
+        let mut items = shard.items.lock();
         let mut skipped: VecDeque<T> = VecDeque::new();
         while out.len() < max {
             let Some(it) = items.pop_front() else { break };
@@ -563,15 +585,16 @@ impl<T> AdmissionQueue<T> {
             skipped.extend(items.drain(..));
             *items = skipped;
         }
-        shard.len.store(items.len(), Ordering::SeqCst);
+        shard.len.store(items.len(), Ordering::Relaxed);
         if urgent_taken > 0 {
             // saturating: a slack-less pop path (shutdown drain) may
-            // have skipped decrements, leaving the mirror stale-high
-            let mut cur = shard.urgent.load(Ordering::SeqCst);
+            // have skipped decrements, leaving the mirror stale-high.
+            // Relaxed CAS: the mirror is an advisory hint (see `Shard`)
+            let mut cur = shard.urgent.load(Ordering::Relaxed);
             while cur > 0 {
                 match shard.urgent.compare_exchange(
                     cur, cur.saturating_sub(urgent_taken),
-                    Ordering::SeqCst, Ordering::SeqCst)
+                    Ordering::Relaxed, Ordering::Relaxed)
                 {
                     Ok(_) => break,
                     Err(now) => cur = now,
@@ -641,12 +664,14 @@ impl<T> AdmissionQueue<T> {
             for i in 0..n {
                 let s = (start + i) % n;
                 let shard = &self.shards[s];
-                if shard.len.load(Ordering::SeqCst) == 0
-                    || shard.urgent.load(Ordering::SeqCst) == 0
+                // Relaxed mirror reads: the peek is best-effort (a
+                // missed shard is caught by the ring-order fill below)
+                if shard.len.load(Ordering::Relaxed) == 0
+                    || shard.urgent.load(Ordering::Relaxed) == 0
                 {
                     continue;
                 }
-                let items = shard.items.lock().unwrap();
+                let items = shard.items.lock();
                 if let Some(head) = items.front() {
                     let mut sl = slack(head);
                     // affinity-aware steal cost: a head sitting on its
@@ -809,7 +834,7 @@ impl<T> AdmissionQueue<T> {
                             self.closed.load(Ordering::SeqCst)
                                 || self.depth.load(Ordering::SeqCst) == 0
                                 || self.shards.iter().any(|s| {
-                                    s.len.load(Ordering::SeqCst) > 0
+                                    s.len.load(Ordering::Relaxed) > 0
                                 })
                         });
                 }
@@ -891,7 +916,7 @@ impl<T> AdmissionQueue<T> {
 
     #[cfg(test)]
     fn shard_len(&self, s: usize) -> usize {
-        self.shards[s].len.load(Ordering::SeqCst)
+        self.shards[s].len.load(Ordering::Relaxed)
     }
 
     /// Deterministic shard placement for tests (bypasses the p2c pick).

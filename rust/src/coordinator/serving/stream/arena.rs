@@ -49,7 +49,8 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+
+use crate::sync::{Rank, RankedMutex};
 
 /// One page slot: a session's cached window, valid for exactly one
 /// upcoming step.
@@ -99,7 +100,9 @@ impl ArenaInner {
 /// thread; `pages == 0` builds a disabled arena (every lookup misses,
 /// every store is a no-op) so the recompute path stays exercisable.
 pub struct SessionArena {
-    inner: Mutex<ArenaInner>,
+    inner: RankedMutex<ArenaInner>,
+    // Relaxed counters throughout: pure statistics, read by report
+    // assembly after the worker joins — no ordering carried
     hits: AtomicUsize,
     misses: AtomicUsize,
     recycled: AtomicUsize,
@@ -109,7 +112,7 @@ pub struct SessionArena {
 impl SessionArena {
     pub fn new(pages: usize) -> SessionArena {
         SessionArena {
-            inner: Mutex::new(ArenaInner {
+            inner: RankedMutex::new(Rank::ArenaPool, ArenaInner {
                 slots: (0..pages).map(|_| None).collect(),
                 free: (0..pages).rev().collect(),
                 by_session: HashMap::new(),
@@ -127,7 +130,7 @@ impl SessionArena {
     /// or a miss — callers only consult the arena for decode steps
     /// (step >= 1), so prefills never dilute the hit rate.
     pub fn lookup(&self, session: u64, step: usize) -> Option<Vec<i32>> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock();
         let hit = inner.by_session.get(&session).copied().and_then(|i| {
             inner.slots[i]
                 .as_ref()
@@ -155,7 +158,7 @@ impl SessionArena {
     /// session spills — its next lookup misses and recomputes.
     pub fn store(&self, session: u64, next_step: usize,
                  window: Vec<i32>) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock();
         if inner.slots.is_empty() {
             return; // arena disabled
         }
@@ -193,7 +196,7 @@ impl SessionArena {
     /// (worker Done vs engine shed vs shutdown sweep) recycle exactly
     /// once and a session with no page is a harmless no-op.
     pub fn recycle(&self, session: u64) -> bool {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock();
         let Some(i) = inner.by_session.remove(&session) else {
             return false;
         };
@@ -213,7 +216,7 @@ impl SessionArena {
 
     /// Free every page (engine shutdown, after `shed_all`).
     pub fn clear(&self) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock();
         let sessions: Vec<u64> =
             inner.by_session.keys().copied().collect();
         for session in sessions {
@@ -228,7 +231,7 @@ impl SessionArena {
 
     /// Sessions currently holding a page.
     pub fn live(&self) -> usize {
-        self.inner.lock().unwrap().by_session.len()
+        self.inner.lock().by_session.len()
     }
 
     /// Decode-step lookups served from cache.

@@ -74,8 +74,10 @@ pub mod spec;
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
+
+use crate::sync::{Rank, RankedCondvar, RankedMutex};
 
 use super::report::StreamShedRecord;
 use super::{Pending, Request, ServeError, SloClass};
@@ -169,8 +171,11 @@ enum ChanState {
 }
 
 struct Chan {
-    inner: Mutex<ChanInner>,
-    cv: Condvar,
+    /// Rank::StreamChan sits *above* Rank::SessionEntry: the table
+    /// delivers events while holding a session's entry lock (see
+    /// `advance`), so the channel lock must nest inside it.
+    inner: RankedMutex<ChanInner>,
+    cv: RankedCondvar,
 }
 
 struct ChanInner {
@@ -192,14 +197,14 @@ struct ChanInner {
 pub(crate) fn channel(id: u64, cap: usize)
                       -> (StreamSender, StreamResponse) {
     let chan = Arc::new(Chan {
-        inner: Mutex::new(ChanInner {
+        inner: RankedMutex::new(Rank::StreamChan, ChanInner {
             events: VecDeque::new(),
             state: ChanState::Open,
             rx_alive: true,
             cap: cap.max(1),
             dropped: 0,
         }),
-        cv: Condvar::new(),
+        cv: RankedCondvar::new(),
     });
     (StreamSender { chan: chan.clone(), done: false },
      StreamResponse { id, chan })
@@ -224,7 +229,7 @@ impl StreamSender {
     /// cannot violate the `Token* (Done|Shed)` contract.  This guard
     /// is what makes per-session table locking safe.
     pub(crate) fn token(&self, step: usize, tier: f32, token: i32) {
-        let mut inner = self.chan.inner.lock().unwrap();
+        let mut inner = self.chan.inner.lock();
         if !matches!(inner.state, ChanState::Open) {
             return; // terminal already enqueued: the contract wins
         }
@@ -244,12 +249,12 @@ impl StreamSender {
 
     /// Tokens refused at the cap for a live receiver so far.
     pub(crate) fn drops(&self) -> usize {
-        self.chan.inner.lock().unwrap().dropped
+        self.chan.inner.lock().dropped
     }
 
     /// The channel's token-event bound (terminals bypass it).
     pub(crate) fn cap(&self) -> usize {
-        self.chan.inner.lock().unwrap().cap
+        self.chan.inner.lock().cap
     }
 
     /// Has this sender already delivered its terminal?  Used by the
@@ -286,7 +291,7 @@ impl StreamSender {
             return;
         }
         self.done = true;
-        let mut inner = self.chan.inner.lock().unwrap();
+        let mut inner = self.chan.inner.lock();
         if matches!(inner.state, ChanState::Open) {
             // terminals bypass the token cap: they are the last event
             inner.events.push_back(ev);
@@ -326,7 +331,7 @@ impl StreamResponse {
     /// Block for the next event; `None` means the terminal event has
     /// already been consumed — the stream is over.
     pub fn recv(&self) -> Option<StreamEvent> {
-        let mut inner = self.chan.inner.lock().unwrap();
+        let mut inner = self.chan.inner.lock();
         loop {
             if let Some(ev) = inner.events.pop_front() {
                 if ev.is_terminal() {
@@ -337,7 +342,7 @@ impl StreamResponse {
             if matches!(inner.state, ChanState::Finished) {
                 return None;
             }
-            inner = self.chan.cv.wait(inner).unwrap();
+            inner = self.chan.cv.wait(inner);
         }
     }
 
@@ -347,7 +352,7 @@ impl StreamResponse {
     pub fn recv_timeout(&self, timeout: std::time::Duration)
                         -> Result<Option<StreamEvent>, StreamTimeout> {
         let deadline = Instant::now() + timeout;
-        let mut inner = self.chan.inner.lock().unwrap();
+        let mut inner = self.chan.inner.lock();
         loop {
             if let Some(ev) = inner.events.pop_front() {
                 if ev.is_terminal() {
@@ -362,11 +367,8 @@ impl StreamResponse {
             if now >= deadline {
                 return Err(StreamTimeout);
             }
-            let (guard, _) = self
-                .chan
-                .cv
-                .wait_timeout(inner, deadline - now)
-                .unwrap();
+            let (guard, _) =
+                self.chan.cv.wait_timeout(inner, deadline - now);
             inner = guard;
         }
     }
@@ -390,7 +392,7 @@ impl StreamResponse {
 
 impl Drop for StreamResponse {
     fn drop(&mut self) {
-        let mut inner = self.chan.inner.lock().unwrap();
+        let mut inner = self.chan.inner.lock();
         inner.rx_alive = false;
         inner.events.clear(); // nobody will read them
     }
@@ -463,7 +465,7 @@ pub(crate) enum Advance {
 /// happen under this per-session lock, and decode steps of *different*
 /// sessions never contend.
 pub(crate) struct SessionEntry {
-    state: Mutex<DecodeSession>,
+    state: RankedMutex<DecodeSession>,
 }
 
 /// Owner of all live decode sessions: registers new sessions, serves
@@ -479,8 +481,15 @@ pub(crate) struct SessionEntry {
 /// wins (`is_done`), and a late `token()` is discarded by the
 /// channel's own order guard.
 pub(crate) struct SessionTable {
-    sessions: Mutex<HashMap<u64, Arc<SessionEntry>>>,
+    /// Rank::SessionMap < Rank::SessionEntry: the map lock is held
+    /// only for lookup/insert/remove, never while an entry lock is
+    /// taken *and* kept — `advance` drops the entry guard before
+    /// re-taking the map to remove a completed session.
+    sessions: RankedMutex<HashMap<u64, Arc<SessionEntry>>>,
+    /// Relaxed: a pure unique-key allocator — no ordering carried
     next_key: AtomicU64,
+    /// Relaxed statistics counter, read by report assembly after the
+    /// workers join
     started: AtomicUsize,
     /// stream work items ever handed to the queue (the step-0 admit
     /// plus every requeue — draft and verify items included).  The
@@ -499,7 +508,7 @@ impl Default for SessionTable {
 impl SessionTable {
     pub(crate) fn new() -> SessionTable {
         SessionTable {
-            sessions: Mutex::new(HashMap::new()),
+            sessions: RankedMutex::new(Rank::SessionMap, HashMap::new()),
             next_key: AtomicU64::new(0),
             started: AtomicUsize::new(0),
             step_items: AtomicUsize::new(0),
@@ -509,12 +518,12 @@ impl SessionTable {
     /// Sessions ever admitted (the reconciliation base: every started
     /// session ends in exactly one completion or shed record).
     pub(crate) fn sessions_started(&self) -> usize {
-        self.started.load(Ordering::SeqCst)
+        self.started.load(Ordering::Relaxed)
     }
 
     /// Stream work items ever handed to the queue (see the field doc).
     pub(crate) fn step_items(&self) -> usize {
-        self.step_items.load(Ordering::SeqCst)
+        self.step_items.load(Ordering::Relaxed)
     }
 
     /// Count one stream work item entering circulation.  Every path
@@ -522,7 +531,7 @@ impl SessionTable {
     /// spec module's draft→verify and verify→draft hops) calls this
     /// exactly once per item.
     pub(crate) fn note_step_item(&self) {
-        self.step_items.fetch_add(1, Ordering::SeqCst);
+        self.step_items.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Register one new session and build its step-0 (prefill) work
@@ -541,7 +550,7 @@ impl SessionTable {
     pub(crate) fn admit(&self, req: StreamRequest, sender: StreamSender,
                         started: Instant, shards: usize,
                         spec_k: usize) -> Pending {
-        let key = self.next_key.fetch_add(1, Ordering::SeqCst);
+        let key = self.next_key.fetch_add(1, Ordering::Relaxed);
         let max_steps = req.max_steps.max(1);
         assert!(sender.cap() >= max_steps,
                 "stream channel cap {} cannot hold max_steps {}: a full \
@@ -550,7 +559,7 @@ impl SessionTable {
         let shard = (key % shards.max(1) as u64) as usize;
         let slo = req.slo.clone();
         let entry = Arc::new(SessionEntry {
-            state: Mutex::new(DecodeSession {
+            state: RankedMutex::new(Rank::SessionEntry, DecodeSession {
                 id: req.id,
                 prompt: req.prompt,
                 generated: Vec::new(),
@@ -564,8 +573,8 @@ impl SessionTable {
                 draft: None,
             }),
         });
-        self.sessions.lock().unwrap().insert(key, entry);
-        self.started.fetch_add(1, Ordering::SeqCst);
+        self.sessions.lock().insert(key, entry);
+        self.started.fetch_add(1, Ordering::Relaxed);
         self.note_step_item();
         Pending {
             req: Request { id: req.id, tokens: Vec::new(), slo },
@@ -584,7 +593,7 @@ impl SessionTable {
     /// Clone one session's entry handle out of the map (the table lock
     /// is held only for this lookup).
     fn entry(&self, key: u64) -> Option<Arc<SessionEntry>> {
-        self.sessions.lock().unwrap().get(&key).cloned()
+        self.sessions.lock().get(&key).cloned()
     }
 
     /// The compute row for one session's next step: the last `seq_len`
@@ -596,7 +605,7 @@ impl SessionTable {
     pub(crate) fn compute_row(&self, key: u64, seq_len: usize)
                               -> Option<Vec<i32>> {
         let entry = self.entry(key)?;
-        let sess = entry.state.lock().unwrap();
+        let sess = entry.state.lock();
         if sess.sender.is_done() {
             return None; // terminated concurrently: step is stale
         }
@@ -627,7 +636,7 @@ impl SessionTable {
         let Some(entry) = self.entry(st.session) else {
             return Advance::Gone;
         };
-        let mut sess = entry.state.lock().unwrap();
+        let mut sess = entry.state.lock();
         if sess.sender.is_done() {
             return Advance::Gone; // shed won the race: discard the step
         }
@@ -652,8 +661,11 @@ impl SessionTable {
                 tokens_dropped: sess.sender.drops(),
             };
             sess.sender.finish_ref(stats.clone());
-            drop(sess); // entry lock released before the map lock
-            self.sessions.lock().unwrap().remove(&st.session);
+            // entry lock released before the map lock: SessionMap
+            // ranks below SessionEntry, so holding both this way
+            // round would trip the rank checker (and rightly so)
+            drop(sess);
+            self.sessions.lock().remove(&st.session);
             return Advance::Done(stats);
         }
         let req = Request {
@@ -691,8 +703,8 @@ impl SessionTable {
     /// the channel's order guard make the race benign).
     pub(crate) fn shed(&self, key: u64, err: ServeError,
                        worker_class: &str) -> Option<StreamShedRecord> {
-        let entry = self.sessions.lock().unwrap().remove(&key)?;
-        let mut sess = entry.state.lock().unwrap();
+        let entry = self.sessions.lock().remove(&key)?;
+        let mut sess = entry.state.lock();
         if sess.sender.is_done() {
             return None; // completion won the race: nothing to shed
         }
@@ -712,13 +724,13 @@ impl SessionTable {
     pub(crate) fn shed_all(&self, err: ServeError, worker_class: &str)
                            -> Vec<StreamShedRecord> {
         let drained: Vec<Arc<SessionEntry>> = {
-            let mut sessions = self.sessions.lock().unwrap();
+            let mut sessions = self.sessions.lock();
             sessions.drain().map(|(_, e)| e).collect()
         };
         drained
             .into_iter()
             .filter_map(|entry| {
-                let mut sess = entry.state.lock().unwrap();
+                let mut sess = entry.state.lock();
                 if sess.sender.is_done() {
                     return None; // already terminated concurrently
                 }
@@ -738,7 +750,7 @@ impl SessionTable {
     /// Number of currently live sessions — what `close_drain` polls to
     /// decide the fleet has finished its in-flight work.
     pub(crate) fn live(&self) -> usize {
-        self.sessions.lock().unwrap().len()
+        self.sessions.lock().len()
     }
 }
 

@@ -88,6 +88,9 @@ pub(crate) struct DraftBuf {
 /// `drafted == accepted + rejected` holds under mid-draft sheds (a
 /// proposal that never reaches verification is not "drafted" for
 /// accounting purposes: no verification batch was spent on it).
+/// Relaxed counters throughout: pure statistics, read by report
+/// assembly after the workers join (the join is the synchronization
+/// point) — no cross-thread ordering is carried by these values.
 #[derive(Debug, Default)]
 pub(crate) struct SpecCounters {
     drafted: AtomicUsize,
@@ -105,28 +108,28 @@ impl SpecCounters {
     /// proposals agreed with the verifier.
     pub(crate) fn add(&self, drafted: usize, accepted: usize) {
         let accepted = accepted.min(drafted);
-        self.drafted.fetch_add(drafted, Ordering::SeqCst);
-        self.accepted.fetch_add(accepted, Ordering::SeqCst);
-        self.rejected.fetch_add(drafted - accepted, Ordering::SeqCst);
-        self.verifies.fetch_add(1, Ordering::SeqCst);
+        self.drafted.fetch_add(drafted, Ordering::Relaxed);
+        self.accepted.fetch_add(accepted, Ordering::Relaxed);
+        self.rejected.fetch_add(drafted - accepted, Ordering::Relaxed);
+        self.verifies.fetch_add(1, Ordering::Relaxed);
     }
 
     pub(crate) fn drafted(&self) -> usize {
-        self.drafted.load(Ordering::SeqCst)
+        self.drafted.load(Ordering::Relaxed)
     }
 
     pub(crate) fn accepted(&self) -> usize {
-        self.accepted.load(Ordering::SeqCst)
+        self.accepted.load(Ordering::Relaxed)
     }
 
     pub(crate) fn rejected(&self) -> usize {
-        self.rejected.load(Ordering::SeqCst)
+        self.rejected.load(Ordering::Relaxed)
     }
 
     /// Resolved verify passes — the per-class cycle count that turns
     /// accept totals into a tokens-per-admission estimate.
     pub(crate) fn verifies(&self) -> usize {
-        self.verifies.load(Ordering::SeqCst)
+        self.verifies.load(Ordering::Relaxed)
     }
 }
 
@@ -164,7 +167,7 @@ impl SessionTable {
                               tokens: Vec<i32>, tier: f32, now: Instant)
                               -> Option<Pending> {
         let entry = self.entry(st.session)?;
-        let mut sess = entry.state.lock().unwrap();
+        let mut sess = entry.state.lock();
         if sess.sender.is_done() {
             return None; // shed won the race: discard the proposals
         }
@@ -195,7 +198,7 @@ impl SessionTable {
     /// batch packer uses to budget rows without building them yet.
     pub(crate) fn draft_len(&self, key: u64) -> Option<usize> {
         let entry = self.entry(key)?;
-        let sess = entry.state.lock().unwrap();
+        let sess = entry.state.lock();
         if sess.sender.is_done() {
             return None;
         }
@@ -210,7 +213,7 @@ impl SessionTable {
     pub(crate) fn verify_rows(&self, key: u64, seq_len: usize)
                               -> Option<Vec<Vec<i32>>> {
         let entry = self.entry(key)?;
-        let sess = entry.state.lock().unwrap();
+        let sess = entry.state.lock();
         if sess.sender.is_done() {
             return None;
         }
@@ -252,7 +255,7 @@ impl SessionTable {
         let Some(entry) = self.entry(st.session) else {
             return gone;
         };
-        let mut sess = entry.state.lock().unwrap();
+        let mut sess = entry.state.lock();
         if sess.sender.is_done() {
             return gone; // shed won the race: buffer dies with it
         }
@@ -301,7 +304,7 @@ impl SessionTable {
             };
             sess.sender.finish_ref(stats.clone());
             drop(sess); // entry lock released before the map lock
-            self.sessions.lock().unwrap().remove(&st.session);
+            self.sessions.lock().remove(&st.session);
             return VerifyResolution {
                 advance: Advance::Done(stats),
                 drafted: k,
@@ -363,7 +366,7 @@ pub(crate) fn run_draft_batch(shared: &EngineShared, worker: usize,
     // speculation is worth buying, clamped so the verify pass
     // (k + 1 rows) always fits one executor batch.
     let (tier, k) = {
-        let ctl = controller.lock().unwrap();
+        let ctl = controller.lock();
         (ctl.draft_tier(floor), ctl.draft_k(shared.spec_k))
     };
     let k = k.min(batch.saturating_sub(1)).max(1);
@@ -431,7 +434,7 @@ pub(crate) fn run_draft_batch(shared: &EngineShared, worker: usize,
             Err(fatal) => {
                 // FATAL: escalate with every item intact — nothing is
                 // stashed yet, so a requeued draft restarts cleanly
-                controller.lock().unwrap().observe_batch_outcome(false);
+                controller.lock().observe_batch_outcome(false);
                 let n = items.len();
                 return Err(WorkerFault {
                     msg: format!(
@@ -442,7 +445,7 @@ pub(crate) fn run_draft_batch(shared: &EngineShared, worker: usize,
                 });
             }
         };
-        controller.lock().unwrap().observe_batch_outcome(!any_fail);
+        controller.lock().observe_batch_outcome(!any_fail);
         let mut poisoned: Vec<(usize, String)> = Vec::new();
         for (i, fate) in fates.into_iter().enumerate() {
             match fate {
@@ -515,7 +518,7 @@ pub(crate) fn run_draft_batch(shared: &EngineShared, worker: usize,
         }
     }
     if !stream_sheds.is_empty() {
-        shared.stream_shed.lock().unwrap().append(&mut stream_sheds);
+        shared.stream_shed.lock().append(&mut stream_sheds);
     }
     Ok(1)
 }
@@ -591,7 +594,7 @@ pub(crate) fn run_verify_batch(shared: &EngineShared, worker: usize,
     }
     if items.is_empty() {
         if !stream_sheds.is_empty() {
-            shared.stream_shed.lock().unwrap().append(&mut stream_sheds);
+            shared.stream_shed.lock().append(&mut stream_sheds);
         }
         return Ok(0);
     }
@@ -606,7 +609,7 @@ pub(crate) fn run_verify_batch(shared: &EngineShared, worker: usize,
             // FATAL: escalate with the packed sessions intact — their
             // draft buffers stay stashed, so a requeued verify item
             // rebuilds its rows idempotently
-            controller.lock().unwrap().observe_batch_outcome(false);
+            controller.lock().observe_batch_outcome(false);
             let n = items.len();
             return Err(WorkerFault {
                 msg: format!(
@@ -617,7 +620,7 @@ pub(crate) fn run_verify_batch(shared: &EngineShared, worker: usize,
             });
         }
     };
-    controller.lock().unwrap().observe_batch_outcome(!any_fail);
+    controller.lock().observe_batch_outcome(!any_fail);
     let done = Instant::now();
     let counters = &shared.spec[class_idx];
     let mut stream_done: Vec<StreamStats> = Vec::new();
@@ -651,7 +654,6 @@ pub(crate) fn run_verify_batch(shared: &EngineShared, worker: usize,
             counters.add(res.drafted, res.accepted);
             controller
                 .lock()
-                .unwrap()
                 .observe_accept(res.accepted, res.drafted);
         }
         match res.advance {
@@ -686,10 +688,10 @@ pub(crate) fn run_verify_batch(shared: &EngineShared, worker: usize,
         }
     }
     if !stream_done.is_empty() {
-        shared.stream_done.lock().unwrap().append(&mut stream_done);
+        shared.stream_done.lock().append(&mut stream_done);
     }
     if !stream_sheds.is_empty() {
-        shared.stream_shed.lock().unwrap().append(&mut stream_sheds);
+        shared.stream_shed.lock().append(&mut stream_sheds);
     }
     Ok(1)
 }

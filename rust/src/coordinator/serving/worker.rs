@@ -216,7 +216,7 @@ pub(crate) fn fail_batch(shared: &EngineShared, items: Vec<Pending>,
         }
     }
     if !recs.is_empty() {
-        shared.stream_shed.lock().unwrap().append(&mut recs);
+        shared.stream_shed.lock().append(&mut recs);
     }
 }
 
@@ -336,7 +336,9 @@ fn exec_span(shared: &EngineShared, class_idx: usize,
     let mut last_msg = String::new();
     for attempt in 0..=policy.max_retries {
         if attempt > 0 {
-            faults.retries.fetch_add(1, Ordering::SeqCst);
+            // Relaxed fault counters throughout this ladder: pure
+            // statistics, read by report assembly after the joins
+            faults.retries.fetch_add(1, Ordering::Relaxed);
             // bounded exponential backoff: the shift saturates at 64x
             // so a large max_retries cannot overflow into a sleep of
             // centuries
@@ -366,7 +368,6 @@ fn exec_span(shared: &EngineShared, class_idx: usize,
                 let exec_ms = exec_start.elapsed().as_secs_f64() * 1e3;
                 shared.controllers[class_idx]
                     .lock()
-                    .unwrap()
                     .observe_exec(tier, exec_ms);
                 let row_len = out.logits.len() / batch;
                 let mut r = 0usize;
@@ -392,12 +393,12 @@ fn exec_span(shared: &EngineShared, class_idx: usize,
     // retries exhausted on this span: bisect if it can still be split,
     // quarantine the singleton otherwise
     if hi - lo >= 2 {
-        faults.splits.fetch_add(1, Ordering::SeqCst);
+        faults.splits.fetch_add(1, Ordering::Relaxed);
         let mid = lo + (hi - lo) / 2;
         exec_span(shared, class_idx, exec, tier, units, lo, mid, fates)?;
         exec_span(shared, class_idx, exec, tier, units, mid, hi, fates)?;
     } else {
-        faults.poisoned.fetch_add(1, Ordering::SeqCst);
+        faults.poisoned.fetch_add(1, Ordering::Relaxed);
         fates[lo] = Some(UnitFate::Poisoned(last_msg));
     }
     Ok(true)
@@ -461,7 +462,7 @@ pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
         // brownout — at the cheapest floored tier — instead of
         // shedding; Half-open probes at the normally-chosen tier so
         // recovery is actually tested at real quality
-        let breaker = controller.lock().unwrap().breaker_tick();
+        let breaker = controller.lock().breaker_tick();
         if breaker == BreakerState::Open {
             std::thread::sleep(Duration::from_millis(1));
         }
@@ -533,10 +534,10 @@ pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
         if !expired.is_empty() {
             // one lock for the whole run's sheds, mirroring the
             // one-lock-per-batch completions path below
-            shared.sheds.lock().unwrap().append(&mut expired);
+            shared.sheds.lock().append(&mut expired);
         }
         if !stream_sheds.is_empty() {
-            shared.stream_shed.lock().unwrap().append(&mut stream_sheds);
+            shared.stream_shed.lock().append(&mut stream_sheds);
         }
         if live.is_empty() {
             continue; // the whole run was past-deadline
@@ -573,7 +574,7 @@ pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
         let tier = if breaker == BreakerState::Open {
             shared.caps[floor_rung(&shared.caps, floor)]
         } else {
-            controller.lock().unwrap().choose_for_batch(
+            controller.lock().choose_for_batch(
                 shared.queue.len(), floor, slack_ms)
         };
         // build each item's compute row: a one-shot's row is its
@@ -642,7 +643,7 @@ pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
                 // rebuild the executor and requeue the work; nothing
                 // here has been resolved yet, so the requeue cannot
                 // double-deliver.
-                controller.lock().unwrap().observe_batch_outcome(false);
+                controller.lock().observe_batch_outcome(false);
                 let mut inflight = items;
                 for (i, p) in inflight.iter_mut().enumerate() {
                     if matches!(p.outcome, Outcome::OneShot(_)) {
@@ -661,7 +662,7 @@ pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
         };
         // the breaker judges whole-batch health: any transient fault in
         // the ladder counts one failed observation for this class
-        controller.lock().unwrap().observe_batch_outcome(!any_fail);
+        controller.lock().observe_batch_outcome(!any_fail);
         let done = Instant::now();
         let exec_ms = done
             .saturating_duration_since(exec_start)
@@ -788,16 +789,16 @@ pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
         }
         // one lock per log for the whole batch, not one per item
         if !batch_completions.is_empty() {
-            shared.completions.lock().unwrap().extend(batch_completions);
+            shared.completions.lock().extend(batch_completions);
         }
         if !poison_sheds.is_empty() {
-            shared.sheds.lock().unwrap().append(&mut poison_sheds);
+            shared.sheds.lock().append(&mut poison_sheds);
         }
         if !stream_done.is_empty() {
-            shared.stream_done.lock().unwrap().append(&mut stream_done);
+            shared.stream_done.lock().append(&mut stream_done);
         }
         if !stream_sheds.is_empty() {
-            shared.stream_shed.lock().unwrap().append(&mut stream_sheds);
+            shared.stream_shed.lock().append(&mut stream_sheds);
         }
         batches += 1;
     }

@@ -6,6 +6,11 @@
 //! driver.  Layers 1–2 (Pallas kernels + JAX model) are compiled AOT into
 //! `artifacts/` and executed through [`runtime`].
 
+// The whole coordinator is safe Rust (checked since PR 9); the
+// invariant-lint layer and the ranked-lock discipline in [`sync`]
+// assume safe-Rust semantics, so keep it that way permanently.
+#![forbid(unsafe_code)]
+
 pub mod analysis;
 pub mod bench;
 pub mod checkpoint;
@@ -16,9 +21,11 @@ pub mod eval;
 #[cfg(feature = "pjrt")]
 pub mod experiments;
 pub mod json;
+pub mod lint;
 pub mod metrics;
 pub mod proptest;
 pub mod rng;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod sync;
 pub mod tensor;

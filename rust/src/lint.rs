@@ -1,0 +1,611 @@
+//! `invariant-lint` — a dependency-free static checker for the
+//! serving subsystem's concurrency invariants.
+//!
+//! This is a deliberately *line-oriented* scanner (string-stripping +
+//! brace-depth tracking, no syn/proc-macro, no external crates): the
+//! rules it enforces are lexical properties of the code, chosen so
+//! that a heuristic scanner can check them soundly.  It walks
+//! `rust/src/coordinator/serving/**` and enforces:
+//!
+//! | rule id                  | invariant                                      |
+//! |--------------------------|------------------------------------------------|
+//! | `raw-mutex`              | no raw `std::sync::{Mutex,RwLock,Condvar}` in  |
+//! |                          | serving — every lock is a ranked one (sync.rs) |
+//! | `ordering-allowlist`     | every atomic `Ordering::X` named in a file is  |
+//! |                          | in that file's allowlist below, so `SeqCst`    |
+//! |                          | creep needs a written rationale                |
+//! | `guard-across-execute`   | no lock guard live across `Executor::execute`  |
+//! |                          | or `catch_unwind` — a panicking backend must   |
+//! |                          | never poison a held serving lock               |
+//! | `terminal-outside-channel`| `StreamEvent::Done`/`Shed` only appear in the |
+//! |                          | channel module (`stream/mod.rs`) — the         |
+//! |                          | exactly-once terminal discipline has one home  |
+//! | `stale-allow`            | every `lint: allow` escape suppresses a real   |
+//! |                          | finding (dead escapes rot into folklore)       |
+//!
+//! Escapes: `// lint: allow(<rule>) — <reason>` on the offending line,
+//! or alone on the line above it.  Every escape is inventoried by
+//! `invariant-lint --list-allows` so reviewers see the exception
+//! budget per PR, and an escape that stops matching anything is itself
+//! a finding (`stale-allow`).
+//!
+//! The binary wrapper lives in `src/bin/invariant_lint.rs`; the tests
+//! in `rust/tests/invariant_lint.rs` drive [`scan_source`] directly
+//! over the fixture files in `rust/tests/lint_fixtures/`.
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+pub const RULE_RAW_MUTEX: &str = "raw-mutex";
+pub const RULE_ORDERING: &str = "ordering-allowlist";
+pub const RULE_GUARD_ACROSS_EXECUTE: &str = "guard-across-execute";
+pub const RULE_TERMINAL_OUTSIDE_CHANNEL: &str = "terminal-outside-channel";
+pub const RULE_STALE_ALLOW: &str = "stale-allow";
+
+const ALL_RULES: &[&str] = &[
+    RULE_RAW_MUTEX,
+    RULE_ORDERING,
+    RULE_GUARD_ACROSS_EXECUTE,
+    RULE_TERMINAL_OUTSIDE_CHANNEL,
+    RULE_STALE_ALLOW,
+];
+
+/// Per-file atomic-`Ordering` allowlist: `(path suffix, allowed
+/// orderings, rationale)`.  A serving file that names an `Ordering`
+/// variant absent from its row — or that has no row at all — fails
+/// `ordering-allowlist`; widening a row therefore requires editing
+/// this table and writing the justification next to it, which is the
+/// point.
+pub const ORDERING_ALLOWLIST: &[(&str, &[&str], &str)] = &[
+    (
+        "coordinator/serving/queue.rs",
+        &["Relaxed", "SeqCst"],
+        "SeqCst is load-bearing twice: the deposit_reserved <-> pop \
+         exit-time depth re-check handshake, and the Dekker-style \
+         sleepers-vs-ready doorbell fast path — both need the single \
+         total order.  Relaxed covers the advisory per-shard gauges \
+         and tick counters.",
+    ),
+    (
+        "coordinator/serving/mod.rs",
+        &["Relaxed", "AcqRel"],
+        "AcqRel is the Arc-style live-worker refcount (release own \
+         work on decrement, acquire everyone's on the last-out close); \
+         everything else is statistics read after a join or a latch \
+         round-trip.",
+    ),
+    (
+        "coordinator/serving/worker.rs",
+        &["Relaxed"],
+        "fault-ladder counters: pure statistics, aggregated at \
+         shutdown after the worker threads are joined.",
+    ),
+    (
+        "coordinator/serving/stream/mod.rs",
+        &["Relaxed"],
+        "session-id allocator and session/step counters: uniqueness \
+         needs only atomicity, and the counters are read at shutdown \
+         after joins.",
+    ),
+    (
+        "coordinator/serving/stream/arena.rs",
+        &["Relaxed"],
+        "hit/miss/recycle gauges: statistics only; the page pool \
+         itself is behind the ArenaPool-ranked mutex.",
+    ),
+    (
+        "coordinator/serving/stream/spec.rs",
+        &["Relaxed"],
+        "speculative counters are all bumped inside one verify \
+         resolution and read at shutdown after joins; the \
+         drafted == accepted + rejected invariant is single-writer \
+         per session.",
+    ),
+];
+
+const ATOMIC_ORDERINGS: &[&str] =
+    &["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+
+/// One lint violation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub file: String,
+    /// 1-indexed
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule,
+               self.msg)
+    }
+}
+
+/// One `// lint: allow(rule) — reason` escape found in a file.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Allow {
+    pub file: String,
+    /// 1-indexed line of the comment itself
+    pub line: usize,
+    pub rule: String,
+    pub reason: String,
+}
+
+impl fmt::Display for Allow {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: allow({}) — {}", self.file, self.line,
+               self.rule,
+               if self.reason.is_empty() { "(no reason given)" }
+               else { &self.reason })
+    }
+}
+
+/// Scanner output for one file.
+#[derive(Debug, Default)]
+pub struct FileReport {
+    pub findings: Vec<Finding>,
+    pub allows: Vec<Allow>,
+}
+
+/// Is this file subject to the serving rules at all?
+fn in_scope(rel_path: &str) -> bool {
+    rel_path.contains("coordinator/serving/")
+        && rel_path.ends_with(".rs")
+}
+
+/// Strips comments and blanks out string/char-literal contents, so
+/// the rule passes only ever see real code tokens.  Returns
+/// `(code, comment)` per line; multi-line strings and block comments
+/// carry state across lines via `self`.
+#[derive(Default)]
+struct Sanitizer {
+    in_block_comment: bool,
+    in_string: bool,
+}
+
+impl Sanitizer {
+    /// One line in, `(code-with-literals-blanked, comment-text)` out.
+    fn split(&mut self, line: &str) -> (String, String) {
+        let bytes: Vec<char> = line.chars().collect();
+        let mut code = String::with_capacity(line.len());
+        let mut comment = String::new();
+        let mut i = 0usize;
+        while i < bytes.len() {
+            if self.in_block_comment {
+                if bytes[i] == '*'
+                    && i + 1 < bytes.len()
+                    && bytes[i + 1] == '/'
+                {
+                    self.in_block_comment = false;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+                code.push(' ');
+                continue;
+            }
+            if self.in_string {
+                if bytes[i] == '\\' {
+                    i += 2; // escape: skip the escaped char too
+                    code.push(' ');
+                    continue;
+                }
+                if bytes[i] == '"' {
+                    self.in_string = false;
+                    code.push('"');
+                } else {
+                    code.push(' ');
+                }
+                i += 1;
+                continue;
+            }
+            match bytes[i] {
+                '/' if i + 1 < bytes.len() && bytes[i + 1] == '/' => {
+                    // line comment: the rest of the line is comment
+                    comment = bytes[i..].iter().collect();
+                    break;
+                }
+                '/' if i + 1 < bytes.len() && bytes[i + 1] == '*' => {
+                    self.in_block_comment = true;
+                    code.push(' ');
+                    i += 2;
+                }
+                '"' => {
+                    self.in_string = true;
+                    code.push('"');
+                    i += 1;
+                }
+                '\'' => {
+                    // char literal vs lifetime: 'x' or '\n' is a
+                    // literal (blank it), 'a as in <'a> is a lifetime
+                    // (keep scanning)
+                    if i + 2 < bytes.len()
+                        && bytes[i + 1] != '\\'
+                        && bytes[i + 2] == '\''
+                    {
+                        code.push_str("   ");
+                        i += 3;
+                    } else if i + 3 < bytes.len()
+                        && bytes[i + 1] == '\\'
+                        && bytes[i + 3] == '\''
+                    {
+                        code.push_str("    ");
+                        i += 4;
+                    } else {
+                        code.push('\'');
+                        i += 1;
+                    }
+                }
+                c => {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+        }
+        (code, comment)
+    }
+}
+
+/// Find every identifier-boundary occurrence of `word` in `code`.
+fn word_positions(code: &str, word: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let code_b = code.as_bytes();
+    let mut from = 0usize;
+    while let Some(pos) = code[from..].find(word) {
+        let at = from + pos;
+        let before_ok = at == 0 || {
+            let c = code_b[at - 1] as char;
+            !(c.is_alphanumeric() || c == '_')
+        };
+        let end = at + word.len();
+        let after_ok = end >= code.len() || {
+            let c = code_b[end] as char;
+            !(c.is_alphanumeric() || c == '_')
+        };
+        if before_ok && after_ok {
+            out.push(at);
+        }
+        from = at + word.len().max(1);
+    }
+    out
+}
+
+/// A `lint: allow` escape parsed out of a comment, pre-resolution.
+struct PendingAllow {
+    line: usize,
+    rule: String,
+    reason: String,
+    /// line number the allow suppresses findings on (its own line if
+    /// inline, the next code line if the comment stands alone)
+    target: usize,
+    used: bool,
+}
+
+fn parse_allow(comment: &str, line: usize, own_code_empty: bool)
+               -> Option<PendingAllow> {
+    let at = comment.find("lint: allow(")?;
+    let rest = &comment[at + "lint: allow(".len()..];
+    let close = rest.find(')')?;
+    let rule = rest[..close].trim().to_string();
+    let reason = rest[close + 1..]
+        .trim_start_matches([' ', '—', '-', '–', ':'])
+        .trim()
+        .to_string();
+    Some(PendingAllow {
+        line,
+        rule,
+        reason,
+        // resolved properly (next code line) by the caller when the
+        // comment stands alone
+        target: if own_code_empty { line + 1 } else { line },
+        used: false,
+    })
+}
+
+/// Scan one file's source.  `rel_path` is the path relative to the
+/// scan root with forward slashes (e.g.
+/// `coordinator/serving/queue.rs`); it selects rule applicability and
+/// the ordering allowlist row.  Out-of-scope files produce an empty
+/// report.
+pub fn scan_source(rel_path: &str, source: &str) -> FileReport {
+    let mut report = FileReport::default();
+    if !in_scope(rel_path) {
+        return report;
+    }
+    let is_channel_module = rel_path.ends_with("stream/mod.rs");
+    let ordering_row = ORDERING_ALLOWLIST
+        .iter()
+        .find(|(suffix, _, _)| rel_path.ends_with(suffix));
+
+    // pass 1: sanitize every line, collect allows
+    let mut sanitizer = Sanitizer::default();
+    let mut code_lines: Vec<String> = Vec::new();
+    let mut allows: Vec<PendingAllow> = Vec::new();
+    for (idx, raw) in source.lines().enumerate() {
+        let line_no = idx + 1;
+        let (code, comment) = sanitizer.split(raw);
+        if let Some(a) =
+            parse_allow(&comment, line_no, code.trim().is_empty())
+        {
+            allows.push(a);
+        }
+        code_lines.push(code);
+    }
+    // a standalone allow targets the next line that has code on it
+    for a in &mut allows {
+        if a.target > a.line {
+            let mut t = a.line; // 0-indexed successor of a.line - 1
+            while t < code_lines.len()
+                && code_lines[t].trim().is_empty()
+            {
+                t += 1;
+            }
+            a.target = t + 1;
+        }
+    }
+
+    // findings are buffered through the allow filter
+    let emit = |allows: &mut Vec<PendingAllow>, line: usize,
+                    rule: &'static str, msg: String,
+                    findings: &mut Vec<Finding>| {
+        for a in allows.iter_mut() {
+            if a.target == line && a.rule == rule {
+                a.used = true;
+                return;
+            }
+        }
+        findings.push(Finding {
+            file: rel_path.to_string(),
+            line,
+            rule,
+            msg,
+        });
+    };
+
+    // pass 2: the per-line rules plus the guard-liveness tracker
+    let mut depth: i64 = 0;
+    // (binding name, depth at bind, bind line)
+    let mut live_guards: Vec<(String, i64, usize)> = Vec::new();
+    for (idx, code) in code_lines.iter().enumerate() {
+        let line_no = idx + 1;
+
+        // rule: raw-mutex — serving code locks through sync.rs only
+        for word in ["Mutex", "RwLock", "Condvar"] {
+            if !word_positions(code, word).is_empty() {
+                emit(&mut allows, line_no, RULE_RAW_MUTEX,
+                     format!(
+                         "raw std::sync::{word} in serving code — use \
+                          the ranked wrapper from crate::sync (rank \
+                          table enforces the lock order)"),
+                     &mut report.findings);
+                break; // one finding per line is enough
+            }
+        }
+
+        // rule: ordering-allowlist — every named atomic ordering must
+        // be allowlisted for this file
+        for at in word_positions(code, "Ordering") {
+            let rest = &code[at + "Ordering".len()..];
+            let Some(variant) = rest.strip_prefix("::") else {
+                continue;
+            };
+            let variant: String = variant
+                .chars()
+                .take_while(|c| c.is_alphanumeric() || *c == '_')
+                .collect();
+            if !ATOMIC_ORDERINGS.contains(&variant.as_str()) {
+                continue; // std::cmp::Ordering::Less etc.
+            }
+            match ordering_row {
+                None => {
+                    emit(&mut allows, line_no, RULE_ORDERING,
+                         format!(
+                             "atomic Ordering::{variant} in a file \
+                              with no ORDERING_ALLOWLIST row — add \
+                              one in lint.rs with a rationale"),
+                         &mut report.findings);
+                }
+                Some((_, allowed, _)) => {
+                    if !allowed.contains(&variant.as_str()) {
+                        emit(&mut allows, line_no, RULE_ORDERING,
+                             format!(
+                                 "Ordering::{variant} is not in this \
+                                  file's allowlist {allowed:?} — \
+                                  justify it in lint.rs or use the \
+                                  documented weaker ordering"),
+                             &mut report.findings);
+                    }
+                }
+            }
+        }
+
+        // rule: terminal-outside-channel — Done/Shed construction has
+        // exactly one home
+        if !is_channel_module {
+            for word in ["StreamEvent::Done", "StreamEvent::Shed"] {
+                if code.contains(word) {
+                    emit(&mut allows, line_no,
+                         RULE_TERMINAL_OUTSIDE_CHANNEL,
+                         format!(
+                             "{word} outside stream/mod.rs — terminal \
+                              events are constructed only by the \
+                              channel module (exactly-once \
+                              discipline)"),
+                         &mut report.findings);
+                    break;
+                }
+            }
+        }
+
+        // rule: guard-across-execute — positional event walk so
+        // `{{ let g = m.lock(); }}` one-liners scope correctly
+        #[derive(PartialEq)]
+        enum Ev {
+            Open,
+            Close,
+            Drop(String),
+            Exec,
+            Bind(String),
+        }
+        let mut events: Vec<(usize, Ev)> = Vec::new();
+        for (pos, c) in code.char_indices() {
+            if c == '{' {
+                events.push((pos, Ev::Open));
+            } else if c == '}' {
+                events.push((pos, Ev::Close));
+            }
+        }
+        let mut from = 0usize;
+        while let Some(p) = code[from..].find("drop(") {
+            let at = from + p;
+            let name: String = code[at + "drop(".len()..]
+                .chars()
+                .take_while(|c| c.is_alphanumeric() || *c == '_')
+                .collect();
+            if !name.is_empty() {
+                events.push((at, Ev::Drop(name)));
+            }
+            from = at + 1;
+        }
+        for needle in [".execute(", "catch_unwind"] {
+            let mut from = 0usize;
+            while let Some(p) = code[from..].find(needle) {
+                events.push((from + p, Ev::Exec));
+                from = from + p + 1;
+            }
+        }
+        // a guard bind: `let [mut] name = <expr>.lock();` (or
+        // .read()/.write(), with or without .unwrap()) — value binds
+        // like `let x = m.lock().pop();` hold no guard and don't match
+        let trimmed = code.trim_end();
+        let is_guard_stmt = ["lock()", "read()", "write()"]
+            .iter()
+            .any(|m| {
+                trimmed.ends_with(&format!(".{m};"))
+                    || trimmed.ends_with(&format!(".{m}.unwrap();"))
+            });
+        if is_guard_stmt {
+            if let Some(let_at) = word_positions(code, "let").first() {
+                let name: String = code[let_at + "let".len()..]
+                    .trim_start()
+                    .trim_start_matches("mut ")
+                    .trim_start()
+                    .chars()
+                    .take_while(|c| c.is_alphanumeric() || *c == '_')
+                    .collect();
+                if !name.is_empty() {
+                    events.push((*let_at, Ev::Bind(name)));
+                }
+            }
+        }
+        events.sort_by_key(|(pos, _)| *pos);
+        for (_, ev) in events {
+            match ev {
+                Ev::Open => depth += 1,
+                Ev::Close => {
+                    depth -= 1;
+                    live_guards.retain(|(_, d, _)| *d <= depth);
+                }
+                Ev::Drop(name) => {
+                    live_guards.retain(|(n, _, _)| *n != name);
+                }
+                Ev::Bind(name) => {
+                    live_guards.push((name, depth, line_no));
+                }
+                Ev::Exec => {
+                    if let Some((name, _, bound)) = live_guards.first()
+                    {
+                        emit(&mut allows, line_no,
+                             RULE_GUARD_ACROSS_EXECUTE,
+                             format!(
+                                 "executor/catch_unwind call while \
+                                  lock guard `{name}` (bound line \
+                                  {bound}) is live — a panicking \
+                                  backend would poison it; drop the \
+                                  guard first"),
+                             &mut report.findings);
+                    }
+                }
+            }
+        }
+    }
+
+    // pass 3: stale or unknown allows are themselves findings
+    for a in &allows {
+        if !ALL_RULES.contains(&a.rule.as_str()) {
+            report.findings.push(Finding {
+                file: rel_path.to_string(),
+                line: a.line,
+                rule: RULE_STALE_ALLOW,
+                msg: format!(
+                    "allow({}) names no known rule (known: {})",
+                    a.rule,
+                    ALL_RULES.join(", ")),
+            });
+        } else if !a.used {
+            report.findings.push(Finding {
+                file: rel_path.to_string(),
+                line: a.line,
+                rule: RULE_STALE_ALLOW,
+                msg: format!(
+                    "allow({}) suppresses nothing — the finding it \
+                     excused is gone; delete the escape", a.rule),
+            });
+        }
+    }
+    report.allows = allows
+        .into_iter()
+        .map(|a| Allow {
+            file: rel_path.to_string(),
+            line: a.line,
+            rule: a.rule,
+            reason: a.reason,
+        })
+        .collect();
+    report.findings.sort_by_key(|f| f.line);
+    report
+}
+
+/// Recursively scan every `.rs` file under `root` (rule applicability
+/// is decided per file from its relative path, so passing `rust/src`
+/// lints exactly the serving subsystem).
+pub fn scan_tree(root: &Path) -> io::Result<(Vec<Finding>, Vec<Allow>)> {
+    let mut files: Vec<std::path::PathBuf> = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    let mut allows = Vec::new();
+    for path in files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        if !in_scope(&rel) {
+            continue;
+        }
+        let source = fs::read_to_string(&path)?;
+        let mut report = scan_source(&rel, &source);
+        findings.append(&mut report.findings);
+        allows.append(&mut report.allows);
+    }
+    Ok((findings, allows))
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<std::path::PathBuf>)
+                    -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,486 @@
+//! Ranked synchronization primitives for the serving subsystem.
+//!
+//! Every mutex in `coordinator/serving/**` is a [`RankedMutex`] carrying
+//! one of the [`Rank`]s below.  Two guarantees follow:
+//!
+//! * **Deadlock freedom by construction.**  Under
+//!   `cfg(debug_assertions)` each thread tracks the ranks it currently
+//!   holds; acquiring a lock whose rank is not strictly greater than
+//!   every held rank panics at the acquisition site, so any
+//!   cycle-capable acquisition order dies in the first debug run that
+//!   exercises it instead of deadlocking one production run in a
+//!   million.  Release builds compile the check away entirely — the
+//!   lock is a plain `std::sync::Mutex` passthrough.
+//!
+//! * **Poison absorption.**  [`RankedMutex::lock`] recovers the inner
+//!   value from a poisoned mutex via `into_inner`-style recovery
+//!   instead of unwrapping, so one panicking worker cannot cascade
+//!   into every later `lock().unwrap()` on the same log (the
+//!   teardown path drains those logs and must complete even after a
+//!   fault).  Data-level invariants are the callers' business; every
+//!   protected structure here is a log, gauge, map or state machine
+//!   that tolerates a torn last entry.
+//!
+//! The rank table is the machine-checked form of the prose lock-order
+//! invariants in `coordinator/serving/README.md` ("Enforced
+//! invariants"); `invariant-lint` (rule `raw-mutex`) keeps new code
+//! from bypassing it with a raw `std::sync::Mutex`.
+
+use std::cell::RefCell;
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::sync::{Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard,
+                RwLockWriteGuard};
+use std::time::Duration;
+
+/// Global lock-acquisition order for the serving subsystem, smallest
+/// first.  A thread may only acquire a lock whose rank is **strictly
+/// greater** than every rank it already holds, so same-rank re-entry
+/// (two queue shards at once, two session entries at once) is refused
+/// along with genuine inversions.
+///
+/// The nestings that fixed this order:
+///
+/// * `SessionTable::advance`/`spec::resolve_verify` call
+///   `StreamSender::token` while holding the **SessionEntry** lock, so
+///   the stream channel ranks *above* the entry.
+/// * The map guard and an entry guard are never held together (the map
+///   lookup clones the `Arc` out as a temporary), but map → entry is
+///   the documented direction, so the map ranks below.
+/// * Workers append to the shed/completion logs only after every
+///   queue/session/controller lock is released — the logs rank last.
+/// * `ResponseSlot` and `InitLatch` are leaves (nothing is acquired
+///   while they are held, and they are never acquired under another
+///   serving lock on the engine side); they slot above the controller
+///   so a future "resolve under controller lock" refactor still
+///   type-checks the order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Rank {
+    /// one admission-queue shard's deque (`queue::Shard::items`)
+    QueueShard = 10,
+    /// a doorbell gate (`queue::Doorbell::gate`) — both the pop
+    /// doorbell and the vacancy doorbell
+    Doorbell = 20,
+    /// the session table's key → entry map (`SessionTable::sessions`)
+    SessionMap = 30,
+    /// one live decode session's state (`SessionEntry::state`)
+    SessionEntry = 40,
+    /// one stream channel's event queue (`Chan::inner`) — above
+    /// `SessionEntry` because `advance` emits tokens under the entry
+    StreamChan = 50,
+    /// a worker-class session arena's page pool (`SessionArena`)
+    ArenaPool = 60,
+    /// a worker class's capacity controller
+    Controller = 70,
+    /// a one-shot response's resolution slot (`Slot::state`)
+    ResponseSlot = 80,
+    /// the startup init latch (`InitLatch::state`)
+    InitLatch = 90,
+    /// the report logs: completions, sheds, stream_done, stream_shed
+    ShedLog = 100,
+    /// the worker-error log (appended by supervision paths that may
+    /// already hold a shed log in future refactors — keep it last)
+    Errors = 110,
+}
+
+#[cfg(debug_assertions)]
+thread_local! {
+    /// Ranks currently held by this thread (duplicates impossible:
+    /// acquisition is strictly increasing).  A `Vec`, not a single
+    /// max, because guards may drop in any order.
+    static HELD_RANKS: RefCell<Vec<Rank>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Debug-only acquisition check: `rank` must exceed every held rank.
+#[cfg(debug_assertions)]
+#[inline]
+fn rank_acquire(rank: Rank) {
+    HELD_RANKS.with(|held| {
+        let mut held = held.borrow_mut();
+        if let Some(&worst) = held.iter().max() {
+            assert!(
+                rank > worst,
+                "lock rank inversion: acquiring {rank:?} while already \
+                 holding {worst:?} (acquisition order must be strictly \
+                 increasing; see the Rank table in sync.rs)"
+            );
+        }
+        held.push(rank);
+    });
+}
+
+#[cfg(not(debug_assertions))]
+#[inline(always)]
+fn rank_acquire(_rank: Rank) {}
+
+/// Debug-only release: drop one occurrence of `rank` from the stack.
+#[cfg(debug_assertions)]
+#[inline]
+fn rank_release(rank: Rank) {
+    HELD_RANKS.with(|held| {
+        let mut held = held.borrow_mut();
+        if let Some(pos) = held.iter().rposition(|&r| r == rank) {
+            held.swap_remove(pos);
+        }
+    });
+}
+
+#[cfg(not(debug_assertions))]
+#[inline(always)]
+fn rank_release(_rank: Rank) {}
+
+/// Mutex with a global acquisition rank and poison absorption.  See
+/// the module docs; use [`RankedCondvar`] where `std::sync::Condvar`
+/// would pair with the inner mutex.
+pub struct RankedMutex<T> {
+    rank: Rank,
+    inner: Mutex<T>,
+}
+
+impl<T> RankedMutex<T> {
+    pub fn new(rank: Rank, value: T) -> RankedMutex<T> {
+        RankedMutex { rank, inner: Mutex::new(value) }
+    }
+
+    /// Acquire the lock.  Panics (debug builds only) if this thread
+    /// already holds a lock of equal or greater rank; absorbs
+    /// poisoning from a previous holder's panic instead of
+    /// propagating it.
+    pub fn lock(&self) -> RankedGuard<'_, T> {
+        rank_acquire(self.rank);
+        let guard =
+            self.inner.lock().unwrap_or_else(|poison| poison.into_inner());
+        RankedGuard { guard: Some(guard), rank: self.rank }
+    }
+
+    /// The rank this mutex was constructed with.
+    pub fn rank(&self) -> Rank {
+        self.rank
+    }
+
+    /// Consume the mutex, absorbing poison.
+    pub fn into_inner(self) -> T {
+        self.inner
+            .into_inner()
+            .unwrap_or_else(|poison| poison.into_inner())
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for RankedMutex<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("RankedMutex")
+            .field("rank", &self.rank)
+            .field("inner", &self.inner)
+            .finish()
+    }
+}
+
+/// Guard for a [`RankedMutex`].  The inner `Option` exists so
+/// [`RankedCondvar`] can take the raw guard out across a wait and put
+/// it back — the rank stays on the held stack for the whole wait
+/// (this thread is blocked; it cannot acquire anything else anyway).
+pub struct RankedGuard<'a, T> {
+    guard: Option<MutexGuard<'a, T>>,
+    rank: Rank,
+}
+
+impl<T> Deref for RankedGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        self.guard.as_ref().expect("guard taken by condvar wait")
+    }
+}
+
+impl<T> DerefMut for RankedGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.guard.as_mut().expect("guard taken by condvar wait")
+    }
+}
+
+impl<T> Drop for RankedGuard<'_, T> {
+    fn drop(&mut self) {
+        rank_release(self.rank);
+    }
+}
+
+/// Condvar companion to [`RankedMutex`]: `std::sync::Condvar::wait`
+/// needs the raw `MutexGuard`, so the wait methods take it out of the
+/// [`RankedGuard`], wait, and put it back — absorbing poison on
+/// re-acquisition exactly like [`RankedMutex::lock`].
+#[derive(Default)]
+pub struct RankedCondvar {
+    cv: Condvar,
+}
+
+impl RankedCondvar {
+    pub fn new() -> RankedCondvar {
+        RankedCondvar { cv: Condvar::new() }
+    }
+
+    /// Block until notified, releasing the lock for the duration.
+    pub fn wait<'a, T>(&self, mut guard: RankedGuard<'a, T>)
+                       -> RankedGuard<'a, T> {
+        let raw = guard.guard.take().expect("guard taken by condvar wait");
+        let raw =
+            self.cv.wait(raw).unwrap_or_else(|poison| poison.into_inner());
+        guard.guard = Some(raw);
+        guard
+    }
+
+    /// Block until notified or `timeout` elapses; the bool is `true`
+    /// iff the wait timed out.
+    pub fn wait_timeout<'a, T>(&self, mut guard: RankedGuard<'a, T>,
+                               timeout: Duration)
+                               -> (RankedGuard<'a, T>, bool) {
+        let raw = guard.guard.take().expect("guard taken by condvar wait");
+        let (raw, res) = self
+            .cv
+            .wait_timeout(raw, timeout)
+            .unwrap_or_else(|poison| poison.into_inner());
+        guard.guard = Some(raw);
+        (guard, res.timed_out())
+    }
+
+    pub fn notify_one(&self) {
+        self.cv.notify_one();
+    }
+
+    pub fn notify_all(&self) {
+        self.cv.notify_all();
+    }
+}
+
+impl fmt::Debug for RankedCondvar {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("RankedCondvar")
+    }
+}
+
+/// RwLock sibling of [`RankedMutex`]: both `read()` and `write()`
+/// participate in the same rank discipline (a read guard can still
+/// deadlock against a writer, so reads get no special dispensation)
+/// and both absorb poisoning.  Nothing in `serving/` needs one today;
+/// it exists so the first future reader/writer split starts ranked
+/// instead of raw.
+pub struct RankedRwLock<T> {
+    rank: Rank,
+    inner: RwLock<T>,
+}
+
+impl<T> RankedRwLock<T> {
+    pub fn new(rank: Rank, value: T) -> RankedRwLock<T> {
+        RankedRwLock { rank, inner: RwLock::new(value) }
+    }
+
+    pub fn read(&self) -> RankedReadGuard<'_, T> {
+        rank_acquire(self.rank);
+        let guard =
+            self.inner.read().unwrap_or_else(|poison| poison.into_inner());
+        RankedReadGuard { guard, rank: self.rank }
+    }
+
+    pub fn write(&self) -> RankedWriteGuard<'_, T> {
+        rank_acquire(self.rank);
+        let guard =
+            self.inner.write().unwrap_or_else(|poison| poison.into_inner());
+        RankedWriteGuard { guard, rank: self.rank }
+    }
+
+    pub fn rank(&self) -> Rank {
+        self.rank
+    }
+
+    pub fn into_inner(self) -> T {
+        self.inner
+            .into_inner()
+            .unwrap_or_else(|poison| poison.into_inner())
+    }
+}
+
+pub struct RankedReadGuard<'a, T> {
+    guard: RwLockReadGuard<'a, T>,
+    rank: Rank,
+}
+
+impl<T> Deref for RankedReadGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        &self.guard
+    }
+}
+
+impl<T> Drop for RankedReadGuard<'_, T> {
+    fn drop(&mut self) {
+        rank_release(self.rank);
+    }
+}
+
+pub struct RankedWriteGuard<'a, T> {
+    guard: RwLockWriteGuard<'a, T>,
+    rank: Rank,
+}
+
+impl<T> Deref for RankedWriteGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        &self.guard
+    }
+}
+
+impl<T> DerefMut for RankedWriteGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.guard
+    }
+}
+
+impl<T> Drop for RankedWriteGuard<'_, T> {
+    fn drop(&mut self) {
+        rank_release(self.rank);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::AssertUnwindSafe;
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    #[test]
+    fn in_order_acquisition_and_reacquisition_pass() {
+        let shard = RankedMutex::new(Rank::QueueShard, 1usize);
+        let log = RankedMutex::new(Rank::ShedLog, Vec::<usize>::new());
+        {
+            let s = shard.lock();
+            let mut l = log.lock();
+            l.push(*s);
+        }
+        // both released: a fresh acquisition at any rank is fine again
+        let l = log.lock();
+        assert_eq!(*l, vec![1]);
+    }
+
+    /// The acceptance-criteria test: a deliberately inverted
+    /// acquisition (high rank held, low rank requested) must be caught
+    /// by the debug-mode checker at the acquisition site.
+    #[test]
+    #[cfg(debug_assertions)]
+    fn rank_inversion_is_caught() {
+        let ctl = RankedMutex::new(Rank::Controller, ());
+        let shard = RankedMutex::new(Rank::QueueShard, ());
+        let _hi = ctl.lock();
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let _lo = shard.lock(); // Controller > QueueShard: inverted
+        }));
+        assert!(caught.is_err(), "inverted acquisition must panic");
+        // the failed acquisition must not corrupt the held stack:
+        // in-order acquisition still works while _hi is held
+        let _log = RankedMutex::new(Rank::ShedLog, ()).lock();
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    fn same_rank_double_hold_is_caught() {
+        let a = RankedMutex::new(Rank::SessionEntry, ());
+        let b = RankedMutex::new(Rank::SessionEntry, ());
+        let _ga = a.lock();
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let _gb = b.lock(); // equal rank: refused (strictly greater)
+        }));
+        assert!(caught.is_err(), "same-rank double hold must panic");
+    }
+
+    #[test]
+    fn lock_absorbs_poison_from_a_panicked_holder() {
+        let m = Arc::new(RankedMutex::new(Rank::ShedLog, vec![1, 2]));
+        let m2 = m.clone();
+        let t = std::thread::spawn(move || {
+            let _g = m2.lock();
+            panic!("poison the log");
+        });
+        assert!(t.join().is_err(), "holder must have panicked");
+        // pre-RankedMutex this was `.lock().unwrap()` → second panic
+        let mut g = m.lock();
+        g.push(3);
+        assert_eq!(*g, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn rwlock_orders_and_absorbs_like_the_mutex() {
+        let rw = Arc::new(RankedRwLock::new(Rank::Controller, 7usize));
+        {
+            let r = rw.read();
+            assert_eq!(*r, 7);
+        }
+        {
+            let mut w = rw.write();
+            *w = 8;
+        }
+        let rw2 = rw.clone();
+        let t = std::thread::spawn(move || {
+            let _w = rw2.write();
+            panic!("poison the rwlock");
+        });
+        assert!(t.join().is_err());
+        assert_eq!(*rw.read(), 8);
+    }
+
+    #[test]
+    fn condvar_roundtrips_the_guard_and_wakes() {
+        let state = Arc::new((
+            RankedMutex::new(Rank::ResponseSlot, false),
+            RankedCondvar::new(),
+        ));
+        let s2 = state.clone();
+        let t = std::thread::spawn(move || {
+            let mut g = s2.0.lock();
+            *g = true;
+            drop(g);
+            s2.1.notify_all();
+        });
+        let mut g = state.0.lock();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !*g {
+            let now = Instant::now();
+            assert!(now < deadline, "wakeup lost");
+            let (back, _timed_out) =
+                state.1.wait_timeout(g, deadline - now);
+            g = back;
+        }
+        drop(g);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn condvar_wait_keeps_rank_held_but_releases_the_lock() {
+        // While one thread waits on a ResponseSlot-ranked mutex,
+        // another thread must be able to take that same mutex (the
+        // wait released it) — proving the rank stack tracks the
+        // logical hold, not the physical one.
+        let state = Arc::new((
+            RankedMutex::new(Rank::ResponseSlot, 0u32),
+            RankedCondvar::new(),
+        ));
+        let s2 = state.clone();
+        let waiter = std::thread::spawn(move || {
+            let mut g = s2.0.lock();
+            while *g == 0 {
+                g = s2.1.wait(g);
+            }
+            *g
+        });
+        // busy-wait until the waiter almost certainly parked, then
+        // write through the same mutex and wake it
+        std::thread::sleep(Duration::from_millis(10));
+        {
+            let mut g = state.0.lock();
+            *g = 42;
+        }
+        state.1.notify_all();
+        assert_eq!(waiter.join().unwrap(), 42);
+    }
+}

@@ -1,0 +1,128 @@
+//! Drives the `invariant-lint` scanner as a library over the fixture
+//! files in `tests/lint_fixtures/` (one per rule), asserting exact
+//! rule IDs and line numbers — plus the whole-tree cleanliness check
+//! that CI gates on, so `cargo test` and the CI job cannot drift.
+
+use std::path::Path;
+
+use elastiformer::lint::{
+    scan_source, scan_tree, RULE_GUARD_ACROSS_EXECUTE, RULE_ORDERING,
+    RULE_RAW_MUTEX, RULE_STALE_ALLOW, RULE_TERMINAL_OUTSIDE_CHANNEL,
+};
+
+fn fixture(name: &str) -> String {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/lint_fixtures")
+        .join(name);
+    std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
+}
+
+fn rules_and_lines(rel_path: &str, source: &str)
+                   -> Vec<(usize, &'static str)> {
+    scan_source(rel_path, source)
+        .findings
+        .iter()
+        .map(|f| (f.line, f.rule))
+        .collect()
+}
+
+#[test]
+fn raw_mutex_fixture_flags_every_raw_lock_line() {
+    let got = rules_and_lines(
+        "coordinator/serving/fixture_raw_mutex.rs",
+        &fixture("fixture_raw_mutex.rs"));
+    assert_eq!(got, vec![(4, RULE_RAW_MUTEX), (7, RULE_RAW_MUTEX)]);
+}
+
+#[test]
+fn ordering_fixture_fails_without_an_allowlist_row() {
+    let got = rules_and_lines(
+        "coordinator/serving/fixture_ordering.rs",
+        &fixture("fixture_ordering.rs"));
+    assert_eq!(got, vec![(7, RULE_ORDERING)],
+               "a file with no ORDERING_ALLOWLIST row must fail");
+}
+
+#[test]
+fn ordering_allowlist_rows_are_enforced_per_file() {
+    let src = fixture("fixture_ordering.rs");
+    // queue.rs's row allows SeqCst: the same source passes there
+    assert_eq!(rules_and_lines("coordinator/serving/queue.rs", &src),
+               vec![]);
+    // worker.rs's row is Relaxed-only: SeqCst creep is flagged
+    assert_eq!(rules_and_lines("coordinator/serving/worker.rs", &src),
+               vec![(7, RULE_ORDERING)]);
+}
+
+#[test]
+fn guard_across_execute_fixture_flags_only_the_live_guard() {
+    let got = rules_and_lines(
+        "coordinator/serving/fixture_guard_across_execute.rs",
+        &fixture("fixture_guard_across_execute.rs"));
+    assert_eq!(got, vec![(7, RULE_GUARD_ACROSS_EXECUTE)],
+               "drop()-released and scope-released guards are clean");
+}
+
+#[test]
+fn terminal_fixture_flags_construction_outside_the_channel_module() {
+    let src = fixture("fixture_terminal.rs");
+    let got = rules_and_lines(
+        "coordinator/serving/stream/fixture_terminal.rs", &src);
+    assert_eq!(got, vec![(6, RULE_TERMINAL_OUTSIDE_CHANNEL),
+                         (10, RULE_TERMINAL_OUTSIDE_CHANNEL)]);
+    // the channel module itself is the one legitimate home
+    assert_eq!(rules_and_lines("coordinator/serving/stream/mod.rs", &src),
+               vec![]);
+}
+
+#[test]
+fn stale_allow_fixture_reports_dead_and_unknown_escapes() {
+    let report = scan_source(
+        "coordinator/serving/fixture_stale_allow.rs",
+        &fixture("fixture_stale_allow.rs"));
+    let got: Vec<(usize, &str)> = report.findings.iter()
+        .map(|f| (f.line, f.rule)).collect();
+    // the live escape on line 5 suppresses its raw-mutex finding; the
+    // stale escape (line 7) and the unknown-rule escape (line 12) are
+    // findings themselves
+    assert_eq!(got, vec![(7, RULE_STALE_ALLOW),
+                         (12, RULE_STALE_ALLOW)]);
+    // every escape — live or not — is inventoried for --list-allows
+    let allow_lines: Vec<usize> =
+        report.allows.iter().map(|a| a.line).collect();
+    assert_eq!(allow_lines, vec![5, 7, 12]);
+    assert!(report.allows.iter().all(|a| !a.reason.is_empty()),
+            "escape reasons survive parsing");
+}
+
+#[test]
+fn out_of_scope_paths_are_never_linted() {
+    let src = fixture("fixture_raw_mutex.rs");
+    assert!(scan_source("runtime/client.rs", &src).findings.is_empty());
+    assert!(scan_source("coordinator/training.rs", &src)
+                .findings
+                .is_empty());
+    assert!(scan_source("coordinator/serving/README.md", &src)
+                .findings
+                .is_empty(),
+            "non-.rs files are out of scope even under serving/");
+}
+
+/// The gate itself, mirrored into the test suite: the shipped serving
+/// tree must be lint-clean with zero allow escapes.  If this fails,
+/// so does the CI `invariant-lint` job — fix the code or write an
+/// explicit `lint: allow` with a reason.
+#[test]
+fn shipped_serving_tree_is_lint_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let (findings, allows) =
+        scan_tree(&root).expect("scanning rust/src must succeed");
+    assert!(findings.is_empty(),
+            "invariant-lint findings in the shipped tree:\n{}",
+            findings.iter().map(|f| f.to_string())
+                .collect::<Vec<_>>().join("\n"));
+    assert!(allows.is_empty(),
+            "the shipped tree carries no allow escapes today; if you \
+             added one on purpose, update this assertion and say why");
+}

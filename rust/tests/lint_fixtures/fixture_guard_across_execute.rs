@@ -1,0 +1,22 @@
+//! Fixture (not compiled): a lock guard live across an executor call
+//! must be flagged by rule `guard-across-execute`; dropping the guard
+//! first is clean.
+
+pub fn held_across(exec: &mut dyn Executor, log: &RankedMutex<Vec<u32>>) {
+    let mut held = log.lock();
+    let out = exec.execute(1.0, &[0; 4]);
+    held.push(out.unwrap().logits.len() as u32);
+}
+
+pub fn dropped_first(exec: &mut dyn Executor, log: &RankedMutex<Vec<u32>>) {
+    let held = log.lock();
+    drop(held);
+    let _ = exec.execute(1.0, &[0; 4]);
+}
+
+pub fn scoped_out(exec: &mut dyn Executor, log: &RankedMutex<Vec<u32>>) {
+    {
+        let _held = log.lock();
+    }
+    let _ = exec.execute(1.0, &[0; 4]);
+}

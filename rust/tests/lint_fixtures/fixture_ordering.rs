@@ -1,0 +1,8 @@
+//! Fixture (not compiled): an atomic `Ordering` variant named in a
+//! serving file is checked against that file's allowlist row (rule
+//! `ordering-allowlist`); a file with no row fails outright.
+
+pub fn bump(counter: &std::sync::atomic::AtomicUsize) -> usize {
+    use std::sync::atomic::Ordering;
+    counter.fetch_add(1, Ordering::SeqCst)
+}

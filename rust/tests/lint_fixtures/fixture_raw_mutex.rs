@@ -1,0 +1,14 @@
+//! Fixture (not compiled): raw `std::sync` lock types in serving
+//! scope must be flagged by rule `raw-mutex`.
+
+use std::sync::Mutex;
+
+pub struct RawHolder {
+    slots: Mutex<Vec<u32>>,
+}
+
+impl RawHolder {
+    pub fn push(&self, v: u32) {
+        self.slots.lock().unwrap().push(v);
+    }
+}

@@ -1,0 +1,15 @@
+//! Fixture (not compiled): `lint: allow` escapes — a live escape
+//! suppresses its finding and is inventoried; a stale or
+//! unknown-rule escape is itself a finding (rule `stale-allow`).
+
+use std::sync::Mutex; // lint: allow(raw-mutex) — fixture: a live escape
+
+// lint: allow(raw-mutex) — stale: the next code line is clean
+pub fn clean() -> u32 {
+    7
+}
+
+// lint: allow(no-such-rule) — names a rule that does not exist
+pub fn also_clean() -> u32 {
+    8
+}

@@ -1,0 +1,11 @@
+//! Fixture (not compiled): `StreamEvent::Done`/`Shed` constructed
+//! outside the channel module must be flagged by rule
+//! `terminal-outside-channel`.
+
+pub fn finish(sender: &StreamSender, stats: StreamStats) {
+    sender.terminate(StreamEvent::Done(stats));
+}
+
+pub fn kill(sender: &StreamSender, err: ServeError) {
+    sender.terminate(StreamEvent::Shed(err));
+}
