@@ -62,7 +62,7 @@ fn sim_pipeline_bench() -> anyhow::Result<()> {
             rows.push(sim::BenchRow { queue: label, workers, shards,
                                       classes: String::new(),
                                       fault_rate: 0.0, submitted: 0,
-                                      report });
+                                      trace_overhead: 0.0, report });
         }
     }
     // heterogeneous topology: 2 fast workers + 2 slow (4x latency)
@@ -86,6 +86,7 @@ fn sim_pipeline_bench() -> anyhow::Result<()> {
         classes: "fast=2:slow=2".into(),
         fault_rate: 0.0,
         submitted: 0,
+        trace_overhead: 0.0,
         report,
     });
     // streaming decode: 64 concurrent sessions x 16 tokens through
@@ -118,6 +119,7 @@ fn sim_pipeline_bench() -> anyhow::Result<()> {
         classes: String::new(),
         fault_rate: 0.0,
         submitted: 0,
+        trace_overhead: 0.0,
         report,
     });
     // speculative decode: the same sessions, but each admission
@@ -142,6 +144,7 @@ fn sim_pipeline_bench() -> anyhow::Result<()> {
         classes: String::new(),
         fault_rate: 0.0,
         submitted: 0,
+        trace_overhead: 0.0,
         report,
     });
     // chaos injection: the speculative workload under a seeded fault
@@ -180,6 +183,31 @@ fn sim_pipeline_bench() -> anyhow::Result<()> {
         classes: String::new(),
         fault_rate,
         submitted,
+        trace_overhead: 0.0,
+        report,
+    });
+    // flight recorder: the same saturating one-shot load with the
+    // recorder on.  The headline is the traced/untraced req/s ratio —
+    // every event site is one branch when tracing is off and one
+    // lane-local lock push when on, so the ratio should sit near 1.0;
+    // a regression here means the recorder leaked onto the hot path.
+    let untraced = sim::pipeline_point(spec, 4, 4, n)?;
+    let (report, events, counts) =
+        sim::traced_point(spec, 4, 4, n, 0, 0, 0, 1 << 16)?;
+    let trace_overhead =
+        report.throughput_rps() / untraced.throughput_rps();
+    println!("sim_serving_traced_w4   {:>8.0} req/s  \
+              ({:.2}x untraced)  {} event(s), {} dropped",
+             report.throughput_rps(), trace_overhead, events.len(),
+             counts.dropped);
+    rows.push(sim::BenchRow {
+        queue: "trace",
+        workers: 4,
+        shards: 4,
+        classes: String::new(),
+        fault_rate: 0.0,
+        submitted: 0,
+        trace_overhead,
         report,
     });
     let path = std::path::Path::new(

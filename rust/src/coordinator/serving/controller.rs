@@ -67,6 +67,17 @@ pub enum BreakerState {
     HalfOpen,
 }
 
+impl BreakerState {
+    /// Stable lowercase label (trace events, report lines).
+    pub fn name(self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half-open",
+        }
+    }
+}
+
 /// See module docs.  Invariants (property-tested in
 /// `tests/properties.rs`):
 ///  * `tier_for_depth` is monotone non-increasing in depth
@@ -327,6 +338,26 @@ impl CapacityController {
         self.breaker
     }
 
+    /// [`observe_batch_outcome`](Self::observe_batch_outcome), but
+    /// reporting the breaker transition it caused, if any — the flight
+    /// recorder's hook, so emission sites never have to re-derive
+    /// state by comparing `breaker_state()` around the call.
+    pub fn observe_batch_outcome_noting(&mut self, ok: bool)
+        -> Option<(BreakerState, BreakerState)> {
+        let before = self.breaker;
+        self.observe_batch_outcome(ok);
+        (self.breaker != before).then_some((before, self.breaker))
+    }
+
+    /// [`breaker_tick`](Self::breaker_tick), but also reporting the
+    /// Open → Half-open transition when the cooldown expires.
+    pub fn breaker_tick_noting(&mut self)
+        -> (BreakerState, Option<(BreakerState, BreakerState)>) {
+        let before = self.breaker;
+        let state = self.breaker_tick();
+        (state, (state != before).then_some((before, state)))
+    }
+
     /// Current breaker state, without ticking.
     pub fn breaker_state(&self) -> BreakerState {
         self.breaker
@@ -534,6 +565,40 @@ mod tests {
         c.observe_batch_outcome(false);
         assert_eq!(c.breaker_state(), BreakerState::Closed,
                    "old faults must not count after recovery");
+    }
+
+    #[test]
+    fn noting_wrappers_report_exactly_the_real_transitions() {
+        let mut c = CapacityController::new(vec![1.0], 1.0);
+        // healthy observations: no transition reported
+        for _ in 0..MIN_OBS {
+            assert_eq!(c.observe_batch_outcome_noting(true), None);
+        }
+        // drive to the trip: the LAST failing observation reports
+        // Closed -> Open, the earlier ones report nothing
+        let mut transitions = Vec::new();
+        while c.breaker_state() == BreakerState::Closed {
+            if let Some(t) = c.observe_batch_outcome_noting(false) {
+                transitions.push(t);
+            }
+        }
+        assert_eq!(transitions,
+                   vec![(BreakerState::Closed, BreakerState::Open)]);
+        // ticking through the cooldown reports one Open -> HalfOpen
+        let mut tick_transitions = Vec::new();
+        for _ in 0..COOLDOWN_TICKS {
+            let (state, t) = c.breaker_tick_noting();
+            assert_eq!(state, c.breaker_state());
+            if let Some(t) = t {
+                tick_transitions.push(t);
+            }
+        }
+        assert_eq!(tick_transitions,
+                   vec![(BreakerState::Open, BreakerState::HalfOpen)]);
+        // the healthy probe reports HalfOpen -> Closed
+        assert_eq!(c.observe_batch_outcome_noting(true),
+                   Some((BreakerState::HalfOpen, BreakerState::Closed)));
+        assert_eq!(BreakerState::HalfOpen.name(), "half-open");
     }
 
     #[test]

@@ -93,6 +93,7 @@ pub mod queue;
 pub mod report;
 pub mod sim;
 pub mod stream;
+pub mod trace;
 pub mod worker;
 
 pub use batcher::{
@@ -111,6 +112,10 @@ pub use stream::arena::SessionArena;
 pub use stream::{
     DecodeSession, StreamEvent, StreamRequest, StreamResponse,
     StreamStats, StreamTimeout,
+};
+pub use trace::{
+    trace_export, ClassSnapshot, EngineSnapshot, Stamped, TraceCounts,
+    TraceRecorder,
 };
 pub use worker::{ExecOutput, Executor};
 #[cfg(feature = "pjrt")]
@@ -358,6 +363,13 @@ pub struct ServeConfig {
     /// retry/backoff, poison-quarantine and respawn policy (see
     /// [`FaultPolicy`])
     pub fault_policy: FaultPolicy,
+    /// flight-recorder ring capacity per event lane (one lane per
+    /// worker + one engine lane; see [`trace::TraceRecorder`]).  0
+    /// (the default) disables tracing entirely: no recorder is built,
+    /// every emission site is a single `None` branch, no trace ids
+    /// are consumed, and a seeded sim replays bit-identically to the
+    /// untraced build
+    pub trace_capacity: usize,
 }
 
 impl ServeConfig {
@@ -380,6 +392,7 @@ impl ServeConfig {
             arena_pages: 64,
             spec_k: 0,
             fault_policy: FaultPolicy::default(),
+            trace_capacity: 0,
         }
     }
 
@@ -428,6 +441,15 @@ impl ServeConfig {
     pub fn with_fault_policy(mut self, policy: FaultPolicy)
                              -> ServeConfig {
         self.fault_policy = policy;
+        self
+    }
+
+    /// Enable the flight recorder with `capacity` events per lane
+    /// (0, the default, disables tracing — zero overhead beyond one
+    /// branch per emission site).
+    pub fn with_trace_capacity(mut self, capacity: usize)
+                               -> ServeConfig {
+        self.trace_capacity = capacity;
         self
     }
 
@@ -674,6 +696,10 @@ pub(crate) struct Pending {
     pub req: Request,
     pub submitted: Instant,
     pub outcome: Outcome,
+    /// flight-recorder id for this request/session (0 = untraced
+    /// engine; a session's continuation steps all carry the
+    /// session's id)
+    pub trace_id: u64,
 }
 
 impl Pending {
@@ -788,6 +814,13 @@ pub(crate) struct EngineShared {
     pub health: Vec<ClassHealth>,
     /// per-class fault-ladder counters, indexed by class id
     pub faults: Vec<FaultStats>,
+    /// flight recorder (`None` = tracing disabled, the default):
+    /// every emission site is a single branch on this option
+    pub trace: Option<Arc<TraceRecorder>>,
+    /// live per-class serving stats (one-shot served/shed tallies +
+    /// log2 latency histogram), indexed by class id — always on,
+    /// feeding [`EngineHandle::snapshot`] mid-run
+    pub live: Vec<trace::LiveClassStats>,
 }
 
 /// Per-class supervision state: how many workers failed to init, how
@@ -918,6 +951,14 @@ impl ElasticEngine {
         } else {
             cfg.queue_shards
         };
+        let trace = (cfg.trace_capacity > 0).then(|| {
+            Arc::new(TraceRecorder::new(
+                cfg.trace_capacity,
+                workers,
+                classes.iter().map(|c| c.name.clone()).collect(),
+                Instant::now(),
+            ))
+        });
         let shared = Arc::new(EngineShared {
             queue: AdmissionQueue::sharded(cfg.queue_bound, shards),
             controllers: classes
@@ -957,6 +998,11 @@ impl ElasticEngine {
                 .map(|_| ClassHealth::new(cfg.fault_policy.restart_budget))
                 .collect(),
             faults: classes.iter().map(|_| FaultStats::default()).collect(),
+            trace,
+            live: classes
+                .iter()
+                .map(|_| trace::LiveClassStats::default())
+                .collect(),
         });
         let init = Arc::new(InitLatch::new());
         let caps = Arc::new(caps);
@@ -1044,7 +1090,7 @@ impl ElasticEngine {
                                         None => {
                                             worker::fail_batch(
                                                 &shared, fault.inflight,
-                                                &fault.msg, &cname);
+                                                &fault.msg, &cname, w);
                                             break; // watch notes death
                                         }
                                     }
@@ -1126,20 +1172,36 @@ impl EngineHandle {
         // deadline-carrying requests are flagged urgent so the queue's
         // deadline-aware steal peek engages only while any are enqueued
         let urgent = req.slo.deadline.is_some();
+        let trace_id = self
+            .shared
+            .trace
+            .as_ref()
+            .map_or(0, |t| t.alloc_trace_id());
         let pending = Pending {
             submitted: Instant::now(),
             req,
             outcome: Outcome::OneShot(responder),
+            trace_id,
         };
+        if let Some(t) = &self.shared.trace {
+            t.admit(t.engine_lane(), trace_id);
+        }
         let pushed = if urgent {
             self.shared.queue.push_urgent(pending)
         } else {
             self.shared.queue.push(pending)
         };
-        if let Err(p) = pushed {
-            self.record_engine_shed(&p);
-            if let Outcome::OneShot(responder) = p.outcome {
-                responder.fulfil(Err(ServeError::ShuttingDown));
+        match pushed {
+            Ok(shard) => {
+                if let Some(t) = &self.shared.trace {
+                    t.place(t.engine_lane(), trace_id, shard);
+                }
+            }
+            Err(p) => {
+                self.record_engine_shed(&p);
+                if let Outcome::OneShot(responder) = p.outcome {
+                    responder.fulfil(Err(ServeError::ShuttingDown));
+                }
             }
         }
         response
@@ -1152,19 +1214,39 @@ impl EngineHandle {
     pub fn try_submit(&self, req: Request) -> Admission {
         let (responder, response) = Response::channel(req.id);
         let urgent = req.slo.deadline.is_some();
+        let trace_id = self
+            .shared
+            .trace
+            .as_ref()
+            .map_or(0, |t| t.alloc_trace_id());
         let pending = Pending {
             submitted: Instant::now(),
             req,
             outcome: Outcome::OneShot(responder),
+            trace_id,
         };
+        if let Some(t) = &self.shared.trace {
+            t.admit(t.engine_lane(), trace_id);
+        }
         let pushed = if urgent {
             self.shared.queue.try_push_urgent(pending)
         } else {
             self.shared.queue.try_push(pending)
         };
         match pushed {
-            Ok(()) => Admission::Accepted(response),
-            Err(TryPushError::Full(_)) => {
+            Ok(shard) => {
+                if let Some(t) = &self.shared.trace {
+                    t.place(t.engine_lane(), trace_id, shard);
+                }
+                Admission::Accepted(response)
+            }
+            Err(TryPushError::Full(p)) => {
+                // balance the Admit so every trace id reaches exactly
+                // one terminal, even for never-admitted rejections
+                if let Some(t) = &self.shared.trace {
+                    t.terminal(t.engine_lane(), p.trace_id,
+                               "rejected-full");
+                }
                 Admission::Shed(ShedReason::QueueFull)
             }
             Err(TryPushError::Closed(p)) => {
@@ -1179,6 +1261,85 @@ impl EngineHandle {
         }
     }
 
+    /// Live mid-run snapshot: queue/worker gauges, per-class counters
+    /// and log2-bucket latency percentiles, session and speculative
+    /// tallies, and — when tracing is on — the event ledger.  Safe to
+    /// call at any time from any thread; reads atomics plus one brief
+    /// lock per class (controller) and per report log.
+    pub fn snapshot(&self) -> EngineSnapshot {
+        let shared = &self.shared;
+        let classes = shared
+            .classes
+            .iter()
+            .enumerate()
+            .map(|(ci, (name, _))| {
+                let live = &shared.live[ci];
+                let (breaker, breaker_trips) = {
+                    let ctl = shared.controllers[ci].lock();
+                    (ctl.breaker_state().name(), ctl.breaker_trips())
+                };
+                ClassSnapshot {
+                    class: name.clone(),
+                    // Relaxed gauge reads: a snapshot is a statistical
+                    // observation, not a synchronization point
+                    served: live.served.load(Ordering::Relaxed),
+                    shed: live.shed.load(Ordering::Relaxed),
+                    p50_ms: live.latency.quantile_ms(0.5),
+                    p99_ms: live.latency.quantile_ms(0.99),
+                    latency_samples: live.latency.count(),
+                    breaker,
+                    breaker_trips,
+                    retries: shared.faults[ci]
+                        .retries
+                        .load(Ordering::Relaxed),
+                    splits: shared.faults[ci]
+                        .splits
+                        .load(Ordering::Relaxed),
+                    poisoned: shared.faults[ci]
+                        .poisoned
+                        .load(Ordering::Relaxed),
+                    respawns: shared.health[ci]
+                        .respawns
+                        .load(Ordering::Relaxed),
+                    cache_hits: shared.arenas[ci].hits(),
+                    cache_misses: shared.arenas[ci].misses(),
+                }
+            })
+            .collect::<Vec<_>>();
+        let (served, shed) = classes.iter().fold(
+            (0u64, 0u64),
+            |(s, d), c| (s + c.served, d + c.shed));
+        let (drafted, accepted, rejected) = shared.spec.iter().fold(
+            (0usize, 0usize, 0usize),
+            |(d, a, r), s| (d + s.drafted(), a + s.accepted(),
+                            r + s.rejected()));
+        EngineSnapshot {
+            uptime_ms: self.started.elapsed().as_secs_f64() * 1e3,
+            queue_depth: shared.queue.len(),
+            urgent_depth: shared.queue.urgent_len(),
+            // Relaxed: a snapshot gauge — the AcqRel decrement's
+            // payload (final writes) is not consumed here
+            live_workers: shared.live_workers.load(Ordering::Relaxed),
+            served,
+            shed,
+            sessions_started: shared.sessions.sessions_started(),
+            sessions_done: shared.stream_done.lock().len(),
+            sessions_shed: shared.stream_shed.lock().len(),
+            spec_drafted: drafted,
+            spec_accepted: accepted,
+            spec_rejected: rejected,
+            classes,
+            trace: shared.trace.as_ref().map(|t| t.counts()),
+        }
+    }
+
+    /// The engine's flight recorder, when tracing is enabled — clone
+    /// the `Arc` before [`shutdown`](Self::shutdown) to drain and
+    /// export the buffered events after the fleet has quiesced.
+    pub fn trace_recorder(&self) -> Option<Arc<TraceRecorder>> {
+        self.shared.trace.clone()
+    }
+
     /// Log one engine-side `ShuttingDown` rejection (worker_class
     /// "engine": no worker ever saw the request).
     fn record_engine_shed(&self, p: &Pending) {
@@ -1188,6 +1349,9 @@ impl EngineHandle {
             worker_class: "engine".into(),
             cause: ShedCause::ShuttingDown,
         });
+        if let Some(t) = &self.shared.trace {
+            t.terminal(t.engine_lane(), p.trace_id, "shed-shutdown");
+        }
     }
 
     /// Start one streaming decode session: the prompt is prefilled,
@@ -1212,6 +1376,11 @@ impl EngineHandle {
         let cap = req.max_steps.max(1) + 1;
         let (sender, response) = stream::channel(req.id, cap);
         let urgent = req.slo.deadline.is_some();
+        let trace_id = self
+            .shared
+            .trace
+            .as_ref()
+            .map_or(0, |t| t.alloc_trace_id());
         // admit pins the session to one shard; the prefill and every
         // continuation land there, so the workers that drain it keep
         // its arena page warm (placement affinity)
@@ -1221,22 +1390,35 @@ impl EngineHandle {
             Instant::now(),
             self.shared.queue.shards(),
             self.shared.spec_k,
+            trace_id,
         );
+        if let Some(t) = &self.shared.trace {
+            t.admit(t.engine_lane(), trace_id);
+        }
         let shard = match &pending.outcome {
             Outcome::Stream(st) => st.shard,
             Outcome::OneShot(_) => unreachable!(
                 "admit always yields a stream outcome"),
         };
-        if let Err(p) =
-            self.shared.queue.push_pinned(shard, pending, urgent)
-        {
-            if let Outcome::Stream(st) = p.outcome {
-                if let Some(rec) = self.shared.sessions.shed(
-                    st.session, ServeError::ShuttingDown, "engine")
-                {
-                    self.shared.stream_shed.lock().push(rec);
+        match self.shared.queue.push_pinned(shard, pending, urgent) {
+            Ok(shard) => {
+                if let Some(t) = &self.shared.trace {
+                    t.place(t.engine_lane(), trace_id, shard);
                 }
-                self.shared.recycle_session(st.session);
+            }
+            Err(p) => {
+                if let Outcome::Stream(st) = p.outcome {
+                    if let Some(rec) = self.shared.sessions.shed(
+                        st.session, ServeError::ShuttingDown, "engine")
+                    {
+                        self.shared.stream_shed.lock().push(rec);
+                        if let Some(t) = &self.shared.trace {
+                            t.terminal(t.engine_lane(), p.trace_id,
+                                       "shed-shutdown");
+                        }
+                    }
+                    self.shared.recycle_session(st.session);
+                }
             }
         }
         response
@@ -1336,6 +1518,10 @@ impl EngineHandle {
                 match p.outcome {
                     Outcome::OneShot(responder) => {
                         responder.fulfil(Err(ServeError::ShuttingDown));
+                        if let Some(t) = &self.shared.trace {
+                            t.terminal(t.engine_lane(), p.trace_id,
+                                       "shutdown-drain");
+                        }
                     }
                     Outcome::Stream(st) => {
                         if let Some(rec) = self.shared.sessions.shed(
@@ -1343,6 +1529,10 @@ impl EngineHandle {
                             "engine")
                         {
                             engine_stream_sheds.push(rec);
+                            if let Some(t) = &self.shared.trace {
+                                t.terminal(t.engine_lane(), p.trace_id,
+                                           "shutdown-drain");
+                            }
                         }
                         self.shared.recycle_session(st.session);
                     }
@@ -1352,10 +1542,16 @@ impl EngineHandle {
         // sessions with no queued step left (their in-flight item died
         // with a worker) must still get their terminal event — the
         // streaming exactly-once backbone at teardown
-        engine_stream_sheds.extend(self
+        for (tid, rec) in self
             .shared
             .sessions
-            .shed_all(ServeError::ShuttingDown, "engine"));
+            .shed_all(ServeError::ShuttingDown, "engine")
+        {
+            engine_stream_sheds.push(rec);
+            if let Some(t) = &self.shared.trace {
+                t.terminal(t.engine_lane(), tid, "shutdown-drain");
+            }
+        }
         // every live session now has its terminal; all remaining pages
         // belong to terminated sessions — free them in one sweep
         for arena in &self.shared.arenas {
@@ -1589,6 +1785,9 @@ fn respawn_executor(factory: &ExecutorFactory, shared: &EngineShared,
     }
     // Relaxed statistic: read by report assembly after the joins
     health.respawns.fetch_add(1, Ordering::Relaxed);
+    if let Some(t) = shared.trace.as_deref() {
+        t.respawn(worker, class_idx);
+    }
     Some(exec)
 }
 
@@ -1602,6 +1801,7 @@ fn requeue_inflight(shared: &EngineShared, items: Vec<Pending>,
                     class_name: &str) {
     for p in items {
         let urgent = p.req.slo.deadline.is_some();
+        let trace_id = p.trace_id;
         let pin = match &p.outcome {
             Outcome::Stream(st) => Some(st.shard),
             Outcome::OneShot(_) => None,
@@ -1610,22 +1810,35 @@ fn requeue_inflight(shared: &EngineShared, items: Vec<Pending>,
             Some(shard) => shared.queue.requeue_to(shard, p, urgent),
             None => shared.queue.requeue(p, urgent),
         };
-        if let Err(p) = stale {
-            shared.sheds.lock().push(ShedRecord {
-                id: p.req.id,
-                class: p.req.slo.name.clone(),
-                worker_class: class_name.to_string(),
-                cause: ShedCause::ShuttingDown,
-            });
-            match p.outcome {
-                Outcome::OneShot(responder) => {
-                    responder.fulfil(Err(ServeError::ShuttingDown));
+        match stale {
+            Ok(_) => {
+                if let Some(t) = &shared.trace {
+                    t.requeue(t.engine_lane(), trace_id);
                 }
-                Outcome::Stream(st) => {
-                    shared.sessions.shed(st.session,
-                                         ServeError::ShuttingDown,
-                                         class_name);
-                    shared.recycle_session(st.session);
+                continue;
+            }
+            Err(p) => {
+                shared.sheds.lock().push(ShedRecord {
+                    id: p.req.id,
+                    class: p.req.slo.name.clone(),
+                    worker_class: class_name.to_string(),
+                    cause: ShedCause::ShuttingDown,
+                });
+                if let Some(t) = &shared.trace {
+                    t.terminal(t.engine_lane(), p.trace_id,
+                               "shed-shutdown");
+                }
+                match p.outcome {
+                    Outcome::OneShot(responder) => {
+                        responder.fulfil(
+                            Err(ServeError::ShuttingDown));
+                    }
+                    Outcome::Stream(st) => {
+                        shared.sessions.shed(st.session,
+                                             ServeError::ShuttingDown,
+                                             class_name);
+                        shared.recycle_session(st.session);
+                    }
                 }
             }
         }
@@ -1830,6 +2043,73 @@ mod tests {
         let report = engine.shutdown().unwrap();
         assert_eq!(report.completions.len(), 5);
         assert!(report.sheds.is_empty());
+    }
+
+    #[test]
+    fn snapshot_reports_live_counters_and_trace_ledger() {
+        let cfg = ServeConfig::sim()
+            .with_workers(2)
+            .with_trace_capacity(512);
+        let caps = cfg.capacities();
+        let engine = ElasticEngine::start(
+            cfg, sim::factory(SimSpec::instant(), caps)).unwrap();
+        let seq = SimSpec::instant().seq_len;
+        let responses: Vec<Response> = (0..8u64)
+            .map(|id| engine.submit(Request::new(id, vec![0; seq])))
+            .collect();
+        for r in responses {
+            r.wait().expect("sim request must be served");
+        }
+        let snap = engine.snapshot();
+        assert_eq!(snap.served, 8,
+                   "live served gauge settles before wait() returns");
+        assert_eq!(snap.shed, 0);
+        assert_eq!(snap.classes.len(), 1);
+        assert_eq!(snap.classes[0].class, "default");
+        assert_eq!(snap.classes[0].latency_samples, 8);
+        assert!(snap.classes[0].p99_ms >= snap.classes[0].p50_ms);
+        assert_eq!(snap.classes[0].breaker, "closed");
+        assert!(snap.uptime_ms >= 0.0);
+        let counts = snap.trace.expect("tracing is enabled");
+        assert!(counts.emitted > 0, "events were recorded");
+        let rec = engine.trace_recorder().expect("recorder accessor");
+        engine.shutdown().unwrap();
+        let events = rec.drain();
+        let admits =
+            events.iter().filter(|e| e.kind() == "admit").count();
+        let terminals =
+            events.iter().filter(|e| e.kind() == "terminal").count();
+        assert_eq!(admits, 8, "one admit per submitted request");
+        assert_eq!(terminals, 8, "one terminal per admit");
+        // every request span pairs: admit and terminal share an id
+        for e in &events {
+            if e.kind() == "terminal" {
+                assert!(events.iter().any(|a| a.kind() == "admit"
+                                          && a.trace_id == e.trace_id));
+                assert_eq!(e.terminal_cause(), Some("served"));
+            }
+        }
+        let c = rec.counts();
+        assert_eq!(c.dropped + c.exported, c.emitted,
+                   "ledger reconciles after drain");
+    }
+
+    #[test]
+    fn untraced_engine_allocates_no_trace_ids() {
+        let cfg = ServeConfig::sim().with_workers(1);
+        let caps = cfg.capacities();
+        let engine = ElasticEngine::start(
+            cfg, sim::factory(SimSpec::instant(), caps)).unwrap();
+        assert!(engine.trace_recorder().is_none(),
+                "trace_capacity 0 builds no recorder");
+        let seq = SimSpec::instant().seq_len;
+        let r = engine.submit(Request::new(0, vec![0; seq]));
+        r.wait().expect("untraced engine serves normally");
+        let snap = engine.snapshot();
+        assert!(snap.trace.is_none());
+        assert_eq!(snap.served, 1,
+                   "live stats stay on without the recorder");
+        engine.shutdown().unwrap();
     }
 
     #[test]

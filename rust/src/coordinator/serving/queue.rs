@@ -339,11 +339,11 @@ impl<T> AdmissionQueue<T> {
         }
     }
 
-    fn deposit(&self, item: T, urgent: bool) {
-        self.deposit_to(self.pick_shard(urgent), item, urgent);
+    fn deposit(&self, item: T, urgent: bool) -> usize {
+        self.deposit_to(self.pick_shard(urgent), item, urgent)
     }
 
-    fn deposit_to(&self, s: usize, item: T, urgent: bool) {
+    fn deposit_to(&self, s: usize, item: T, urgent: bool) -> usize {
         let shard = &self.shards[s];
         let mut items = shard.items.lock();
         // Relaxed mirror writes (advisory hints; published by the
@@ -355,14 +355,17 @@ impl<T> AdmissionQueue<T> {
         }
         drop(items);
         self.doorbell.ring();
+        s
     }
 
     /// Enqueue one item, blocking while the aggregate depth is at its
-    /// bound.  Returns the item back as `Err` if the queue has been
-    /// closed (shutdown, or the last live worker died — individual
-    /// worker faults are supervised and respawned, not queue-closing)
-    /// so the caller can account for it.
-    pub fn push(&self, item: T) -> Result<(), T> {
+    /// bound.  `Ok` carries the shard the item landed on (the flight
+    /// recorder's `Place` event; callers that don't trace ignore it).
+    /// Returns the item back as `Err` if the queue has been closed
+    /// (shutdown, or the last live worker died — individual worker
+    /// faults are supervised and respawned, not queue-closing) so the
+    /// caller can account for it.
+    pub fn push(&self, item: T) -> Result<usize, T> {
         self.push_with(item, false, None)
     }
 
@@ -371,7 +374,7 @@ impl<T> AdmissionQueue<T> {
     /// must engage while it is enqueued.  The engine routes
     /// deadline-carrying requests here; urgency must agree with the pop
     /// side's slack function (`urgent` ⟺ `slack(item).is_finite()`).
-    pub fn push_urgent(&self, item: T) -> Result<(), T> {
+    pub fn push_urgent(&self, item: T) -> Result<usize, T> {
         self.push_with(item, true, None)
     }
 
@@ -382,7 +385,7 @@ impl<T> AdmissionQueue<T> {
     /// pages are laid down where every later step will look for them.
     /// Bound, close and gauge semantics are identical to `push`.
     pub fn push_pinned(&self, shard: usize, item: T, urgent: bool)
-                       -> Result<(), T> {
+                       -> Result<usize, T> {
         self.push_with(item, urgent, Some(shard))
     }
 
@@ -394,7 +397,7 @@ impl<T> AdmissionQueue<T> {
     }
 
     fn push_with(&self, item: T, urgent: bool, at: Option<usize>)
-                 -> Result<(), T> {
+                 -> Result<usize, T> {
         loop {
             if self.refusing_admissions() {
                 return Err(item);
@@ -410,20 +413,21 @@ impl<T> AdmissionQueue<T> {
     }
 
     /// Non-blocking enqueue: admit the item iff the queue is open and
-    /// the aggregate depth is below its bound.  Never waits — this is
-    /// the admission-verdict path, where "would block" must surface as
-    /// an explicit `Full`.
-    pub fn try_push(&self, item: T) -> Result<(), TryPushError<T>> {
+    /// the aggregate depth is below its bound (`Ok` carries the landing
+    /// shard).  Never waits — this is the admission-verdict path, where
+    /// "would block" must surface as an explicit `Full`.
+    pub fn try_push(&self, item: T) -> Result<usize, TryPushError<T>> {
         self.try_push_with(item, false)
     }
 
     /// Non-blocking [`push_urgent`](Self::push_urgent).
-    pub fn try_push_urgent(&self, item: T) -> Result<(), TryPushError<T>> {
+    pub fn try_push_urgent(&self, item: T)
+                           -> Result<usize, TryPushError<T>> {
         self.try_push_with(item, true)
     }
 
     fn try_push_with(&self, item: T, urgent: bool)
-                     -> Result<(), TryPushError<T>> {
+                     -> Result<usize, TryPushError<T>> {
         if self.refusing_admissions() {
             return Err(TryPushError::Closed(item));
         }
@@ -446,7 +450,7 @@ impl<T> AdmissionQueue<T> {
     /// drained by a worker, and one that races close is undone here so
     /// the caller can resolve the item itself.
     fn deposit_reserved(&self, item: T, urgent: bool, at: Option<usize>)
-                        -> Result<(), T> {
+                        -> Result<usize, T> {
         if self.refusing_admissions() {
             self.depth.fetch_sub(1, Ordering::SeqCst);
             self.vacancy.ring();
@@ -458,13 +462,12 @@ impl<T> AdmissionQueue<T> {
             // so the counter never underflows
             self.urgent.fetch_add(1, Ordering::SeqCst);
         }
-        match at {
+        Ok(match at {
             Some(s) => {
                 self.deposit_to(s % self.shards.len(), item, urgent)
             }
             None => self.deposit(item, urgent),
-        }
-        Ok(())
+        })
     }
 
     /// Re-enqueue a *continuation* — a decode session's next step —
@@ -477,7 +480,7 @@ impl<T> AdmissionQueue<T> {
     /// engine is saturated with in-flight sessions; the gauge may
     /// transiently exceed `bound`, which the reserve CAS already
     /// treats as full.  Fails only if the queue has been closed.
-    pub fn requeue(&self, item: T, urgent: bool) -> Result<(), T> {
+    pub fn requeue(&self, item: T, urgent: bool) -> Result<usize, T> {
         self.requeue_at(item, urgent, None)
     }
 
@@ -490,12 +493,12 @@ impl<T> AdmissionQueue<T> {
     /// as `Err` with no gauge leak, never a block (property-tested —
     /// an affine requeue against a closed queue must not deadlock).
     pub fn requeue_to(&self, shard: usize, item: T, urgent: bool)
-                      -> Result<(), T> {
+                      -> Result<usize, T> {
         self.requeue_at(item, urgent, Some(shard))
     }
 
     fn requeue_at(&self, item: T, urgent: bool, at: Option<usize>)
-                  -> Result<(), T> {
+                  -> Result<usize, T> {
         if self.closed.load(Ordering::SeqCst) {
             return Err(item);
         }
@@ -511,13 +514,12 @@ impl<T> AdmissionQueue<T> {
         if urgent {
             self.urgent.fetch_add(1, Ordering::SeqCst);
         }
-        match at {
+        Ok(match at {
             Some(s) => {
                 self.deposit_to(s % self.shards.len(), item, urgent)
             }
             None => self.deposit(item, urgent),
-        }
-        Ok(())
+        })
     }
 
     /// Saturating decrement of the urgent gauge (a slack-less pop path
@@ -626,11 +628,14 @@ impl<T> AdmissionQueue<T> {
     /// shard's share of the aggregate bound, and the phase-2 fill loop
     /// only re-sweeps on a depth change within `max_batch_wait`, so
     /// homogeneous traffic (the common case) never pays it.
+    /// Returns the number of collected rows that came off a shard
+    /// other than `worker`'s own — the work-stealing tally the flight
+    /// recorder's `Steal` event reports.
     #[allow(clippy::too_many_arguments)]
     fn collect_into<K, F, S, A>(&self, worker: usize, max: usize, key: &F,
                                 slack: &S, affine: &A,
                                 batch_key: &mut Option<K>,
-                                out: &mut Vec<T>)
+                                out: &mut Vec<T>) -> usize
     where
         K: PartialEq,
         F: Fn(&T) -> K,
@@ -640,6 +645,7 @@ impl<T> AdmissionQueue<T> {
         let n = self.shards.len();
         let start = worker % n;
         let before = out.len();
+        let mut stolen = 0usize;
         let mut seeded: Option<usize> = None;
         // the deadline-aware peek only engages when urgent items are
         // actually enqueued (deadline-free traffic — the common case —
@@ -696,7 +702,11 @@ impl<T> AdmissionQueue<T> {
                 }
             }
             if let Some((s, _)) = best {
+                let pre = out.len();
                 self.sweep_shard(s, max, key, slack, batch_key, out);
+                if s != start {
+                    stolen += out.len() - pre;
+                }
                 // the seed sweep took everything compatible there; the
                 // racing case (another worker emptied it first) falls
                 // through to normal ring-order seeding below
@@ -713,7 +723,11 @@ impl<T> AdmissionQueue<T> {
             if seeded == Some(s) {
                 continue;
             }
+            let pre = out.len();
             self.sweep_shard(s, max, key, slack, batch_key, out);
+            if s != start {
+                stolen += out.len() - pre;
+            }
         }
         let taken = out.len() - before;
         if taken > 0 {
@@ -732,6 +746,7 @@ impl<T> AdmissionQueue<T> {
             self.depth.fetch_sub(taken, Ordering::SeqCst);
             self.vacancy.ring();
         }
+        stolen
     }
 
     /// Pop up to `max` items as the (single-shard) worker 0.
@@ -787,16 +802,37 @@ impl<T> AdmissionQueue<T> {
         S: Fn(&T) -> f64,
         A: Fn(&T) -> Option<usize>,
     {
+        self.pop_batch_keyed_affine_counting(worker, max, wait, key,
+                                             slack, affine)
+            .0
+    }
+
+    /// [`pop_batch_keyed_affine`](Self::pop_batch_keyed_affine) that
+    /// also reports how many of the returned rows were *stolen* —
+    /// taken from a shard other than `worker`'s own.  The flight
+    /// recorder's `Steal` event carries the count; untraced workers
+    /// use the plain variant.
+    pub fn pop_batch_keyed_affine_counting<K, F, S, A>(
+        &self, worker: usize, max: usize, wait: Duration, key: F,
+        slack: S, affine: A) -> (Vec<T>, usize)
+    where
+        K: PartialEq,
+        F: Fn(&T) -> K,
+        S: Fn(&T) -> f64,
+        A: Fn(&T) -> Option<usize>,
+    {
         let max = max.max(1);
         let target = max.min(self.bound);
         let mut out: Vec<T> = Vec::new();
         let mut batch_key: Option<K> = None;
         let mut spins = 0usize;
+        let mut stolen = 0usize;
         // phase 1: block until at least one item is in hand, or the
         // queue is closed and fully drained
         loop {
-            self.collect_into(worker, max, &key, &slack, &affine,
-                              &mut batch_key, &mut out);
+            stolen += self.collect_into(worker, max, &key, &slack,
+                                        &affine, &mut batch_key,
+                                        &mut out);
             if !out.is_empty() {
                 break;
             }
@@ -809,7 +845,7 @@ impl<T> AdmissionQueue<T> {
                     // here (SeqCst), so "still zero now" means no item
                     // can be in flight — safe to exit.
                     if self.depth.load(Ordering::SeqCst) == 0 {
-                        return out;
+                        return (out, stolen);
                     }
                     continue;
                 }
@@ -847,8 +883,9 @@ impl<T> AdmissionQueue<T> {
         if out.len() < target && !wait.is_zero() {
             let deadline = Instant::now() + wait;
             while out.len() < target && !self.closed.load(Ordering::SeqCst) {
-                self.collect_into(worker, max, &key, &slack, &affine,
-                                  &mut batch_key, &mut out);
+                stolen += self.collect_into(worker, max, &key, &slack,
+                                            &affine, &mut batch_key,
+                                            &mut out);
                 if out.len() >= target {
                     break;
                 }
@@ -865,14 +902,15 @@ impl<T> AdmissionQueue<T> {
                 }
             }
             // final sweep: a deposit may have raced the close/timeout
-            self.collect_into(worker, max, &key, &slack, &affine,
-                              &mut batch_key, &mut out);
+            stolen += self.collect_into(worker, max, &key, &slack,
+                                        &affine, &mut batch_key,
+                                        &mut out);
         }
         if self.depth.load(Ordering::SeqCst) > 0 {
             // hand remaining work to an idle sibling promptly
             self.doorbell.ring();
         }
-        out
+        (out, stolen)
     }
 
     /// Close the queue: pending pushes fail, workers drain and exit.
@@ -934,8 +972,10 @@ impl<T> AdmissionQueue<T> {
         self.deposit_to(s, item, true);
     }
 
-    #[cfg(test)]
-    fn urgent_len(&self) -> usize {
+    /// Enqueued items flagged urgent at push time (may transiently
+    /// over-approximate; see the field docs).  One atomic load — the
+    /// live snapshot's urgent-depth gauge.
+    pub fn urgent_len(&self) -> usize {
         self.urgent.load(Ordering::SeqCst)
     }
 }
@@ -1232,7 +1272,7 @@ mod tests {
         q.close();
         match q.requeue(4, true) {
             Err(item) => assert_eq!(item, 4),
-            Ok(()) => panic!("requeue into a closed queue must fail"),
+            Ok(_) => panic!("requeue into a closed queue must fail"),
         }
         assert_eq!(q.len(), 0, "failed requeue must not leak the gauge");
     }
@@ -1309,7 +1349,7 @@ mod tests {
         for id in 0..8u64 {
             match q.requeue_to(id as usize, id, id % 2 == 0) {
                 Err(item) => assert_eq!(item, id),
-                Ok(()) => panic!("requeue_to into a closed queue"),
+                Ok(_) => panic!("requeue_to into a closed queue"),
             }
         }
         assert_eq!(q.len(), 0, "failed affine requeues leaked the gauge");
@@ -1356,6 +1396,32 @@ mod tests {
                                            |id: &u64| *id, slack, affine);
         assert_eq!(got, vec![1],
                    "a genuinely tighter deadline outranks affinity");
+    }
+
+    #[test]
+    fn counting_pop_reports_only_cross_shard_rows_as_stolen() {
+        // worker 0's home shard holds one row; shard 1 holds two.  A
+        // batch of three must count exactly the two foreign rows as
+        // stolen — home-shard rows are free
+        let q = AdmissionQueue::sharded(16, 2);
+        q.push_to_shard(0, 1u64);
+        q.push_to_shard(1, 2);
+        q.push_to_shard(1, 3);
+        let key = |_: &u64| 0u8;
+        let slack = |_: &u64| f64::INFINITY;
+        let affine = |_: &u64| None;
+        let (mut got, stolen) = q.pop_batch_keyed_affine_counting(
+            0, 3, Duration::ZERO, key, slack, affine);
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 2, 3]);
+        assert_eq!(stolen, 2, "exactly the shard-1 rows were stolen");
+        // a home-only pop steals nothing
+        let q2 = AdmissionQueue::sharded(16, 2);
+        q2.push_to_shard(0, 7u64);
+        let (got, stolen) = q2.pop_batch_keyed_affine_counting(
+            0, 1, Duration::ZERO, key, slack, affine);
+        assert_eq!(got, vec![7]);
+        assert_eq!(stolen, 0);
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! learned latency model).
 
 use super::tier_matches;
-use crate::metrics::{summarize, Summary};
+use crate::metrics::{summarize, Log2Hist, Summary};
 
 /// Completion record for one request.  The same struct rides inside the
 /// caller's `Reply` (with logits alongside) and the engine's report.
@@ -378,10 +378,20 @@ impl ServeReport {
     /// when no proposal was ever verified (plain decode, or every
     /// speculative session shed mid-draft).
     pub fn spec_accept_rate(&self) -> f64 {
+        self.spec_accept_rate_opt().unwrap_or(0.0)
+    }
+
+    /// [`spec_accept_rate`] with the zero-denominator case made
+    /// explicit: `None` when no proposal was ever verified, so report
+    /// printers can write "n/a" instead of a misleading 0.0 (which
+    /// reads as "everything was rejected").
+    ///
+    /// [`spec_accept_rate`]: ServeReport::spec_accept_rate
+    pub fn spec_accept_rate_opt(&self) -> Option<f64> {
         if self.spec_drafted == 0 {
-            0.0
+            None
         } else {
-            self.spec_accepted as f64 / self.spec_drafted as f64
+            Some(self.spec_accepted as f64 / self.spec_drafted as f64)
         }
     }
 
@@ -433,11 +443,21 @@ impl ServeReport {
     /// instead of the full-window recompute (0.0 when no decode step
     /// ever consulted an arena).
     pub fn cache_hit_rate(&self) -> f64 {
+        self.cache_hit_rate_opt().unwrap_or(0.0)
+    }
+
+    /// [`cache_hit_rate`] with the zero-denominator case made
+    /// explicit: `None` when no decode step ever consulted an arena
+    /// (one-shot-only runs, disabled arenas), so printers can write
+    /// "n/a" instead of a 0.0 that reads as "every lookup missed".
+    ///
+    /// [`cache_hit_rate`]: ServeReport::cache_hit_rate
+    pub fn cache_hit_rate_opt(&self) -> Option<f64> {
         let total = self.cache_hits + self.cache_misses;
         if total == 0 {
-            0.0
+            None
         } else {
-            self.cache_hits as f64 / total as f64
+            Some(self.cache_hits as f64 / total as f64)
         }
     }
 
@@ -450,15 +470,18 @@ impl ServeReport {
             &self.completions.iter().map(|c| c.total_ms).collect::<Vec<_>>())
     }
 
-    /// Total-latency percentile by the nearest-rank method: the smallest
-    /// sample with at least `ceil(q * n)` samples at or below it.  (The
-    /// old `round()`-based indexing mixed ranks at small n: with n = 2,
-    /// q = 0.5 it returned the max.)
+    /// Total-latency percentile from the shared log2-bucket histogram
+    /// ([`Log2Hist`]): nearest-rank over the buckets, reported as the
+    /// target bucket's midpoint — within half a bucket width (~12.5%
+    /// relative) of the exact sample.  Using the same histogram here as
+    /// in the live [`EngineSnapshot`] means a mid-run snapshot and the
+    /// shutdown report can never disagree by more than bucket rounding.
+    ///
+    /// [`EngineSnapshot`]: super::EngineSnapshot
     pub fn latency_p(&self, q: f64) -> f64 {
-        let mut xs: Vec<f64> =
+        let xs: Vec<f64> =
             self.completions.iter().map(|c| c.total_ms).collect();
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        percentile_nearest_rank(&xs, q)
+        Log2Hist::from_ms(&xs).quantile_ms(q)
     }
 
     /// Mean capacity actually served (compute proxy: fraction of teacher
@@ -504,16 +527,16 @@ impl ServeReport {
                     lat.push(c.total_ms);
                     cap += c.tier as f64;
                 }
-                lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
                 let served = lat.len();
                 let shed =
                     self.sheds.iter().filter(|s| s.class == name).count();
+                let hist = Log2Hist::from_ms(&lat);
                 ClassStats {
                     class: name.to_string(),
                     served,
                     shed,
-                    p50_ms: percentile_nearest_rank(&lat, 0.5),
-                    p99_ms: percentile_nearest_rank(&lat, 0.99),
+                    p50_ms: hist.quantile_ms(0.5),
+                    p99_ms: hist.quantile_ms(0.99),
                     mean_capacity: if served == 0 {
                         0.0
                     } else {
@@ -567,9 +590,9 @@ impl ServeReport {
                     .collect();
                 let tokens: usize = done.iter().map(|s| s.steps).sum::<usize>()
                     + shed.iter().map(|s| s.steps_done).sum::<usize>();
-                let mut session_ms: Vec<f64> =
+                let session_ms: Vec<f64> =
                     done.iter().map(|s| s.total_ms).collect();
-                session_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let session_hist = Log2Hist::from_ms(&session_ms);
                 let mut tier_step_counts: Vec<(f32, usize)> = self
                     .tier_counts
                     .iter()
@@ -596,10 +619,8 @@ impl ServeReport {
                     tokens,
                     tokens_per_s: tokens as f64
                         / self.wall_secs.max(1e-9),
-                    p50_session_ms:
-                        percentile_nearest_rank(&session_ms, 0.5),
-                    p99_session_ms:
-                        percentile_nearest_rank(&session_ms, 0.99),
+                    p50_session_ms: session_hist.quantile_ms(0.5),
+                    p99_session_ms: session_hist.quantile_ms(0.99),
                     mean_first_token_ms: if done.is_empty() {
                         0.0
                     } else {
@@ -661,20 +682,20 @@ impl ServeReport {
                         tc.1 += 1;
                     }
                 }
-                lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
                 let served = lat.len();
                 let shed = self
                     .sheds
                     .iter()
                     .filter(|s| s.worker_class == name)
                     .count();
+                let hist = Log2Hist::from_ms(&lat);
                 WorkerClassStats {
                     class: name,
                     workers,
                     served,
                     shed,
-                    p50_ms: percentile_nearest_rank(&lat, 0.5),
-                    p99_ms: percentile_nearest_rank(&lat, 0.99),
+                    p50_ms: hist.quantile_ms(0.5),
+                    p99_ms: hist.quantile_ms(0.99),
                     mean_capacity: if served == 0 {
                         0.0
                     } else {
@@ -692,6 +713,10 @@ impl ServeReport {
 
 /// Nearest-rank percentile over a *sorted* slice.  `q <= 0` returns the
 /// min, `q >= 1` the max, an empty slice 0.0.
+///
+/// The report itself now quotes percentiles from the log2-bucket
+/// histogram ([`Log2Hist`]); this exact method stays as the reference
+/// the within-one-bucket pinning tests compare against.
 pub fn percentile_nearest_rank(sorted: &[f64], q: f64) -> f64 {
     if sorted.is_empty() {
         return 0.0;
@@ -729,6 +754,14 @@ mod tests {
         ServeReport::new(completions, Vec::new(), 1.0, &[1.0], 1)
     }
 
+    /// The histogram quotes a bucket midpoint, so "equals the exact
+    /// sample" relaxes to "lands in the exact sample's bucket".
+    fn assert_in_bucket(got: f64, exact: f64) {
+        let (lo, hi) = Log2Hist::bucket_bounds_ms(exact);
+        assert!(got >= lo && got <= hi,
+                "got {got} outside [{lo}, {hi}] (exact {exact})");
+    }
+
     #[test]
     fn percentile_empty_is_zero() {
         let r = report(&[]);
@@ -742,30 +775,46 @@ mod tests {
     fn percentile_single_element_is_that_element() {
         let r = report(&[7.5]);
         for q in [0.0, 0.01, 0.5, 0.99, 1.0] {
-            assert_eq!(r.latency_p(q), 7.5, "q = {q}");
+            assert_in_bucket(r.latency_p(q), 7.5);
         }
     }
 
     #[test]
     fn percentile_two_elements_nearest_rank() {
         let r = report(&[10.0, 20.0]);
-        // rank ceil(0.5 * 2) = 1 -> first element (the old round() code
-        // returned 20.0 here)
-        assert_eq!(r.latency_p(0.5), 10.0);
-        assert_eq!(r.latency_p(0.51), 20.0);
-        assert_eq!(r.latency_p(0.0), 10.0);
-        assert_eq!(r.latency_p(1.0), 20.0);
+        // rank ceil(0.5 * 2) = 1 -> the first sample's bucket (the old
+        // round() code returned the max here)
+        assert_in_bucket(r.latency_p(0.5), 10.0);
+        assert_in_bucket(r.latency_p(0.51), 20.0);
+        assert_in_bucket(r.latency_p(0.0), 10.0);
+        assert_in_bucket(r.latency_p(1.0), 20.0);
     }
 
     #[test]
     fn percentile_hundred_elements() {
         let r = report(&(0..100).map(|i| i as f64).collect::<Vec<_>>());
-        assert_eq!(r.latency_p(0.5), 49.0); // ceil(50) = rank 50
-        assert_eq!(r.latency_p(0.99), 98.0); // ceil(99) = rank 99
-        assert_eq!(r.latency_p(1.0), 99.0);
+        assert_in_bucket(r.latency_p(0.5), 49.0); // ceil(50) = rank 50
+        assert_in_bucket(r.latency_p(0.99), 98.0); // ceil(99) = rank 99
+        assert_in_bucket(r.latency_p(1.0), 99.0);
         assert_eq!(r.throughput_rps(), 100.0);
         assert_eq!(r.mean_capacity(), 1.0);
         assert_eq!(r.tier_counts, vec![(1.0, 100)]);
+    }
+
+    /// The pinning test for the histogram swap: every quoted quantile
+    /// must land in the same log2 bucket as the exact nearest-rank
+    /// answer over the raw samples — i.e. within one bucket width.
+    #[test]
+    fn histogram_percentiles_pin_to_nearest_rank_buckets() {
+        let mut lat: Vec<f64> = (1..=257)
+            .map(|i| (i as f64) * 0.37 + ((i * i) % 91) as f64)
+            .collect();
+        let r = report(&lat);
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.01, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            let exact = percentile_nearest_rank(&lat, q);
+            assert_in_bucket(r.latency_p(q), exact);
+        }
     }
 
     #[test]
@@ -819,11 +868,11 @@ mod tests {
         let relaxed =
             sections.iter().find(|s| s.class == "relaxed").unwrap();
         assert_eq!((relaxed.served, relaxed.shed), (6, 0));
-        assert_eq!(relaxed.p50_ms, 3.0);
+        assert_in_bucket(relaxed.p50_ms, 3.0);
         assert_eq!(relaxed.mean_capacity, 1.0);
         let tight = sections.iter().find(|s| s.class == "tight").unwrap();
         assert_eq!((tight.served, tight.shed), (1, 2));
-        assert_eq!(tight.p50_ms, 2.0);
+        assert_in_bucket(tight.p50_ms, 2.0);
         assert!((tight.mean_capacity - 0.25).abs() < 1e-9);
     }
 
@@ -959,8 +1008,8 @@ mod tests {
         assert_eq!((chat.completed, chat.shed), (2, 1));
         assert_eq!(chat.tokens, 8, "shed session's tokens still count");
         assert!((chat.tokens_per_s - 4.0).abs() < 1e-9);
-        assert_eq!(chat.p50_session_ms, 10.0);
-        assert_eq!(chat.p99_session_ms, 30.0);
+        assert_in_bucket(chat.p50_session_ms, 10.0);
+        assert_in_bucket(chat.p99_session_ms, 30.0);
         assert!((chat.mean_first_token_ms - 10.0).abs() < 1e-9);
         // trajectory histogram: 2 steps at 1.0, 4 at 0.5, none at 0.25
         assert_eq!(chat.tier_step_counts,
@@ -984,10 +1033,15 @@ mod tests {
         let r = report(&[1.0]);
         assert_eq!(r.cache_hit_rate(), 0.0,
                    "no lookups must read 0.0, not NaN");
+        assert_eq!(r.cache_hit_rate_opt(), None,
+                   "the Option variant distinguishes \"no lookups\"");
         let r = report(&[1.0]).with_cache(3, 1);
         assert!((r.cache_hit_rate() - 0.75).abs() < 1e-9);
+        assert!((r.cache_hit_rate_opt().unwrap() - 0.75).abs() < 1e-9);
         let r = report(&[1.0]).with_cache(0, 5);
         assert_eq!(r.cache_hit_rate(), 0.0);
+        assert_eq!(r.cache_hit_rate_opt(), Some(0.0),
+                   "all-miss is a real 0.0, not n/a");
     }
 
     #[test]
@@ -1050,6 +1104,8 @@ mod tests {
             .with_spec(0, 0, 0, 3);
         assert!((r.tokens_per_admission() - 1.0).abs() < 1e-9);
         assert_eq!(r.spec_accept_rate(), 0.0);
+        assert_eq!(r.spec_accept_rate_opt(), None,
+                   "nothing drafted is n/a, not an all-rejected 0.0");
         // no items ever enqueued reads 0.0, not NaN
         let empty = report(&[1.0]);
         assert_eq!(empty.tokens_per_admission(), 0.0);

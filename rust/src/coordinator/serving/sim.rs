@@ -567,13 +567,69 @@ pub fn faults_point(spec: SimSpec, workers: usize, shards: usize,
     Ok(report)
 }
 
+/// Drive one hermetic *traced* point: like [`pipeline_point`] plus
+/// optional decode sessions, but with the flight recorder on at
+/// `capacity` events per lane.  Drains the recorder after shutdown and
+/// returns the report, the merged event stream, and the exact ledger,
+/// so callers can reconcile events against report counters (the
+/// acceptance criterion: admits == submissions, terminals == served +
+/// shed + session outcomes, verify-resolve sums == spec counters) or
+/// measure tracing overhead against an untraced twin.
+pub fn traced_point(spec: SimSpec, workers: usize, shards: usize,
+                    n: usize, sessions: usize, decode_steps: usize,
+                    spec_k: usize, capacity: usize)
+                    -> Result<(super::ServeReport, Vec<super::Stamped>,
+                               super::TraceCounts)> {
+    let cfg = super::ServeConfig::sim()
+        .with_workers(workers)
+        .with_queue_shards(shards)
+        .with_queue_bound(128)
+        .with_max_batch_wait(Duration::from_micros(200))
+        .with_spec_k(spec_k)
+        .with_trace_capacity(capacity);
+    let caps = cfg.capacities();
+    let prompt_len = (spec.seq_len / 2).max(1);
+    let engine = super::ElasticEngine::start(cfg, factory(spec, caps))?;
+    let recorder = engine
+        .trace_recorder()
+        .ok_or_else(|| anyhow::anyhow!("traced point built no recorder"))?;
+    let responses: Vec<super::Response> = (0..n as u64)
+        .map(|id| {
+            engine.submit(super::Request::new(id, vec![1; spec.seq_len]))
+        })
+        .collect();
+    let streams: Vec<super::StreamResponse> = (0..sessions as u64)
+        .map(|id| {
+            engine.submit_stream(super::StreamRequest::new(
+                n as u64 + id, vec![1; prompt_len], decode_steps))
+        })
+        .collect();
+    for r in responses {
+        r.wait()
+            .map_err(|e| anyhow::anyhow!("traced sim serve failed: {e}"))?;
+    }
+    for s in streams {
+        s.wait()
+            .map_err(|e| anyhow::anyhow!("traced sim stream shed: {e}"))?;
+    }
+    let report = engine.shutdown()?;
+    // workers are joined: the ledger is quiescent and must reconcile
+    let events = recorder.drain();
+    let counts = recorder.counts();
+    anyhow::ensure!(
+        counts.dropped + counts.exported == counts.emitted,
+        "trace ledger does not reconcile: {counts:?}");
+    Ok((report, events, counts))
+}
+
 /// One row of the machine-readable sim-pipeline record
 /// (`BENCH_serving.json`).
 pub struct BenchRow {
     /// topology label: "shared" (1 shard), "sharded" (1 per worker),
     /// "hetero" (sharded + heterogeneous worker classes), "streaming"
-    /// (decode sessions through `submit_stream`), or "faults" (chaos
-    /// injection through [`faults_point`])
+    /// (decode sessions through `submit_stream`), "faults" (chaos
+    /// injection through [`faults_point`]), or "trace" (flight
+    /// recorder on, via [`traced_point`])
     pub queue: &'static str,
     pub workers: usize,
     pub shards: usize,
@@ -584,6 +640,10 @@ pub struct BenchRow {
     /// total submissions (one-shots + sessions) behind this row; > 0
     /// marks a chaos row and enables the availability fields
     pub submitted: usize,
+    /// traced-over-untraced req/s ratio (trace rows; 0 elsewhere) —
+    /// the cost of the flight recorder on the hot path, ~1.0 when
+    /// tracing is cheap
+    pub trace_overhead: f64,
     pub report: super::ServeReport,
 }
 
@@ -683,6 +743,12 @@ pub fn write_bench_json(path: &std::path::Path, source: &str,
                 fields.push(("breaker_trips".into(),
                              Value::Num(trips as f64)));
             }
+            if r.trace_overhead > 0.0 {
+                // trace rows record what the flight recorder costs:
+                // traced req/s over the untraced twin's req/s
+                fields.push(("trace_overhead".into(),
+                             Value::Num(r.trace_overhead)));
+            }
             if r.report.worker_classes.len() > 1 {
                 // heterogeneous rows also record how each device class
                 // fared — the per-class controllers are the point
@@ -774,10 +840,12 @@ mod tests {
         let rows = vec![
             BenchRow { queue: "shared", workers: 2, shards: 1,
                        classes: String::new(), fault_rate: 0.0,
-                       submitted: 0, report: shared },
+                       submitted: 0, trace_overhead: 0.0,
+                       report: shared },
             BenchRow { queue: "sharded", workers: 2, shards: 2,
                        classes: String::new(), fault_rate: 0.0,
-                       submitted: 0, report: sharded },
+                       submitted: 0, trace_overhead: 0.0,
+                       report: sharded },
         ];
         let path = std::env::temp_dir().join(format!(
             "ef_bench_serving_{}.json", std::process::id()));
@@ -817,6 +885,7 @@ mod tests {
             classes: "fast=2:slow=2".into(),
             fault_rate: 0.0,
             submitted: 0,
+            trace_overhead: 0.0,
             report,
         }];
         let path = std::env::temp_dir().join(format!(
@@ -850,6 +919,7 @@ mod tests {
             classes: String::new(),
             fault_rate: 0.0,
             submitted: 0,
+            trace_overhead: 0.0,
             report,
         }];
         let path = std::env::temp_dir().join(format!(
@@ -1022,6 +1092,7 @@ mod tests {
             classes: String::new(),
             fault_rate: 0.2,
             submitted: 44,
+            trace_overhead: 0.0,
             report,
         }];
         let path = std::env::temp_dir().join(format!(
@@ -1038,6 +1109,55 @@ mod tests {
         let poisoned = row.req("poisoned").unwrap().as_f64().unwrap();
         let submitted = row.req("submitted").unwrap().as_f64().unwrap();
         assert!(poisoned >= 1.0 && poisoned <= submitted);
+    }
+
+    #[test]
+    fn traced_point_reconciles_events_with_the_report() {
+        // the PR's acceptance criterion, as a seeded hermetic run:
+        // admit events == submissions, terminal events == every
+        // resolution the report knows about, and the speculative
+        // event stream sums to exactly the report's spec counters
+        let spec = SimSpec {
+            batch: 4,
+            seq_len: 8,
+            divergence: 0.05,
+            ..SimSpec::instant()
+        };
+        let (n, sessions, steps) = (24usize, 4usize, 6usize);
+        let (report, events, counts) =
+            traced_point(spec, 2, 2, n, sessions, steps, 2, 4096)
+                .unwrap();
+        assert_eq!(report.completions.len(), n);
+        assert_eq!(report.stream_done.len(), sessions);
+        let count_kind = |k: &str| {
+            events.iter().filter(|e| e.kind() == k).count()
+        };
+        assert_eq!(count_kind("admit"), n + sessions,
+                   "one admit per submission");
+        let resolutions = report.completions.len() + report.sheds.len()
+            + report.stream_done.len() + report.stream_shed.len();
+        assert_eq!(count_kind("terminal"), resolutions,
+                   "exactly one terminal per resolved request/session");
+        assert!(events.iter().all(|e| {
+            e.kind() != "terminal" && e.kind() != "admit"
+                || e.trace_id != 0
+        }), "lifecycle events always carry a real trace id");
+        // the speculative ledger, replayed from the event stream
+        let (mut acc, mut rej) = (0usize, 0usize);
+        for e in &events {
+            if let Some((a, r)) = e.verify_counts() {
+                acc += a;
+                rej += r;
+            }
+        }
+        assert_eq!((acc, rej),
+                   (report.spec_accepted, report.spec_rejected),
+                   "verify-resolve events must sum to the spec totals");
+        assert!(report.spec_drafted > 0 && count_kind("draft-round") > 0,
+                "speculative mode must draft and emit draft rounds");
+        // nothing overflowed at this capacity, so the export is total
+        assert_eq!(counts.dropped, 0);
+        assert_eq!(counts.exported, events.len() as u64);
     }
 
     #[test]

@@ -155,13 +155,17 @@ impl SessionArena {
     /// Deposit `session`'s window for its upcoming `next_step`,
     /// claiming a page (or refreshing the session's existing one).
     /// When the pool is full the least-recently-touched *other*
-    /// session spills — its next lookup misses and recomputes.
+    /// session spills — its next lookup misses and recomputes — and
+    /// its key is returned so the flight recorder can log the
+    /// eviction; a refresh, a fresh slot or a disabled arena return
+    /// `None`.
     pub fn store(&self, session: u64, next_step: usize,
-                 window: Vec<i32>) {
+                 window: Vec<i32>) -> Option<u64> {
         let mut inner = self.inner.lock();
         if inner.slots.is_empty() {
-            return; // arena disabled
+            return None; // arena disabled
         }
+        let mut spilled = None;
         let slot = match inner.by_session.get(&session).copied() {
             Some(i) => i,
             None => {
@@ -179,6 +183,7 @@ impl SessionArena {
                             .expect("lru entry must own a slot");
                         inner.slots[i] = None;
                         self.evicted.fetch_add(1, Ordering::Relaxed);
+                        spilled = Some(victim);
                         i
                     }
                 };
@@ -189,6 +194,7 @@ impl SessionArena {
         inner.slots[slot] = Some(Page { session, next_step, window });
         inner.touch(session);
         inner.check();
+        spilled
     }
 
     /// Free `session`'s page.  Idempotent: returns `true` only for
@@ -276,8 +282,9 @@ mod tests {
     #[test]
     fn refresh_replaces_the_sessions_page_in_place() {
         let arena = SessionArena::new(1);
-        arena.store(1, 1, vec![10]);
-        arena.store(1, 2, vec![10, 11]);
+        assert_eq!(arena.store(1, 1, vec![10]), None);
+        assert_eq!(arena.store(1, 2, vec![10, 11]), None,
+                   "a refresh never spills anyone");
         assert!(arena.lookup(1, 1).is_none(), "old step must be stale");
         assert_eq!(arena.lookup(1, 2), Some(vec![10, 11]));
         assert_eq!(arena.live(), 1);
@@ -291,7 +298,8 @@ mod tests {
         arena.store(1, 1, vec![1]);
         arena.store(2, 1, vec![2]);
         arena.lookup(1, 1); // session 1 is now the warmest
-        arena.store(3, 1, vec![3]); // must evict session 2
+        assert_eq!(arena.store(3, 1, vec![3]), Some(2),
+                   "the spill must name the coldest session");
         assert_eq!(arena.evicted(), 1);
         assert!(arena.lookup(2, 1).is_none(), "spilled session misses");
         assert_eq!(arena.lookup(1, 1), Some(vec![1]));

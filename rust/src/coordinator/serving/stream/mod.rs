@@ -420,6 +420,11 @@ pub struct DecodeSession {
     /// in-flight speculative proposals: filled by a draft step,
     /// consumed exactly once by the matching verify resolution
     pub(crate) draft: Option<DraftBuf>,
+    /// flight-recorder id allocated at session admission (0 when
+    /// tracing is off); every step item the session circulates —
+    /// decode, draft and verify alike — carries this same id, so the
+    /// whole stream renders as one request track in the Chrome export
+    pub(crate) trace_id: u64,
 }
 
 /// Thin, queue-circulating handle for one pending decode step.  The
@@ -547,9 +552,12 @@ impl SessionTable {
     /// `spec_k` is the engine's speculative draft ceiling (0 = plain
     /// decode): it decides whether post-prefill steps circulate as
     /// `Draft`/`Verify` items or plain `Decode` items.
+    ///
+    /// `trace_id` is the session's flight-recorder id (0 = untraced);
+    /// it rides every step item the session ever circulates.
     pub(crate) fn admit(&self, req: StreamRequest, sender: StreamSender,
                         started: Instant, shards: usize,
-                        spec_k: usize) -> Pending {
+                        spec_k: usize, trace_id: u64) -> Pending {
         let key = self.next_key.fetch_add(1, Ordering::Relaxed);
         let max_steps = req.max_steps.max(1);
         assert!(sender.cap() >= max_steps,
@@ -571,6 +579,7 @@ impl SessionTable {
                 sender,
                 spec_k,
                 draft: None,
+                trace_id,
             }),
         });
         self.sessions.lock().insert(key, entry);
@@ -579,6 +588,7 @@ impl SessionTable {
         Pending {
             req: Request { id: req.id, tokens: Vec::new(), slo },
             submitted: started,
+            trace_id,
             outcome: super::Outcome::Stream(StreamStep {
                 session: key,
                 step: 0,
@@ -680,11 +690,13 @@ impl SessionTable {
         } else {
             StepPhase::Decode
         };
+        let trace_id = sess.trace_id;
         drop(sess);
         self.note_step_item();
         Advance::Requeue(Pending {
             req,
             submitted: now,
+            trace_id,
             outcome: super::Outcome::Stream(StreamStep {
                 session: st.session,
                 step: st.step + 1,
@@ -721,8 +733,11 @@ impl SessionTable {
 
     /// Terminate every remaining session (engine shutdown: sessions
     /// whose in-flight step died with a worker, or that never got one).
+    /// Each shed comes back with the session's flight-recorder id so
+    /// the caller can emit the balancing `Terminal` event — this is
+    /// the one terminal path with no `Pending` in hand to read it from.
     pub(crate) fn shed_all(&self, err: ServeError, worker_class: &str)
-                           -> Vec<StreamShedRecord> {
+                           -> Vec<(u64, StreamShedRecord)> {
         let drained: Vec<Arc<SessionEntry>> = {
             let mut sessions = self.sessions.lock();
             sessions.drain().map(|(_, e)| e).collect()
@@ -742,7 +757,7 @@ impl SessionTable {
                     reason: err.clone(),
                 };
                 sess.sender.shed_ref(err.clone());
-                Some(rec)
+                Some((sess.trace_id, rec))
             })
             .collect()
     }
@@ -853,7 +868,7 @@ mod tests {
         let (tx, _rx) = channel(1, 8);
         let pending = table.admit(
             StreamRequest::new(1, vec![10, 11, 12], 4), tx,
-            Instant::now(), 4, 0);
+            Instant::now(), 4, 0, 0);
         let key = match &pending.outcome {
             crate::coordinator::serving::Outcome::Stream(st) => st.session,
             _ => panic!("stream admit must yield a stream item"),
@@ -884,8 +899,8 @@ mod tests {
         let table = SessionTable::new();
         let (tx, rx) = channel(5, 8);
         let t0 = Instant::now();
-        let pending =
-            table.admit(StreamRequest::new(5, vec![1], 2), tx, t0, 4, 0);
+        let pending = table.admit(StreamRequest::new(5, vec![1], 2), tx,
+                                  t0, 4, 0, 0);
         let key = match &pending.outcome {
             crate::coordinator::serving::Outcome::Stream(st) => st.session,
             _ => panic!("stream admit must yield a stream item"),
@@ -981,7 +996,7 @@ mod tests {
         let table = SessionTable::new();
         let (tx, _rx) = channel(1, 2); // cap 2 < max_steps 8
         table.admit(StreamRequest::new(1, vec![1], 8), tx,
-                    Instant::now(), 4, 0);
+                    Instant::now(), 4, 0, 0);
     }
 
     #[test]
@@ -995,7 +1010,7 @@ mod tests {
             let (tx, rx) = channel(1, 128);
             let pending = table.admit(
                 StreamRequest::new(1, vec![1, 2], 100), tx,
-                Instant::now(), 4, 0);
+                Instant::now(), 4, 0, 0);
             let mut st = match pending.outcome {
                 crate::coordinator::serving::Outcome::Stream(st) => st,
                 _ => panic!("stream admit must yield a stream item"),
@@ -1056,12 +1071,13 @@ mod tests {
         for id in 0..3u64 {
             let (tx, rx) = channel(id, 4);
             table.admit(StreamRequest::new(id, vec![1], 4), tx,
-                        Instant::now(), 2, 0);
+                        Instant::now(), 2, 0, 0);
             rxs.push(rx);
         }
         let recs = table.shed_all(ServeError::ShuttingDown, "engine");
         assert_eq!(recs.len(), 3);
-        assert!(recs.iter().all(|r| r.worker_class == "engine"
+        assert!(recs.iter().all(|(tid, r)| *tid == 0
+            && r.worker_class == "engine"
             && r.steps_done == 0
             && r.reason == ServeError::ShuttingDown));
         assert_eq!(table.live(), 0);

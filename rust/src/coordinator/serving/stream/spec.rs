@@ -177,11 +177,13 @@ impl SessionTable {
             tokens: Vec::new(),
             slo: sess.slo.clone(),
         };
+        let trace_id = sess.trace_id;
         drop(sess);
         self.note_step_item();
         Some(Pending {
             req,
             submitted: now,
+            trace_id,
             outcome: Outcome::Stream(StreamStep {
                 session: st.session,
                 step: st.step,
@@ -317,12 +319,14 @@ impl SessionTable {
             tokens: Vec::new(),
             slo: sess.slo.clone(),
         };
+        let trace_id = sess.trace_id;
         drop(sess);
         self.note_step_item();
         VerifyResolution {
             advance: Advance::Requeue(Pending {
                 req,
                 submitted: now,
+                trace_id,
                 outcome: Outcome::Stream(StreamStep {
                     session: st.session,
                     step: st.step + emit,
@@ -358,6 +362,7 @@ pub(crate) fn run_draft_batch(shared: &EngineShared, worker: usize,
     let seq_len = exec.seq_len();
     let controller = &shared.controllers[class_idx];
     let arena = &shared.arenas[class_idx];
+    let trace = shared.trace.as_deref();
     // the draft tier: normally the cheapest rung the batch's
     // strictest floor allows — but a persistently LOW accept rate
     // means the cheap proposals are being thrown away, so the
@@ -381,18 +386,30 @@ pub(crate) fn run_draft_batch(shared: &EngineShared, worker: usize,
         match hit {
             Some(row) => {
                 cached_rows += 1;
+                if let Some(t) = trace {
+                    t.arena_hit(worker, p.trace_id);
+                }
                 windows.push(row);
             }
-            None => match shared.sessions.compute_row(st.session, seq_len)
-            {
-                Some(row) => windows.push(row),
-                None => continue, // session terminated: stale step
-            },
+            None => {
+                // drafts are always post-prefill, so every fallback
+                // here is a real miss
+                if let Some(t) = trace {
+                    t.arena_miss(worker, p.trace_id);
+                }
+                match shared.sessions.compute_row(st.session, seq_len) {
+                    Some(row) => windows.push(row),
+                    None => continue, // session terminated: stale step
+                }
+            }
         }
         items.push(p);
     }
     if items.is_empty() {
         return Ok(0);
+    }
+    if let Some(t) = trace {
+        t.draft_round(worker, items.len());
     }
     // per-session draft depth: never draft past the session's budget
     let mut depths: Vec<usize> = items
@@ -428,7 +445,7 @@ pub(crate) fn run_draft_batch(shared: &EngineShared, worker: usize,
             exec.note_batch_mix(0, items.len());
         }
         let (fates, any_fail) = match execute_quarantine(
-            shared, class_idx, exec, tier, &units)
+            shared, class_idx, worker, exec, tier, &units)
         {
             Ok(ok) => ok,
             Err(fatal) => {
@@ -470,6 +487,7 @@ pub(crate) fn run_draft_batch(shared: &EngineShared, worker: usize,
         // re-fail every remaining micro-round
         for (i, msg) in poisoned.into_iter().rev() {
             let p = items.remove(i);
+            let tid = p.trace_id;
             let Outcome::Stream(st) = p.outcome else {
                 unreachable!();
             };
@@ -477,6 +495,9 @@ pub(crate) fn run_draft_batch(shared: &EngineShared, worker: usize,
                 st.session, ServeError::Poisoned(msg), class_name)
             {
                 stream_sheds.push(rec);
+                if let Some(t) = trace {
+                    t.terminal(worker, tid, "shed-poisoned");
+                }
             }
             shared.recycle_session(st.session);
             windows.remove(i);
@@ -489,6 +510,7 @@ pub(crate) fn run_draft_batch(shared: &EngineShared, worker: usize,
     // the affine shard; a closed queue terminates the session now
     let now = Instant::now();
     for (i, p) in items.into_iter().enumerate() {
+        let tid = p.trace_id;
         let Outcome::Stream(st) = p.outcome else {
             unreachable!();
         };
@@ -498,17 +520,26 @@ pub(crate) fn run_draft_batch(shared: &EngineShared, worker: usize,
                                           now) {
             Some(verify) => {
                 let urgent = verify.req.slo.deadline.is_some();
-                if let Err(stale) =
-                    shared.queue.requeue_to(st.shard, verify, urgent)
-                {
-                    if let Outcome::Stream(st) = stale.outcome {
-                        if let Some(rec) = shared.sessions.shed(
-                            st.session, ServeError::ShuttingDown,
-                            class_name)
-                        {
-                            stream_sheds.push(rec);
+                match shared.queue.requeue_to(st.shard, verify, urgent) {
+                    Ok(_) => {
+                        if let Some(t) = trace {
+                            t.requeue(worker, tid);
                         }
-                        shared.recycle_session(st.session);
+                    }
+                    Err(stale) => {
+                        if let Outcome::Stream(st) = stale.outcome {
+                            if let Some(rec) = shared.sessions.shed(
+                                st.session, ServeError::ShuttingDown,
+                                class_name)
+                            {
+                                stream_sheds.push(rec);
+                                if let Some(t) = trace {
+                                    t.terminal(worker, tid,
+                                               "shed-shutdown");
+                                }
+                            }
+                            shared.recycle_session(st.session);
+                        }
                     }
                 }
             }
@@ -540,6 +571,7 @@ pub(crate) fn run_verify_batch(shared: &EngineShared, worker: usize,
     let seq_len = exec.seq_len();
     let controller = &shared.controllers[class_idx];
     let arena = &shared.arenas[class_idx];
+    let trace = shared.trace.as_deref();
     // verification is always the TOP tier: the whole point is the
     // full-compute model's own opinion of the cheap proposals
     let tier = shared.caps[0];
@@ -565,20 +597,32 @@ pub(crate) fn run_verify_batch(shared: &EngineShared, worker: usize,
             // no room in this pass: defer the whole session untouched
             // (its buffer stays stashed; the item keeps its identity)
             let urgent = p.req.slo.deadline.is_some();
+            let tid = p.trace_id;
             let Outcome::Stream(st) = &p.outcome else {
                 unreachable!();
             };
             let shard = st.shard;
             let session = st.session;
-            if let Err(stale) = shared.queue.requeue_to(shard, p, urgent)
-            {
-                if let Outcome::Stream(st) = stale.outcome {
-                    if let Some(rec) = shared.sessions.shed(
-                        st.session, ServeError::ShuttingDown, class_name)
-                    {
-                        stream_sheds.push(rec);
+            match shared.queue.requeue_to(shard, p, urgent) {
+                Ok(_) => {
+                    if let Some(t) = trace {
+                        t.requeue(worker, tid);
                     }
-                    shared.recycle_session(session);
+                }
+                Err(stale) => {
+                    if let Outcome::Stream(st) = stale.outcome {
+                        if let Some(rec) = shared.sessions.shed(
+                            st.session, ServeError::ShuttingDown,
+                            class_name)
+                        {
+                            stream_sheds.push(rec);
+                            if let Some(t) = trace {
+                                t.terminal(worker, tid,
+                                           "shed-shutdown");
+                            }
+                        }
+                        shared.recycle_session(session);
+                    }
                 }
             }
             continue;
@@ -602,7 +646,7 @@ pub(crate) fn run_verify_batch(shared: &EngineShared, worker: usize,
     // buffer — recompute-cost rows in the arena's cost model
     exec.note_batch_mix(used_rows, 0);
     let (fates, any_fail) = match execute_quarantine(
-        shared, class_idx, exec, tier, &units)
+        shared, class_idx, worker, exec, tier, &units)
     {
         Ok(ok) => ok,
         Err(fatal) => {
@@ -625,6 +669,7 @@ pub(crate) fn run_verify_batch(shared: &EngineShared, worker: usize,
     let counters = &shared.spec[class_idx];
     let mut stream_done: Vec<StreamStats> = Vec::new();
     for (p, fate) in items.into_iter().zip(fates) {
+        let tid = p.trace_id;
         let Outcome::Stream(st) = p.outcome else {
             unreachable!();
         };
@@ -639,6 +684,9 @@ pub(crate) fn run_verify_batch(shared: &EngineShared, worker: usize,
                     st.session, ServeError::Poisoned(msg), class_name)
                 {
                     stream_sheds.push(rec);
+                    if let Some(t) = trace {
+                        t.terminal(worker, tid, "shed-poisoned");
+                    }
                 }
                 shared.recycle_session(st.session);
                 continue;
@@ -655,31 +703,53 @@ pub(crate) fn run_verify_batch(shared: &EngineShared, worker: usize,
             controller
                 .lock()
                 .observe_accept(res.accepted, res.drafted);
+            // mirrors the counters exactly: summed accepted/rejected
+            // over these events must equal the report's spec totals
+            if let Some(t) = trace {
+                t.verify_resolve(worker, tid, res.accepted,
+                                 res.drafted - res.accepted);
+            }
         }
         match res.advance {
             Advance::Requeue(next) => {
                 if let (Some(win), Outcome::Stream(nst)) =
                     (res.next_window, &next.outcome)
                 {
-                    arena.store(nst.session, nst.step, win);
+                    let evicted =
+                        arena.store(nst.session, nst.step, win);
+                    if let (Some(t), Some(victim)) = (trace, evicted) {
+                        t.arena_evict(worker, victim);
+                    }
                 }
                 let urgent = next.req.slo.deadline.is_some();
-                if let Err(stale) =
-                    shared.queue.requeue_to(st.shard, next, urgent)
-                {
-                    if let Outcome::Stream(st) = stale.outcome {
-                        if let Some(rec) = shared.sessions.shed(
-                            st.session, ServeError::ShuttingDown,
-                            class_name)
-                        {
-                            stream_sheds.push(rec);
+                match shared.queue.requeue_to(st.shard, next, urgent) {
+                    Ok(_) => {
+                        if let Some(t) = trace {
+                            t.requeue(worker, tid);
                         }
-                        shared.recycle_session(st.session);
+                    }
+                    Err(stale) => {
+                        if let Outcome::Stream(st) = stale.outcome {
+                            if let Some(rec) = shared.sessions.shed(
+                                st.session, ServeError::ShuttingDown,
+                                class_name)
+                            {
+                                stream_sheds.push(rec);
+                                if let Some(t) = trace {
+                                    t.terminal(worker, tid,
+                                               "shed-shutdown");
+                                }
+                            }
+                            shared.recycle_session(st.session);
+                        }
                     }
                 }
             }
             Advance::Done(stats) => {
                 shared.recycle_session(st.session);
+                if let Some(t) = trace {
+                    t.terminal(worker, tid, "stream-done");
+                }
                 stream_done.push(stats);
             }
             Advance::Gone => {
@@ -707,7 +777,7 @@ mod tests {
         let (tx, rx) = channel(id, max_steps + 1);
         let pending = table.admit(
             StreamRequest::new(id, prompt, max_steps), tx,
-            Instant::now(), 4, spec_k);
+            Instant::now(), 4, spec_k, 0);
         let st = match pending.outcome {
             Outcome::Stream(st) => st,
             _ => panic!("stream admit must yield a stream item"),

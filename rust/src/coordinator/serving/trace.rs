@@ -1,0 +1,773 @@
+//! Flight recorder: per-worker ring buffers of typed request-lifecycle
+//! events, live engine snapshots, and Chrome-trace export.
+//!
+//! The engine's only lens used to be the end-of-run `ServeReport`;
+//! this module adds the *during*-the-run view.  Three pieces:
+//!
+//!  * [`TraceRecorder`] — one fixed-capacity event lane per worker
+//!    plus one engine lane for client-thread events (submit/admission/
+//!    shutdown-drain).  Every event is a [`Stamped`] [`TraceEvent`]
+//!    carrying a µs tick from the engine's exec clock and the request/
+//!    session `trace_id` (0 for batch-scoped events).  A full lane
+//!    drops its **oldest** event and counts the drop exactly, so
+//!    `dropped + exported == emitted` always reconciles (property-
+//!    tested under panicking fleets and mid-run shutdown).
+//!  * [`EngineSnapshot`] / [`ClassSnapshot`] — the live mid-run
+//!    counters/gauges/log2-bucket latency histograms that
+//!    `EngineHandle::snapshot()` returns; before this module *all*
+//!    numbers were shutdown-only.
+//!  * [`trace_export::chrome_json`] — Chrome `trace_event` JSON:
+//!    workers as tids with complete ("X") spans from ExecStart/End
+//!    pairs, one complete span per request from its Admit/Terminal
+//!    pair, and instant ("i") events for sheds/retries/breaker flips.
+//!    Open the file at `chrome://tracing` or <https://ui.perfetto.dev>.
+//!
+//! Concurrency discipline: lanes are `RankedMutex<VecDeque<…>>` at
+//! [`Rank::TraceRing`], the strictly-last rank in `sync.rs`'s table —
+//! emission is legal while holding *any* other serving lock, and
+//! nothing is ever acquired under a lane lock.  The exact-count
+//! ledgers are `Relaxed` atomics (independent monotone event counts;
+//! see the per-file allowlist in `lint.rs`).  The disabled recorder is
+//! simply `None` in the engine's `Option<Arc<TraceRecorder>>` — every
+//! emission site is one branch, no allocation, no lock, and no
+//! trace-id counter is consumed, so a `trace_capacity == 0` run
+//! replays a seeded sim bit-identically to the untraced build.
+//!
+//! Event construction is confined to this module's emission API
+//! (`invariant-lint` rule `trace-confined`): call sites can never
+//! build a `TraceEvent` themselves and bypass the drop-counting path.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use super::controller::BreakerState;
+use crate::json::Value;
+use crate::metrics::Log2Hist;
+use crate::sync::{Rank, RankedMutex};
+
+/// One typed point in a request's (or batch's, or worker's) lifecycle.
+///
+/// Constructed ONLY by [`TraceRecorder`]'s emission methods — the
+/// `trace-confined` lint rule fails CI on any `TraceEvent::` token
+/// outside this file.  Consumers match via [`Stamped::kind`] and the
+/// public fields of the drained events.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    /// a request/session entered the engine (trace_id allocated)
+    Admit,
+    /// admission placed the request on a queue shard
+    Place { shard: usize },
+    /// a popped batch took `rows` items from shards other than the
+    /// popping worker's own
+    Steal { rows: usize },
+    /// a worker formed a batch of `rows` compatible items
+    BatchFormed { key: String, rows: usize },
+    /// one executor call begins (per attempt, so retries re-emit)
+    ExecStart { tier: f32, class: usize },
+    /// the matching executor call returned
+    ExecEnd { tier: f32, class: usize },
+    /// the fault ladder retried a transient span failure
+    Retry { attempt: usize },
+    /// the fault ladder bisected a still-failing span
+    Bisect,
+    /// a singleton unit failed last-resort and was quarantined
+    Poisoned,
+    /// the supervisor rebuilt a worker's executor
+    Respawn { class: usize },
+    /// a class circuit breaker changed state
+    BreakerTransition {
+        class: usize,
+        from: &'static str,
+        to: &'static str,
+    },
+    /// a speculative draft batch ran `rows` session rows
+    DraftRound { rows: usize },
+    /// one session's verify pass resolved
+    VerifyResolve { accepted: usize, rejected: usize },
+    /// decode-step window served from the session arena
+    ArenaHit,
+    /// decode-step window recomputed (arena miss or disabled)
+    ArenaMiss,
+    /// storing a window evicted the LRU victim session
+    ArenaEvict { victim: u64 },
+    /// a continuation/in-flight item went back into the queue
+    Requeue,
+    /// the request/session resolved — exactly one per Admit
+    Terminal { cause: &'static str },
+}
+
+/// A [`TraceEvent`] stamped with its lane, µs tick and trace id.
+#[derive(Debug, Clone)]
+pub struct Stamped {
+    /// µs since engine start, from the same monotonic clock that
+    /// stamps the report's queue/exec timings
+    pub tick_us: u64,
+    /// request/session id threaded through `Pending`/`DecodeSession`;
+    /// 0 for batch- or worker-scoped events
+    pub trace_id: u64,
+    /// worker index, or [`TraceRecorder::engine_lane`] for
+    /// client-thread events
+    pub lane: usize,
+    pub event: TraceEvent,
+}
+
+impl Stamped {
+    /// Stable kebab-case label of the event type — what consumers
+    /// outside this module match on (building `TraceEvent::` patterns
+    /// elsewhere is a lint violation by design).
+    pub fn kind(&self) -> &'static str {
+        match self.event {
+            TraceEvent::Admit => "admit",
+            TraceEvent::Place { .. } => "place",
+            TraceEvent::Steal { .. } => "steal",
+            TraceEvent::BatchFormed { .. } => "batch-formed",
+            TraceEvent::ExecStart { .. } => "exec-start",
+            TraceEvent::ExecEnd { .. } => "exec-end",
+            TraceEvent::Retry { .. } => "retry",
+            TraceEvent::Bisect => "bisect",
+            TraceEvent::Poisoned => "poisoned",
+            TraceEvent::Respawn { .. } => "respawn",
+            TraceEvent::BreakerTransition { .. } => "breaker-transition",
+            TraceEvent::DraftRound { .. } => "draft-round",
+            TraceEvent::VerifyResolve { .. } => "verify-resolve",
+            TraceEvent::ArenaHit => "arena-hit",
+            TraceEvent::ArenaMiss => "arena-miss",
+            TraceEvent::ArenaEvict { .. } => "arena-evict",
+            TraceEvent::Requeue => "requeue",
+            TraceEvent::Terminal { .. } => "terminal",
+        }
+    }
+
+    /// The `cause` of a terminal event, if this is one.
+    pub fn terminal_cause(&self) -> Option<&'static str> {
+        match self.event {
+            TraceEvent::Terminal { cause } => Some(cause),
+            _ => None,
+        }
+    }
+
+    /// `(accepted, rejected)` of a verify resolution, if this is one.
+    pub fn verify_counts(&self) -> Option<(usize, usize)> {
+        match self.event {
+            TraceEvent::VerifyResolve { accepted, rejected } => {
+                Some((accepted, rejected))
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Exact event ledger: `dropped + exported == emitted` once every
+/// lane has been drained, no matter how the run ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceCounts {
+    pub emitted: u64,
+    pub dropped: u64,
+    pub exported: u64,
+}
+
+/// The flight recorder.  See the module docs for the discipline; the
+/// short version: emission methods only, one per event type, each a
+/// single lane-lock push with exact overflow accounting.
+pub struct TraceRecorder {
+    start: Instant,
+    capacity: usize,
+    /// worker-class names, indexed by the `class` field of events
+    classes: Vec<String>,
+    /// lanes `0..workers` belong to workers; the last is the engine's
+    lanes: Vec<RankedMutex<VecDeque<Stamped>>>,
+    // Relaxed throughout: independent monotone counters — the ledger
+    // invariant is evaluated only after threads are joined/drained
+    emitted: AtomicU64,
+    dropped: AtomicU64,
+    exported: AtomicU64,
+    next_trace_id: AtomicU64,
+}
+
+impl std::fmt::Debug for TraceRecorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceRecorder")
+            .field("capacity", &self.capacity)
+            .field("lanes", &self.lanes.len())
+            .field("counts", &self.counts())
+            .finish()
+    }
+}
+
+impl TraceRecorder {
+    /// `capacity` events per lane (> 0 — a zero capacity means "no
+    /// recorder at all": the engine keeps `None` instead), one lane
+    /// per worker plus the trailing engine lane.
+    pub fn new(capacity: usize, workers: usize, classes: Vec<String>,
+               start: Instant) -> TraceRecorder {
+        assert!(capacity > 0,
+                "trace_capacity 0 disables tracing; build no recorder");
+        TraceRecorder {
+            start,
+            capacity,
+            classes,
+            lanes: (0..workers + 1)
+                .map(|_| {
+                    RankedMutex::new(Rank::TraceRing,
+                                     VecDeque::with_capacity(capacity))
+                })
+                .collect(),
+            emitted: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            exported: AtomicU64::new(0),
+            next_trace_id: AtomicU64::new(0),
+        }
+    }
+
+    /// The lane client threads (submit/try_submit/shutdown) stamp.
+    pub fn engine_lane(&self) -> usize {
+        self.lanes.len() - 1
+    }
+
+    /// Worker-class names, indexed by event `class` fields.
+    pub fn classes(&self) -> &[String] {
+        &self.classes
+    }
+
+    /// Allocate the next request/session trace id (starts at 1; 0 is
+    /// the "untraced" stamp a disabled engine writes).
+    pub fn alloc_trace_id(&self) -> u64 {
+        self.next_trace_id.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// µs since engine start on the exec clock.
+    pub fn tick_us(&self) -> u64 {
+        self.start.elapsed().as_micros() as u64
+    }
+
+    fn push(&self, lane: usize, trace_id: u64, event: TraceEvent) {
+        let stamped = Stamped {
+            tick_us: self.tick_us(),
+            trace_id,
+            lane,
+            event,
+        };
+        let mut ring = self.lanes[lane].lock();
+        if ring.len() == self.capacity {
+            ring.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(stamped);
+        drop(ring);
+        self.emitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    // --- emission API: one method per event type ----------------------
+
+    pub fn admit(&self, lane: usize, trace_id: u64) {
+        self.push(lane, trace_id, TraceEvent::Admit);
+    }
+
+    pub fn place(&self, lane: usize, trace_id: u64, shard: usize) {
+        self.push(lane, trace_id, TraceEvent::Place { shard });
+    }
+
+    pub fn steal(&self, lane: usize, rows: usize) {
+        self.push(lane, 0, TraceEvent::Steal { rows });
+    }
+
+    pub fn batch_formed(&self, lane: usize, key: String, rows: usize) {
+        self.push(lane, 0, TraceEvent::BatchFormed { key, rows });
+    }
+
+    pub fn exec_start(&self, lane: usize, tier: f32, class: usize) {
+        self.push(lane, 0, TraceEvent::ExecStart { tier, class });
+    }
+
+    pub fn exec_end(&self, lane: usize, tier: f32, class: usize) {
+        self.push(lane, 0, TraceEvent::ExecEnd { tier, class });
+    }
+
+    pub fn retry(&self, lane: usize, attempt: usize) {
+        self.push(lane, 0, TraceEvent::Retry { attempt });
+    }
+
+    pub fn bisect(&self, lane: usize) {
+        self.push(lane, 0, TraceEvent::Bisect);
+    }
+
+    pub fn poisoned(&self, lane: usize) {
+        self.push(lane, 0, TraceEvent::Poisoned);
+    }
+
+    pub fn respawn(&self, lane: usize, class: usize) {
+        self.push(lane, 0, TraceEvent::Respawn { class });
+    }
+
+    pub fn breaker_transition(&self, lane: usize, class: usize,
+                              from: BreakerState, to: BreakerState) {
+        self.push(lane, 0, TraceEvent::BreakerTransition {
+            class,
+            from: from.name(),
+            to: to.name(),
+        });
+    }
+
+    pub fn draft_round(&self, lane: usize, rows: usize) {
+        self.push(lane, 0, TraceEvent::DraftRound { rows });
+    }
+
+    pub fn verify_resolve(&self, lane: usize, trace_id: u64,
+                          accepted: usize, rejected: usize) {
+        self.push(lane, trace_id,
+                  TraceEvent::VerifyResolve { accepted, rejected });
+    }
+
+    pub fn arena_hit(&self, lane: usize, trace_id: u64) {
+        self.push(lane, trace_id, TraceEvent::ArenaHit);
+    }
+
+    pub fn arena_miss(&self, lane: usize, trace_id: u64) {
+        self.push(lane, trace_id, TraceEvent::ArenaMiss);
+    }
+
+    pub fn arena_evict(&self, lane: usize, victim: u64) {
+        self.push(lane, 0, TraceEvent::ArenaEvict { victim });
+    }
+
+    pub fn requeue(&self, lane: usize, trace_id: u64) {
+        self.push(lane, trace_id, TraceEvent::Requeue);
+    }
+
+    pub fn terminal(&self, lane: usize, trace_id: u64,
+                    cause: &'static str) {
+        self.push(lane, trace_id, TraceEvent::Terminal { cause });
+    }
+
+    // --- drain / ledger ------------------------------------------------
+
+    /// Take every buffered event (oldest first per lane, then merged
+    /// into global tick order) and count them as exported.  After this
+    /// returns — with emitters quiesced — the ledger reconciles:
+    /// `counts().dropped + counts().exported == counts().emitted`.
+    pub fn drain(&self) -> Vec<Stamped> {
+        let mut out: Vec<Stamped> = Vec::new();
+        for lane in &self.lanes {
+            out.extend(lane.lock().drain(..));
+        }
+        self.exported
+            .fetch_add(out.len() as u64, Ordering::Relaxed);
+        out.sort_by_key(|e| e.tick_us);
+        out
+    }
+
+    /// The exact event ledger so far.
+    pub fn counts(&self) -> TraceCounts {
+        TraceCounts {
+            emitted: self.emitted.load(Ordering::Relaxed),
+            dropped: self.dropped.load(Ordering::Relaxed),
+            exported: self.exported.load(Ordering::Relaxed),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// live snapshot types
+// ---------------------------------------------------------------------------
+
+/// Live per-worker-class counters the engine keeps regardless of
+/// whether tracing is enabled: one-shot served/shed tallies plus a
+/// bounded-memory latency histogram, all observable mid-run with no
+/// lock.  These feed [`ClassSnapshot`] and the shutdown report's
+/// percentile lines.
+#[derive(Debug, Default)]
+pub struct LiveClassStats {
+    // Relaxed: independent monotone tallies read by snapshots; a
+    // torn cross-counter read can only lag, never corrupt
+    pub served: AtomicU64,
+    pub shed: AtomicU64,
+    pub latency: Log2Hist,
+}
+
+impl LiveClassStats {
+    pub fn record_served(&self, latency_ms: f64) {
+        self.served.fetch_add(1, Ordering::Relaxed);
+        self.latency.observe_ms(latency_ms);
+    }
+
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// One worker class's slice of a live [`EngineSnapshot`].
+#[derive(Debug, Clone)]
+pub struct ClassSnapshot {
+    pub class: String,
+    /// one-shot completions served by this class so far
+    pub served: u64,
+    /// one-shot sheds attributed to this class so far
+    pub shed: u64,
+    /// log2-bucket latency percentiles over the served completions
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub latency_samples: u64,
+    pub breaker: &'static str,
+    pub breaker_trips: usize,
+    pub retries: usize,
+    pub splits: usize,
+    pub poisoned: usize,
+    pub respawns: usize,
+    pub cache_hits: usize,
+    pub cache_misses: usize,
+}
+
+/// What `EngineHandle::snapshot()` returns: the engine's live gauges
+/// and counters at one instant mid-run — the multi-node heartbeat
+/// building block (ROADMAP).  Everything here is read from atomics
+/// (or one brief controller lock per class for the breaker state);
+/// nothing blocks the serving hot path.
+#[derive(Debug, Clone)]
+pub struct EngineSnapshot {
+    /// ms since engine start on the exec clock
+    pub uptime_ms: f64,
+    /// aggregate admission-queue depth (one atomic load)
+    pub queue_depth: usize,
+    /// deadline-carrying items currently enqueued
+    pub urgent_depth: usize,
+    pub live_workers: usize,
+    /// one-shot completions so far, summed over classes
+    pub served: u64,
+    /// one-shot sheds so far (worker- and engine-side)
+    pub shed: u64,
+    pub sessions_started: usize,
+    pub sessions_done: usize,
+    pub sessions_shed: usize,
+    pub spec_drafted: usize,
+    pub spec_accepted: usize,
+    pub spec_rejected: usize,
+    pub classes: Vec<ClassSnapshot>,
+    /// event ledger, when tracing is enabled
+    pub trace: Option<TraceCounts>,
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace_event export
+// ---------------------------------------------------------------------------
+
+/// Chrome `trace_event` JSON export (load at `chrome://tracing` or
+/// <https://ui.perfetto.dev>).  Pure functions over drained events —
+/// no recorder state, so tests and the CLI share one code path.
+pub mod trace_export {
+    use super::*;
+
+    /// pid for worker-lane rows (one tid per worker + engine lane)
+    const PID_WORKERS: u64 = 1;
+    /// pid for per-request lifecycle spans (one tid per trace id)
+    const PID_REQUESTS: u64 = 2;
+
+    fn f(x: f64) -> Value {
+        Value::Num(if x.is_finite() { x } else { 0.0 })
+    }
+
+    fn obj(fields: Vec<(&str, Value)>) -> Value {
+        Value::Obj(fields.into_iter()
+                       .map(|(k, v)| (k.to_string(), v))
+                       .collect())
+    }
+
+    fn event(name: &str, ph: &str, pid: u64, tid: u64, ts: u64,
+             extra: Vec<(&str, Value)>, args: Vec<(&str, Value)>)
+             -> Value {
+        let mut fields = vec![
+            ("name", Value::Str(name.to_string())),
+            ("ph", Value::Str(ph.to_string())),
+            ("pid", f(pid as f64)),
+            ("tid", f(tid as f64)),
+            ("ts", f(ts as f64)),
+        ];
+        fields.extend(extra);
+        fields.push(("args", obj(args)));
+        obj(fields)
+    }
+
+    fn class_name(classes: &[String], idx: usize) -> Value {
+        Value::Str(classes.get(idx).cloned()
+                       .unwrap_or_else(|| format!("class{idx}")))
+    }
+
+    /// Render drained events as a Chrome trace: complete ("X") spans
+    /// for ExecStart/End pairs (per worker tid) and Admit→Terminal
+    /// pairs (per request tid under pid 2), instant ("i") events for
+    /// everything else.  Unpaired starts/admits (ring overflow, or a
+    /// fleet that died mid-exec) degrade to instants, never panic.
+    pub fn chrome_json(events: &[Stamped], classes: &[String])
+                       -> String {
+        let mut out: Vec<Value> = Vec::new();
+        // ExecStart/End pair per lane: workers are serial, so the
+        // first unmatched start on a lane pairs with the next end
+        let max_lane =
+            events.iter().map(|e| e.lane).max().unwrap_or(0);
+        let mut open_exec: Vec<Option<&Stamped>> =
+            vec![None; max_lane + 1];
+        // Admit/Terminal pair per trace id
+        let mut admits: std::collections::HashMap<u64, u64> =
+            std::collections::HashMap::new();
+        for e in events {
+            match &e.event {
+                TraceEvent::ExecStart { .. } => {
+                    if let Some(orphan) =
+                        open_exec[e.lane].replace(e)
+                    {
+                        // a start with no end (overflow/fault): keep
+                        // it visible as an instant
+                        out.push(instant(orphan, classes));
+                    }
+                }
+                TraceEvent::ExecEnd { tier, class } => {
+                    match open_exec[e.lane].take() {
+                        Some(start) => out.push(event(
+                            "exec", "X", PID_WORKERS,
+                            e.lane as u64, start.tick_us,
+                            vec![(
+                                "dur",
+                                f(e.tick_us
+                                      .saturating_sub(start.tick_us)
+                                      as f64),
+                            )],
+                            vec![
+                                ("tier", f(*tier as f64)),
+                                ("class",
+                                 class_name(classes, *class)),
+                            ],
+                        )),
+                        None => out.push(instant(e, classes)),
+                    }
+                }
+                TraceEvent::Admit => {
+                    admits.insert(e.trace_id, e.tick_us);
+                }
+                TraceEvent::Terminal { cause } => {
+                    match admits.remove(&e.trace_id) {
+                        Some(start) => out.push(event(
+                            "request", "X", PID_REQUESTS, e.trace_id,
+                            start,
+                            vec![(
+                                "dur",
+                                f(e.tick_us.saturating_sub(start)
+                                      as f64),
+                            )],
+                            vec![
+                                ("cause",
+                                 Value::Str(cause.to_string())),
+                                ("trace_id",
+                                 f(e.trace_id as f64)),
+                            ],
+                        )),
+                        None => out.push(instant(e, classes)),
+                    }
+                }
+                _ => out.push(instant(e, classes)),
+            }
+        }
+        // orphans left open at the end of the capture
+        for orphan in open_exec.into_iter().flatten() {
+            out.push(instant(orphan, classes));
+        }
+        for (trace_id, ts) in admits {
+            out.push(event("admit", "i", PID_REQUESTS, trace_id, ts,
+                           vec![("s", Value::Str("t".into()))],
+                           vec![("trace_id", f(trace_id as f64))]));
+        }
+        crate::json::to_string(&obj(vec![
+            ("traceEvents", Value::Arr(out)),
+            ("displayTimeUnit", Value::Str("ms".into())),
+        ]))
+    }
+
+    fn instant(e: &Stamped, classes: &[String]) -> Value {
+        let mut args: Vec<(&str, Value)> =
+            vec![("trace_id", f(e.trace_id as f64))];
+        match &e.event {
+            TraceEvent::Place { shard } => {
+                args.push(("shard", f(*shard as f64)));
+            }
+            TraceEvent::Steal { rows }
+            | TraceEvent::DraftRound { rows } => {
+                args.push(("rows", f(*rows as f64)));
+            }
+            TraceEvent::BatchFormed { key, rows } => {
+                args.push(("key", Value::Str(key.clone())));
+                args.push(("rows", f(*rows as f64)));
+            }
+            TraceEvent::ExecStart { tier, class }
+            | TraceEvent::ExecEnd { tier, class } => {
+                args.push(("tier", f(*tier as f64)));
+                args.push(("class", class_name(classes, *class)));
+            }
+            TraceEvent::Retry { attempt } => {
+                args.push(("attempt", f(*attempt as f64)));
+            }
+            TraceEvent::Respawn { class } => {
+                args.push(("class", class_name(classes, *class)));
+            }
+            TraceEvent::BreakerTransition { class, from, to } => {
+                args.push(("class", class_name(classes, *class)));
+                args.push(("from", Value::Str((*from).into())));
+                args.push(("to", Value::Str((*to).into())));
+            }
+            TraceEvent::VerifyResolve { accepted, rejected } => {
+                args.push(("accepted", f(*accepted as f64)));
+                args.push(("rejected", f(*rejected as f64)));
+            }
+            TraceEvent::ArenaEvict { victim } => {
+                args.push(("victim", f(*victim as f64)));
+            }
+            TraceEvent::Terminal { cause } => {
+                args.push(("cause", Value::Str((*cause).into())));
+            }
+            _ => {}
+        }
+        event(e.kind(), "i", PID_WORKERS, e.lane as u64, e.tick_us,
+              vec![("s", Value::Str("t".into()))], args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn recorder(cap: usize) -> TraceRecorder {
+        TraceRecorder::new(cap, 2, vec!["default".into()],
+                           Instant::now())
+    }
+
+    #[test]
+    fn overflow_drops_oldest_and_counts_exactly() {
+        let t = recorder(3);
+        for i in 0..10u64 {
+            t.admit(0, i + 1);
+        }
+        let c = t.counts();
+        assert_eq!((c.emitted, c.dropped, c.exported), (10, 7, 0));
+        let drained = t.drain();
+        assert_eq!(drained.len(), 3, "ring capacity bounds the lane");
+        // the survivors are the NEWEST three, in order
+        let ids: Vec<u64> =
+            drained.iter().map(|e| e.trace_id).collect();
+        assert_eq!(ids, vec![8, 9, 10]);
+        let c = t.counts();
+        assert_eq!(c.dropped + c.exported, c.emitted);
+    }
+
+    #[test]
+    fn lanes_are_independent_and_merge_in_tick_order() {
+        let t = recorder(8);
+        t.admit(0, 1);
+        t.admit(1, 2);
+        t.terminal(2, 1, "done"); // engine lane
+        assert_eq!(t.engine_lane(), 2);
+        let drained = t.drain();
+        assert_eq!(drained.len(), 3);
+        assert!(drained.windows(2)
+                    .all(|w| w[0].tick_us <= w[1].tick_us));
+        let c = t.counts();
+        assert_eq!(c.dropped + c.exported, c.emitted);
+        assert_eq!(c.exported, 3);
+        // a second drain exports nothing new
+        assert!(t.drain().is_empty());
+        assert_eq!(t.counts().exported, 3);
+    }
+
+    #[test]
+    fn trace_ids_start_at_one_and_are_unique() {
+        let t = recorder(4);
+        assert_eq!(t.alloc_trace_id(), 1);
+        assert_eq!(t.alloc_trace_id(), 2);
+        assert_eq!(t.alloc_trace_id(), 3);
+    }
+
+    #[test]
+    fn kinds_cover_every_variant() {
+        let t = recorder(64);
+        t.admit(0, 1);
+        t.place(0, 1, 3);
+        t.steal(0, 2);
+        t.batch_formed(0, "k".into(), 4);
+        t.exec_start(0, 1.0, 0);
+        t.exec_end(0, 1.0, 0);
+        t.retry(0, 1);
+        t.bisect(0);
+        t.poisoned(0);
+        t.respawn(0, 0);
+        t.breaker_transition(0, 0, BreakerState::Closed,
+                             BreakerState::Open);
+        t.draft_round(0, 3);
+        t.verify_resolve(0, 1, 2, 1);
+        t.arena_hit(0, 1);
+        t.arena_miss(0, 1);
+        t.arena_evict(0, 9);
+        t.requeue(0, 1);
+        t.terminal(0, 1, "done");
+        let kinds: Vec<&str> =
+            t.drain().iter().map(|e| e.kind()).collect();
+        assert_eq!(kinds, vec![
+            "admit", "place", "steal", "batch-formed", "exec-start",
+            "exec-end", "retry", "bisect", "poisoned", "respawn",
+            "breaker-transition", "draft-round", "verify-resolve",
+            "arena-hit", "arena-miss", "arena-evict", "requeue",
+            "terminal",
+        ]);
+    }
+
+    #[test]
+    fn chrome_export_pairs_spans_and_parses() {
+        let t = recorder(64);
+        t.admit(2, 7);
+        t.exec_start(0, 0.5, 0);
+        t.exec_end(0, 0.5, 0);
+        t.retry(1, 1);
+        t.terminal(0, 7, "done");
+        // an unpaired start must degrade to an instant, not panic
+        t.exec_start(1, 1.0, 0);
+        let events = t.drain();
+        let text = trace_export::chrome_json(&events,
+                                             &["default".into()]);
+        let doc = crate::json::parse(&text).expect("valid JSON");
+        let arr = doc.req("traceEvents").unwrap().as_arr().unwrap();
+        let phase = |v: &crate::json::Value| {
+            v.req("ph").unwrap().as_str().unwrap().to_string()
+        };
+        let name = |v: &crate::json::Value| {
+            v.req("name").unwrap().as_str().unwrap().to_string()
+        };
+        let execs: Vec<_> = arr.iter()
+            .filter(|v| name(v) == "exec" && phase(v) == "X")
+            .collect();
+        assert_eq!(execs.len(), 1, "one complete exec span");
+        assert!(execs[0].req("dur").unwrap().as_f64().unwrap()
+                    >= 0.0);
+        let requests: Vec<_> = arr.iter()
+            .filter(|v| name(v) == "request" && phase(v) == "X")
+            .collect();
+        assert_eq!(requests.len(), 1,
+                   "one complete request lifecycle span");
+        assert_eq!(requests[0].req("tid").unwrap().as_f64().unwrap(),
+                   7.0);
+        // retry shows up as an instant, the orphan start too
+        assert!(arr.iter().any(|v| name(v) == "retry"
+                                   && phase(v) == "i"));
+        assert!(arr.iter().any(|v| name(v) == "exec-start"
+                                   && phase(v) == "i"));
+    }
+
+    #[test]
+    fn live_class_stats_tally_and_histogram() {
+        let live = LiveClassStats::default();
+        live.record_served(5.0);
+        live.record_served(7.0);
+        live.record_shed();
+        assert_eq!(live.served.load(Ordering::Relaxed), 2);
+        assert_eq!(live.shed.load(Ordering::Relaxed), 1);
+        assert_eq!(live.latency.count(), 2);
+        let p50 = live.latency.quantile_ms(0.5);
+        let (lo, hi) = Log2Hist::bucket_bounds_ms(5.0);
+        assert!(p50 >= lo && p50 <= hi, "p50 {p50} vs [{lo}, {hi}]");
+    }
+}

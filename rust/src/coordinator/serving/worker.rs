@@ -195,14 +195,23 @@ pub(crate) fn sample_token(row: &[f32]) -> i32 {
 /// Terminate every item of a failing batch: one-shots resolve to
 /// `ExecFailed`, decode sessions are shed through the session table
 /// (their stream's terminal event) and logged to the engine's
-/// stream-shed record under one lock.
+/// stream-shed record under one lock.  `lane` is the dying worker's
+/// trace lane: every item it takes down gets its balancing `Terminal`
+/// here, so the admit/terminal ledger reconciles even through a fleet
+/// that exhausted its restart budget.
 pub(crate) fn fail_batch(shared: &EngineShared, items: Vec<Pending>,
-                         msg: &str, class_name: &str) {
+                         msg: &str, class_name: &str, lane: usize) {
+    let trace = shared.trace.as_deref();
     let mut recs: Vec<StreamShedRecord> = Vec::new();
     for p in items {
         match p.outcome {
-            Outcome::OneShot(responder) => responder
-                .fulfil(Err(ServeError::ExecFailed(msg.to_string()))),
+            Outcome::OneShot(responder) => {
+                responder.fulfil(
+                    Err(ServeError::ExecFailed(msg.to_string())));
+                if let Some(t) = trace {
+                    t.terminal(lane, p.trace_id, "exec-failed");
+                }
+            }
             Outcome::Stream(st) => {
                 if let Some(rec) = shared.sessions.shed(
                     st.session,
@@ -210,6 +219,11 @@ pub(crate) fn fail_batch(shared: &EngineShared, items: Vec<Pending>,
                     class_name)
                 {
                     recs.push(rec);
+                    // only the shed that won the race owns the
+                    // session's terminal event
+                    if let Some(t) = trace {
+                        t.terminal(lane, p.trace_id, "exec-failed");
+                    }
                 }
                 shared.recycle_session(st.session);
             }
@@ -300,13 +314,13 @@ pub(crate) enum UnitFate {
 /// `Err(msg)` on a FATAL fault — executor state is unknown, the caller
 /// must escalate to supervision with the batch intact.
 pub(crate) fn execute_quarantine(shared: &EngineShared, class_idx: usize,
-                                 exec: &mut dyn Executor, tier: f32,
-                                 units: &[Vec<Vec<i32>>])
+                                 worker: usize, exec: &mut dyn Executor,
+                                 tier: f32, units: &[Vec<Vec<i32>>])
                                  -> Result<(Vec<UnitFate>, bool), String> {
     let mut fates: Vec<Option<UnitFate>> =
         (0..units.len()).map(|_| None).collect();
-    let failed = exec_span(shared, class_idx, exec, tier, units, 0,
-                           units.len(), &mut fates)?;
+    let failed = exec_span(shared, class_idx, worker, exec, tier, units,
+                           0, units.len(), &mut fates)?;
     Ok((fates
             .into_iter()
             .map(|f| f.expect("ladder assigns every unit a fate"))
@@ -318,7 +332,7 @@ pub(crate) fn execute_quarantine(shared: &EngineShared, class_idx: usize,
 /// then bisect or quarantine.  Recursion depth is log2(batch) — a
 /// handful of frames for any real batch dimension.
 #[allow(clippy::too_many_arguments)]
-fn exec_span(shared: &EngineShared, class_idx: usize,
+fn exec_span(shared: &EngineShared, class_idx: usize, worker: usize,
              exec: &mut dyn Executor, tier: f32,
              units: &[Vec<Vec<i32>>], lo: usize, hi: usize,
              fates: &mut [Option<UnitFate>]) -> Result<bool, String> {
@@ -326,6 +340,7 @@ fn exec_span(shared: &EngineShared, class_idx: usize,
     let seq_len = exec.seq_len();
     let policy = shared.policy;
     let faults = &shared.faults[class_idx];
+    let trace = shared.trace.as_deref();
     let rows: Vec<&[i32]> = units[lo..hi]
         .iter()
         .flat_map(|u| u.iter().map(|r| r.as_slice()))
@@ -339,6 +354,9 @@ fn exec_span(shared: &EngineShared, class_idx: usize,
             // Relaxed fault counters throughout this ladder: pure
             // statistics, read by report assembly after the joins
             faults.retries.fetch_add(1, Ordering::Relaxed);
+            if let Some(t) = trace {
+                t.retry(worker, attempt);
+            }
             // bounded exponential backoff: the shift saturates at 64x
             // so a large max_retries cannot overflow into a sleep of
             // centuries
@@ -349,7 +367,17 @@ fn exec_span(shared: &EngineShared, class_idx: usize,
             }
         }
         let exec_start = Instant::now();
-        match call_exec(exec, tier, &tokens) {
+        // paired around the backend call itself — success, transient
+        // failure and fatal fault all close their span, so the Chrome
+        // exec track shows retries as distinct back-to-back slices
+        if let Some(t) = trace {
+            t.exec_start(worker, tier, class_idx);
+        }
+        let verdict = call_exec(exec, tier, &tokens);
+        if let Some(t) = trace {
+            t.exec_end(worker, tier, class_idx);
+        }
+        match verdict {
             ExecTry::Ok(out) => {
                 // the executor contract is one equal-size logits row
                 // per batch slot; a violating backend is retried like
@@ -394,11 +422,19 @@ fn exec_span(shared: &EngineShared, class_idx: usize,
     // quarantine the singleton otherwise
     if hi - lo >= 2 {
         faults.splits.fetch_add(1, Ordering::Relaxed);
+        if let Some(t) = trace {
+            t.bisect(worker);
+        }
         let mid = lo + (hi - lo) / 2;
-        exec_span(shared, class_idx, exec, tier, units, lo, mid, fates)?;
-        exec_span(shared, class_idx, exec, tier, units, mid, hi, fates)?;
+        exec_span(shared, class_idx, worker, exec, tier, units, lo, mid,
+                  fates)?;
+        exec_span(shared, class_idx, worker, exec, tier, units, mid, hi,
+                  fates)?;
     } else {
         faults.poisoned.fetch_add(1, Ordering::Relaxed);
+        if let Some(t) = trace {
+            t.poisoned(worker);
+        }
         fates[lo] = Some(UnitFate::Poisoned(last_msg));
     }
     Ok(true)
@@ -454,6 +490,8 @@ pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
     let class_name = shared.classes[class_idx].0.clone();
     let controller = &shared.controllers[class_idx];
     let arena = &shared.arenas[class_idx];
+    let trace = shared.trace.as_deref();
+    let live_stats = &shared.live[class_idx];
     let mut batches = 0usize;
     loop {
         // one breaker tick per pop cycle: an Open class backs off the
@@ -462,11 +500,14 @@ pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
         // brownout — at the cheapest floored tier — instead of
         // shedding; Half-open probes at the normally-chosen tier so
         // recovery is actually tested at real quality
-        let breaker = controller.lock().breaker_tick();
+        let (breaker, flip) = controller.lock().breaker_tick_noting();
+        if let (Some(t), Some((from, to))) = (trace, flip) {
+            t.breaker_transition(worker, class_idx, from, to);
+        }
         if breaker == BreakerState::Open {
             std::thread::sleep(Duration::from_millis(1));
         }
-        let popped = shared.queue.pop_batch_keyed_affine(
+        let (popped, stolen) = shared.queue.pop_batch_keyed_affine_counting(
             worker, batch, shared.max_batch_wait,
             |p: &Pending| {
                 batch_key_for(p.kind(), &p.req.slo, &shared.caps)
@@ -489,6 +530,17 @@ pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
         if popped.is_empty() {
             return Ok(batches); // closed and drained
         }
+        if let Some(t) = trace {
+            if stolen > 0 {
+                t.steal(worker, stolen);
+            }
+            // the popped run is homogeneous by construction, so the
+            // head's key names the whole batch; the format! only runs
+            // with tracing on
+            let key = batch_key_for(popped[0].kind(),
+                                    &popped[0].req.slo, &shared.caps);
+            t.batch_formed(worker, format!("{key:?}"), popped.len());
+        }
         // shed expired deadlines before spending any compute on them,
         // and collect the survivors' SLO constraints for the controller
         let now = Instant::now();
@@ -507,6 +559,11 @@ pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
                             worker_class: class_name.clone(),
                             cause: ShedCause::DeadlineExceeded,
                         });
+                        live_stats.record_shed();
+                        if let Some(t) = trace {
+                            t.terminal(worker, p.trace_id,
+                                       "shed-deadline");
+                        }
                         responder
                             .fulfil(Err(ServeError::DeadlineExceeded));
                     }
@@ -516,6 +573,10 @@ pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
                             &class_name)
                         {
                             stream_sheds.push(rec);
+                            if let Some(t) = trace {
+                                t.terminal(worker, p.trace_id,
+                                           "shed-deadline");
+                            }
                         }
                         shared.recycle_session(st.session);
                     }
@@ -601,17 +662,29 @@ pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
                     match hit {
                         Some(row) => {
                             cached_rows += 1;
+                            if let Some(t) = trace {
+                                t.arena_hit(worker, p.trace_id);
+                            }
                             rows.push(row);
                         }
-                        None => match shared.sessions
-                            .compute_row(st.session, seq_len)
-                        {
-                            Some(row) => rows.push(row),
-                            // session already terminated: drop the
-                            // stale step (its stream got its terminal
-                            // elsewhere)
-                            None => continue,
-                        },
+                        None => {
+                            // a prefill expects nothing cached, so
+                            // only step >= 1 counts as a miss
+                            if st.step > 0 {
+                                if let Some(t) = trace {
+                                    t.arena_miss(worker, p.trace_id);
+                                }
+                            }
+                            match shared.sessions
+                                .compute_row(st.session, seq_len)
+                            {
+                                Some(row) => rows.push(row),
+                                // session already terminated: drop the
+                                // stale step (its stream got its
+                                // terminal elsewhere)
+                                None => continue,
+                            }
+                        }
                     }
                 }
             }
@@ -633,7 +706,7 @@ pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
         // client waited on them)
         let exec_start = Instant::now();
         let (fates, any_fail) = match execute_quarantine(
-            shared, class_idx, exec, tier, &units)
+            shared, class_idx, worker, exec, tier, &units)
         {
             Ok(ok) => ok,
             Err(fatal) => {
@@ -687,6 +760,11 @@ pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
                                 worker_class: class_name.clone(),
                                 cause: ShedCause::Poisoned,
                             });
+                            live_stats.record_shed();
+                            if let Some(t) = trace {
+                                t.terminal(worker, p.trace_id,
+                                           "shed-poisoned");
+                            }
                             responder
                                 .fulfil(Err(ServeError::Poisoned(msg)));
                         }
@@ -696,6 +774,10 @@ pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
                                 &class_name)
                             {
                                 stream_sheds.push(rec);
+                                if let Some(t) = trace {
+                                    t.terminal(worker, p.trace_id,
+                                               "shed-poisoned");
+                                }
                             }
                             shared.recycle_session(st.session);
                         }
@@ -721,6 +803,14 @@ pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
                         batch_size: n,
                     };
                     batch_completions.push(completion.clone());
+                    // live stats and the terminal event land BEFORE
+                    // the client's future resolves: a snapshot taken
+                    // after `wait()` returns is guaranteed to count
+                    // this request
+                    live_stats.record_served(completion.total_ms);
+                    if let Some(t) = trace {
+                        t.terminal(worker, p.trace_id, "served");
+                    }
                     responder.fulfil(Ok(Reply {
                         completion,
                         logits: row.to_vec(),
@@ -748,33 +838,55 @@ pub(crate) fn run_worker(shared: &EngineShared, worker: usize,
                                 let cut = win.len() - seq_len;
                                 win.drain(..cut);
                             }
-                            arena.store(st.session, st.step + 1, win);
+                            let evicted =
+                                arena.store(st.session, st.step + 1, win);
+                            if let (Some(t), Some(victim)) =
+                                (trace, evicted)
+                            {
+                                t.arena_evict(worker, victim);
+                            }
                             let urgent =
                                 next.req.slo.deadline.is_some();
-                            if let Err(stale) =
-                                shared.queue.requeue_to(
-                                    st.shard, next, urgent)
+                            match shared.queue.requeue_to(
+                                st.shard, next, urgent)
                             {
-                                // queue closed mid-decode: terminate
-                                // the session now, not at a step that
-                                // will never run
-                                if let Outcome::Stream(st) =
-                                    stale.outcome
-                                {
-                                    if let Some(rec) =
-                                        shared.sessions.shed(
-                                            st.session,
-                                            ServeError::ShuttingDown,
-                                            &class_name)
-                                    {
-                                        stream_sheds.push(rec);
+                                Ok(_) => {
+                                    if let Some(t) = trace {
+                                        t.requeue(worker, p.trace_id);
                                     }
-                                    shared.recycle_session(st.session);
+                                }
+                                Err(stale) => {
+                                    // queue closed mid-decode:
+                                    // terminate the session now, not
+                                    // at a step that will never run
+                                    if let Outcome::Stream(st) =
+                                        stale.outcome
+                                    {
+                                        if let Some(rec) =
+                                            shared.sessions.shed(
+                                                st.session,
+                                                ServeError::ShuttingDown,
+                                                &class_name)
+                                        {
+                                            stream_sheds.push(rec);
+                                            if let Some(t) = trace {
+                                                t.terminal(
+                                                    worker, p.trace_id,
+                                                    "shed-shutdown");
+                                            }
+                                        }
+                                        shared
+                                            .recycle_session(st.session);
+                                    }
                                 }
                             }
                         }
                         Advance::Done(stats) => {
                             shared.recycle_session(st.session);
+                            if let Some(t) = trace {
+                                t.terminal(worker, p.trace_id,
+                                           "stream-done");
+                            }
                             stream_done.push(stats);
                         }
                         // terminated concurrently: whoever shed it

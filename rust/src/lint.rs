@@ -20,6 +20,9 @@
 //! | `terminal-outside-channel`| `StreamEvent::Done`/`Shed` only appear in the |
 //! |                          | channel module (`stream/mod.rs`) — the         |
 //! |                          | exactly-once terminal discipline has one home  |
+//! | `trace-confined`         | `TraceEvent` construction only appears in the  |
+//! |                          | recorder module (`trace.rs`) — emission goes   |
+//! |                          | through the typed API so the ledger counts it  |
 //! | `stale-allow`            | every `lint: allow` escape suppresses a real   |
 //! |                          | finding (dead escapes rot into folklore)       |
 //!
@@ -42,6 +45,7 @@ pub const RULE_RAW_MUTEX: &str = "raw-mutex";
 pub const RULE_ORDERING: &str = "ordering-allowlist";
 pub const RULE_GUARD_ACROSS_EXECUTE: &str = "guard-across-execute";
 pub const RULE_TERMINAL_OUTSIDE_CHANNEL: &str = "terminal-outside-channel";
+pub const RULE_TRACE_CONFINED: &str = "trace-confined";
 pub const RULE_STALE_ALLOW: &str = "stale-allow";
 
 const ALL_RULES: &[&str] = &[
@@ -49,6 +53,7 @@ const ALL_RULES: &[&str] = &[
     RULE_ORDERING,
     RULE_GUARD_ACROSS_EXECUTE,
     RULE_TERMINAL_OUTSIDE_CHANNEL,
+    RULE_TRACE_CONFINED,
     RULE_STALE_ALLOW,
 ];
 
@@ -102,6 +107,14 @@ pub const ORDERING_ALLOWLIST: &[(&str, &[&str], &str)] = &[
          resolution and read at shutdown after joins; the \
          drafted == accepted + rejected invariant is single-writer \
          per session.",
+    ),
+    (
+        "coordinator/serving/trace.rs",
+        &["Relaxed"],
+        "flight-recorder ledger (emitted/dropped/exported) and the \
+         trace-id allocator: the ledger is reconciled only after \
+         drain() — itself behind the TraceRing-ranked lane locks — \
+         and the allocator needs only uniqueness.",
     ),
 ];
 
@@ -317,6 +330,7 @@ pub fn scan_source(rel_path: &str, source: &str) -> FileReport {
         return report;
     }
     let is_channel_module = rel_path.ends_with("stream/mod.rs");
+    let is_recorder_module = rel_path.ends_with("serving/trace.rs");
     let ordering_row = ORDERING_ALLOWLIST
         .iter()
         .find(|(suffix, _, _)| rel_path.ends_with(suffix));
@@ -439,6 +453,19 @@ pub fn scan_source(rel_path: &str, source: &str) -> FileReport {
                     break;
                 }
             }
+        }
+
+        // rule: trace-confined — TraceEvent construction has exactly
+        // one home: the recorder API stamps, counts and ring-buffers
+        // every event, so an event built elsewhere would dodge the
+        // dropped + exported == emitted ledger
+        if !is_recorder_module && code.contains("TraceEvent::") {
+            emit(&mut allows, line_no, RULE_TRACE_CONFINED,
+                 "TraceEvent constructed outside serving/trace.rs — \
+                  emit through the TraceRecorder methods so the event \
+                  is stamped and counted by the ledger"
+                     .to_string(),
+                 &mut report.findings);
         }
 
         // rule: guard-across-execute — positional event walk so

@@ -15,20 +15,23 @@
 //!                  [--worker-classes fast=2:slow=2@4]
 //!                  [--stream N] [--decode-steps K]
 //!                  [--spec-k K] [--divergence D] [--fault-rate P]
+//!                  [--trace FILE] [--snapshot-every-ms N]
 //!   info           --config C
 //!
 //! Everything except `serve-sim` runs off the AOT artifacts in
 //! `artifacts/` (`make artifacts`); `serve-sim` drives the full serving
 //! pipeline hermetically through the deterministic `SimExecutor`.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Duration;
 
 use anyhow::{bail, Result};
 
 use elastiformer::cli::Args;
 use elastiformer::coordinator::serving::{
-    sim, Admission, ElasticEngine, Request, Response, ServeConfig,
-    ServeError, ServeReport, SimSpec, StreamRequest,
+    sim, trace_export, Admission, ElasticEngine, EngineHandle,
+    EngineSnapshot, Request, Response, ServeConfig, ServeError,
+    ServeReport, SimSpec, StreamRequest,
 };
 use elastiformer::rng::Rng;
 
@@ -110,6 +113,15 @@ elastiformer — ElastiFormer reproduction (see DESIGN.md)
                tiers.  The fault ladder retries with backoff, bisects
                still-failing batches, and quarantines poison requests;
                survived faults land in the report's fault sections)
+              --trace FILE
+              (flight recorder: record request-lifecycle events and
+               write Chrome trace_event JSON to FILE after each rate
+               point — open at chrome://tracing or ui.perfetto.dev;
+               with several --rates the file holds the last point)
+              --snapshot-every-ms N
+              (print a live engine snapshot — queue depth, served/shed,
+               per-class latency percentiles, breaker states — every
+               N ms while the point runs; 0 disables)
   elastiformer info --config lm_tiny";
 
 /// The artifact-backed subcommands need the PJRT runtime layer; when
@@ -392,7 +404,8 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
                        "queue-bound", "queue-shards", "depth-per-tier",
                        "seed", "worker-classes", "stream",
                        "decode-steps", "arena-pages", "spec-k",
-                       "divergence", "fault-rate"])?;
+                       "divergence", "fault-rate", "trace",
+                       "snapshot-every-ms"])?;
     let n = args.usize_or("requests", 512)?;
     let workers = args.usize_or("workers", 4)?;
     let seed = args.u64_or("seed", 42)?;
@@ -419,6 +432,12 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
     if !(0.0..1.0).contains(&fault_rate) {
         bail!("--fault-rate must be in [0, 1), got {fault_rate}");
     }
+    // flight recorder: --trace FILE turns the recorder on for every
+    // rate point and writes the last point's Chrome trace to FILE;
+    // --snapshot-every-ms N prints live engine snapshots while a
+    // point runs (both default off — the hot path stays branch-only)
+    let trace_out = args.str_opt("trace");
+    let snapshot_every_ms = args.u64_or("snapshot-every-ms", 0)?;
     // 0 = auto (one admission shard per worker); 1 = the classic
     // shared queue, kept for A/B comparison
     let queue_shards = args.usize_or("queue-shards", 0)?;
@@ -486,7 +505,7 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
             run_sim_point(spec, workers, queue_bound, queue_shards,
                           depth_per_tier, classes.as_deref(), n, rate,
                           seed, stream_n, decode_steps, arena_pages,
-                          spec_k)?;
+                          spec_k, snapshot_every_ms, trace_out)?;
         let tiers: Vec<String> = report
             .tier_counts
             .iter()
@@ -519,19 +538,27 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
                          s.p99_session_ms, tiers.join(" "));
             }
             // session-arena economy: decode rows served from cached
-            // windows vs recomputed from the session table
-            println!("    arena  hit rate {:>5.1}% | {} cached row(s), \
+            // windows vs recomputed from the session table ("n/a"
+            // when the run produced no lookups at all, rather than a
+            // misleading 0.0%)
+            let hit = match report.cache_hit_rate_opt() {
+                Some(r) => format!("{:>5.1}%", r * 100.0),
+                None => "   n/a".into(),
+            };
+            println!("    arena  hit rate {hit} | {} cached row(s), \
                       {} recomputed",
-                     report.cache_hit_rate() * 100.0,
                      report.cache_hits, report.cache_misses);
             if spec_k > 0 {
                 // speculative economy: how often the cheap draft tier
                 // agreed with the verifier, and the admission-item
                 // payoff (1.0 = plain decode)
-                println!("    spec   accept {:>5.1}% | drafted {} \
+                let accept = match report.spec_accept_rate_opt() {
+                    Some(r) => format!("{:>5.1}%", r * 100.0),
+                    None => "   n/a".into(),
+                };
+                println!("    spec   accept {accept} | drafted {} \
                           accepted {} rejected {} | {:.2} \
                           tok/admission",
-                         report.spec_accept_rate() * 100.0,
                          report.spec_drafted, report.spec_accepted,
                          report.spec_rejected,
                          report.tokens_per_admission());
@@ -617,13 +644,20 @@ fn parse_worker_classes(s: &str) -> Result<Vec<(String, usize, f64)>> {
     Ok(out)
 }
 
+/// Ring capacity per recorder lane when `--trace` is set: generous
+/// enough that the seeded sweeps export losslessly, small enough that
+/// a long overload run degrades by dropping oldest (and says so in
+/// the ledger) instead of growing without bound.
+const TRACE_CAPACITY: usize = 65_536;
+
 #[allow(clippy::too_many_arguments)]
 fn run_sim_point(spec: SimSpec, workers: usize, queue_bound: usize,
                  queue_shards: usize, depth_per_tier: f64,
                  classes: Option<&[(String, usize, f64)]>, n: usize,
                  rate: f64, seed: u64, stream_n: usize,
                  decode_steps: usize, arena_pages: usize,
-                 spec_k: usize)
+                 spec_k: usize, snapshot_every_ms: u64,
+                 trace_out: Option<&str>)
                  -> Result<(ServeReport, usize, usize)> {
     let mut cfg = ServeConfig::sim()
         .with_workers(workers)
@@ -632,6 +666,8 @@ fn run_sim_point(spec: SimSpec, workers: usize, queue_bound: usize,
         .with_depth_per_tier(depth_per_tier)
         .with_arena_pages(arena_pages)
         .with_spec_k(spec_k)
+        .with_trace_capacity(
+            if trace_out.is_some() { TRACE_CAPACITY } else { 0 })
         .with_max_batch_wait(Duration::from_millis(2));
     let caps = cfg.capacities();
     let engine = match classes {
@@ -650,6 +686,82 @@ fn run_sim_point(spec: SimSpec, workers: usize, queue_bound: usize,
             ElasticEngine::start_fleet(cfg)?
         }
     };
+    // the export path drains after shutdown consumes the handle, so
+    // hold the recorder Arc now
+    let recorder = engine.trace_recorder();
+    // live snapshot printer: borrows the engine for the lifetime of
+    // the point, so the scope must end (stop flag set on every path)
+    // before `shutdown(self)` can consume the handle
+    let stop = AtomicBool::new(false);
+    let (shed, poisoned) = std::thread::scope(|scope| {
+        if snapshot_every_ms > 0 {
+            let (engine, stop) = (&engine, &stop);
+            scope.spawn(move || {
+                loop {
+                    std::thread::sleep(
+                        Duration::from_millis(snapshot_every_ms));
+                    if stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    print_snapshot(&engine.snapshot());
+                }
+            });
+        }
+        let result =
+            drive_sim_point(&engine, spec, n, rate, seed, stream_n,
+                            decode_steps);
+        stop.store(true, Ordering::Relaxed);
+        result
+    })?;
+    let report = engine.shutdown()?;
+    if let Some(path) = trace_out {
+        if let Some(rec) = &recorder {
+            // drain only after shutdown joined the workers: the
+            // ledger is quiescent, so exported + dropped == emitted
+            let events = rec.drain();
+            std::fs::write(path,
+                           trace_export::chrome_json(&events,
+                                                     rec.classes()))?;
+            let c = rec.counts();
+            println!("    trace  {} event(s) -> {path} | emitted {} \
+                      dropped {}",
+                     events.len(), c.emitted, c.dropped);
+        }
+    }
+    Ok((report, shed, poisoned))
+}
+
+/// One live `EngineSnapshot`, printed as a heartbeat line plus one
+/// line per worker class — the CLI face of the same struct a
+/// multi-node control plane would ship over the wire (ROADMAP).
+fn print_snapshot(s: &EngineSnapshot) {
+    let trace = match &s.trace {
+        Some(t) => format!(" | trace {}/{} dropped {}",
+                           t.exported, t.emitted, t.dropped),
+        None => String::new(),
+    };
+    println!("  [snapshot +{:>8.0} ms] queue {:>3} (urgent {}) | \
+              workers {} | served {:>5} shed {:>3} | sessions \
+              {}/{} shed {}{trace}",
+             s.uptime_ms, s.queue_depth, s.urgent_depth,
+             s.live_workers, s.served, s.shed, s.sessions_done,
+             s.sessions_started, s.sessions_shed);
+    for c in &s.classes {
+        println!("  [snapshot] class {:<10} served {:>5} shed {:>3} | \
+                  p50 {:>7.2} ms p99 {:>7.2} ms ({} samples) | \
+                  breaker {} (trips {})",
+                 c.class, c.served, c.shed, c.p50_ms, c.p99_ms,
+                 c.latency_samples, c.breaker, c.breaker_trips);
+    }
+}
+
+/// The open-loop body of one rate point: Poisson arrivals through the
+/// non-blocking front-end, the streaming sidecar, then the waits.
+/// Split out of `run_sim_point` so it can run under the snapshot
+/// printer's borrow scope and still early-exit with `bail!`.
+fn drive_sim_point(engine: &EngineHandle, spec: SimSpec, n: usize,
+                   rate: f64, seed: u64, stream_n: usize,
+                   decode_steps: usize) -> Result<(usize, usize)> {
     let seq_len = spec.seq_len;
     let mut rng = Rng::new(seed ^ 0xA11F);
     let mut responses = Vec::with_capacity(n);
@@ -719,8 +831,7 @@ fn run_sim_point(spec: SimSpec, workers: usize, queue_bound: usize,
     if stream_failed > 0 {
         bail!("{stream_failed} decode session(s) were shed unexpectedly");
     }
-    let report = engine.shutdown()?;
-    Ok((report, shed, poisoned))
+    Ok((shed, poisoned))
 }
 
 #[cfg(feature = "pjrt")]

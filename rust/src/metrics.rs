@@ -1,10 +1,14 @@
 //! Metrics substrate: run-scoped loggers (JSONL + CSV), summary statistics
-//! and the bootstrap confidence intervals used by the Fig. 9 evaluation
-//! (95% CI over 100 resamples, matching the paper's protocol).
+//! the bootstrap confidence intervals used by the Fig. 9 evaluation
+//! (95% CI over 100 resamples, matching the paper's protocol), and the
+//! shared log2-bucket latency histogram ([`Log2Hist`]) the serving
+//! subsystem uses for bounded-memory percentiles (live snapshots and
+//! the shutdown report).
 
 use std::fs;
 use std::io::Write;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{Context, Result};
 
@@ -101,6 +105,160 @@ pub fn bootstrap_ci(xs: &[f64], resamples: usize, conf: f64, seed: u64)
     (mean, means[lo_i], means[hi_i])
 }
 
+// ---------------------------------------------------------------------------
+// log2-bucket latency histogram
+// ---------------------------------------------------------------------------
+
+/// Number of buckets in a [`Log2Hist`]: 4 unit buckets for 0..4µs plus
+/// 4 linear sub-buckets per power-of-two octave up to `u64::MAX` µs.
+pub const LOG2_HIST_BUCKETS: usize = 252;
+
+/// Fixed-size log2-bucket histogram over microsecond samples.
+///
+/// Each power-of-two octave `[2^k, 2^(k+1))` is split into 4 linear
+/// sub-buckets, so a reported quantile (bucket midpoint) is always
+/// within half a bucket width — at most ~12.5% relative error — of the
+/// exact sample, while the whole structure is 252 fixed counters no
+/// matter how many samples land in it.  Observation is a single
+/// `Relaxed` atomic increment, so workers can record latencies on the
+/// hot path and a live snapshot can read the buckets mid-run without
+/// any lock; the counters are independent monotone event counts, so a
+/// torn read across buckets can only undercount the still-arriving
+/// tail, never corrupt the histogram.
+#[derive(Debug)]
+pub struct Log2Hist {
+    buckets: Vec<AtomicU64>,
+}
+
+impl Default for Log2Hist {
+    fn default() -> Self {
+        Log2Hist::new()
+    }
+}
+
+impl Clone for Log2Hist {
+    fn clone(&self) -> Self {
+        let h = Log2Hist::new();
+        for (i, b) in self.buckets.iter().enumerate() {
+            h.buckets[i].store(b.load(Ordering::Relaxed),
+                               Ordering::Relaxed);
+        }
+        h
+    }
+}
+
+impl Log2Hist {
+    pub fn new() -> Log2Hist {
+        Log2Hist {
+            buckets: (0..LOG2_HIST_BUCKETS)
+                .map(|_| AtomicU64::new(0))
+                .collect(),
+        }
+    }
+
+    /// Build a histogram from a slice of millisecond samples (the
+    /// report path: completions already hold latencies in ms).
+    pub fn from_ms(values: &[f64]) -> Log2Hist {
+        let h = Log2Hist::new();
+        for &v in values {
+            h.observe_ms(v);
+        }
+        h
+    }
+
+    /// Bucket index for a microsecond sample.
+    fn index(us: u64) -> usize {
+        if us < 4 {
+            return us as usize;
+        }
+        let octave = 63 - us.leading_zeros() as usize; // >= 2
+        let sub = ((us >> (octave - 2)) & 3) as usize;
+        4 + (octave - 2) * 4 + sub
+    }
+
+    /// `[lo, hi)` bounds in µs of bucket `i`.
+    pub fn bucket_bounds_us(i: usize) -> (u64, u64) {
+        if i < 4 {
+            return (i as u64, i as u64 + 1);
+        }
+        let octave = 2 + (i - 4) / 4;
+        let sub = ((i - 4) % 4) as u64;
+        let width = 1u64 << (octave - 2);
+        let lo = (1u64 << octave) + sub * width;
+        (lo, lo.saturating_add(width))
+    }
+
+    /// `[lo, hi)` bounds in ms of the bucket a millisecond sample
+    /// falls into — what "within one bucket width" means in tests.
+    pub fn bucket_bounds_ms(ms: f64) -> (f64, f64) {
+        let us = (ms.max(0.0) * 1000.0).round() as u64;
+        let (lo, hi) = Log2Hist::bucket_bounds_us(Log2Hist::index(us));
+        (lo as f64 / 1000.0, hi as f64 / 1000.0)
+    }
+
+    pub fn observe_us(&self, us: u64) {
+        // Relaxed: independent monotone counter, no ordering needed
+        self.buckets[Log2Hist::index(us)]
+            .fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn observe_ms(&self, ms: f64) {
+        if !ms.is_finite() || ms < 0.0 {
+            return;
+        }
+        self.observe_us((ms * 1000.0).round() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count() == 0
+    }
+
+    /// Nearest-rank quantile over the buckets, reported as the target
+    /// bucket's midpoint in ms.  `0.0` on an empty histogram.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        let counts: Vec<u64> = self
+            .buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64)
+            .clamp(1, total);
+        let mut seen = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let (lo, hi) = Log2Hist::bucket_bounds_us(i);
+                return (lo as f64 + hi as f64) / 2.0 / 1000.0;
+            }
+        }
+        unreachable!("rank {rank} <= total {total} must land in a bucket");
+    }
+
+    /// Nonzero buckets as `(lo_us, hi_us, count)` — snapshot material.
+    pub fn nonzero_buckets(&self) -> Vec<(u64, u64, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| {
+                let c = b.load(Ordering::Relaxed);
+                if c == 0 {
+                    return None;
+                }
+                let (lo, hi) = Log2Hist::bucket_bounds_us(i);
+                Some((lo, hi, c))
+            })
+            .collect()
+    }
+}
+
 /// Exponential moving average (loss-curve smoothing in reports).
 pub fn ema(xs: &[f64], alpha: f64) -> Vec<f64> {
     let mut out = Vec::with_capacity(xs.len());
@@ -149,6 +307,48 @@ mod tests {
     fn ema_smooths() {
         let out = ema(&[0.0, 10.0], 0.5);
         assert_eq!(out, vec![0.0, 5.0]);
+    }
+
+    #[test]
+    fn log2_hist_buckets_partition_the_line() {
+        // every µs value maps to exactly one bucket whose bounds
+        // contain it, and bucket bounds tile without gaps or overlaps
+        let mut prev_hi = 0u64;
+        for i in 0..LOG2_HIST_BUCKETS {
+            let (lo, hi) = Log2Hist::bucket_bounds_us(i);
+            assert_eq!(lo, prev_hi, "gap/overlap at bucket {i}");
+            assert!(hi > lo || hi == u64::MAX, "empty bucket {i}");
+            prev_hi = hi;
+        }
+        for us in [0u64, 1, 3, 4, 7, 8, 100, 999, 12_345, u64::MAX / 2] {
+            let h = Log2Hist::new();
+            h.observe_us(us);
+            let nz = h.nonzero_buckets();
+            assert_eq!(nz.len(), 1);
+            let (lo, hi, c) = nz[0];
+            assert_eq!(c, 1);
+            assert!(lo <= us && us < hi,
+                    "{us} outside its bucket [{lo}, {hi})");
+        }
+    }
+
+    #[test]
+    fn log2_hist_quantile_within_half_a_bucket() {
+        let values: Vec<f64> =
+            (1..=100).map(|i| i as f64 * 0.37 + 0.05).collect();
+        let h = Log2Hist::from_ms(&values);
+        assert_eq!(h.count(), 100);
+        for &q in &[0.5, 0.9, 0.99] {
+            let rank =
+                ((q * 100.0f64).ceil() as usize).clamp(1, 100) - 1;
+            let exact = values[rank]; // values are already sorted
+            let (lo, hi) = Log2Hist::bucket_bounds_ms(exact);
+            let est = h.quantile_ms(q);
+            assert!(est >= lo - 1e-9 && est <= hi + 1e-9,
+                    "q{q}: estimate {est} outside [{lo}, {hi}] \
+                     around exact {exact}");
+        }
+        assert_eq!(Log2Hist::new().quantile_ms(0.5), 0.0);
     }
 
     #[test]

@@ -82,6 +82,12 @@ pub enum Rank {
     /// the worker-error log (appended by supervision paths that may
     /// already hold a shed log in future refactors — keep it last)
     Errors = 110,
+    /// one flight-recorder event lane (`trace::TraceRecorder`) —
+    /// strictly last among all serving locks: trace events are emitted
+    /// from sites that may hold any of the locks above (controller,
+    /// session entry, shed log), and nothing is ever acquired while a
+    /// trace lane is held
+    TraceRing = 120,
 }
 
 #[cfg(debug_assertions)]

@@ -6,7 +6,8 @@
 //! (per-worker-class capacity controllers), a streaming decode point
 //! (concurrent sessions through `submit_stream`, tokens/s), and a
 //! speculative decode point (draft/verify cycles — accept rate and
-//! tokens-per-admission) — and writes the machine-readable
+//! tokens-per-admission), and a flight-recorder point (tracing on,
+//! traced/untraced throughput ratio) — and writes the machine-readable
 //! `BENCH_serving.json` at the repo root, so every tier-1 `cargo
 //! test` run refreshes the perf record even where `cargo bench` never
 //! runs.
@@ -47,7 +48,8 @@ fn bench_gate_records_shared_vs_sharded_pipeline() {
                    "{label}: dropped or duplicated requests");
         rows.push(BenchRow { queue: label, workers, shards,
                              classes: String::new(), fault_rate: 0.0,
-                             submitted: 0, report });
+                             submitted: 0, trace_overhead: 0.0,
+                             report });
     }
     // heterogeneous topology: 2 fast + 2 slow (4x latency) workers,
     // one capacity controller per class — the mixed-fleet perf record
@@ -70,7 +72,7 @@ fn bench_gate_records_shared_vs_sharded_pipeline() {
     rows.push(BenchRow { queue: "hetero", workers, shards: workers,
                          classes: "fast=2:slow=2".into(),
                          fault_rate: 0.0, submitted: 0,
-                         report: hetero });
+                         trace_overhead: 0.0, report: hetero });
     // streaming decode row: concurrent sessions through submit_stream,
     // every token a re-admitted decode step (continuous batching).
     // streaming_point itself asserts every session completes and the
@@ -94,7 +96,8 @@ fn bench_gate_records_shared_vs_sharded_pipeline() {
             "the default session arena must serve some decode rows");
     rows.push(BenchRow { queue: "streaming", workers, shards: workers,
                          classes: String::new(), fault_rate: 0.0,
-                         submitted: 0, report: streaming });
+                         submitted: 0, trace_overhead: 0.0,
+                         report: streaming });
     // speculative decode row: sessions draft at the cheapest floored
     // tier and verify at the top tier; speculative_point itself
     // asserts the ledger reconciles (drafted == accepted + rejected).
@@ -120,7 +123,8 @@ fn bench_gate_records_shared_vs_sharded_pipeline() {
             speculative.tokens_per_admission());
     rows.push(BenchRow { queue: "speculative", workers, shards: workers,
                          classes: String::new(), fault_rate: 0.0,
-                         submitted: 0, report: speculative });
+                         submitted: 0, trace_overhead: 0.0,
+                         report: speculative });
     // chaos row: the same speculative workload under a seeded fault
     // plan — 10% transient failures skewed toward cheap tiers plus one
     // always-poisoned request — records availability and the
@@ -152,7 +156,29 @@ fn bench_gate_records_shared_vs_sharded_pipeline() {
     rows.push(BenchRow { queue: "faults", workers, shards: workers,
                          classes: String::new(), fault_rate,
                          submitted: fn_oneshots + fn_sessions,
-                         report: faults });
+                         trace_overhead: 0.0, report: faults });
+    // flight-recorder row: the one-shot load with tracing on, as a
+    // ratio over the untraced sharded baseline recorded above.
+    // traced_point itself asserts the ledger reconciles
+    // (dropped + exported == emitted); here we assert the run stays
+    // lossless and the recorded ratio is a sane number (the release
+    // bench judges the "near 1.0" overhead claim — debug timings on
+    // shared runners are too noisy to gate).
+    let untraced_rps = rows[1].report.throughput_rps();
+    let (traced, events, counts) =
+        sim::traced_point(spec, workers, workers, n, 0, 0, 0, 1 << 16)
+            .unwrap_or_else(|e| panic!("traced pipeline failed: {e:#}"));
+    assert_eq!(traced.completions.len(), n, "traced: requests lost");
+    assert_eq!(counts.dropped, 0,
+               "a 64Ki ring must hold this run's events");
+    assert!(!events.is_empty(), "traced run must export events");
+    let trace_overhead = traced.throughput_rps() / untraced_rps;
+    assert!(trace_overhead.is_finite() && trace_overhead > 0.0,
+            "nonsense trace overhead ratio {trace_overhead}");
+    rows.push(BenchRow { queue: "trace", workers, shards: workers,
+                         classes: String::new(), fault_rate: 0.0,
+                         submitted: 0, trace_overhead,
+                         report: traced });
     let path = Path::new(
         concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serving.json"));
     // never stomp an authoritative release-mode record with debug
@@ -180,7 +206,21 @@ fn bench_gate_records_shared_vs_sharded_pipeline() {
         assert_eq!(doc.req("bench").unwrap().as_str().unwrap(),
                    "sim_pipeline");
         let results = doc.req("results").unwrap().as_arr().unwrap();
-        assert_eq!(results.len(), 6);
+        assert_eq!(results.len(), 7);
+        let trace_row = results
+            .iter()
+            .find(|r| {
+                r.req("queue")
+                    .ok()
+                    .and_then(|q| q.as_str().ok())
+                    .is_some_and(|q| q == "trace")
+            })
+            .expect("record must carry the flight-recorder row");
+        let overhead = trace_row
+            .req("trace_overhead").unwrap()
+            .as_f64().unwrap();
+        assert!(overhead.is_finite() && overhead > 0.0,
+                "nonsense recorded trace overhead {overhead}");
         let streaming_row = results
             .iter()
             .find(|r| {

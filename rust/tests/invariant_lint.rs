@@ -8,6 +8,7 @@ use std::path::Path;
 use elastiformer::lint::{
     scan_source, scan_tree, RULE_GUARD_ACROSS_EXECUTE, RULE_ORDERING,
     RULE_RAW_MUTEX, RULE_STALE_ALLOW, RULE_TERMINAL_OUTSIDE_CHANNEL,
+    RULE_TRACE_CONFINED,
 };
 
 fn fixture(name: &str) -> String {
@@ -73,6 +74,18 @@ fn terminal_fixture_flags_construction_outside_the_channel_module() {
                          (10, RULE_TERMINAL_OUTSIDE_CHANNEL)]);
     // the channel module itself is the one legitimate home
     assert_eq!(rules_and_lines("coordinator/serving/stream/mod.rs", &src),
+               vec![]);
+}
+
+#[test]
+fn trace_fixture_flags_construction_outside_the_recorder_module() {
+    let src = fixture("fixture_trace_confined.rs");
+    let got = rules_and_lines(
+        "coordinator/serving/fixture_trace_confined.rs", &src);
+    assert_eq!(got, vec![(6, RULE_TRACE_CONFINED),
+                         (10, RULE_TRACE_CONFINED)]);
+    // the recorder module itself is the one legitimate home
+    assert_eq!(rules_and_lines("coordinator/serving/trace.rs", &src),
                vec![]);
 }
 

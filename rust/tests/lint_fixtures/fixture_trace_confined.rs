@@ -1,0 +1,12 @@
+//! Fixture (not compiled): `TraceEvent` constructed outside the
+//! recorder module must be flagged by rule `trace-confined` —
+//! emission goes through the `TraceRecorder` methods only.
+
+pub fn sneak_admit(lane: &mut VecDeque<Stamped>, id: u64) {
+    lane.push_back(Stamped { tick_us: 0, event: TraceEvent::Admit { trace_id: id } });
+}
+
+pub fn sneak_terminal(lane: &mut VecDeque<Stamped>, id: u64) {
+    let event = TraceEvent::Terminal { trace_id: id, cause: "smuggled" };
+    lane.push_back(Stamped { tick_us: 0, event });
+}

@@ -12,8 +12,8 @@ use elastiformer::coordinator::schedule::LrSchedule;
 use elastiformer::coordinator::serving::{
     floor_rung, form_batch, sim, AdmissionQueue, CapacityController,
     ElasticEngine, ExecOutput, Executor, FaultPlan, FaultPolicy, Request,
-    Response, ServeConfig, ServeError, SimSpec, SloClass, StreamEvent,
-    StreamRequest,
+    Response, ServeConfig, ServeError, ServeReport, SimSpec, SloClass,
+    Stamped, StreamEvent, StreamRequest, TraceCounts,
 };
 
 mod common;
@@ -1149,6 +1149,190 @@ fn prop_no_request_lost_under_chaos() {
 }
 
 #[test]
+fn prop_tracing_changes_nothing_and_loses_nothing() {
+    // flight-recorder backbone: the recorder is observer-only and its
+    // ledger is exact.  Clean arm: the same seeded workload runs
+    // traced and untraced — the served sets must be identical, so
+    // turning tracing on changes nothing the caller can see.  Hostile
+    // arm: a PanicAfter fleet is shut down with work still in flight,
+    // so the close races live emission sites.  Both arms, any ring
+    // capacity (tiny rings overflow on purpose): after drain,
+    // dropped + exported == emitted, and when nothing was dropped the
+    // exported stream reconciles with the engine's own accounting —
+    // one admit per admission, each with a unique nonzero trace id,
+    // and exactly one terminal per admit.
+    #[allow(clippy::too_many_arguments)]
+    fn run(trace_capacity: usize, n: usize, sessions: usize,
+           max_steps: usize, workers: usize, batch: usize,
+           hostile: bool, panic_after: usize, seed: u64)
+           -> Result<(ServeReport,
+                      Option<(Vec<Stamped>, TraceCounts)>), String> {
+        let cfg = ServeConfig::sim()
+            .with_workers(workers)
+            .with_spec_k(2)
+            .with_trace_capacity(trace_capacity)
+            .with_fault_policy(FaultPolicy::default()
+                .with_backoff_ms(0)
+                .with_restart_budget(4))
+            .with_max_batch_wait(Duration::ZERO);
+        let caps = cfg.capacities();
+        let engine = if hostile {
+            let counter = Arc::new(AtomicUsize::new(0));
+            ElasticEngine::start(cfg, move |_| {
+                Ok(Box::new(PanicAfter {
+                    executed: counter.clone(),
+                    panic_after,
+                    batch,
+                }) as Box<dyn Executor>)
+            })
+        } else {
+            let spec =
+                SimSpec { batch, seq_len: 8, seed, ..SimSpec::instant() };
+            ElasticEngine::start(cfg, sim::factory(spec, caps))
+        }
+        .map_err(|e| format!("start failed: {e:#}"))?;
+        let recorder = engine.trace_recorder();
+        if (trace_capacity == 0) != recorder.is_none() {
+            return Err("recorder presence does not track the \
+                        configured capacity"
+                .into());
+        }
+        let responses: Vec<Response> = (0..n as u64)
+            .map(|id| engine.submit(sim_request(id, vec![1; 8])))
+            .collect();
+        let streams: Vec<_> = (0..sessions as u64)
+            .map(|id| {
+                engine.submit_stream(
+                    StreamRequest::new(1000 + id, vec![1; 4], max_steps))
+            })
+            .collect();
+        // hostile arm: close first, racing retries, respawns and any
+        // in-flight emission; clean arm: drain everything first so the
+        // served set is the full deterministic set
+        let mut engine = Some(engine);
+        let early_shutdown =
+            if hostile { Some(engine.take().unwrap().shutdown()) }
+            else { None };
+        for r in responses {
+            match r.wait_timeout(Duration::from_secs(30)) {
+                Some(_) => {}
+                None => return Err("a response never resolved".into()),
+            }
+        }
+        for s in streams {
+            let mut terminals = 0usize;
+            loop {
+                match s.recv_timeout(Duration::from_secs(30)) {
+                    Ok(Some(StreamEvent::Token { .. })) => {}
+                    Ok(Some(_)) => terminals += 1,
+                    Ok(None) => break,
+                    Err(_) => {
+                        return Err("a stream never terminated".into());
+                    }
+                }
+            }
+            if terminals != 1 {
+                return Err(format!(
+                    "{terminals} terminal events on one stream"));
+            }
+        }
+        let report = match early_shutdown {
+            Some(r) => r,
+            None => engine.take().unwrap().shutdown(),
+        }
+        .map_err(|e| format!("shutdown errored: {e:#}"))?;
+        // drain only now: workers are joined, the ledger is quiescent
+        let drained =
+            recorder.map(|rec| (rec.drain(), rec.counts()));
+        Ok((report, drained))
+    }
+
+    check("tracing_changes_nothing", 10, |rng| {
+        let n = 1 + rng.below(32);
+        let sessions = rng.below(4);
+        let max_steps = 1 + rng.below(4);
+        let workers = 1 + rng.below(3);
+        let batch = 1 + rng.below(4);
+        let hostile = rng.chance(0.3);
+        let panic_after = rng.below(16); // 0 => instant fleet death
+        // half the time a ring small enough that overflow is certain,
+        // half the time one big enough that nothing may drop
+        let capacity =
+            if rng.chance(0.5) { 1 + rng.below(8) } else { 1 << 12 };
+        let seed = rng.next_u64();
+        let (traced, drained) = run(capacity, n, sessions, max_steps,
+                                    workers, batch, hostile,
+                                    panic_after, seed)?;
+        let (events, counts) =
+            drained.ok_or("traced run lost its recorder")?;
+        if counts.dropped + counts.exported != counts.emitted {
+            return Err(format!("ledger broken: {counts:?}"));
+        }
+        if counts.exported != events.len() as u64 {
+            return Err(format!("{} exported != {} drained",
+                               counts.exported, events.len()));
+        }
+        if counts.dropped == 0 {
+            let admits: Vec<u64> = events
+                .iter()
+                .filter(|e| e.kind() == "admit")
+                .map(|e| e.trace_id)
+                .collect();
+            if admits.len() != n + sessions {
+                return Err(format!("{} admit events for {} admissions",
+                                   admits.len(), n + sessions));
+            }
+            if admits.iter().any(|&id| id == 0) {
+                return Err("an admit carried trace id 0".into());
+            }
+            let mut uniq = admits.clone();
+            uniq.sort_unstable();
+            uniq.dedup();
+            if uniq.len() != admits.len() {
+                return Err("duplicate trace ids across admits".into());
+            }
+            let terminals =
+                events.iter().filter(|e| e.kind() == "terminal").count();
+            if terminals != n + sessions {
+                return Err(format!(
+                    "{terminals} terminal events for {} admissions",
+                    n + sessions));
+            }
+        }
+        if !hostile {
+            let (untraced, none) = run(0, n, sessions, max_steps,
+                                       workers, batch, hostile,
+                                       panic_after, seed)?;
+            if none.is_some() {
+                return Err("capacity 0 still built a recorder".into());
+            }
+            let mut a: Vec<u64> =
+                traced.completions.iter().map(|c| c.id).collect();
+            let mut b: Vec<u64> =
+                untraced.completions.iter().map(|c| c.id).collect();
+            a.sort_unstable();
+            b.sort_unstable();
+            if a != b {
+                return Err(format!(
+                    "traced run served {} requests, untraced {}",
+                    a.len(), b.len()));
+            }
+            if a != (0..n as u64).collect::<Vec<_>>() {
+                return Err("a clean run must serve every submission"
+                    .into());
+            }
+            if traced.stream_done.len() != sessions
+                || untraced.stream_done.len() != sessions
+            {
+                return Err("a clean run must complete every session"
+                    .into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_affine_requeue_into_a_closed_queue_fails_fast() {
     // teardown-safety for placement affinity: once the queue is
     // closed, concurrent `requeue_to`/`push_pinned` calls from many
@@ -1173,7 +1357,7 @@ fn prop_affine_requeue_into_a_closed_queue_fails_fast() {
                 for i in 0..16u64 {
                     let item = 1000 + t * 100 + i;
                     match q.requeue_to(shard, item, i % 2 == 0) {
-                        Ok(()) => return Err(format!(
+                        Ok(_) => return Err(format!(
                             "closed queue accepted requeue of {item}")),
                         Err(back) => {
                             if back != item {
